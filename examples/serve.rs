@@ -1,0 +1,93 @@
+//! Serving demo: trains a model, starts the TCP JSON-lines server, fires a
+//! concurrent client workload through it, and prints the latency report.
+//!
+//! Run with:  cargo run --release --example serve [-- --clients 4 --requests 400]
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use wlsh_krr::config::KrrConfig;
+use wlsh_krr::coordinator::{serve, ServerConfig, Trainer};
+use wlsh_krr::data::synthetic_by_name;
+use wlsh_krr::util::cli::Args;
+use wlsh_krr::util::json::Json;
+
+fn main() {
+    let args = Args::from_env();
+    let clients = args.get_usize("clients", 4);
+    let requests = args.get_usize("requests", 400);
+
+    let mut ds = synthetic_by_name("insurance", Some(3000), 7).expect("dataset");
+    ds.standardize();
+    let (train, test) = ds.split(2400, 8);
+    let cfg = KrrConfig {
+        method: "wlsh".into(),
+        budget: 250,
+        scale: 5.0,
+        lambda: 0.5,
+        ..Default::default()
+    };
+    println!("training wlsh(m=250) on insurance-synthetic (n={}, d={})...", train.n, train.d);
+    let model = Arc::new(Trainer::new(cfg).train(&train));
+
+    let (tx, rx) = std::sync::mpsc::channel();
+    let scfg = ServerConfig {
+        addr: args.get_or("addr", "127.0.0.1:0").to_string(),
+        max_batch: args.get_usize("max-batch", 64),
+        linger: Duration::from_micros(args.get_usize("linger-us", 300) as u64),
+        workers: 1,
+    };
+    let d = train.d;
+    let m = model.clone();
+    let server = std::thread::spawn(move || serve(m, d, scfg, Some(tx)).unwrap());
+    let addr = rx.recv().unwrap();
+    println!("serving on {addr}; {clients} clients × {requests} requests each");
+
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let addr = addr.clone();
+        let rows: Vec<f32> = test.x.clone();
+        let nq = test.n;
+        handles.push(std::thread::spawn(move || {
+            let mut conn = TcpStream::connect(&addr).unwrap();
+    conn.set_nodelay(true).ok();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            for r in 0..requests {
+                let qi = (c * 7919 + r) % nq;
+                let feats: Vec<String> =
+                    rows[qi * d..(qi + 1) * d].iter().map(|v| format!("{v}")).collect();
+                writeln!(conn, "{{\"features\": [{}]}}", feats.join(",")).unwrap();
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                assert!(line.contains("pred"), "bad response: {line}");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let total = clients * requests;
+    let secs = t0.elapsed().as_secs_f64();
+
+    let mut conn = TcpStream::connect(&addr).unwrap();
+    conn.set_nodelay(true).ok();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    writeln!(conn, "{{\"cmd\": \"stats\"}}").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let stats = Json::parse(&line).unwrap();
+    println!(
+        "{total} requests in {secs:.2}s = {:.0} qps | latency p50 {:.0}us p90 {:.0}us p99 {:.0}us",
+        total as f64 / secs,
+        stats.get("p50_us").and_then(Json::as_f64).unwrap_or(0.0),
+        stats.get("p90_us").and_then(Json::as_f64).unwrap_or(0.0),
+        stats.get("p99_us").and_then(Json::as_f64).unwrap_or(0.0),
+    );
+    writeln!(conn, "{{\"cmd\": \"shutdown\"}}").unwrap();
+    let mut line2 = String::new();
+    reader.read_line(&mut line2).unwrap();
+    server.join().unwrap();
+}

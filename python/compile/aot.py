@@ -1,0 +1,181 @@
+"""AOT compile path: lower every L2 graph to HLO *text* artifacts.
+
+Run once by ``make artifacts``; the Rust runtime (rust/src/runtime/) loads
+``artifacts/*.hlo.txt`` via ``HloModuleProto::from_text_file`` and executes
+them on the PJRT CPU client.  HLO text — NOT ``.serialize()`` — is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids that
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Shape strategy (DESIGN.md §6): per-point-independent graphs (hashing, RFF
+features, cross mat-vecs) are lowered once at a fixed chunk size and the Rust
+runtime iterates chunks; whole-dataset graphs (wlsh_matvec, self mat-vecs)
+are lowered per padded dataset size.  ``manifest.json`` records every
+artifact's input/output signature; ``bucketfn_*.json`` exports the exact
+piecewise-polynomial bucket functions so the Rust native backend evaluates
+the same f bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.bucketfn import bucket_by_name
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+# Chunk sizes shared with the Rust runtime (see rust/src/runtime/shapes.rs).
+HASH_CHUNK_N = 2048
+HASH_CHUNK_M = 64
+CROSS_CHUNK_Q = 1024
+RFF_CHUNK_N = 2048
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def manifest_entries(quick: bool = False):
+    """Yield (name, fn, [arg specs]).  Names are stable Rust-side keys."""
+    ents = []
+
+    # ---- WLSH hashing: chunked over n, fixed m-chunk, one per (d, bucket).
+    d_pads = [8, 16, 32] if quick else [8, 16, 32, 64, 96, 128, 384]
+    n, m = (256, 4) if quick else (HASH_CHUNK_N, HASH_CHUNK_M)
+    for d in d_pads:
+        for bucket in ("rect", "smooth2"):
+            ents.append((
+                f"wlsh_hash__n{n}_d{d}_m{m}__{bucket}",
+                functools.partial(model.wlsh_hash_batch, bucket=bucket),
+                [spec((n, d)), spec((m, d)), spec((m, d)),
+                 spec((1, d), I32), spec((1, d))],
+            ))
+
+    # ---- WLSH sketch mat-vec: whole-dataset, per padded n.
+    mv_ns = [256] if quick else [1024, 4096, 6144]
+    for nn in mv_ns:
+        mm = 4 if quick else HASH_CHUNK_M
+        ents.append((
+            f"wlsh_matvec__n{nn}_m{mm}",
+            model.wlsh_matvec,
+            [spec((mm, nn), I32), spec((mm, nn)), spec((1, nn)),
+             spec((1, 1))],
+        ))
+
+    # ---- RFF features: chunked over n, one per (d, D).
+    rff_shapes = [(16, 128)] if quick else [
+        (16, 7168), (96, 5120), (384, 3584), (64, 1536)]
+    nrf = 256 if quick else RFF_CHUNK_N
+    for d, dd in rff_shapes:
+        ents.append((
+            f"rff_features__n{nrf}_d{d}_D{dd}",
+            model.rff_features_graph,
+            [spec((nrf, d)), spec((d, dd)), spec((1, dd)), spec((1, 1))],
+        ))
+
+    # ---- RFF sketch mat-vec (demo/parity scale; large runs go native).
+    rffmv = [(256, 128)] if quick else [(4096, 7168), (6144, 5120)]
+    for nn, dd in rffmv:
+        ents.append((
+            f"rff_matvec__n{nn}_D{dd}",
+            model.rff_matvec,
+            [spec((nn, dd)), spec((1, nn))],
+        ))
+
+    # ---- Exact kernel mat-vecs: self (training) and cross (prediction).
+    self_shapes = [(256, 8)] if quick else [(3072, 32), (4096, 32), (6144, 96)]
+    cross_shapes = [(128, 256, 8)] if quick else [
+        (CROSS_CHUNK_Q, 3072, 32), (CROSS_CHUNK_Q, 4096, 32),
+        (CROSS_CHUNK_Q, 6144, 96)]
+    for kind in ("se", "matern52", "laplace"):
+        fn = functools.partial(model.exact_matvec, kind=kind)
+        for nn, d in self_shapes:
+            ents.append((
+                f"exact_matvec_{kind}__n{nn}_d{d}",
+                fn,
+                [spec((nn, d)), spec((nn, d)), spec((1, nn)), spec((1, 1))],
+            ))
+        for q, nn, d in cross_shapes:
+            ents.append((
+                f"exact_cross_{kind}__q{q}_n{nn}_d{d}",
+                fn,
+                [spec((q, d)), spec((nn, d)), spec((1, nn)), spec((1, 1))],
+            ))
+    return ents
+
+
+def export_bucketfns(out_dir: str):
+    """Write the exact piecewise-poly pieces for the Rust native backend."""
+    for name in ("rect", "smooth2", "smooth3", "smooth4"):
+        pp = bucket_by_name(name)
+        payload = pp.as_dict()
+        payload["l2_norm"] = pp.l2_norm()
+        payload["linf_norm"] = pp.linf_norm()
+        ac = pp.autocorrelation()
+        payload["autocorrelation"] = ac.as_dict()
+        with open(os.path.join(out_dir, f"bucketfn_{name}.json"), "w") as f:
+            json.dump(payload, f, indent=1)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny shapes for CI smoke")
+    ap.add_argument("--only", default=None, help="substring filter")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    export_bucketfns(args.out_dir)
+
+    manifest = {"hash_chunk_n": HASH_CHUNK_N, "hash_chunk_m": HASH_CHUNK_M,
+                "cross_chunk_q": CROSS_CHUNK_Q, "rff_chunk_n": RFF_CHUNK_N,
+                "entries": []}
+    ents = manifest_entries(quick=args.quick)
+    for name, fn, specs in ents:
+        if args.only and args.only not in name:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        outs = lowered.out_info
+        out_list = jax.tree_util.tree_leaves(outs)
+        manifest["entries"].append({
+            "name": name,
+            "file": fname,
+            "inputs": [{"shape": list(s.shape), "dtype": str(s.dtype)}
+                       for s in specs],
+            "outputs": [{"shape": list(o.shape), "dtype": str(o.dtype)}
+                        for o in out_list],
+        })
+        print(f"  lowered {name}  ({len(text)//1024} KiB)", flush=True)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['entries'])} artifacts to {args.out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,270 @@
+"""Bucket-shaping functions f for the WLSH estimator (paper §3, Def. 6/8).
+
+A bucket-shaping function is an even function f supported on [-1/2, 1/2] with
+||f||_2 = 1.  The paper's two instantiations:
+
+  * ``rect``   — f = rect (indicator of [-1/2,1/2]); WLSH degenerates to the
+                 Rahimi-Recht random binning features (Table 2 experiments).
+  * ``smooth`` — f(x) = (rect * rect_{1/4} * rect_{1/4})(2x), normalized
+                 (Table 1 experiments; continuous derivative, bounded second
+                 derivative -> Matern-5/2-like smoothness of the GP paths).
+
+We represent these exactly as *piecewise polynomials* and build them
+programmatically by repeated box convolution (the B-spline construction).
+This module is the single source of truth for f: the Pallas/L1 kernel bakes
+the pieces in as constants, the pure-jnp reference evaluates the same pieces,
+and ``aot.py`` exports them to ``artifacts/bucketfn_*.json`` so the Rust
+native backend provably evaluates the *same* function (integration-tested).
+
+Generalization beyond the paper: ``smooth_bucket(q)`` convolves rect with a
+width-1/(2q) box q times, yielding C^{q-1} bucket functions of any desired
+smoothness order — the "any desired smoothness" family of §3.2.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Sequence
+
+import numpy as np
+
+__all__ = [
+    "PiecewisePoly",
+    "rect_bucket",
+    "smooth_bucket",
+    "paper_smooth_bucket",
+    "bucket_by_name",
+]
+
+
+def _poly_eval(coeffs: Sequence[float], x: float) -> float:
+    """Horner evaluation; ``coeffs`` ascending (c0 + c1 x + ...)."""
+    acc = 0.0
+    for c in reversed(coeffs):
+        acc = acc * x + c
+    return acc
+
+
+def _poly_shift(coeffs: Sequence[float], s: float) -> List[float]:
+    """Coefficients of p(x + s) given coefficients of p(x) (ascending)."""
+    n = len(coeffs)
+    out = [0.0] * n
+    for k, c in enumerate(coeffs):
+        # c * (x + s)^k = c * sum_j C(k,j) s^(k-j) x^j
+        for j in range(k + 1):
+            out[j] += c * math.comb(k, j) * s ** (k - j)
+    return out
+
+
+def _poly_mul(a: Sequence[float], b: Sequence[float]) -> List[float]:
+    out = [0.0] * (len(a) + len(b) - 1)
+    for i, ai in enumerate(a):
+        for j, bj in enumerate(b):
+            out[i + j] += ai * bj
+    return out
+
+
+def _poly_int(coeffs: Sequence[float]) -> List[float]:
+    """Antiderivative with zero constant term."""
+    return [0.0] + [c / (k + 1) for k, c in enumerate(coeffs)]
+
+
+@dataclass
+class PiecewisePoly:
+    """Piecewise polynomial on [breaks[0], breaks[-1]], zero outside.
+
+    ``coeffs[i]`` (ascending) applies on [breaks[i], breaks[i+1]).
+    """
+
+    breaks: List[float]
+    coeffs: List[List[float]]
+
+    # -- evaluation ---------------------------------------------------------
+
+    def __call__(self, x):
+        x = np.asarray(x, dtype=np.float64)
+        out = np.zeros_like(x)
+        for lo, hi, c in self.pieces():
+            sel = (x >= lo) & (x < hi)
+            out = np.where(sel, np.polyval(list(reversed(c)), x), out)
+        return out
+
+    def pieces(self):
+        for i, c in enumerate(self.coeffs):
+            yield self.breaks[i], self.breaks[i + 1], c
+
+    # -- calculus -----------------------------------------------------------
+
+    def antiderivative_at(self, x: float) -> float:
+        """∫_{-inf}^x p(t) dt (p is zero outside its support)."""
+        total = 0.0
+        for lo, hi, c in self.pieces():
+            if x <= lo:
+                break
+            icoef = _poly_int(c)
+            upper = min(x, hi)
+            total += _poly_eval(icoef, upper) - _poly_eval(icoef, lo)
+        return total
+
+    def box_convolve(self, a: float) -> "PiecewisePoly":
+        """Convolution with rect_a (indicator of [-a/2, a/2], height 1).
+
+        (p * rect_a)(t) = P(t + a/2) - P(t - a/2)  with P the antiderivative.
+        New breakpoints are {b ± a/2}; within each new interval both shifted
+        antiderivative arguments stay inside a single old piece, so the
+        result is again polynomial there.  This is exact (no sampling).
+        """
+        h = a / 2.0
+        pts = sorted({round(b + s, 15) for b in self.breaks for s in (-h, h)})
+        new_breaks: List[float] = pts
+        new_coeffs: List[List[float]] = []
+        # Precompute per-piece antiderivatives and the running constants so
+        # that P is continuous and P(x)=0 left of the support.
+        antis: List[List[float]] = []
+        consts: List[float] = []
+        run = 0.0
+        for lo, hi, c in self.pieces():
+            ic = _poly_int(c)
+            consts.append(run - _poly_eval(ic, lo))
+            antis.append(ic)
+            run += _poly_eval(ic, hi) - _poly_eval(ic, lo)
+        total_mass = run
+
+        def P_piece(x_mid: float):
+            """Antiderivative as polynomial valid near x_mid (as coeffs)."""
+            if x_mid <= self.breaks[0]:
+                return [0.0]
+            if x_mid >= self.breaks[-1]:
+                return [total_mass]
+            for i in range(len(self.coeffs)):
+                if self.breaks[i] <= x_mid < self.breaks[i + 1]:
+                    c = list(antis[i])
+                    c[0] += consts[i]
+                    return c
+            return [total_mass]
+
+        for i in range(len(new_breaks) - 1):
+            mid = 0.5 * (new_breaks[i] + new_breaks[i + 1])
+            up = _poly_shift(P_piece(mid + h), h)      # P(t + h) as poly in t
+            dn = _poly_shift(P_piece(mid - h), -h)     # P(t - h)
+            n = max(len(up), len(dn))
+            up += [0.0] * (n - len(up))
+            dn += [0.0] * (n - len(dn))
+            new_coeffs.append([u - d for u, d in zip(up, dn)])
+        return PiecewisePoly(new_breaks, new_coeffs)
+
+    def scale_arg(self, s: float) -> "PiecewisePoly":
+        """Return q(x) = p(s·x)."""
+        breaks = [b / s for b in self.breaks]
+        coeffs = [[c * s**k for k, c in enumerate(piece)] for piece in self.coeffs]
+        if s < 0:
+            breaks = list(reversed(breaks))
+            coeffs = list(reversed(coeffs))
+        return PiecewisePoly(breaks, coeffs)
+
+    def scale_val(self, s: float) -> "PiecewisePoly":
+        return PiecewisePoly(
+            list(self.breaks), [[c * s for c in piece] for piece in self.coeffs]
+        )
+
+    def derivative(self) -> "PiecewisePoly":
+        return PiecewisePoly(
+            list(self.breaks),
+            [[c * k for k, c in enumerate(piece)][1:] or [0.0] for piece in self.coeffs],
+        )
+
+    def l2_norm(self) -> float:
+        total = 0.0
+        for lo, hi, c in self.pieces():
+            sq = _poly_int(_poly_mul(c, c))
+            total += _poly_eval(sq, hi) - _poly_eval(sq, lo)
+        return math.sqrt(total)
+
+    def linf_norm(self, grid: int = 4096) -> float:
+        xs = np.linspace(self.breaks[0], self.breaks[-1], grid, endpoint=False)
+        return float(np.max(np.abs(self(xs))))
+
+    def autocorrelation(self) -> "PiecewisePoly":
+        """(p * p)(t) for even p — used for the kernel profile E_w[(f*f)(x/w)]."""
+        # (p*p)(t) = ∫ p(u) p(t-u) du.  For even p this equals the
+        # autocorrelation.  Compute exactly piece-by-piece.
+        breaks = sorted(
+            {round(bi + bj, 15) for bi in self.breaks for bj in self.breaks}
+        )
+        coeffs = []
+        for i in range(len(breaks) - 1):
+            tm = 0.5 * (breaks[i] + breaks[i + 1])
+            # Polynomial in t on this interval: sum over piece pairs of
+            # ∫ p_a(u) p_b(t-u) du over the overlap — evaluate by expanding
+            # p_b(t-u) in u with t symbolic.  To stay simple (and exact
+            # enough), evaluate the convolution numerically at deg+1 points
+            # within the interval and fit the unique interpolating poly.
+            deg = 2 * max(len(c) for c in self.coeffs)  # generous bound
+            ts = np.linspace(
+                breaks[i], breaks[i + 1], deg + 1, endpoint=True
+            )
+            ts = ts * (1 - 1e-12) + tm * 1e-12  # keep strictly inside
+            vals = [self._conv_at(float(t)) for t in ts]
+            fit = np.polynomial.polynomial.polyfit(ts - tm, vals, deg)
+            coeffs.append(list(_poly_shift(list(fit), -tm)))
+        return PiecewisePoly(breaks, coeffs)
+
+    def _conv_at(self, t: float) -> float:
+        """Exact (p*p)(t) via per-piece-pair polynomial integration."""
+        total = 0.0
+        for lo_a, hi_a, ca in self.pieces():
+            # overlap in u of [lo_a, hi_a] with [t - hi_b, t - lo_b]
+            for lo_b, hi_b, cb in self.pieces():
+                lo = max(lo_a, t - hi_b)
+                hi = min(hi_a, t - lo_b)
+                if hi <= lo:
+                    continue
+                # integrand: ca(u) * cb(t - u) as poly in u
+                cb_t = _poly_shift([c * ((-1) ** k) for k, c in enumerate(cb)], -t)
+                # cb(t-u) = sum_k cb_k (t-u)^k ; rewrite: q(u) = cb(t - u)
+                # (t-u)^k = (-(u - t))^k -> coeffs of poly in (u - t) times
+                # (-1)^k, then shift by +t:  handled above via sign+shift.
+                prod = _poly_mul(ca, cb_t)
+                ip = _poly_int(prod)
+                total += _poly_eval(ip, hi) - _poly_eval(ip, lo)
+        return total
+
+    def as_dict(self) -> dict:
+        return {"breaks": list(map(float, self.breaks)),
+                "coeffs": [list(map(float, c)) for c in self.coeffs]}
+
+
+def rect_bucket() -> PiecewisePoly:
+    """f = rect: support [-1/2,1/2], ||f||_2 = 1 already."""
+    return PiecewisePoly([-0.5, 0.5], [[1.0]])
+
+
+def smooth_bucket(q: int) -> PiecewisePoly:
+    """C^{q-1} bucket: (rect * rect_{1/(2q)}^{*q})(2x), normalized.
+
+    Support of the inner convolution is 1 + q/(2q) = 3/2, so after the
+    argument scaling by 2 the support is [-3/8, 3/8] ⊂ [-1/2, 1/2]. q=2
+    recovers the paper's Table-1 function f = (rect*rect_{1/4}*rect_{1/4})(2x).
+    """
+    if q < 1:
+        raise ValueError("q >= 1; use rect_bucket() for the unsmoothed case")
+    pp = rect_bucket()
+    for _ in range(q):
+        pp = pp.box_convolve(1.0 / (2 * q))
+    pp = pp.scale_arg(2.0)
+    return pp.scale_val(1.0 / pp.l2_norm())
+
+
+def paper_smooth_bucket() -> PiecewisePoly:
+    """The exact Table-1 bucket function of the paper (q = 2)."""
+    return smooth_bucket(2)
+
+
+def bucket_by_name(name: str) -> PiecewisePoly:
+    if name == "rect":
+        return rect_bucket()
+    if name.startswith("smooth"):
+        q = int(name[6:]) if len(name) > 6 else 2
+        return smooth_bucket(q)
+    raise ValueError(f"unknown bucket function {name!r}")

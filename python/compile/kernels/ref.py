@@ -1,0 +1,120 @@
+"""Pure-numpy correctness oracles for every L1 Pallas kernel.
+
+These are the ground truth the Pallas kernels are pytest-verified against
+(``python/tests/``).  They intentionally use the most direct formulation —
+no tiling, no accumulation tricks — so a disagreement always implicates the
+kernel, not the oracle.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .bucketfn import bucket_by_name
+
+
+def wlsh_hash_weights_ref(x, w, z, mix, mask, bucket: str = "rect"):
+    """Reference for kernels.wlsh.wlsh_hash_weights (float32 semantics).
+
+    Args match the kernel: x f32[n,d], w f32[m,d], z f32[m,d], mix i32[1,d],
+    mask f32[1,d].  Returns (ids i32[m,n], weights f32[m,n]).
+    """
+    x = np.asarray(x, np.float32)
+    w = np.asarray(w, np.float32)
+    z = np.asarray(z, np.float32)
+    mix = np.asarray(mix, np.int32).reshape(-1)
+    mask = np.asarray(mask, np.float32).reshape(-1)
+    m, d = w.shape
+    n = x.shape[0]
+    pp = bucket_by_name(bucket)
+    ids = np.zeros((m, n), np.int32)
+    wts = np.zeros((m, n), np.float32)
+    for s in range(m):
+        t = (x - z[s][None, :]) / w[s][None, :]          # (n, d) f32
+        c = np.floor(t + np.float32(0.5)).astype(np.float32)
+        ci = c.astype(np.int32) * mask.astype(np.int32)[None, :]
+        # i32 wrap-around mix (numpy wraps on int32 mult/add like XLA)
+        with np.errstate(over="ignore"):
+            ids[s] = np.sum(ci * mix[None, :], axis=1, dtype=np.int32)
+        if bucket == "rect":
+            wts[s] = 1.0
+        else:
+            r = (c - t).astype(np.float64)
+            fv = pp(r)                                    # (n, d)
+            fv = np.where(mask[None, :] > 0, fv, 1.0)
+            wts[s] = np.prod(fv, axis=1).astype(np.float32)
+    return ids, wts
+
+
+def rff_features_ref(x, omega, b, scale):
+    """Reference for kernels.rff.rff_features."""
+    x = np.asarray(x, np.float32)
+    omega = np.asarray(omega, np.float32)
+    b = np.asarray(b, np.float32).reshape(-1)
+    s = float(np.asarray(scale).reshape(()))
+    return (s * np.cos(x @ omega + b[None, :])).astype(np.float32)
+
+
+def kernel_matrix_ref(xq, x, scale, kind: str):
+    """Dense exact kernel matrix K(xq, x) — oracle for the block mat-vec."""
+    xq = np.asarray(xq, np.float64)
+    x = np.asarray(x, np.float64)
+    s = float(scale)
+    if kind == "laplace":
+        dist = np.abs(xq[:, None, :] - x[None, :, :]).sum(axis=2)
+        return np.exp(-dist / s)
+    d2 = ((xq[:, None, :] - x[None, :, :]) ** 2).sum(axis=2)
+    if kind == "se":
+        return np.exp(-d2 / (s * s))
+    if kind == "matern52":
+        r = np.sqrt(d2) / s
+        return (1.0 + r + r * r / 3.0) * np.exp(-r)
+    raise ValueError(f"unknown kernel kind {kind!r}")
+
+
+def kernel_block_matvec_ref(xq, x, beta, scale, kind: str):
+    """Reference for kernels.exact.kernel_block_matvec."""
+    K = kernel_matrix_ref(xq, x, scale, kind)
+    return (K @ np.asarray(beta, np.float64).reshape(-1)).astype(np.float32)
+
+
+def wlsh_matvec_ref(ids, weights, beta, inv_m):
+    """Reference for model.wlsh_matvec: y = inv_m * sum_s D_s A_s A_s^T D_s b.
+
+    Done the slow, obviously-correct way: for each instance, for each bucket,
+    the load is sum of weight*beta over members (paper §4), and each member
+    receives weight * load.
+    """
+    ids = np.asarray(ids)
+    weights = np.asarray(weights, np.float64)
+    beta = np.asarray(beta, np.float64).reshape(-1)
+    m, n = ids.shape
+    y = np.zeros(n, np.float64)
+    for s in range(m):
+        for b in np.unique(ids[s]):
+            sel = ids[s] == b
+            load = np.sum(weights[s][sel] * beta[sel])
+            y[sel] += weights[s][sel] * load
+    return (y * float(inv_m)).astype(np.float32)
+
+
+def wlsh_kernel_value_ref(delta, bucket: str, p_shape: float,
+                          n_quad: int = 20000, w_max: float = 80.0):
+    """Numerical oracle for the WLSH kernel k_{f,p} (Def. 8), per coordinate.
+
+    k_1d(delta) = E_{w ~ Gamma(p_shape, 1)}[(f*f)(delta / w)], computed by
+    trapezoid quadrature over w — used to cross-check the Rust quadrature
+    implementation and the estimator's unbiasedness.
+    """
+    from math import gamma as gamma_fn
+
+    pp = bucket_by_name(bucket)
+    ff = pp.autocorrelation()
+    ws = np.linspace(1e-9, w_max, n_quad)
+    pdf = ws ** (p_shape - 1.0) * np.exp(-ws) / gamma_fn(p_shape)
+    delta = np.atleast_1d(np.asarray(delta, np.float64))
+    out = np.empty_like(delta)
+    for i, dl in enumerate(delta):
+        vals = ff(dl / ws)
+        out[i] = np.trapezoid(vals * pdf, ws)
+    return out

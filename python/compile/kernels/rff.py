@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: Random Fourier Features (baseline of Table 2).
+
+phi(x) = sqrt(2/D) * cos(x @ Omega + b),  Omega ~ N(0, 2*gamma I) columns,
+b ~ U[0, 2pi) — the Rahimi-Recht estimator of the squared-exponential kernel
+k(x,y) = exp(-gamma ||x-y||_2^2).
+
+MXU-shaped: tiled (BLOCK_N x d) @ (d x BLOCK_D) matmul with the full feature
+dimension d kept resident (d_pad <= 512 fits VMEM comfortably), cos applied
+to the accumulator tile before writeback. interpret=True per the environment
+contract (CPU PJRT cannot execute Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 128
+DEFAULT_BLOCK_D = 512
+
+
+def _rff_kernel(x_ref, omega_ref, b_ref, scale_ref, z_ref):
+    x = x_ref[...]             # (BN, d)
+    om = omega_ref[...]        # (d, BD)
+    b = b_ref[...]             # (1, BD)
+    s = scale_ref[...]         # (1, 1) = sqrt(2/D)
+    acc = jnp.dot(x, om, preferred_element_type=jnp.float32)
+    z_ref[...] = s * jnp.cos(acc + b)
+
+
+def rff_features(x, omega, b, scale, *, block_n: int = DEFAULT_BLOCK_N,
+                 block_d: int = DEFAULT_BLOCK_D, interpret: bool = True):
+    """Compute the RFF feature matrix Z = sqrt(2/D) cos(X Omega + b).
+
+    Args:
+      x:     f32[n, d]
+      omega: f32[d, D]   frequency matrix (columns ~ N(0, 2 gamma I)).
+      b:     f32[1, D]   phase offsets.
+      scale: f32[1, 1]   sqrt(2/D) (input so D-padding can adjust it).
+
+    Returns: f32[n, D].
+    """
+    n, d = x.shape
+    dd = omega.shape[1]
+    bn = min(block_n, n)
+    bd = min(block_d, dd)
+    if n % bn or dd % bd:
+        raise ValueError(f"n={n} % {bn} or D={dd} % {bd} != 0")
+    return pl.pallas_call(
+        _rff_kernel,
+        grid=(n // bn, dd // bd),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bd), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bd), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bd), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, dd), jnp.float32),
+        interpret=interpret,
+    )(x, omega, b, scale)

@@ -1,0 +1,121 @@
+"""L1 Pallas kernel: WLSH hashing + bucket-shaping weights (paper Def. 5/6).
+
+For each of ``m`` LSH instances (w^s, z^s) and each of ``n`` points x:
+
+    t_l   = (x_l - z_l) / w_l
+    c_l   = floor(t_l + 1/2)          -- the bucket coordinate round((x-z)/w)
+    r_l   = c_l - t_l                 -- in-bucket residual in (-1/2, 1/2]
+    id    = sum_l c_l * mix_l         -- i32 wrap-around mix to a scalar id
+    wt    = prod_l f(r_l)             -- the f^{⊗d} weight of Def. 6
+
+This is the O(n·d·m) hot spot of WLSH preprocessing. The kernel is tiled over
+n (BLOCK_N rows of X per VMEM block, full d in-register product reduction)
+with the m instances as the outer grid axis, expressing the HBM↔VMEM schedule
+via BlockSpec. ``interpret=True`` everywhere: the CPU PJRT plugin cannot run
+Mosaic custom-calls; real-TPU perf is estimated in DESIGN.md §Perf.
+
+Padding contract (DESIGN.md §6): ``mask`` zeroes padded feature dims (their
+hash coordinate contributes 0, their weight factor contributes 1). Padded
+points / padded instances are handled downstream (β=0 weights, divisor input).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .bucketfn import PiecewisePoly, bucket_by_name
+
+DEFAULT_BLOCK_N = 256
+
+
+def eval_bucket_jnp(pp_pieces: Sequence[Tuple[float, float, List[float]]], r):
+    """Evaluate a piecewise polynomial at ``r`` with pure jnp ops.
+
+    The piece list is baked in as constants (it is tiny: ≤ ~10 pieces of
+    degree ≤ q). Unrolled select+Horner — Pallas-safe, no gather/searchsorted.
+    """
+    out = jnp.zeros_like(r)
+    for lo, hi, coeffs in pp_pieces:
+        acc = jnp.zeros_like(r)
+        for c in reversed(coeffs):
+            acc = acc * r + c
+        out = jnp.where((r >= lo) & (r < hi), acc, out)
+    return out
+
+
+def _pieces(pp: PiecewisePoly):
+    return [(float(lo), float(hi), [float(c) for c in cs]) for lo, hi, cs in pp.pieces()]
+
+
+def _hash_kernel(x_ref, w_ref, z_ref, mix_ref, mask_ref, ids_ref, wts_ref, *,
+                 pieces, rect: bool):
+    x = x_ref[...]                       # (BN, d)
+    w = w_ref[...]                       # (1, d)
+    z = z_ref[...]                       # (1, d)
+    mix = mix_ref[...]                   # (1, d) int32
+    mask = mask_ref[...]                 # (1, d) float32 in {0,1}
+    t = (x - z) / w
+    c = jnp.floor(t + 0.5)
+    ci = c.astype(jnp.int32) * mask.astype(jnp.int32)
+    ids = jnp.sum(ci * mix, axis=1, dtype=jnp.int32)          # i32 wrap mix
+    if rect:
+        # f = rect: the weight is identically 1 on the residual range.
+        wts = jnp.ones((x.shape[0],), dtype=x.dtype)
+    else:
+        r = c - t
+        fv = eval_bucket_jnp(pieces, r)
+        wts = jnp.prod(jnp.where(mask > 0, fv, 1.0), axis=1)
+    ids_ref[...] = ids[None, :]
+    wts_ref[...] = wts[None, :].astype(jnp.float32)
+
+
+def wlsh_hash_weights(x, w, z, mix, mask, *, bucket: str = "rect",
+                      block_n: int = DEFAULT_BLOCK_N, interpret: bool = True):
+    """Hash all points under all m LSH instances.
+
+    Args:
+      x:    f32[n, d]  data points (padded).
+      w:    f32[m, d]  per-instance grid widths, iid from p(·).
+      z:    f32[m, d]  per-instance shifts, uniform in [0, w].
+      mix:  i32[1, d]  odd mixing multipliers collapsing the d-dim bucket
+                       coordinate to a scalar id (shared across instances).
+      mask: f32[1, d]  1 for real feature dims, 0 for padding.
+      bucket: bucket-shaping function name ("rect", "smooth2", ...).
+
+    Returns:
+      ids i32[m, n], weights f32[m, n].
+    """
+    n, d = x.shape
+    m = w.shape[0]
+    if n % block_n != 0:
+        raise ValueError(f"n={n} must be a multiple of block_n={block_n}")
+    pp = bucket_by_name(bucket)
+    kern = functools.partial(
+        _hash_kernel, pieces=_pieces(pp), rect=(bucket == "rect"))
+    grid = (m, n // block_n)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),   # X tile
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),         # w^s
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),         # z^s
+            pl.BlockSpec((1, d), lambda i, j: (0, 0)),         # mix
+            pl.BlockSpec((1, d), lambda i, j: (0, 0)),         # mask
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_n), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.int32),
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w, z, mix, mask)

@@ -1,0 +1,125 @@
+"""L2 — JAX compute graphs composing the L1 Pallas kernels.
+
+Each public function here is a lowering target for ``aot.py``: it is jitted,
+lowered to HLO *text* once at build time, and executed from the Rust runtime
+via PJRT.  Python never runs on the request path.
+
+Graphs:
+  * ``wlsh_hash_batch``   — hash n points under m LSH instances (L1 kernel).
+  * ``wlsh_matvec``       — the paper's O(n·m) sketch mat-vec (§4, Lemma 27):
+                            bucket loads via segment_sum, then gather.
+  * ``rff_features_graph``— RFF feature matrix (L1 kernel).
+  * ``rff_matvec``        — K̃_rff β = Z (Zᵀ β) without forming Z Zᵀ.
+  * ``exact_matvec_*``    — blockwise exact-kernel mat-vec (L1 kernel), both
+                            the n×n training form and the q×n cross form.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.exact import kernel_block_matvec
+from .kernels.rff import rff_features
+from .kernels.wlsh import wlsh_hash_weights
+
+
+# --------------------------------------------------------------------------
+# WLSH
+# --------------------------------------------------------------------------
+
+def wlsh_hash_batch(x, w, z, mix, mask, *, bucket: str = "rect"):
+    """ids i32[m,n], weights f32[m,n] for all m LSH instances."""
+    return wlsh_hash_weights(x, w, z, mix, mask, bucket=bucket)
+
+
+def wlsh_matvec(ids, weights, beta, inv_m):
+    """y = (1/m) Σ_s D_s a_s a_sᵀ D_s β  — the WLSH sketch mat-vec.
+
+    ``ids`` must be *renumbered* per instance into [0, n) (the Rust bucket
+    table does this once at preprocessing).  Per instance: the bucket load
+    B_j(β) = Σ_{i: id_i=j} w_i β_i  is a segment-sum; each point then
+    receives w_i · B_{id_i}(β)  (paper §4, Figure 1).
+
+    Args:
+      ids:     i32[m, n]  dense bucket ids in [0, n).
+      weights: f32[m, n]  f^{⊗d} weights.
+      beta:    f32[1, n]
+      inv_m:   f32[1, 1]  1/m_effective (padded instances carry weight 0).
+
+    Returns f32[1, n].
+    """
+    m, n = ids.shape
+    b = beta.reshape(-1)
+
+    def per_instance(id_s, w_s):
+        contrib = w_s * b
+        loads = jax.ops.segment_sum(contrib, id_s, num_segments=n)
+        return w_s * loads[id_s]
+
+    ys = jax.vmap(per_instance)(ids, weights)            # (m, n)
+    return (jnp.sum(ys, axis=0) * inv_m.reshape(()))[None, :]
+
+
+def wlsh_hash_matvec_fused(x, w, z, mix, mask, beta, inv_m, *,
+                           bucket: str = "rect"):
+    """Fused hash + mat-vec — one module for single-shot K̃β products.
+
+    Avoids materializing (ids, weights) in HBM when the caller only needs
+    one product (e.g. unbiasedness tests / one-off scoring).  Uses the raw
+    i32 mix ids directly as segment ids is unsound (they are not dense), so
+    this fused form sorts ids per instance instead — O(n log n) but fully
+    in-graph.
+    """
+    ids, weights = wlsh_hash_weights(x, w, z, mix, mask, bucket=bucket)
+    m, n = ids.shape
+    b = beta.reshape(-1)
+
+    def per_instance(id_s, w_s):
+        order = jnp.argsort(id_s)
+        sid = id_s[order]
+        sw = w_s[order]
+        sb = b[order]
+        contrib = sw * sb
+        # segment boundaries in the sorted order
+        new_seg = jnp.concatenate([jnp.array([True]), sid[1:] != sid[:-1]])
+        seg_idx = jnp.cumsum(new_seg.astype(jnp.int32)) - 1
+        loads = jax.ops.segment_sum(contrib, seg_idx, num_segments=n)
+        y_sorted = sw * loads[seg_idx]
+        inv = jnp.argsort(order)
+        return y_sorted[inv]
+
+    ys = jax.vmap(per_instance)(ids, weights)
+    return (jnp.sum(ys, axis=0) * inv_m.reshape(()))[None, :]
+
+
+# --------------------------------------------------------------------------
+# RFF
+# --------------------------------------------------------------------------
+
+def rff_features_graph(x, omega, b, scale):
+    """Z = sqrt(2/D) cos(X Ω + b)  (L1 kernel)."""
+    return rff_features(x, omega, b, scale)
+
+
+def rff_matvec(zfeat, beta):
+    """K̃_rff β = Z (Zᵀ β): two MXU matmuls, never forms the n×n matrix."""
+    theta = jnp.dot(zfeat.T, beta.reshape(-1),
+                    preferred_element_type=jnp.float32)
+    return jnp.dot(zfeat, theta, preferred_element_type=jnp.float32)[None, :]
+
+
+# --------------------------------------------------------------------------
+# Exact kernels
+# --------------------------------------------------------------------------
+
+def exact_matvec(xq, x, beta, scale, *, kind: str):
+    """y = K(Xq, X) β for kind in {se, matern52, laplace} (L1 kernel)."""
+    return kernel_block_matvec(xq, x, beta, scale, kind=kind)
+
+
+exact_matvec_se = functools.partial(exact_matvec, kind="se")
+exact_matvec_matern52 = functools.partial(exact_matvec, kind="matern52")
+exact_matvec_laplace = functools.partial(exact_matvec, kind="laplace")

@@ -1,0 +1,72 @@
+"""AOT pipeline smoke tests: lowering, manifest integrity, HLO text format."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+
+
+def test_quick_manifest_entries_have_unique_names():
+    ents = aot.manifest_entries(quick=True)
+    names = [e[0] for e in ents]
+    assert len(names) == len(set(names))
+    assert any("wlsh_hash" in n for n in names)
+    assert any("wlsh_matvec" in n for n in names)
+    assert any("rff_features" in n for n in names)
+    assert any("exact_matvec_laplace" in n for n in names)
+
+
+def test_full_manifest_covers_experiment_shapes():
+    ents = aot.manifest_entries(quick=False)
+    names = {e[0] for e in ents}
+    # Table 1 / Table 2 shapes from DESIGN.md §6
+    assert f"wlsh_hash__n{aot.HASH_CHUNK_N}_d32_m{aot.HASH_CHUNK_M}__smooth2" in names
+    assert f"wlsh_hash__n{aot.HASH_CHUNK_N}_d16_m{aot.HASH_CHUNK_M}__rect" in names
+    assert f"wlsh_hash__n{aot.HASH_CHUNK_N}_d384_m{aot.HASH_CHUNK_M}__rect" in names
+    assert "exact_matvec_se__n3072_d32" in names
+    assert "exact_matvec_matern52__n6144_d96" in names
+    assert "wlsh_matvec__n4096_m64" in names
+
+
+def test_lower_one_entry_produces_parsable_hlo_text():
+    ents = aot.manifest_entries(quick=True)
+    name, fn, specs = next(e for e in ents if e[0].startswith("wlsh_matvec"))
+    import jax
+    lowered = jax.jit(fn).lower(*specs)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # return_tuple=True: the root computation must return a tuple
+    assert "ROOT" in text
+
+
+def test_export_bucketfns(tmp_path):
+    aot.export_bucketfns(str(tmp_path))
+    for name in ("rect", "smooth2", "smooth3", "smooth4"):
+        p = tmp_path / f"bucketfn_{name}.json"
+        assert p.exists()
+        payload = json.loads(p.read_text())
+        assert len(payload["breaks"]) == len(payload["coeffs"]) + 1
+        assert payload["l2_norm"] == pytest.approx(1.0, abs=1e-8)
+        ac = payload["autocorrelation"]
+        assert len(ac["breaks"]) == len(ac["coeffs"]) + 1
+
+
+@pytest.mark.skipif(not os.path.exists(
+    os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built")
+def test_built_manifest_matches_files():
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(root, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["hash_chunk_n"] == aot.HASH_CHUNK_N
+    for e in man["entries"]:
+        path = os.path.join(root, e["file"])
+        assert os.path.exists(path), e["file"]
+        with open(path) as f:
+            head = f.read(64)
+        assert head.startswith("HloModule")
+        assert e["inputs"] and e["outputs"]

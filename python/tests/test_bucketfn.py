@@ -1,0 +1,130 @@
+"""Tests for the piecewise-polynomial bucket-shaping functions (paper §3)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.bucketfn import (
+    PiecewisePoly,
+    bucket_by_name,
+    paper_smooth_bucket,
+    rect_bucket,
+    smooth_bucket,
+)
+
+
+class TestRect:
+    def test_support(self):
+        r = rect_bucket()
+        assert r(np.array([-0.49, 0.0, 0.49])).tolist() == [1.0, 1.0, 1.0]
+        assert r(np.array([-0.6, 0.6, 1.0])).tolist() == [0.0, 0.0, 0.0]
+
+    def test_l2_norm_is_one(self):
+        assert rect_bucket().l2_norm() == pytest.approx(1.0)
+
+    def test_autocorrelation_is_triangle(self):
+        # (rect * rect)(t) = max(0, 1 - |t|): the Laplace-kernel profile.
+        ac = rect_bucket().autocorrelation()
+        ts = np.linspace(-0.99, 0.99, 41)
+        np.testing.assert_allclose(ac(ts), np.maximum(0, 1 - np.abs(ts)),
+                                   atol=1e-12)
+
+
+class TestSmoothFamily:
+    @pytest.mark.parametrize("q", [1, 2, 3, 4])
+    def test_normalized(self, q):
+        assert smooth_bucket(q).l2_norm() == pytest.approx(1.0, abs=1e-9)
+
+    @pytest.mark.parametrize("q", [1, 2, 3, 4])
+    def test_support_within_half(self, q):
+        pp = smooth_bucket(q)
+        assert pp.breaks[0] >= -0.5 and pp.breaks[-1] <= 0.5
+
+    @pytest.mark.parametrize("q", [1, 2, 3, 4])
+    def test_even(self, q):
+        pp = smooth_bucket(q)
+        xs = np.linspace(0.001, 0.45, 97)
+        np.testing.assert_allclose(pp(xs), pp(-xs), atol=1e-9)
+
+    def test_paper_bucket_matches_direct_convolution(self):
+        """f = (rect * rect_{1/4} * rect_{1/4})(2x) normalized — brute force."""
+        # numerical convolution on a fine grid
+        h = 1e-4
+        xs = np.arange(-1.0, 1.0, h)
+        rect = ((xs >= -0.5) & (xs < 0.5)).astype(float)
+        rect4 = ((xs >= -0.125) & (xs < 0.125)).astype(float)
+        conv = np.convolve(np.convolve(rect, rect4, "same") * h, rect4,
+                           "same") * h
+        f_direct = np.interp(2 * np.linspace(-0.4, 0.4, 81), xs, conv)
+        nrm = math.sqrt(np.sum(np.interp(
+            2 * xs, xs, conv) ** 2) * h)
+        f_direct /= nrm
+        pp = paper_smooth_bucket()
+        np.testing.assert_allclose(pp(np.linspace(-0.4, 0.4, 81)), f_direct,
+                                   atol=3e-3)
+
+    @pytest.mark.parametrize("q", [2, 3])
+    def test_smoothness_order(self, q):
+        """smooth_bucket(q) must be C^{q-1}: derivatives up to q-1 continuous."""
+        pp = smooth_bucket(q)
+        for order in range(q):
+            eps = 1e-9
+            for b in pp.breaks[1:-1]:
+                lo, hi = pp(np.array([b - eps])), pp(np.array([b + eps]))
+                np.testing.assert_allclose(lo, hi, atol=1e-5)
+            pp = pp.derivative()
+
+    def test_derivative_of_constant_piece_is_zero(self):
+        pp = PiecewisePoly([-1.0, 1.0], [[3.0]])
+        d = pp.derivative()
+        assert d(np.array([0.0]))[0] == 0.0
+
+
+class TestCalculus:
+    @given(st.floats(-2, 2))
+    @settings(max_examples=50, deadline=None)
+    def test_antiderivative_monotone_for_nonneg(self, x):
+        pp = smooth_bucket(2)
+        a = pp.antiderivative_at(x)
+        b = pp.antiderivative_at(x + 0.1)
+        assert b >= a - 1e-12
+
+    def test_box_convolve_preserves_mass(self):
+        pp = rect_bucket()
+        mass0 = pp.antiderivative_at(10.0)
+        conv = pp.box_convolve(0.25)
+        # rect_a has mass a, so mass multiplies by a
+        assert conv.antiderivative_at(10.0) == pytest.approx(mass0 * 0.25)
+
+    def test_scale_arg(self):
+        pp = smooth_bucket(2)
+        sc = pp.scale_arg(2.0)
+        xs = np.linspace(-0.18, 0.18, 37)
+        np.testing.assert_allclose(sc(xs), pp(2 * xs), atol=1e-12)
+
+    def test_autocorrelation_peak_at_zero(self):
+        for name in ("rect", "smooth2", "smooth3"):
+            ac = bucket_by_name(name).autocorrelation()
+            # (f*f)(0) = ||f||_2^2 = 1
+            assert ac(np.array([0.0]))[0] == pytest.approx(1.0, abs=1e-8)
+            ts = np.linspace(-0.9, 0.9, 61)
+            assert np.all(ac(ts) <= 1.0 + 1e-8)
+
+    @given(st.sampled_from(["rect", "smooth2", "smooth3", "smooth4"]))
+    @settings(max_examples=8, deadline=None)
+    def test_autocorrelation_even_psd_profile(self, name):
+        ac = bucket_by_name(name).autocorrelation()
+        ts = np.linspace(0.01, 1.4, 50)
+        # polyfit reconstruction noise grows with the piece degree (smooth4
+        # reaches degree ~10); 1e-6 absolute is far below any functional use
+        np.testing.assert_allclose(ac(ts), ac(-ts), atol=1e-6)
+
+
+def test_bucket_by_name_errors():
+    with pytest.raises(ValueError):
+        bucket_by_name("bogus")
+    with pytest.raises(ValueError):
+        smooth_bucket(0)

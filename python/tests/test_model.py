@@ -1,0 +1,106 @@
+"""L2 graph tests: wlsh_matvec / fused / rff_matvec vs oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model
+from compile.kernels.ref import (
+    wlsh_hash_weights_ref,
+    wlsh_matvec_ref,
+)
+
+
+def test_wlsh_matvec_matches_ref():
+    rng = np.random.default_rng(0)
+    m, n = 8, 512
+    ids = rng.integers(0, 64, size=(m, n)).astype(np.int32)
+    wts = rng.uniform(0.1, 2.0, size=(m, n)).astype(np.float32)
+    beta = rng.normal(size=(1, n)).astype(np.float32)
+    y = model.wlsh_matvec(jnp.asarray(ids), jnp.asarray(wts),
+                          jnp.asarray(beta), jnp.asarray([[1.0 / m]],
+                                                         dtype=jnp.float32))
+    yr = wlsh_matvec_ref(ids, wts, beta, 1.0 / m)
+    np.testing.assert_allclose(np.asarray(y).ravel(), yr, atol=1e-4)
+
+
+@given(seed=st.integers(0, 2**31 - 1), m=st.integers(1, 8),
+       n=st.integers(4, 300), nb=st.integers(2, 80))
+@settings(max_examples=25, deadline=None)
+def test_wlsh_matvec_hypothesis(seed, m, n, nb):
+    rng = np.random.default_rng(seed)
+    nb = min(nb, n)
+    ids = rng.integers(0, nb, size=(m, n)).astype(np.int32)
+    wts = rng.uniform(0.0, 2.0, size=(m, n)).astype(np.float32)
+    beta = rng.normal(size=(1, n)).astype(np.float32)
+    y = model.wlsh_matvec(jnp.asarray(ids), jnp.asarray(wts),
+                          jnp.asarray(beta),
+                          jnp.asarray([[1.0 / m]], dtype=jnp.float32))
+    yr = wlsh_matvec_ref(ids, wts, beta, 1.0 / m)
+    np.testing.assert_allclose(np.asarray(y).ravel(), yr, atol=1e-3)
+
+
+def test_wlsh_matvec_is_psd_quadratic_form():
+    """Claim 10: βᵀK̃β ≥ 0 for any β and any single instance."""
+    rng = np.random.default_rng(4)
+    m, n = 1, 256
+    ids = rng.integers(0, 32, size=(m, n)).astype(np.int32)
+    wts = rng.uniform(-1.0, 2.0, size=(m, n)).astype(np.float32)
+    for _ in range(20):
+        beta = rng.normal(size=(1, n)).astype(np.float32)
+        y = model.wlsh_matvec(jnp.asarray(ids), jnp.asarray(wts),
+                              jnp.asarray(beta),
+                              jnp.asarray([[1.0]], dtype=jnp.float32))
+        q = float(beta.ravel() @ np.asarray(y).ravel())
+        assert q >= -1e-3
+
+
+def test_fused_hash_matvec_matches_two_step():
+    rng = np.random.default_rng(6)
+    n, d, m = 256, 5, 6
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    w = rng.gamma(2.0, 1.0, size=(m, d)).astype(np.float32)
+    z = (rng.uniform(size=(m, d)) * w).astype(np.float32)
+    mix = (rng.integers(1, 2**31, size=(1, d), dtype=np.int64) | 1).astype(
+        np.int32)
+    mask = np.ones((1, d), np.float32)
+    beta = rng.normal(size=(1, n)).astype(np.float32)
+    inv_m = jnp.asarray([[1.0 / m]], dtype=jnp.float32)
+    yf = model.wlsh_hash_matvec_fused(x, w, z, mix, mask,
+                                      jnp.asarray(beta), inv_m,
+                                      bucket="smooth2")
+    ids, wts = wlsh_hash_weights_ref(x, w, z, mix, mask, bucket="smooth2")
+    yr = wlsh_matvec_ref(ids, wts, beta, 1.0 / m)
+    np.testing.assert_allclose(np.asarray(yf).ravel(), yr, atol=1e-3)
+
+
+def test_rff_matvec_never_forms_kernel_matrix():
+    rng = np.random.default_rng(7)
+    n, D = 128, 64
+    z = rng.normal(size=(n, D)).astype(np.float32)
+    beta = rng.normal(size=(1, n)).astype(np.float32)
+    y = model.rff_matvec(jnp.asarray(z), jnp.asarray(beta))
+    yr = (z @ (z.T @ beta.ravel())).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(y).ravel(), yr, rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_padded_instances_with_zero_weights_are_noops():
+    """Padding contract for the m axis: zero-weight instances contribute 0."""
+    rng = np.random.default_rng(8)
+    m, n = 4, 128
+    ids = rng.integers(0, 16, size=(m, n)).astype(np.int32)
+    wts = rng.uniform(0.1, 1.0, size=(m, n)).astype(np.float32)
+    beta = rng.normal(size=(1, n)).astype(np.float32)
+    y1 = model.wlsh_matvec(jnp.asarray(ids), jnp.asarray(wts),
+                           jnp.asarray(beta),
+                           jnp.asarray([[1.0 / m]], dtype=jnp.float32))
+    ids_p = np.concatenate([ids, rng.integers(0, 16, size=(3, n)).astype(
+        np.int32)])
+    wts_p = np.concatenate([wts, np.zeros((3, n), np.float32)])
+    y2 = model.wlsh_matvec(jnp.asarray(ids_p), jnp.asarray(wts_p),
+                           jnp.asarray(beta),
+                           jnp.asarray([[1.0 / m]], dtype=jnp.float32))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)

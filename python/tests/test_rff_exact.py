@@ -1,0 +1,124 @@
+"""Pallas RFF + exact-kernel mat-vec kernels vs oracles (hypothesis sweeps)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.exact import kernel_block_matvec
+from compile.kernels.ref import (
+    kernel_block_matvec_ref,
+    kernel_matrix_ref,
+    rff_features_ref,
+)
+from compile.kernels.rff import rff_features
+
+
+class TestRff:
+    @pytest.mark.parametrize("n,d,D,bn,bd", [
+        (128, 4, 64, 64, 64), (256, 16, 128, 128, 128), (128, 32, 256, 64, 128)])
+    def test_matches_ref(self, n, d, D, bn, bd):
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(n, d)).astype(np.float32)
+        om = rng.normal(size=(d, D)).astype(np.float32)
+        b = rng.uniform(0, 2 * np.pi, size=(1, D)).astype(np.float32)
+        sc = np.array([[np.sqrt(2.0 / D)]], np.float32)
+        z = rff_features(x, om, b, sc, block_n=bn, block_d=bd)
+        np.testing.assert_allclose(np.asarray(z),
+                                   rff_features_ref(x, om, b, sc), atol=1e-5)
+
+    @given(seed=st.integers(0, 2**31 - 1), nb=st.integers(1, 3),
+           d=st.integers(1, 12), db=st.integers(1, 3))
+    @settings(max_examples=15, deadline=None)
+    def test_matches_ref_hypothesis(self, seed, nb, d, db):
+        rng = np.random.default_rng(seed)
+        n, D = 32 * nb, 32 * db
+        x = rng.normal(size=(n, d)).astype(np.float32)
+        om = rng.normal(size=(d, D)).astype(np.float32)
+        b = rng.uniform(0, 2 * np.pi, size=(1, D)).astype(np.float32)
+        sc = np.array([[np.sqrt(2.0 / D)]], np.float32)
+        z = rff_features(x, om, b, sc, block_n=32, block_d=32)
+        np.testing.assert_allclose(np.asarray(z),
+                                   rff_features_ref(x, om, b, sc), atol=1e-5)
+
+    def test_rff_approximates_se_kernel(self):
+        """E[phi(x)ᵀphi(y)] = exp(-gamma ||x-y||²) — Monte Carlo check."""
+        rng = np.random.default_rng(5)
+        d, D, gamma = 3, 8192, 1.0
+        x = rng.normal(size=(2, d)).astype(np.float32) * 0.4
+        om = (rng.normal(size=(d, D)) * np.sqrt(2.0 * gamma)).astype(
+            np.float32)
+        b = rng.uniform(0, 2 * np.pi, size=(1, D)).astype(np.float32)
+        sc = np.array([[np.sqrt(2.0 / D)]], np.float32)
+        z = np.asarray(rff_features(x, om, b, sc, block_n=2, block_d=512))
+        k_hat = float(z[0] @ z[1])
+        k_true = float(kernel_matrix_ref(x[:1], x[1:], 1.0, "se")[0, 0])
+        assert abs(k_hat - k_true) < 0.05
+
+
+class TestExactMatvec:
+    @pytest.mark.parametrize("kind", ["se", "matern52", "laplace"])
+    @pytest.mark.parametrize("q,n,d", [(128, 128, 4), (128, 256, 40),
+                                       (64, 192, 7)])
+    def test_matches_ref(self, kind, q, n, d):
+        rng = np.random.default_rng(1)
+        xq = rng.normal(size=(q, d)).astype(np.float32)
+        x = rng.normal(size=(n, d)).astype(np.float32)
+        beta = rng.normal(size=(1, n)).astype(np.float32)
+        s = 1.3
+        y = kernel_block_matvec(xq, x, beta, np.array([[s]], np.float32),
+                                kind=kind, block_q=64, block_n=64)
+        yr = kernel_block_matvec_ref(xq, x, beta, s, kind)
+        np.testing.assert_allclose(np.asarray(y).ravel(), yr, rtol=2e-4,
+                                   atol=2e-4)
+
+    @given(seed=st.integers(0, 2**31 - 1),
+           kind=st.sampled_from(["se", "matern52", "laplace"]),
+           qb=st.integers(1, 2), nb=st.integers(1, 3), d=st.integers(1, 36),
+           scale=st.floats(0.3, 5.0))
+    @settings(max_examples=15, deadline=None)
+    def test_matches_ref_hypothesis(self, seed, kind, qb, nb, d, scale):
+        rng = np.random.default_rng(seed)
+        q, n = 32 * qb, 32 * nb
+        xq = rng.normal(size=(q, d)).astype(np.float32)
+        x = rng.normal(size=(n, d)).astype(np.float32)
+        beta = rng.normal(size=(1, n)).astype(np.float32)
+        y = kernel_block_matvec(xq, x, beta,
+                                np.array([[scale]], np.float32), kind=kind,
+                                block_q=32, block_n=32)
+        yr = kernel_block_matvec_ref(xq, x, beta, scale, kind)
+        np.testing.assert_allclose(np.asarray(y).ravel(), yr, rtol=3e-4,
+                                   atol=3e-4)
+
+    def test_self_matvec_is_symmetric_quadratic_form(self):
+        """βᵀKβ computed two ways must agree (K symmetric for xq = x)."""
+        rng = np.random.default_rng(2)
+        n, d = 128, 6
+        x = rng.normal(size=(n, d)).astype(np.float32)
+        b1 = rng.normal(size=(1, n)).astype(np.float32)
+        b2 = rng.normal(size=(1, n)).astype(np.float32)
+        s = np.array([[1.0]], np.float32)
+        for kind in ("se", "matern52", "laplace"):
+            y1 = np.asarray(kernel_block_matvec(x, x, b1, s, kind=kind,
+                                                block_q=64, block_n=64))
+            y2 = np.asarray(kernel_block_matvec(x, x, b2, s, kind=kind,
+                                                block_q=64, block_n=64))
+            # b2ᵀ(K b1) == b1ᵀ(K b2)
+            assert float(b2.ravel() @ y1.ravel()) == pytest.approx(
+                float(b1.ravel() @ y2.ravel()), rel=1e-3)
+
+    def test_padded_zero_rows_contribute_nothing(self):
+        """Padding contract: rows with beta=0 never affect the product."""
+        rng = np.random.default_rng(3)
+        n, d, pad = 96, 5, 32
+        x = rng.normal(size=(n, d)).astype(np.float32)
+        xp = np.concatenate([x, rng.normal(size=(pad, d)).astype(np.float32)])
+        beta = rng.normal(size=(1, n)).astype(np.float32)
+        bp = np.concatenate([beta, np.zeros((1, pad), np.float32)], axis=1)
+        s = np.array([[1.1]], np.float32)
+        for kind in ("se", "matern52", "laplace"):
+            y = np.asarray(kernel_block_matvec(x, x, beta, s, kind=kind,
+                                               block_q=32, block_n=32))
+            yp = np.asarray(kernel_block_matvec(x, xp, bp, s, kind=kind,
+                                                block_q=32, block_n=32))
+            np.testing.assert_allclose(y.ravel(), yp.ravel(), atol=1e-4)

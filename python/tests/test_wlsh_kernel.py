@@ -1,0 +1,121 @@
+"""Pallas WLSH hash kernel vs pure-numpy oracle (hypothesis sweeps)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.ref import wlsh_hash_weights_ref, wlsh_kernel_value_ref
+from compile.kernels.wlsh import wlsh_hash_weights
+
+
+def make_inputs(seed, n, d, m, masked=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32) * 3.0
+    w = rng.gamma(2.0, 1.0, size=(m, d)).astype(np.float32) + 1e-3
+    z = (rng.uniform(size=(m, d)) * w).astype(np.float32)
+    mix = (rng.integers(1, 2**31, size=(1, d), dtype=np.int64) | 1).astype(
+        np.int32)
+    mask = np.ones((1, d), np.float32)
+    if masked:
+        mask[0, d - masked:] = 0.0
+        x[:, d - masked:] = 0.0
+    return x, w, z, mix, mask
+
+
+@pytest.mark.parametrize("bucket", ["rect", "smooth2"])
+@pytest.mark.parametrize("n,d,m,bn", [(256, 4, 2, 64), (512, 8, 4, 256),
+                                      (256, 16, 3, 128)])
+def test_kernel_matches_ref(bucket, n, d, m, bn):
+    x, w, z, mix, mask = make_inputs(0, n, d, m)
+    ids, wts = wlsh_hash_weights(x, w, z, mix, mask, bucket=bucket,
+                                 block_n=bn)
+    rids, rwts = wlsh_hash_weights_ref(x, w, z, mix, mask, bucket=bucket)
+    np.testing.assert_array_equal(np.asarray(ids), rids)
+    np.testing.assert_allclose(np.asarray(wts), rwts, atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       n_blocks=st.integers(1, 4),
+       d=st.integers(1, 24),
+       m=st.integers(1, 6),
+       masked=st.integers(0, 3),
+       bucket=st.sampled_from(["rect", "smooth2", "smooth3"]))
+@settings(max_examples=20, deadline=None)
+def test_kernel_matches_ref_hypothesis(seed, n_blocks, d, m, masked, bucket):
+    masked = min(masked, d - 1)
+    n = 64 * n_blocks
+    x, w, z, mix, mask = make_inputs(seed, n, d, m, masked)
+    ids, wts = wlsh_hash_weights(x, w, z, mix, mask, bucket=bucket,
+                                 block_n=64)
+    rids, rwts = wlsh_hash_weights_ref(x, w, z, mix, mask, bucket=bucket)
+    np.testing.assert_array_equal(np.asarray(ids), rids)
+    np.testing.assert_allclose(np.asarray(wts), rwts, atol=1e-5)
+
+
+def test_masked_dims_do_not_affect_ids_or_weights():
+    """Padding contract: masked dims contribute id 0 and weight factor 1."""
+    x, w, z, mix, mask = make_inputs(7, 256, 8, 3)
+    full_mask = mask.copy()
+    ids_a, wts_a = wlsh_hash_weights(x, w, z, mix, full_mask,
+                                     bucket="smooth2")
+    # now pad: extend to d=12 with junk features but mask them out
+    pad = np.random.default_rng(8)
+    x2 = np.concatenate([x, pad.normal(size=(256, 4)).astype(np.float32)], 1)
+    w2 = np.concatenate([w, np.ones((3, 4), np.float32)], 1)
+    z2 = np.concatenate([z, 0.3 * np.ones((3, 4), np.float32)], 1)
+    mix2 = np.concatenate([mix, np.full((1, 4), 12345, np.int32)], 1)
+    mask2 = np.concatenate([full_mask, np.zeros((1, 4), np.float32)], 1)
+    ids_b, wts_b = wlsh_hash_weights(x2, w2, z2, mix2, mask2,
+                                     bucket="smooth2")
+    np.testing.assert_array_equal(np.asarray(ids_a), np.asarray(ids_b))
+    np.testing.assert_allclose(np.asarray(wts_a), np.asarray(wts_b),
+                               atol=1e-6)
+
+
+def test_rect_weights_are_one():
+    x, w, z, mix, mask = make_inputs(3, 128, 6, 2)
+    _, wts = wlsh_hash_weights(x, w, z, mix, mask, bucket="rect",
+                               block_n=128)
+    np.testing.assert_array_equal(np.asarray(wts), np.ones((2, 128),
+                                                           np.float32))
+
+
+def test_collision_probability_is_laplace_kernel():
+    """Rahimi-Recht: rect bucket + Gamma(2,1) widths ⇒ P[collision] = e^{-|Δ|_1}.
+
+    Statistical test over many instances in 1-d (Monte Carlo ±4σ band).
+    """
+    rng = np.random.default_rng(11)
+    m = 4000
+    delta = 0.7
+    x = np.array([[0.0], [delta]], np.float32)
+    w = rng.gamma(2.0, 1.0, size=(m, 1)).astype(np.float32)
+    z = (rng.uniform(size=(m, 1)) * w).astype(np.float32)
+    mix = np.array([[1]], np.int32)
+    mask = np.ones((1, 1), np.float32)
+    ids, _ = wlsh_hash_weights(x, w, z, mix, mask, bucket="rect", block_n=2)
+    ids = np.asarray(ids)
+    p_hat = float(np.mean(ids[:, 0] == ids[:, 1]))
+    p_true = np.exp(-delta)
+    sigma = np.sqrt(p_true * (1 - p_true) / m)
+    assert abs(p_hat - p_true) < 4 * sigma + 1e-9
+
+
+def test_wlsh_estimator_is_unbiased_smooth():
+    """Claim 22: E[w_x w_y 1{collide}] = k_{f,p}(x-y), smooth bucket, Gamma(7)."""
+    rng = np.random.default_rng(13)
+    m = 20000
+    delta = 0.35
+    x = np.array([[0.0], [delta]], np.float32)
+    w = rng.gamma(7.0, 1.0, size=(m, 1)).astype(np.float32)
+    z = (rng.uniform(size=(m, 1)) * w).astype(np.float32)
+    mix = np.array([[1]], np.int32)
+    mask = np.ones((1, 1), np.float32)
+    ids, wts = wlsh_hash_weights(x, w, z, mix, mask, bucket="smooth2",
+                                 block_n=2)
+    ids, wts = np.asarray(ids), np.asarray(wts)
+    est = np.where(ids[:, 0] == ids[:, 1], wts[:, 0] * wts[:, 1], 0.0)
+    k_true = wlsh_kernel_value_ref(delta, "smooth2", 7.0)[0]
+    stderr = est.std() / np.sqrt(m)
+    assert abs(est.mean() - k_true) < 4.5 * stderr + 1e-4

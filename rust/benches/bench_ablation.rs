@@ -1,0 +1,198 @@
+//! F-ABL — design ablations DESIGN.md calls out:
+//!   A1  bucket function: rect vs smooth2 on a smooth-GP regression task
+//!   A2  m sweep: accuracy/time trade-off on synthetic wine
+//!   A3  id mode: u64 vs i32 collapse (build time + accuracy parity)
+//!   A4  worker sharding: sketch build time vs worker count
+//!   A5  Nyström baseline at matched memory
+
+#[path = "common.rs"]
+mod common;
+
+use common::{by_scale, f, record, secs, Table};
+use wlsh_krr::config::KrrConfig;
+use wlsh_krr::coordinator::Trainer;
+use wlsh_krr::data::{rmse, synthetic_by_name, Dataset};
+use wlsh_krr::gp::sample_gp_exact;
+use wlsh_krr::kernels::Kernel;
+use wlsh_krr::lsh::IdMode;
+use wlsh_krr::sketch::WlshSketch;
+use wlsh_krr::util::json::JsonWriter;
+use wlsh_krr::util::rng::Pcg64;
+
+fn main() {
+    a1_bucket_function();
+    a2_m_sweep();
+    a3_id_mode();
+    a4_workers();
+    a5_nystrom();
+}
+
+fn a1_bucket_function() {
+    // Smooth GP target: the smooth WLSH kernel should beat the rect/Laplace
+    // one (paper §3.2's motivation for weighted buckets).
+    let n = by_scale(300, 900, 3000);
+    let d = 5;
+    let mut rng = Pcg64::new(21, 0);
+    let pts: Vec<f32> = (0..n * d).map(|_| rng.uniform() as f32).collect();
+    let path = sample_gp_exact(&Kernel::squared_exp(1.0), &pts, d, &mut rng).unwrap();
+    let y: Vec<f64> = path.iter().map(|v| v + 0.05 * rng.normal()).collect();
+    let ds = Dataset::new("gp-se-d5", pts, y, d);
+    let (tr, te) = ds.split(n * 3 / 4, 22);
+    println!("=== A1: bucket function on a smooth GP (exact WLSH kernels) ===\n");
+    let t = Table::new(&[("bucket", 10), ("shape", 6), ("rmse", 9)]);
+    for (bucket, shape) in [("rect", 2.0), ("smooth2", 7.0), ("smooth3", 7.0)] {
+        let cfg = KrrConfig {
+            method: "exact-wlsh".into(),
+            bucket: bucket.into(),
+            gamma_shape: shape,
+            scale: 1.0,
+            lambda: 0.02,
+            cg_max_iters: 300,
+            cg_tol: 1e-7,
+            ..Default::default()
+        };
+        let model = Trainer::new(cfg).train(&tr);
+        let err = rmse(&model.predict(&te.x), &te.y);
+        t.row(&[bucket.into(), f(shape, 0), f(err, 4)]);
+        record(
+            "ablation",
+            &JsonWriter::object()
+                .field_str("series", "bucket_function")
+                .field_str("bucket", bucket)
+                .field_f64("rmse", err)
+                .finish(),
+        );
+    }
+    println!("\nexpect: smooth buckets ≤ rect on smooth targets (paper §3.2)\n");
+}
+
+fn a2_m_sweep() {
+    let mut ds = synthetic_by_name("wine", Some(by_scale(600, 2000, 6497)), 23).unwrap();
+    ds.standardize();
+    let (tr, te) = ds.split(ds.n * 3 / 4, 24);
+    let med_l1 = wlsh_krr::data::median_distance(&tr, true, 400, 9);
+    println!("=== A2: WLSH m sweep (accuracy vs time, wine-synthetic) ===\n");
+    let t = Table::new(&[("m", 6), ("rmse", 9), ("build", 9), ("solve", 9)]);
+    for m in [10usize, 25, 50, 100, 200, 450] {
+        let cfg = KrrConfig {
+            method: "wlsh".into(),
+            budget: m,
+            scale: med_l1,
+            lambda: 0.5,
+            ..Default::default()
+        };
+        let model = Trainer::new(cfg).train(&tr);
+        let err = rmse(&model.predict(&te.x), &te.y);
+        t.row(&[
+            m.to_string(),
+            f(err, 4),
+            secs(model.report.build_secs),
+            secs(model.report.solve_secs),
+        ]);
+        record(
+            "ablation",
+            &JsonWriter::object()
+                .field_str("series", "m_sweep")
+                .field_usize("m", m)
+                .field_f64("rmse", err)
+                .field_f64("build_secs", model.report.build_secs)
+                .field_f64("solve_secs", model.report.solve_secs)
+                .finish(),
+        );
+    }
+    println!("\nexpect: rmse saturates while cost grows linearly in m\n");
+}
+
+fn a3_id_mode() {
+    let n = by_scale(2000, 20_000, 100_000);
+    let d = 54;
+    let mut rng = Pcg64::new(25, 0);
+    let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+    println!("=== A3: id collapse u64 vs i32 (n={n}, d={d}, m=50) ===\n");
+    let t = Table::new(&[("mode", 6), ("build", 9), ("buckets/inst", 13)]);
+    for (label, mode) in [("u64", IdMode::U64), ("i32", IdMode::I32)] {
+        let t0 = std::time::Instant::now();
+        let sk = WlshSketch::build_mode(&x, n, d, 50, "rect", 2.0, 4.0, 26, mode);
+        let b = t0.elapsed().as_secs_f64();
+        t.row(&[label.into(), secs(b), f(sk.mean_buckets(), 0)]);
+        record(
+            "ablation",
+            &JsonWriter::object()
+                .field_str("series", "id_mode")
+                .field_str("mode", label)
+                .field_f64("build_secs", b)
+                .field_f64("mean_buckets", sk.mean_buckets())
+                .finish(),
+        );
+    }
+    println!("\nexpect: identical bucket structure whp; u64 is the native default\n");
+}
+
+fn a4_workers() {
+    let mut ds = synthetic_by_name("covtype", Some(by_scale(5000, 30_000, 100_000)), 27).unwrap();
+    ds.standardize();
+    println!("=== A4: sharded sketch build vs workers (1 core ⇒ structural) ===\n");
+    let t = Table::new(&[("workers", 8), ("build", 9)]);
+    for w in [1usize, 2, 4] {
+        let cfg = KrrConfig {
+            method: "wlsh".into(),
+            budget: 50,
+            scale: 4.0,
+            workers: w,
+            ..Default::default()
+        };
+        let trainer = Trainer::new(cfg);
+        let t0 = std::time::Instant::now();
+        let op = trainer.build_operator(&ds);
+        let b = t0.elapsed().as_secs_f64();
+        t.row(&[w.to_string(), secs(b)]);
+        let _ = op.memory_bytes();
+        record(
+            "ablation",
+            &JsonWriter::object()
+                .field_str("series", "workers")
+                .field_usize("workers", w)
+                .field_f64("build_secs", b)
+                .finish(),
+        );
+    }
+    println!();
+}
+
+fn a5_nystrom() {
+    let mut ds = synthetic_by_name("wine", Some(by_scale(600, 2000, 6497)), 29).unwrap();
+    ds.standardize();
+    let (tr, te) = ds.split(ds.n * 3 / 4, 30);
+    let med_l1 = wlsh_krr::data::median_distance(&tr, true, 400, 9);
+    let med_l2 = wlsh_krr::data::median_distance(&tr, false, 400, 9);
+    println!("=== A5: Nyström baseline vs WLSH at matched budget ===\n");
+    let t = Table::new(&[("method", 16), ("rmse", 9), ("total", 9), ("mem(MB)", 9)]);
+    for (method, budget) in [("wlsh", 200), ("nystrom", 200), ("rff", 2000)] {
+        let cfg = KrrConfig {
+            method: method.into(),
+            budget,
+            scale: if method == "wlsh" { med_l1 } else { med_l2 },
+            lambda: 0.5,
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let model = Trainer::new(cfg).train(&tr);
+        let err = rmse(&model.predict(&te.x), &te.y);
+        t.row(&[
+            format!("{method}({budget})"),
+            f(err, 4),
+            secs(t0.elapsed().as_secs_f64()),
+            f(model.report.memory_bytes as f64 / 1e6, 1),
+        ]);
+        record(
+            "ablation",
+            &JsonWriter::object()
+                .field_str("series", "nystrom_cmp")
+                .field_str("method", method)
+                .field_usize("budget", budget)
+                .field_f64("rmse", err)
+                .finish(),
+        );
+    }
+    println!("\nnote: Nyström is data-dependent (paper §1.1); WLSH is oblivious\n");
+}

@@ -1,0 +1,98 @@
+//! F-OSE — Theorem 11 made measurable: the spectral sandwich error
+//! ε̂(m) = max deviation of spec((K+λI)^{-1/2}(K̃+λI)(K+λI)^{-1/2}) from 1,
+//! swept over m (expect ε ∝ 1/√m) and over λ at fixed m (expect ε to grow
+//! as λ shrinks — the n/λ factor in Theorem 11's bound).
+
+#[path = "common.rs"]
+mod common;
+
+use common::{by_scale, f, record, Table};
+use wlsh_krr::kernels::Kernel;
+use wlsh_krr::risk::ose_epsilon_dense;
+use wlsh_krr::sketch::{ExactKernelOp, WlshSketch};
+use wlsh_krr::solver::materialize;
+use wlsh_krr::util::json::JsonWriter;
+use wlsh_krr::util::rng::Pcg64;
+
+fn main() {
+    let n = by_scale(48, 160, 512);
+    let d = 2;
+    let trials = by_scale(1, 3, 5);
+    let mut rng = Pcg64::new(11, 0);
+    let x: Vec<f32> = (0..n * d).map(|_| (rng.normal() * 0.8) as f32).collect();
+    let exact = ExactKernelOp::new(&x, n, d, Kernel::wlsh("rect", 2.0, 1.0));
+    let k = materialize(&exact);
+
+    println!("=== F-OSE series 1: eps vs m (n={n}, lambda=2) ===\n");
+    let t = Table::new(&[("m", 6), ("eps", 10), ("eps*sqrt(m)", 12)]);
+    let lambda = 2.0;
+    for m in [4usize, 8, 16, 32, 64, 128, 256] {
+        let eps: f64 = (0..trials)
+            .map(|s| {
+                let sk = WlshSketch::build(&x, n, d, m, "rect", 2.0, 1.0, 500 + s as u64);
+                ose_epsilon_dense(&k, &sk, lambda).eps
+            })
+            .sum::<f64>()
+            / trials as f64;
+        t.row(&[m.to_string(), f(eps, 4), f(eps * (m as f64).sqrt(), 3)]);
+        record(
+            "ose",
+            &JsonWriter::object()
+                .field_str("series", "eps_vs_m")
+                .field_usize("n", n)
+                .field_usize("m", m)
+                .field_f64("lambda", lambda)
+                .field_f64("eps", eps)
+                .finish(),
+        );
+    }
+    println!("\ntheory: eps*sqrt(m) ≈ constant (Theorem 11's 1/eps² rate)\n");
+
+    println!("=== F-OSE series 2: eps vs lambda (n={n}, m=64) ===\n");
+    let t2 = Table::new(&[("lambda", 8), ("n/lambda", 9), ("eps", 10)]);
+    for lambda in [16.0, 8.0, 4.0, 2.0, 1.0, 0.5, 0.25] {
+        let eps: f64 = (0..trials)
+            .map(|s| {
+                let sk = WlshSketch::build(&x, n, d, 64, "rect", 2.0, 1.0, 900 + s as u64);
+                ose_epsilon_dense(&k, &sk, lambda).eps
+            })
+            .sum::<f64>()
+            / trials as f64;
+        t2.row(&[f(lambda, 2), f(n as f64 / lambda, 1), f(eps, 4)]);
+        record(
+            "ose",
+            &JsonWriter::object()
+                .field_str("series", "eps_vs_lambda")
+                .field_usize("n", n)
+                .field_usize("m", 64)
+                .field_f64("lambda", lambda)
+                .field_f64("eps", eps)
+                .finish(),
+        );
+    }
+    println!("\ntheory: eps grows as lambda shrinks (m ∝ n/(lambda·eps²))");
+
+    println!("\n=== F-OSE series 3: smooth bucket (smooth2, Gamma(7)) ===\n");
+    let exact_s = ExactKernelOp::new(&x, n, d, Kernel::wlsh("smooth2", 7.0, 1.0));
+    let ks = materialize(&exact_s);
+    let t3 = Table::new(&[("m", 6), ("eps", 10)]);
+    for m in [16usize, 64, 256] {
+        let eps: f64 = (0..trials)
+            .map(|s| {
+                let sk = WlshSketch::build(&x, n, d, m, "smooth2", 7.0, 1.0, 1300 + s as u64);
+                ose_epsilon_dense(&ks, &sk, 2.0).eps
+            })
+            .sum::<f64>()
+            / trials as f64;
+        t3.row(&[m.to_string(), f(eps, 4)]);
+        record(
+            "ose",
+            &JsonWriter::object()
+                .field_str("series", "eps_vs_m_smooth")
+                .field_usize("m", m)
+                .field_f64("eps", eps)
+                .finish(),
+        );
+    }
+    println!("\ntheory: same 1/sqrt(m) rate, constant scaled by ||f||_inf^2d (Thm 11)");
+}

@@ -1,0 +1,139 @@
+//! F-SERVE — §4.2's prediction path under load: QPS and latency
+//! percentiles of the TCP serving stack, batched vs unbatched, at several
+//! client concurrencies.
+
+#[path = "common.rs"]
+mod common;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use common::{by_scale, f, record, Table};
+use wlsh_krr::config::KrrConfig;
+use wlsh_krr::coordinator::{serve, ServerConfig, Trainer};
+use wlsh_krr::data::synthetic_by_name;
+use wlsh_krr::util::json::{Json, JsonWriter};
+
+fn run_load(
+    model: Arc<wlsh_krr::coordinator::TrainedModel>,
+    d: usize,
+    rows: &[f32],
+    nq: usize,
+    clients: usize,
+    requests: usize,
+    max_batch: usize,
+) -> (f64, f64, f64, f64) {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let scfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch,
+        linger: Duration::from_micros(200),
+        workers: 1,
+    };
+    let m = model.clone();
+    let server = std::thread::spawn(move || serve(m, d, scfg, Some(tx)).unwrap());
+    let addr = rx.recv().unwrap();
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let addr = addr.clone();
+            let rows = rows;
+            scope.spawn(move || {
+                let mut conn = TcpStream::connect(&addr).unwrap();
+    conn.set_nodelay(true).ok();
+                let mut reader = BufReader::new(conn.try_clone().unwrap());
+                for r in 0..requests {
+                    let qi = (c * 7919 + r * 13) % nq;
+                    let feats: Vec<String> = rows[qi * d..(qi + 1) * d]
+                        .iter()
+                        .map(|v| format!("{v}"))
+                        .collect();
+                    writeln!(conn, "{{\"features\": [{}]}}", feats.join(",")).unwrap();
+                    let mut line = String::new();
+                    reader.read_line(&mut line).unwrap();
+                }
+            });
+        }
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    let mut conn = TcpStream::connect(&addr).unwrap();
+    conn.set_nodelay(true).ok();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    writeln!(conn, "{{\"cmd\": \"stats\"}}").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let stats = Json::parse(&line).unwrap();
+    let p50 = stats.get("p50_us").and_then(Json::as_f64).unwrap_or(0.0);
+    let p99 = stats.get("p99_us").and_then(Json::as_f64).unwrap_or(0.0);
+    writeln!(conn, "{{\"cmd\": \"shutdown\"}}").unwrap();
+    let mut l2 = String::new();
+    reader.read_line(&mut l2).unwrap();
+    server.join().unwrap();
+    ((clients * requests) as f64 / secs, secs, p50, p99)
+}
+
+fn main() {
+    let mut ds = synthetic_by_name("insurance", Some(by_scale(1000, 4000, 9822)), 7).unwrap();
+    ds.standardize();
+    let n_train = ds.n * 4 / 5;
+    let (train, test) = ds.split(n_train, 8);
+    let cfg = KrrConfig {
+        method: "wlsh".into(),
+        budget: 250,
+        scale: 5.0,
+        lambda: 0.5,
+        ..Default::default()
+    };
+    let model = Arc::new(Trainer::new(cfg).train(&train));
+    let requests = by_scale(50, 250, 1000);
+    println!(
+        "=== F-SERVE: serving load (wlsh m=250, d={}, {} req/client) ===\n",
+        train.d, requests
+    );
+    let t = Table::new(&[
+        ("clients", 8),
+        ("batching", 9),
+        ("qps", 9),
+        ("p50(us)", 9),
+        ("p99(us)", 9),
+    ]);
+    for clients in [1usize, 4, 8] {
+        for (label, max_batch) in [("off", 1), ("on", 64)] {
+            let (qps, _secs, p50, p99) = run_load(
+                model.clone(),
+                train.d,
+                &test.x,
+                test.n,
+                clients,
+                requests,
+                max_batch,
+            );
+            t.row(&[
+                clients.to_string(),
+                label.into(),
+                f(qps, 0),
+                f(p50, 0),
+                f(p99, 0),
+            ]);
+            record(
+                "serve",
+                &JsonWriter::object()
+                    .field_usize("clients", clients)
+                    .field_str("batching", label)
+                    .field_f64("qps", qps)
+                    .field_f64("p50_us", p50)
+                    .field_f64("p99_us", p99)
+                    .finish(),
+            );
+        }
+    }
+    println!(
+        "\nreading: a query costs O(m·d) (hash + bucket lookup against the\n\
+         precomputed §4.2 loads), a few hundred µs here. Batching only adds\n\
+         value once per-batch fixed costs dominate (e.g. the XLA-backend\n\
+         predict path); at native per-query costs the linger time shows up\n\
+         directly in p50 — measured honestly above."
+    );
+}

@@ -1,0 +1,109 @@
+//! Table 1 reproduction — "Test set RMSE for estimating GPs."
+//!
+//! For each covariance σ ∈ {SE, Laplace, Matérn-5/2} and dimension
+//! d ∈ {5, 30}: sample η ~ GP(0, σ) at n uniform points in [0,1]^d, add
+//! observation noise, and fit KRR with each regression kernel — Laplace,
+//! SE, Matérn-5/2, and the paper's smooth WLSH kernel
+//! f = (rect*rect_{1/4}*rect_{1/4})(2x), p = Gamma(7,1).
+//!
+//! Paper sizes: 4000 points (3000 train / 1000 test). Default here: 1600
+//! (1200/400) so the 24-config grid finishes quickly on one core; set
+//! WLSH_BENCH_PAPER=1 for the full size. The reproduction target is the
+//! *ordering* (matching kernel wins its own covariance row; WLSH tracks
+//! Matérn-5/2 closely), not absolute RMSE.
+
+#[path = "common.rs"]
+mod common;
+
+use common::{by_scale, f, record, Table};
+use wlsh_krr::config::KrrConfig;
+use wlsh_krr::coordinator::Trainer;
+use wlsh_krr::data::{rmse, Dataset};
+use wlsh_krr::gp::sample_gp_exact;
+use wlsh_krr::kernels::Kernel;
+use wlsh_krr::util::json::JsonWriter;
+use wlsh_krr::util::rng::Pcg64;
+
+fn main() {
+    let n = by_scale(400, 1200, 4000);
+    let n_train = n * 3 / 4;
+    let noise = 0.05;
+    println!("=== Table 1: GP estimation RMSE (n={n}, train={n_train}) ===\n");
+    let table = Table::new(&[
+        ("cov", 10),
+        ("dim", 4),
+        ("laplace", 9),
+        ("sq-exp", 9),
+        ("matern52", 9),
+        ("wlsh", 9),
+        ("winner", 10),
+    ]);
+    for (cov_name, cov) in [
+        ("se", Kernel::squared_exp(1.0)),
+        ("laplace", Kernel::laplace(1.0)),
+        ("matern52", Kernel::matern52(1.0)),
+    ] {
+        for d in [5usize, 30] {
+            let mut rng = Pcg64::new(1000 + d as u64, 0);
+            let pts: Vec<f32> = (0..n * d).map(|_| rng.uniform() as f32).collect();
+            let path = sample_gp_exact(&cov, &pts, d, &mut rng).expect("gp");
+            let y: Vec<f64> = path.iter().map(|v| v + noise * rng.normal()).collect();
+            let ds = Dataset::new(&format!("gp-{cov_name}-d{d}"), pts, y, d);
+            let (tr, te) = ds.split(n_train, 7);
+            let mut errs = Vec::new();
+            for (method, bucket, shape) in [
+                ("exact-laplace", "rect", 2.0),
+                ("exact-se", "rect", 2.0),
+                ("exact-matern", "rect", 2.0),
+                ("exact-wlsh", "smooth2", 7.0),
+            ] {
+                let cfg = KrrConfig {
+                    method: method.into(),
+                    bucket: bucket.into(),
+                    gamma_shape: shape,
+                    scale: 1.0,
+                    lambda: 0.02,
+                    cg_max_iters: 400,
+                    cg_tol: 1e-7,
+                    ..Default::default()
+                };
+                let model = Trainer::new(cfg).train(&tr);
+                errs.push(rmse(&model.predict(&te.x), &te.y));
+            }
+            let names = ["laplace", "sq-exp", "matern52", "wlsh"];
+            let winner = names[errs
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0];
+            table.row(&[
+                cov_name.to_string(),
+                d.to_string(),
+                f(errs[0], 4),
+                f(errs[1], 4),
+                f(errs[2], 4),
+                f(errs[3], 4),
+                winner.to_string(),
+            ]);
+            record(
+                "table1",
+                &JsonWriter::object()
+                    .field_str("cov", cov_name)
+                    .field_usize("dim", d)
+                    .field_usize("n", n)
+                    .field_f64("laplace", errs[0])
+                    .field_f64("se", errs[1])
+                    .field_f64("matern52", errs[2])
+                    .field_f64("wlsh", errs[3])
+                    .field_str("winner", winner)
+                    .finish(),
+            );
+        }
+    }
+    println!(
+        "\npaper (n=4000): WLSH beats Matérn on all rows; beats SE at d=5.\n\
+         reproduction target: WLSH within a few % of the best smooth kernel\n\
+         on smooth covariances, Laplace kernel wins its own row."
+    );
+}

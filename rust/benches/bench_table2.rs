@@ -1,0 +1,155 @@
+//! Table 2 reproduction — "Test set RMSE of different regression methods
+//! together with the running times."
+//!
+//! Datasets (synthetic stand-ins, DESIGN.md §5): wine (6497×11, 4000
+//! train), insurance (9822×85, 5822 train), ctslices (53500×384, 35000
+//! train), covtype (581012×54, 500000 train). Methods: exact KRR with
+//! Laplace/SE/Matérn kernels (budget-capped like the paper's 12-hour
+//! limit), RFF at the paper's D, WLSH at the paper's m.
+//!
+//! Default scale caps the two large datasets (ct→12k rows, covtype→60k)
+//! so the whole table runs in minutes on one core; WLSH_BENCH_PAPER=1
+//! lifts the caps. Reproduction target: WLSH ≈ exact accuracy on the
+//! small datasets at ≥3× less solve time; WLSH beats RFF accuracy on the
+//! large, memory-constrained datasets.
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Instant;
+
+use common::{by_scale, f, record, secs, Table};
+use wlsh_krr::config::KrrConfig;
+use wlsh_krr::coordinator::Trainer;
+use wlsh_krr::data::{rmse, synthetic_by_name};
+use wlsh_krr::util::json::JsonWriter;
+
+fn main() {
+    let exact_budget_secs = by_scale(20.0, 150.0, 43_200.0);
+    let caps: [(&str, Option<usize>, usize); 4] = [
+        ("wine", None, 4000),
+        ("insurance", None, 5822),
+        ("ctslices", by_scale(Some(3000), Some(12_000), None), 35_000),
+        ("covtype", by_scale(Some(8000), Some(40_000), None), 500_000),
+    ];
+    println!(
+        "=== Table 2: large-scale KRR (exact budget {} per method) ===\n",
+        secs(exact_budget_secs)
+    );
+    let table = Table::new(&[
+        ("dataset", 10),
+        ("n/d", 12),
+        ("method", 16),
+        ("rmse", 8),
+        ("build", 8),
+        ("solve", 8),
+        ("iters", 6),
+    ]);
+    for (name, cap, paper_train) in caps {
+        let mut ds = synthetic_by_name(name, cap, 42).expect("dataset");
+        ds.standardize();
+        let spec_n = spec_of(name).n;
+        let n_train = if ds.n == spec_n {
+            paper_train
+        } else {
+            // keep the paper's train fraction under the cap
+            (ds.n as f64 * paper_train as f64 / spec_n as f64) as usize
+        };
+        let (tr, te) = ds.split(n_train.min(ds.n - 100), 1);
+        // bandwidths via the median heuristic (L1 for the Laplace family /
+        // WLSH-rect, L2 for SE-family / RFF / Matérn)
+        let med_l1 = wlsh_krr::data::median_distance(&tr, true, 500, 11);
+        let med_l2 = wlsh_krr::data::median_distance(&tr, false, 500, 11);
+        let mut preset_wlsh = KrrConfig::paper_preset(name, "wlsh");
+        preset_wlsh.scale = med_l1;
+        let mut preset_rff = KrrConfig::paper_preset(name, "rff");
+        preset_rff.scale = med_l2;
+        // estimate exact cost: one CG iter is ~n²·d kernel-flops; skip if
+        // the budget can't fit ~30 iterations (the paper's ">12 hrs  N/A")
+        let flops_per_iter = (tr.n as f64) * (tr.n as f64) * (tr.d as f64) * 4.0;
+        let est_exact_secs = 30.0 * flops_per_iter / 2.5e9;
+        for method in ["exact-laplace", "exact-se", "exact-matern", "rff", "wlsh"] {
+            let is_exact = method.starts_with("exact");
+            if is_exact && est_exact_secs > exact_budget_secs {
+                table.row(&[
+                    name.into(),
+                    format!("{}/{}", tr.n, tr.d),
+                    method.into(),
+                    "N/A".into(),
+                    format!(">{}", secs(exact_budget_secs)),
+                    "-".into(),
+                    "-".into(),
+                ]);
+                record(
+                    "table2",
+                    &JsonWriter::object()
+                        .field_str("dataset", name)
+                        .field_str("method", method)
+                        .field_str("status", "over-budget")
+                        .finish(),
+                );
+                continue;
+            }
+            let base = if method == "rff" { &preset_rff } else { &preset_wlsh };
+            let scale = match method {
+                "exact-laplace" | "wlsh" => med_l1,
+                _ => med_l2, // SE / Matérn / RFF live on L2 distances
+            };
+            let cfg = KrrConfig {
+                method: method.into(),
+                scale,
+                cg_max_iters: if is_exact { 40 } else { 80 },
+                cg_tol: 1e-4,
+                ..base.clone()
+            };
+            let t0 = Instant::now();
+            let model = Trainer::new(cfg).train(&tr);
+            let err = rmse(&model.predict(&te.x), &te.y);
+            let total = t0.elapsed().as_secs_f64();
+            table.row(&[
+                name.into(),
+                format!("{}/{}", tr.n, tr.d),
+                format!("{}({})", method, base_budget(method, base)),
+                f(err, 4),
+                secs(model.report.build_secs),
+                secs(model.report.solve_secs),
+                model.report.cg_iters.to_string(),
+            ]);
+            record(
+                "table2",
+                &JsonWriter::object()
+                    .field_str("dataset", name)
+                    .field_str("method", method)
+                    .field_usize("n_train", tr.n)
+                    .field_usize("d", tr.d)
+                    .field_f64("rmse", err)
+                    .field_f64("build_secs", model.report.build_secs)
+                    .field_f64("solve_secs", model.report.solve_secs)
+                    .field_f64("total_secs", total)
+                    .field_usize("cg_iters", model.report.cg_iters)
+                    .finish(),
+            );
+        }
+    }
+    println!(
+        "\npaper: WLSH ≈ exact on wine/insurance at ≥3× speedup; exact N/A on\n\
+         ct/covtype; WLSH beats RFF on the two large datasets (3.45 vs 4.10,\n\
+         0.720 vs 0.968). Absolute values differ (synthetic data, 1 core)."
+    );
+}
+
+fn spec_of(name: &str) -> wlsh_krr::data::SyntheticSpec {
+    wlsh_krr::data::SPECS
+        .iter()
+        .find(|s| s.name == name)
+        .unwrap()
+        .clone()
+}
+
+fn base_budget(method: &str, cfg: &KrrConfig) -> String {
+    match method {
+        "rff" => format!("D={}", cfg.budget),
+        "wlsh" => format!("m={}", cfg.budget),
+        _ => "exact".into(),
+    }
+}

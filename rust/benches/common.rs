@@ -1,0 +1,92 @@
+//! Shared bench harness (criterion is unavailable offline): table printing,
+//! JSONL result capture, and the scale knobs.
+//!
+//! Every bench honors two environment variables:
+//!   WLSH_BENCH_PAPER=1  — run at the paper's full sizes (slow on 1 core)
+//!   WLSH_BENCH_FAST=1   — minimum sizes (CI smoke)
+
+#![allow(dead_code)]
+
+use std::io::Write;
+
+/// Scale regime for a bench run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Fast,
+    Default,
+    Paper,
+}
+
+pub fn scale() -> Scale {
+    if std::env::var("WLSH_BENCH_PAPER").map(|v| v == "1").unwrap_or(false) {
+        Scale::Paper
+    } else if std::env::var("WLSH_BENCH_FAST").map(|v| v == "1").unwrap_or(false) {
+        Scale::Fast
+    } else {
+        Scale::Default
+    }
+}
+
+/// Pick by scale: (fast, default, paper).
+pub fn by_scale<T: Copy>(fast: T, default: T, paper: T) -> T {
+    match scale() {
+        Scale::Fast => fast,
+        Scale::Default => default,
+        Scale::Paper => paper,
+    }
+}
+
+/// Append a JSON line to target/bench_results/<bench>.jsonl.
+pub fn record(bench: &str, json_line: &str) {
+    let dir = std::path::Path::new("target/bench_results");
+    std::fs::create_dir_all(dir).ok();
+    if let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(dir.join(format!("{bench}.jsonl")))
+    {
+        let _ = writeln!(f, "{json_line}");
+    }
+}
+
+/// Fixed-width table writer.
+pub struct Table {
+    widths: Vec<usize>,
+}
+
+impl Table {
+    pub fn new(headers: &[(&str, usize)]) -> Table {
+        let mut line = String::new();
+        let mut widths = Vec::new();
+        for (h, w) in headers {
+            line.push_str(&format!("{h:>w$} ", w = *w));
+            widths.push(*w);
+        }
+        println!("{line}");
+        println!("{}", "-".repeat(line.len()));
+        Table { widths }
+    }
+
+    pub fn row(&self, cells: &[String]) {
+        let mut line = String::new();
+        for (c, w) in cells.iter().zip(&self.widths) {
+            line.push_str(&format!("{c:>w$} ", w = *w));
+        }
+        println!("{line}");
+    }
+}
+
+/// fmt helpers
+pub fn f(v: f64, prec: usize) -> String {
+    format!("{v:.prec$}")
+}
+
+pub fn secs(v: f64) -> String {
+    if v >= 60.0 {
+        format!("{:.1}min", v / 60.0)
+    } else if v >= 1.0 {
+        format!("{v:.1}s")
+    } else {
+        format!("{:.0}ms", v * 1e3)
+    }
+}

@@ -1,0 +1,242 @@
+//! Bucket-shaping functions f (paper Def. 6/8) as exact piecewise
+//! polynomials — the Rust mirror of `python/compile/kernels/bucketfn.py`.
+//!
+//! Construction is programmatic: repeated box convolution of `rect` yields
+//! the C^{q-1} family `smooth(q)`; `smooth(2)` is the paper's Table-1
+//! function f = (rect * rect_{1/4} * rect_{1/4})(2x), normalized. The
+//! Python exporter writes the same pieces to `artifacts/bucketfn_*.json`,
+//! and an integration test asserts both constructions agree to 1e-12 — so
+//! the native backend and the HLO artifacts evaluate the same f.
+
+mod poly;
+
+pub use poly::PiecewisePoly;
+
+use crate::util::json::Json;
+
+/// f = rect: support [-1/2, 1/2], ||f||_2 = 1.
+pub fn rect_bucket() -> PiecewisePoly {
+    PiecewisePoly::new(vec![-0.5, 0.5], vec![vec![1.0]])
+}
+
+/// C^{q-1} bucket: (rect * rect_{1/(2q)}^{*q})(2x), normalized.
+///
+/// The inner convolution has support 3/2, so after the argument scaling by
+/// 2 the support is [-3/8, 3/8] ⊂ [-1/2, 1/2]. `q = 2` is the paper's
+/// Table-1 function.
+pub fn smooth_bucket(q: usize) -> PiecewisePoly {
+    assert!(q >= 1, "q >= 1; use rect_bucket() for the unsmoothed case");
+    let mut pp = rect_bucket();
+    for _ in 0..q {
+        pp = pp.box_convolve(1.0 / (2.0 * q as f64));
+    }
+    let pp = pp.scale_arg(2.0);
+    let nrm = pp.l2_norm();
+    pp.scale_val(1.0 / nrm)
+}
+
+/// Resolve a bucket function by its stable name ("rect", "smooth2", ...).
+pub fn bucket_by_name(name: &str) -> Option<PiecewisePoly> {
+    if name == "rect" {
+        return Some(rect_bucket());
+    }
+    if let Some(qs) = name.strip_prefix("smooth") {
+        let q: usize = if qs.is_empty() { 2 } else { qs.parse().ok()? };
+        if q >= 1 {
+            return Some(smooth_bucket(q));
+        }
+    }
+    None
+}
+
+/// Load a piecewise polynomial from the `aot.py` JSON export.
+pub fn load_from_json(json: &Json) -> Result<PiecewisePoly, String> {
+    let breaks = json
+        .get("breaks")
+        .and_then(Json::as_f64_vec)
+        .ok_or("missing breaks")?;
+    let coeffs = json
+        .get("coeffs")
+        .and_then(Json::as_arr)
+        .ok_or("missing coeffs")?
+        .iter()
+        .map(|c| c.as_f64_vec().ok_or("bad coeff row"))
+        .collect::<Result<Vec<_>, _>>()?;
+    if breaks.len() != coeffs.len() + 1 {
+        return Err("breaks/coeffs length mismatch".into());
+    }
+    Ok(PiecewisePoly::new(breaks, coeffs))
+}
+
+/// Compiled f32 evaluator for the hashing hot loop.
+///
+/// `eval` mirrors the HLO kernel bit-for-bit-ish: f32 breakpoint compares
+/// and f32 Horner with f64-constants-rounded-to-f32 coefficients, in the
+/// same order as `kernels/wlsh.py::eval_bucket_jnp`.
+#[derive(Clone, Debug)]
+pub struct BucketEval {
+    /// (lo, hi, ascending coeffs) per piece, f32.
+    pieces: Vec<(f32, f32, Vec<f32>)>,
+    /// rect shortcut: weight is identically 1 on the residual range.
+    pub is_rect: bool,
+    pub linf: f32,
+}
+
+impl BucketEval {
+    pub fn from_poly(pp: &PiecewisePoly, is_rect: bool) -> Self {
+        let pieces = pp
+            .pieces()
+            .map(|(lo, hi, c)| {
+                (lo as f32, hi as f32, c.iter().map(|&x| x as f32).collect())
+            })
+            .collect();
+        BucketEval { pieces, is_rect, linf: pp.linf_norm(4096) as f32 }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        let pp = bucket_by_name(name)?;
+        Some(Self::from_poly(&pp, name == "rect"))
+    }
+
+    /// Evaluate f at a residual r (f32 semantics matching the HLO kernel).
+    #[inline]
+    pub fn eval(&self, r: f32) -> f32 {
+        if self.is_rect {
+            return 1.0;
+        }
+        for (lo, hi, c) in &self.pieces {
+            if r >= *lo && r < *hi {
+                let mut acc = 0.0f32;
+                for &ck in c.iter().rev() {
+                    acc = acc * r + ck;
+                }
+                return acc;
+            }
+        }
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rect_properties() {
+        let r = rect_bucket();
+        assert!((r.l2_norm() - 1.0).abs() < 1e-12);
+        assert_eq!(r.eval(0.0), 1.0);
+        assert_eq!(r.eval(0.6), 0.0);
+    }
+
+    #[test]
+    fn smooth_family_normalized_and_supported() {
+        for q in 1..=4 {
+            let pp = smooth_bucket(q);
+            assert!(
+                (pp.l2_norm() - 1.0).abs() < 1e-9,
+                "q={q} norm {}",
+                pp.l2_norm()
+            );
+            assert!(pp.support().0 >= -0.5 && pp.support().1 <= 0.5);
+        }
+    }
+
+    #[test]
+    fn smooth2_matches_python_values() {
+        // Values produced by the Python construction (same algorithm):
+        // breaks [-0.375,-0.25,-0.125,0.125,0.25,0.375], f(0)=1.50470958...
+        let pp = smooth_bucket(2);
+        let b = pp.breaks();
+        assert_eq!(b.len(), 6);
+        assert!((b[0] + 0.375).abs() < 1e-12);
+        assert!((pp.eval(0.0) - 1.5047095877265524).abs() < 1e-9);
+        assert!((pp.eval(0.2) - 1.2338618640400354).abs() < 1e-6);
+    }
+
+    #[test]
+    fn smooth_is_even() {
+        for q in [1, 2, 3] {
+            let pp = smooth_bucket(q);
+            for i in 0..40 {
+                let x = 0.01 + 0.011 * i as f64;
+                assert!(
+                    (pp.eval(x) - pp.eval(-x)).abs() < 1e-9,
+                    "q={q} x={x}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn smoothness_order_continuity() {
+        // smooth(q) must have q-1 continuous derivatives at breakpoints.
+        for q in [2usize, 3] {
+            let mut pp = smooth_bucket(q);
+            for _order in 0..q {
+                for &b in &pp.breaks()[1..pp.breaks().len() - 1] {
+                    let lo = pp.eval(b - 1e-9);
+                    let hi = pp.eval(b + 1e-9);
+                    assert!((lo - hi).abs() < 1e-5, "q={q} b={b}");
+                }
+                pp = pp.derivative();
+            }
+        }
+    }
+
+    #[test]
+    fn autocorrelation_rect_is_triangle() {
+        let ac = rect_bucket().autocorrelation();
+        for i in 0..20 {
+            let t = -0.95 + 0.1 * i as f64;
+            let expect = (1.0 - t.abs()).max(0.0);
+            assert!((ac.eval(t) - expect).abs() < 1e-9, "t={t}");
+        }
+    }
+
+    #[test]
+    fn autocorrelation_peak_is_unit() {
+        for name in ["rect", "smooth2", "smooth3"] {
+            let ac = bucket_by_name(name).unwrap().autocorrelation();
+            assert!((ac.eval(0.0) - 1.0).abs() < 1e-7, "{name}");
+        }
+    }
+
+    #[test]
+    fn bucket_eval_matches_poly_f32() {
+        let pp = smooth_bucket(2);
+        let be = BucketEval::from_poly(&pp, false);
+        for i in 0..100 {
+            let r = -0.5 + 0.01 * i as f64;
+            let want = pp.eval(r) as f32;
+            assert!((be.eval(r as f32) - want).abs() < 1e-5, "r={r}");
+        }
+    }
+
+    #[test]
+    fn bucket_eval_rect_is_one() {
+        let be = BucketEval::by_name("rect").unwrap();
+        assert_eq!(be.eval(0.49), 1.0);
+        assert_eq!(be.eval(-0.49), 1.0);
+    }
+
+    #[test]
+    fn by_name_resolution() {
+        assert!(bucket_by_name("rect").is_some());
+        assert!(bucket_by_name("smooth").is_some());
+        assert!(bucket_by_name("smooth3").is_some());
+        assert!(bucket_by_name("smooth0").is_none());
+        assert!(bucket_by_name("bogus").is_none());
+    }
+
+    #[test]
+    fn load_from_json_roundtrip() {
+        let j = Json::parse(
+            r#"{"breaks": [-0.5, 0.0, 0.5], "coeffs": [[1.0], [2.0, 1.0]]}"#,
+        )
+        .unwrap();
+        let pp = load_from_json(&j).unwrap();
+        assert_eq!(pp.eval(-0.25), 1.0);
+        assert!((pp.eval(0.25) - 2.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,383 @@
+//! Exact piecewise-polynomial arithmetic: evaluation, calculus, box
+//! convolution, argument scaling, autocorrelation. Mirrors
+//! `python/compile/kernels/bucketfn.py` operation-for-operation so both
+//! languages construct bit-identical bucket functions.
+
+/// Evaluate an ascending-coefficient polynomial at x (Horner).
+fn poly_eval(coeffs: &[f64], x: f64) -> f64 {
+    let mut acc = 0.0;
+    for &c in coeffs.iter().rev() {
+        acc = acc * x + c;
+    }
+    acc
+}
+
+/// Coefficients of p(x + s) given those of p(x).
+fn poly_shift(coeffs: &[f64], s: f64) -> Vec<f64> {
+    let n = coeffs.len();
+    let mut out = vec![0.0; n];
+    for (k, &c) in coeffs.iter().enumerate() {
+        // binomial expansion of c (x+s)^k
+        let mut binom = 1.0f64;
+        for j in (0..=k).rev() {
+            // C(k, j) iterated from j=k down: C(k,k)=1, C(k,j-1)=C(k,j)*j/(k-j+1)
+            out[j] += c * binom * s.powi((k - j) as i32);
+            if j > 0 {
+                binom = binom * j as f64 / (k - j + 1) as f64;
+            }
+        }
+    }
+    out
+}
+
+fn poly_mul(a: &[f64], b: &[f64]) -> Vec<f64> {
+    let mut out = vec![0.0; a.len() + b.len() - 1];
+    for (i, &ai) in a.iter().enumerate() {
+        for (j, &bj) in b.iter().enumerate() {
+            out[i + j] += ai * bj;
+        }
+    }
+    out
+}
+
+/// Antiderivative with zero constant term.
+fn poly_int(coeffs: &[f64]) -> Vec<f64> {
+    let mut out = vec![0.0];
+    out.extend(coeffs.iter().enumerate().map(|(k, &c)| c / (k + 1) as f64));
+    out
+}
+
+/// Solve a small dense linear system (Vandermonde fits); partial pivoting.
+fn solve_small(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Vec<f64> {
+    let n = b.len();
+    for col in 0..n {
+        let piv = (col..n)
+            .max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())
+            .unwrap();
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let d = a[col][col];
+        assert!(d.abs() > 1e-300, "singular fit system");
+        for row in col + 1..n {
+            let f = a[row][col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for k in col..n {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let mut s = b[row];
+        for k in row + 1..n {
+            s -= a[row][k] * x[k];
+        }
+        x[row] = s / a[row][row];
+    }
+    x
+}
+
+/// Piecewise polynomial on [breaks[0], breaks[-1]], zero outside.
+/// `coeffs[i]` (ascending) applies on [breaks[i], breaks[i+1]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PiecewisePoly {
+    breaks: Vec<f64>,
+    coeffs: Vec<Vec<f64>>,
+}
+
+impl PiecewisePoly {
+    pub fn new(breaks: Vec<f64>, coeffs: Vec<Vec<f64>>) -> Self {
+        assert_eq!(breaks.len(), coeffs.len() + 1, "breaks/coeffs mismatch");
+        assert!(breaks.windows(2).all(|w| w[0] < w[1]), "breaks not sorted");
+        PiecewisePoly { breaks, coeffs }
+    }
+
+    pub fn breaks(&self) -> &[f64] {
+        &self.breaks
+    }
+
+    pub fn support(&self) -> (f64, f64) {
+        (self.breaks[0], *self.breaks.last().unwrap())
+    }
+
+    pub fn pieces(&self) -> impl Iterator<Item = (f64, f64, &Vec<f64>)> {
+        self.coeffs
+            .iter()
+            .enumerate()
+            .map(move |(i, c)| (self.breaks[i], self.breaks[i + 1], c))
+    }
+
+    pub fn eval(&self, x: f64) -> f64 {
+        for (lo, hi, c) in self.pieces() {
+            if x >= lo && x < hi {
+                return poly_eval(c, x);
+            }
+        }
+        0.0
+    }
+
+    /// ∫_{-inf}^x p(t) dt.
+    pub fn antiderivative_at(&self, x: f64) -> f64 {
+        let mut total = 0.0;
+        for (lo, hi, c) in self.pieces() {
+            if x <= lo {
+                break;
+            }
+            let ic = poly_int(c);
+            let upper = x.min(hi);
+            total += poly_eval(&ic, upper) - poly_eval(&ic, lo);
+        }
+        total
+    }
+
+    /// Convolution with rect_a (indicator of [-a/2, a/2], height 1) — exact.
+    pub fn box_convolve(&self, a: f64) -> PiecewisePoly {
+        let h = a / 2.0;
+        let mut pts: Vec<f64> = self
+            .breaks
+            .iter()
+            .flat_map(|&b| [round15(b - h), round15(b + h)])
+            .collect();
+        pts.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        pts.dedup();
+        // Continuous antiderivative P with P = 0 left of the support.
+        let mut antis: Vec<Vec<f64>> = Vec::new();
+        let mut run = 0.0;
+        for (lo, hi, c) in self.pieces() {
+            let mut ic = poly_int(c);
+            ic[0] += run - poly_eval(&ic, lo);
+            run = poly_eval(&ic, hi);
+            antis.push(ic);
+        }
+        let total_mass = run;
+        let p_piece = |x_mid: f64| -> Vec<f64> {
+            if x_mid <= self.breaks[0] {
+                return vec![0.0];
+            }
+            if x_mid >= *self.breaks.last().unwrap() {
+                return vec![total_mass];
+            }
+            for i in 0..self.coeffs.len() {
+                if self.breaks[i] <= x_mid && x_mid < self.breaks[i + 1] {
+                    return antis[i].clone();
+                }
+            }
+            vec![total_mass]
+        };
+        let mut new_coeffs = Vec::with_capacity(pts.len() - 1);
+        for w in pts.windows(2) {
+            let mid = 0.5 * (w[0] + w[1]);
+            let up = poly_shift(&p_piece(mid + h), h);
+            let dn = poly_shift(&p_piece(mid - h), -h);
+            let n = up.len().max(dn.len());
+            let mut c = vec![0.0; n];
+            for (k, item) in c.iter_mut().enumerate() {
+                *item = up.get(k).copied().unwrap_or(0.0)
+                    - dn.get(k).copied().unwrap_or(0.0);
+            }
+            new_coeffs.push(c);
+        }
+        PiecewisePoly::new(pts, new_coeffs)
+    }
+
+    /// q(x) = p(s·x) for s > 0.
+    pub fn scale_arg(&self, s: f64) -> PiecewisePoly {
+        assert!(s > 0.0);
+        let breaks = self.breaks.iter().map(|b| b / s).collect();
+        let coeffs = self
+            .coeffs
+            .iter()
+            .map(|piece| {
+                piece
+                    .iter()
+                    .enumerate()
+                    .map(|(k, &c)| c * s.powi(k as i32))
+                    .collect()
+            })
+            .collect();
+        PiecewisePoly::new(breaks, coeffs)
+    }
+
+    pub fn scale_val(&self, s: f64) -> PiecewisePoly {
+        PiecewisePoly::new(
+            self.breaks.clone(),
+            self.coeffs
+                .iter()
+                .map(|p| p.iter().map(|&c| c * s).collect())
+                .collect(),
+        )
+    }
+
+    pub fn derivative(&self) -> PiecewisePoly {
+        PiecewisePoly::new(
+            self.breaks.clone(),
+            self.coeffs
+                .iter()
+                .map(|p| {
+                    if p.len() <= 1 {
+                        vec![0.0]
+                    } else {
+                        p.iter()
+                            .enumerate()
+                            .skip(1)
+                            .map(|(k, &c)| c * k as f64)
+                            .collect()
+                    }
+                })
+                .collect(),
+        )
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        let mut total = 0.0;
+        for (lo, hi, c) in self.pieces() {
+            let sq = poly_int(&poly_mul(c, c));
+            total += poly_eval(&sq, hi) - poly_eval(&sq, lo);
+        }
+        total.sqrt()
+    }
+
+    pub fn linf_norm(&self, grid: usize) -> f64 {
+        let (lo, hi) = self.support();
+        (0..grid)
+            .map(|i| {
+                let x = lo + (hi - lo) * i as f64 / grid as f64;
+                self.eval(x).abs()
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// (p * p)(t) for even p — the kernel profile of Def. 8.
+    ///
+    /// Each interval's polynomial is reconstructed by interpolating the
+    /// exact pointwise convolution (`conv_at`) at deg+1 centered nodes.
+    pub fn autocorrelation(&self) -> PiecewisePoly {
+        let mut pts: Vec<f64> = self
+            .breaks
+            .iter()
+            .flat_map(|&bi| self.breaks.iter().map(move |&bj| round15(bi + bj)))
+            .collect();
+        pts.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        pts.dedup();
+        let deg = 2 * self.coeffs.iter().map(Vec::len).max().unwrap();
+        let mut coeffs = Vec::with_capacity(pts.len() - 1);
+        for w in pts.windows(2) {
+            let (lo, hi) = (w[0], w[1]);
+            let tm = 0.5 * (lo + hi);
+            let half = 0.5 * (hi - lo) * (1.0 - 1e-12);
+            // Chebyshev-ish symmetric nodes centered at tm
+            let nodes: Vec<f64> = (0..=deg)
+                .map(|i| tm + half * (-1.0 + 2.0 * i as f64 / deg as f64))
+                .collect();
+            let vals: Vec<f64> = nodes.iter().map(|&t| self.conv_at(t)).collect();
+            // Vandermonde fit in the centered variable u = t - tm
+            let a: Vec<Vec<f64>> = nodes
+                .iter()
+                .map(|&t| (0..=deg).map(|k| (t - tm).powi(k as i32)).collect())
+                .collect();
+            let centered = solve_small(a, vals);
+            coeffs.push(poly_shift(&centered, -tm));
+        }
+        PiecewisePoly::new(pts, coeffs)
+    }
+
+    /// Exact (p*p)(t) via per-piece-pair polynomial integration.
+    pub fn conv_at(&self, t: f64) -> f64 {
+        let mut total = 0.0;
+        for (lo_a, hi_a, ca) in self.pieces() {
+            for (lo_b, hi_b, cb) in self.pieces() {
+                let lo = lo_a.max(t - hi_b);
+                let hi = hi_a.min(t - lo_b);
+                if hi <= lo {
+                    continue;
+                }
+                // cb(t - u) as poly in u: coeffs cb_k (-1)^k in (u - t), shift
+                let signed: Vec<f64> = cb
+                    .iter()
+                    .enumerate()
+                    .map(|(k, &c)| if k % 2 == 1 { -c } else { c })
+                    .collect();
+                let cb_t = poly_shift(&signed, -t);
+                let prod = poly_mul(ca, &cb_t);
+                let ip = poly_int(&prod);
+                total += poly_eval(&ip, hi) - poly_eval(&ip, lo);
+            }
+        }
+        total
+    }
+}
+
+/// Round to 15 decimals to merge float-identical breakpoints (mirrors the
+/// Python `round(b, 15)`).
+fn round15(x: f64) -> f64 {
+    (x * 1e15).round() / 1e15
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poly_shift_expands_binomially() {
+        // p(x) = x^2 -> p(x+1) = x^2 + 2x + 1
+        assert_eq!(poly_shift(&[0.0, 0.0, 1.0], 1.0), vec![1.0, 2.0, 1.0]);
+        // p(x) = 2 + 3x -> p(x-2) = -4 + 3x
+        assert_eq!(poly_shift(&[2.0, 3.0], -2.0), vec![-4.0, 3.0]);
+    }
+
+    #[test]
+    fn poly_mul_and_int() {
+        // (1 + x)^2 = 1 + 2x + x^2
+        assert_eq!(poly_mul(&[1.0, 1.0], &[1.0, 1.0]), vec![1.0, 2.0, 1.0]);
+        // ∫ (1 + 2x) = x + x^2
+        assert_eq!(poly_int(&[1.0, 2.0]), vec![0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn box_convolve_of_rect_is_trapezoid() {
+        let r = PiecewisePoly::new(vec![-0.5, 0.5], vec![vec![1.0]]);
+        let t = r.box_convolve(0.25);
+        // plateau value = width of small box = 0.25
+        assert!((t.eval(0.0) - 0.25).abs() < 1e-12);
+        assert!((t.eval(0.3) - 0.25).abs() < 1e-12);
+        // linear ramp between 3/8 and 5/8
+        assert!((t.eval(0.5) - 0.125).abs() < 1e-12);
+        assert!(t.eval(0.7) == 0.0);
+        assert_eq!(t.support(), (-0.625, 0.625));
+    }
+
+    #[test]
+    fn mass_preserved_times_box_mass() {
+        let r = PiecewisePoly::new(vec![-0.5, 0.5], vec![vec![1.0]]);
+        let c = r.box_convolve(0.25);
+        assert!((c.antiderivative_at(10.0) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn conv_at_matches_rect_triangle() {
+        let r = PiecewisePoly::new(vec![-0.5, 0.5], vec![vec![1.0]]);
+        for i in 0..20 {
+            let t = -1.1 + 0.11 * i as f64;
+            let expect = (1.0 - t.abs()).max(0.0);
+            assert!((r.conv_at(t) - expect).abs() < 1e-12, "t={t}");
+        }
+    }
+
+    #[test]
+    fn solve_small_identity() {
+        let a = vec![vec![2.0, 0.0], vec![0.0, 4.0]];
+        let x = solve_small(a, vec![2.0, 8.0]);
+        assert!((x[0] - 1.0).abs() < 1e-12 && (x[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn derivative_drops_degree() {
+        let p = PiecewisePoly::new(vec![0.0, 1.0], vec![vec![1.0, 2.0, 3.0]]);
+        let d = p.derivative();
+        // d/dx (1 + 2x + 3x^2) = 2 + 6x
+        assert!((d.eval(0.5) - 5.0).abs() < 1e-12);
+    }
+}

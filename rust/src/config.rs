@@ -1,0 +1,213 @@
+//! Experiment configuration: a TOML-subset parser (sections, `key = value`
+//! with strings/numbers/bools) plus the named presets driving the CLI,
+//! examples, and benches. No `toml`/`serde` offline — see DESIGN.md §5.
+
+use std::collections::BTreeMap;
+
+/// Parsed config: section → key → raw value string.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl Config {
+    /// Parse TOML-subset text. Supported: `[section]`, `key = value`,
+    /// `#` comments, bare/quoted strings, numbers, booleans.
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let v = v.trim().trim_matches('"').to_string();
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), v);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Config::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str, default: usize) -> usize {
+        self.get(section, key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key)
+            .map(|v| matches!(v, "true" | "1" | "yes"))
+            .unwrap_or(default)
+    }
+}
+
+/// Everything needed to train one KRR model.
+#[derive(Clone, Debug)]
+pub struct KrrConfig {
+    /// "wlsh" | "rff" | "exact-laplace" | "exact-se" | "exact-matern" | "nystrom"
+    pub method: String,
+    /// WLSH: number of LSH instances (m). RFF: feature count D. Nyström:
+    /// landmark count.
+    pub budget: usize,
+    /// Bucket-shaping function for WLSH.
+    pub bucket: String,
+    /// Gamma shape of the width law.
+    pub gamma_shape: f64,
+    /// Kernel bandwidth.
+    pub scale: f64,
+    /// Ridge λ.
+    pub lambda: f64,
+    /// CG iteration cap and tolerance.
+    pub cg_max_iters: usize,
+    pub cg_tol: f64,
+    /// Sketch workers (instance shards) for the trainer.
+    pub workers: usize,
+    pub seed: u64,
+}
+
+impl Default for KrrConfig {
+    fn default() -> Self {
+        KrrConfig {
+            method: "wlsh".into(),
+            budget: 64,
+            bucket: "rect".into(),
+            gamma_shape: 2.0,
+            scale: 1.0,
+            lambda: 1.0,
+            cg_max_iters: 100,
+            cg_tol: 1e-4,
+            workers: 1,
+            seed: 42,
+        }
+    }
+}
+
+impl KrrConfig {
+    /// Read a `[krr]` section over the defaults.
+    pub fn from_config(cfg: &Config) -> KrrConfig {
+        let d = KrrConfig::default();
+        KrrConfig {
+            method: cfg.get_str("krr", "method", &d.method).to_string(),
+            budget: cfg.get_usize("krr", "budget", d.budget),
+            bucket: cfg.get_str("krr", "bucket", &d.bucket).to_string(),
+            gamma_shape: cfg.get_f64("krr", "gamma_shape", d.gamma_shape),
+            scale: cfg.get_f64("krr", "scale", d.scale),
+            lambda: cfg.get_f64("krr", "lambda", d.lambda),
+            cg_max_iters: cfg.get_usize("krr", "cg_max_iters", d.cg_max_iters),
+            cg_tol: cfg.get_f64("krr", "cg_tol", d.cg_tol),
+            workers: cfg.get_usize("krr", "workers", d.workers),
+            seed: cfg.get_usize("krr", "seed", d.seed as usize) as u64,
+        }
+    }
+
+    /// Paper Table-2 presets per dataset (m / D values from the table).
+    pub fn paper_preset(dataset: &str, method: &str) -> KrrConfig {
+        let mut c = KrrConfig { method: method.to_string(), ..Default::default() };
+        match method {
+            "wlsh" => {
+                c.budget = match dataset {
+                    "wine" => 450,
+                    "insurance" => 250,
+                    _ => 50,
+                };
+            }
+            "rff" => {
+                c.budget = match dataset {
+                    "wine" => 7000,
+                    "insurance" => 5000,
+                    "ctslices" => 3500,
+                    _ => 1500,
+                };
+            }
+            _ => {}
+        }
+        // bandwidths: standardized features, moderate smoothing; λ per size
+        c.scale = (match dataset {
+            "wine" => 3.0,
+            "insurance" => 6.0,
+            "ctslices" => 8.0,
+            "covtype" => 4.0,
+            _ => 3.0,
+        }) * 1.0;
+        c.lambda = 0.5;
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_toml_subset() {
+        let cfg = Config::parse(
+            "# comment\n[krr]\nmethod = \"wlsh\"\nbudget = 450\nlambda = 0.5\n\n[server]\nport = 7777\nbatch = true\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.get_str("krr", "method", ""), "wlsh");
+        assert_eq!(cfg.get_usize("krr", "budget", 0), 450);
+        assert_eq!(cfg.get_f64("krr", "lambda", 0.0), 0.5);
+        assert!(cfg.get_bool("server", "batch", false));
+        assert_eq!(cfg.get_usize("server", "port", 0), 7777);
+    }
+
+    #[test]
+    fn missing_keys_fall_back() {
+        let cfg = Config::parse("[krr]\n").unwrap();
+        assert_eq!(cfg.get_usize("krr", "budget", 7), 7);
+        assert_eq!(cfg.get_str("nope", "x", "d"), "d");
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::parse("[krr]\nnot a kv\n").is_err());
+    }
+
+    #[test]
+    fn krr_config_roundtrip() {
+        let cfg = Config::parse("[krr]\nmethod = rff\nbudget = 5000\nseed = 9\n").unwrap();
+        let k = KrrConfig::from_config(&cfg);
+        assert_eq!(k.method, "rff");
+        assert_eq!(k.budget, 5000);
+        assert_eq!(k.seed, 9);
+        assert_eq!(k.cg_max_iters, KrrConfig::default().cg_max_iters);
+    }
+
+    #[test]
+    fn paper_presets_match_table2() {
+        assert_eq!(KrrConfig::paper_preset("wine", "wlsh").budget, 450);
+        assert_eq!(KrrConfig::paper_preset("insurance", "wlsh").budget, 250);
+        assert_eq!(KrrConfig::paper_preset("covtype", "wlsh").budget, 50);
+        assert_eq!(KrrConfig::paper_preset("wine", "rff").budget, 7000);
+        assert_eq!(KrrConfig::paper_preset("covtype", "rff").budget, 1500);
+    }
+}

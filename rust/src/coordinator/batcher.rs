@@ -1,0 +1,135 @@
+//! Dynamic micro-batcher: collects prediction requests until either the
+//! batch-size or the linger-time bound is hit, then hands the whole batch
+//! to the processing closure. Amortizes per-query hashing overhead on the
+//! serving path (paper §4.2: a query costs O(m·d) after batch-hashing).
+
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+/// One queued request: a feature row and the channel to answer on.
+pub struct BatchItem {
+    pub features: Vec<f32>,
+    pub reply: Sender<f64>,
+}
+
+/// Batching queue with a background dispatcher thread.
+pub struct DynamicBatcher {
+    tx: Sender<BatchItem>,
+}
+
+impl DynamicBatcher {
+    /// Spawn the dispatcher. `process` receives the concatenated feature
+    /// rows of a batch and must return one prediction per row.
+    pub fn spawn<F>(d: usize, max_batch: usize, linger: Duration, process: F) -> DynamicBatcher
+    where
+        F: Fn(&[f32]) -> Vec<f64> + Send + 'static,
+    {
+        let (tx, rx): (Sender<BatchItem>, Receiver<BatchItem>) = mpsc::channel();
+        std::thread::Builder::new()
+            .name("wlsh-batcher".into())
+            .spawn(move || {
+                let mut pending: Vec<BatchItem> = Vec::with_capacity(max_batch);
+                loop {
+                    // block for the first item
+                    match rx.recv() {
+                        Ok(item) => pending.push(item),
+                        Err(_) => return, // all senders dropped
+                    }
+                    let deadline = Instant::now() + linger;
+                    while pending.len() < max_batch {
+                        let now = Instant::now();
+                        if now >= deadline {
+                            break;
+                        }
+                        match rx.recv_timeout(deadline - now) {
+                            Ok(item) => pending.push(item),
+                            Err(RecvTimeoutError::Timeout) => break,
+                            Err(RecvTimeoutError::Disconnected) => break,
+                        }
+                    }
+                    // assemble and process
+                    let mut rows = Vec::with_capacity(pending.len() * d);
+                    for it in &pending {
+                        debug_assert_eq!(it.features.len(), d);
+                        rows.extend_from_slice(&it.features);
+                    }
+                    let preds = process(&rows);
+                    debug_assert_eq!(preds.len(), pending.len());
+                    for (it, p) in pending.drain(..).zip(preds) {
+                        let _ = it.reply.send(p); // receiver may have gone away
+                    }
+                }
+            })
+            .expect("spawn batcher");
+        DynamicBatcher { tx }
+    }
+
+    /// Enqueue one request; blocks until the batch containing it is served.
+    pub fn predict(&self, features: Vec<f32>) -> Option<f64> {
+        let (reply, rx) = mpsc::channel();
+        self.tx.send(BatchItem { features, reply }).ok()?;
+        rx.recv().ok()
+    }
+
+    /// Clone a submitter handle (for per-connection threads).
+    pub fn handle(&self) -> Sender<BatchItem> {
+        self.tx.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn answers_are_matched_to_requests() {
+        // identity-ish processor: prediction = first feature * 2
+        let b = DynamicBatcher::spawn(2, 8, Duration::from_millis(2), |rows| {
+            rows.chunks(2).map(|r| r[0] as f64 * 2.0).collect()
+        });
+        let y = b.predict(vec![3.0, 0.0]).unwrap();
+        assert_eq!(y, 6.0);
+        let y2 = b.predict(vec![-1.5, 9.0]).unwrap();
+        assert_eq!(y2, -3.0);
+    }
+
+    #[test]
+    fn batches_multiple_concurrent_requests() {
+        let batches = Arc::new(AtomicUsize::new(0));
+        let bclone = batches.clone();
+        let b = Arc::new(DynamicBatcher::spawn(
+            1,
+            64,
+            Duration::from_millis(30),
+            move |rows| {
+                bclone.fetch_add(1, Ordering::SeqCst);
+                rows.iter().map(|&v| v as f64).collect()
+            },
+        ));
+        let mut handles = Vec::new();
+        for i in 0..16 {
+            let bb = b.clone();
+            handles.push(std::thread::spawn(move || {
+                bb.predict(vec![i as f32]).unwrap()
+            }));
+        }
+        let mut results: Vec<f64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        results.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(results, (0..16).map(|i| i as f64).collect::<Vec<_>>());
+        // all 16 should have been served in far fewer than 16 batches
+        assert!(batches.load(Ordering::SeqCst) <= 8, "batches {}", batches.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn linger_bound_releases_partial_batches() {
+        let b = DynamicBatcher::spawn(1, 1_000_000, Duration::from_millis(5), |rows| {
+            rows.iter().map(|&v| v as f64).collect()
+        });
+        let t = Instant::now();
+        let y = b.predict(vec![7.0]).unwrap();
+        assert_eq!(y, 7.0);
+        assert!(t.elapsed() < Duration::from_secs(2));
+    }
+}

@@ -1,0 +1,149 @@
+//! Model checkpointing: persist a trained WLSH model (config + solved β +
+//! the seeds that regenerate the sketch) and reload it into a servable
+//! model without re-solving. The sketch itself is *not* serialized — it is
+//! deterministic in (data, config, seed), which keeps checkpoints tiny
+//! (O(n) for β) at the cost of an O(dn·m) rebuild on load, mirroring the
+//! paper's O(dn) preprocessing claim.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::config::KrrConfig;
+use crate::coordinator::{TrainReport, TrainedModel, Trainer};
+use crate::data::Dataset;
+use crate::util::json::{Json, JsonWriter};
+
+const MAGIC: &[u8; 8] = b"WLSHKRR1";
+
+/// Write `model` to `path` (JSON header + little-endian f64 β block).
+pub fn save(model: &TrainedModel, path: &Path) -> std::io::Result<()> {
+    let c = &model.config;
+    let header = JsonWriter::object()
+        .field_str("method", &c.method)
+        .field_usize("budget", c.budget)
+        .field_str("bucket", &c.bucket)
+        .field_f64("gamma_shape", c.gamma_shape)
+        .field_f64("scale", c.scale)
+        .field_f64("lambda", c.lambda)
+        .field_usize("cg_max_iters", c.cg_max_iters)
+        .field_f64("cg_tol", c.cg_tol)
+        .field_usize("seed", c.seed as usize)
+        .field_usize("n", model.beta.len())
+        .finish();
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(header.len() as u64).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for b in &model.beta {
+        f.write_all(&b.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Reload a checkpoint: rebuilds the operator from `train` (must be the
+/// same dataset/standardization the model was trained on) and reattaches
+/// the solved β.
+pub fn load(path: &Path, train: &Dataset) -> Result<TrainedModel, String> {
+    let mut f = std::fs::File::open(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic).map_err(|e| e.to_string())?;
+    if &magic != MAGIC {
+        return Err("not a wlsh-krr checkpoint".into());
+    }
+    let mut len8 = [0u8; 8];
+    f.read_exact(&mut len8).map_err(|e| e.to_string())?;
+    let hlen = u64::from_le_bytes(len8) as usize;
+    let mut hbuf = vec![0u8; hlen];
+    f.read_exact(&mut hbuf).map_err(|e| e.to_string())?;
+    let header = Json::parse(std::str::from_utf8(&hbuf).map_err(|e| e.to_string())?)?;
+    let g = |k: &str| header.get(k).and_then(Json::as_f64).ok_or(format!("missing {k}"));
+    let config = KrrConfig {
+        method: header.get("method").and_then(Json::as_str).ok_or("missing method")?.into(),
+        budget: g("budget")? as usize,
+        bucket: header.get("bucket").and_then(Json::as_str).ok_or("missing bucket")?.into(),
+        gamma_shape: g("gamma_shape")?,
+        scale: g("scale")?,
+        lambda: g("lambda")?,
+        cg_max_iters: g("cg_max_iters")? as usize,
+        cg_tol: g("cg_tol")?,
+        workers: 1,
+        seed: g("seed")? as u64,
+    };
+    let n = g("n")? as usize;
+    if n != train.n {
+        return Err(format!("checkpoint n={n} but dataset has n={}", train.n));
+    }
+    let mut beta = vec![0.0f64; n];
+    let mut b8 = [0u8; 8];
+    for bv in beta.iter_mut() {
+        f.read_exact(&mut b8).map_err(|e| e.to_string())?;
+        *bv = f64::from_le_bytes(b8);
+    }
+    let op = Trainer::new(config.clone()).build_operator(train);
+    Ok(TrainedModel::assemble(
+        op,
+        beta,
+        config,
+        TrainReport {
+            build_secs: 0.0,
+            solve_secs: 0.0,
+            cg_iters: 0,
+            cg_rel_residual: 0.0,
+            converged: true,
+            operator: "restored".into(),
+            memory_bytes: 0,
+        },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic_by_name;
+
+    #[test]
+    fn save_load_roundtrip_predicts_identically() {
+        let mut ds = synthetic_by_name("wine", Some(250), 1).unwrap();
+        ds.standardize();
+        let (tr, te) = ds.split(200, 2);
+        let cfg = KrrConfig {
+            method: "wlsh".into(),
+            budget: 32,
+            scale: 3.0,
+            lambda: 0.5,
+            ..Default::default()
+        };
+        let model = Trainer::new(cfg).train(&tr);
+        let want = model.predict(&te.x);
+        let path = std::env::temp_dir().join("wlsh_ckpt_test.bin");
+        save(&model, &path).unwrap();
+        let restored = load(&path, &tr).unwrap();
+        let got = restored.predict(&te.x);
+        assert_eq!(want, got);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_rejects_wrong_dataset_size() {
+        let mut ds = synthetic_by_name("wine", Some(250), 1).unwrap();
+        ds.standardize();
+        let (tr, _) = ds.split(200, 2);
+        let cfg = KrrConfig { method: "wlsh".into(), budget: 8, ..Default::default() };
+        let model = Trainer::new(cfg).train(&tr);
+        let path = std::env::temp_dir().join("wlsh_ckpt_test2.bin");
+        save(&model, &path).unwrap();
+        let (smaller, _) = tr.split(100, 3);
+        assert!(load(&path, &smaller).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let path = std::env::temp_dir().join("wlsh_ckpt_garbage.bin");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        let mut ds = synthetic_by_name("wine", Some(50), 1).unwrap();
+        ds.standardize();
+        assert!(load(&path, &ds).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

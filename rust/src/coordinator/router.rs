@@ -1,0 +1,82 @@
+//! Prediction router: fans a batch of queries out over worker threads,
+//! each holding a shared reference to the trained model, and collects the
+//! results in order. Structural on a 1-core box, but the sharding keeps
+//! the serving path scalable and is exercised by the tests/benches.
+
+use std::sync::Arc;
+
+use super::TrainedModel;
+
+/// Shards batch predictions across `workers` threads.
+pub struct PredictRouter {
+    model: Arc<TrainedModel>,
+    workers: usize,
+    d: usize,
+}
+
+impl PredictRouter {
+    pub fn new(model: Arc<TrainedModel>, workers: usize, d: usize) -> PredictRouter {
+        PredictRouter { model, workers: workers.max(1), d }
+    }
+
+    /// Predict for row-major queries, preserving order.
+    pub fn predict(&self, queries: &[f32]) -> Vec<f64> {
+        let nq = queries.len() / self.d;
+        if self.workers == 1 || nq < 2 * self.workers {
+            return self.model.predict(queries);
+        }
+        let chunk_rows = nq.div_ceil(self.workers);
+        let mut out = vec![0.0f64; nq];
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for (w, rows) in queries.chunks(chunk_rows * self.d).enumerate() {
+                let model = &self.model;
+                handles.push((w, scope.spawn(move || model.predict(rows))));
+            }
+            for (w, h) in handles {
+                let preds = h.join().expect("router worker panicked");
+                let start = w * chunk_rows;
+                out[start..start + preds.len()].copy_from_slice(&preds);
+            }
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::KrrConfig;
+    use crate::coordinator::Trainer;
+    use crate::data::synthetic_by_name;
+
+    #[test]
+    fn router_matches_direct_prediction() {
+        let mut ds = synthetic_by_name("wine", Some(200), 1).unwrap();
+        ds.standardize();
+        let (tr, te) = ds.split(160, 2);
+        let cfg = KrrConfig { method: "wlsh".into(), budget: 32, scale: 3.0, ..Default::default() };
+        let model = Arc::new(Trainer::new(cfg).train(&tr));
+        let direct = model.predict(&te.x);
+        for workers in [1, 2, 4] {
+            let router = PredictRouter::new(model.clone(), workers, te.d);
+            let routed = router.predict(&te.x);
+            assert_eq!(routed.len(), direct.len());
+            for i in 0..direct.len() {
+                assert!((routed[i] - direct[i]).abs() < 1e-12, "w={workers} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn handles_tiny_batches() {
+        let mut ds = synthetic_by_name("wine", Some(100), 3).unwrap();
+        ds.standardize();
+        let (tr, te) = ds.split(90, 4);
+        let cfg = KrrConfig { method: "wlsh".into(), budget: 8, scale: 3.0, ..Default::default() };
+        let model = Arc::new(Trainer::new(cfg).train(&tr));
+        let router = PredictRouter::new(model, 8, te.d);
+        let one = router.predict(&te.x[..te.d]);
+        assert_eq!(one.len(), 1);
+    }
+}

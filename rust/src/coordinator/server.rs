@@ -1,0 +1,248 @@
+//! TCP JSON-lines prediction server (the request path).
+//!
+//! Protocol (one JSON object per line):
+//!   → {"features": [f1, f2, ...]}
+//!   ← {"pred": 1.234}           | {"error": "..."}
+//!   → {"cmd": "stats"}          ← {"served": n, "p50_us": ..., ...}
+//!   → {"cmd": "shutdown"}       ← {"ok": true}   (stops accepting)
+//!
+//! Every connection gets a reader thread; requests flow through the
+//! [`DynamicBatcher`] so concurrent clients share batch hashing.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::{DynamicBatcher, TrainedModel};
+use crate::metrics::LatencyHistogram;
+use crate::util::json::{Json, JsonWriter};
+
+/// Server knobs.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub addr: String,
+    pub max_batch: usize,
+    pub linger: Duration,
+    pub workers: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:7878".into(),
+            max_batch: 64,
+            linger: Duration::from_micros(500),
+            workers: 1,
+        }
+    }
+}
+
+/// Shared serving metrics.
+pub struct ServerStats {
+    pub latency: LatencyHistogram,
+}
+
+/// Run the server until a `shutdown` command arrives. Returns the stats.
+/// `ready` (if given) is signalled with the bound address once listening.
+pub fn serve(
+    model: Arc<TrainedModel>,
+    d: usize,
+    cfg: ServerConfig,
+    ready: Option<std::sync::mpsc::Sender<String>>,
+) -> std::io::Result<Arc<ServerStats>> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    let local = listener.local_addr()?.to_string();
+    if let Some(tx) = ready {
+        let _ = tx.send(local.clone());
+    }
+    let stats = Arc::new(ServerStats { latency: LatencyHistogram::new(4096) });
+    let stop = Arc::new(AtomicBool::new(false));
+    let m = model.clone();
+    let batcher = Arc::new(DynamicBatcher::spawn(
+        d,
+        cfg.max_batch,
+        cfg.linger,
+        move |rows| m.predict(rows),
+    ));
+    listener.set_nonblocking(false)?;
+    let mut conn_threads = Vec::new();
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let batcher = batcher.clone();
+        let stats = stats.clone();
+        let stop2 = stop.clone();
+        let d2 = d;
+        conn_threads.push(std::thread::spawn(move || {
+            let _ = handle_conn(stream, d2, &batcher, &stats, &stop2);
+        }));
+        // a shutdown handled inside a connection flips `stop`; poke the
+        // accept loop by checking after each connection completes quickly
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    for t in conn_threads {
+        let _ = t.join();
+    }
+    Ok(stats)
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    d: usize,
+    batcher: &DynamicBatcher,
+    stats: &ServerStats,
+    stop: &AtomicBool,
+) -> std::io::Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match Json::parse(&line) {
+            Ok(req) => {
+                if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
+                    match cmd {
+                        "stats" => {
+                            let (p50, p90, p99) = stats.latency.percentiles();
+                            JsonWriter::object()
+                                .field_usize("served", stats.latency.count.get() as usize)
+                                .field_f64("mean_us", stats.latency.mean() * 1e6)
+                                .field_f64("p50_us", p50 * 1e6)
+                                .field_f64("p90_us", p90 * 1e6)
+                                .field_f64("p99_us", p99 * 1e6)
+                                .finish()
+                        }
+                        "shutdown" => {
+                            stop.store(true, Ordering::SeqCst);
+                            // unblock the accept loop with a dummy connect
+                            writeln!(writer, "{}", JsonWriter::object().field_str("ok", "true").finish())?;
+                            if let Ok(addr) = writer.peer_addr() {
+                                let _ = TcpStream::connect(addr);
+                            }
+                            if let Ok(addr) = writer.local_addr() {
+                                let _ = TcpStream::connect(addr);
+                            }
+                            return Ok(());
+                        }
+                        other => JsonWriter::object()
+                            .field_str("error", &format!("unknown cmd {other:?}"))
+                            .finish(),
+                    }
+                } else if let Some(f) = req.get("features").and_then(Json::as_f64_vec) {
+                    if f.len() != d {
+                        JsonWriter::object()
+                            .field_str("error", &format!("expected {d} features, got {}", f.len()))
+                            .finish()
+                    } else {
+                        let t = Instant::now();
+                        let features: Vec<f32> = f.iter().map(|&v| v as f32).collect();
+                        match batcher.predict(features) {
+                            Some(pred) => {
+                                stats.latency.record(t.elapsed().as_secs_f64());
+                                JsonWriter::object().field_f64("pred", pred).finish()
+                            }
+                            None => JsonWriter::object()
+                                .field_str("error", "batcher unavailable")
+                                .finish(),
+                        }
+                    }
+                } else {
+                    JsonWriter::object()
+                        .field_str("error", "need \"features\" or \"cmd\"")
+                        .finish()
+                }
+            }
+            Err(e) => JsonWriter::object().field_str("error", &e).finish(),
+        };
+        writeln!(writer, "{reply}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::KrrConfig;
+    use crate::coordinator::Trainer;
+    use crate::data::synthetic_by_name;
+
+    fn small_model() -> (Arc<TrainedModel>, usize, Vec<f32>, Vec<f64>) {
+        let mut ds = synthetic_by_name("wine", Some(150), 1).unwrap();
+        ds.standardize();
+        let (tr, te) = ds.split(120, 2);
+        let cfg = KrrConfig { method: "wlsh".into(), budget: 16, scale: 3.0, ..Default::default() };
+        let model = Arc::new(Trainer::new(cfg).train(&tr));
+        let expected = model.predict(&te.x[..te.d * 3]);
+        (model, tr.d, te.x[..te.d * 3].to_vec(), expected)
+    }
+
+    #[test]
+    fn end_to_end_roundtrip() {
+        let (model, d, queries, expected) = small_model();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let cfg = ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() };
+        let handle = std::thread::spawn(move || serve(model, d, cfg, Some(tx)).unwrap());
+        let addr = rx.recv().unwrap();
+        let mut conn = TcpStream::connect(&addr).unwrap();
+    conn.set_nodelay(true).ok();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        for (qi, want) in expected.iter().enumerate() {
+            let feats: Vec<String> = queries[qi * d..(qi + 1) * d]
+                .iter()
+                .map(|v| format!("{v}"))
+                .collect();
+            writeln!(conn, "{{\"features\": [{}]}}", feats.join(",")).unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let resp = Json::parse(&line).unwrap();
+            let got = resp.get("pred").and_then(Json::as_f64).unwrap();
+            assert!((got - want).abs() < 1e-6, "query {qi}: {got} vs {want}");
+        }
+        // stats then shutdown
+        writeln!(conn, "{{\"cmd\": \"stats\"}}").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(&line).unwrap();
+        assert_eq!(resp.get("served").and_then(Json::as_usize).unwrap(), expected.len());
+        writeln!(conn, "{{\"cmd\": \"shutdown\"}}").unwrap();
+        let mut line2 = String::new();
+        reader.read_line(&mut line2).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn server_reports_errors() {
+        let (model, d, _, _) = small_model();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let cfg = ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() };
+        let handle = std::thread::spawn(move || serve(model, d, cfg, Some(tx)).unwrap());
+        let addr = rx.recv().unwrap();
+        let mut conn = TcpStream::connect(&addr).unwrap();
+    conn.set_nodelay(true).ok();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        writeln!(conn, "{{\"features\": [1.0]}}").unwrap(); // wrong arity
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("error"));
+        writeln!(conn, "not json").unwrap();
+        let mut line2 = String::new();
+        reader.read_line(&mut line2).unwrap();
+        assert!(line2.contains("error"));
+        writeln!(conn, "{{\"cmd\": \"shutdown\"}}").unwrap();
+        let mut line3 = String::new();
+        reader.read_line(&mut line3).unwrap();
+        handle.join().unwrap();
+    }
+}

@@ -1,0 +1,242 @@
+//! Training orchestration: build the requested kernel operator (sharding
+//! WLSH instance construction across worker threads), solve the ridge
+//! system by CG, and package a servable model.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::KrrConfig;
+use crate::data::Dataset;
+use crate::kernels::Kernel;
+use crate::lsh::{IdMode, LshFamily};
+use crate::sketch::{
+    ExactKernelOp, KrrOperator, NystromSketch, RffSketch, WlshSketch,
+};
+use crate::solver::{solve_krr, CgOptions};
+use crate::util::rng::Pcg64;
+
+/// A trained, servable KRR model.
+pub struct TrainedModel {
+    pub op: Arc<dyn KrrOperator>,
+    pub beta: Vec<f64>,
+    pub config: KrrConfig,
+    pub report: TrainReport,
+    /// β-dependent serving state (e.g. WLSH bucket loads, §4.2) —
+    /// precomputed once so a prediction costs O(m·d), not O(n·m).
+    pub prepared: crate::sketch::PreparedState,
+}
+
+impl TrainedModel {
+    /// Assemble a model from parts, precomputing the serving state.
+    pub fn assemble(
+        op: Arc<dyn KrrOperator>,
+        beta: Vec<f64>,
+        config: KrrConfig,
+        report: TrainReport,
+    ) -> TrainedModel {
+        let prepared = op.prepare(&beta);
+        TrainedModel { op, beta, config, report, prepared }
+    }
+}
+
+/// Timings and solve diagnostics from one training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub build_secs: f64,
+    pub solve_secs: f64,
+    pub cg_iters: usize,
+    pub cg_rel_residual: f64,
+    pub converged: bool,
+    pub operator: String,
+    pub memory_bytes: usize,
+}
+
+impl TrainedModel {
+    /// η̃(q) for each query row (uses the prepared serving state).
+    pub fn predict(&self, queries: &[f32]) -> Vec<f64> {
+        self.op.predict_prepared(queries, &self.beta, &self.prepared)
+    }
+}
+
+/// Builds operators and runs the solve per a [`KrrConfig`].
+pub struct Trainer {
+    pub config: KrrConfig,
+}
+
+impl Trainer {
+    pub fn new(config: KrrConfig) -> Trainer {
+        Trainer { config }
+    }
+
+    /// Build the kernel operator for the configured method.
+    pub fn build_operator(&self, ds: &Dataset) -> Arc<dyn KrrOperator> {
+        let c = &self.config;
+        match c.method.as_str() {
+            "wlsh" => Arc::new(self.build_wlsh_sharded(ds)),
+            "rff" => Arc::new(RffSketch::build(&ds.x, ds.n, ds.d, c.budget, c.scale, c.seed)),
+            "exact-laplace" => {
+                Arc::new(ExactKernelOp::new(&ds.x, ds.n, ds.d, Kernel::laplace(c.scale)))
+            }
+            "exact-se" => {
+                Arc::new(ExactKernelOp::new(&ds.x, ds.n, ds.d, Kernel::squared_exp(c.scale)))
+            }
+            "exact-matern" => {
+                Arc::new(ExactKernelOp::new(&ds.x, ds.n, ds.d, Kernel::matern52(c.scale)))
+            }
+            "exact-wlsh" => Arc::new(ExactKernelOp::new(
+                &ds.x,
+                ds.n,
+                ds.d,
+                Kernel::wlsh(&c.bucket, c.gamma_shape, c.scale),
+            )),
+            "nystrom" => Arc::new(NystromSketch::build(
+                &ds.x,
+                ds.n,
+                ds.d,
+                c.budget.min(ds.n),
+                Kernel::squared_exp(c.scale),
+                c.seed,
+            )),
+            other => panic!("unknown method {other:?}"),
+        }
+    }
+
+    /// WLSH build with the m instances sharded across `workers` threads
+    /// (each worker hashes a contiguous block of instances with a forked
+    /// RNG stream, preserving determinism regardless of worker count).
+    fn build_wlsh_sharded(&self, ds: &Dataset) -> WlshSketch {
+        let c = &self.config;
+        if c.workers <= 1 {
+            return WlshSketch::build(
+                &ds.x, ds.n, ds.d, c.budget, &c.bucket, c.gamma_shape, c.scale, c.seed,
+            );
+        }
+        // replicate WlshSketch::build's RNG discipline, but hash shards in
+        // parallel
+        let mut rng = Pcg64::new(c.seed, 0);
+        let family = LshFamily::new(ds.d, c.gamma_shape, &c.bucket, &mut rng);
+        let inv = (1.0 / c.scale) as f32;
+        let x_scaled: Vec<f32> = ds.x.iter().map(|&v| v * inv).collect();
+        let mut seeds: Vec<Pcg64> = (0..c.budget).map(|s| rng.fork(s as u64)).collect();
+        let chunk = c.budget.div_ceil(c.workers);
+        let mut instances = Vec::with_capacity(c.budget);
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for (wid, shard) in seeds.chunks_mut(chunk).enumerate() {
+                let fam = &family;
+                let xs = &x_scaled;
+                handles.push((
+                    wid,
+                    scope.spawn(move || {
+                        shard
+                            .iter_mut()
+                            .map(|r| WlshSketch::build_instance(xs, fam, IdMode::U64, r))
+                            .collect::<Vec<_>>()
+                    }),
+                ));
+            }
+            for (_, h) in handles {
+                instances.extend(h.join().expect("sketch worker panicked"));
+            }
+        });
+        WlshSketch::from_parts(instances, family, IdMode::U64, x_scaled, ds.n, c.scale)
+    }
+
+    /// Full training run: operator build + CG solve.
+    pub fn train(&self, train: &Dataset) -> TrainedModel {
+        let t0 = Instant::now();
+        let op = self.build_operator(train);
+        let build_secs = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let cg = solve_krr(
+            op.as_ref(),
+            &train.y,
+            self.config.lambda,
+            &CgOptions {
+                max_iters: self.config.cg_max_iters,
+                tol: self.config.cg_tol,
+                verbose: false,
+            },
+        );
+        let solve_secs = t1.elapsed().as_secs_f64();
+        let report = TrainReport {
+            build_secs,
+            solve_secs,
+            cg_iters: cg.iters,
+            cg_rel_residual: cg.rel_residual,
+            converged: cg.converged,
+            operator: op.name(),
+            memory_bytes: op.memory_bytes(),
+        };
+        TrainedModel::assemble(op, cg.beta, self.config.clone(), report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic_by_name;
+
+    fn small_ds() -> Dataset {
+        let mut ds = synthetic_by_name("wine", Some(300), 1).unwrap();
+        ds.standardize();
+        ds
+    }
+
+    #[test]
+    fn wlsh_training_beats_mean_predictor() {
+        let ds = small_ds();
+        let (tr, te) = ds.split(240, 2);
+        let cfg = KrrConfig {
+            method: "wlsh".into(),
+            budget: 128,
+            scale: 3.0,
+            lambda: 0.2,
+            ..Default::default()
+        };
+        let model = Trainer::new(cfg).train(&tr);
+        let pred = model.predict(&te.x);
+        let rmse = crate::data::rmse(&pred, &te.y);
+        let mean_rmse = crate::data::rmse(&vec![0.0; te.n], &te.y);
+        assert!(rmse < mean_rmse, "rmse {rmse} vs mean {mean_rmse}");
+        assert!(model.report.cg_iters > 0);
+    }
+
+    #[test]
+    fn sharded_build_is_deterministic_across_worker_counts() {
+        let ds = small_ds();
+        let mk = |workers| {
+            let cfg = KrrConfig { method: "wlsh".into(), budget: 12, workers, ..Default::default() };
+            Trainer::new(cfg).build_operator(&ds)
+        };
+        let a = mk(1);
+        let b = mk(3);
+        let mut rng = Pcg64::new(5, 0);
+        let beta: Vec<f64> = (0..ds.n).map(|_| rng.normal()).collect();
+        let ya = a.matvec(&beta);
+        let yb = b.matvec(&beta);
+        for i in 0..ds.n {
+            assert!((ya[i] - yb[i]).abs() < 1e-12, "row {i}: {} vs {}", ya[i], yb[i]);
+        }
+    }
+
+    #[test]
+    fn all_methods_train() {
+        let ds = small_ds();
+        let (tr, te) = ds.split(200, 3);
+        for method in ["wlsh", "rff", "exact-laplace", "exact-se", "exact-matern", "nystrom"] {
+            let cfg = KrrConfig {
+                method: method.into(),
+                budget: 32,
+                scale: 3.0,
+                lambda: 0.5,
+                cg_max_iters: 50,
+                ..Default::default()
+            };
+            let model = Trainer::new(cfg).train(&tr);
+            let pred = model.predict(&te.x);
+            assert_eq!(pred.len(), te.n);
+            assert!(pred.iter().all(|p| p.is_finite()), "{method}");
+        }
+    }
+}

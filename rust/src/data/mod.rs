@@ -1,0 +1,285 @@
+//! Datasets: container, CSV loading, standardization, train/test splits,
+//! and the synthetic generators substituting for the paper's UCI datasets
+//! (no network access in this environment — DESIGN.md §5).
+
+mod synthetic;
+
+pub use synthetic::{synthetic_by_name, SyntheticSpec, SPECS};
+
+use crate::util::rng::Pcg64;
+
+/// A regression dataset: row-major f32 features + f64 targets.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: Vec<f32>,
+    pub y: Vec<f64>,
+    pub n: usize,
+    pub d: usize,
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn new(name: &str, x: Vec<f32>, y: Vec<f64>, d: usize) -> Dataset {
+        let n = y.len();
+        assert_eq!(x.len(), n * d, "feature matrix shape mismatch");
+        Dataset { x, y, n, d, name: name.to_string() }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Standardize features to zero mean / unit variance in place, and
+    /// center+scale targets. Returns the target (mean, std) for unscaling.
+    pub fn standardize(&mut self) -> (f64, f64) {
+        for j in 0..self.d {
+            let mut mean = 0.0f64;
+            for i in 0..self.n {
+                mean += self.x[i * self.d + j] as f64;
+            }
+            mean /= self.n as f64;
+            let mut var = 0.0f64;
+            for i in 0..self.n {
+                let v = self.x[i * self.d + j] as f64 - mean;
+                var += v * v;
+            }
+            var /= self.n as f64;
+            let inv_std = if var > 1e-24 { 1.0 / var.sqrt() } else { 0.0 };
+            for i in 0..self.n {
+                let v = &mut self.x[i * self.d + j];
+                *v = ((*v as f64 - mean) * inv_std) as f32;
+            }
+        }
+        let ym = self.y.iter().sum::<f64>() / self.n as f64;
+        let yv = self.y.iter().map(|v| (v - ym) * (v - ym)).sum::<f64>() / self.n as f64;
+        let ys = yv.sqrt().max(1e-12);
+        for v in self.y.iter_mut() {
+            *v = (*v - ym) / ys;
+        }
+        (ym, ys)
+    }
+
+    /// Deterministic shuffled split into (train, test) with `n_train` rows.
+    pub fn split(&self, n_train: usize, seed: u64) -> (Dataset, Dataset) {
+        assert!(n_train <= self.n);
+        let mut idx: Vec<usize> = (0..self.n).collect();
+        let mut rng = Pcg64::new(seed, 99);
+        // Fisher–Yates
+        for i in (1..idx.len()).rev() {
+            let j = rng.below((i + 1) as u64) as usize;
+            idx.swap(i, j);
+        }
+        let take = |ids: &[usize], tag: &str| {
+            let mut x = Vec::with_capacity(ids.len() * self.d);
+            let mut y = Vec::with_capacity(ids.len());
+            for &i in ids {
+                x.extend_from_slice(self.row(i));
+                y.push(self.y[i]);
+            }
+            Dataset::new(&format!("{}-{}", self.name, tag), x, y, self.d)
+        };
+        (take(&idx[..n_train], "train"), take(&idx[n_train..], "test"))
+    }
+
+    /// Subsample to at most `n_max` rows (deterministic).
+    pub fn subsample(&self, n_max: usize, seed: u64) -> Dataset {
+        if self.n <= n_max {
+            return self.clone();
+        }
+        let (head, _) = self.split(n_max, seed);
+        Dataset { name: self.name.clone(), ..head }
+    }
+}
+
+/// Parse a numeric CSV (optional header) into a Dataset; the target is the
+/// given column index (negative = from the end).
+pub fn load_csv(path: &str, target_col: i64, name: &str) -> Result<Dataset, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Result<Vec<f64>, _> = line
+            .split([',', ';'])
+            .map(|f| f.trim().parse::<f64>())
+            .collect();
+        match fields {
+            Ok(v) => rows.push(v),
+            Err(_) if lineno == 0 => continue, // header
+            Err(e) => return Err(format!("{path}:{}: {e}", lineno + 1)),
+        }
+    }
+    if rows.is_empty() {
+        return Err(format!("{path}: no data rows"));
+    }
+    let width = rows[0].len();
+    if rows.iter().any(|r| r.len() != width) {
+        return Err(format!("{path}: ragged rows"));
+    }
+    let t = if target_col < 0 {
+        (width as i64 + target_col) as usize
+    } else {
+        target_col as usize
+    };
+    if t >= width {
+        return Err(format!("{path}: target column {t} out of range"));
+    }
+    let d = width - 1;
+    let mut x = Vec::with_capacity(rows.len() * d);
+    let mut y = Vec::with_capacity(rows.len());
+    for r in rows {
+        for (j, v) in r.iter().enumerate() {
+            if j == t {
+                y.push(*v);
+            } else {
+                x.push(*v as f32);
+            }
+        }
+    }
+    Ok(Dataset::new(name, x, y, d))
+}
+
+/// Median pairwise distance over a random pair sample — the classic
+/// bandwidth ("median") heuristic. `l1` selects L1 vs L2 distance.
+pub fn median_distance(ds: &Dataset, l1: bool, pairs: usize, seed: u64) -> f64 {
+    assert!(ds.n >= 2);
+    let mut rng = Pcg64::new(seed, 3);
+    let mut dists: Vec<f64> = (0..pairs)
+        .map(|_| {
+            let i = rng.below(ds.n as u64) as usize;
+            let mut j = rng.below(ds.n as u64) as usize;
+            if j == i {
+                j = (j + 1) % ds.n;
+            }
+            let (a, b) = (ds.row(i), ds.row(j));
+            if l1 {
+                a.iter()
+                    .zip(b)
+                    .map(|(x, y)| (*x as f64 - *y as f64).abs())
+                    .sum()
+            } else {
+                a.iter()
+                    .zip(b)
+                    .map(|(x, y)| {
+                        let d = *x as f64 - *y as f64;
+                        d * d
+                    })
+                    .sum::<f64>()
+                    .sqrt()
+            }
+        })
+        .collect();
+    dists.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    dists[dists.len() / 2]
+}
+
+/// Root-mean-square error.
+pub fn rmse(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    let s: f64 = pred
+        .iter()
+        .zip(truth)
+        .map(|(p, t)| (p - t) * (p - t))
+        .sum();
+    (s / pred.len() as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        let x = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let y = vec![1.0, 2.0, 3.0, 4.0];
+        Dataset::new("toy", x, y, 2)
+    }
+
+    #[test]
+    fn row_access() {
+        let ds = toy();
+        assert_eq!(ds.row(1), &[3.0, 4.0]);
+        assert_eq!(ds.n, 4);
+        assert_eq!(ds.d, 2);
+    }
+
+    #[test]
+    fn standardize_zero_mean_unit_var() {
+        let mut ds = toy();
+        let (ym, ys) = ds.standardize();
+        assert!((ym - 2.5).abs() < 1e-12);
+        assert!(ys > 0.0);
+        for j in 0..ds.d {
+            let mean: f64 = (0..ds.n).map(|i| ds.x[i * ds.d + j] as f64).sum::<f64>() / ds.n as f64;
+            let var: f64 = (0..ds.n)
+                .map(|i| (ds.x[i * ds.d + j] as f64 - mean).powi(2))
+                .sum::<f64>()
+                / ds.n as f64;
+            assert!(mean.abs() < 1e-6);
+            assert!((var - 1.0).abs() < 1e-5);
+        }
+        let ymean: f64 = ds.y.iter().sum::<f64>() / ds.n as f64;
+        assert!(ymean.abs() < 1e-12);
+    }
+
+    #[test]
+    fn split_partitions() {
+        let ds = toy();
+        let (tr, te) = ds.split(3, 1);
+        assert_eq!(tr.n, 3);
+        assert_eq!(te.n, 1);
+        // all targets accounted for
+        let mut all: Vec<f64> = tr.y.iter().chain(te.y.iter()).copied().collect();
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(all, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn split_is_deterministic() {
+        let ds = toy();
+        let (a, _) = ds.split(2, 5);
+        let (b, _) = ds.split(2, 5);
+        assert_eq!(a.y, b.y);
+        let (c, _) = ds.split(2, 6);
+        assert!(a.y != c.y || a.x != c.x);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let path = std::env::temp_dir().join("wlsh_test.csv");
+        std::fs::write(&path, "a,b,label\n1.0,2.0,3.0\n4.0,5.0,6.0\n").unwrap();
+        let ds = load_csv(path.to_str().unwrap(), -1, "csv").unwrap();
+        assert_eq!(ds.n, 2);
+        assert_eq!(ds.d, 2);
+        assert_eq!(ds.y, vec![3.0, 6.0]);
+        assert_eq!(ds.row(1), &[4.0, 5.0]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn csv_rejects_ragged() {
+        let path = std::env::temp_dir().join("wlsh_ragged.csv");
+        std::fs::write(&path, "1,2,3\n4,5\n").unwrap();
+        assert!(load_csv(path.to_str().unwrap(), -1, "bad").is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn median_heuristic_is_sane() {
+        let mut ds = synthetic_by_name("wine", Some(400), 1).unwrap();
+        ds.standardize();
+        let m1 = median_distance(&ds, true, 300, 2);
+        let m2 = median_distance(&ds, false, 300, 2);
+        // standardized 11-dim data: E‖Δ‖₁ ≈ 1.13·d, E‖Δ‖₂ ≈ √(2d)
+        assert!(m1 > 4.0 && m1 < 30.0, "L1 median {m1}");
+        assert!(m2 > 2.0 && m2 < 10.0, "L2 median {m2}");
+        assert!(m1 > m2);
+    }
+
+    #[test]
+    fn rmse_known() {
+        assert!((rmse(&[1.0, 2.0], &[1.0, 4.0]) - 2.0f64.sqrt()).abs() < 1e-12);
+    }
+}

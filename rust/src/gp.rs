@@ -1,0 +1,198 @@
+//! Gaussian-process sample-path generation (Table 1's data source).
+//!
+//! Exact sampler: Cholesky of the joint train+test kernel matrix (the
+//! blocked factorization handles the paper's n = 4000 in seconds).
+//! Approximate sampler: spectral (random-feature) synthesis for large n —
+//! used by the synthetic dataset generators where exactness is not needed.
+
+use crate::kernels::Kernel;
+use crate::linalg::{CholeskyFactor, Matrix};
+use crate::util::rng::Pcg64;
+
+/// Sample η ~ GP(0, k) exactly at the given points (row-major n×d, f32).
+/// Returns η(x_i) for every row. O(n³) via Cholesky with trace-scaled jitter.
+pub fn sample_gp_exact(
+    kernel: &Kernel,
+    points: &[f32],
+    d: usize,
+    rng: &mut Pcg64,
+) -> Result<Vec<f64>, String> {
+    let n = points.len() / d;
+    assert_eq!(points.len(), n * d);
+    let mut k = Matrix::zeros(n, n);
+    for i in 0..n {
+        let xi = &points[i * d..(i + 1) * d];
+        k[(i, i)] = kernel.diag();
+        for j in 0..i {
+            let xj = &points[j * d..(j + 1) * d];
+            let v = kernel.eval_f32(xi, xj);
+            k[(i, j)] = v;
+            k[(j, i)] = v;
+        }
+    }
+    let jitter = 1e-8 * (n as f64);
+    let chol = CholeskyFactor::new(&k, jitter / n as f64 * k.data[0].max(1.0) + 1e-10)?;
+    let z: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    Ok(chol.l_mul(&z))
+}
+
+/// Spectral GP sampler: η(x) ≈ sqrt(2/D) Σ_j a_j cos(ω_jᵀx + b_j) with
+/// a_j ~ N(0,1), b_j ~ U[0,2π), ω_j from the kernel's spectral density.
+/// Exact in distribution as D → ∞; D ≈ 4096 gives ~1-2% covariance error.
+pub struct SpectralGp {
+    /// D×d frequency rows.
+    omega: Vec<f64>,
+    phase: Vec<f64>,
+    amp: Vec<f64>,
+    d: usize,
+}
+
+impl SpectralGp {
+    pub fn new(kernel: &Kernel, d: usize, features: usize, rng: &mut Pcg64) -> SpectralGp {
+        let mut omega = vec![0.0; features * d];
+        match kernel {
+            Kernel::SquaredExp { scale } => {
+                // k(Δ)=exp(-‖Δ‖²/s²) ⇔ ω ~ N(0, 2/s² I)
+                let sd = (2.0f64).sqrt() / scale;
+                for v in omega.iter_mut() {
+                    *v = rng.normal() * sd;
+                }
+            }
+            Kernel::Laplace { scale } => {
+                // product of 1-d Laplace e^{-|δ|/s}: spectral density per dim
+                // is Cauchy with scale 1/(2π s)
+                for v in omega.iter_mut() {
+                    *v = rng.cauchy() / (2.0 * std::f64::consts::PI * scale)
+                        * (2.0 * std::f64::consts::PI);
+                }
+            }
+            Kernel::Matern52 { scale } => {
+                // paper form (1+r+r²/3)e^{-r}, r=‖Δ‖/s is Matérn ν=5/2 with
+                // √5/ℓ = 1/s ⇒ ℓ = √5 s. Spectral sampling: ω = g √(2ν/u),
+                // u ~ χ²_{2ν} = Gamma(ν, 2), g ~ N(0, 1/ℓ² I)
+                let nu = 2.5;
+                let ell = 5.0f64.sqrt() * scale;
+                for f in 0..features {
+                    let u = 2.0 * rng.gamma(nu); // chi^2_{2ν}
+                    let c = (2.0 * nu / u).sqrt() / ell;
+                    for l in 0..d {
+                        omega[f * d + l] = rng.normal() * c;
+                    }
+                }
+            }
+            Kernel::Wlsh { .. } => {
+                panic!("spectral sampling of WLSH kernels is not supported; use sample_gp_exact")
+            }
+        }
+        let phase = (0..features)
+            .map(|_| rng.uniform_in(0.0, 2.0 * std::f64::consts::PI))
+            .collect();
+        let amp = (0..features).map(|_| rng.normal()).collect();
+        SpectralGp { omega, phase, amp, d }
+    }
+
+    /// Evaluate the sampled path at x (len d).
+    pub fn eval(&self, x: &[f32]) -> f64 {
+        debug_assert_eq!(x.len(), self.d);
+        let features = self.phase.len();
+        let norm = (2.0 / features as f64).sqrt();
+        let mut acc = 0.0;
+        for f in 0..features {
+            let row = &self.omega[f * self.d..(f + 1) * self.d];
+            let mut t = self.phase[f];
+            for (wl, xl) in row.iter().zip(x) {
+                t += wl * *xl as f64;
+            }
+            acc += self.amp[f] * t.cos();
+        }
+        acc * norm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Empirical covariance of GP samples must match the kernel.
+    fn check_cov(kernel: &Kernel, tol: f64) {
+        let d = 2;
+        let pts: Vec<f32> = vec![0.0, 0.0, 0.3, 0.1, 0.8, 0.9];
+        let n = 3;
+        let trials = 3000;
+        let mut rng = Pcg64::new(42, 0);
+        let mut cov = vec![0.0; n * n];
+        for _ in 0..trials {
+            let s = sample_gp_exact(kernel, &pts, d, &mut rng).unwrap();
+            for i in 0..n {
+                for j in 0..n {
+                    cov[i * n + j] += s[i] * s[j];
+                }
+            }
+        }
+        for i in 0..n {
+            for j in 0..n {
+                let want = kernel.eval_f32(&pts[i * d..(i + 1) * d], &pts[j * d..(j + 1) * d]);
+                let got = cov[i * n + j] / trials as f64;
+                assert!(
+                    (got - want).abs() < tol,
+                    "{} cov[{i}{j}] {got} vs {want}",
+                    kernel.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn exact_sampler_covariances() {
+        check_cov(&Kernel::laplace(1.0), 0.08);
+        check_cov(&Kernel::squared_exp(1.0), 0.08);
+        check_cov(&Kernel::matern52(1.0), 0.08);
+    }
+
+    #[test]
+    fn spectral_sampler_covariance_se() {
+        let kernel = Kernel::squared_exp(1.0);
+        let d = 2;
+        let xa = [0.0f32, 0.0];
+        let xb = [0.5f32, 0.2];
+        let trials = 600;
+        let mut rng = Pcg64::new(7, 0);
+        let (mut caa, mut cab) = (0.0, 0.0);
+        for t in 0..trials {
+            let mut r = rng.fork(t as u64);
+            let gp = SpectralGp::new(&kernel, d, 2048, &mut r);
+            let (a, b) = (gp.eval(&xa), gp.eval(&xb));
+            caa += a * a;
+            cab += a * b;
+        }
+        caa /= trials as f64;
+        cab /= trials as f64;
+        assert!((caa - 1.0).abs() < 0.15, "var {caa}");
+        let want = kernel.eval_f32(&xa, &xb);
+        assert!((cab - want).abs() < 0.15, "cov {cab} vs {want}");
+    }
+
+    #[test]
+    fn spectral_sampler_covariance_laplace_and_matern() {
+        for kernel in [Kernel::laplace(1.0), Kernel::matern52(1.0)] {
+            let d = 1;
+            let xa = [0.0f32];
+            let xb = [0.6f32];
+            let trials = 500;
+            let mut rng = Pcg64::new(11, 0);
+            let mut cab = 0.0;
+            for t in 0..trials {
+                let mut r = rng.fork(t as u64);
+                let gp = SpectralGp::new(&kernel, d, 2048, &mut r);
+                cab += gp.eval(&xa) * gp.eval(&xb);
+            }
+            cab /= trials as f64;
+            let want = kernel.eval_f32(&xa, &xb);
+            assert!(
+                (cab - want).abs() < 0.15,
+                "{}: {cab} vs {want}",
+                kernel.name()
+            );
+        }
+    }
+}

@@ -1,0 +1,225 @@
+//! Exact kernel functions (the paper's baselines plus the WLSH kernel
+//! family itself, Def. 8) with a uniform evaluation interface.
+
+use crate::bucketfn::bucket_by_name;
+use crate::quadrature::KernelProfile;
+
+/// A shift-invariant kernel k(x, y) = k(x - y).
+#[derive(Clone, Debug)]
+pub enum Kernel {
+    /// exp(-‖x-y‖₁ / s)
+    Laplace { scale: f64 },
+    /// exp(-‖x-y‖₂² / s²)
+    SquaredExp { scale: f64 },
+    /// (1 + r + r²/3) e^{-r}, r = ‖x-y‖₂ / s (the paper's Matérn-5/2 form)
+    Matern52 { scale: f64 },
+    /// WLSH kernel k_{f,p}(Δ) = ∏_l E_{w~Gamma(shape,1)}[(f*f)(Δ_l/w)]
+    /// evaluated via a tabulated 1-d profile (Def. 8).
+    Wlsh { profile: KernelProfile, scale: f64 },
+}
+
+impl Kernel {
+    pub fn laplace(scale: f64) -> Kernel {
+        Kernel::Laplace { scale }
+    }
+
+    pub fn squared_exp(scale: f64) -> Kernel {
+        Kernel::SquaredExp { scale }
+    }
+
+    pub fn matern52(scale: f64) -> Kernel {
+        Kernel::Matern52 { scale }
+    }
+
+    /// Build the WLSH kernel for a named bucket function and Gamma shape.
+    /// `scale` divides the input difference (bandwidth), matching how the
+    /// estimator scales data before hashing.
+    pub fn wlsh(bucket: &str, gamma_shape: f64, scale: f64) -> Kernel {
+        let pp = bucket_by_name(bucket)
+            .unwrap_or_else(|| panic!("unknown bucket {bucket:?}"));
+        let ff = pp.autocorrelation();
+        // delta_max: Gamma(shape) has negligible mass past shape+10√shape;
+        // (f*f) support ≤ 1 ⇒ k_1d(δ) ≈ 0 beyond that times the support.
+        let delta_max = (gamma_shape + 12.0 * gamma_shape.sqrt()).max(16.0);
+        let profile = KernelProfile::build(&ff, gamma_shape, delta_max, 4096);
+        Kernel::Wlsh { profile, scale }
+    }
+
+    /// The paper's Table-1 smooth WLSH kernel: f = smooth2, p = Gamma(7,1).
+    pub fn wlsh_paper_smooth(scale: f64) -> Kernel {
+        Kernel::wlsh("smooth2", 7.0, scale)
+    }
+
+    /// Short name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kernel::Laplace { .. } => "laplace",
+            Kernel::SquaredExp { .. } => "se",
+            Kernel::Matern52 { .. } => "matern52",
+            Kernel::Wlsh { .. } => "wlsh",
+        }
+    }
+
+    /// Evaluate k(x, y).
+    pub fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        match self {
+            Kernel::Laplace { scale } => {
+                let d1: f64 = x.iter().zip(y).map(|(a, b)| (a - b).abs()).sum();
+                (-d1 / scale).exp()
+            }
+            Kernel::SquaredExp { scale } => {
+                let d2: f64 = x.iter().zip(y).map(|(a, b)| (a - b) * (a - b)).sum();
+                (-d2 / (scale * scale)).exp()
+            }
+            Kernel::Matern52 { scale } => {
+                let d2: f64 = x.iter().zip(y).map(|(a, b)| (a - b) * (a - b)).sum();
+                let r = d2.sqrt() / scale;
+                (1.0 + r + r * r / 3.0) * (-r).exp()
+            }
+            Kernel::Wlsh { profile, scale } => x
+                .iter()
+                .zip(y)
+                .map(|(a, b)| profile.eval((a - b) / scale))
+                .product(),
+        }
+    }
+
+    /// Evaluate over f32 rows (dataset storage format).
+    pub fn eval_f32(&self, x: &[f32], y: &[f32]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        match self {
+            Kernel::Laplace { scale } => {
+                let d1: f64 = x
+                    .iter()
+                    .zip(y)
+                    .map(|(a, b)| (*a as f64 - *b as f64).abs())
+                    .sum();
+                (-d1 / scale).exp()
+            }
+            Kernel::SquaredExp { scale } => {
+                let d2: f64 = x
+                    .iter()
+                    .zip(y)
+                    .map(|(a, b)| {
+                        let d = *a as f64 - *b as f64;
+                        d * d
+                    })
+                    .sum();
+                (-d2 / (scale * scale)).exp()
+            }
+            Kernel::Matern52 { scale } => {
+                let d2: f64 = x
+                    .iter()
+                    .zip(y)
+                    .map(|(a, b)| {
+                        let d = *a as f64 - *b as f64;
+                        d * d
+                    })
+                    .sum();
+                let r = d2.sqrt() / scale;
+                (1.0 + r + r * r / 3.0) * (-r).exp()
+            }
+            Kernel::Wlsh { profile, scale } => x
+                .iter()
+                .zip(y)
+                .map(|(a, b)| profile.eval((*a as f64 - *b as f64) / scale))
+                .product(),
+        }
+    }
+
+    /// k(x, x) — always 1 for these normalized kernels.
+    pub fn diag(&self) -> f64 {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_diagonal() {
+        let x = vec![0.3, -1.2, 4.0];
+        for k in [
+            Kernel::laplace(1.0),
+            Kernel::squared_exp(1.0),
+            Kernel::matern52(1.0),
+            Kernel::wlsh("rect", 2.0, 1.0),
+        ] {
+            assert!((k.eval(&x, &x) - 1.0).abs() < 1e-6, "{}", k.name());
+        }
+    }
+
+    #[test]
+    fn laplace_matches_formula() {
+        let k = Kernel::laplace(1.0);
+        let v = k.eval(&[0.0, 0.0], &[0.3, -0.4]);
+        assert!((v - (-0.7f64).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn se_matches_formula() {
+        let k = Kernel::squared_exp(2.0);
+        let v = k.eval(&[0.0], &[1.0]);
+        assert!((v - (-0.25f64).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matern_matches_paper_form() {
+        let k = Kernel::matern52(1.0);
+        let r: f64 = 1.3;
+        let v = k.eval(&[0.0], &[r]);
+        let want = (1.0 + r + r * r / 3.0) * (-r).exp();
+        assert!((v - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wlsh_rect_gamma2_is_laplace() {
+        // Def. 8 with f = rect, p = Gamma(2,1) gives the Laplace kernel.
+        let kw = Kernel::wlsh("rect", 2.0, 1.0);
+        let kl = Kernel::laplace(1.0);
+        for delta in [0.0, 0.2, 0.7, 1.5, 3.0] {
+            let x = vec![0.0, 0.1];
+            let y = vec![delta, 0.1 - delta * 0.5];
+            assert!(
+                (kw.eval(&x, &y) - kl.eval(&x, &y)).abs() < 5e-4,
+                "delta {delta}"
+            );
+        }
+    }
+
+    #[test]
+    fn kernels_decay_monotonically() {
+        for k in [
+            Kernel::laplace(1.0),
+            Kernel::squared_exp(1.0),
+            Kernel::matern52(1.0),
+            Kernel::wlsh_paper_smooth(1.0),
+        ] {
+            let mut prev = 1.0 + 1e-12;
+            for i in 1..30 {
+                let v = k.eval(&[0.0], &[0.2 * i as f64]);
+                assert!(v <= prev + 1e-9, "{} at {}", k.name(), 0.2 * i as f64);
+                assert!(v >= -1e-9);
+                prev = v;
+            }
+        }
+    }
+
+    #[test]
+    fn f32_path_matches_f64() {
+        let x64 = vec![0.25, -0.5, 1.0];
+        let y64 = vec![0.0, 0.5, 0.75];
+        let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+        let y32: Vec<f32> = y64.iter().map(|&v| v as f32).collect();
+        for k in [
+            Kernel::laplace(1.3),
+            Kernel::squared_exp(0.8),
+            Kernel::matern52(2.0),
+            Kernel::wlsh("rect", 2.0, 1.0),
+        ] {
+            assert!((k.eval(&x64, &y64) - k.eval_f32(&x32, &y32)).abs() < 1e-6);
+        }
+    }
+}

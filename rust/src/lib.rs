@@ -1,0 +1,46 @@
+//! # wlsh-krr
+//!
+//! Production-grade reproduction of *"Scaling up Kernel Ridge Regression
+//! via Locality Sensitive Hashing"* (Kapralov, Nouri, Razenshteyn,
+//! Velingker, Zandieh — AISTATS 2020).
+//!
+//! The system is a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** (`python/compile/kernels/`): Pallas kernels for the compute hot
+//!   spots — WLSH hashing + bucket weights, RFF features, blockwise exact
+//!   kernel mat-vecs — AOT-lowered to HLO text.
+//! * **L2** (`python/compile/model.py`): JAX graphs composing the kernels
+//!   (notably the O(n·m) WLSH sketch mat-vec of paper §4).
+//! * **L3** (this crate): the coordinator — LSH bucket tables, CG-based KRR
+//!   training, a batched prediction service, benchmarks reproducing every
+//!   table in the paper, and the PJRT runtime executing the AOT artifacts.
+//!
+//! Python never runs on the request path: after `make artifacts` the Rust
+//! binary is self-contained (with a pure-native fallback backend that is
+//! parity-tested against the HLO artifacts).
+//!
+//! Entry points: [`sketch::WlshSketch`] (the paper's estimator),
+//! [`solver::solve_krr`] (CG on `K̃ + λI`), [`coordinator::Trainer`] /
+//! [`coordinator::Server`] (the training/serving framework), and
+//! `examples/quickstart.rs`.
+
+pub mod bucketfn;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod gp;
+pub mod kernels;
+pub mod linalg;
+pub mod lsh;
+pub mod metrics;
+pub mod quadrature;
+pub mod risk;
+pub mod runtime;
+pub mod sketch;
+pub mod solver;
+pub mod util;
+
+/// Crate version (for the CLI banner).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,221 @@
+//! Cholesky factorization A = L Lᵀ with a cache-blocked right-looking
+//! update — fast enough on one core for the paper's exact baselines and
+//! GP sampling (n ≈ 4000 in ~10 s at a few GFLOP/s).
+
+use super::Matrix;
+
+/// Lower-triangular Cholesky factor.
+pub struct CholeskyFactor {
+    pub l: Matrix,
+}
+
+const BLOCK: usize = 64;
+
+impl CholeskyFactor {
+    /// Factor a symmetric positive-definite matrix; `jitter` is added to
+    /// the diagonal (GP sampling uses ~1e-8 · tr(A)/n).
+    pub fn new(a: &Matrix, jitter: f64) -> Result<CholeskyFactor, String> {
+        assert_eq!(a.rows, a.cols);
+        let n = a.rows;
+        let mut l = a.clone();
+        l.add_diag(jitter);
+        // Right-looking blocked factorization over the lower triangle.
+        let mut kb = 0;
+        while kb < n {
+            let ke = (kb + BLOCK).min(n);
+            // factor diagonal block in place (unblocked)
+            for k in kb..ke {
+                let mut d = l[(k, k)];
+                for p in kb..k {
+                    d -= l[(k, p)] * l[(k, p)];
+                }
+                if d <= 0.0 {
+                    return Err(format!("not PD at pivot {k} (d = {d:.3e})"));
+                }
+                let dk = d.sqrt();
+                l[(k, k)] = dk;
+                for i in k + 1..ke {
+                    let mut s = l[(i, k)];
+                    for p in kb..k {
+                        s -= l[(i, p)] * l[(k, p)];
+                    }
+                    l[(i, k)] = s / dk;
+                }
+            }
+            // panel solve: rows below the block, columns kb..ke
+            for i in ke..n {
+                for k in kb..ke {
+                    let mut s = l[(i, k)];
+                    for p in kb..k {
+                        s -= l[(i, p)] * l[(k, p)];
+                    }
+                    l[(i, k)] = s / l[(k, k)];
+                }
+            }
+            // trailing update: A22 -= L21 L21ᵀ (lower triangle only).
+            // Copy the panel L21 (rows ke..n, cols kb..ke) to avoid aliasing
+            // and keep the dot loops contiguous.
+            let bw = ke - kb;
+            if ke < n {
+                let tail = n - ke;
+                let mut panel = vec![0.0; tail * bw];
+                for i in ke..n {
+                    let src = &l.data[i * l.cols + kb..i * l.cols + ke];
+                    panel[(i - ke) * bw..(i - ke + 1) * bw].copy_from_slice(src);
+                }
+                for i in ke..n {
+                    let pi = &panel[(i - ke) * bw..(i - ke + 1) * bw];
+                    for j in ke..=i {
+                        let pj = &panel[(j - ke) * bw..(j - ke + 1) * bw];
+                        let mut s = 0.0;
+                        for p in 0..bw {
+                            s += pi[p] * pj[p];
+                        }
+                        l[(i, j)] -= s;
+                    }
+                }
+            }
+            kb = ke;
+        }
+        // zero the strict upper triangle for cleanliness
+        for i in 0..n {
+            for j in i + 1..n {
+                l[(i, j)] = 0.0;
+            }
+        }
+        Ok(CholeskyFactor { l })
+    }
+
+    /// Solve A x = b via forward+back substitution.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let y = self.forward(b);
+        self.backward(&y)
+    }
+
+    /// Solve L y = b.
+    pub fn forward(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows;
+        assert_eq!(b.len(), n);
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let row = self.l.row(i);
+            let mut s = b[i];
+            for (j, item) in y.iter().enumerate().take(i) {
+                s -= row[j] * item;
+            }
+            y[i] = s / row[i];
+        }
+        y
+    }
+
+    /// Solve Lᵀ x = y.
+    pub fn backward(&self, y: &[f64]) -> Vec<f64> {
+        let n = self.l.rows;
+        assert_eq!(y.len(), n);
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for j in i + 1..n {
+                s -= self.l[(j, i)] * x[j];
+            }
+            x[i] = s / self.l[(i, i)];
+        }
+        x
+    }
+
+    /// x = L z — transforms iid standard normals z into samples with
+    /// covariance A (the GP sampler's core operation).
+    pub fn l_mul(&self, z: &[f64]) -> Vec<f64> {
+        let n = self.l.rows;
+        assert_eq!(z.len(), n);
+        (0..n)
+            .map(|i| {
+                let row = self.l.row(i);
+                let mut s = 0.0;
+                for j in 0..=i {
+                    s += row[j] * z[j];
+                }
+                s
+            })
+            .collect()
+    }
+
+    pub fn log_det(&self) -> f64 {
+        (0..self.l.rows).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::new(seed, 0);
+        let b = Matrix::random_normal(&mut rng, n, n);
+        let mut a = b.matmul(&b.transpose());
+        a.add_diag(n as f64 * 0.1);
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        for n in [1, 2, 5, 63, 64, 65, 130] {
+            let a = random_spd(n, n as u64);
+            let ch = CholeskyFactor::new(&a, 0.0).unwrap();
+            let rec = ch.l.matmul(&ch.l.transpose());
+            let err = a
+                .data
+                .iter()
+                .zip(&rec.data)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0, f64::max);
+            assert!(err < 1e-8 * (n as f64), "n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn solve_matches_direct() {
+        let a = random_spd(40, 7);
+        let ch = CholeskyFactor::new(&a, 0.0).unwrap();
+        let x_true: Vec<f64> = (0..40).map(|i| (i as f64).sin()).collect();
+        let b = a.matvec(&x_true);
+        let x = ch.solve(&b);
+        let err = x
+            .iter()
+            .zip(&x_true)
+            .map(|(p, q)| (p - q).abs())
+            .fold(0.0, f64::max);
+        assert!(err < 1e-8, "err={err}");
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Matrix::from_rows(vec![vec![1.0, 2.0], vec![2.0, 1.0]]);
+        assert!(CholeskyFactor::new(&a, 0.0).is_err());
+    }
+
+    #[test]
+    fn l_mul_covariance() {
+        // E[(Lz)(Lz)ᵀ] = A — spot-check the variance of one coordinate.
+        let a = random_spd(8, 3);
+        let ch = CholeskyFactor::new(&a, 0.0).unwrap();
+        let mut rng = Pcg64::new(9, 0);
+        let trials = 20_000;
+        let mut var0 = 0.0;
+        for _ in 0..trials {
+            let z: Vec<f64> = (0..8).map(|_| rng.normal()).collect();
+            let x = ch.l_mul(&z);
+            var0 += x[0] * x[0];
+        }
+        var0 /= trials as f64;
+        assert!((var0 - a[(0, 0)]).abs() < 0.1 * a[(0, 0)], "var {var0} vs {}", a[(0, 0)]);
+    }
+
+    #[test]
+    fn log_det_matches_small() {
+        let a = Matrix::from_rows(vec![vec![4.0, 0.0], vec![0.0, 9.0]]);
+        let ch = CholeskyFactor::new(&a, 0.0).unwrap();
+        assert!((ch.log_det() - (36.0f64).ln()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,250 @@
+//! Symmetric eigendecomposition: Householder tridiagonalization followed by
+//! implicit-shift QL iteration (the classical tred2/tqli pair). Used for
+//! the OSE spectral-sandwich verification (Thm 11) at moderate n and for
+//! cross-checking Lanczos.
+
+use super::Matrix;
+
+/// Full symmetric eigendecomposition A = V diag(λ) Vᵀ.
+pub struct SymEig {
+    /// Eigenvalues, ascending.
+    pub values: Vec<f64>,
+    /// Column j of `vectors` is the eigenvector for `values[j]`.
+    pub vectors: Matrix,
+}
+
+/// Compute the full eigendecomposition of a symmetric matrix.
+pub fn sym_eig(a: &Matrix) -> SymEig {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut v = a.clone();
+    v.symmetrize();
+    let mut d = vec![0.0; n]; // diagonal
+    let mut e = vec![0.0; n]; // off-diagonal
+    tred2(&mut v, &mut d, &mut e);
+    tqli(&mut d, &mut e, &mut v);
+    // sort ascending, permuting columns of v
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&i, &j| d[i].partial_cmp(&d[j]).unwrap());
+    let values: Vec<f64> = idx.iter().map(|&i| d[i]).collect();
+    let mut vectors = Matrix::zeros(n, n);
+    for (new_j, &old_j) in idx.iter().enumerate() {
+        for i in 0..n {
+            vectors[(i, new_j)] = v[(i, old_j)];
+        }
+    }
+    SymEig { values, vectors }
+}
+
+/// Householder reduction to tridiagonal form (Numerical Recipes tred2).
+fn tred2(a: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
+    let n = a.rows;
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0;
+        if l > 0 {
+            let scale: f64 = (0..=l).map(|k| a[(i, k)].abs()).sum();
+            if scale == 0.0 {
+                e[i] = a[(i, l)];
+            } else {
+                for k in 0..=l {
+                    a[(i, k)] /= scale;
+                    h += a[(i, k)] * a[(i, k)];
+                }
+                let mut f = a[(i, l)];
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                a[(i, l)] = f - g;
+                f = 0.0;
+                for j in 0..=l {
+                    a[(j, i)] = a[(i, j)] / h;
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += a[(j, k)] * a[(i, k)];
+                    }
+                    for k in j + 1..=l {
+                        g += a[(k, j)] * a[(i, k)];
+                    }
+                    e[j] = g / h;
+                    f += e[j] * a[(i, j)];
+                }
+                let hh = f / (h + h);
+                for j in 0..=l {
+                    let f = a[(i, j)];
+                    e[j] -= hh * f;
+                    let g = e[j];
+                    for k in 0..=j {
+                        a[(j, k)] -= f * e[k] + g * a[(i, k)];
+                    }
+                }
+            }
+        } else {
+            e[i] = a[(i, l)];
+        }
+        d[i] = h;
+    }
+    d[0] = 0.0;
+    e[0] = 0.0;
+    for i in 0..n {
+        if d[i] != 0.0 {
+            for j in 0..i {
+                let mut g = 0.0;
+                for k in 0..i {
+                    g += a[(i, k)] * a[(k, j)];
+                }
+                for k in 0..i {
+                    a[(k, j)] -= g * a[(k, i)];
+                }
+            }
+        }
+        d[i] = a[(i, i)];
+        a[(i, i)] = 1.0;
+        for j in 0..i {
+            a[(j, i)] = 0.0;
+            a[(i, j)] = 0.0;
+        }
+    }
+}
+
+/// Implicit-shift QL iteration on the tridiagonal form (tqli), accumulating
+/// the transformations into `z` so its columns become eigenvectors.
+fn tqli(d: &mut [f64], e: &mut [f64], z: &mut Matrix) {
+    let n = d.len();
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            assert!(iter <= 50, "tqli failed to converge");
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            g = d[m] - d[l] + e[l] / (g + r.copysign(g));
+            let (mut s, mut c) = (1.0, 1.0);
+            let mut p = 0.0;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                for k in 0..n {
+                    f = z[(k, i + 1)];
+                    z[(k, i + 1)] = s * z[(k, i)] + c * f;
+                    z[(k, i)] = c * z[(k, i)] - s * f;
+                }
+            }
+            if r == 0.0 && m > l {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Matrix::from_rows(vec![
+            vec![3.0, 0.0, 0.0],
+            vec![0.0, 1.0, 0.0],
+            vec![0.0, 0.0, 2.0],
+        ]);
+        let eig = sym_eig(&a);
+        assert!((eig.values[0] - 1.0).abs() < 1e-12);
+        assert!((eig.values[1] - 2.0).abs() < 1e-12);
+        assert!((eig.values[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] -> eigenvalues 1, 3
+        let a = Matrix::from_rows(vec![vec![2.0, 1.0], vec![1.0, 2.0]]);
+        let eig = sym_eig(&a);
+        assert!((eig.values[0] - 1.0).abs() < 1e-12);
+        assert!((eig.values[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstructs_random_symmetric() {
+        let mut rng = Pcg64::new(2, 0);
+        for n in [1, 2, 3, 10, 40] {
+            let b = Matrix::random_normal(&mut rng, n, n);
+            let mut a = b.matmul(&b.transpose());
+            a.symmetrize();
+            let eig = sym_eig(&a);
+            // A v_j = λ_j v_j for each eigenpair
+            for j in 0..n {
+                let vj: Vec<f64> = (0..n).map(|i| eig.vectors[(i, j)]).collect();
+                let av = a.matvec(&vj);
+                for i in 0..n {
+                    assert!(
+                        (av[i] - eig.values[j] * vj[i]).abs() < 1e-7 * (1.0 + eig.values[j].abs()),
+                        "n={n} pair {j}"
+                    );
+                }
+            }
+            // eigenvalues ascending
+            assert!(eig.values.windows(2).all(|w| w[0] <= w[1] + 1e-12));
+        }
+    }
+
+    #[test]
+    fn orthonormal_vectors() {
+        let mut rng = Pcg64::new(5, 0);
+        let b = Matrix::random_normal(&mut rng, 20, 20);
+        let mut a = b.matmul(&b.transpose());
+        a.symmetrize();
+        let eig = sym_eig(&a);
+        let vtv = eig.vectors.transpose().matmul(&eig.vectors);
+        for i in 0..20 {
+            for j in 0..20 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((vtv[(i, j)] - want).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn psd_eigenvalues_nonnegative() {
+        let mut rng = Pcg64::new(8, 0);
+        let b = Matrix::random_normal(&mut rng, 15, 5);
+        let mut a = b.matmul(&b.transpose()); // rank 5 PSD
+        a.symmetrize();
+        let eig = sym_eig(&a);
+        assert!(eig.values.iter().all(|&v| v > -1e-8));
+        // 10 near-zero eigenvalues
+        assert!(eig.values[..10].iter().all(|&v| v.abs() < 1e-8));
+    }
+}

@@ -1,0 +1,122 @@
+//! Lanczos iteration with full reorthogonalization for extreme eigenvalues
+//! of an implicitly-defined symmetric operator — the large-n path of the
+//! OSE spectral check (DESIGN.md F-OSE): we need only λ_min / λ_max of
+//! Z U ᵀ (K̃+λI) U Z, which is available as a mat-vec.
+
+use super::{axpy, dot, norm2, sym_eig, Matrix};
+use crate::util::rng::Pcg64;
+
+/// Extreme-eigenvalue estimates.
+#[derive(Debug, Clone)]
+pub struct LanczosResult {
+    pub min: f64,
+    pub max: f64,
+    pub iters: usize,
+    /// All Ritz values (ascending) of the final Krylov subspace.
+    pub ritz: Vec<f64>,
+}
+
+/// Run `k` Lanczos steps on the operator `op: v -> A v` (symmetric, n×n).
+/// Full reorthogonalization (k is small: ≤ ~100) keeps the Ritz values
+/// honest in f64.
+pub fn lanczos_extreme<F>(n: usize, k: usize, seed: u64, mut op: F) -> LanczosResult
+where
+    F: FnMut(&[f64]) -> Vec<f64>,
+{
+    assert!(n > 0);
+    let k = k.min(n);
+    let mut rng = Pcg64::new(seed, 17);
+    let mut q: Vec<Vec<f64>> = Vec::with_capacity(k);
+    let mut v0: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let nrm = norm2(&v0);
+    v0.iter_mut().for_each(|x| *x /= nrm);
+    q.push(v0);
+    let mut alphas = Vec::with_capacity(k);
+    let mut betas = Vec::with_capacity(k);
+    for j in 0..k {
+        let mut w = op(&q[j]);
+        let alpha = dot(&q[j], &w);
+        alphas.push(alpha);
+        axpy(-alpha, &q[j], &mut w);
+        if j > 0 {
+            let b: f64 = betas[j - 1];
+            axpy(-b, &q[j - 1], &mut w);
+        }
+        // full reorthogonalization (twice is enough)
+        for _ in 0..2 {
+            for qi in &q {
+                let c = dot(qi, &w);
+                axpy(-c, qi, &mut w);
+            }
+        }
+        let beta = norm2(&w);
+        if beta < 1e-13 || j + 1 == k {
+            break;
+        }
+        betas.push(beta);
+        w.iter_mut().for_each(|x| *x /= beta);
+        q.push(w);
+    }
+    // tridiagonal Ritz problem
+    let steps = alphas.len();
+    let mut t = Matrix::zeros(steps, steps);
+    for i in 0..steps {
+        t[(i, i)] = alphas[i];
+        if i + 1 < steps {
+            t[(i, i + 1)] = betas[i];
+            t[(i + 1, i)] = betas[i];
+        }
+    }
+    let eig = sym_eig(&t);
+    LanczosResult {
+        min: *eig.values.first().unwrap(),
+        max: *eig.values.last().unwrap(),
+        iters: steps,
+        ritz: eig.values,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_extremes_of_diagonal() {
+        let n = 200;
+        let diag: Vec<f64> = (0..n).map(|i| 1.0 + i as f64 / 10.0).collect();
+        let d = diag.clone();
+        let res = lanczos_extreme(n, 60, 1, move |v| {
+            v.iter().zip(&d).map(|(x, di)| x * di).collect()
+        });
+        assert!((res.max - diag[n - 1]).abs() < 1e-6, "max {}", res.max);
+        assert!((res.min - diag[0]).abs() < 1e-3, "min {}", res.min);
+    }
+
+    #[test]
+    fn matches_dense_eig_on_random_spd() {
+        let mut rng = Pcg64::new(4, 0);
+        let b = Matrix::random_normal(&mut rng, 60, 60);
+        let mut a = b.matmul(&b.transpose());
+        a.add_diag(1.0);
+        a.symmetrize();
+        let dense = sym_eig(&a);
+        let a2 = a.clone();
+        let res = lanczos_extreme(60, 60, 2, move |v| a2.matvec(v));
+        assert!((res.max - dense.values[59]).abs() < 1e-6 * dense.values[59]);
+        assert!((res.min - dense.values[0]).abs() < 1e-4 * dense.values[59]);
+    }
+
+    #[test]
+    fn early_breakdown_on_low_rank() {
+        // rank-1 operator: Lanczos must stop early without NaNs
+        let u: Vec<f64> = (0..50).map(|i| (i as f64 * 0.3).sin()).collect();
+        let un = norm2(&u);
+        let u2: Vec<f64> = u.iter().map(|x| x / un).collect();
+        let res = lanczos_extreme(50, 30, 3, move |v| {
+            let c = dot(&u2, v);
+            u2.iter().map(|x| c * x).collect()
+        });
+        assert!(res.iters <= 3);
+        assert!((res.max - 1.0).abs() < 1e-8);
+    }
+}

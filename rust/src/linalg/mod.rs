@@ -1,0 +1,83 @@
+//! Dense linear-algebra substrate (no BLAS/LAPACK offline): row-major f64
+//! matrices, blocked Cholesky, symmetric eigendecomposition (Householder
+//! tridiagonalization + implicit-shift QL), Lanczos extreme eigenvalues,
+//! and triangular solves. Sized for the paper's exact baselines
+//! (n ≤ ~8000) and the OSE spectral checks.
+
+mod cholesky;
+mod dense;
+mod eig;
+mod lanczos;
+
+pub use cholesky::CholeskyFactor;
+pub use dense::Matrix;
+pub use eig::{sym_eig, SymEig};
+pub use lanczos::{lanczos_extreme, LanczosResult};
+
+/// y += alpha * x
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Dot product with f64 accumulation.
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| a * b).sum()
+}
+
+/// Euclidean norm.
+pub fn norm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// Dot product over f32 slices with f64 accumulation (hot path helper).
+pub fn dot_f32(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = 0.0f64;
+    // 4-way unrolled accumulation: keeps the f64 adds pipelined
+    let mut i = 0;
+    let n = x.len();
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0, 0.0, 0.0);
+    while i + 4 <= n {
+        a0 += x[i] as f64 * y[i] as f64;
+        a1 += x[i + 1] as f64 * y[i + 1] as f64;
+        a2 += x[i + 2] as f64 * y[i + 2] as f64;
+        a3 += x[i + 3] as f64 * y[i + 3] as f64;
+        i += 4;
+    }
+    while i < n {
+        acc += x[i] as f64 * y[i] as f64;
+        i += 1;
+    }
+    acc + a0 + a1 + a2 + a3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blas1_helpers() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![1.0, 1.0, 1.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![3.0, 5.0, 7.0]);
+        assert_eq!(dot(&x, &x), 14.0);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn dot_f32_matches_f64() {
+        let x: Vec<f32> = (0..1003).map(|i| (i as f32) * 0.01).collect();
+        let y: Vec<f32> = (0..1003).map(|i| 1.0 - (i as f32) * 0.002).collect();
+        let want: f64 = x
+            .iter()
+            .zip(&y)
+            .map(|(a, b)| *a as f64 * *b as f64)
+            .sum();
+        assert!((dot_f32(&x, &y) - want).abs() < 1e-9 * want.abs().max(1.0));
+    }
+}

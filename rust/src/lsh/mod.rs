@@ -1,0 +1,314 @@
+//! The LSH family of Def. 5 and the bucket data structure of §4.
+//!
+//! An LSH function is `h_{w,z}(x)_l = round((x_l - z_l)/w_l)` with grid
+//! widths `w_l ~ Gamma(shape, 1)` iid and shift `z ~ Unif[0, w]`. Points
+//! are hashed per coordinate and the d-dim bucket coordinate is collapsed
+//! to a scalar id by a random odd-multiplier mix:
+//!
+//! * `u64` mix (native default) — collision probability ≈ 2⁻⁶⁴, negligible.
+//! * `i32` mix — bit-compatible with the HLO Pallas kernel (wrap-around
+//!   i32 arithmetic), used by the XLA backend and the parity tests.
+//!
+//! `BucketTable` renumbers raw ids into dense `[0, B)` indices (the "lists
+//! L_j" of §4) enabling the O(n) mat-vec and O(1) query lookups.
+
+mod table;
+
+pub use table::{BucketTable, FxBuildHasher};
+
+use crate::bucketfn::BucketEval;
+use crate::util::rng::Pcg64;
+
+/// Shared parameters of the LSH family (Def. 5) + bucket shaping (Def. 6).
+#[derive(Clone, Debug)]
+pub struct LshFamily {
+    pub d: usize,
+    /// Gamma(shape, 1) law of the grid widths (2 ⇒ Laplace, 7 ⇒ paper's
+    /// smooth Table-1 kernel).
+    pub gamma_shape: f64,
+    /// Bucket-shaping function f.
+    pub bucket: BucketEval,
+    pub bucket_name: String,
+    /// i32 odd mixing multipliers (shared with the HLO kernel).
+    pub mix32: Vec<i32>,
+    /// u64 odd mixing multipliers (native default).
+    pub mix64: Vec<u64>,
+}
+
+impl LshFamily {
+    pub fn new(d: usize, gamma_shape: f64, bucket_name: &str, rng: &mut Pcg64) -> LshFamily {
+        let bucket = BucketEval::by_name(bucket_name)
+            .unwrap_or_else(|| panic!("unknown bucket function {bucket_name:?}"));
+        LshFamily {
+            d,
+            gamma_shape,
+            bucket,
+            bucket_name: bucket_name.to_string(),
+            mix32: (0..d).map(|_| rng.odd_i32()).collect(),
+            mix64: (0..d).map(|_| rng.odd_u64()).collect(),
+        }
+    }
+
+    /// Draw one LSH instance (w ~ Gamma(shape,1)^d, z ~ Unif[0, w]).
+    pub fn sample(&self, rng: &mut Pcg64) -> LshFunction {
+        let w: Vec<f32> = (0..self.d)
+            .map(|_| rng.gamma(self.gamma_shape) as f32)
+            .collect();
+        let z: Vec<f32> = w.iter().map(|&wl| (rng.uniform() * wl as f64) as f32).collect();
+        LshFunction { w, z }
+    }
+}
+
+/// One LSH instance: the grid widths and shift of Def. 5.
+#[derive(Clone, Debug)]
+pub struct LshFunction {
+    pub w: Vec<f32>,
+    pub z: Vec<f32>,
+}
+
+/// Precomputed per-instance state for the batched native hash loop:
+/// reciprocal widths turn the per-dim division into a multiply (~4× on
+/// the build hot path). Only the U64 (native) mode uses this — the I32
+/// mode keeps the division so it stays bit-identical to the HLO kernel.
+struct HashPlan<'a> {
+    w: &'a [f32],
+    z: &'a [f32],
+    inv_w: Vec<f32>,
+    mix64: &'a [u64],
+}
+
+/// Which id-collapse arithmetic to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IdMode {
+    /// u64 wrap mix — native default (collisions ≈ never).
+    U64,
+    /// i32 wrap mix — bit-compatible with the Pallas/HLO kernel.
+    I32,
+}
+
+impl LshFunction {
+    /// Hash one point: returns (raw id, f^{⊗d} weight).
+    ///
+    /// f32 arithmetic mirrors the HLO kernel exactly: `t = (x-z)/w`,
+    /// `c = floor(t + 0.5)`, residual `r = c - t`, weight `∏ f(r_l)`.
+    #[inline]
+    pub fn hash_point(
+        &self,
+        x: &[f32],
+        family: &LshFamily,
+        mode: IdMode,
+    ) -> (u64, f32) {
+        debug_assert_eq!(x.len(), family.d);
+        let mut id64: u64 = 0;
+        let mut id32: i32 = 0;
+        let mut weight: f32 = 1.0;
+        let rect = family.bucket.is_rect;
+        for l in 0..family.d {
+            let t = (x[l] - self.z[l]) / self.w[l];
+            let c = (t + 0.5).floor();
+            match mode {
+                IdMode::U64 => {
+                    id64 = id64
+                        .wrapping_add((c as i64 as u64).wrapping_mul(family.mix64[l]));
+                }
+                IdMode::I32 => {
+                    id32 = id32.wrapping_add((c as i32).wrapping_mul(family.mix32[l]));
+                }
+            }
+            if !rect {
+                weight *= family.bucket.eval(c - t);
+            }
+        }
+        let id = match mode {
+            IdMode::U64 => id64,
+            IdMode::I32 => id32 as u32 as u64,
+        };
+        (id, weight)
+    }
+
+    /// Hash a row-major batch; appends into `ids`/`weights`.
+    ///
+    /// The U64/native path replaces the per-dim division with a reciprocal
+    /// multiply and runs a branchless zipped inner loop (the O(n·d·m)
+    /// preprocessing hot spot — see EXPERIMENTS.md §Perf). The I32 path
+    /// defers to `hash_point` to stay bit-identical with the HLO kernel.
+    pub fn hash_batch(
+        &self,
+        x: &[f32],
+        family: &LshFamily,
+        mode: IdMode,
+        ids: &mut Vec<u64>,
+        weights: &mut Vec<f32>,
+    ) {
+        let d = family.d;
+        let n = x.len() / d;
+        ids.reserve(n);
+        weights.reserve(n);
+        if mode == IdMode::I32 {
+            for i in 0..n {
+                let (id, w) = self.hash_point(&x[i * d..(i + 1) * d], family, mode);
+                ids.push(id);
+                weights.push(w);
+            }
+            return;
+        }
+        let plan = HashPlan {
+            w: &self.w,
+            z: &self.z,
+            inv_w: self.w.iter().map(|&w| 1.0 / w).collect(),
+            mix64: &family.mix64,
+        };
+        let rect = family.bucket.is_rect;
+        for i in 0..n {
+            let row = &x[i * d..(i + 1) * d];
+            let mut id: u64 = 0;
+            if rect {
+                for (((&xv, &zv), &iw), &mx) in row
+                    .iter()
+                    .zip(plan.z)
+                    .zip(&plan.inv_w)
+                    .zip(plan.mix64)
+                {
+                    let c = ((xv - zv) * iw + 0.5).floor();
+                    id = id.wrapping_add((c as i64 as u64).wrapping_mul(mx));
+                }
+                ids.push(id);
+                weights.push(1.0);
+            } else {
+                let mut weight: f32 = 1.0;
+                for ((((&xv, &zv), &iw), &mx), _wv) in row
+                    .iter()
+                    .zip(plan.z)
+                    .zip(&plan.inv_w)
+                    .zip(plan.mix64)
+                    .zip(plan.w)
+                {
+                    let t = (xv - zv) * iw;
+                    let c = (t + 0.5).floor();
+                    id = id.wrapping_add((c as i64 as u64).wrapping_mul(mx));
+                    weight *= family.bucket.eval(c - t);
+                }
+                ids.push(id);
+                weights.push(weight);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn family(d: usize, bucket: &str) -> (LshFamily, LshFunction) {
+        let mut rng = Pcg64::new(7, 0);
+        let fam = LshFamily::new(d, 2.0, bucket, &mut rng);
+        let f = fam.sample(&mut rng);
+        (fam, f)
+    }
+
+    #[test]
+    fn hash_is_deterministic() {
+        let (fam, f) = family(4, "rect");
+        let x = [0.1f32, -0.7, 2.0, 0.0];
+        let a = f.hash_point(&x, &fam, IdMode::U64);
+        let b = f.hash_point(&x, &fam, IdMode::U64);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn nearby_points_collide_far_points_dont() {
+        let (fam, f) = family(3, "rect");
+        let x = [0.0f32, 0.0, 0.0];
+        let y = [1e-4f32, -1e-4, 1e-4];
+        let far = [50.0f32, -50.0, 50.0];
+        // w ~ Gamma(2,1) is O(1), so 1e-4-close points almost surely collide
+        assert_eq!(
+            f.hash_point(&x, &fam, IdMode::U64).0,
+            f.hash_point(&y, &fam, IdMode::U64).0
+        );
+        assert_ne!(
+            f.hash_point(&x, &fam, IdMode::U64).0,
+            f.hash_point(&far, &fam, IdMode::U64).0
+        );
+    }
+
+    #[test]
+    fn rect_weight_is_one_smooth_weight_in_range() {
+        let (fam_r, fr) = family(5, "rect");
+        let (fam_s, fs) = family(5, "smooth2");
+        let x = [0.3f32, 1.0, -0.4, 0.0, 2.2];
+        assert_eq!(fr.hash_point(&x, &fam_r, IdMode::U64).1, 1.0);
+        let (_, w) = fs.hash_point(&x, &fam_s, IdMode::U64);
+        let linf = fam_s.bucket.linf.powi(5);
+        assert!(w.abs() <= linf + 1e-4, "w={w} linf^d={linf}");
+    }
+
+    #[test]
+    fn collision_probability_matches_laplace() {
+        // P[h(x)=h(y)] = e^{-|x-y|_1} for rect + Gamma(2,1) (Rahimi-Recht)
+        let mut rng = Pcg64::new(3, 0);
+        let fam = LshFamily::new(1, 2.0, "rect", &mut rng);
+        let delta = 0.5f32;
+        let trials = 40_000;
+        let mut hits = 0;
+        for _ in 0..trials {
+            let f = fam.sample(&mut rng);
+            let a = f.hash_point(&[0.0], &fam, IdMode::U64).0;
+            let b = f.hash_point(&[delta], &fam, IdMode::U64).0;
+            if a == b {
+                hits += 1;
+            }
+        }
+        let p_hat = hits as f64 / trials as f64;
+        let p = (-delta as f64).exp();
+        let sigma = (p * (1.0 - p) / trials as f64).sqrt();
+        assert!((p_hat - p).abs() < 4.0 * sigma + 1e-9, "{p_hat} vs {p}");
+    }
+
+    #[test]
+    fn i32_and_u64_modes_agree_on_collisions() {
+        // different id values, but identical collision structure whp
+        let (fam, f) = family(3, "rect");
+        let mut rng = Pcg64::new(9, 0);
+        let pts: Vec<[f32; 3]> = (0..200)
+            .map(|_| {
+                [
+                    rng.normal() as f32,
+                    rng.normal() as f32,
+                    rng.normal() as f32,
+                ]
+            })
+            .collect();
+        let id64: Vec<u64> = pts
+            .iter()
+            .map(|p| f.hash_point(p, &fam, IdMode::U64).0)
+            .collect();
+        let id32: Vec<u64> = pts
+            .iter()
+            .map(|p| f.hash_point(p, &fam, IdMode::I32).0)
+            .collect();
+        for i in 0..pts.len() {
+            for j in 0..i {
+                assert_eq!(
+                    id64[i] == id64[j],
+                    id32[i] == id32[j],
+                    "pair ({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batch_matches_pointwise() {
+        let (fam, f) = family(2, "smooth2");
+        let x = vec![0.1f32, 0.2, -0.5, 1.0, 3.0, -3.0];
+        let mut ids = Vec::new();
+        let mut ws = Vec::new();
+        f.hash_batch(&x, &fam, IdMode::U64, &mut ids, &mut ws);
+        for i in 0..3 {
+            let (id, w) = f.hash_point(&x[i * 2..(i + 1) * 2], &fam, IdMode::U64);
+            assert_eq!(ids[i], id);
+            assert_eq!(ws[i], w);
+        }
+    }
+}

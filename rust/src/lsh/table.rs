@@ -1,0 +1,130 @@
+//! Dense bucket renumbering — the "lists L_j" data structure of paper §4:
+//! O(dn) preprocessing, O(n) memory, O(1) bucket lookup.
+
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Multiply-xor hasher for u64 keys (FxHash-style; the std SipHash is ~4×
+/// slower on this hot path and we control the keys).
+#[derive(Default)]
+pub struct FxHasher {
+    state: u64,
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.state
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.write_u8(b);
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, v: u8) {
+        self.write_u64(v as u64)
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.state = (self.state.rotate_left(5) ^ v).wrapping_mul(0x517cc1b727220a95);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.write_u64(v as u64)
+    }
+}
+
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+
+/// Renumbered bucket assignment for one LSH instance.
+#[derive(Clone, Debug)]
+pub struct BucketTable {
+    /// Dense bucket index of each point, in [0, n_buckets).
+    pub bucket_of: Vec<u32>,
+    /// Number of distinct non-empty buckets.
+    pub n_buckets: usize,
+    /// Raw id → dense index (query-time lookups).
+    map: HashMap<u64, u32, FxBuildHasher>,
+}
+
+impl BucketTable {
+    /// Build from raw ids (O(n)).
+    pub fn build(ids: &[u64]) -> BucketTable {
+        let mut map: HashMap<u64, u32, FxBuildHasher> =
+            HashMap::with_capacity_and_hasher(ids.len() / 2 + 1, FxBuildHasher::default());
+        let mut bucket_of = Vec::with_capacity(ids.len());
+        for &id in ids {
+            let next = map.len() as u32;
+            let b = *map.entry(id).or_insert(next);
+            bucket_of.push(b);
+        }
+        BucketTable { bucket_of, n_buckets: map.len(), map }
+    }
+
+    /// Dense index of a raw id, if that bucket is non-empty.
+    #[inline]
+    pub fn lookup(&self, raw_id: u64) -> Option<u32> {
+        self.map.get(&raw_id).copied()
+    }
+
+    /// Bucket histogram (sizes of each bucket).
+    pub fn sizes(&self) -> Vec<u32> {
+        let mut s = vec![0u32; self.n_buckets];
+        for &b in &self.bucket_of {
+            s[b as usize] += 1;
+        }
+        s
+    }
+
+    /// Memory footprint estimate in bytes (paper Lemma 27: O(n) words).
+    pub fn memory_bytes(&self) -> usize {
+        self.bucket_of.len() * 4 + self.map.len() * 16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renumbering_is_dense_and_consistent() {
+        let ids = vec![42u64, 7, 42, 99, 7, 42];
+        let t = BucketTable::build(&ids);
+        assert_eq!(t.n_buckets, 3);
+        assert_eq!(t.bucket_of.len(), 6);
+        assert_eq!(t.bucket_of[0], t.bucket_of[2]);
+        assert_eq!(t.bucket_of[0], t.bucket_of[5]);
+        assert_eq!(t.bucket_of[1], t.bucket_of[4]);
+        assert!(t.bucket_of.iter().all(|&b| (b as usize) < 3));
+    }
+
+    #[test]
+    fn lookup_roundtrip() {
+        let ids = vec![10u64, 20, 10];
+        let t = BucketTable::build(&ids);
+        assert_eq!(t.lookup(10), Some(t.bucket_of[0]));
+        assert_eq!(t.lookup(20), Some(t.bucket_of[1]));
+        assert_eq!(t.lookup(30), None);
+    }
+
+    #[test]
+    fn sizes_sum_to_n() {
+        let ids: Vec<u64> = (0..1000).map(|i| (i % 37) as u64).collect();
+        let t = BucketTable::build(&ids);
+        assert_eq!(t.n_buckets, 37);
+        assert_eq!(t.sizes().iter().sum::<u32>(), 1000);
+    }
+
+    #[test]
+    fn memory_is_linear() {
+        let ids: Vec<u64> = (0..10_000).map(|i| i as u64 % 509).collect();
+        let t = BucketTable::build(&ids);
+        assert!(t.memory_bytes() < 10_000 * 24);
+    }
+}

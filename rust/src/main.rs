@@ -1,0 +1,210 @@
+//! `wlsh-krr` CLI — train, evaluate, and serve WLSH-accelerated KRR models.
+//!
+//! Subcommands:
+//!   info                         artifact + platform report
+//!   train   [--dataset wine --method wlsh --m 450 ...]
+//!   serve   [--dataset wine --addr 127.0.0.1:7878 ...]
+//!   ose     [--n 256 --m 64 --lambda 1.0]   OSE spectral check (Thm 11)
+//!   gp      [--cov se --dim 5]              Table-1-style GP experiment
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use wlsh_krr::config::KrrConfig;
+use wlsh_krr::coordinator::{serve, ServerConfig, Trainer};
+use wlsh_krr::data::{load_csv, rmse, synthetic_by_name};
+use wlsh_krr::kernels::Kernel;
+use wlsh_krr::risk::ose_epsilon_dense;
+use wlsh_krr::runtime::Runtime;
+use wlsh_krr::sketch::{ExactKernelOp, WlshSketch};
+use wlsh_krr::solver::materialize;
+use wlsh_krr::util::cli::Args;
+use wlsh_krr::util::json::JsonWriter;
+use wlsh_krr::util::rng::Pcg64;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "info" => cmd_info(&args),
+        "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
+        "ose" => cmd_ose(&args),
+        "gp" => cmd_gp(&args),
+        _ => {
+            eprintln!(
+                "wlsh-krr {} — Scaling up KRR via Locality Sensitive Hashing\n\
+                 usage: wlsh-krr <info|train|serve|ose|gp> [--flags]\n\
+                 \n\
+                 train  --dataset wine|insurance|ctslices|covtype|<csv path>\n\
+                        --method wlsh|rff|exact-laplace|exact-se|exact-matern|nystrom\n\
+                        --budget M --scale S --lambda L --n-max N --seed K\n\
+                 serve  same dataset/method flags plus --addr HOST:PORT\n\
+                 ose    --n N --m M --lambda L --bucket rect|smooth2\n\
+                 gp     --cov laplace|se|matern --dim D --n N",
+                wlsh_krr::version()
+            );
+        }
+    }
+}
+
+fn load_dataset(args: &Args) -> wlsh_krr::data::Dataset {
+    let name = args.get_or("dataset", "wine");
+    let n_max = args.get("n-max").map(|v| v.parse().expect("--n-max"));
+    let seed = args.get_usize("seed", 42) as u64;
+    let mut ds = if name.ends_with(".csv") {
+        load_csv(name, -1, name).expect("load csv")
+    } else {
+        synthetic_by_name(name, n_max, seed)
+            .unwrap_or_else(|| panic!("unknown dataset {name:?} (and not a .csv path)"))
+    };
+    ds.standardize();
+    ds
+}
+
+fn config_from(args: &Args) -> KrrConfig {
+    let d = KrrConfig::default();
+    KrrConfig {
+        method: args.get_or("method", "wlsh").to_string(),
+        budget: args.get_usize("budget", 64),
+        bucket: args.get_or("bucket", "rect").to_string(),
+        gamma_shape: args.get_f64("gamma-shape", 2.0),
+        scale: args.get_f64("scale", 3.0),
+        lambda: args.get_f64("lambda", 0.5),
+        cg_max_iters: args.get_usize("cg-max-iters", d.cg_max_iters),
+        cg_tol: args.get_f64("cg-tol", d.cg_tol),
+        workers: args.get_usize("workers", 1),
+        seed: args.get_usize("seed", 42) as u64,
+    }
+}
+
+fn cmd_info(_args: &Args) {
+    println!("wlsh-krr {}", wlsh_krr::version());
+    match Runtime::open_default() {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            let mut names: Vec<_> = rt.manifest.entries.keys().collect();
+            names.sort();
+            println!("artifacts ({}):", names.len());
+            for n in names {
+                println!("  {n}");
+            }
+        }
+        Err(e) => println!("runtime unavailable: {e} (native backend only)"),
+    }
+}
+
+fn cmd_train(args: &Args) {
+    let ds = load_dataset(args);
+    let cfg = config_from(args);
+    let n_train = args.get_usize("n-train", (ds.n * 3) / 4);
+    let (tr, te) = ds.split(n_train.min(ds.n - 1), cfg.seed);
+    eprintln!(
+        "training {} on {} (n={}, d={}, test={})",
+        cfg.method, ds.name, tr.n, tr.d, te.n
+    );
+    let model = Trainer::new(cfg).train(&tr);
+    let pred = model.predict(&te.x);
+    let err = rmse(&pred, &te.y);
+    let rep = &model.report;
+    println!(
+        "{}",
+        JsonWriter::object()
+            .field_str("dataset", &ds.name)
+            .field_str("operator", &rep.operator)
+            .field_f64("rmse", err)
+            .field_f64("build_secs", rep.build_secs)
+            .field_f64("solve_secs", rep.solve_secs)
+            .field_usize("cg_iters", rep.cg_iters)
+            .field_f64("cg_rel_residual", rep.cg_rel_residual)
+            .field_usize("memory_bytes", rep.memory_bytes)
+            .finish()
+    );
+}
+
+fn cmd_serve(args: &Args) {
+    let ds = load_dataset(args);
+    let cfg = config_from(args);
+    let n_train = args.get_usize("n-train", (ds.n * 3) / 4);
+    let (tr, _) = ds.split(n_train.min(ds.n - 1), cfg.seed);
+    let model = Arc::new(Trainer::new(cfg).train(&tr));
+    eprintln!("model trained ({}); serving...", model.report.operator);
+    let scfg = ServerConfig {
+        addr: args.get_or("addr", "127.0.0.1:7878").to_string(),
+        max_batch: args.get_usize("max-batch", 64),
+        linger: Duration::from_micros(args.get_usize("linger-us", 500) as u64),
+        workers: args.get_usize("workers", 1),
+    };
+    eprintln!("listening on {}", scfg.addr);
+    let d = tr.d;
+    serve(model, d, scfg, None).expect("server");
+}
+
+fn cmd_ose(args: &Args) {
+    let n = args.get_usize("n", 256);
+    let m = args.get_usize("m", 64);
+    let d = args.get_usize("dim", 2);
+    let lambda = args.get_f64("lambda", 1.0);
+    let bucket = args.get_or("bucket", "rect");
+    let shape = if bucket == "rect" { 2.0 } else { 7.0 };
+    let seed = args.get_usize("seed", 1) as u64;
+    let mut rng = Pcg64::new(seed, 0);
+    let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+    let exact = ExactKernelOp::new(&x, n, d, Kernel::wlsh(bucket, shape, 1.0));
+    let k = materialize(&exact);
+    let sk = WlshSketch::build(&x, n, d, m, bucket, shape, 1.0, seed + 1);
+    let rep = ose_epsilon_dense(&k, &sk, lambda);
+    println!(
+        "{}",
+        JsonWriter::object()
+            .field_usize("n", n)
+            .field_usize("m", m)
+            .field_f64("lambda", lambda)
+            .field_str("bucket", bucket)
+            .field_f64("eps", rep.eps)
+            .field_f64("lambda_min", rep.lambda_min)
+            .field_f64("lambda_max", rep.lambda_max)
+            .finish()
+    );
+}
+
+fn cmd_gp(args: &Args) {
+    let cov = args.get_or("cov", "se");
+    let d = args.get_usize("dim", 5);
+    let n = args.get_usize("n", 800);
+    let n_train = (n * 3) / 4;
+    let seed = args.get_usize("seed", 1) as u64;
+    let kernel = match cov {
+        "laplace" => Kernel::laplace(1.0),
+        "se" => Kernel::squared_exp(1.0),
+        "matern" => Kernel::matern52(1.0),
+        other => panic!("unknown covariance {other:?}"),
+    };
+    let mut rng = Pcg64::new(seed, 0);
+    let pts: Vec<f32> = (0..n * d).map(|_| rng.uniform() as f32).collect();
+    let path = wlsh_krr::gp::sample_gp_exact(&kernel, &pts, d, &mut rng).expect("gp sample");
+    let noisy: Vec<f64> = path.iter().map(|v| v + 0.1 * rng.normal()).collect();
+    let ds = wlsh_krr::data::Dataset::new(&format!("gp-{cov}"), pts, noisy, d);
+    let (tr, te) = ds.split(n_train, seed + 1);
+    for method in ["exact-laplace", "exact-se", "exact-matern", "exact-wlsh"] {
+        let cfg = KrrConfig {
+            method: method.into(),
+            bucket: "smooth2".into(),
+            gamma_shape: 7.0,
+            scale: args.get_f64("scale", 1.0),
+            lambda: args.get_f64("lambda", 0.05),
+            ..Default::default()
+        };
+        let model = Trainer::new(cfg).train(&tr);
+        let pred = model.predict(&te.x);
+        println!(
+            "{}",
+            JsonWriter::object()
+                .field_str("cov", cov)
+                .field_usize("dim", d)
+                .field_str("method", method)
+                .field_f64("rmse", rmse(&pred, &te.y))
+                .finish()
+        );
+    }
+}

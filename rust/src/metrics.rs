@@ -1,0 +1,109 @@
+//! Serving/training metrics: counters, wall-clock timers, and a latency
+//! histogram with exact percentiles (sample-bounded reservoir).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Monotonic counter (shared across worker threads).
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Latency recorder: keeps up to `cap` most recent samples (ring) and
+/// aggregate sums for mean/throughput.
+pub struct LatencyHistogram {
+    samples: Mutex<Vec<f64>>,
+    cap: usize,
+    pub count: Counter,
+    sum_secs: Mutex<f64>,
+}
+
+impl LatencyHistogram {
+    pub fn new(cap: usize) -> Self {
+        LatencyHistogram {
+            samples: Mutex::new(Vec::with_capacity(cap)),
+            cap,
+            count: Counter::default(),
+            sum_secs: Mutex::new(0.0),
+        }
+    }
+
+    pub fn record(&self, secs: f64) {
+        self.count.add(1);
+        *self.sum_secs.lock().unwrap() += secs;
+        let mut s = self.samples.lock().unwrap();
+        if s.len() == self.cap {
+            // overwrite pseudo-randomly to stay representative
+            let idx = (self.count.get() as usize * 2654435761) % self.cap;
+            s[idx] = secs;
+        } else {
+            s.push(secs);
+        }
+    }
+
+    /// (p50, p90, p99) over retained samples.
+    pub fn percentiles(&self) -> (f64, f64, f64) {
+        let mut s = self.samples.lock().unwrap().clone();
+        if s.is_empty() {
+            return (0.0, 0.0, 0.0);
+        }
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let at = |p: f64| s[((s.len() as f64 * p) as usize).min(s.len() - 1)];
+        (at(0.50), at(0.90), at(0.99))
+    }
+
+    pub fn mean(&self) -> f64 {
+        let c = self.count.get();
+        if c == 0 {
+            0.0
+        } else {
+            *self.sum_secs.lock().unwrap() / c as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let c = Counter::default();
+        c.add(2);
+        c.add(3);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn histogram_percentiles() {
+        let h = LatencyHistogram::new(1000);
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        let (p50, p90, p99) = h.percentiles();
+        assert!((p50 - 51.0).abs() <= 1.0);
+        assert!((p90 - 91.0).abs() <= 1.0);
+        assert!((p99 - 100.0).abs() <= 1.0);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+        assert_eq!(h.count.get(), 100);
+    }
+
+    #[test]
+    fn histogram_bounded_memory() {
+        let h = LatencyHistogram::new(16);
+        for i in 0..10_000 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.samples.lock().unwrap().len(), 16);
+        assert_eq!(h.count.get(), 10_000);
+    }
+}

@@ -1,0 +1,228 @@
+//! Numerical quadrature for the WLSH kernel profile (Def. 8):
+//!
+//!   k_1d(δ) = E_{w ~ p}[(f*f)(δ/w)] = ∫_0^∞ p(w) (f*f)(δ/w) dw
+//!
+//! with p = Gamma(shape, 1). Adaptive Simpson on a log-ish split of the
+//! positive axis; the autocorrelation (f*f) is an exact piecewise
+//! polynomial, so the only error is the quadrature's own.
+
+use crate::bucketfn::PiecewisePoly;
+
+/// Adaptive Simpson integration of `f` on [a, b].
+///
+/// The interval is first split into 32 uniform panels (a single Simpson
+/// estimate on a wide interval can read a sharply-peaked integrand as ≈0
+/// and accept it); each panel then adapts independently.
+pub fn adaptive_simpson<F: Fn(f64) -> f64>(f: &F, a: f64, b: f64, tol: f64) -> f64 {
+    const PANELS: usize = 32;
+    let h = (b - a) / PANELS as f64;
+    (0..PANELS)
+        .map(|i| {
+            let lo = a + i as f64 * h;
+            adaptive_simpson_raw(f, lo, lo + h, tol / PANELS as f64)
+        })
+        .sum()
+}
+
+fn adaptive_simpson_raw<F: Fn(f64) -> f64>(f: &F, a: f64, b: f64, tol: f64) -> f64 {
+    fn simpson<F: Fn(f64) -> f64>(f: &F, a: f64, b: f64) -> (f64, f64, f64, f64) {
+        let m = 0.5 * (a + b);
+        let fa = f(a);
+        let fm = f(m);
+        let fb = f(b);
+        ((b - a) / 6.0 * (fa + 4.0 * fm + fb), fa, fm, fb)
+    }
+    fn rec<F: Fn(f64) -> f64>(
+        f: &F,
+        a: f64,
+        b: f64,
+        fa: f64,
+        fm: f64,
+        fb: f64,
+        whole: f64,
+        tol: f64,
+        depth: usize,
+    ) -> f64 {
+        let m = 0.5 * (a + b);
+        let lm = 0.5 * (a + m);
+        let rm = 0.5 * (m + b);
+        let flm = f(lm);
+        let frm = f(rm);
+        let left = (m - a) / 6.0 * (fa + 4.0 * flm + fm);
+        let right = (b - m) / 6.0 * (fm + 4.0 * frm + fb);
+        let delta = left + right - whole;
+        if depth == 0 || delta.abs() <= 15.0 * tol {
+            left + right + delta / 15.0
+        } else {
+            rec(f, a, m, fa, flm, fm, left, tol * 0.5, depth - 1)
+                + rec(f, m, b, fm, frm, fb, right, tol * 0.5, depth - 1)
+        }
+    }
+    let (whole, fa, fm, fb) = simpson(f, a, b);
+    rec(f, a, b, fa, fm, fb, whole, tol, 24)
+}
+
+/// ln Γ(x) (Lanczos approximation, |err| < 2e-10 for x > 0).
+pub fn ln_gamma(x: f64) -> f64 {
+    const G: [f64; 6] = [
+        76.18009172947146,
+        -86.50532032941677,
+        24.01409824083091,
+        -1.231739572450155,
+        0.1208650973866179e-2,
+        -0.5395239384953e-5,
+    ];
+    let mut y = x;
+    let tmp = x + 5.5;
+    let tmp = tmp - (x + 0.5) * tmp.ln();
+    let mut ser = 1.000000000190015;
+    for g in G {
+        y += 1.0;
+        ser += g / y;
+    }
+    -tmp + (2.5066282746310005 * ser / x).ln()
+}
+
+/// Gamma(shape, 1) PDF.
+pub fn gamma_pdf(shape: f64, w: f64) -> f64 {
+    if w <= 0.0 {
+        return 0.0;
+    }
+    ((shape - 1.0) * w.ln() - w - ln_gamma(shape)).exp()
+}
+
+/// Tabulated 1-d WLSH kernel profile with linear interpolation — the fast
+/// evaluation path for exact-WLSH-kernel KRR (Table 1) and GP sampling.
+#[derive(Clone, Debug)]
+pub struct KernelProfile {
+    /// values[i] = k_1d(i * step), i in 0..len
+    values: Vec<f64>,
+    step: f64,
+    /// (f*f) support half-width × w upper cutoff ⇒ δ beyond which k ≈ tail
+    pub delta_max: f64,
+}
+
+impl KernelProfile {
+    /// Build the profile for bucket autocorrelation `ff` and Gamma(shape,1)
+    /// width law, tabulated on [0, delta_max] at `samples` points.
+    pub fn build(ff: &PiecewisePoly, shape: f64, delta_max: f64, samples: usize) -> Self {
+        let (_, sup_hi) = ff.support();
+        let step = delta_max / (samples - 1) as f64;
+        let values = (0..samples)
+            .map(|i| {
+                let delta = i as f64 * step;
+                if delta == 0.0 {
+                    // ∫ p(w) (f*f)(0) dw = (f*f)(0) = ||f||² = 1 for our f
+                    return ff.eval(0.0);
+                }
+                // (f*f)(δ/w) is nonzero only for w >= δ / sup_hi
+                let w_lo = delta / sup_hi;
+                let w_hi = (w_lo + 40.0 + 8.0 * shape).max(80.0);
+                adaptive_simpson(
+                    &|w: f64| gamma_pdf(shape, w) * ff.eval(delta / w),
+                    w_lo,
+                    w_hi,
+                    1e-11,
+                )
+            })
+            .collect();
+        KernelProfile { values, step, delta_max }
+    }
+
+    /// k_1d(|δ|) by linear interpolation (clamped to the table tail).
+    #[inline]
+    pub fn eval(&self, delta: f64) -> f64 {
+        let d = delta.abs();
+        let t = d / self.step;
+        let i = t as usize;
+        if i + 1 >= self.values.len() {
+            return *self.values.last().unwrap();
+        }
+        let frac = t - i as f64;
+        self.values[i] * (1.0 - frac) + self.values[i + 1] * frac
+    }
+
+    /// Product over coordinates: k(x - y) = ∏_l k_1d(x_l - y_l).
+    pub fn eval_vec(&self, x: &[f64], y: &[f64]) -> f64 {
+        x.iter()
+            .zip(y)
+            .map(|(a, b)| self.eval(a - b))
+            .product()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bucketfn::{rect_bucket, smooth_bucket};
+
+    #[test]
+    fn simpson_integrates_polynomial_exactly() {
+        // ∫_0^1 (3x² + 1) = 2
+        let v = adaptive_simpson(&|x| 3.0 * x * x + 1.0, 0.0, 1.0, 1e-12);
+        assert!((v - 2.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn simpson_handles_peaked_integrand() {
+        // ∫_0^10 e^{-x} = 1 - e^{-10}
+        let v = adaptive_simpson(&|x| (-x).exp(), 0.0, 10.0, 1e-12);
+        assert!((v - (1.0 - (-10.0f64).exp())).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ln_gamma_known_values() {
+        assert!((ln_gamma(1.0)).abs() < 1e-9);
+        assert!((ln_gamma(2.0)).abs() < 1e-9);
+        assert!((ln_gamma(5.0) - (24.0f64).ln()).abs() < 1e-9);
+        assert!((ln_gamma(7.0) - (720.0f64).ln()).abs() < 1e-8);
+    }
+
+    #[test]
+    fn gamma_pdf_normalizes() {
+        for shape in [2.0, 7.0] {
+            let v = adaptive_simpson(&|w| gamma_pdf(shape, w), 1e-12, 120.0, 1e-11);
+            assert!((v - 1.0).abs() < 1e-7, "shape {shape}: {v}");
+        }
+    }
+
+    #[test]
+    fn rect_gamma2_profile_is_laplace() {
+        // Rahimi-Recht: E_{w~Gamma(2,1)}[tri(δ/w)] = e^{-|δ|}
+        let ff = rect_bucket().autocorrelation();
+        let prof = KernelProfile::build(&ff, 2.0, 8.0, 2048);
+        for delta in [0.0, 0.1, 0.5, 1.0, 2.0, 4.0] {
+            let want = (-delta as f64).exp();
+            let got = prof.eval(delta);
+            assert!(
+                (got - want).abs() < 2e-4,
+                "delta {delta}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn smooth_profile_is_valid_kernel_shape() {
+        let ff = smooth_bucket(2).autocorrelation();
+        let prof = KernelProfile::build(&ff, 7.0, 10.0, 1024);
+        assert!((prof.eval(0.0) - 1.0).abs() < 1e-8);
+        // monotone decreasing and positive over the table
+        let mut prev = prof.eval(0.0);
+        for i in 1..100 {
+            let v = prof.eval(0.1 * i as f64);
+            assert!(v <= prev + 1e-9);
+            assert!(v >= -1e-12);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn eval_vec_is_product() {
+        let ff = rect_bucket().autocorrelation();
+        let prof = KernelProfile::build(&ff, 2.0, 8.0, 2048);
+        let x = [0.0, 0.0];
+        let y = [0.5, 0.25];
+        let want = prof.eval(0.5) * prof.eval(0.25);
+        assert!((prof.eval_vec(&x, &y) - want).abs() < 1e-12);
+    }
+}

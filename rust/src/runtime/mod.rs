@@ -1,0 +1,229 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them on the CPU PJRT client (once,
+//! cached), and exposes typed wrappers for each graph family with the
+//! padding/chunking contract of DESIGN.md §6.
+//!
+//! Python never runs here — this is the request path. Every wrapper has a
+//! native-Rust twin (lsh/sketch modules) and integration tests assert
+//! parity between the two backends.
+
+mod ops;
+
+pub use ops::XlaExactKernelOp;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// One artifact's signature from `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct EntryInfo {
+    pub file: String,
+    pub inputs: Vec<(Vec<usize>, String)>,
+    pub outputs: Vec<(Vec<usize>, String)>,
+}
+
+/// Parsed artifact manifest.
+#[derive(Debug, Default)]
+pub struct Manifest {
+    pub hash_chunk_n: usize,
+    pub hash_chunk_m: usize,
+    pub cross_chunk_q: usize,
+    pub rff_chunk_n: usize,
+    pub entries: HashMap<String, EntryInfo>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let mut m = Manifest {
+            hash_chunk_n: j.get("hash_chunk_n").and_then(Json::as_usize).unwrap_or(2048),
+            hash_chunk_m: j.get("hash_chunk_m").and_then(Json::as_usize).unwrap_or(64),
+            cross_chunk_q: j.get("cross_chunk_q").and_then(Json::as_usize).unwrap_or(1024),
+            rff_chunk_n: j.get("rff_chunk_n").and_then(Json::as_usize).unwrap_or(2048),
+            entries: HashMap::new(),
+        };
+        let shapes = |v: &Json, key: &str| -> Vec<(Vec<usize>, String)> {
+            v.get(key)
+                .and_then(Json::as_arr)
+                .map(|arr| {
+                    arr.iter()
+                        .map(|e| {
+                            let shape = e
+                                .get("shape")
+                                .and_then(Json::as_f64_vec)
+                                .unwrap_or_default()
+                                .into_iter()
+                                .map(|x| x as usize)
+                                .collect();
+                            let dtype = e
+                                .get("dtype")
+                                .and_then(Json::as_str)
+                                .unwrap_or("float32")
+                                .to_string();
+                            (shape, dtype)
+                        })
+                        .collect()
+                })
+                .unwrap_or_default()
+        };
+        for e in j.get("entries").and_then(Json::as_arr).unwrap_or(&[]) {
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("entry without name"))?
+                .to_string();
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("entry without file"))?
+                .to_string();
+            m.entries.insert(
+                name,
+                EntryInfo { file, inputs: shapes(e, "inputs"), outputs: shapes(e, "outputs") },
+            );
+        }
+        Ok(m)
+    }
+}
+
+/// The PJRT runtime: client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (reads `manifest.json`, starts PJRT).
+    pub fn open<P: AsRef<Path>>(dir: P) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let manifest = Manifest::parse(&text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, dir, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Default artifacts location: `$WLSH_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<Runtime> {
+        let dir = std::env::var("WLSH_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::open(dir)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.manifest.entries.contains_key(name)
+    }
+
+    /// All artifact names with a given prefix (shape discovery).
+    pub fn names_with_prefix(&self, prefix: &str) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .manifest
+            .entries
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// Compile-on-first-use executable lookup.
+    pub fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let info = self
+            .manifest
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact named {name:?}"))?;
+        let path = self.dir.join(&info.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let exe = Arc::new(exe);
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on literals; unwraps the 1-level output tuple
+    /// (aot.py lowers with `return_tuple=True`).
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+/// f32 literal with shape.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    lit.reshape(dims).map_err(|e| anyhow!("reshape f32 {dims:?}: {e:?}"))
+}
+
+/// i32 literal with shape.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    lit.reshape(dims).map_err(|e| anyhow!("reshape i32 {dims:?}: {e:?}"))
+}
+
+/// Pad a row-major (n×d) f32 buffer to (n_pad×d_pad) with zeros.
+pub fn pad_rows(x: &[f32], n: usize, d: usize, n_pad: usize, d_pad: usize) -> Vec<f32> {
+    assert!(n_pad >= n && d_pad >= d);
+    let mut out = vec![0.0f32; n_pad * d_pad];
+    for i in 0..n {
+        out[i * d_pad..i * d_pad + d].copy_from_slice(&x[i * d..(i + 1) * d]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(
+            r#"{"hash_chunk_n": 2048, "hash_chunk_m": 64, "cross_chunk_q": 1024,
+                "rff_chunk_n": 2048,
+                "entries": [{"name": "k", "file": "k.hlo.txt",
+                             "inputs": [{"shape": [2, 3], "dtype": "float32"}],
+                             "outputs": [{"shape": [2], "dtype": "int32"}]}]}"#,
+        )
+        .unwrap();
+        assert_eq!(m.hash_chunk_n, 2048);
+        let e = &m.entries["k"];
+        assert_eq!(e.file, "k.hlo.txt");
+        assert_eq!(e.inputs[0].0, vec![2, 3]);
+        assert_eq!(e.outputs[0].1, "int32");
+    }
+
+    #[test]
+    fn pad_rows_layout() {
+        let x = vec![1.0f32, 2.0, 3.0, 4.0];
+        let p = pad_rows(&x, 2, 2, 3, 4);
+        assert_eq!(p.len(), 12);
+        assert_eq!(&p[0..4], &[1.0, 2.0, 0.0, 0.0]);
+        assert_eq!(&p[4..8], &[3.0, 4.0, 0.0, 0.0]);
+        assert_eq!(&p[8..12], &[0.0; 4]);
+    }
+}

@@ -1,0 +1,114 @@
+//! Exact kernel operator — the paper's exact-KRR baselines (Table 1/2).
+//! O(n²d) mat-vec, never materializes K (blockwise row streaming).
+
+use super::KrrOperator;
+use crate::kernels::Kernel;
+
+/// Exact K(X, X) as a mat-vec operator.
+pub struct ExactKernelOp {
+    x: Vec<f32>,
+    n: usize,
+    d: usize,
+    pub kernel: Kernel,
+}
+
+impl ExactKernelOp {
+    pub fn new(x: &[f32], n: usize, d: usize, kernel: Kernel) -> ExactKernelOp {
+        assert_eq!(x.len(), n * d);
+        ExactKernelOp { x: x.to_vec(), n, d, kernel }
+    }
+
+    #[inline]
+    fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+}
+
+impl KrrOperator for ExactKernelOp {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn matvec(&self, beta: &[f64]) -> Vec<f64> {
+        assert_eq!(beta.len(), self.n);
+        // Symmetric: evaluate each pair once, scatter both contributions.
+        let mut y: Vec<f64> = beta.iter().map(|b| b * self.kernel.diag()).collect();
+        for i in 0..self.n {
+            let xi = self.row(i);
+            let mut acc = 0.0f64;
+            for j in 0..i {
+                let kij = self.kernel.eval_f32(xi, self.row(j));
+                acc += kij * beta[j];
+                y[j] += kij * beta[i];
+            }
+            y[i] += acc;
+        }
+        y
+    }
+
+    fn predict(&self, queries: &[f32], beta: &[f64]) -> Vec<f64> {
+        let q = queries.len() / self.d;
+        (0..q)
+            .map(|qi| {
+                let xq = &queries[qi * self.d..(qi + 1) * self.d];
+                (0..self.n)
+                    .map(|j| self.kernel.eval_f32(xq, self.row(j)) * beta[j])
+                    .sum()
+            })
+            .collect()
+    }
+
+    fn name(&self) -> String {
+        format!("exact({})", self.kernel.name())
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.x.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn matvec_matches_dense() {
+        let mut rng = Pcg64::new(1, 0);
+        let (n, d) = (20, 3);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        for kernel in [
+            Kernel::laplace(1.0),
+            Kernel::squared_exp(1.3),
+            Kernel::matern52(0.8),
+        ] {
+            let op = ExactKernelOp::new(&x, n, d, kernel.clone());
+            let beta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let y = op.matvec(&beta);
+            for i in 0..n {
+                let want: f64 = (0..n)
+                    .map(|j| kernel.eval_f32(&x[i * d..(i + 1) * d], &x[j * d..(j + 1) * d]) * beta[j])
+                    .sum();
+                assert!(
+                    (y[i] - want).abs() < 1e-10 * (1.0 + want.abs()),
+                    "{} row {i}",
+                    kernel.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn predict_on_train_is_matvec() {
+        let mut rng = Pcg64::new(2, 0);
+        let (n, d) = (15, 2);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let op = ExactKernelOp::new(&x, n, d, Kernel::matern52(1.0));
+        let beta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let y = op.matvec(&beta);
+        let p = op.predict(&x, &beta);
+        for i in 0..n {
+            assert!((y[i] - p[i]).abs() < 1e-9);
+        }
+    }
+}

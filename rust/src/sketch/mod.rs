@@ -1,0 +1,117 @@
+//! Kernel-matrix operators for KRR: the paper's WLSH sketch (§4), the RFF
+//! and Nyström baselines, and the exact kernel operator. All expose the
+//! same [`KrrOperator`] interface so the solver/trainer/benches are
+//! method-agnostic.
+
+mod exact;
+mod nystrom;
+mod rff;
+mod wlsh;
+
+pub use exact::ExactKernelOp;
+pub use nystrom::NystromSketch;
+pub use rff::RffSketch;
+pub use wlsh::{WlshPredictor, WlshSketch};
+
+/// β-dependent state precomputed once after the solve so that serving-time
+/// predictions avoid O(n)-cost recomputation per call: WLSH stores the
+/// per-instance bucket loads (paper §4.2), RFF the feature-space θ = Zᵀβ,
+/// Nyström the landmark core. Opaque container: each operator interprets
+/// its own slots.
+#[derive(Clone, Debug, Default)]
+pub struct PreparedState {
+    pub slots: Vec<Vec<f64>>,
+}
+
+/// An (approximate) kernel matrix K̃ plus its out-of-sample extension —
+/// everything KRR needs: products K̃β during CG, and k̃(q, X)β at predict
+/// time.
+pub trait KrrOperator: Send + Sync {
+    /// Number of training points (K̃ is n×n).
+    fn n(&self) -> usize;
+
+    /// y = K̃ β.
+    fn matvec(&self, beta: &[f64]) -> Vec<f64>;
+
+    /// η̃(q_i) = Σ_j k̃(q_i, x_j) β_j for each row of `queries` (row-major
+    /// q×d, same feature space as the training rows).
+    fn predict(&self, queries: &[f32], beta: &[f64]) -> Vec<f64>;
+
+    /// Precompute β-dependent serving state (default: none).
+    fn prepare(&self, _beta: &[f64]) -> PreparedState {
+        PreparedState::default()
+    }
+
+    /// Predict using prepared state (default: fall back to `predict`).
+    fn predict_prepared(
+        &self,
+        queries: &[f32],
+        beta: &[f64],
+        _state: &PreparedState,
+    ) -> Vec<f64> {
+        self.predict(queries, beta)
+    }
+
+    /// Human-readable method name for reports.
+    fn name(&self) -> String;
+
+    /// Approximate resident memory of the operator in bytes.
+    fn memory_bytes(&self) -> usize;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Kernel;
+    use crate::util::rng::Pcg64;
+
+    /// All operators must agree with a brute-force quadratic form on PSD-ness
+    /// and with their own predict on the training points (self-consistency).
+    fn check_operator(op: &dyn KrrOperator, x: &[f32], d: usize, tol: f64) {
+        let n = op.n();
+        let mut rng = Pcg64::new(99, 0);
+        // PSD quadratic form
+        for _ in 0..5 {
+            let beta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let y = op.matvec(&beta);
+            let q: f64 = beta.iter().zip(&y).map(|(a, b)| a * b).sum();
+            assert!(q >= -tol, "{}: quadratic form {q}", op.name());
+        }
+        // predict on training rows == matvec rows
+        let beta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let y = op.matvec(&beta);
+        let p = op.predict(x, &beta);
+        for i in 0..n {
+            assert!(
+                (y[i] - p[i]).abs() < tol * (1.0 + y[i].abs()),
+                "{}: row {i}: matvec {} vs predict {}",
+                op.name(),
+                y[i],
+                p[i]
+            );
+        }
+        let _ = d;
+    }
+
+    #[test]
+    fn operators_are_self_consistent() {
+        let mut rng = Pcg64::new(5, 0);
+        let (n, d) = (96, 4);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+
+        let wlsh = WlshSketch::build(&x, n, d, 16, "rect", 2.0, 1.0, 7);
+        check_operator(&wlsh, &x, d, 1e-6);
+
+        let wlsh_s = WlshSketch::build(&x, n, d, 16, "smooth2", 7.0, 1.0, 8);
+        check_operator(&wlsh_s, &x, d, 1e-5);
+
+        let rff = RffSketch::build(&x, n, d, 128, 1.0, 9);
+        check_operator(&rff, &x, d, 1e-5);
+
+        let exact = ExactKernelOp::new(&x, n, d, Kernel::laplace(1.0));
+        check_operator(&exact, &x, d, 1e-8);
+
+        let nys = NystromSketch::build(&x, n, d, 24, Kernel::squared_exp(1.0), 11);
+        check_operator(&nys, &x, d, 1e-6);
+    }
+}

@@ -1,0 +1,183 @@
+//! Nyström low-rank baseline (related work: Musco–Musco 2017, Rudi et al.
+//! 2015): K̃ = C W⁺ Cᵀ with C = K(X, L), W = K(L, L) for uniformly sampled
+//! landmarks L. Data-dependent, unlike WLSH/RFF — included as the ablation
+//! point the paper contrasts against in §1.1.
+
+use super::KrrOperator;
+use crate::kernels::Kernel;
+use crate::linalg::{CholeskyFactor, Matrix};
+use crate::util::rng::Pcg64;
+
+/// Nyström sketch with `k` uniformly-sampled landmarks.
+pub struct NystromSketch {
+    x: Vec<f32>,
+    n: usize,
+    d: usize,
+    kernel: Kernel,
+    /// Landmark rows (k×d).
+    landmarks: Vec<f32>,
+    k: usize,
+    /// Cholesky of W + jitter.
+    w_chol: CholeskyFactor,
+    /// n×k C = K(X, L), row-major.
+    c: Vec<f64>,
+}
+
+impl NystromSketch {
+    pub fn build(
+        x: &[f32],
+        n: usize,
+        d: usize,
+        k: usize,
+        kernel: Kernel,
+        seed: u64,
+    ) -> NystromSketch {
+        assert_eq!(x.len(), n * d);
+        assert!(k <= n && k > 0);
+        let mut rng = Pcg64::new(seed, 0);
+        // sample k distinct landmark indices (floyd's algorithm is overkill;
+        // partial fisher-yates)
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + rng.below((n - i) as u64) as usize;
+            idx.swap(i, j);
+        }
+        let mut landmarks = Vec::with_capacity(k * d);
+        for &i in idx.iter().take(k) {
+            landmarks.extend_from_slice(&x[i * d..(i + 1) * d]);
+        }
+        let mut w = Matrix::zeros(k, k);
+        for a in 0..k {
+            for b in 0..k {
+                w[(a, b)] = kernel.eval_f32(
+                    &landmarks[a * d..(a + 1) * d],
+                    &landmarks[b * d..(b + 1) * d],
+                );
+            }
+        }
+        let w_chol = CholeskyFactor::new(&w, 1e-8 * k as f64)
+            .expect("landmark kernel matrix not PD");
+        let mut c = vec![0.0f64; n * k];
+        for i in 0..n {
+            for a in 0..k {
+                c[i * k + a] = kernel.eval_f32(
+                    &x[i * d..(i + 1) * d],
+                    &landmarks[a * d..(a + 1) * d],
+                );
+            }
+        }
+        NystromSketch { x: x.to_vec(), n, d, kernel, landmarks, k, w_chol, c }
+    }
+
+    /// v = W⁻¹ Cᵀ β (the k-dim core of every product).
+    fn core(&self, beta: &[f64]) -> Vec<f64> {
+        let mut ct_beta = vec![0.0f64; self.k];
+        for i in 0..self.n {
+            let ci = &self.c[i * self.k..(i + 1) * self.k];
+            let bi = beta[i];
+            for (acc, cv) in ct_beta.iter_mut().zip(ci) {
+                *acc += bi * cv;
+            }
+        }
+        self.w_chol.solve(&ct_beta)
+    }
+}
+
+impl KrrOperator for NystromSketch {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn matvec(&self, beta: &[f64]) -> Vec<f64> {
+        assert_eq!(beta.len(), self.n);
+        let v = self.core(beta);
+        (0..self.n)
+            .map(|i| {
+                let ci = &self.c[i * self.k..(i + 1) * self.k];
+                ci.iter().zip(&v).map(|(a, b)| a * b).sum()
+            })
+            .collect()
+    }
+
+    fn prepare(&self, beta: &[f64]) -> super::PreparedState {
+        super::PreparedState { slots: vec![self.core(beta)] }
+    }
+
+    fn predict_prepared(
+        &self,
+        queries: &[f32],
+        _beta: &[f64],
+        state: &super::PreparedState,
+    ) -> Vec<f64> {
+        self.predict_core(&state.slots[0], queries)
+    }
+
+    fn predict(&self, queries: &[f32], beta: &[f64]) -> Vec<f64> {
+        let v = self.core(beta);
+        self.predict_core(&v, queries)
+    }
+
+    fn name(&self) -> String {
+        format!("nystrom({},k={})", self.kernel.name(), self.k)
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.x.len() * 4 + self.c.len() * 8 + self.landmarks.len() * 4
+    }
+}
+
+impl NystromSketch {
+    fn predict_core(&self, v: &[f64], queries: &[f32]) -> Vec<f64> {
+        let q = queries.len() / self.d;
+        (0..q)
+            .map(|qi| {
+                let xq = &queries[qi * self.d..(qi + 1) * self.d];
+                (0..self.k)
+                    .map(|a| {
+                        self.kernel.eval_f32(
+                            xq,
+                            &self.landmarks[a * self.d..(a + 1) * self.d],
+                        ) * v[a]
+                    })
+                    .sum()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_rank_nystrom_is_exact() {
+        // k = n with distinct landmarks ⇒ K̃ = K exactly.
+        let mut rng = Pcg64::new(1, 0);
+        let (n, d) = (12, 2);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let kern = Kernel::squared_exp(1.0);
+        let nys = NystromSketch::build(&x, n, d, n, kern.clone(), 2);
+        let beta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let y = nys.matvec(&beta);
+        for i in 0..n {
+            let want: f64 = (0..n)
+                .map(|j| kern.eval_f32(&x[i * d..(i + 1) * d], &x[j * d..(j + 1) * d]) * beta[j])
+                .sum();
+            assert!((y[i] - want).abs() < 1e-4 * (1.0 + want.abs()), "row {i}: {} vs {want}", y[i]);
+        }
+    }
+
+    #[test]
+    fn low_rank_is_psd() {
+        let mut rng = Pcg64::new(3, 0);
+        let (n, d, k) = (40, 3, 8);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let nys = NystromSketch::build(&x, n, d, k, Kernel::matern52(1.0), 4);
+        for _ in 0..5 {
+            let beta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let y = nys.matvec(&beta);
+            let q: f64 = beta.iter().zip(&y).map(|(a, b)| a * b).sum();
+            assert!(q >= -1e-8, "quadratic form {q}");
+        }
+    }
+}

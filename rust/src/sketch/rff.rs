@@ -1,0 +1,196 @@
+//! Random Fourier Features baseline (Rahimi–Recht 2007), as benchmarked in
+//! the paper's Table 2: K̃ = Z Zᵀ with Z = sqrt(2/D) cos(X Ω + b),
+//! Ω columns ~ N(0, 2γ I), estimating k(x,y) = exp(-γ‖x-y‖²).
+
+use super::KrrOperator;
+use crate::linalg::dot_f32;
+use crate::util::rng::Pcg64;
+
+/// RFF sketch of the squared-exponential kernel exp(-‖x-y‖²/s²).
+pub struct RffSketch {
+    /// n×D row-major feature matrix.
+    z: Vec<f32>,
+    /// d×D row-major frequency matrix.
+    omega: Vec<f32>,
+    /// D phase offsets.
+    b: Vec<f32>,
+    n: usize,
+    d: usize,
+    pub dd: usize,
+    feat_scale: f32,
+}
+
+impl RffSketch {
+    /// Featurize the training rows: D features for bandwidth `scale`
+    /// (γ = 1/scale²).
+    pub fn build(x: &[f32], n: usize, d: usize, dd: usize, scale: f64, seed: u64) -> RffSketch {
+        assert_eq!(x.len(), n * d);
+        let mut rng = Pcg64::new(seed, 0);
+        let gamma = 1.0 / (scale * scale);
+        let sd = (2.0 * gamma).sqrt();
+        let omega: Vec<f32> = (0..d * dd).map(|_| (rng.normal() * sd) as f32).collect();
+        let b: Vec<f32> = (0..dd)
+            .map(|_| rng.uniform_in(0.0, 2.0 * std::f64::consts::PI) as f32)
+            .collect();
+        let feat_scale = (2.0 / dd as f64).sqrt() as f32;
+        let mut sk = RffSketch { z: Vec::new(), omega, b, n, d, dd, feat_scale };
+        sk.z = sk.featurize(x);
+        sk
+    }
+
+    /// φ(rows) for row-major input (q×d) → q×D features.
+    pub fn featurize(&self, rows: &[f32]) -> Vec<f32> {
+        let q = rows.len() / self.d;
+        let mut out = vec![0.0f32; q * self.dd];
+        for i in 0..q {
+            let xi = &rows[i * self.d..(i + 1) * self.d];
+            let zi = &mut out[i * self.dd..(i + 1) * self.dd];
+            zi.copy_from_slice(&self.b);
+            // zi += xiᵀ Ω, streaming over the d rows of Ω (autovectorizes)
+            for (l, &xl) in xi.iter().enumerate() {
+                if xl == 0.0 {
+                    continue;
+                }
+                let orow = &self.omega[l * self.dd..(l + 1) * self.dd];
+                for (zv, ov) in zi.iter_mut().zip(orow) {
+                    *zv += xl * ov;
+                }
+            }
+            for zv in zi.iter_mut() {
+                *zv = self.feat_scale * zv.cos();
+            }
+        }
+        out
+    }
+
+    /// θ = Zᵀ β (feature-space coefficients; predict is φ(q)ᵀθ).
+    pub fn theta(&self, beta: &[f64]) -> Vec<f64> {
+        let mut theta = vec![0.0f64; self.dd];
+        for i in 0..self.n {
+            let zi = &self.z[i * self.dd..(i + 1) * self.dd];
+            let bi = beta[i];
+            if bi == 0.0 {
+                continue;
+            }
+            for (t, zv) in theta.iter_mut().zip(zi) {
+                *t += bi * *zv as f64;
+            }
+        }
+        theta
+    }
+}
+
+impl KrrOperator for RffSketch {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn matvec(&self, beta: &[f64]) -> Vec<f64> {
+        assert_eq!(beta.len(), self.n);
+        let theta = self.theta(beta);
+        let theta32: Vec<f32> = theta.iter().map(|&t| t as f32).collect();
+        (0..self.n)
+            .map(|i| dot_f32(&self.z[i * self.dd..(i + 1) * self.dd], &theta32))
+            .collect()
+    }
+
+    fn predict(&self, queries: &[f32], beta: &[f64]) -> Vec<f64> {
+        let state = self.prepare(beta);
+        self.predict_prepared(queries, beta, &state)
+    }
+
+    fn prepare(&self, beta: &[f64]) -> super::PreparedState {
+        super::PreparedState { slots: vec![self.theta(beta)] }
+    }
+
+    fn predict_prepared(
+        &self,
+        queries: &[f32],
+        _beta: &[f64],
+        state: &super::PreparedState,
+    ) -> Vec<f64> {
+        let theta32: Vec<f32> = state.slots[0].iter().map(|&t| t as f32).collect();
+        let zq = self.featurize(queries);
+        let q = queries.len() / self.d;
+        (0..q)
+            .map(|i| dot_f32(&zq[i * self.dd..(i + 1) * self.dd], &theta32))
+            .collect()
+    }
+
+    fn name(&self) -> String {
+        format!("rff(D={})", self.dd)
+    }
+
+    fn memory_bytes(&self) -> usize {
+        (self.z.len() + self.omega.len() + self.b.len()) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Kernel;
+
+    #[test]
+    fn features_are_bounded() {
+        let mut rng = Pcg64::new(1, 0);
+        let (n, d, dd) = (20, 3, 64);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let sk = RffSketch::build(&x, n, d, dd, 1.0, 2);
+        let bound = (2.0 / dd as f64).sqrt() as f32 + 1e-6;
+        assert!(sk.z.iter().all(|&v| v.abs() <= bound));
+    }
+
+    #[test]
+    fn inner_products_approximate_se_kernel() {
+        let mut rng = Pcg64::new(3, 0);
+        let (n, d, dd) = (30, 4, 16384);
+        let x: Vec<f32> = (0..n * d).map(|_| (rng.normal() * 0.5) as f32).collect();
+        let sk = RffSketch::build(&x, n, d, dd, 1.0, 4);
+        let kern = Kernel::squared_exp(1.0);
+        for i in 0..5 {
+            for j in 0..5 {
+                let zi = &sk.z[i * dd..(i + 1) * dd];
+                let zj = &sk.z[j * dd..(j + 1) * dd];
+                let k_hat = dot_f32(zi, zj);
+                let k_true = kern.eval_f32(&x[i * d..(i + 1) * d], &x[j * d..(j + 1) * d]);
+                assert!(
+                    (k_hat - k_true).abs() < 0.04,
+                    "pair ({i},{j}): {k_hat} vs {k_true}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_equals_z_zt_beta() {
+        let mut rng = Pcg64::new(5, 0);
+        let (n, d, dd) = (16, 2, 32);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let sk = RffSketch::build(&x, n, d, dd, 1.0, 6);
+        let beta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let y = sk.matvec(&beta);
+        for i in 0..n {
+            let mut want = 0.0f64;
+            for j in 0..n {
+                let kij = dot_f32(&sk.z[i * dd..(i + 1) * dd], &sk.z[j * dd..(j + 1) * dd]);
+                want += kij * beta[j];
+            }
+            assert!((y[i] - want).abs() < 1e-4 * (1.0 + want.abs()), "row {i}");
+        }
+    }
+
+    #[test]
+    fn predict_on_train_matches_matvec() {
+        let mut rng = Pcg64::new(7, 0);
+        let (n, d, dd) = (24, 3, 64);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let sk = RffSketch::build(&x, n, d, dd, 1.3, 8);
+        let beta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let y = sk.matvec(&beta);
+        let p = sk.predict(&x, &beta);
+        for i in 0..n {
+            assert!((y[i] - p[i]).abs() < 1e-5 * (1.0 + y[i].abs()));
+        }
+    }
+}

@@ -1,0 +1,397 @@
+//! The WLSH estimator sketch — the paper's core contribution.
+//!
+//! K̃ = (1/m) Σ_s D_s a_s a_sᵀ D_s where instance s hashes every point into
+//! a bucket (Def. 5), D_s holds the f^{⊗d} weights (Def. 6), and a_s is the
+//! bucket indicator. Lemma 27: O(dn) preprocessing, O(n) memory, O(n)
+//! mat-vec per instance via bucket loads:
+//!
+//!   B_j(β) = Σ_{i: h(x_i)=j} w_i β_i,      (K̃β)_i = w_i · B_{h(x_i)}(β).
+
+use super::KrrOperator;
+use crate::lsh::{BucketTable, IdMode, LshFamily, LshFunction};
+use crate::util::rng::Pcg64;
+
+/// One hashed instance: the function, its dense bucket table, and weights.
+pub struct WlshInstance {
+    pub func: LshFunction,
+    pub table: BucketTable,
+    pub weights: Vec<f32>,
+}
+
+/// The averaged m-instance WLSH sketch of the training set.
+pub struct WlshSketch {
+    pub instances: Vec<WlshInstance>,
+    pub family: LshFamily,
+    pub mode: IdMode,
+    /// Training rows scaled by 1/scale (hash space).
+    x_scaled: Vec<f32>,
+    n: usize,
+    /// Kernel bandwidth: data is divided by `scale` before hashing, so the
+    /// sketch estimates k_{f,p}((x-y)/scale).
+    pub scale: f64,
+}
+
+impl WlshSketch {
+    /// Hash all n training rows under m fresh LSH instances.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build(
+        x: &[f32],
+        n: usize,
+        d: usize,
+        m: usize,
+        bucket: &str,
+        gamma_shape: f64,
+        scale: f64,
+        seed: u64,
+    ) -> WlshSketch {
+        Self::build_mode(x, n, d, m, bucket, gamma_shape, scale, seed, IdMode::U64)
+    }
+
+    /// As [`build`], selecting the id-collapse mode (I32 = HLO-compatible).
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_mode(
+        x: &[f32],
+        n: usize,
+        d: usize,
+        m: usize,
+        bucket: &str,
+        gamma_shape: f64,
+        scale: f64,
+        seed: u64,
+        mode: IdMode,
+    ) -> WlshSketch {
+        assert_eq!(x.len(), n * d);
+        let mut rng = Pcg64::new(seed, 0);
+        let family = LshFamily::new(d, gamma_shape, bucket, &mut rng);
+        let inv = (1.0 / scale) as f32;
+        let x_scaled: Vec<f32> = x.iter().map(|&v| v * inv).collect();
+        let instances = (0..m)
+            .map(|s| {
+                let mut irng = rng.fork(s as u64);
+                Self::build_instance(&x_scaled, &family, mode, &mut irng)
+            })
+            .collect();
+        WlshSketch { instances, family, mode, x_scaled, n, scale }
+    }
+
+    /// Assemble a sketch from externally-built parts (the trainer's sharded
+    /// build and the XLA-backend build path).
+    pub fn from_parts(
+        instances: Vec<WlshInstance>,
+        family: LshFamily,
+        mode: IdMode,
+        x_scaled: Vec<f32>,
+        n: usize,
+        scale: f64,
+    ) -> WlshSketch {
+        assert!(instances.iter().all(|i| i.weights.len() == n));
+        WlshSketch { instances, family, mode, x_scaled, n, scale }
+    }
+
+    /// Hash + renumber one instance (used by the trainer's worker shards).
+    pub fn build_instance(
+        x_scaled: &[f32],
+        family: &LshFamily,
+        mode: IdMode,
+        rng: &mut Pcg64,
+    ) -> WlshInstance {
+        let func = family.sample(rng);
+        let mut ids = Vec::new();
+        let mut weights = Vec::new();
+        func.hash_batch(x_scaled, family, mode, &mut ids, &mut weights);
+        let table = BucketTable::build(&ids);
+        WlshInstance { func, table, weights }
+    }
+
+    pub fn m(&self) -> usize {
+        self.instances.len()
+    }
+
+    /// Per-instance bucket loads for a coefficient vector (paper §4).
+    fn loads(&self, inst: &WlshInstance, beta: &[f64]) -> Vec<f64> {
+        let mut loads = vec![0.0f64; inst.table.n_buckets];
+        for i in 0..self.n {
+            loads[inst.table.bucket_of[i] as usize] +=
+                inst.weights[i] as f64 * beta[i];
+        }
+        loads
+    }
+
+    /// Freeze the sketch + solved β into an O(m·d)-per-query predictor.
+    pub fn predictor(&self, beta: &[f64]) -> WlshPredictor<'_> {
+        let loads = self
+            .instances
+            .iter()
+            .map(|inst| self.loads(inst, beta))
+            .collect();
+        WlshPredictor { sketch: self, loads }
+    }
+
+    /// Mean bucket count across instances (rank(K̃) proxy, Lemma 30's
+    /// footnote: non-empty buckets grow sublinearly in n).
+    pub fn mean_buckets(&self) -> f64 {
+        self.instances
+            .iter()
+            .map(|i| i.table.n_buckets as f64)
+            .sum::<f64>()
+            / self.m() as f64
+    }
+}
+
+impl KrrOperator for WlshSketch {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn matvec(&self, beta: &[f64]) -> Vec<f64> {
+        assert_eq!(beta.len(), self.n);
+        let mut out = vec![0.0f64; self.n];
+        for inst in &self.instances {
+            let loads = self.loads(inst, beta);
+            let bucket_of = &inst.table.bucket_of;
+            let weights = &inst.weights;
+            for i in 0..self.n {
+                out[i] += weights[i] as f64 * loads[bucket_of[i] as usize];
+            }
+        }
+        let inv_m = 1.0 / self.m() as f64;
+        for v in out.iter_mut() {
+            *v *= inv_m;
+        }
+        out
+    }
+
+    fn predict(&self, queries: &[f32], beta: &[f64]) -> Vec<f64> {
+        self.predictor(beta).predict(queries)
+    }
+
+    fn prepare(&self, beta: &[f64]) -> super::PreparedState {
+        super::PreparedState {
+            slots: self.instances.iter().map(|i| self.loads(i, beta)).collect(),
+        }
+    }
+
+    fn predict_prepared(
+        &self,
+        queries: &[f32],
+        _beta: &[f64],
+        state: &super::PreparedState,
+    ) -> Vec<f64> {
+        self.predict_with_loads(&state.slots, queries)
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "wlsh(f={},shape={},m={})",
+            self.family.bucket_name,
+            self.family.gamma_shape,
+            self.m()
+        )
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.x_scaled.len() * 4
+            + self
+                .instances
+                .iter()
+                .map(|i| i.table.memory_bytes() + i.weights.len() * 4)
+                .sum::<usize>()
+    }
+}
+
+/// Serving-time predictor: per-instance bucket loads are precomputed from
+/// the solved β, so a query costs O(m·d) — hash, lookup, multiply.
+pub struct WlshPredictor<'a> {
+    sketch: &'a WlshSketch,
+    loads: Vec<Vec<f64>>,
+}
+
+impl WlshPredictor<'_> {
+    /// η̃(q) for each row of `queries` (unscaled feature space).
+    pub fn predict(&self, queries: &[f32]) -> Vec<f64> {
+        self.sketch.predict_with_loads(&self.loads, queries)
+    }
+}
+
+impl WlshSketch {
+    /// Shared predict kernel: hash each query, look its bucket up in every
+    /// instance, combine the precomputed loads (paper §4.2's η̃(x)).
+    fn predict_with_loads(&self, loads: &[Vec<f64>], queries: &[f32]) -> Vec<f64> {
+        let d = self.family.d;
+        let nq = queries.len() / d;
+        let inv = (1.0 / self.scale) as f32;
+        let inv_m = 1.0 / self.m() as f64;
+        let mut out = vec![0.0f64; nq];
+        let mut q_scaled = vec![0.0f32; d];
+        for (qi, o) in out.iter_mut().enumerate() {
+            let q = &queries[qi * d..(qi + 1) * d];
+            for (dst, src) in q_scaled.iter_mut().zip(q) {
+                *dst = *src * inv;
+            }
+            let mut acc = 0.0f64;
+            for (inst, loads_s) in self.instances.iter().zip(loads) {
+                let (id, w) = inst.func.hash_point(&q_scaled, &self.family, self.mode);
+                if let Some(b) = inst.table.lookup(id) {
+                    acc += w as f64 * loads_s[b as usize];
+                }
+            }
+            *o = acc * inv_m;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Kernel;
+    use crate::util::prop::{gens, prop_check};
+
+    fn random_x(seed: u64, n: usize, d: usize) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed, 0);
+        (0..n * d).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// Materialize K̃ from mat-vecs against basis vectors.
+    fn materialize(op: &dyn KrrOperator) -> Vec<Vec<f64>> {
+        let n = op.n();
+        (0..n)
+            .map(|j| {
+                let mut e = vec![0.0; n];
+                e[j] = 1.0;
+                op.matvec(&e)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matvec_matches_materialized_definition() {
+        // Def. 6 brute force: K̃_ij = (1/m) Σ_s w_i w_j [h_s(x_i) = h_s(x_j)]
+        let (n, d, m) = (40, 3, 5);
+        let x = random_x(1, n, d);
+        let sk = WlshSketch::build(&x, n, d, m, "smooth2", 7.0, 1.0, 2);
+        let k = materialize(&sk);
+        // brute force from the instances themselves
+        for i in 0..n {
+            for j in 0..n {
+                let mut want = 0.0;
+                for inst in &sk.instances {
+                    if inst.table.bucket_of[i] == inst.table.bucket_of[j] {
+                        want += inst.weights[i] as f64 * inst.weights[j] as f64;
+                    }
+                }
+                want /= m as f64;
+                assert!(
+                    (k[j][i] - want).abs() < 1e-9,
+                    "K[{i}][{j}] {} vs {want}",
+                    k[j][i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sketch_is_symmetric_psd() {
+        let (n, d, m) = (32, 4, 8);
+        let x = random_x(3, n, d);
+        let sk = WlshSketch::build(&x, n, d, m, "rect", 2.0, 1.0, 4);
+        let k = materialize(&sk);
+        for i in 0..n {
+            for j in 0..n {
+                assert!((k[i][j] - k[j][i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn unbiasedness_monte_carlo() {
+        // E[K̃_ij] = k_{f,p}(x_i - x_j): average many independent sketches.
+        let d = 2;
+        let x: Vec<f32> = vec![0.0, 0.0, 0.4, -0.3];
+        let kern = Kernel::wlsh("rect", 2.0, 1.0);
+        let want = kern.eval_f32(&x[0..2], &x[2..4]);
+        let trials = 400;
+        let mut acc = 0.0;
+        let mut acc2 = 0.0;
+        for t in 0..trials {
+            let sk = WlshSketch::build(&x, 2, d, 8, "rect", 2.0, 1.0, 1000 + t);
+            let y = sk.matvec(&[0.0, 1.0]); // column j=1
+            acc += y[0];
+            acc2 += y[0] * y[0];
+        }
+        let mean = acc / trials as f64;
+        let se = ((acc2 / trials as f64 - mean * mean) / trials as f64).sqrt();
+        assert!(
+            (mean - want).abs() < 4.0 * se + 5e-3,
+            "mean {mean} vs {want} (se {se})"
+        );
+    }
+
+    #[test]
+    fn predictor_matches_trait_predict() {
+        let (n, d, m) = (64, 5, 10);
+        let x = random_x(5, n, d);
+        let sk = WlshSketch::build(&x, n, d, m, "smooth2", 7.0, 1.5, 6);
+        let mut rng = Pcg64::new(7, 0);
+        let beta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let q = random_x(8, 10, d);
+        let a = sk.predict(&q, &beta);
+        let b = sk.predictor(&beta).predict(&q);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn predict_far_query_is_zero() {
+        let (n, d) = (16, 2);
+        let x = random_x(9, n, d);
+        let sk = WlshSketch::build(&x, n, d, 6, "rect", 2.0, 1.0, 10);
+        let beta = vec![1.0; n];
+        // a query 1e6 away shares no bucket with any training point
+        let q = vec![1e6f32, -1e6];
+        let y = sk.predict(&q, &beta);
+        assert_eq!(y[0], 0.0);
+    }
+
+    #[test]
+    fn scale_changes_effective_kernel() {
+        // wider scale ⇒ more collisions ⇒ larger quadratic form
+        let (n, d) = (64, 3);
+        let x = random_x(11, n, d);
+        let beta = vec![1.0; n];
+        let narrow = WlshSketch::build(&x, n, d, 32, "rect", 2.0, 0.25, 12);
+        let wide = WlshSketch::build(&x, n, d, 32, "rect", 2.0, 4.0, 12);
+        let qn: f64 = narrow.matvec(&beta).iter().sum();
+        let qw: f64 = wide.matvec(&beta).iter().sum();
+        assert!(qw > qn, "wide {qw} <= narrow {qn}");
+    }
+
+    #[test]
+    fn prop_matvec_linear() {
+        // K̃(aα + bβ) = a K̃α + b K̃β
+        prop_check(13, 10, |r| {
+            let n = gens::size(r, 8, 40);
+            let d = gens::size(r, 1, 5);
+            let x = gens::vec_normal_f32(r, n * d);
+            let alpha = gens::vec_f64(r, n, -2.0, 2.0);
+            let beta = gens::vec_f64(r, n, -2.0, 2.0);
+            (n, d, x, alpha, beta)
+        }, |(n, d, x, alpha, beta)| {
+            let sk = WlshSketch::build(x, *n, *d, 4, "smooth2", 7.0, 1.0, 21);
+            let mixed: Vec<f64> = alpha
+                .iter()
+                .zip(beta)
+                .map(|(a, b)| 2.0 * a - 0.5 * b)
+                .collect();
+            let lhs = sk.matvec(&mixed);
+            let ya = sk.matvec(alpha);
+            let yb = sk.matvec(beta);
+            for i in 0..*n {
+                let want = 2.0 * ya[i] - 0.5 * yb[i];
+                if (lhs[i] - want).abs() > 1e-8 * (1.0 + want.abs()) {
+                    return Err(format!("row {i}: {} vs {want}", lhs[i]));
+                }
+            }
+            Ok(())
+        });
+    }
+}

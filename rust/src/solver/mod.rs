@@ -1,0 +1,297 @@
+//! KRR solvers: conjugate gradients on (K̃ + λI)β = y (the paper's method,
+//! footnote 2) plus a dense direct solve for small n / ground-truthing.
+
+use crate::linalg::{axpy, dot, norm2, CholeskyFactor, Matrix};
+use crate::sketch::KrrOperator;
+
+/// CG configuration.
+#[derive(Clone, Debug)]
+pub struct CgOptions {
+    pub max_iters: usize,
+    /// Relative residual target ‖r‖/‖y‖.
+    pub tol: f64,
+    /// Optional per-iteration callback (iter, rel_residual).
+    pub verbose: bool,
+}
+
+impl Default for CgOptions {
+    fn default() -> Self {
+        CgOptions { max_iters: 200, tol: 1e-5, verbose: false }
+    }
+}
+
+/// CG solve result.
+#[derive(Clone, Debug)]
+pub struct CgResult {
+    pub beta: Vec<f64>,
+    pub iters: usize,
+    pub rel_residual: f64,
+    pub converged: bool,
+    /// Relative residual after each iteration (convergence curve).
+    pub history: Vec<f64>,
+}
+
+/// Solve (K̃ + λI) β = y by conjugate gradients; K̃ is PSD by Claim 10, so
+/// the shifted system is SPD and CG applies.
+pub fn solve_krr(op: &dyn KrrOperator, y: &[f64], lambda: f64, opts: &CgOptions) -> CgResult {
+    let n = op.n();
+    assert_eq!(y.len(), n);
+    let apply = |v: &[f64]| -> Vec<f64> {
+        let mut out = op.matvec(v);
+        axpy(lambda, v, &mut out);
+        out
+    };
+    let y_norm = norm2(y).max(1e-300);
+    let mut beta = vec![0.0f64; n];
+    let mut r = y.to_vec();
+    let mut p = r.clone();
+    let mut rs_old = dot(&r, &r);
+    let mut history = Vec::new();
+    let mut iters = 0;
+    let mut rel = rs_old.sqrt() / y_norm;
+    while iters < opts.max_iters && rel > opts.tol {
+        let ap = apply(&p);
+        let p_ap = dot(&p, &ap);
+        if p_ap <= 0.0 {
+            // numerically lost positive-definiteness; stop with best iterate
+            break;
+        }
+        let alpha = rs_old / p_ap;
+        axpy(alpha, &p, &mut beta);
+        axpy(-alpha, &ap, &mut r);
+        let rs_new = dot(&r, &r);
+        rel = rs_new.sqrt() / y_norm;
+        history.push(rel);
+        if opts.verbose {
+            eprintln!("  cg iter {:>4}  rel_res {rel:.3e}", iters + 1);
+        }
+        let ratio = rs_new / rs_old;
+        for (pv, rv) in p.iter_mut().zip(&r) {
+            *pv = rv + ratio * *pv;
+        }
+        rs_old = rs_new;
+        iters += 1;
+    }
+    CgResult { beta, iters, rel_residual: rel, converged: rel <= opts.tol, history }
+}
+
+/// Preconditioned CG: solve (K + λI)β = y using the WLSH sketch as the
+/// preconditioner — the paper's headline *algorithmic implication* of the
+/// OSE property (§1: "K̃+λI can be used as an effective preconditioner").
+///
+/// The preconditioner application M⁻¹r = (K̃+λI)⁻¹r is itself computed by
+/// an inner CG on the sketch (O(n·m) per inner iteration, so the
+/// preconditioner is cheap relative to the exact O(n²·d) outer mat-vec).
+/// By Thm 11, with m = Õ(n/λ) the preconditioned system has condition
+/// number (1+ε)/(1-ε) ⇒ outer CG converges in O(log 1/tol) iterations.
+pub fn solve_krr_preconditioned(
+    op: &dyn KrrOperator,
+    precond: &dyn KrrOperator,
+    y: &[f64],
+    lambda: f64,
+    opts: &CgOptions,
+    inner_iters: usize,
+) -> CgResult {
+    let n = op.n();
+    assert_eq!(precond.n(), n);
+    assert_eq!(y.len(), n);
+    let apply = |v: &[f64]| -> Vec<f64> {
+        let mut out = op.matvec(v);
+        axpy(lambda, v, &mut out);
+        out
+    };
+    // inner solve (K̃+λI) z = r by fixed-iteration CG
+    let apply_m = |r: &[f64]| -> Vec<f64> {
+        let mut z = vec![0.0f64; n];
+        let mut rr = r.to_vec();
+        let mut p = rr.clone();
+        let mut rs = dot(&rr, &rr);
+        for _ in 0..inner_iters {
+            if rs.sqrt() < 1e-14 {
+                break;
+            }
+            let mut ap = precond.matvec(&p);
+            axpy(lambda, &p, &mut ap);
+            let denom = dot(&p, &ap);
+            if denom <= 0.0 {
+                break;
+            }
+            let alpha = rs / denom;
+            axpy(alpha, &p, &mut z);
+            axpy(-alpha, &ap, &mut rr);
+            let rs2 = dot(&rr, &rr);
+            let ratio = rs2 / rs;
+            for (pv, rv) in p.iter_mut().zip(&rr) {
+                *pv = rv + ratio * *pv;
+            }
+            rs = rs2;
+        }
+        z
+    };
+    let y_norm = norm2(y).max(1e-300);
+    let mut beta = vec![0.0f64; n];
+    let mut r = y.to_vec();
+    let mut z = apply_m(&r);
+    let mut p = z.clone();
+    let mut rz = dot(&r, &z);
+    let mut history = Vec::new();
+    let mut iters = 0;
+    let mut rel = norm2(&r) / y_norm;
+    while iters < opts.max_iters && rel > opts.tol {
+        let ap = apply(&p);
+        let denom = dot(&p, &ap);
+        if denom <= 0.0 {
+            break;
+        }
+        let alpha = rz / denom;
+        axpy(alpha, &p, &mut beta);
+        axpy(-alpha, &ap, &mut r);
+        rel = norm2(&r) / y_norm;
+        history.push(rel);
+        if opts.verbose {
+            eprintln!("  pcg iter {:>4}  rel_res {rel:.3e}", iters + 1);
+        }
+        z = apply_m(&r);
+        let rz_new = dot(&r, &z);
+        let ratio = rz_new / rz;
+        for (pv, zv) in p.iter_mut().zip(&z) {
+            *pv = zv + ratio * *pv;
+        }
+        rz = rz_new;
+        iters += 1;
+    }
+    CgResult { beta, iters, rel_residual: rel, converged: rel <= opts.tol, history }
+}
+
+/// Dense direct KRR solve (Cholesky of K + λI) — ground truth for tests
+/// and the small-n fast path.
+pub fn solve_krr_direct(k: &Matrix, y: &[f64], lambda: f64) -> Result<Vec<f64>, String> {
+    let mut a = k.clone();
+    a.add_diag(lambda);
+    let ch = CholeskyFactor::new(&a, 0.0)?;
+    Ok(ch.solve(y))
+}
+
+/// Materialize K̃ from an operator (test helper; O(n²) memory).
+pub fn materialize(op: &dyn KrrOperator) -> Matrix {
+    let n = op.n();
+    let mut k = Matrix::zeros(n, n);
+    for j in 0..n {
+        let mut e = vec![0.0; n];
+        e[j] = 1.0;
+        let col = op.matvec(&e);
+        for i in 0..n {
+            k[(i, j)] = col[i];
+        }
+    }
+    k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Kernel;
+    use crate::sketch::ExactKernelOp;
+    use crate::util::rng::Pcg64;
+
+    fn toy_problem(n: usize, d: usize, seed: u64) -> (Vec<f32>, Vec<f64>) {
+        let mut rng = Pcg64::new(seed, 0);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn cg_matches_direct_solve() {
+        let (n, d) = (50, 3);
+        let (x, y) = toy_problem(n, d, 1);
+        let op = ExactKernelOp::new(&x, n, d, Kernel::squared_exp(1.0));
+        let lambda = 0.1;
+        let cg = solve_krr(&op, &y, lambda, &CgOptions { max_iters: 500, tol: 1e-12, verbose: false });
+        let k = materialize(&op);
+        let direct = solve_krr_direct(&k, &y, lambda).unwrap();
+        for i in 0..n {
+            assert!(
+                (cg.beta[i] - direct[i]).abs() < 1e-7 * (1.0 + direct[i].abs()),
+                "i={i}: {} vs {}",
+                cg.beta[i],
+                direct[i]
+            );
+        }
+        assert!(cg.converged);
+    }
+
+    #[test]
+    fn residual_decreases_monotonically_enough() {
+        let (n, d) = (64, 4);
+        let (x, y) = toy_problem(n, d, 2);
+        let op = ExactKernelOp::new(&x, n, d, Kernel::laplace(1.0));
+        let cg = solve_krr(&op, &y, 0.5, &CgOptions::default());
+        assert!(cg.history.len() >= 2);
+        // CG residuals are not strictly monotone, but the last must be the
+        // smallest up to small slack
+        let last = *cg.history.last().unwrap();
+        let min = cg.history.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(last <= 10.0 * min);
+    }
+
+    #[test]
+    fn lambda_controls_shrinkage() {
+        let (n, d) = (40, 2);
+        let (x, y) = toy_problem(n, d, 3);
+        let op = ExactKernelOp::new(&x, n, d, Kernel::squared_exp(1.0));
+        let small = solve_krr(&op, &y, 1e-3, &CgOptions::default());
+        let large = solve_krr(&op, &y, 100.0, &CgOptions::default());
+        let ns: f64 = norm2(&small.beta);
+        let nl: f64 = norm2(&large.beta);
+        assert!(nl < ns, "large-λ norm {nl} should shrink below {ns}");
+    }
+
+    #[test]
+    fn preconditioned_cg_matches_plain_cg_solution() {
+        let (n, d) = (60, 3);
+        let (x, y) = toy_problem(n, d, 5);
+        let op = ExactKernelOp::new(&x, n, d, Kernel::laplace(1.0));
+        let lambda = 0.05;
+        let opts = CgOptions { max_iters: 400, tol: 1e-10, verbose: false };
+        let plain = solve_krr(&op, &y, lambda, &opts);
+        let sketch = crate::sketch::WlshSketch::build(&x, n, d, 256, "rect", 2.0, 1.0, 9);
+        let pcg = solve_krr_preconditioned(&op, &sketch, &y, lambda, &opts, 30);
+        for i in 0..n {
+            assert!(
+                (plain.beta[i] - pcg.beta[i]).abs() < 1e-6 * (1.0 + plain.beta[i].abs()),
+                "i={i}"
+            );
+        }
+    }
+
+    #[test]
+    fn preconditioning_reduces_iterations_on_illconditioned_system() {
+        // small λ ⇒ ill-conditioned (K+λI); a good sketch preconditioner
+        // must cut the outer iteration count.
+        let (n, d) = (150, 2);
+        let (x, y) = toy_problem(n, d, 6);
+        let op = ExactKernelOp::new(&x, n, d, Kernel::laplace(0.3));
+        let lambda = 1e-3;
+        let opts = CgOptions { max_iters: 500, tol: 1e-8, verbose: false };
+        let plain = solve_krr(&op, &y, lambda, &opts);
+        let sketch = crate::sketch::WlshSketch::build(&x, n, d, 2048, "rect", 2.0, 0.3, 11);
+        let pcg = solve_krr_preconditioned(&op, &sketch, &y, lambda, &opts, 60);
+        assert!(
+            pcg.iters * 2 <= plain.iters,
+            "pcg {} iters vs plain {} — preconditioner ineffective",
+            pcg.iters,
+            plain.iters
+        );
+    }
+
+    #[test]
+    fn zero_rhs_gives_zero() {
+        let (n, d) = (10, 2);
+        let (x, _) = toy_problem(n, d, 4);
+        let op = ExactKernelOp::new(&x, n, d, Kernel::matern52(1.0));
+        let cg = solve_krr(&op, &vec![0.0; n], 1.0, &CgOptions::default());
+        assert!(cg.beta.iter().all(|&b| b == 0.0));
+        assert_eq!(cg.iters, 0);
+    }
+}

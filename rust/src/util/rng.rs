@@ -1,0 +1,261 @@
+//! Deterministic PRNG + distributions (the `rand` crate is unavailable
+//! offline; this is a self-contained substrate).
+//!
+//! Generator: PCG XSL-RR 128/64 (O'Neill 2014) — 128-bit LCG state, 64-bit
+//! output, passes BigCrush, trivially seedable/forkable for per-worker
+//! streams. Distributions: uniform, Box–Muller normal, Marsaglia–Tsang
+//! gamma (the paper samples LSH grid widths w ~ Gamma(k, 1): k=2 for the
+//! Laplace/rect configuration, k=7 for the smooth Table-1 kernel),
+//! exponential and Cauchy (spectral sampling of Laplace-kernel GPs).
+
+const PCG_MULT: u128 = 0x2360ed051fc65da44385df649fccf645;
+
+/// PCG XSL-RR 128/64 pseudo-random generator.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+    spare_normal: Option<f64>,
+}
+
+impl Pcg64 {
+    /// Create a generator from a seed and a stream id (distinct streams are
+    /// statistically independent — used to fork per-instance/worker RNGs).
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let inc = ((stream as u128) << 1) | 1;
+        let mut rng = Pcg64 { state: 0, inc, spare_normal: None };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(inc);
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(inc);
+        rng
+    }
+
+    /// Fork an independent stream derived from this generator.
+    pub fn fork(&mut self, stream: u64) -> Pcg64 {
+        Pcg64::new(self.next_u64(), stream.wrapping_mul(0x9e3779b97f4a7c15) | 1)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1) with 53 bits of precision.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        // widening-multiply rejection-free mapping (Lemire); bias < 2^-64
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Standard normal (Box–Muller with spare caching).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(s) = self.spare_normal.take() {
+            return s;
+        }
+        loop {
+            let u = self.uniform();
+            if u <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let v = self.uniform();
+            let r = (-2.0 * u.ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * v).sin_cos();
+            self.spare_normal = Some(r * s);
+            return r * c;
+        }
+    }
+
+    /// Exponential with rate 1.
+    pub fn exponential(&mut self) -> f64 {
+        -(1.0 - self.uniform()).ln()
+    }
+
+    /// Standard Cauchy (spectral density of the Laplace kernel, per dim).
+    pub fn cauchy(&mut self) -> f64 {
+        (std::f64::consts::PI * (self.uniform() - 0.5)).tan()
+    }
+
+    /// Gamma(shape, scale=1) via Marsaglia–Tsang squeeze (shape >= 1 direct,
+    /// shape < 1 via the boosting identity).
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        assert!(shape > 0.0, "gamma shape must be positive");
+        if shape < 1.0 {
+            let g = self.gamma(shape + 1.0);
+            let u = loop {
+                let u = self.uniform();
+                if u > 0.0 {
+                    break u;
+                }
+            };
+            return g * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.uniform();
+            if u < 1.0 - 0.0331 * (x * x) * (x * x)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln())
+            {
+                return d * v3;
+            }
+        }
+    }
+
+    /// Fill a slice with standard normals (f32).
+    pub fn fill_normal_f32(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.normal() as f32;
+        }
+    }
+
+    /// Random odd 32-bit mixing multiplier (for the i32 bucket-id collapse).
+    pub fn odd_i32(&mut self) -> i32 {
+        (self.next_u32() | 1) as i32
+    }
+
+    /// Random odd 64-bit mixing multiplier (native u64 bucket ids).
+    pub fn odd_u64(&mut self) -> u64 {
+        self.next_u64() | 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_stream_dependent() {
+        let mut a = Pcg64::new(42, 1);
+        let mut b = Pcg64::new(42, 1);
+        let mut c = Pcg64::new(42, 2);
+        let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let zs: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(xs, ys);
+        assert_ne!(xs, zs);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Pcg64::new(7, 0);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_and_variance() {
+        let mut r = Pcg64::new(3, 0);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let u = r.uniform();
+            s += u;
+            s2 += u * u;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!((mean - 0.5).abs() < 3e-3, "mean {mean}");
+        assert!((var - 1.0 / 12.0).abs() < 3e-3, "var {var}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::new(11, 0);
+        let n = 200_000;
+        let (mut s, mut s2, mut s4) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            s += x;
+            s2 += x * x;
+            s4 += x * x * x * x;
+        }
+        assert!((s / n as f64).abs() < 0.01);
+        assert!((s2 / n as f64 - 1.0).abs() < 0.02);
+        assert!((s4 / n as f64 - 3.0).abs() < 0.1); // kurtosis
+    }
+
+    #[test]
+    fn gamma_moments_shape2_and_7() {
+        // Gamma(k,1): mean k, variance k — the paper's two width laws.
+        let mut r = Pcg64::new(5, 0);
+        for shape in [2.0_f64, 7.0] {
+            let n = 100_000;
+            let (mut s, mut s2) = (0.0, 0.0);
+            for _ in 0..n {
+                let x = r.gamma(shape);
+                assert!(x > 0.0);
+                s += x;
+                s2 += x * x;
+            }
+            let mean = s / n as f64;
+            let var = s2 / n as f64 - mean * mean;
+            assert!((mean - shape).abs() < 0.05 * shape, "mean {mean}");
+            assert!((var - shape).abs() < 0.1 * shape, "var {var}");
+        }
+    }
+
+    #[test]
+    fn gamma_small_shape() {
+        let mut r = Pcg64::new(9, 0);
+        let n = 100_000;
+        let mut s = 0.0;
+        for _ in 0..n {
+            let x = r.gamma(0.5);
+            assert!(x >= 0.0 && x.is_finite());
+            s += x;
+        }
+        assert!((s / n as f64 - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Pcg64::new(13, 0);
+        let n = 100_000;
+        let s: f64 = (0..n).map(|_| r.exponential()).sum();
+        assert!((s / n as f64 - 1.0).abs() < 0.02);
+    }
+
+    #[test]
+    fn cauchy_median_zero() {
+        let mut r = Pcg64::new(17, 0);
+        let n = 100_000;
+        let below = (0..n).filter(|_| r.cauchy() < 0.0).count();
+        assert!((below as f64 / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn below_is_in_range() {
+        let mut r = Pcg64::new(19, 0);
+        for _ in 0..10_000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Wall-clock instrumentation + a micro-bench runner (criterion substitute).
+
+use std::time::Instant;
+
+/// Scoped stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+/// Result of a micro-benchmark run.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub min_secs: f64,
+    pub p50_secs: f64,
+    pub p99_secs: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>7} iters  mean {:>10}  min {:>10}  p50 {:>10}  p99 {:>10}",
+            self.name,
+            self.iters,
+            human(self.mean_secs),
+            human(self.min_secs),
+            human(self.p50_secs),
+            human(self.p99_secs),
+        )
+    }
+}
+
+/// Human-readable duration.
+pub fn human(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3}s")
+    } else if secs >= 1e-3 {
+        format!("{:.3}ms", secs * 1e3)
+    } else {
+        format!("{:.3}us", secs * 1e6)
+    }
+}
+
+/// Run `f` repeatedly for ~`budget_secs` (after one warmup) and report
+/// timing percentiles. The closure's return value is black-boxed to keep
+/// the optimizer honest.
+pub fn bench<F, R>(name: &str, budget_secs: f64, mut f: F) -> BenchStats
+where
+    F: FnMut() -> R,
+{
+    std::hint::black_box(f()); // warmup
+    let mut times = Vec::new();
+    let start = Instant::now();
+    while start.elapsed().as_secs_f64() < budget_secs || times.is_empty() {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        times.push(t.elapsed().as_secs_f64());
+        if times.len() >= 10_000 {
+            break;
+        }
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = times.len();
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean_secs: times.iter().sum::<f64>() / n as f64,
+        min_secs: times[0],
+        p50_secs: times[n / 2],
+        p99_secs: times[(n * 99 / 100).min(n - 1)],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let s = bench("noop-ish", 0.02, || {
+            let mut x = 0u64;
+            for i in 0..100 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(s.iters >= 1);
+        assert!(s.min_secs <= s.p50_secs && s.p50_secs <= s.p99_secs);
+        assert!(s.mean_secs > 0.0);
+    }
+
+    #[test]
+    fn human_formats() {
+        assert_eq!(human(2.0), "2.000s");
+        assert_eq!(human(0.002), "2.000ms");
+        assert_eq!(human(2e-6), "2.000us");
+    }
+}

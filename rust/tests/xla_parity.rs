@@ -1,0 +1,197 @@
+//! Native-vs-XLA backend parity: every AOT artifact family is executed
+//! through PJRT and compared against the pure-Rust implementation of the
+//! same computation. These tests require `make artifacts` to have run;
+//! they are skipped (with a loud message) if the artifacts are missing.
+
+use wlsh_krr::kernels::Kernel;
+use wlsh_krr::lsh::{BucketTable, IdMode, LshFamily};
+use wlsh_krr::runtime::Runtime;
+use wlsh_krr::sketch::{ExactKernelOp, KrrOperator, RffSketch, WlshSketch};
+use wlsh_krr::util::rng::Pcg64;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::open_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (artifacts unavailable): {e}");
+            None
+        }
+    }
+}
+
+fn random_x(seed: u64, n: usize, d: usize, spread: f64) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed, 0);
+    (0..n * d)
+        .map(|_| (rng.normal() * spread) as f32)
+        .collect()
+}
+
+#[test]
+fn hash_ids_and_weights_match_native_i32_mode() {
+    let Some(rt) = runtime() else { return };
+    for (bucket, shape) in [("rect", 2.0), ("smooth2", 7.0)] {
+        let (n, d, m) = (500, 11, 7); // deliberately not multiples of chunks
+        let x = random_x(1, n, d, 2.0);
+        let mut rng = Pcg64::new(5, 0);
+        let family = LshFamily::new(d, shape, bucket, &mut rng);
+        let funcs: Vec<_> = (0..m).map(|_| family.sample(&mut rng)).collect();
+        let (ids_x, w_x) = rt
+            .hash_batch_xla(&x, n, d, &funcs, &family.mix32, bucket)
+            .expect("xla hash");
+        for (s, f) in funcs.iter().enumerate() {
+            let mut ids_n = Vec::new();
+            let mut w_n = Vec::new();
+            f.hash_batch(&x, &family, IdMode::I32, &mut ids_n, &mut w_n);
+            assert_eq!(ids_x[s], ids_n, "{bucket}: ids differ for instance {s}");
+            for i in 0..n {
+                assert!(
+                    (w_x[s][i] - w_n[i]).abs() < 1e-5 * (1.0 + w_n[i].abs()),
+                    "{bucket}: weight ({s},{i}): {} vs {}",
+                    w_x[s][i],
+                    w_n[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn wlsh_matvec_artifact_matches_native_sketch() {
+    let Some(rt) = runtime() else { return };
+    let (n, d, m) = (700, 6, 9);
+    let x = random_x(2, n, d, 1.0);
+    let sk = WlshSketch::build_mode(&x, n, d, m, "smooth2", 7.0, 1.0, 3, IdMode::I32);
+    let mut rng = Pcg64::new(7, 0);
+    let beta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let want = sk.matvec(&beta);
+    // feed the artifact the same dense ids/weights the native table built
+    let ids: Vec<Vec<u32>> = sk
+        .instances
+        .iter()
+        .map(|i| i.table.bucket_of.clone())
+        .collect();
+    let weights: Vec<Vec<f32>> = sk.instances.iter().map(|i| i.weights.clone()).collect();
+    let got = rt.wlsh_matvec_xla(&ids, &weights, &beta).expect("xla matvec");
+    for i in 0..n {
+        assert!(
+            (got[i] - want[i]).abs() < 1e-4 * (1.0 + want[i].abs()),
+            "row {i}: {} vs {}",
+            got[i],
+            want[i]
+        );
+    }
+}
+
+#[test]
+fn rff_features_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let (n, d, dd) = (300, 13, 1536);
+    let x = random_x(3, n, d, 1.0);
+    let native = RffSketch::build(&x, n, d, dd, 1.5, 11);
+    let zn = native.featurize(&x);
+    // reuse native's omega/b through the artifact path: featurize a fresh
+    // sketch is private, so regenerate identically
+    let mut rng = Pcg64::new(11, 0);
+    let gamma = 1.0 / (1.5f64 * 1.5);
+    let sd = (2.0 * gamma).sqrt();
+    let omega: Vec<f32> = (0..d * dd).map(|_| (rng.normal() * sd) as f32).collect();
+    let b: Vec<f32> = (0..dd)
+        .map(|_| rng.uniform_in(0.0, 2.0 * std::f64::consts::PI) as f32)
+        .collect();
+    let zx = rt
+        .rff_features_xla(&x, n, d, &omega, &b, dd)
+        .expect("xla rff");
+    assert_eq!(zx.len(), zn.len());
+    for i in 0..zx.len() {
+        assert!(
+            (zx[i] - zn[i]).abs() < 2e-5,
+            "feature {i}: {} vs {}",
+            zx[i],
+            zn[i]
+        );
+    }
+}
+
+#[test]
+fn exact_matvec_artifacts_match_native() {
+    let Some(rt) = runtime() else { return };
+    let (n, d) = (900, 11);
+    let x = random_x(4, n, d, 1.0);
+    let mut rng = Pcg64::new(13, 0);
+    let beta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let scale = 2.5;
+    for (kind, kernel) in [
+        ("se", Kernel::squared_exp(scale)),
+        ("matern52", Kernel::matern52(scale)),
+        ("laplace", Kernel::laplace(scale)),
+    ] {
+        let native = ExactKernelOp::new(&x, n, d, kernel);
+        let want = native.matvec(&beta);
+        let got = rt
+            .exact_matvec_xla(kind, &x, n, &x, n, d, &beta, scale, true)
+            .expect("xla exact");
+        for i in 0..n {
+            assert!(
+                (got[i] - want[i]).abs() < 3e-3 * (1.0 + want[i].abs()),
+                "{kind} row {i}: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn exact_cross_artifacts_match_native_predict() {
+    let Some(rt) = runtime() else { return };
+    let (n, q, d) = (600, 150, 11);
+    let x = random_x(5, n, d, 1.0);
+    let xq = random_x(6, q, d, 1.0);
+    let mut rng = Pcg64::new(17, 0);
+    let beta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let scale = 2.0;
+    for (kind, kernel) in [
+        ("se", Kernel::squared_exp(scale)),
+        ("matern52", Kernel::matern52(scale)),
+        ("laplace", Kernel::laplace(scale)),
+    ] {
+        let native = ExactKernelOp::new(&x, n, d, kernel);
+        let want = native.predict(&xq, &beta);
+        let got = rt
+            .exact_matvec_xla(kind, &xq, q, &x, n, d, &beta, scale, false)
+            .expect("xla cross");
+        for i in 0..q {
+            assert!(
+                (got[i] - want[i]).abs() < 3e-3 * (1.0 + want[i].abs()),
+                "{kind} row {i}: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_exact_operator_trains_like_native() {
+    let Some(rt) = runtime() else { return };
+    use wlsh_krr::runtime::XlaExactKernelOp;
+    use wlsh_krr::solver::{solve_krr, CgOptions};
+    let (n, d) = (400, 8);
+    let x = random_x(7, n, d, 1.0);
+    let mut rng = Pcg64::new(19, 0);
+    let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let lambda = 0.5;
+    let opts = CgOptions { max_iters: 60, tol: 1e-8, verbose: false };
+    let native = ExactKernelOp::new(&x, n, d, Kernel::squared_exp(2.0));
+    let bn = solve_krr(&native, &y, lambda, &opts).beta;
+    let xla_op = XlaExactKernelOp::new(&rt, "se", &x, n, d, 2.0);
+    let bx = solve_krr(&xla_op, &y, lambda, &opts).beta;
+    for i in 0..n {
+        assert!(
+            (bn[i] - bx[i]).abs() < 1e-3 * (1.0 + bn[i].abs()),
+            "beta {i}: {} vs {}",
+            bn[i],
+            bx[i]
+        );
+    }
+}
