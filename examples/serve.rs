@@ -53,7 +53,7 @@ fn main() {
         let nq = test.n;
         handles.push(std::thread::spawn(move || {
             let mut conn = TcpStream::connect(&addr).unwrap();
-    conn.set_nodelay(true).ok();
+            conn.set_nodelay(true).ok();
             let mut reader = BufReader::new(conn.try_clone().unwrap());
             for r in 0..requests {
                 let qi = (c * 7919 + r) % nq;

@@ -42,7 +42,7 @@ fn run_load(
             let rows = rows;
             scope.spawn(move || {
                 let mut conn = TcpStream::connect(&addr).unwrap();
-    conn.set_nodelay(true).ok();
+                conn.set_nodelay(true).ok();
                 let mut reader = BufReader::new(conn.try_clone().unwrap());
                 for r in 0..requests {
                     let qi = (c * 7919 + r * 13) % nq;

@@ -6,6 +6,8 @@
 use std::sync::Arc;
 
 use super::TrainedModel;
+use crate::sketch::SERIAL_QUERY_CHUNK;
+use crate::util::par;
 
 /// Shards batch predictions across `workers` threads.
 pub struct PredictRouter {
@@ -22,23 +24,23 @@ impl PredictRouter {
     /// Predict for row-major queries, preserving order.
     pub fn predict(&self, queries: &[f32]) -> Vec<f64> {
         let nq = queries.len() / self.d;
-        if self.workers == 1 || nq < 2 * self.workers {
+        // Small batches stay below the predict kernel's serial threshold,
+        // so handing them over whole cannot spawn inner threads.
+        if nq < 2 * self.workers && nq <= SERIAL_QUERY_CHUNK {
             return self.model.predict(queries);
         }
-        let chunk_rows = nq.div_ceil(self.workers);
-        let mut out = vec![0.0f64; nq];
-        std::thread::scope(|scope| {
-            let mut handles = Vec::new();
-            for (w, rows) in queries.chunks(chunk_rows * self.d).enumerate() {
-                let model = &self.model;
-                handles.push((w, scope.spawn(move || model.predict(rows))));
-            }
-            for (w, h) in handles {
-                let preds = h.join().expect("router worker panicked");
-                let start = w * chunk_rows;
-                out[start..start + preds.len()].copy_from_slice(&preds);
-            }
-        });
+        // Shard at (or below) the predict kernel's serial chunk size: each
+        // inner `model.predict` then stays single-threaded, so the router's
+        // `workers` is a hard bound on prediction threading (workers = 1 ⇒
+        // fully serial) and parallelism never nests.
+        let chunk_rows = nq.div_ceil(self.workers).min(SERIAL_QUERY_CHUNK);
+        let chunks: Vec<&[f32]> = queries.chunks(chunk_rows * self.d).collect();
+        let model = &self.model;
+        let pieces = par::fan_out(chunks.len(), self.workers, |c| model.predict(chunks[c]));
+        let mut out = Vec::with_capacity(nq);
+        for p in pieces {
+            out.extend(p);
+        }
         out
     }
 }

@@ -196,7 +196,7 @@ mod tests {
         let handle = std::thread::spawn(move || serve(model, d, cfg, Some(tx)).unwrap());
         let addr = rx.recv().unwrap();
         let mut conn = TcpStream::connect(&addr).unwrap();
-    conn.set_nodelay(true).ok();
+        conn.set_nodelay(true).ok();
         let mut reader = BufReader::new(conn.try_clone().unwrap());
         for (qi, want) in expected.iter().enumerate() {
             let feats: Vec<String> = queries[qi * d..(qi + 1) * d]
@@ -230,7 +230,7 @@ mod tests {
         let handle = std::thread::spawn(move || serve(model, d, cfg, Some(tx)).unwrap());
         let addr = rx.recv().unwrap();
         let mut conn = TcpStream::connect(&addr).unwrap();
-    conn.set_nodelay(true).ok();
+        conn.set_nodelay(true).ok();
         let mut reader = BufReader::new(conn.try_clone().unwrap());
         writeln!(conn, "{{\"features\": [1.0]}}").unwrap(); // wrong arity
         let mut line = String::new();

@@ -13,6 +13,7 @@ use crate::sketch::{
     ExactKernelOp, KrrOperator, NystromSketch, RffSketch, WlshSketch,
 };
 use crate::solver::{solve_krr, CgOptions};
+use crate::util::par;
 use crate::util::rng::Pcg64;
 
 /// A trained, servable KRR model.
@@ -101,9 +102,9 @@ impl Trainer {
         }
     }
 
-    /// WLSH build with the m instances sharded across `workers` threads
-    /// (each worker hashes a contiguous block of instances with a forked
-    /// RNG stream, preserving determinism regardless of worker count).
+    /// WLSH build with the m instances fanned out across `workers` threads
+    /// (each instance hashes with its own forked RNG stream, preserving
+    /// determinism regardless of worker count).
     fn build_wlsh_sharded(&self, ds: &Dataset) -> WlshSketch {
         let c = &self.config;
         if c.workers <= 1 {
@@ -111,33 +112,16 @@ impl Trainer {
                 &ds.x, ds.n, ds.d, c.budget, &c.bucket, c.gamma_shape, c.scale, c.seed,
             );
         }
-        // replicate WlshSketch::build's RNG discipline, but hash shards in
-        // parallel
+        // replicate WlshSketch::build's RNG discipline, but hash instances
+        // in parallel
         let mut rng = Pcg64::new(c.seed, 0);
         let family = LshFamily::new(ds.d, c.gamma_shape, &c.bucket, &mut rng);
         let inv = (1.0 / c.scale) as f32;
         let x_scaled: Vec<f32> = ds.x.iter().map(|&v| v * inv).collect();
-        let mut seeds: Vec<Pcg64> = (0..c.budget).map(|s| rng.fork(s as u64)).collect();
-        let chunk = c.budget.div_ceil(c.workers);
-        let mut instances = Vec::with_capacity(c.budget);
-        std::thread::scope(|scope| {
-            let mut handles = Vec::new();
-            for (wid, shard) in seeds.chunks_mut(chunk).enumerate() {
-                let fam = &family;
-                let xs = &x_scaled;
-                handles.push((
-                    wid,
-                    scope.spawn(move || {
-                        shard
-                            .iter_mut()
-                            .map(|r| WlshSketch::build_instance(xs, fam, IdMode::U64, r))
-                            .collect::<Vec<_>>()
-                    }),
-                ));
-            }
-            for (_, h) in handles {
-                instances.extend(h.join().expect("sketch worker panicked"));
-            }
+        let seeds: Vec<Pcg64> = (0..c.budget).map(|s| rng.fork(s as u64)).collect();
+        let instances = par::fan_out(c.budget, c.workers, |s| {
+            let mut r = seeds[s].clone();
+            WlshSketch::build_instance(&x_scaled, &family, IdMode::U64, &mut r)
         });
         WlshSketch::from_parts(instances, family, IdMode::U64, x_scaled, ds.n, c.scale)
     }

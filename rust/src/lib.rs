@@ -13,15 +13,23 @@
 //!   (notably the O(n·m) WLSH sketch mat-vec of paper §4).
 //! * **L3** (this crate): the coordinator — LSH bucket tables, CG-based KRR
 //!   training, a batched prediction service, benchmarks reproducing every
-//!   table in the paper, and the PJRT runtime executing the AOT artifacts.
+//!   table in the paper, and the PJRT runtime describing the AOT artifacts
+//!   (no execution backend is linked yet — the `pjrt` cargo feature is
+//!   inert scaffolding — so every runtime consumer skips cleanly).
 //!
-//! Python never runs on the request path: after `make artifacts` the Rust
-//! binary is self-contained (with a pure-native fallback backend that is
-//! parity-tested against the HLO artifacts).
+//! Python never runs on the request path: the Rust binary is
+//! self-contained, builds with **zero external crates** (the substrates
+//! under [`util`] replace `rand`/`serde_json`/`clap`/`proptest`/
+//! `criterion`/`rayon`), and its WLSH hot paths — sketch build, the K̃β
+//! mat-vec inside CG, bucket-load preparation, and batch prediction — fan
+//! out over scoped worker threads ([`util::par`]) with reductions in fixed
+//! instance order, so parallel results are bit-identical to the serial
+//! reference at every thread count (see `tests/parallel_determinism.rs`).
+//! Thread budget: `WLSH_THREADS` env var, default = available cores.
 //!
 //! Entry points: [`sketch::WlshSketch`] (the paper's estimator),
 //! [`solver::solve_krr`] (CG on `K̃ + λI`), [`coordinator::Trainer`] /
-//! [`coordinator::Server`] (the training/serving framework), and
+//! [`coordinator::serve`] (the training/serving framework), and
 //! `examples/quickstart.rs`.
 
 pub mod bucketfn;

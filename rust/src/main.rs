@@ -31,7 +31,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "ose" => cmd_ose(&args),
         "gp" => cmd_gp(&args),
-        _ => {
+        other => {
             eprintln!(
                 "wlsh-krr {} — Scaling up KRR via Locality Sensitive Hashing\n\
                  usage: wlsh-krr <info|train|serve|ose|gp> [--flags]\n\
@@ -44,6 +44,10 @@ fn main() {
                  gp     --cov laplace|se|matern --dim D --n N",
                 wlsh_krr::version()
             );
+            // asking for help is fine; an unknown subcommand is misuse
+            if other != "help" && other != "--help" {
+                std::process::exit(2);
+            }
         }
     }
 }

@@ -1,216 +1,52 @@
 //! Typed wrappers over the AOT artifacts: WLSH hashing, WLSH sketch
-//! mat-vec, RFF features, exact kernel mat-vecs. Each picks the smallest
-//! compatible padded shape from the manifest, chunks its inputs, and strips
-//! the padding from the outputs.
+//! mat-vec, RFF features, exact kernel mat-vecs. The shapes/chunking
+//! contract (DESIGN.md §6) is defined by the manifest; execution requires
+//! the `pjrt` feature's backend, so in offline builds every wrapper
+//! returns the runtime's "backend unavailable" error — which the parity
+//! tests and benches treat as a skip.
 
-use anyhow::{anyhow, Result};
-
-use super::{lit_f32, lit_i32, pad_rows, Runtime};
+use super::{Result, Runtime};
 use crate::lsh::LshFunction;
 use crate::sketch::KrrOperator;
 
 impl Runtime {
-    /// Smallest artifact `prefix__n{..}_d{dp}..` with d_pad >= d; returns
-    /// (name, d_pad) parsed back from the name.
-    fn pick_hash_artifact(&self, d: usize, bucket: &str) -> Result<(String, usize)> {
-        let n = self.manifest.hash_chunk_n;
-        let m = self.manifest.hash_chunk_m;
-        let mut best: Option<(usize, String)> = None;
-        for dp in [8usize, 16, 32, 64, 96, 128, 384, 512] {
-            if dp < d {
-                continue;
-            }
-            let name = format!("wlsh_hash__n{n}_d{dp}_m{m}__{bucket}");
-            if self.has(&name) && best.as_ref().map(|(b, _)| dp < *b).unwrap_or(true) {
-                best = Some((dp, name));
-            }
-        }
-        best.map(|(dp, name)| (name, dp))
-            .ok_or_else(|| anyhow!("no wlsh_hash artifact for d={d}, bucket={bucket}"))
-    }
-
     /// Hash `x_scaled` (n×d) under the given LSH instances through the HLO
     /// artifact. Returns per-instance (ids-as-u64, weights), id arithmetic
     /// identical to the native `IdMode::I32` path.
     pub fn hash_batch_xla(
         &self,
-        x_scaled: &[f32],
-        n: usize,
-        d: usize,
-        funcs: &[LshFunction],
-        mix32: &[i32],
-        bucket: &str,
+        _x_scaled: &[f32],
+        _n: usize,
+        _d: usize,
+        _funcs: &[LshFunction],
+        _mix32: &[i32],
+        _bucket: &str,
     ) -> Result<(Vec<Vec<u64>>, Vec<Vec<f32>>)> {
-        let (name, d_pad) = self.pick_hash_artifact(d, bucket)?;
-        let chunk_n = self.manifest.hash_chunk_n;
-        let chunk_m = self.manifest.hash_chunk_m;
-        let m = funcs.len();
-        let mut ids = vec![Vec::with_capacity(n); m];
-        let mut weights = vec![Vec::with_capacity(n); m];
-        let mut mix_pad = vec![1i32; d_pad];
-        mix_pad[..d].copy_from_slice(mix32);
-        let mut mask = vec![0.0f32; d_pad];
-        mask[..d].fill(1.0);
-        let mix_lit = lit_i32(&mix_pad, &[1, d_pad as i64])?;
-        let mask_lit = lit_f32(&mask, &[1, d_pad as i64])?;
-        for m0 in (0..m).step_by(chunk_m) {
-            let m1 = (m0 + chunk_m).min(m);
-            // pad instance params; padded instances get w=1,z=0 (harmless)
-            let mut w_pad = vec![1.0f32; chunk_m * d_pad];
-            let mut z_pad = vec![0.0f32; chunk_m * d_pad];
-            for (s, f) in funcs[m0..m1].iter().enumerate() {
-                w_pad[s * d_pad..s * d_pad + d].copy_from_slice(&f.w);
-                z_pad[s * d_pad..s * d_pad + d].copy_from_slice(&f.z);
-            }
-            let w_lit = lit_f32(&w_pad, &[chunk_m as i64, d_pad as i64])?;
-            let z_lit = lit_f32(&z_pad, &[chunk_m as i64, d_pad as i64])?;
-            for n0 in (0..n).step_by(chunk_n) {
-                let n1 = (n0 + chunk_n).min(n);
-                let xp = pad_rows(&x_scaled[n0 * d..n1 * d], n1 - n0, d, chunk_n, d_pad);
-                let x_lit = lit_f32(&xp, &[chunk_n as i64, d_pad as i64])?;
-                let outs = self.execute(
-                    &name,
-                    &[
-                        x_lit,
-                        w_lit.reshape(&[chunk_m as i64, d_pad as i64])?,
-                        z_lit.reshape(&[chunk_m as i64, d_pad as i64])?,
-                        mix_lit.reshape(&[1, d_pad as i64])?,
-                        mask_lit.reshape(&[1, d_pad as i64])?,
-                    ],
-                )?;
-                let ids_out: Vec<i32> = outs[0]
-                    .to_vec()
-                    .map_err(|e| anyhow!("ids fetch: {e:?}"))?;
-                let w_out: Vec<f32> = outs[1]
-                    .to_vec()
-                    .map_err(|e| anyhow!("weights fetch: {e:?}"))?;
-                for s in 0..(m1 - m0) {
-                    let row = &ids_out[s * chunk_n..s * chunk_n + (n1 - n0)];
-                    ids[m0 + s].extend(row.iter().map(|&v| v as u32 as u64));
-                    weights[m0 + s]
-                        .extend_from_slice(&w_out[s * chunk_n..s * chunk_n + (n1 - n0)]);
-                }
-            }
-        }
-        Ok((ids, weights))
+        self.unavailable("wlsh_hash")
     }
 
     /// WLSH sketch mat-vec through the `wlsh_matvec__n{n_pad}_m{chunk}`
     /// artifact: `ids` must be dense per-instance bucket indices < n.
     pub fn wlsh_matvec_xla(
         &self,
-        ids: &[Vec<u32>],
-        weights: &[Vec<f32>],
-        beta: &[f64],
+        _ids: &[Vec<u32>],
+        _weights: &[Vec<f32>],
+        _beta: &[f64],
     ) -> Result<Vec<f64>> {
-        let n = beta.len();
-        let chunk_m = self.manifest.hash_chunk_m;
-        let n_pad = self
-            .names_with_prefix("wlsh_matvec__n")
-            .iter()
-            .filter_map(|name| {
-                let rest = name.strip_prefix("wlsh_matvec__n")?;
-                let (np, _) = rest.split_once("_m")?;
-                np.parse::<usize>().ok()
-            })
-            .filter(|&np| np >= n)
-            .min()
-            .ok_or_else(|| anyhow!("no wlsh_matvec artifact for n={n}"))?;
-        let name = format!("wlsh_matvec__n{n_pad}_m{chunk_m}");
-        let m = ids.len();
-        let beta32: Vec<f32> = beta.iter().map(|&b| b as f32).collect();
-        let mut beta_pad = vec![0.0f32; n_pad];
-        beta_pad[..n].copy_from_slice(&beta32);
-        let beta_lit = lit_f32(&beta_pad, &[1, n_pad as i64])?;
-        let mut out = vec![0.0f64; n];
-        for m0 in (0..m).step_by(chunk_m) {
-            let m1 = (m0 + chunk_m).min(m);
-            let mut ids_pad = vec![0i32; chunk_m * n_pad];
-            let mut w_pad = vec![0.0f32; chunk_m * n_pad];
-            for s in m0..m1 {
-                debug_assert_eq!(ids[s].len(), n);
-                for i in 0..n {
-                    ids_pad[(s - m0) * n_pad + i] = ids[s][i] as i32;
-                }
-                w_pad[(s - m0) * n_pad..(s - m0) * n_pad + n]
-                    .copy_from_slice(&weights[s]);
-                // padded tail points: send them to bucket n-1 with weight 0
-                for i in n..n_pad {
-                    ids_pad[(s - m0) * n_pad + i] = (n_pad - 1) as i32;
-                }
-            }
-            let ids_lit = lit_i32(&ids_pad, &[chunk_m as i64, n_pad as i64])?;
-            let w_lit = lit_f32(&w_pad, &[chunk_m as i64, n_pad as i64])?;
-            // inv_m = 1 here; we divide by the true m once at the end
-            let inv_lit = lit_f32(&[1.0], &[1, 1])?;
-            let outs = self.execute(
-                &name,
-                &[ids_lit, w_lit, beta_lit.reshape(&[1, n_pad as i64])?, inv_lit],
-            )?;
-            let y: Vec<f32> = outs[0].to_vec().map_err(|e| anyhow!("y fetch: {e:?}"))?;
-            for i in 0..n {
-                out[i] += y[i] as f64;
-            }
-        }
-        let inv_m = 1.0 / m as f64;
-        for v in out.iter_mut() {
-            *v *= inv_m;
-        }
-        Ok(out)
+        self.unavailable("wlsh_matvec")
     }
 
     /// RFF features through the `rff_features__n{chunk}_d{dp}_D{D}` artifact.
     pub fn rff_features_xla(
         &self,
-        rows: &[f32],
-        n: usize,
-        d: usize,
-        omega: &[f32],
-        b: &[f32],
-        dd: usize,
+        _rows: &[f32],
+        _n: usize,
+        _d: usize,
+        _omega: &[f32],
+        _b: &[f32],
+        _dd: usize,
     ) -> Result<Vec<f32>> {
-        let chunk_n = self.manifest.rff_chunk_n;
-        // find matching (d_pad, D) artifact
-        let mut picked: Option<(usize, String)> = None;
-        for name in self.names_with_prefix("rff_features__n") {
-            let rest = name
-                .strip_prefix(&format!("rff_features__n{chunk_n}_d"))
-                .unwrap_or("");
-            if let Some((dp, dd_s)) = rest.split_once("_D") {
-                if let (Ok(dp), Ok(dd_a)) = (dp.parse::<usize>(), dd_s.parse::<usize>()) {
-                    if dp >= d && dd_a == dd
-                        && picked.as_ref().map(|(p, _)| dp < *p).unwrap_or(true)
-                    {
-                        picked = Some((dp, name.clone()));
-                    }
-                }
-            }
-        }
-        let (d_pad, name) =
-            picked.ok_or_else(|| anyhow!("no rff_features artifact for d={d}, D={dd}"))?;
-        let omega_pad = pad_rows(omega, d, dd, d_pad, dd); // (d_pad × D)
-        let omega_lit = lit_f32(&omega_pad, &[d_pad as i64, dd as i64])?;
-        let b_lit = lit_f32(b, &[1, dd as i64])?;
-        let scale = (2.0 / dd as f64).sqrt() as f32;
-        let scale_lit = lit_f32(&[scale], &[1, 1])?;
-        let mut out = vec![0.0f32; n * dd];
-        for n0 in (0..n).step_by(chunk_n) {
-            let n1 = (n0 + chunk_n).min(n);
-            let xp = pad_rows(&rows[n0 * d..n1 * d], n1 - n0, d, chunk_n, d_pad);
-            let x_lit = lit_f32(&xp, &[chunk_n as i64, d_pad as i64])?;
-            let outs = self.execute(
-                &name,
-                &[
-                    x_lit,
-                    omega_lit.reshape(&[d_pad as i64, dd as i64])?,
-                    b_lit.reshape(&[1, dd as i64])?,
-                    scale_lit.reshape(&[1, 1])?,
-                ],
-            )?;
-            let z: Vec<f32> = outs[0].to_vec().map_err(|e| anyhow!("z fetch: {e:?}"))?;
-            out[n0 * dd..n1 * dd].copy_from_slice(&z[..(n1 - n0) * dd]);
-        }
-        Ok(out)
+        self.unavailable("rff_features")
     }
 
     /// Exact kernel mat-vec `K(Xq, X)β` through the blockwise artifacts.
@@ -220,94 +56,23 @@ impl Runtime {
     pub fn exact_matvec_xla(
         &self,
         kind: &str,
-        xq: &[f32],
-        q: usize,
-        x: &[f32],
-        n: usize,
-        d: usize,
-        beta: &[f64],
-        scale: f64,
+        _xq: &[f32],
+        _q: usize,
+        _x: &[f32],
+        _n: usize,
+        _d: usize,
+        _beta: &[f64],
+        _scale: f64,
         self_product: bool,
     ) -> Result<Vec<f64>> {
-        let beta32: Vec<f32> = beta.iter().map(|&v| v as f32).collect();
-        let pick = |prefix: &str| -> Option<(usize, usize, String)> {
-            let mut best: Option<(usize, usize, String)> = None;
-            for name in self.names_with_prefix(prefix) {
-                let rest = name.strip_prefix(prefix).unwrap_or("");
-                // rest like "{n}_d{d}" or "{q}_n{n}_d{d}"
-                let parts: Vec<&str> = rest.split(['_']).collect();
-                let mut np = None;
-                let mut dp = None;
-                for p in &parts {
-                    if let Some(v) = p.strip_prefix('d') {
-                        dp = v.parse::<usize>().ok();
-                    } else if let Some(v) = p.strip_prefix('n') {
-                        np = v.parse::<usize>().ok();
-                    } else if np.is_none() && dp.is_none() {
-                        np = p.parse::<usize>().ok(); // leading {n} for self
-                    }
-                }
-                if let (Some(np), Some(dp)) = (np, dp) {
-                    if np >= n && dp >= d && best.as_ref().map(|(bn, bd, _)| np < *bn || (np == *bn && dp < *bd)).unwrap_or(true)
-                    {
-                        best = Some((np, dp, name.clone()));
-                    }
-                }
-            }
-            best
-        };
-        if self_product {
-            let (n_pad, d_pad, name) = pick(&format!("exact_matvec_{kind}__n"))
-                .ok_or_else(|| anyhow!("no exact_matvec_{kind} artifact for n={n}, d={d}"))?;
-            let xp = pad_rows(x, n, d, n_pad, d_pad);
-            let mut bp = vec![0.0f32; n_pad];
-            bp[..n].copy_from_slice(&beta32);
-            let outs = self.execute(
-                &name,
-                &[
-                    lit_f32(&xp, &[n_pad as i64, d_pad as i64])?,
-                    lit_f32(&xp, &[n_pad as i64, d_pad as i64])?,
-                    lit_f32(&bp, &[1, n_pad as i64])?,
-                    lit_f32(&[scale as f32], &[1, 1])?,
-                ],
-            )?;
-            let y: Vec<f32> = outs[0].to_vec().map_err(|e| anyhow!("y fetch: {e:?}"))?;
-            Ok(y[..n].iter().map(|&v| v as f64).collect())
-        } else {
-            let chunk_q = self.manifest.cross_chunk_q;
-            let (n_pad, d_pad, name) = pick(&format!("exact_cross_{kind}__q{chunk_q}_n"))
-                .ok_or_else(|| anyhow!("no exact_cross_{kind} artifact for n={n}, d={d}"))?;
-            let xp = pad_rows(x, n, d, n_pad, d_pad);
-            let x_lit = lit_f32(&xp, &[n_pad as i64, d_pad as i64])?;
-            let mut bp = vec![0.0f32; n_pad];
-            bp[..n].copy_from_slice(&beta32);
-            let b_lit = lit_f32(&bp, &[1, n_pad as i64])?;
-            let s_lit = lit_f32(&[scale as f32], &[1, 1])?;
-            let mut out = vec![0.0f64; q];
-            for q0 in (0..q).step_by(chunk_q) {
-                let q1 = (q0 + chunk_q).min(q);
-                let qp = pad_rows(&xq[q0 * d..q1 * d], q1 - q0, d, chunk_q, d_pad);
-                let outs = self.execute(
-                    &name,
-                    &[
-                        lit_f32(&qp, &[chunk_q as i64, d_pad as i64])?,
-                        x_lit.reshape(&[n_pad as i64, d_pad as i64])?,
-                        b_lit.reshape(&[1, n_pad as i64])?,
-                        s_lit.reshape(&[1, 1])?,
-                    ],
-                )?;
-                let y: Vec<f32> = outs[0].to_vec().map_err(|e| anyhow!("y fetch: {e:?}"))?;
-                for (i, v) in y[..q1 - q0].iter().enumerate() {
-                    out[q0 + i] = *v as f64;
-                }
-            }
-            Ok(out)
-        }
+        let family = if self_product { "exact_matvec" } else { "exact_cross" };
+        self.unavailable(&format!("{family}_{kind}"))
     }
 }
 
 /// Exact-kernel KRR operator backed by the HLO artifacts (the XLA twin of
-/// `sketch::ExactKernelOp`).
+/// `sketch::ExactKernelOp`). Only constructible alongside a [`Runtime`],
+/// so in offline builds it is never instantiated.
 pub struct XlaExactKernelOp<'rt> {
     rt: &'rt Runtime,
     kind: String,
@@ -350,11 +115,3 @@ impl KrrOperator for XlaExactKernelOp<'_> {
         self.x.len() * 4
     }
 }
-
-// Safety: XlaExactKernelOp is used single-threaded in benches; the xla crate
-// wrappers are not Sync, so we do NOT implement Send/Sync manually — the
-// KrrOperator supertraits require them, hence the unsafe impls below are
-// scoped to this read-only wrapper whose mutations all happen inside the
-// PJRT C API (which serializes internally for the CPU client).
-unsafe impl Send for XlaExactKernelOp<'_> {}
-unsafe impl Sync for XlaExactKernelOp<'_> {}

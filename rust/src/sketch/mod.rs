@@ -11,6 +11,7 @@ mod wlsh;
 pub use exact::ExactKernelOp;
 pub use nystrom::NystromSketch;
 pub use rff::RffSketch;
+pub(crate) use wlsh::SERIAL_QUERY_CHUNK;
 pub use wlsh::{WlshPredictor, WlshSketch};
 
 /// β-dependent state precomputed once after the solve so that serving-time

@@ -6,10 +6,35 @@
 //! mat-vec per instance via bucket loads:
 //!
 //!   B_j(β) = Σ_{i: h(x_i)=j} w_i β_i,      (K̃β)_i = w_i · B_{h(x_i)}(β).
+//!
+//! The per-instance loops (mat-vec, load precomputation) and the per-query
+//! loop of batch prediction are embarrassingly parallel (cf. Wu et al.,
+//! "Revisiting Random Binning Features", KDD 2018) and fan out over
+//! [`crate::util::par`] worker threads; reductions happen in fixed
+//! instance order so every result is bit-identical to the serial path.
 
 use super::KrrOperator;
 use crate::lsh::{BucketTable, IdMode, LshFamily, LshFunction};
+use crate::util::par;
 use crate::util::rng::Pcg64;
+
+/// Query batches at or below this size are predicted serially; larger
+/// batches split into chunks of this many rows for the thread fan-out.
+/// Shared with the coordinator's router so sharding never nests two levels
+/// of parallelism.
+pub(crate) const SERIAL_QUERY_CHUNK: usize = 256;
+
+/// Below this many scatter ops (n·m) the automatic-thread paths stay
+/// serial: a mat-vec this small runs in well under a millisecond, so
+/// per-call thread spawns would dominate. Explicit `*_threads` calls are
+/// never gated — the caller decides.
+const PAR_MIN_WORK: usize = 1 << 17;
+
+/// The mat-vec spawns threads once per 32-instance reduction round, so n
+/// (the work per instance) must also clear a floor: a tiny-n/huge-m
+/// sketch passes the total-work gate while each round still carries less
+/// work than its spawn/join cost.
+const PAR_MIN_ROWS: usize = 2048;
 
 /// One hashed instance: the function, its dense bucket table, and weights.
 pub struct WlshInstance {
@@ -117,13 +142,27 @@ impl WlshSketch {
         loads
     }
 
+    /// Bucket loads for every instance, the per-instance work fanned out
+    /// over `threads` worker threads. Instances are independent, so the
+    /// result is identical (bitwise) to the serial instance loop for any
+    /// thread count.
+    pub fn loads_all(&self, beta: &[f64], threads: usize) -> Vec<Vec<f64>> {
+        par::fan_out(self.m(), threads, |s| self.loads(&self.instances[s], beta))
+    }
+
+    /// Worker count for the automatic (trait) paths: all cores when the
+    /// sketch is big enough to amortize thread spawns, else serial.
+    fn auto_threads(&self) -> usize {
+        if self.n < PAR_MIN_ROWS || self.n * self.m() < PAR_MIN_WORK {
+            1
+        } else {
+            par::num_threads()
+        }
+    }
+
     /// Freeze the sketch + solved β into an O(m·d)-per-query predictor.
     pub fn predictor(&self, beta: &[f64]) -> WlshPredictor<'_> {
-        let loads = self
-            .instances
-            .iter()
-            .map(|inst| self.loads(inst, beta))
-            .collect();
+        let loads = self.loads_all(beta, self.auto_threads());
         WlshPredictor { sketch: self, loads }
     }
 
@@ -136,14 +175,11 @@ impl WlshSketch {
             .sum::<f64>()
             / self.m() as f64
     }
-}
 
-impl KrrOperator for WlshSketch {
-    fn n(&self) -> usize {
-        self.n
-    }
-
-    fn matvec(&self, beta: &[f64]) -> Vec<f64> {
+    /// Serial reference mat-vec — the original single-threaded instance
+    /// loop. Kept callable so `tests/parallel_determinism.rs` can assert
+    /// the parallel path is bit-identical to it.
+    pub fn matvec_serial(&self, beta: &[f64]) -> Vec<f64> {
         assert_eq!(beta.len(), self.n);
         let mut out = vec![0.0f64; self.n];
         for inst in &self.instances {
@@ -161,14 +197,71 @@ impl KrrOperator for WlshSketch {
         out
     }
 
+    /// One instance's additive mat-vec contribution: c_i = w_i · B_{h(x_i)}.
+    /// The products here are exactly the terms the serial loop accumulates.
+    fn instance_contrib(&self, inst: &WlshInstance, beta: &[f64]) -> Vec<f64> {
+        let loads = self.loads(inst, beta);
+        let bucket_of = &inst.table.bucket_of;
+        let weights = &inst.weights;
+        let mut c = vec![0.0f64; self.n];
+        for (i, cv) in c.iter_mut().enumerate() {
+            *cv = weights[i] as f64 * loads[bucket_of[i] as usize];
+        }
+        c
+    }
+
+    /// Parallel mat-vec: per-instance contributions are computed
+    /// independently on `threads` worker threads, then reduced in fixed
+    /// instance order (s = 0, 1, ..., m-1). Because each contribution
+    /// holds the exact f64 products of the serial loop and the reduction
+    /// replays the serial accumulation order element-by-element, the
+    /// result is bit-identical to [`matvec_serial`](Self::matvec_serial)
+    /// for every thread count. The requested `threads` is always honored
+    /// (the work-size gate lives in the trait path only).
+    ///
+    /// Instances are processed in fixed-size rounds so peak extra memory
+    /// is `PAR_ROUND · n` f64s regardless of m.
+    pub fn matvec_threads(&self, beta: &[f64], threads: usize) -> Vec<f64> {
+        // Instances buffered per reduction round (thread-count independent,
+        // so round boundaries never affect the result).
+        const PAR_ROUND: usize = 32;
+        assert_eq!(beta.len(), self.n);
+        if threads <= 1 || self.m() <= 1 {
+            return self.matvec_serial(beta);
+        }
+        let mut out = vec![0.0f64; self.n];
+        for round in self.instances.chunks(PAR_ROUND) {
+            let partials =
+                par::fan_out(round.len(), threads, |s| self.instance_contrib(&round[s], beta));
+            for p in &partials {
+                for (o, v) in out.iter_mut().zip(p) {
+                    *o += *v;
+                }
+            }
+        }
+        let inv_m = 1.0 / self.m() as f64;
+        for v in out.iter_mut() {
+            *v *= inv_m;
+        }
+        out
+    }
+}
+
+impl KrrOperator for WlshSketch {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn matvec(&self, beta: &[f64]) -> Vec<f64> {
+        self.matvec_threads(beta, self.auto_threads())
+    }
+
     fn predict(&self, queries: &[f32], beta: &[f64]) -> Vec<f64> {
         self.predictor(beta).predict(queries)
     }
 
     fn prepare(&self, beta: &[f64]) -> super::PreparedState {
-        super::PreparedState {
-            slots: self.instances.iter().map(|i| self.loads(i, beta)).collect(),
-        }
+        super::PreparedState { slots: self.loads_all(beta, self.auto_threads()) }
     }
 
     fn predict_prepared(
@@ -177,7 +270,7 @@ impl KrrOperator for WlshSketch {
         _beta: &[f64],
         state: &super::PreparedState,
     ) -> Vec<f64> {
-        self.predict_with_loads(&state.slots, queries)
+        self.predict_with_loads(&state.slots, queries, par::num_threads())
     }
 
     fn name(&self) -> String {
@@ -209,21 +302,64 @@ pub struct WlshPredictor<'a> {
 impl WlshPredictor<'_> {
     /// η̃(q) for each row of `queries` (unscaled feature space).
     pub fn predict(&self, queries: &[f32]) -> Vec<f64> {
-        self.sketch.predict_with_loads(&self.loads, queries)
+        self.predict_threads(queries, par::num_threads())
+    }
+
+    /// As [`predict`](Self::predict) with an explicit worker-thread count
+    /// (1 = the serial reference path).
+    pub fn predict_threads(&self, queries: &[f32], threads: usize) -> Vec<f64> {
+        self.sketch.predict_with_loads(&self.loads, queries, threads)
     }
 }
 
 impl WlshSketch {
     /// Shared predict kernel: hash each query, look its bucket up in every
     /// instance, combine the precomputed loads (paper §4.2's η̃(x)).
-    fn predict_with_loads(&self, loads: &[Vec<f64>], queries: &[f32]) -> Vec<f64> {
+    ///
+    /// Queries are independent, so the batch is split into fixed-size
+    /// chunks fanned out over `threads` workers; per-query arithmetic is
+    /// untouched and results are reassembled in query order, keeping the
+    /// output bit-identical to the serial loop for any thread count.
+    fn predict_with_loads(
+        &self,
+        loads: &[Vec<f64>],
+        queries: &[f32],
+        threads: usize,
+    ) -> Vec<f64> {
+        // Chunk size is fixed (not derived from `threads`) so the work
+        // decomposition never depends on the machine.
         let d = self.family.d;
         let nq = queries.len() / d;
+        if threads <= 1 || nq <= SERIAL_QUERY_CHUNK {
+            return self.predict_query_range(loads, queries, 0, nq);
+        }
+        let n_chunks = nq.div_ceil(SERIAL_QUERY_CHUNK);
+        let pieces = par::fan_out(n_chunks, threads, |c| {
+            let lo = c * SERIAL_QUERY_CHUNK;
+            let hi = ((c + 1) * SERIAL_QUERY_CHUNK).min(nq);
+            self.predict_query_range(loads, queries, lo, hi)
+        });
+        let mut out = Vec::with_capacity(nq);
+        for p in pieces {
+            out.extend(p);
+        }
+        out
+    }
+
+    /// Predict queries `lo..hi` of a row-major batch (the serial kernel).
+    fn predict_query_range(
+        &self,
+        loads: &[Vec<f64>],
+        queries: &[f32],
+        lo: usize,
+        hi: usize,
+    ) -> Vec<f64> {
+        let d = self.family.d;
         let inv = (1.0 / self.scale) as f32;
         let inv_m = 1.0 / self.m() as f64;
-        let mut out = vec![0.0f64; nq];
+        let mut out = vec![0.0f64; hi - lo];
         let mut q_scaled = vec![0.0f32; d];
-        for (qi, o) in out.iter_mut().enumerate() {
+        for (qi, o) in (lo..hi).zip(out.iter_mut()) {
             let q = &queries[qi * d..(qi + 1) * d];
             for (dst, src) in q_scaled.iter_mut().zip(q) {
                 *dst = *src * inv;
@@ -363,6 +499,25 @@ mod tests {
         let qn: f64 = narrow.matvec(&beta).iter().sum();
         let qw: f64 = wide.matvec(&beta).iter().sum();
         assert!(qw > qn, "wide {qw} <= narrow {qn}");
+    }
+
+    #[test]
+    fn parallel_matvec_and_predict_are_bit_identical() {
+        let (n, d, m) = (300, 4, 64);
+        let x = random_x(17, n, d);
+        let sk = WlshSketch::build(&x, n, d, m, "smooth2", 7.0, 1.0, 18);
+        let mut rng = Pcg64::new(19, 0);
+        let beta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let want = sk.matvec_serial(&beta);
+        for threads in [1usize, 2, 8] {
+            assert_eq!(sk.matvec_threads(&beta, threads), want, "threads={threads}");
+        }
+        let q = random_x(20, 600, d);
+        let pred = sk.predictor(&beta);
+        let want_p = pred.predict_threads(&q, 1);
+        for threads in [2usize, 8] {
+            assert_eq!(pred.predict_threads(&q, threads), want_p, "threads={threads}");
+        }
     }
 
     #[test]

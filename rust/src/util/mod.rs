@@ -1,10 +1,12 @@
 //! Offline-substrate utilities: PRNG, JSON, CLI parsing, property testing,
-//! and wall-clock instrumentation. These replace crates (`rand`,
-//! `serde_json`, `clap`, `proptest`, `criterion`) that are not available in
-//! the offline vendored registry — see DESIGN.md §5.
+//! scoped-thread fan-out, and wall-clock instrumentation. These replace
+//! crates (`rand`, `serde_json`, `clap`, `proptest`, `criterion`, `rayon`)
+//! that are not available in the offline vendored registry — see
+//! DESIGN.md §5.
 
 pub mod cli;
 pub mod json;
+pub mod par;
 pub mod prop;
 pub mod rng;
 pub mod timer;

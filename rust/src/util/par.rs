@@ -1,0 +1,117 @@
+//! Scoped-thread fan-out — the crate's one parallel-execution primitive
+//! (rayon is unavailable in the offline registry; std::thread::scope is
+//! enough for the embarrassingly-parallel loops this repo has: per-LSH-
+//! instance sketch work and per-query-chunk prediction work).
+//!
+//! Determinism contract: `fan_out(n, threads, f)` returns exactly
+//! `(0..n).map(f)` in index order, for every thread count. Each index is
+//! evaluated once, by exactly one thread, and the results are stitched
+//! back together in index order — so any caller that reduces the returned
+//! vector sequentially gets a bit-identical result regardless of
+//! parallelism. Callers must NOT make `f` depend on which thread runs it.
+
+use std::sync::OnceLock;
+
+/// Worker-thread budget: `WLSH_THREADS` env override, else the machine's
+/// available parallelism. Cached after first read (called on hot paths).
+pub fn num_threads() -> usize {
+    static CACHED: OnceLock<usize> = OnceLock::new();
+    *CACHED.get_or_init(|| {
+        if let Ok(v) = std::env::var("WLSH_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    })
+}
+
+/// Evaluate `f(0), f(1), ..., f(n-1)` across up to `threads` scoped worker
+/// threads and return the results in index order.
+///
+/// Indices are split into contiguous chunks (one per worker, like
+/// `coordinator/router.rs`); results are concatenated chunk-by-chunk, so
+/// the output ordering — and therefore any order-sensitive reduction the
+/// caller performs — is independent of `threads`.
+pub fn fan_out<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = if threads > n { n } else { threads };
+    if workers <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let chunk = n.div_ceil(workers);
+    let f = &f;
+    let mut out: Vec<T> = Vec::with_capacity(n);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let lo = w * chunk;
+            let hi = ((w + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            handles.push(scope.spawn(move || (lo..hi).map(f).collect::<Vec<T>>()));
+        }
+        for h in handles {
+            out.extend(h.join().expect("fan_out worker panicked"));
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_serial_map_for_every_thread_count() {
+        let want: Vec<usize> = (0..97).map(|i| i * i + 1).collect();
+        for threads in [1, 2, 3, 8, 200] {
+            let got = fan_out(97, threads, |i| i * i + 1);
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn handles_empty_and_tiny_inputs() {
+        assert_eq!(fan_out(0, 4, |i| i), Vec::<usize>::new());
+        assert_eq!(fan_out(1, 4, |i| i + 10), vec![10]);
+        assert_eq!(fan_out(2, 16, |i| i), vec![0, 1]);
+    }
+
+    #[test]
+    fn every_index_evaluated_exactly_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let calls: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
+        let out = fan_out(64, 8, |i| {
+            calls[i].fetch_add(1, Ordering::SeqCst);
+            i
+        });
+        assert_eq!(out, (0..64).collect::<Vec<_>>());
+        assert!(calls.iter().all(|c| c.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn ordered_reduction_is_thread_count_invariant() {
+        // The contract the WLSH mat-vec relies on: summing the returned
+        // per-index vectors in index order is bit-identical for any
+        // thread count.
+        let term = |i: usize| 1.0f64 / (i as f64 + 0.37);
+        let reduce = |parts: Vec<f64>| parts.iter().fold(0.0f64, |a, &b| a + b);
+        let want = reduce(fan_out(1000, 1, term));
+        for threads in [2, 5, 8] {
+            let got = reduce(fan_out(1000, threads, term));
+            assert!(got == want, "threads={threads}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn num_threads_is_positive() {
+        assert!(num_threads() >= 1);
+    }
+}

@@ -1,0 +1,126 @@
+//! Property tests for `lsh::BucketTable` (the "lists L_j" structure of
+//! paper §4), driven by the `util::prop` harness: dense renumbering,
+//! lookup consistency, bucket accounting, and the exact memory formula.
+
+use std::collections::HashMap;
+
+use wlsh_krr::lsh::BucketTable;
+use wlsh_krr::util::prop::{gens, prop_check};
+use wlsh_krr::util::rng::Pcg64;
+
+/// Random id vector with a controlled number of distinct raw ids, plus
+/// some sparse large ids to exercise the hash map (not just small keys).
+fn gen_ids(rng: &mut Pcg64) -> Vec<u64> {
+    let n = gens::size(rng, 1, 400);
+    let universe = gens::size(rng, 1, 64) as u64;
+    (0..n)
+        .map(|_| {
+            if rng.uniform() < 0.1 {
+                // occasional far-flung raw id (mimics the u64 mix output)
+                rng.next_u64() | (1 << 63)
+            } else {
+                rng.below(universe)
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_lookup_is_consistent_with_bucket_of() {
+    prop_check(1, 60, gen_ids, |ids| {
+        let t = BucketTable::build(ids);
+        for (i, &id) in ids.iter().enumerate() {
+            match t.lookup(id) {
+                Some(b) if b == t.bucket_of[i] => {}
+                other => {
+                    return Err(format!(
+                        "lookup({id}) = {other:?} but bucket_of[{i}] = {}",
+                        t.bucket_of[i]
+                    ))
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lookup_misses_absent_ids() {
+    prop_check(2, 60, gen_ids, |ids| {
+        let t = BucketTable::build(ids);
+        // find an id that is definitely not present
+        let absent = (0u64..).find(|c| !ids.contains(c)).unwrap();
+        if t.lookup(absent).is_some() {
+            return Err(format!("lookup({absent}) hit an absent id"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_n_buckets_equals_distinct_ids_and_ids_share_buckets_iff_equal() {
+    prop_check(3, 60, gen_ids, |ids| {
+        let t = BucketTable::build(ids);
+        let mut first_seen: HashMap<u64, u32> = HashMap::new();
+        for (i, &id) in ids.iter().enumerate() {
+            let b = *first_seen.entry(id).or_insert(t.bucket_of[i]);
+            if t.bucket_of[i] != b {
+                return Err(format!("id {id} got two buckets: {} and {b}", t.bucket_of[i]));
+            }
+        }
+        if t.n_buckets != first_seen.len() {
+            return Err(format!(
+                "n_buckets {} != distinct ids {}",
+                t.n_buckets,
+                first_seen.len()
+            ));
+        }
+        // dense: every index below n_buckets, assigned in first-appearance order
+        let mut expected_next = 0u32;
+        for (i, &id) in ids.iter().enumerate() {
+            if ids[..i].iter().all(|&p| p != id) {
+                if t.bucket_of[i] != expected_next {
+                    return Err(format!(
+                        "first occurrence of {id} got bucket {} (want {expected_next})",
+                        t.bucket_of[i]
+                    ));
+                }
+                expected_next += 1;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sizes_histogram_accounts_for_every_point() {
+    prop_check(4, 60, gen_ids, |ids| {
+        let t = BucketTable::build(ids);
+        let sizes = t.sizes();
+        if sizes.len() != t.n_buckets {
+            return Err(format!("sizes len {} != n_buckets {}", sizes.len(), t.n_buckets));
+        }
+        if sizes.iter().any(|&s| s == 0) {
+            return Err("empty bucket in histogram".into());
+        }
+        let total: u32 = sizes.iter().sum();
+        if total as usize != ids.len() {
+            return Err(format!("sizes sum {total} != n {}", ids.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_memory_accounting_matches_structure() {
+    // Lemma 27: O(n) words. The estimate is exactly 4 bytes per point for
+    // the dense index plus 16 per distinct bucket for the raw-id map.
+    prop_check(5, 60, gen_ids, |ids| {
+        let t = BucketTable::build(ids);
+        let want = ids.len() * 4 + t.n_buckets * 16;
+        if t.memory_bytes() != want {
+            return Err(format!("memory_bytes {} != {want}", t.memory_bytes()));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,127 @@
+//! CLI smoke tests: spawn the `wlsh-krr` binary on small synthetic
+//! workloads, assert the exit code, and parse the JSON it prints.
+
+use std::process::{Command, Output};
+
+use wlsh_krr::util::json::Json;
+
+fn run(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_wlsh-krr"))
+        .args(args)
+        .output()
+        .expect("spawn wlsh-krr binary")
+}
+
+/// Parse the last non-empty stdout line as a JSON object.
+fn last_json(out: &Output) -> Json {
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let line = stdout
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .next_back()
+        .unwrap_or_else(|| panic!("no stdout; stderr: {}", String::from_utf8_lossy(&out.stderr)));
+    Json::parse(line).unwrap_or_else(|e| panic!("bad JSON {line:?}: {e}"))
+}
+
+#[test]
+fn train_reports_finite_rmse_json() {
+    let out = run(&[
+        "train",
+        "--dataset",
+        "wine",
+        "--n-max",
+        "400",
+        "--budget",
+        "16",
+        "--cg-max-iters",
+        "40",
+        "--seed",
+        "7",
+    ]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let j = last_json(&out);
+    let rmse = j.get("rmse").and_then(Json::as_f64).expect("rmse field");
+    assert!(rmse.is_finite() && rmse > 0.0, "rmse {rmse}");
+    let op = j.get("operator").and_then(Json::as_str).expect("operator field");
+    assert!(op.contains("wlsh"), "operator {op:?}");
+    assert!(j.get("cg_iters").and_then(Json::as_usize).unwrap() > 0);
+    assert!(j.get("memory_bytes").and_then(Json::as_usize).unwrap() > 0);
+}
+
+#[test]
+fn train_supports_exact_methods_too() {
+    let out = run(&[
+        "train",
+        "--dataset",
+        "wine",
+        "--n-max",
+        "200",
+        "--method",
+        "exact-laplace",
+        "--seed",
+        "3",
+    ]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let j = last_json(&out);
+    assert!(j.get("rmse").and_then(Json::as_f64).unwrap().is_finite());
+    assert!(j
+        .get("operator")
+        .and_then(Json::as_str)
+        .unwrap()
+        .contains("laplace"));
+}
+
+#[test]
+fn ose_reports_spectral_sandwich_epsilon() {
+    let out = run(&["ose", "--n", "48", "--m", "32", "--lambda", "2.0", "--seed", "3"]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let j = last_json(&out);
+    let eps = j.get("eps").and_then(Json::as_f64).expect("eps field");
+    assert!(eps.is_finite() && eps >= 0.0, "eps {eps}");
+    let lo = j.get("lambda_min").and_then(Json::as_f64).unwrap();
+    let hi = j.get("lambda_max").and_then(Json::as_f64).unwrap();
+    assert!(lo <= hi, "lambda_min {lo} > lambda_max {hi}");
+    assert_eq!(j.get("n").and_then(Json::as_usize), Some(48));
+    assert_eq!(j.get("m").and_then(Json::as_usize), Some(32));
+}
+
+#[test]
+fn gp_emits_one_json_record_per_method() {
+    let out = run(&["gp", "--cov", "se", "--dim", "2", "--n", "160", "--seed", "5"]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let records: Vec<Json> = stdout
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| Json::parse(l).unwrap_or_else(|e| panic!("bad JSON {l:?}: {e}")))
+        .collect();
+    assert_eq!(records.len(), 4, "one record per regression kernel");
+    for r in &records {
+        assert_eq!(r.get("cov").and_then(Json::as_str), Some("se"));
+        let rmse = r.get("rmse").and_then(Json::as_f64).unwrap();
+        assert!(rmse.is_finite() && rmse >= 0.0);
+    }
+    let methods: Vec<&str> = records
+        .iter()
+        .map(|r| r.get("method").and_then(Json::as_str).unwrap())
+        .collect();
+    assert!(methods.contains(&"exact-wlsh"), "{methods:?}");
+}
+
+#[test]
+fn unknown_subcommand_is_misuse() {
+    let out = run(&["definitely-not-a-command"]);
+    // usage on stderr, nonzero exit so scripts catch the typo
+    assert!(!out.status.success());
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("usage"), "stderr: {stderr}");
+}
+
+#[test]
+fn bare_invocation_prints_usage_and_exits_cleanly() {
+    let out = run(&[]);
+    assert!(out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("usage"), "stderr: {stderr}");
+}

@@ -1,0 +1,129 @@
+//! The parallel WLSH hot paths must be *bit-identical* to the serial
+//! reference — across thread counts (1, 2, 8) and across repeated runs
+//! with the same seed. This is the determinism contract that makes the
+//! scoped-thread fan-out safe to put under CG (where any drift would
+//! compound across iterations) and under the serving stack (where two
+//! replicas must answer identically).
+
+use wlsh_krr::config::KrrConfig;
+use wlsh_krr::coordinator::Trainer;
+use wlsh_krr::data::synthetic_by_name;
+use wlsh_krr::sketch::{KrrOperator, WlshSketch};
+use wlsh_krr::util::rng::Pcg64;
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+
+fn random_x(seed: u64, n: usize, d: usize) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed, 0);
+    (0..n * d).map(|_| rng.normal() as f32).collect()
+}
+
+fn random_beta(seed: u64, n: usize) -> Vec<f64> {
+    let mut rng = Pcg64::new(seed, 1);
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+/// m ≥ 64, and the shape clears both of the trait paths' serial gates
+/// (n = 2048 ≥ PAR_MIN_ROWS, n·m = 147,456 ≥ PAR_MIN_WORK = 131,072), so
+/// `matvec`/`prepare`/`predictor` really fan out — not just the explicit
+/// `*_threads` calls.
+fn big_sketch(seed: u64) -> (WlshSketch, Vec<f64>, Vec<f32>) {
+    let (n, d, m) = (2048, 8, 72);
+    let x = random_x(seed, n, d);
+    let sk = WlshSketch::build(&x, n, d, m, "smooth2", 7.0, 1.2, seed + 1);
+    let beta = random_beta(seed + 2, n);
+    let q = random_x(seed + 3, 700, d);
+    (sk, beta, q)
+}
+
+#[test]
+fn matvec_bit_identical_across_thread_counts() {
+    let (sk, beta, _) = big_sketch(100);
+    let want = sk.matvec_serial(&beta);
+    for threads in THREAD_COUNTS {
+        let got = sk.matvec_threads(&beta, threads);
+        assert_eq!(got, want, "matvec diverged at threads={threads}");
+    }
+    // the trait path (auto thread count) must agree too
+    assert_eq!(sk.matvec(&beta), want, "trait matvec diverged");
+}
+
+#[test]
+fn matvec_bit_identical_across_repeated_runs() {
+    for threads in THREAD_COUNTS {
+        let (sk_a, beta_a, _) = big_sketch(200);
+        let (sk_b, beta_b, _) = big_sketch(200);
+        assert_eq!(beta_a, beta_b);
+        let ya = sk_a.matvec_threads(&beta_a, threads);
+        let yb = sk_b.matvec_threads(&beta_b, threads);
+        assert_eq!(ya, yb, "repeated run diverged at threads={threads}");
+    }
+}
+
+#[test]
+fn prepared_loads_bit_identical_across_thread_counts() {
+    let (sk, beta, _) = big_sketch(300);
+    let want = sk.loads_all(&beta, 1);
+    for threads in THREAD_COUNTS {
+        assert_eq!(sk.loads_all(&beta, threads), want, "loads diverged at threads={threads}");
+    }
+    // prepare() (used by the serving stack) routes through the same kernel
+    let state = sk.prepare(&beta);
+    assert_eq!(state.slots, want, "prepare diverged from serial loads");
+}
+
+#[test]
+fn predict_bit_identical_across_thread_counts() {
+    let (sk, beta, q) = big_sketch(400);
+    let predictor = sk.predictor(&beta);
+    let want = predictor.predict_threads(&q, 1);
+    for threads in THREAD_COUNTS {
+        let got = predictor.predict_threads(&q, threads);
+        assert_eq!(got, want, "predict diverged at threads={threads}");
+    }
+    // trait predict and prepared predict must match the serial reference
+    assert_eq!(sk.predict(&q, &beta), want);
+    let state = sk.prepare(&beta);
+    assert_eq!(sk.predict_prepared(&q, &beta, &state), want);
+}
+
+#[test]
+fn predict_bit_identical_across_repeated_runs() {
+    for threads in THREAD_COUNTS {
+        let (sk_a, beta_a, qa) = big_sketch(500);
+        let (sk_b, beta_b, qb) = big_sketch(500);
+        let pa = sk_a.predictor(&beta_a).predict_threads(&qa, threads);
+        let pb = sk_b.predictor(&beta_b).predict_threads(&qb, threads);
+        assert_eq!(pa, pb, "repeated predict diverged at threads={threads}");
+    }
+}
+
+#[test]
+fn trained_model_is_thread_count_invariant_end_to_end() {
+    // Full pipeline: the CG solve consumes the parallel mat-vec, so any
+    // nondeterminism would surface as different β. Train the same config
+    // twice with different worker counts for the sketch build and compare
+    // predictions exactly.
+    let mut ds = synthetic_by_name("wine", Some(600), 9).unwrap();
+    ds.standardize();
+    let (tr, te) = ds.split(480, 10);
+    // n = 480 training rows stays under PAR_MIN_ROWS, so the CG mat-vecs
+    // here run serial by design (the threaded trait path is covered by the
+    // big_sketch tests above); what this asserts is that the worker-sharded
+    // sketch *build* is deterministic all the way through solve + predict.
+    let mk = |workers: usize| {
+        let cfg = KrrConfig {
+            method: "wlsh".into(),
+            budget: 300,
+            scale: 3.0,
+            lambda: 0.5,
+            workers,
+            ..Default::default()
+        };
+        Trainer::new(cfg).train(&tr)
+    };
+    let a = mk(1);
+    let b = mk(4);
+    assert_eq!(a.beta, b.beta, "CG solutions diverged across worker counts");
+    assert_eq!(a.predict(&te.x), b.predict(&te.x));
+}

@@ -4,7 +4,7 @@
 //! they are skipped (with a loud message) if the artifacts are missing.
 
 use wlsh_krr::kernels::Kernel;
-use wlsh_krr::lsh::{BucketTable, IdMode, LshFamily};
+use wlsh_krr::lsh::{IdMode, LshFamily};
 use wlsh_krr::runtime::Runtime;
 use wlsh_krr::sketch::{ExactKernelOp, KrrOperator, RffSketch, WlshSketch};
 use wlsh_krr::util::rng::Pcg64;
