@@ -57,6 +57,7 @@ fn main() {
         cg_tol: 1e-4,
         workers: args.get_usize("workers", 2),
         seed,
+        ..Default::default()
     };
     let trainer = Trainer::new(cfg.clone());
     let t1 = Instant::now();
@@ -108,6 +109,7 @@ fn main() {
             cg_rel_residual: cg.rel_residual,
             converged: cg.converged,
             operator: "wlsh".into(),
+            precond: "none".into(),
             memory_bytes: 0,
         },
     ));

@@ -1,7 +1,9 @@
 //! F-PERF — the paper's cost model (footnote 2, Lemma 27): one CG
 //! iteration costs ≈ n² (exact), ≈ nD (RFF), ≈ nm (WLSH). This bench
-//! measures mat-vec wall time over n for each operator, plus the
-//! WLSH preprocessing (hash+table) rate and the XLA-backend mat-vec.
+//! measures mat-vec wall time over n for each operator — the production
+//! fused-CSR WLSH path side by side with the kept pre-fusion baseline
+//! (`matvec_unfused`) — plus the WLSH preprocessing (hash+table) rate and
+//! the XLA-backend mat-vec.
 
 #[path = "common.rs"]
 mod common;
@@ -30,6 +32,8 @@ fn main() {
         ("n", 8),
         ("wlsh", 10),
         ("wlsh ns/pt", 11),
+        ("unfused", 10),
+        ("fused gain", 10),
         ("rff", 10),
         ("exact", 10),
         ("build(wlsh)", 12),
@@ -44,8 +48,12 @@ fn main() {
         let build_secs = tb.elapsed().as_secs_f64();
         // single-threaded on purpose: this table measures the paper's
         // per-iteration cost model (ops, not cores); the parallel section
-        // below measures threading separately.
+        // below measures threading separately. "wlsh" is the production
+        // fused-CSR path, "unfused" the pre-fusion per-instance baseline.
         let s_wlsh = bench("wlsh", by_scale(0.05, 0.3, 1.0), || wlsh.matvec_serial(&beta));
+        let s_unfused = bench("wlsh-unfused", by_scale(0.05, 0.3, 1.0), || {
+            wlsh.matvec_unfused(&beta, 1)
+        });
         let rff = RffSketch::build(&x, n, d, dd, 4.0, 2);
         let s_rff = bench("rff", by_scale(0.05, 0.3, 1.0), || rff.matvec(&beta));
         let exact_secs = if n <= exact_cap {
@@ -58,6 +66,8 @@ fn main() {
             n.to_string(),
             secs(s_wlsh.min_secs),
             format!("{:.1}", s_wlsh.min_secs / (n * m) as f64 * 1e9),
+            secs(s_unfused.min_secs),
+            format!("{:.2}x", s_unfused.min_secs / s_wlsh.min_secs),
             secs(s_rff.min_secs),
             exact_secs.map(secs).unwrap_or_else(|| "skip".into()),
             secs(build_secs),
@@ -68,6 +78,7 @@ fn main() {
                 .field_usize("n", n)
                 .field_usize("d", d)
                 .field_f64("wlsh_secs", s_wlsh.min_secs)
+                .field_f64("wlsh_unfused_secs", s_unfused.min_secs)
                 .field_f64("rff_secs", s_rff.min_secs)
                 .field_f64("exact_secs", exact_secs.unwrap_or(f64::NAN))
                 .field_f64("wlsh_build_secs", build_secs)
@@ -77,7 +88,10 @@ fn main() {
     println!(
         "\ntheory: wlsh scales linearly in n·m, rff in n·D, exact in n²·d —\n\
          the crossover puts WLSH ahead of exact past a few thousand rows\n\
-         and ahead of RFF whenever m << D."
+         and ahead of RFF whenever m << D. \"fused gain\" is the CSR fused\n\
+         path's speedup over the pre-fusion per-instance baseline (same\n\
+         terms, contiguous member/weight walks, one buffer per 8-instance\n\
+         block)."
     );
 
     // Parallel WLSH mat-vec: scoped-thread fan-out over instances, reduced

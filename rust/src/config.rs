@@ -89,6 +89,12 @@ pub struct KrrConfig {
     /// CG iteration cap and tolerance.
     pub cg_max_iters: usize,
     pub cg_tol: f64,
+    /// CG preconditioner: "none" | "jacobi" | "nystrom".
+    pub precond: String,
+    /// Landmark count (rank) of the Nyström preconditioner.
+    pub precond_rank: usize,
+    /// Emit per-iteration CG progress lines to stderr.
+    pub cg_verbose: bool,
     /// Sketch workers (instance shards) for the trainer.
     pub workers: usize,
     pub seed: u64,
@@ -105,6 +111,9 @@ impl Default for KrrConfig {
             lambda: 1.0,
             cg_max_iters: 100,
             cg_tol: 1e-4,
+            precond: "none".into(),
+            precond_rank: 64,
+            cg_verbose: false,
             workers: 1,
             seed: 42,
         }
@@ -124,6 +133,9 @@ impl KrrConfig {
             lambda: cfg.get_f64("krr", "lambda", d.lambda),
             cg_max_iters: cfg.get_usize("krr", "cg_max_iters", d.cg_max_iters),
             cg_tol: cfg.get_f64("krr", "cg_tol", d.cg_tol),
+            precond: cfg.get_str("krr", "precond", &d.precond).to_string(),
+            precond_rank: cfg.get_usize("krr", "precond_rank", d.precond_rank),
+            cg_verbose: cfg.get_bool("krr", "cg_verbose", d.cg_verbose),
             workers: cfg.get_usize("krr", "workers", d.workers),
             seed: cfg.get_usize("krr", "seed", d.seed as usize) as u64,
         }
@@ -194,12 +206,26 @@ mod tests {
 
     #[test]
     fn krr_config_roundtrip() {
-        let cfg = Config::parse("[krr]\nmethod = rff\nbudget = 5000\nseed = 9\n").unwrap();
+        let cfg = Config::parse(
+            "[krr]\nmethod = rff\nbudget = 5000\nseed = 9\nprecond = jacobi\nprecond_rank = 32\ncg_verbose = true\n",
+        )
+        .unwrap();
         let k = KrrConfig::from_config(&cfg);
         assert_eq!(k.method, "rff");
         assert_eq!(k.budget, 5000);
         assert_eq!(k.seed, 9);
+        assert_eq!(k.precond, "jacobi");
+        assert_eq!(k.precond_rank, 32);
+        assert!(k.cg_verbose);
         assert_eq!(k.cg_max_iters, KrrConfig::default().cg_max_iters);
+    }
+
+    #[test]
+    fn precond_defaults_are_off() {
+        let k = KrrConfig::default();
+        assert_eq!(k.precond, "none");
+        assert_eq!(k.precond_rank, 64);
+        assert!(!k.cg_verbose);
     }
 
     #[test]

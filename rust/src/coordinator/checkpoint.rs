@@ -27,6 +27,8 @@ pub fn save(model: &TrainedModel, path: &Path) -> std::io::Result<()> {
         .field_f64("lambda", c.lambda)
         .field_usize("cg_max_iters", c.cg_max_iters)
         .field_f64("cg_tol", c.cg_tol)
+        .field_str("precond", &c.precond)
+        .field_usize("precond_rank", c.precond_rank)
         .field_usize("seed", c.seed as usize)
         .field_usize("n", model.beta.len())
         .finish();
@@ -66,6 +68,17 @@ pub fn load(path: &Path, train: &Dataset) -> Result<TrainedModel, String> {
         lambda: g("lambda")?,
         cg_max_iters: g("cg_max_iters")? as usize,
         cg_tol: g("cg_tol")?,
+        // absent in pre-PCG checkpoints — default off
+        precond: header
+            .get("precond")
+            .and_then(Json::as_str)
+            .unwrap_or("none")
+            .into(),
+        precond_rank: header
+            .get("precond_rank")
+            .and_then(Json::as_usize)
+            .unwrap_or_else(|| KrrConfig::default().precond_rank),
+        cg_verbose: false,
         workers: 1,
         seed: g("seed")? as u64,
     };
@@ -91,6 +104,7 @@ pub fn load(path: &Path, train: &Dataset) -> Result<TrainedModel, String> {
             cg_rel_residual: 0.0,
             converged: true,
             operator: "restored".into(),
+            precond: "restored".into(),
             memory_bytes: 0,
         },
     ))

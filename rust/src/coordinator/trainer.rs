@@ -1,6 +1,8 @@
 //! Training orchestration: build the requested kernel operator (sharding
 //! WLSH instance construction across worker threads), solve the ridge
-//! system by CG, and package a servable model.
+//! system by CG — optionally preconditioned (Jacobi from the operator
+//! diagonal, or rank-r Nyström of the method's target kernel) via the
+//! `precond` config knob — and package a servable model.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -12,7 +14,7 @@ use crate::lsh::{IdMode, LshFamily};
 use crate::sketch::{
     ExactKernelOp, KrrOperator, NystromSketch, RffSketch, WlshSketch,
 };
-use crate::solver::{solve_krr, CgOptions};
+use crate::solver::{solve_krr, solve_krr_pcg, CgOptions, Preconditioner};
 use crate::util::par;
 use crate::util::rng::Pcg64;
 
@@ -49,6 +51,9 @@ pub struct TrainReport {
     pub cg_rel_residual: f64,
     pub converged: bool,
     pub operator: String,
+    /// Preconditioner the solve actually used ("none" | "jacobi" |
+    /// "nystrom") — may differ from the config when a fallback fired.
+    pub precond: String,
     pub memory_bytes: usize,
 }
 
@@ -126,22 +131,80 @@ impl Trainer {
         WlshSketch::from_parts(instances, family, IdMode::U64, x_scaled, ds.n, c.scale)
     }
 
-    /// Full training run: operator build + CG solve.
+    /// Kernel the configured method targets — used to build the Nyström
+    /// preconditioner against the same kernel the operator approximates.
+    fn target_kernel(&self) -> Kernel {
+        let c = &self.config;
+        match c.method.as_str() {
+            "wlsh" | "exact-wlsh" => Kernel::wlsh(&c.bucket, c.gamma_shape, c.scale),
+            "exact-laplace" => Kernel::laplace(c.scale),
+            "exact-matern" => Kernel::matern52(c.scale),
+            // exact-se, rff, nystrom, and anything new default to SE.
+            _ => Kernel::squared_exp(c.scale),
+        }
+    }
+
+    /// Build the configured preconditioner, falling back to `Identity`
+    /// (with a stderr warning) when the operator can't support it.
+    fn build_preconditioner(&self, ds: &Dataset, op: &dyn KrrOperator) -> Preconditioner {
+        let c = &self.config;
+        match c.precond.as_str() {
+            "" | "none" => Preconditioner::Identity,
+            "jacobi" => match op.diag() {
+                Some(diag) => Preconditioner::jacobi(&diag, c.lambda),
+                None => {
+                    eprintln!(
+                        "warning: {} exposes no cheap diagonal; solving unpreconditioned",
+                        op.name()
+                    );
+                    Preconditioner::Identity
+                }
+            },
+            "nystrom" => {
+                let rank = c.precond_rank.clamp(1, ds.n);
+                // decorrelate the landmark sample from the sketch seed
+                let nys = NystromSketch::build(
+                    &ds.x,
+                    ds.n,
+                    ds.d,
+                    rank,
+                    self.target_kernel(),
+                    c.seed.wrapping_add(0x9e37_79b9_7f4a_7c15),
+                );
+                match nys.ridge_precond(c.lambda) {
+                    Ok(p) => Preconditioner::Nystrom(p),
+                    Err(e) => {
+                        eprintln!(
+                            "warning: nystrom preconditioner unavailable ({e}); solving unpreconditioned"
+                        );
+                        Preconditioner::Identity
+                    }
+                }
+            }
+            other => panic!("unknown preconditioner {other:?} (none|jacobi|nystrom)"),
+        }
+    }
+
+    /// Full training run: operator build + (preconditioned) CG solve.
     pub fn train(&self, train: &Dataset) -> TrainedModel {
         let t0 = Instant::now();
         let op = self.build_operator(train);
         let build_secs = t0.elapsed().as_secs_f64();
         let t1 = Instant::now();
-        let cg = solve_krr(
-            op.as_ref(),
-            &train.y,
-            self.config.lambda,
-            &CgOptions {
-                max_iters: self.config.cg_max_iters,
-                tol: self.config.cg_tol,
-                verbose: false,
-            },
-        );
+        let opts = CgOptions {
+            max_iters: self.config.cg_max_iters,
+            tol: self.config.cg_tol,
+            verbose: self.config.cg_verbose,
+        };
+        let precond = self.build_preconditioner(train, op.as_ref());
+        let cg = match &precond {
+            // keep the plain-CG code path (and its exact iterate sequence)
+            // when no preconditioning was requested
+            Preconditioner::Identity => {
+                solve_krr(op.as_ref(), &train.y, self.config.lambda, &opts)
+            }
+            m => solve_krr_pcg(op.as_ref(), &train.y, self.config.lambda, &opts, m),
+        };
         let solve_secs = t1.elapsed().as_secs_f64();
         let report = TrainReport {
             build_secs,
@@ -150,6 +213,7 @@ impl Trainer {
             cg_rel_residual: cg.rel_residual,
             converged: cg.converged,
             operator: op.name(),
+            precond: precond.name().to_string(),
             memory_bytes: op.memory_bytes(),
         };
         TrainedModel::assemble(op, cg.beta, self.config.clone(), report)
@@ -202,6 +266,56 @@ mod tests {
         for i in 0..ds.n {
             assert!((ya[i] - yb[i]).abs() < 1e-12, "row {i}: {} vs {}", ya[i], yb[i]);
         }
+    }
+
+    #[test]
+    fn preconditioned_training_matches_plain_solution() {
+        let ds = small_ds();
+        let (tr, te) = ds.split(240, 8);
+        let base = KrrConfig {
+            method: "wlsh".into(),
+            budget: 64,
+            scale: 3.0,
+            lambda: 0.2,
+            cg_max_iters: 500,
+            cg_tol: 1e-8,
+            ..Default::default()
+        };
+        let plain = Trainer::new(base.clone()).train(&tr);
+        assert_eq!(plain.report.precond, "none");
+        let want = plain.predict(&te.x);
+        for precond in ["jacobi", "nystrom"] {
+            let cfg = KrrConfig { precond: precond.into(), precond_rank: 48, ..base.clone() };
+            let model = Trainer::new(cfg).train(&tr);
+            assert_eq!(model.report.precond, precond);
+            assert!(model.report.converged, "{precond} did not converge");
+            let got = model.predict(&te.x);
+            for i in 0..te.n {
+                assert!(
+                    (got[i] - want[i]).abs() < 1e-4 * (1.0 + want[i].abs()),
+                    "{precond} query {i}: {} vs {}",
+                    got[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn jacobi_falls_back_when_operator_has_no_diagonal() {
+        // rff exposes no cheap diagonal yet — the trainer must warn and
+        // solve unpreconditioned rather than fail.
+        let ds = small_ds();
+        let cfg = KrrConfig {
+            method: "rff".into(),
+            budget: 128,
+            scale: 3.0,
+            precond: "jacobi".into(),
+            ..Default::default()
+        };
+        let model = Trainer::new(cfg).train(&ds);
+        assert_eq!(model.report.precond, "none");
+        assert!(model.report.cg_iters > 0);
     }
 
     #[test]

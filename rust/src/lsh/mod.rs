@@ -10,7 +10,9 @@
 //!   i32 arithmetic), used by the XLA backend and the parity tests.
 //!
 //! `BucketTable` renumbers raw ids into dense `[0, B)` indices (the "lists
-//! L_j" of §4) enabling the O(n) mat-vec and O(1) query lookups.
+//! L_j" of §4) and stores the inverted lists flat in CSR form
+//! (`offsets` + `members`, built by a stable counting sort), enabling the
+//! O(n) mat-vec as two contiguous array walks and O(1) query lookups.
 
 mod table;
 

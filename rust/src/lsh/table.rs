@@ -1,5 +1,17 @@
 //! Dense bucket renumbering — the "lists L_j" data structure of paper §4:
 //! O(dn) preprocessing, O(n) memory, O(1) bucket lookup.
+//!
+//! Layout: in addition to the per-point dense index (`bucket_of`, the
+//! renumbering map), the table stores the inverted lists in **CSR form** —
+//! one flat `offsets` array (bucket j's members live at
+//! `members[offsets[j]..offsets[j+1]]`) plus one flat `members` array,
+//! built by a stable counting sort over `bucket_of`. The CSR arrays are
+//! what make the WLSH mat-vec's bucket-load accumulation a contiguous walk
+//! (cf. Wu et al., "Revisiting Random Binning Features", KDD 2018, on
+//! cache-friendly flat binning layouts) instead of a random scatter, and
+//! the stable sort keeps members in ascending point order inside each
+//! bucket, so per-bucket floating-point reductions replay the exact
+//! point-order accumulation of the scatter formulation (bit-identical).
 
 use std::collections::HashMap;
 use std::hash::{BuildHasherDefault, Hasher};
@@ -42,19 +54,28 @@ impl Hasher for FxHasher {
 
 pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
 
-/// Renumbered bucket assignment for one LSH instance.
+/// Renumbered bucket assignment for one LSH instance, with the inverted
+/// bucket lists stored flat (CSR).
 #[derive(Clone, Debug)]
 pub struct BucketTable {
     /// Dense bucket index of each point, in [0, n_buckets).
     pub bucket_of: Vec<u32>,
     /// Number of distinct non-empty buckets.
     pub n_buckets: usize,
+    /// CSR row pointers: bucket j's members are
+    /// `members[offsets[j] as usize..offsets[j+1] as usize]`.
+    /// Length `n_buckets + 1`, `offsets[0] == 0`, monotone non-decreasing.
+    pub offsets: Vec<u32>,
+    /// CSR column indices: point ids grouped by bucket, in ascending point
+    /// order within each bucket (stable counting sort). Length n.
+    pub members: Vec<u32>,
     /// Raw id → dense index (query-time lookups).
     map: HashMap<u64, u32, FxBuildHasher>,
 }
 
 impl BucketTable {
-    /// Build from raw ids (O(n)).
+    /// Build from raw ids: one hash pass for the dense renumbering, then a
+    /// counting sort into the CSR arrays (O(n) total).
     pub fn build(ids: &[u64]) -> BucketTable {
         let mut map: HashMap<u64, u32, FxBuildHasher> =
             HashMap::with_capacity_and_hasher(ids.len() / 2 + 1, FxBuildHasher::default());
@@ -64,7 +85,23 @@ impl BucketTable {
             let b = *map.entry(id).or_insert(next);
             bucket_of.push(b);
         }
-        BucketTable { bucket_of, n_buckets: map.len(), map }
+        let n_buckets = map.len();
+        // Counting sort: histogram → exclusive prefix sum → stable placement.
+        let mut offsets = vec![0u32; n_buckets + 1];
+        for &b in &bucket_of {
+            offsets[b as usize + 1] += 1;
+        }
+        for j in 0..n_buckets {
+            offsets[j + 1] += offsets[j];
+        }
+        let mut cursor: Vec<u32> = offsets[..n_buckets].to_vec();
+        let mut members = vec![0u32; bucket_of.len()];
+        for (i, &b) in bucket_of.iter().enumerate() {
+            let slot = &mut cursor[b as usize];
+            members[*slot as usize] = i as u32;
+            *slot += 1;
+        }
+        BucketTable { bucket_of, n_buckets, offsets, members, map }
     }
 
     /// Dense index of a raw id, if that bucket is non-empty.
@@ -73,18 +110,27 @@ impl BucketTable {
         self.map.get(&raw_id).copied()
     }
 
-    /// Bucket histogram (sizes of each bucket).
-    pub fn sizes(&self) -> Vec<u32> {
-        let mut s = vec![0u32; self.n_buckets];
-        for &b in &self.bucket_of {
-            s[b as usize] += 1;
-        }
-        s
+    /// The points hashed into bucket `j` (ascending point order).
+    #[inline]
+    pub fn bucket_members(&self, j: usize) -> &[u32] {
+        &self.members[self.offsets[j] as usize..self.offsets[j + 1] as usize]
     }
 
-    /// Memory footprint estimate in bytes (paper Lemma 27: O(n) words).
+    /// Bucket histogram (sizes of each bucket), read off the CSR offsets.
+    pub fn sizes(&self) -> Vec<u32> {
+        (0..self.n_buckets)
+            .map(|j| self.offsets[j + 1] - self.offsets[j])
+            .collect()
+    }
+
+    /// Memory footprint estimate in bytes (paper Lemma 27: O(n) words):
+    /// the dense index and CSR members (4 bytes/point each), the CSR
+    /// offsets (4 bytes/bucket + 4), and the raw-id map (16 bytes/bucket).
     pub fn memory_bytes(&self) -> usize {
-        self.bucket_of.len() * 4 + self.map.len() * 16
+        self.bucket_of.len() * 4
+            + self.members.len() * 4
+            + self.offsets.len() * 4
+            + self.map.len() * 16
     }
 }
 
@@ -126,5 +172,47 @@ mod tests {
         let ids: Vec<u64> = (0..10_000).map(|i| i as u64 % 509).collect();
         let t = BucketTable::build(&ids);
         assert!(t.memory_bytes() < 10_000 * 24);
+    }
+
+    #[test]
+    fn csr_inverts_bucket_of() {
+        let ids = vec![42u64, 7, 42, 99, 7, 42];
+        let t = BucketTable::build(&ids);
+        assert_eq!(t.offsets.len(), t.n_buckets + 1);
+        assert_eq!(t.offsets[0], 0);
+        assert_eq!(*t.offsets.last().unwrap() as usize, ids.len());
+        // bucket of id 42 is 0 (first appearance), members {0, 2, 5}
+        assert_eq!(t.bucket_members(0), &[0, 2, 5]);
+        assert_eq!(t.bucket_members(1), &[1, 4]);
+        assert_eq!(t.bucket_members(2), &[3]);
+    }
+
+    #[test]
+    fn csr_members_are_sorted_within_buckets_and_cover_all_points() {
+        let ids: Vec<u64> = (0..777).map(|i| (i * 31 % 97) as u64).collect();
+        let t = BucketTable::build(&ids);
+        let mut seen = vec![false; ids.len()];
+        for j in 0..t.n_buckets {
+            let ms = t.bucket_members(j);
+            assert!(!ms.is_empty(), "bucket {j} empty");
+            for w in ms.windows(2) {
+                assert!(w[0] < w[1], "bucket {j} not in ascending point order");
+            }
+            for &i in ms {
+                assert_eq!(t.bucket_of[i as usize] as usize, j);
+                assert!(!seen[i as usize], "point {i} in two buckets");
+                seen[i as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "CSR lost a point");
+    }
+
+    #[test]
+    fn empty_input_builds_empty_table() {
+        let t = BucketTable::build(&[]);
+        assert_eq!(t.n_buckets, 0);
+        assert_eq!(t.offsets, vec![0]);
+        assert!(t.members.is_empty());
+        assert!(t.sizes().is_empty());
     }
 }

@@ -39,6 +39,8 @@ fn main() {
                  train  --dataset wine|insurance|ctslices|covtype|<csv path>\n\
                         --method wlsh|rff|exact-laplace|exact-se|exact-matern|nystrom\n\
                         --budget M --scale S --lambda L --n-max N --seed K\n\
+                        --precond none|jacobi|nystrom --precond-rank R\n\
+                        --cg-verbose=true  (per-iteration CG progress on stderr)\n\
                  serve  same dataset/method flags plus --addr HOST:PORT\n\
                  ose    --n N --m M --lambda L --bucket rect|smooth2\n\
                  gp     --cov laplace|se|matern --dim D --n N",
@@ -77,6 +79,9 @@ fn config_from(args: &Args) -> KrrConfig {
         lambda: args.get_f64("lambda", 0.5),
         cg_max_iters: args.get_usize("cg-max-iters", d.cg_max_iters),
         cg_tol: args.get_f64("cg-tol", d.cg_tol),
+        precond: args.get_or("precond", &d.precond).to_string(),
+        precond_rank: args.get_usize("precond-rank", d.precond_rank),
+        cg_verbose: args.get_bool("cg-verbose"),
         workers: args.get_usize("workers", 1),
         seed: args.get_usize("seed", 42) as u64,
     }
@@ -121,6 +126,7 @@ fn cmd_train(args: &Args) {
             .field_f64("solve_secs", rep.solve_secs)
             .field_usize("cg_iters", rep.cg_iters)
             .field_f64("cg_rel_residual", rep.cg_rel_residual)
+            .field_str("precond", &rep.precond)
             .field_usize("memory_bytes", rep.memory_bytes)
             .finish()
     );

@@ -58,6 +58,11 @@ impl KrrOperator for ExactKernelOp {
             .collect()
     }
 
+    fn diag(&self) -> Option<Vec<f64>> {
+        // Stationary kernels: K_ii = k(0) for every row.
+        Some(vec![self.kernel.diag(); self.n])
+    }
+
     fn name(&self) -> String {
         format!("exact({})", self.kernel.name())
     }

@@ -9,7 +9,7 @@ mod rff;
 mod wlsh;
 
 pub use exact::ExactKernelOp;
-pub use nystrom::NystromSketch;
+pub use nystrom::{NystromPrecond, NystromSketch};
 pub use rff::RffSketch;
 pub(crate) use wlsh::SERIAL_QUERY_CHUNK;
 pub use wlsh::{WlshPredictor, WlshSketch};
@@ -51,6 +51,13 @@ pub trait KrrOperator: Send + Sync {
         _state: &PreparedState,
     ) -> Vec<f64> {
         self.predict(queries, beta)
+    }
+
+    /// diag(K̃), when the operator can produce it in o(n²) time (feeds the
+    /// solver's Jacobi preconditioner). Default: `None` — callers must fall
+    /// back to an unpreconditioned solve or a different preconditioner.
+    fn diag(&self) -> Option<Vec<f64>> {
+        None
     }
 
     /// Human-readable method name for reports.

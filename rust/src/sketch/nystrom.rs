@@ -69,6 +69,51 @@ impl NystromSketch {
         NystromSketch { x: x.to_vec(), n, d, kernel, landmarks, k, w_chol, c }
     }
 
+    /// Factor (K̃ + λI)⁻¹ for use as a CG preconditioner (the rank-k
+    /// analogue of Avron et al.'s RFF preconditioner for sketched KRR).
+    ///
+    /// By the Woodbury identity, with K̃ = C W⁻¹ Cᵀ:
+    ///
+    ///   (λI + C W⁻¹ Cᵀ)⁻¹ r = (r − C S⁻¹ Cᵀ r) / λ,   S = λW + CᵀC,
+    ///
+    /// so one application costs O(n·k + k²) after a one-time O(n·k² + k³)
+    /// factorization of S (Cholesky; S is SPD because W is PD and CᵀC is
+    /// PSD). Requires λ > 0.
+    pub fn ridge_precond(&self, lambda: f64) -> Result<NystromPrecond, String> {
+        if lambda <= 0.0 {
+            return Err(format!("ridge_precond needs lambda > 0, got {lambda}"));
+        }
+        // W = L Lᵀ (build-time jitter folded into L).
+        let l = &self.w_chol.l;
+        let w = l.matmul(&l.transpose());
+        let mut s = Matrix::zeros(self.k, self.k);
+        for a in 0..self.k {
+            for b in 0..self.k {
+                s[(a, b)] = lambda * w[(a, b)];
+            }
+        }
+        // S += CᵀC, accumulated row-by-row over the n×k C.
+        for i in 0..self.n {
+            let ci = &self.c[i * self.k..(i + 1) * self.k];
+            for (a, &ca) in ci.iter().enumerate() {
+                if ca != 0.0 {
+                    let row = s.row_mut(a);
+                    for (sv, &cb) in row.iter_mut().zip(ci) {
+                        *sv += ca * cb;
+                    }
+                }
+            }
+        }
+        let s_chol = CholeskyFactor::new(&s, 0.0)?;
+        Ok(NystromPrecond {
+            c: self.c.clone(),
+            n: self.n,
+            k: self.k,
+            lambda,
+            s_chol,
+        })
+    }
+
     /// v = W⁻¹ Cᵀ β (the k-dim core of every product).
     fn core(&self, beta: &[f64]) -> Vec<f64> {
         let mut ct_beta = vec![0.0f64; self.k];
@@ -117,12 +162,70 @@ impl KrrOperator for NystromSketch {
         self.predict_core(&v, queries)
     }
 
+    fn diag(&self) -> Option<Vec<f64>> {
+        // (C W⁻¹ Cᵀ)_ii = c_iᵀ W⁻¹ c_i — one k×k triangular solve per row.
+        Some(
+            (0..self.n)
+                .map(|i| {
+                    let ci = &self.c[i * self.k..(i + 1) * self.k];
+                    let wi = self.w_chol.solve(ci);
+                    ci.iter().zip(&wi).map(|(a, b)| a * b).sum()
+                })
+                .collect(),
+        )
+    }
+
     fn name(&self) -> String {
         format!("nystrom({},k={})", self.kernel.name(), self.k)
     }
 
     fn memory_bytes(&self) -> usize {
         self.x.len() * 4 + self.c.len() * 8 + self.landmarks.len() * 4
+    }
+}
+
+/// A factored (K̃_nys + λI)⁻¹ — see [`NystromSketch::ridge_precond`].
+/// Applying it is O(n·k): two C products and one k×k triangular solve.
+pub struct NystromPrecond {
+    /// n×k C = K(X, L), row-major (copied from the sketch).
+    c: Vec<f64>,
+    n: usize,
+    k: usize,
+    lambda: f64,
+    /// Cholesky of S = λW + CᵀC.
+    s_chol: CholeskyFactor,
+}
+
+impl NystromPrecond {
+    /// z = (K̃_nys + λI)⁻¹ r via the Woodbury identity.
+    pub fn apply(&self, r: &[f64]) -> Vec<f64> {
+        assert_eq!(r.len(), self.n);
+        let mut t = vec![0.0f64; self.k];
+        for i in 0..self.n {
+            let ci = &self.c[i * self.k..(i + 1) * self.k];
+            let ri = r[i];
+            for (acc, &cv) in t.iter_mut().zip(ci) {
+                *acc += ri * cv;
+            }
+        }
+        let u = self.s_chol.solve(&t);
+        let inv_lambda = 1.0 / self.lambda;
+        (0..self.n)
+            .map(|i| {
+                let ci = &self.c[i * self.k..(i + 1) * self.k];
+                let cu: f64 = ci.iter().zip(&u).map(|(a, b)| a * b).sum();
+                (r[i] - cu) * inv_lambda
+            })
+            .collect()
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Landmark count (rank) of the factored operator.
+    pub fn rank(&self) -> usize {
+        self.k
     }
 }
 
@@ -164,6 +267,63 @@ mod tests {
                 .map(|j| kern.eval_f32(&x[i * d..(i + 1) * d], &x[j * d..(j + 1) * d]) * beta[j])
                 .sum();
             assert!((y[i] - want).abs() < 1e-4 * (1.0 + want.abs()), "row {i}: {} vs {want}", y[i]);
+        }
+    }
+
+    #[test]
+    fn ridge_precond_inverts_shifted_operator() {
+        // M = K̃ + λI; apply(M v) must recover v (Woodbury algebra check).
+        let mut rng = Pcg64::new(5, 0);
+        let (n, d, k) = (30, 2, 10);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let nys = NystromSketch::build(&x, n, d, k, Kernel::squared_exp(1.0), 6);
+        let lambda = 0.37;
+        let pre = nys.ridge_precond(lambda).unwrap();
+        let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut mv = nys.matvec(&v);
+        for (m, vi) in mv.iter_mut().zip(&v) {
+            *m += lambda * vi;
+        }
+        let back = pre.apply(&mv);
+        for i in 0..n {
+            assert!(
+                (back[i] - v[i]).abs() < 1e-8 * (1.0 + v[i].abs()),
+                "row {i}: {} vs {}",
+                back[i],
+                v[i]
+            );
+        }
+        assert_eq!(pre.rank(), k);
+        assert_eq!(pre.n(), n);
+    }
+
+    #[test]
+    fn ridge_precond_rejects_nonpositive_lambda() {
+        let mut rng = Pcg64::new(7, 0);
+        let (n, d) = (12, 2);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let nys = NystromSketch::build(&x, n, d, 4, Kernel::squared_exp(1.0), 8);
+        assert!(nys.ridge_precond(0.0).is_err());
+        assert!(nys.ridge_precond(-1.0).is_err());
+    }
+
+    #[test]
+    fn diag_matches_matvec_columns() {
+        let mut rng = Pcg64::new(9, 0);
+        let (n, d, k) = (25, 3, 9);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let nys = NystromSketch::build(&x, n, d, k, Kernel::matern52(1.0), 10);
+        let diag = KrrOperator::diag(&nys).unwrap();
+        for j in 0..n {
+            let mut e = vec![0.0; n];
+            e[j] = 1.0;
+            let col = nys.matvec(&e);
+            assert!(
+                (diag[j] - col[j]).abs() < 1e-9 * (1.0 + col[j].abs()),
+                "diag[{j}] {} vs {}",
+                diag[j],
+                col[j]
+            );
         }
     }
 

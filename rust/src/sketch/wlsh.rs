@@ -7,11 +7,16 @@
 //!
 //!   B_j(β) = Σ_{i: h(x_i)=j} w_i β_i,      (K̃β)_i = w_i · B_{h(x_i)}(β).
 //!
-//! The per-instance loops (mat-vec, load precomputation) and the per-query
-//! loop of batch prediction are embarrassingly parallel (cf. Wu et al.,
-//! "Revisiting Random Binning Features", KDD 2018) and fan out over
-//! [`crate::util::par`] worker threads; reductions happen in fixed
-//! instance order so every result is bit-identical to the serial path.
+//! The bucket loads are accumulated over the table's flat CSR arrays
+//! ([`BucketTable::members`] plus the instance's CSR-aligned
+//! `weights_csr`), so the load pass walks two contiguous arrays instead of
+//! scattering into a random bucket slot per point (cf. Wu et al.,
+//! "Revisiting Random Binning Features", KDD 2018). The mat-vec fuses a
+//! fixed-size block of instances into each thread task
+//! ([`WlshSketch::matvec_threads`]), and reductions happen in fixed block
+//! order so every result is bit-identical to the serial path for every
+//! thread count. The pre-CSR instance-at-a-time path is kept as
+//! [`WlshSketch::matvec_unfused`] for benchmarking and cross-checking.
 
 use super::KrrOperator;
 use crate::lsh::{BucketTable, IdMode, LshFamily, LshFunction};
@@ -30,17 +35,42 @@ pub(crate) const SERIAL_QUERY_CHUNK: usize = 256;
 /// never gated — the caller decides.
 const PAR_MIN_WORK: usize = 1 << 17;
 
-/// The mat-vec spawns threads once per 32-instance reduction round, so n
-/// (the work per instance) must also clear a floor: a tiny-n/huge-m
-/// sketch passes the total-work gate while each round still carries less
-/// work than its spawn/join cost.
-const PAR_MIN_ROWS: usize = 2048;
+/// Row floor for the automatic paths: the fused mat-vec spawns threads
+/// once per `FUSE_BLOCK · PAR_ROUND` = 256-instance reduction round, so a
+/// round carries ≥ 256·n scatter ops and n only needs to clear a small
+/// floor for the spawn/join cost to amortize (the pre-fusion path spawned
+/// once per 32 instances and needed n ≥ 2048).
+const PAR_MIN_ROWS: usize = 256;
 
-/// One hashed instance: the function, its dense bucket table, and weights.
+/// Instances fused into one thread task of the mat-vec. Fixed (never
+/// derived from the thread count) so the block decomposition — and hence
+/// the floating-point reduction order — is machine-independent.
+const FUSE_BLOCK: usize = 8;
+
+/// Blocks buffered per reduction round of the fused mat-vec: peak extra
+/// memory is `PAR_ROUND · n` f64s regardless of m, and round boundaries
+/// fall at fixed block indices so they never affect the result.
+const PAR_ROUND: usize = 32;
+
+/// One hashed instance: the function, its dense CSR bucket table, the
+/// per-point weights, and the same weights permuted into CSR member order.
 pub struct WlshInstance {
     pub func: LshFunction,
     pub table: BucketTable,
+    /// f^{⊗d} weight of each point, in point order.
     pub weights: Vec<f32>,
+    /// `weights` permuted into [`BucketTable::members`] order, so the
+    /// bucket-load pass reads weights and member ids from two contiguous
+    /// arrays.
+    pub weights_csr: Vec<f32>,
+}
+
+impl WlshInstance {
+    /// Assemble an instance, deriving the CSR-aligned weight array.
+    pub fn new(func: LshFunction, table: BucketTable, weights: Vec<f32>) -> WlshInstance {
+        let weights_csr = table.members.iter().map(|&i| weights[i as usize]).collect();
+        WlshInstance { func, table, weights, weights_csr }
+    }
 }
 
 /// The averaged m-instance WLSH sketch of the training set.
@@ -109,7 +139,9 @@ impl WlshSketch {
         n: usize,
         scale: f64,
     ) -> WlshSketch {
-        assert!(instances.iter().all(|i| i.weights.len() == n));
+        assert!(instances
+            .iter()
+            .all(|i| i.weights.len() == n && i.weights_csr.len() == n));
         WlshSketch { instances, family, mode, x_scaled, n, scale }
     }
 
@@ -125,21 +157,42 @@ impl WlshSketch {
         let mut weights = Vec::new();
         func.hash_batch(x_scaled, family, mode, &mut ids, &mut weights);
         let table = BucketTable::build(&ids);
-        WlshInstance { func, table, weights }
+        WlshInstance::new(func, table, weights)
     }
 
     pub fn m(&self) -> usize {
         self.instances.len()
     }
 
-    /// Per-instance bucket loads for a coefficient vector (paper §4).
+    /// Per-instance bucket loads for a coefficient vector (paper §4),
+    /// accumulated over the CSR arrays: bucket j's load is the sequential
+    /// sum of `weights_csr[k] · β[members[k]]` over its member range.
+    ///
+    /// Because the counting sort is stable (members ascend in point order
+    /// inside each bucket), each bucket's accumulation chain is exactly the
+    /// chain the point-order scatter `loads[bucket_of[i]] += w_i β_i`
+    /// produces — the CSR pass is bit-identical to the scatter pass.
     fn loads(&self, inst: &WlshInstance, beta: &[f64]) -> Vec<f64> {
         let mut loads = vec![0.0f64; inst.table.n_buckets];
-        for i in 0..self.n {
-            loads[inst.table.bucket_of[i] as usize] +=
-                inst.weights[i] as f64 * beta[i];
-        }
+        Self::loads_into(inst, beta, &mut loads);
         loads
+    }
+
+    /// CSR bucket-load kernel writing into a caller-provided buffer
+    /// (`loads.len() == inst.table.n_buckets`; every slot is overwritten).
+    fn loads_into(inst: &WlshInstance, beta: &[f64], loads: &mut [f64]) {
+        let offsets = &inst.table.offsets;
+        let members = &inst.table.members;
+        let w = &inst.weights_csr;
+        for (j, out) in loads.iter_mut().enumerate() {
+            let lo = offsets[j] as usize;
+            let hi = offsets[j + 1] as usize;
+            let mut acc = 0.0f64;
+            for k in lo..hi {
+                acc += w[k] as f64 * beta[members[k] as usize];
+            }
+            *out = acc;
+        }
     }
 
     /// Bucket loads for every instance, the per-instance work fanned out
@@ -176,18 +229,14 @@ impl WlshSketch {
             / self.m() as f64
     }
 
-    /// Serial reference mat-vec — the original single-threaded instance
-    /// loop. Kept callable so `tests/parallel_determinism.rs` can assert
-    /// the parallel path is bit-identical to it.
-    pub fn matvec_serial(&self, beta: &[f64]) -> Vec<f64> {
-        assert_eq!(beta.len(), self.n);
+    /// diag(K̃): every point collides with itself in every instance, so
+    /// K̃_ii = (1/m) Σ_s w_{s,i}². O(n·m); feeds the solver's Jacobi
+    /// preconditioner.
+    pub fn diag_values(&self) -> Vec<f64> {
         let mut out = vec![0.0f64; self.n];
         for inst in &self.instances {
-            let loads = self.loads(inst, beta);
-            let bucket_of = &inst.table.bucket_of;
-            let weights = &inst.weights;
-            for i in 0..self.n {
-                out[i] += weights[i] as f64 * loads[bucket_of[i] as usize];
+            for (o, &w) in out.iter_mut().zip(&inst.weights) {
+                *o += w as f64 * w as f64;
             }
         }
         let inv_m = 1.0 / self.m() as f64;
@@ -197,8 +246,66 @@ impl WlshSketch {
         out
     }
 
-    /// One instance's additive mat-vec contribution: c_i = w_i · B_{h(x_i)}.
-    /// The products here are exactly the terms the serial loop accumulates.
+    /// Serial reference mat-vec: the fused block algorithm on one thread.
+    /// [`matvec_threads`](Self::matvec_threads) is bit-identical to this
+    /// for every thread count (asserted by
+    /// `tests/parallel_determinism.rs`).
+    pub fn matvec_serial(&self, beta: &[f64]) -> Vec<f64> {
+        self.matvec_threads(beta, 1)
+    }
+
+    /// One fused block's additive contribution: for each instance in the
+    /// block (in order), accumulate its CSR bucket loads into a reused
+    /// buffer, then gather `c_i += w_i · B_{h(x_i)}` into the block's
+    /// single output buffer. One O(n) buffer per block instead of one per
+    /// instance.
+    fn block_contrib(&self, block: &[WlshInstance], beta: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0f64; self.n];
+        let mut loads: Vec<f64> = Vec::new();
+        for inst in block {
+            loads.clear();
+            loads.resize(inst.table.n_buckets, 0.0);
+            Self::loads_into(inst, beta, &mut loads);
+            let bucket_of = &inst.table.bucket_of;
+            let weights = &inst.weights;
+            for ((o, &w), &b) in out.iter_mut().zip(weights).zip(bucket_of) {
+                *o += w as f64 * loads[b as usize];
+            }
+        }
+        out
+    }
+
+    /// Fused parallel mat-vec: instances are grouped into fixed 8-instance
+    /// blocks (`FUSE_BLOCK`), each thread task computes one block's
+    /// contribution over the CSR arrays, and block partials are reduced in
+    /// fixed block order (rounds of `PAR_ROUND` blocks bound peak
+    /// memory). The decomposition depends only on m — never on `threads` —
+    /// so the result is bit-identical to
+    /// [`matvec_serial`](Self::matvec_serial) for every thread count. The
+    /// requested `threads` is always honored (the work-size gate lives in
+    /// the trait path only).
+    pub fn matvec_threads(&self, beta: &[f64], threads: usize) -> Vec<f64> {
+        assert_eq!(beta.len(), self.n);
+        let blocks: Vec<&[WlshInstance]> = self.instances.chunks(FUSE_BLOCK).collect();
+        let mut out = vec![0.0f64; self.n];
+        for round in blocks.chunks(PAR_ROUND) {
+            let partials =
+                par::fan_out(round.len(), threads, |b| self.block_contrib(round[b], beta));
+            for p in &partials {
+                for (o, v) in out.iter_mut().zip(p) {
+                    *o += *v;
+                }
+            }
+        }
+        let inv_m = 1.0 / self.m() as f64;
+        for v in out.iter_mut() {
+            *v *= inv_m;
+        }
+        out
+    }
+
+    /// One instance's additive mat-vec contribution (the pre-fusion
+    /// formulation: one O(n) buffer per instance).
     fn instance_contrib(&self, inst: &WlshInstance, beta: &[f64]) -> Vec<f64> {
         let loads = self.loads(inst, beta);
         let bucket_of = &inst.table.bucket_of;
@@ -210,32 +317,34 @@ impl WlshSketch {
         c
     }
 
-    /// Parallel mat-vec: per-instance contributions are computed
-    /// independently on `threads` worker threads, then reduced in fixed
-    /// instance order (s = 0, 1, ..., m-1). Because each contribution
-    /// holds the exact f64 products of the serial loop and the reduction
-    /// replays the serial accumulation order element-by-element, the
-    /// result is bit-identical to [`matvec_serial`](Self::matvec_serial)
-    /// for every thread count. The requested `threads` is always honored
-    /// (the work-size gate lives in the trait path only).
-    ///
-    /// Instances are processed in fixed-size rounds so peak extra memory
-    /// is `PAR_ROUND · n` f64s regardless of m.
-    pub fn matvec_threads(&self, beta: &[f64], threads: usize) -> Vec<f64> {
-        // Instances buffered per reduction round (thread-count independent,
-        // so round boundaries never affect the result).
-        const PAR_ROUND: usize = 32;
+    /// The pre-fusion (PR-1) mat-vec: per-instance contribution vectors
+    /// reduced in fixed instance order, 32 instances per round. Kept as the
+    /// baseline `bench_matvec` compares the fused path against and as an
+    /// independent cross-check (it computes the same per-instance terms,
+    /// summed in per-instance rather than per-block grouping, so the two
+    /// paths agree to floating-point reassociation error).
+    pub fn matvec_unfused(&self, beta: &[f64], threads: usize) -> Vec<f64> {
+        const ROUND: usize = 32;
         assert_eq!(beta.len(), self.n);
-        if threads <= 1 || self.m() <= 1 {
-            return self.matvec_serial(beta);
-        }
         let mut out = vec![0.0f64; self.n];
-        for round in self.instances.chunks(PAR_ROUND) {
-            let partials =
-                par::fan_out(round.len(), threads, |s| self.instance_contrib(&round[s], beta));
-            for p in &partials {
-                for (o, v) in out.iter_mut().zip(p) {
-                    *o += *v;
+        if threads <= 1 || self.m() <= 1 {
+            for inst in &self.instances {
+                let loads = self.loads(inst, beta);
+                let bucket_of = &inst.table.bucket_of;
+                let weights = &inst.weights;
+                for i in 0..self.n {
+                    out[i] += weights[i] as f64 * loads[bucket_of[i] as usize];
+                }
+            }
+        } else {
+            for round in self.instances.chunks(ROUND) {
+                let partials = par::fan_out(round.len(), threads, |s| {
+                    self.instance_contrib(&round[s], beta)
+                });
+                for p in &partials {
+                    for (o, v) in out.iter_mut().zip(p) {
+                        *o += *v;
+                    }
                 }
             }
         }
@@ -273,6 +382,10 @@ impl KrrOperator for WlshSketch {
         self.predict_with_loads(&state.slots, queries, par::num_threads())
     }
 
+    fn diag(&self) -> Option<Vec<f64>> {
+        Some(self.diag_values())
+    }
+
     fn name(&self) -> String {
         format!(
             "wlsh(f={},shape={},m={})",
@@ -287,7 +400,9 @@ impl KrrOperator for WlshSketch {
             + self
                 .instances
                 .iter()
-                .map(|i| i.table.memory_bytes() + i.weights.len() * 4)
+                .map(|i| {
+                    i.table.memory_bytes() + i.weights.len() * 4 + i.weights_csr.len() * 4
+                })
                 .sum::<usize>()
     }
 }
@@ -518,6 +633,49 @@ mod tests {
         for threads in [2usize, 8] {
             assert_eq!(pred.predict_threads(&q, threads), want_p, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn fused_matches_unfused_to_reassociation_error() {
+        // Same per-instance terms, different summation grouping: the fused
+        // block path and the pre-fusion instance path must agree to
+        // floating-point reassociation error, at every thread count.
+        let (n, d, m) = (257, 5, 77); // deliberately not multiples of block sizes
+        let x = random_x(23, n, d);
+        let sk = WlshSketch::build(&x, n, d, m, "smooth2", 7.0, 1.0, 24);
+        let mut rng = Pcg64::new(25, 0);
+        let beta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let fused = sk.matvec_serial(&beta);
+        for threads in [1usize, 2, 8] {
+            let unfused = sk.matvec_unfused(&beta, threads);
+            for i in 0..n {
+                assert!(
+                    (fused[i] - unfused[i]).abs() < 1e-11 * (1.0 + fused[i].abs()),
+                    "row {i} (threads={threads}): fused {} vs unfused {}",
+                    fused[i],
+                    unfused[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn diag_matches_materialized_diagonal() {
+        let (n, d, m) = (48, 3, 12);
+        let x = random_x(29, n, d);
+        let sk = WlshSketch::build(&x, n, d, m, "smooth2", 7.0, 1.0, 30);
+        let k = materialize(&sk);
+        let diag = sk.diag_values();
+        for i in 0..n {
+            assert!(
+                (diag[i] - k[i][i]).abs() < 1e-10 * (1.0 + k[i][i].abs()),
+                "diag[{i}] {} vs K_ii {}",
+                diag[i],
+                k[i][i]
+            );
+        }
+        // the trait accessor exposes the same values
+        assert_eq!(KrrOperator::diag(&sk), Some(diag));
     }
 
     #[test]

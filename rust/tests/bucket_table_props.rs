@@ -1,6 +1,8 @@
 //! Property tests for `lsh::BucketTable` (the "lists L_j" structure of
 //! paper §4), driven by the `util::prop` harness: dense renumbering,
-//! lookup consistency, bucket accounting, and the exact memory formula.
+//! lookup consistency, bucket accounting, the exact memory formula, and
+//! member-for-member equivalence of the flat CSR layout with a naive
+//! per-bucket `Vec<Vec<u32>>` reference build.
 
 use std::collections::HashMap;
 
@@ -114,12 +116,88 @@ fn prop_sizes_histogram_accounts_for_every_point() {
 #[test]
 fn prop_memory_accounting_matches_structure() {
     // Lemma 27: O(n) words. The estimate is exactly 4 bytes per point for
-    // the dense index plus 16 per distinct bucket for the raw-id map.
+    // the dense index, 4 per point for the CSR members, 4 per CSR offset
+    // (n_buckets + 1 of them), plus 16 per distinct bucket for the raw-id
+    // map.
     prop_check(5, 60, gen_ids, |ids| {
         let t = BucketTable::build(ids);
-        let want = ids.len() * 4 + t.n_buckets * 16;
+        let want = ids.len() * 8 + (t.n_buckets + 1) * 4 + t.n_buckets * 16;
         if t.memory_bytes() != want {
             return Err(format!("memory_bytes {} != {want}", t.memory_bytes()));
+        }
+        Ok(())
+    });
+}
+
+/// Naive reference build of the inverted lists: push each point into its
+/// bucket's `Vec` in point order (the layout the CSR arrays replace).
+fn naive_bucket_lists(ids: &[u64]) -> Vec<Vec<u32>> {
+    let mut dense: HashMap<u64, usize> = HashMap::new();
+    let mut lists: Vec<Vec<u32>> = Vec::new();
+    for (i, &id) in ids.iter().enumerate() {
+        let next = lists.len();
+        let b = *dense.entry(id).or_insert(next);
+        if b == lists.len() {
+            lists.push(Vec::new());
+        }
+        lists[b].push(i as u32);
+    }
+    lists
+}
+
+#[test]
+fn prop_csr_is_member_for_member_identical_to_naive_reference() {
+    prop_check(6, 60, gen_ids, |ids| {
+        let t = BucketTable::build(ids);
+        let reference = naive_bucket_lists(ids);
+        if t.n_buckets != reference.len() {
+            return Err(format!(
+                "n_buckets {} != reference {}",
+                t.n_buckets,
+                reference.len()
+            ));
+        }
+        if t.offsets.first() != Some(&0) {
+            return Err(format!("offsets[0] = {:?}", t.offsets.first()));
+        }
+        if *t.offsets.last().unwrap() as usize != ids.len() {
+            return Err(format!(
+                "offsets[last] {} != n {}",
+                t.offsets.last().unwrap(),
+                ids.len()
+            ));
+        }
+        for (j, want) in reference.iter().enumerate() {
+            let got = t.bucket_members(j);
+            if got != want.as_slice() {
+                return Err(format!("bucket {j}: CSR {got:?} != reference {want:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_csr_offsets_are_monotone_and_match_sizes() {
+    prop_check(7, 60, gen_ids, |ids| {
+        let t = BucketTable::build(ids);
+        if t.offsets.len() != t.n_buckets + 1 {
+            return Err(format!(
+                "offsets len {} != n_buckets + 1 = {}",
+                t.offsets.len(),
+                t.n_buckets + 1
+            ));
+        }
+        for w in t.offsets.windows(2) {
+            if w[0] > w[1] {
+                return Err(format!("offsets not monotone: {} > {}", w[0], w[1]));
+            }
+        }
+        let sizes = t.sizes();
+        for (j, &s) in sizes.iter().enumerate() {
+            if t.offsets[j + 1] - t.offsets[j] != s {
+                return Err(format!("bucket {j}: offset span != size {s}"));
+            }
         }
         Ok(())
     });

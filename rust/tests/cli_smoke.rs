@@ -49,6 +49,70 @@ fn train_reports_finite_rmse_json() {
 }
 
 #[test]
+fn train_cg_verbose_emits_iteration_lines_to_stderr() {
+    let base = [
+        "train", "--dataset", "wine", "--n-max", "300", "--budget", "8", "--cg-max-iters", "20",
+        "--seed", "5",
+    ];
+    // without the flag: no per-iteration chatter
+    let quiet = run(&base);
+    assert!(quiet.status.success());
+    let quiet_err = String::from_utf8_lossy(&quiet.stderr);
+    assert!(!quiet_err.contains("cg iter"), "unexpected CG chatter: {quiet_err}");
+    // with --cg-verbose=true: one "cg iter" line per iteration on stderr,
+    // and stdout JSON stays parseable
+    let mut args: Vec<&str> = base.to_vec();
+    args.push("--cg-verbose=true");
+    let verbose = run(&args);
+    assert!(verbose.status.success(), "stderr: {}", String::from_utf8_lossy(&verbose.stderr));
+    let verbose_err = String::from_utf8_lossy(&verbose.stderr);
+    assert!(verbose_err.contains("cg iter"), "no CG progress lines: {verbose_err}");
+    let iters = last_json(&verbose)
+        .get("cg_iters")
+        .and_then(Json::as_usize)
+        .expect("cg_iters field");
+    assert_eq!(
+        verbose_err.matches("cg iter").count(),
+        iters,
+        "one progress line per iteration"
+    );
+}
+
+#[test]
+fn train_reports_preconditioner_and_converges_with_each() {
+    for precond in ["none", "jacobi", "nystrom"] {
+        let out = run(&[
+            "train",
+            "--dataset",
+            "wine",
+            "--n-max",
+            "300",
+            "--budget",
+            "16",
+            "--precond",
+            precond,
+            "--precond-rank",
+            "24",
+            "--seed",
+            "7",
+        ]);
+        assert!(
+            out.status.success(),
+            "{precond}: stderr: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let j = last_json(&out);
+        assert_eq!(
+            j.get("precond").and_then(Json::as_str),
+            Some(precond),
+            "precond field for {precond}"
+        );
+        let rmse = j.get("rmse").and_then(Json::as_f64).expect("rmse field");
+        assert!(rmse.is_finite() && rmse > 0.0, "{precond}: rmse {rmse}");
+    }
+}
+
+#[test]
 fn train_supports_exact_methods_too() {
     let out = run(&[
         "train",

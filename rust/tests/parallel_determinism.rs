@@ -24,9 +24,11 @@ fn random_beta(seed: u64, n: usize) -> Vec<f64> {
 }
 
 /// m ≥ 64, and the shape clears both of the trait paths' serial gates
-/// (n = 2048 ≥ PAR_MIN_ROWS, n·m = 147,456 ≥ PAR_MIN_WORK = 131,072), so
-/// `matvec`/`prepare`/`predictor` really fan out — not just the explicit
-/// `*_threads` calls.
+/// (n = 2048 ≥ PAR_MIN_ROWS = 256, n·m = 147,456 ≥ PAR_MIN_WORK =
+/// 131,072), so `matvec`/`prepare`/`predictor` really fan out — not just
+/// the explicit `*_threads` calls. m = 72 also straddles the fused path's
+/// 8-instance block boundary (9 blocks, one round), exercising the fixed
+/// block-order reduction.
 fn big_sketch(seed: u64) -> (WlshSketch, Vec<f64>, Vec<f32>) {
     let (n, d, m) = (2048, 8, 72);
     let x = random_x(seed, n, d);
@@ -46,6 +48,20 @@ fn matvec_bit_identical_across_thread_counts() {
     }
     // the trait path (auto thread count) must agree too
     assert_eq!(sk.matvec(&beta), want, "trait matvec diverged");
+}
+
+#[test]
+fn unfused_matvec_bit_identical_across_thread_counts() {
+    // the kept pre-fusion baseline honors the same determinism contract
+    let (sk, beta, _) = big_sketch(600);
+    let want = sk.matvec_unfused(&beta, 1);
+    for threads in THREAD_COUNTS {
+        assert_eq!(
+            sk.matvec_unfused(&beta, threads),
+            want,
+            "unfused diverged at threads={threads}"
+        );
+    }
 }
 
 #[test]

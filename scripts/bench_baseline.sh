@@ -1,0 +1,100 @@
+#!/usr/bin/env bash
+# Convert the JSONL capture that rust/benches/common.rs appends under
+# rust/target/bench_results/ into the committed BENCH_*.json baseline
+# format (see README "Performance tracking").
+#
+# Usage: scripts/bench_baseline.sh [results_dir] [out.json]
+#
+# Tracked metrics are flat "<bench>.<field>.<scope>" keys where LOWER IS
+# ALWAYS BETTER (seconds or microseconds; plus the deterministic OSE eps
+# accuracy series), so the regression checker needs no per-metric
+# direction table. Only our own machine-generated flat JSONL is parsed —
+# a one-line awk field extractor is enough, no JSON library needed.
+set -euo pipefail
+
+results_dir="${1:-rust/target/bench_results}"
+out="${2:-BENCH.json}"
+scale="${BENCH_SCALE:-fast}"
+
+# num <file> — emit "key value" pairs per line for every line of the JSONL
+extract() {
+    awk '
+    function num(line, key,    re, m) {
+        re = "\"" key "\":[-+0-9.eE]+"
+        if (match(line, re)) {
+            m = substr(line, RSTART, RLENGTH)
+            sub(/^[^:]*:/, "", m)
+            return m
+        }
+        return ""
+    }
+    function str(line, key,    re, m) {
+        re = "\"" key "\":\"[^\"]*\""
+        if (match(line, re)) {
+            m = substr(line, RSTART, RLENGTH)
+            sub(/^[^:]*:"/, "", m)
+            sub(/"$/, "", m)
+            return m
+        }
+        return ""
+    }
+    FILENAME ~ /matvec\.jsonl$/ {
+        series = str($0, "series")
+        if (series == "") {
+            n = num($0, "n")
+            if (n == "") next
+            if ((v = num($0, "wlsh_secs")) != "")          print "matvec.wlsh_secs.n" n, v
+            if ((v = num($0, "wlsh_unfused_secs")) != "")  print "matvec.wlsh_unfused_secs.n" n, v
+            if ((v = num($0, "rff_secs")) != "")           print "matvec.rff_secs.n" n, v
+            if ((v = num($0, "wlsh_build_secs")) != "")    print "matvec.wlsh_build_secs.n" n, v
+        } else if (series == "parallel_vs_serial") {
+            n = num($0, "n"); m = num($0, "m")
+            if ((v = num($0, "serial_secs")) != "")    print "matvec.serial_secs.n" n ".m" m, v
+            if ((v = num($0, "parallel_secs")) != "")  print "matvec.parallel_secs.n" n ".m" m, v
+        }
+        next
+    }
+    FILENAME ~ /ose\.jsonl$/ {
+        # deterministic (fixed seeds): eps is a tracked accuracy metric
+        if (str($0, "series") != "eps_vs_m") next
+        m = num($0, "m")
+        if (m != "" && (v = num($0, "eps")) != "") print "ose.eps.m" m, v
+        next
+    }
+    FILENAME ~ /serve\.jsonl$/ {
+        c = num($0, "clients"); b = str($0, "batching")
+        if (c == "" || b == "") next
+        if ((v = num($0, "p50_us")) != "") print "serve.p50_us.c" c ".batch_" b, v
+        if ((v = num($0, "p99_us")) != "") print "serve.p99_us.c" c ".batch_" b, v
+        next
+    }
+    ' "$@"
+}
+
+files=$(find "$results_dir" -name '*.jsonl' 2>/dev/null | sort || true)
+if [ -z "$files" ]; then
+    echo "error: no *.jsonl under $results_dir — run the benches first" >&2
+    exit 1
+fi
+
+commit=$(git rev-parse --short HEAD 2>/dev/null || echo unknown)
+
+{
+    printf '{\n'
+    printf '  "format": 1,\n'
+    printf '  "commit": "%s",\n' "$commit"
+    printf '  "scale": "%s",\n' "$scale"
+    printf '  "metrics": {\n'
+    # unique by metric key (first occurrence wins), sorted for stable diffs
+    # shellcheck disable=SC2086
+    extract $files | sort -u -k1,1 | awk '
+        NR > 1 { printf ",\n" }
+        { printf "    \"%s\": %s", $1, $2 }
+        END { if (NR > 0) printf "\n" }
+    '
+    printf '  }\n'
+    printf '}\n'
+} > "$out"
+
+count=$(extract $files | sort -u -k1,1 | wc -l)
+echo "wrote $out ($count tracked metrics, scale=$scale, commit=$commit)"

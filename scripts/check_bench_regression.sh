@@ -1,0 +1,61 @@
+#!/usr/bin/env bash
+# Gate CI on perf regressions: compare a freshly generated BENCH json
+# (scripts/bench_baseline.sh output) against the newest committed
+# bench/BENCH_*.json baseline. Every tracked metric is lower-is-better;
+# any metric that got more than THRESHOLD× worse fails the job. Skips
+# cleanly (exit 0) when no committed baseline exists yet.
+#
+# Usage: scripts/check_bench_regression.sh <current.json> [baseline_dir]
+set -euo pipefail
+
+cur="${1:?usage: check_bench_regression.sh <current.json> [baseline_dir]}"
+dir="${2:-bench}"
+threshold="${BENCH_REGRESSION_THRESHOLD:-1.5}"
+
+[ -f "$cur" ] || { echo "error: $cur not found" >&2; exit 1; }
+
+prev=$(ls "$dir"/BENCH_*.json 2>/dev/null | sort -V | tail -n 1 || true)
+if [ -z "$prev" ]; then
+    echo "no committed baseline under $dir/ — skipping regression gate"
+    exit 0
+fi
+echo "comparing $cur against baseline $prev (threshold ${threshold}x)"
+
+# Metric lines are exactly those the generator writes:  "a.b.c": <num>
+# (only metric keys contain a '.', so format/commit/scale never match).
+metrics() {
+    sed -n 's/^[[:space:]]*"\([^"]*\.[^"]*\)":[[:space:]]*\([-+0-9.eE]*\).*$/\1 \2/p' "$1"
+}
+
+metrics "$prev" > /tmp/bench_prev.$$
+metrics "$cur" > /tmp/bench_cur.$$
+trap 'rm -f /tmp/bench_prev.$$ /tmp/bench_cur.$$' EXIT
+
+fails=$(
+    awk -v threshold="$threshold" '
+        NR == FNR { prev[$1] = $2; next }
+        {
+            if (!($1 in prev)) { printf "  new metric (not gated): %s\n", $1 > "/dev/stderr"; next }
+            seen[$1] = 1
+            p = prev[$1] + 0; c = $2 + 0
+            if (p <= 0) next
+            ratio = c / p
+            if (ratio > threshold)
+                printf "REGRESSION %s: %.3g -> %.3g (%.2fx)\n", $1, p, c, ratio
+            else
+                printf "  ok %s: %.3g -> %.3g (%.2fx)\n", $1, p, c, ratio > "/dev/stderr"
+        }
+        END {
+            for (k in prev)
+                if (!(k in seen))
+                    printf "  missing metric (was tracked): %s\n", k > "/dev/stderr"
+        }
+    ' /tmp/bench_prev.$$ /tmp/bench_cur.$$
+)
+
+if [ -n "$fails" ]; then
+    echo "$fails"
+    echo "perf regression gate FAILED (>${threshold}x slowdown on tracked metrics)" >&2
+    exit 1
+fi
+echo "perf regression gate passed"
