@@ -6,15 +6,13 @@
 //!
 //! Run with:  cargo run --release --example gp_regression -- --cov se --dim 5
 
-use wlsh_krr::config::KrrConfig;
-use wlsh_krr::coordinator::Trainer;
+use wlsh_krr::api::{KernelSpec, KrrError, KrrModel, MethodSpec};
 use wlsh_krr::data::{rmse, Dataset};
 use wlsh_krr::gp::sample_gp_exact;
-use wlsh_krr::kernels::Kernel;
 use wlsh_krr::util::cli::Args;
 use wlsh_krr::util::rng::Pcg64;
 
-fn main() {
+fn main() -> Result<(), KrrError> {
     let args = Args::from_env();
     let cov = args.get_or("cov", "se");
     let d = args.get_usize("dim", 5);
@@ -22,12 +20,9 @@ fn main() {
     let noise = args.get_f64("noise", 0.05);
     let seed = args.get_usize("seed", 1) as u64;
 
-    let covariance = match cov {
-        "laplace" => Kernel::laplace(1.0),
-        "se" => Kernel::squared_exp(1.0),
-        "matern" => Kernel::matern52(1.0),
-        other => panic!("--cov must be laplace|se|matern, got {other:?}"),
-    };
+    // "laplace" | "se" | "matern" parse through the one kernel grammar; a
+    // typo exits with an UnknownKernel error instead of a panic.
+    let covariance = cov.parse::<KernelSpec>()?.build();
 
     // Sample η ~ GP(0, cov) at n uniform points in [0,1]^d (paper §5).
     let mut rng = Pcg64::new(seed, 0);
@@ -48,21 +43,21 @@ fn main() {
         ("Matern nu=5/2", "exact-matern", "rect", 2.0),
         ("WLSH k_{f,p} (smooth2, G7)", "exact-wlsh", "smooth2", 7.0),
     ] {
-        let cfg = KrrConfig {
-            method: method.into(),
-            bucket: bucket.into(),
-            gamma_shape: shape,
-            scale: args.get_f64("scale", 1.0),
-            lambda: args.get_f64("lambda", 0.02),
-            cg_max_iters: 400,
-            cg_tol: 1e-7,
-            ..Default::default()
-        };
-        let model = Trainer::new(cfg).train(&train);
+        let method: MethodSpec = method.parse()?;
+        let model = KrrModel::builder()
+            .method(method)
+            .bucket(bucket)
+            .gamma_shape(shape)
+            .scale(args.get_f64("scale", 1.0))
+            .lambda(args.get_f64("lambda", 0.02))
+            .cg_max_iters(400)
+            .cg_tol(1e-7)
+            .fit(&train)?;
         let err = rmse(&model.predict(&test.x), &test.y);
         println!(
             "{label:<28} {err:>8.4} {:>10.2} {:>8}",
             model.report.solve_secs, model.report.cg_iters
         );
     }
+    Ok(())
 }

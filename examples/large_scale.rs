@@ -16,6 +16,7 @@ use std::net::TcpStream;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use wlsh_krr::api::MethodSpec;
 use wlsh_krr::config::KrrConfig;
 use wlsh_krr::coordinator::{serve, ServerConfig, Trainer};
 use wlsh_krr::data::{rmse, synthetic_by_name};
@@ -47,9 +48,9 @@ fn main() {
 
     println!("\n=== stage 2: WLSH training (m=50, rect bucket) ===");
     let cfg = KrrConfig {
-        method: "wlsh".into(),
+        method: MethodSpec::Wlsh,
         budget: 50,
-        bucket: "rect".into(),
+        bucket: "rect".parse().expect("bucket"),
         gamma_shape: 2.0,
         scale: med_l1,
         lambda: 0.5,
@@ -61,7 +62,7 @@ fn main() {
     };
     let trainer = Trainer::new(cfg.clone());
     let t1 = Instant::now();
-    let op = trainer.build_operator(&train);
+    let op = trainer.build_operator(&train).expect("build operator");
     let build_secs = t1.elapsed().as_secs_f64();
     println!("sketch built in {build_secs:.1}s ({:.1} MB)", op.memory_bytes() as f64 / 1e6);
     let t2 = Instant::now();
@@ -84,9 +85,9 @@ fn main() {
     println!("WLSH  test RMSE {wlsh_rmse:.4}   total {:.1}s", build_secs + solve_secs);
 
     println!("\n=== stage 3: RFF baseline (D=1500) ===");
-    let rff_cfg = KrrConfig { method: "rff".into(), budget: 1500, scale: med_l2, ..cfg.clone() };
+    let rff_cfg = KrrConfig { method: MethodSpec::Rff, budget: 1500, scale: med_l2, ..cfg.clone() };
     let t3 = Instant::now();
-    let rff = Trainer::new(rff_cfg).train(&train);
+    let rff = Trainer::new(rff_cfg).train(&train).expect("train rff");
     let rff_pred = rff.predict(&test.x);
     let rff_rmse = rmse(&rff_pred, &test.y);
     println!(
@@ -120,9 +121,9 @@ fn main() {
         linger: Duration::from_micros(300),
         workers: 1,
     };
-    let d = train.d;
+    let d = model.dim();
     let m = model.clone();
-    let server = std::thread::spawn(move || serve(m, d, scfg, Some(tx)).unwrap());
+    let server = std::thread::spawn(move || serve(m, scfg, Some(tx)).unwrap());
     let addr = rx.recv().unwrap();
     let n_req = 500.min(test.n);
     let t4 = Instant::now();

@@ -1,13 +1,13 @@
-//! Quickstart: train a WLSH-accelerated KRR model on a synthetic dataset,
-//! evaluate it, and compare against the exact-kernel baseline.
+//! Quickstart: train a WLSH-accelerated KRR model through the typed
+//! builder API, evaluate it, and compare against the exact-kernel
+//! baseline.
 //!
 //! Run with:  cargo run --release --example quickstart
 
-use wlsh_krr::config::KrrConfig;
-use wlsh_krr::coordinator::Trainer;
+use wlsh_krr::api::{BucketSpec, KrrError, KrrModel, MethodSpec};
 use wlsh_krr::data::{rmse, synthetic_by_name};
 
-fn main() {
+fn main() -> Result<(), KrrError> {
     // 1. Data: the "wine"-shaped synthetic regression task (n=6497, d=11),
     //    standardized features/targets, 4000-row training split as in the
     //    paper's Table 2.
@@ -17,17 +17,17 @@ fn main() {
     println!("dataset: {} (n={}, d={}, test={})", ds.name, train.n, train.d, test.n);
 
     // 2. WLSH KRR (the paper's method): m = 450 LSH instances, rect bucket
-    //    (⇒ Laplace-family kernel), CG on (K̃ + λI)β = y.
-    let cfg = KrrConfig {
-        method: "wlsh".into(),
-        budget: 450,
-        bucket: "rect".into(),
-        gamma_shape: 2.0,
-        scale: 3.0,
-        lambda: 0.5,
-        ..Default::default()
-    };
-    let model = Trainer::new(cfg).train(&train);
+    //    (⇒ Laplace-family kernel), CG on (K̃ + λI)β = y. Every setter is
+    //    typed; a misspelled method or bucket would surface here as
+    //    Err(KrrError::Unknown...) instead of a panic.
+    let model = KrrModel::builder()
+        .method(MethodSpec::Wlsh)
+        .budget(450)
+        .bucket(BucketSpec::Rect)
+        .gamma_shape(2.0)
+        .scale(3.0)
+        .lambda(0.5)
+        .fit(&train)?;
     let pred = model.predict(&test.x);
     println!(
         "WLSH   : rmse {:.4}  (build {:.2}s, solve {:.2}s, {} CG iters, {:.1} MB)",
@@ -39,14 +39,13 @@ fn main() {
     );
 
     // 3. Exact Laplace-kernel KRR for reference (O(n²) per CG iteration vs
-    //    the sketch's O(n·m)).
-    let exact_cfg = KrrConfig {
-        method: "exact-laplace".into(),
-        scale: 3.0,
-        lambda: 0.5,
-        ..Default::default()
-    };
-    let exact = Trainer::new(exact_cfg).train(&train);
+    //    the sketch's O(n·m)). String specs parse through the same enums:
+    //    .method("exact-laplace") == .method(MethodSpec::Exact(...)).
+    let exact = KrrModel::builder()
+        .method("exact-laplace")
+        .scale(3.0)
+        .lambda(0.5)
+        .fit(&train)?;
     let exact_pred = exact.predict(&test.x);
     println!(
         "exact  : rmse {:.4}  (build {:.2}s, solve {:.2}s, {} CG iters)",
@@ -55,4 +54,12 @@ fn main() {
         exact.report.solve_secs,
         exact.report.cg_iters,
     );
+
+    // 4. Serving surface: freeze β-dependent state once, then predict
+    //    allocation-free through the handle (what the TCP server does).
+    let handle = model.predictor();
+    let mut out = vec![0.0f64; 8];
+    handle.predict_into(&test.x[..8 * test.d], &mut out);
+    println!("predictor handle: d={} first batch {:?}", handle.dim(), &out[..3]);
+    Ok(())
 }

@@ -8,13 +8,13 @@ use std::net::TcpStream;
 use std::sync::Arc;
 use std::time::Duration;
 
-use wlsh_krr::config::KrrConfig;
-use wlsh_krr::coordinator::{serve, ServerConfig, Trainer};
+use wlsh_krr::api::{KrrError, KrrModel, MethodSpec};
+use wlsh_krr::coordinator::{serve, ServerConfig};
 use wlsh_krr::data::synthetic_by_name;
 use wlsh_krr::util::cli::Args;
 use wlsh_krr::util::json::Json;
 
-fn main() {
+fn main() -> Result<(), KrrError> {
     let args = Args::from_env();
     let clients = args.get_usize("clients", 4);
     let requests = args.get_usize("requests", 400);
@@ -22,15 +22,15 @@ fn main() {
     let mut ds = synthetic_by_name("insurance", Some(3000), 7).expect("dataset");
     ds.standardize();
     let (train, test) = ds.split(2400, 8);
-    let cfg = KrrConfig {
-        method: "wlsh".into(),
-        budget: 250,
-        scale: 5.0,
-        lambda: 0.5,
-        ..Default::default()
-    };
     println!("training wlsh(m=250) on insurance-synthetic (n={}, d={})...", train.n, train.d);
-    let model = Arc::new(Trainer::new(cfg).train(&train));
+    let model = Arc::new(
+        KrrModel::builder()
+            .method(MethodSpec::Wlsh)
+            .budget(250)
+            .scale(5.0)
+            .lambda(0.5)
+            .fit(&train)?,
+    );
 
     let (tx, rx) = std::sync::mpsc::channel();
     let scfg = ServerConfig {
@@ -39,9 +39,9 @@ fn main() {
         linger: Duration::from_micros(args.get_usize("linger-us", 300) as u64),
         workers: 1,
     };
-    let d = train.d;
+    let d = model.dim();
     let m = model.clone();
-    let server = std::thread::spawn(move || serve(m, d, scfg, Some(tx)).unwrap());
+    let server = std::thread::spawn(move || serve(m, scfg, Some(tx)).unwrap());
     let addr = rx.recv().unwrap();
     println!("serving on {addr}; {clients} clients × {requests} requests each");
 
@@ -90,4 +90,5 @@ fn main() {
     let mut line2 = String::new();
     reader.read_line(&mut line2).unwrap();
     server.join().unwrap();
+    Ok(())
 }

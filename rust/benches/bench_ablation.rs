@@ -9,6 +9,7 @@
 mod common;
 
 use common::{by_scale, f, record, secs, Table};
+use wlsh_krr::api::MethodSpec;
 use wlsh_krr::config::KrrConfig;
 use wlsh_krr::coordinator::Trainer;
 use wlsh_krr::data::{rmse, synthetic_by_name, Dataset};
@@ -42,8 +43,8 @@ fn a1_bucket_function() {
     let t = Table::new(&[("bucket", 10), ("shape", 6), ("rmse", 9)]);
     for (bucket, shape) in [("rect", 2.0), ("smooth2", 7.0), ("smooth3", 7.0)] {
         let cfg = KrrConfig {
-            method: "exact-wlsh".into(),
-            bucket: bucket.into(),
+            method: "exact-wlsh".parse().unwrap(),
+            bucket: bucket.parse().unwrap(),
             gamma_shape: shape,
             scale: 1.0,
             lambda: 0.02,
@@ -51,7 +52,7 @@ fn a1_bucket_function() {
             cg_tol: 1e-7,
             ..Default::default()
         };
-        let model = Trainer::new(cfg).train(&tr);
+        let model = Trainer::new(cfg).train(&tr).expect("train");
         let err = rmse(&model.predict(&te.x), &te.y);
         t.row(&[bucket.into(), f(shape, 0), f(err, 4)]);
         record(
@@ -75,13 +76,13 @@ fn a2_m_sweep() {
     let t = Table::new(&[("m", 6), ("rmse", 9), ("build", 9), ("solve", 9)]);
     for m in [10usize, 25, 50, 100, 200, 450] {
         let cfg = KrrConfig {
-            method: "wlsh".into(),
+            method: MethodSpec::Wlsh,
             budget: m,
             scale: med_l1,
             lambda: 0.5,
             ..Default::default()
         };
-        let model = Trainer::new(cfg).train(&tr);
+        let model = Trainer::new(cfg).train(&tr).expect("train");
         let err = rmse(&model.predict(&te.x), &te.y);
         t.row(&[
             m.to_string(),
@@ -135,7 +136,7 @@ fn a4_workers() {
     let t = Table::new(&[("workers", 8), ("build", 9)]);
     for w in [1usize, 2, 4] {
         let cfg = KrrConfig {
-            method: "wlsh".into(),
+            method: MethodSpec::Wlsh,
             budget: 50,
             scale: 4.0,
             workers: w,
@@ -143,7 +144,7 @@ fn a4_workers() {
         };
         let trainer = Trainer::new(cfg);
         let t0 = std::time::Instant::now();
-        let op = trainer.build_operator(&ds);
+        let op = trainer.build_operator(&ds).expect("build");
         let b = t0.elapsed().as_secs_f64();
         t.row(&[w.to_string(), secs(b)]);
         let _ = op.memory_bytes();
@@ -169,14 +170,14 @@ fn a5_nystrom() {
     let t = Table::new(&[("method", 16), ("rmse", 9), ("total", 9), ("mem(MB)", 9)]);
     for (method, budget) in [("wlsh", 200), ("nystrom", 200), ("rff", 2000)] {
         let cfg = KrrConfig {
-            method: method.into(),
+            method: method.parse().unwrap(),
             budget,
             scale: if method == "wlsh" { med_l1 } else { med_l2 },
             lambda: 0.5,
             ..Default::default()
         };
         let t0 = std::time::Instant::now();
-        let model = Trainer::new(cfg).train(&tr);
+        let model = Trainer::new(cfg).train(&tr).expect("train");
         let err = rmse(&model.predict(&te.x), &te.y);
         t.row(&[
             format!("{method}({budget})"),

@@ -11,6 +11,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use common::{by_scale, f, record, Table};
+use wlsh_krr::api::MethodSpec;
 use wlsh_krr::config::KrrConfig;
 use wlsh_krr::coordinator::{serve, ServerConfig, Trainer};
 use wlsh_krr::data::synthetic_by_name;
@@ -33,7 +34,7 @@ fn run_load(
         workers: 1,
     };
     let m = model.clone();
-    let server = std::thread::spawn(move || serve(m, d, scfg, Some(tx)).unwrap());
+    let server = std::thread::spawn(move || serve(m, scfg, Some(tx)).unwrap());
     let addr = rx.recv().unwrap();
     let t0 = std::time::Instant::now();
     std::thread::scope(|scope| {
@@ -80,13 +81,13 @@ fn main() {
     let n_train = ds.n * 4 / 5;
     let (train, test) = ds.split(n_train, 8);
     let cfg = KrrConfig {
-        method: "wlsh".into(),
+        method: MethodSpec::Wlsh,
         budget: 250,
         scale: 5.0,
         lambda: 0.5,
         ..Default::default()
     };
-    let model = Arc::new(Trainer::new(cfg).train(&train));
+    let model = Arc::new(Trainer::new(cfg).train(&train).expect("train"));
     let requests = by_scale(50, 250, 1000);
     println!(
         "=== F-SERVE: serving load (wlsh m=250, d={}, {} req/client) ===\n",

@@ -58,8 +58,8 @@ fn main() {
                 ("exact-wlsh", "smooth2", 7.0),
             ] {
                 let cfg = KrrConfig {
-                    method: method.into(),
-                    bucket: bucket.into(),
+                    method: method.parse().unwrap(),
+                    bucket: bucket.parse().unwrap(),
                     gamma_shape: shape,
                     scale: 1.0,
                     lambda: 0.02,
@@ -67,7 +67,7 @@ fn main() {
                     cg_tol: 1e-7,
                     ..Default::default()
                 };
-                let model = Trainer::new(cfg).train(&tr);
+                let model = Trainer::new(cfg).train(&tr).expect("train");
                 errs.push(rmse(&model.predict(&te.x), &te.y));
             }
             let names = ["laplace", "sq-exp", "matern52", "wlsh"];

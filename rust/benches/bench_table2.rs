@@ -19,6 +19,7 @@ mod common;
 use std::time::Instant;
 
 use common::{by_scale, f, record, secs, Table};
+use wlsh_krr::api::MethodSpec;
 use wlsh_krr::config::KrrConfig;
 use wlsh_krr::coordinator::Trainer;
 use wlsh_krr::data::{rmse, synthetic_by_name};
@@ -60,9 +61,9 @@ fn main() {
         // WLSH-rect, L2 for SE-family / RFF / Matérn)
         let med_l1 = wlsh_krr::data::median_distance(&tr, true, 500, 11);
         let med_l2 = wlsh_krr::data::median_distance(&tr, false, 500, 11);
-        let mut preset_wlsh = KrrConfig::paper_preset(name, "wlsh");
+        let mut preset_wlsh = KrrConfig::paper_preset(name, MethodSpec::Wlsh);
         preset_wlsh.scale = med_l1;
-        let mut preset_rff = KrrConfig::paper_preset(name, "rff");
+        let mut preset_rff = KrrConfig::paper_preset(name, MethodSpec::Rff);
         preset_rff.scale = med_l2;
         // estimate exact cost: one CG iter is ~n²·d kernel-flops; skip if
         // the budget can't fit ~30 iterations (the paper's ">12 hrs  N/A")
@@ -96,14 +97,14 @@ fn main() {
                 _ => med_l2, // SE / Matérn / RFF live on L2 distances
             };
             let cfg = KrrConfig {
-                method: method.into(),
+                method: method.parse().unwrap(),
                 scale,
                 cg_max_iters: if is_exact { 40 } else { 80 },
                 cg_tol: 1e-4,
                 ..base.clone()
             };
             let t0 = Instant::now();
-            let model = Trainer::new(cfg).train(&tr);
+            let model = Trainer::new(cfg).train(&tr).expect("train");
             let err = rmse(&model.predict(&te.x), &te.y);
             let total = t0.elapsed().as_secs_f64();
             table.row(&[

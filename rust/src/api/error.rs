@@ -1,0 +1,107 @@
+//! The crate-wide error type. Every fallible entry point — the
+//! [`KrrModel`](crate::api::KrrModel) builder,
+//! [`Trainer::train`](crate::coordinator::Trainer::train), TOML configs,
+//! CLI parsing, and checkpoint I/O — surfaces misconfiguration and
+//! runtime failures as a [`KrrError`] instead of panicking, so callers
+//! (and the CLI's exit-code mapping) can tell a typo from a crash.
+
+use std::fmt;
+
+/// Everything that can go wrong between "spec string" and "trained model".
+#[derive(Clone, Debug, PartialEq)]
+pub enum KrrError {
+    /// The method string matched no estimator family (see
+    /// [`MethodSpec`](crate::api::MethodSpec) for the accepted names).
+    UnknownMethod(String),
+    /// The bucket-function string matched no [`BucketSpec`](crate::api::BucketSpec).
+    UnknownBucket(String),
+    /// The preconditioner string matched no [`PrecondSpec`](crate::api::PrecondSpec).
+    UnknownPrecond(String),
+    /// The kernel string matched no [`KernelSpec`](crate::api::KernelSpec).
+    UnknownKernel(String),
+    /// The dataset name matched no synthetic spec and is not a CSV path.
+    UnknownDataset(String),
+    /// A parameter parsed but is out of range (λ < 0, scale ≤ 0, ...).
+    BadParam(String),
+    /// The linear-algebra stage failed (e.g. a landmark matrix that is not
+    /// positive definite).
+    SolveFailed(String),
+    /// Filesystem / network I/O failure (checkpoints, CSV loads).
+    Io(String),
+}
+
+impl fmt::Display for KrrError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            KrrError::UnknownMethod(s) => write!(
+                f,
+                "unknown method {s:?} (wlsh|rff|exact-laplace|exact-se|exact-matern|exact-wlsh|nystrom)"
+            ),
+            KrrError::UnknownBucket(s) => {
+                write!(f, "unknown bucket {s:?} (rect|smooth|smooth<q>)")
+            }
+            KrrError::UnknownPrecond(s) => {
+                write!(f, "unknown preconditioner {s:?} (none|jacobi|nystrom|nystrom(rank=R))")
+            }
+            KrrError::UnknownKernel(s) => {
+                write!(f, "unknown kernel {s:?} (laplace|se|matern52|wlsh)")
+            }
+            KrrError::UnknownDataset(s) => {
+                write!(f, "unknown dataset {s:?} (and not a .csv path)")
+            }
+            KrrError::BadParam(s) => write!(f, "bad parameter: {s}"),
+            KrrError::SolveFailed(s) => write!(f, "solve failed: {s}"),
+            KrrError::Io(s) => write!(f, "io error: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for KrrError {}
+
+impl From<std::io::Error> for KrrError {
+    fn from(e: std::io::Error) -> Self {
+        KrrError::Io(e.to_string())
+    }
+}
+
+impl KrrError {
+    /// Process exit code for the CLI: 2 for usage/config mistakes (matching
+    /// the unknown-subcommand convention), 1 for runtime failures.
+    pub fn exit_code(&self) -> i32 {
+        match self {
+            KrrError::UnknownMethod(_)
+            | KrrError::UnknownBucket(_)
+            | KrrError::UnknownPrecond(_)
+            | KrrError::UnknownKernel(_)
+            | KrrError::UnknownDataset(_)
+            | KrrError::BadParam(_) => 2,
+            KrrError::SolveFailed(_) | KrrError::Io(_) => 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_offending_string() {
+        let e = KrrError::UnknownMethod("wlshh".into());
+        assert!(e.to_string().contains("wlshh"));
+        assert!(e.to_string().contains("nystrom"));
+    }
+
+    #[test]
+    fn exit_codes_split_usage_from_runtime() {
+        assert_eq!(KrrError::UnknownMethod("x".into()).exit_code(), 2);
+        assert_eq!(KrrError::BadParam("x".into()).exit_code(), 2);
+        assert_eq!(KrrError::SolveFailed("x".into()).exit_code(), 1);
+        assert_eq!(KrrError::Io("x".into()).exit_code(), 1);
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let e: KrrError = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(matches!(e, KrrError::Io(_)));
+    }
+}

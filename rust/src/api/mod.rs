@@ -1,0 +1,272 @@
+//! The typed public API: spec enums, the crate error type, and the
+//! fallible model builder.
+//!
+//! The builder is the front door for training:
+//!
+//! ```no_run
+//! use wlsh_krr::api::{KrrModel, MethodSpec};
+//! # let train = wlsh_krr::data::synthetic_by_name("wine", Some(200), 1).unwrap();
+//! let model = KrrModel::builder()
+//!     .method(MethodSpec::Wlsh) // or .method("wlsh") — typos become Err
+//!     .budget(450)
+//!     .scale(3.0)
+//!     .lambda(0.5)
+//!     .fit(&train)?;
+//! let preds = model.predict(&train.x);
+//! # Ok::<(), wlsh_krr::api::KrrError>(())
+//! ```
+//!
+//! Every misconfiguration — an unknown method string, a non-positive
+//! bandwidth, a landmark matrix that fails to factor — surfaces as a
+//! [`KrrError`] from [`KrrBuilder::fit`], never as a panic.
+
+mod error;
+mod spec;
+
+pub use error::KrrError;
+pub use spec::{
+    BucketSpec, KernelFamily, KernelSpec, MethodSpec, PrecondSpec, DEFAULT_PRECOND_RANK,
+};
+
+pub use crate::coordinator::TrainedModel;
+pub use crate::sketch::Predictor;
+
+use crate::config::KrrConfig;
+use crate::coordinator::Trainer;
+use crate::data::Dataset;
+
+/// Conversion into a spec, either from the typed value itself or from its
+/// string form — lets builder setters accept both `MethodSpec::Wlsh` and
+/// `"wlsh"` while keeping string typos fallible (surfaced at
+/// [`KrrBuilder::fit`], not as a panic).
+pub trait IntoSpec<T> {
+    fn into_spec(self) -> Result<T, KrrError>;
+}
+
+macro_rules! impl_into_spec {
+    ($t:ty) => {
+        impl IntoSpec<$t> for $t {
+            fn into_spec(self) -> Result<$t, KrrError> {
+                Ok(self)
+            }
+        }
+
+        impl IntoSpec<$t> for &str {
+            fn into_spec(self) -> Result<$t, KrrError> {
+                self.parse()
+            }
+        }
+
+        impl IntoSpec<$t> for &String {
+            fn into_spec(self) -> Result<$t, KrrError> {
+                self.parse()
+            }
+        }
+    };
+}
+
+impl_into_spec!(MethodSpec);
+impl_into_spec!(BucketSpec);
+impl_into_spec!(PrecondSpec);
+impl_into_spec!(KernelSpec);
+
+/// Entry point for the builder API. `KrrModel` is a namespace: the trained
+/// artifact itself is a [`TrainedModel`].
+pub struct KrrModel;
+
+impl KrrModel {
+    /// Start a model spec from [`KrrConfig::default`].
+    pub fn builder() -> KrrBuilder {
+        KrrBuilder { config: KrrConfig::default(), err: None }
+    }
+}
+
+/// Fallible builder for a KRR training run.
+///
+/// Setters never panic: a bad string spec or out-of-range parameter is
+/// remembered and returned from [`fit`](Self::fit) /
+/// [`build_config`](Self::build_config) (first error wins).
+#[derive(Clone, Debug)]
+pub struct KrrBuilder {
+    config: KrrConfig,
+    err: Option<KrrError>,
+}
+
+impl Default for KrrBuilder {
+    fn default() -> Self {
+        KrrModel::builder()
+    }
+}
+
+impl KrrBuilder {
+    fn record<T>(&mut self, r: Result<T, KrrError>, apply: impl FnOnce(&mut KrrConfig, T)) {
+        match r {
+            Ok(v) => apply(&mut self.config, v),
+            Err(e) => {
+                self.err.get_or_insert(e);
+            }
+        }
+    }
+
+    /// Start from an existing config (e.g. one parsed from TOML).
+    pub fn config(mut self, config: KrrConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Estimator family: a [`MethodSpec`] or its string form.
+    pub fn method(mut self, m: impl IntoSpec<MethodSpec>) -> Self {
+        self.record(m.into_spec(), |c, v| c.method = v);
+        self
+    }
+
+    /// WLSH bucket function: a [`BucketSpec`] or its string form.
+    pub fn bucket(mut self, b: impl IntoSpec<BucketSpec>) -> Self {
+        self.record(b.into_spec(), |c, v| c.bucket = v);
+        self
+    }
+
+    /// CG preconditioner: a [`PrecondSpec`] or its string form.
+    pub fn precond(mut self, p: impl IntoSpec<PrecondSpec>) -> Self {
+        self.record(p.into_spec(), |c, v| c.precond = v);
+        self
+    }
+
+    /// Sketch budget: WLSH instances m / RFF features D / Nyström landmarks.
+    pub fn budget(mut self, budget: usize) -> Self {
+        self.config.budget = budget;
+        self
+    }
+
+    /// Gamma shape of the LSH width law (2 ⇒ Laplace, 7 ⇒ paper's smooth).
+    pub fn gamma_shape(mut self, shape: f64) -> Self {
+        self.config.gamma_shape = shape;
+        self
+    }
+
+    /// Kernel bandwidth (> 0).
+    pub fn scale(mut self, scale: f64) -> Self {
+        self.config.scale = scale;
+        self
+    }
+
+    /// Ridge λ (≥ 0).
+    pub fn lambda(mut self, lambda: f64) -> Self {
+        self.config.lambda = lambda;
+        self
+    }
+
+    /// CG iteration cap.
+    pub fn cg_max_iters(mut self, iters: usize) -> Self {
+        self.config.cg_max_iters = iters;
+        self
+    }
+
+    /// CG relative-residual tolerance (> 0).
+    pub fn cg_tol(mut self, tol: f64) -> Self {
+        self.config.cg_tol = tol;
+        self
+    }
+
+    /// Per-iteration CG progress lines on stderr.
+    pub fn cg_verbose(mut self, verbose: bool) -> Self {
+        self.config.cg_verbose = verbose;
+        self
+    }
+
+    /// Worker threads for the sketch build.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.config.workers = workers;
+        self
+    }
+
+    /// RNG seed (sketch + data splits derive from it deterministically).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.config.seed = seed;
+        self
+    }
+
+    /// Validate and return the assembled [`KrrConfig`].
+    pub fn build_config(self) -> Result<KrrConfig, KrrError> {
+        if let Some(e) = self.err {
+            return Err(e);
+        }
+        self.config.validate()?;
+        Ok(self.config)
+    }
+
+    /// Train on `ds`: build the operator, run (preconditioned) CG, and
+    /// freeze the serving-time [`Predictor`] state.
+    pub fn fit(self, ds: &Dataset) -> Result<TrainedModel, KrrError> {
+        let config = self.build_config()?;
+        Trainer::new(config).train(ds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic_by_name;
+
+    fn small_ds() -> Dataset {
+        let mut ds = synthetic_by_name("wine", Some(200), 1).unwrap();
+        ds.standardize();
+        ds
+    }
+
+    #[test]
+    fn builder_trains_and_predicts() {
+        let ds = small_ds();
+        let (tr, te) = ds.split(160, 2);
+        let model = KrrModel::builder()
+            .method(MethodSpec::Wlsh)
+            .budget(32)
+            .scale(3.0)
+            .lambda(0.5)
+            .fit(&tr)
+            .unwrap();
+        let pred = model.predict(&te.x);
+        assert_eq!(pred.len(), te.n);
+        assert!(pred.iter().all(|p| p.is_finite()));
+    }
+
+    #[test]
+    fn string_setters_parse_through_the_specs() {
+        let cfg = KrrModel::builder()
+            .method("rff")
+            .bucket("smooth2")
+            .precond("nystrom(rank=7)")
+            .build_config()
+            .unwrap();
+        assert_eq!(cfg.method, MethodSpec::Rff);
+        assert_eq!(cfg.bucket, BucketSpec::Smooth(2));
+        assert_eq!(cfg.precond, PrecondSpec::Nystrom { rank: 7 });
+    }
+
+    #[test]
+    fn first_error_wins_and_surfaces_at_fit() {
+        let ds = small_ds();
+        let err = KrrModel::builder()
+            .method("wlshh")
+            .bucket("also-bogus")
+            .fit(&ds)
+            .unwrap_err();
+        assert_eq!(err, KrrError::UnknownMethod("wlshh".into()));
+    }
+
+    #[test]
+    fn bad_params_are_rejected_at_build() {
+        assert!(matches!(
+            KrrModel::builder().scale(-2.0).build_config(),
+            Err(KrrError::BadParam(_))
+        ));
+        assert!(matches!(
+            KrrModel::builder().lambda(f64::NAN).build_config(),
+            Err(KrrError::BadParam(_))
+        ));
+        assert!(matches!(
+            KrrModel::builder().method(MethodSpec::Wlsh).budget(0).build_config(),
+            Err(KrrError::BadParam(_))
+        ));
+    }
+}

@@ -1,0 +1,423 @@
+//! Typed specifications for every method/kernel/bucket/preconditioner
+//! choice the system exposes.
+//!
+//! Each spec enum carries its own parameters and round-trips through
+//! `FromStr`/`Display` (`parse(display(spec)) == spec`, property-tested in
+//! `tests/spec_api.rs`). CLI flags, the TOML subset, checkpoint headers,
+//! and train-JSON all parse and print through these four types — there is
+//! exactly one string grammar per concept, and an unrecognized string is a
+//! [`KrrError`], never a panic.
+
+use std::fmt;
+use std::str::FromStr;
+
+use super::KrrError;
+use crate::bucketfn::{rect_bucket, smooth_bucket, BucketEval, PiecewisePoly};
+
+/// Bucket-shaping function f (paper Def. 6/8).
+///
+/// Strings: `rect`, `smooth` (= `smooth2`), `smooth<q>` with q ≥ 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BucketSpec {
+    /// f = rect — unweighted buckets (with Gamma(2,1) widths this is the
+    /// Laplace kernel).
+    Rect,
+    /// C^{q-1} smooth bucket `(rect * rect_{1/(2q)}^{*q})(2x)`; q = 2 is the
+    /// paper's Table-1 function.
+    Smooth(usize),
+}
+
+impl BucketSpec {
+    /// The exact piecewise polynomial for this bucket function.
+    pub fn poly(&self) -> PiecewisePoly {
+        match self {
+            BucketSpec::Rect => rect_bucket(),
+            BucketSpec::Smooth(q) => smooth_bucket(*q),
+        }
+    }
+
+    /// Compiled f32 evaluator for the hashing hot loop.
+    pub fn eval(&self) -> BucketEval {
+        BucketEval::from_poly(&self.poly(), matches!(self, BucketSpec::Rect))
+    }
+}
+
+impl fmt::Display for BucketSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BucketSpec::Rect => write!(f, "rect"),
+            BucketSpec::Smooth(q) => write!(f, "smooth{q}"),
+        }
+    }
+}
+
+impl FromStr for BucketSpec {
+    type Err = KrrError;
+
+    fn from_str(s: &str) -> Result<Self, KrrError> {
+        if s == "rect" {
+            return Ok(BucketSpec::Rect);
+        }
+        if let Some(qs) = s.strip_prefix("smooth") {
+            let q = if qs.is_empty() { Some(2) } else { qs.parse().ok() };
+            if let Some(q) = q {
+                if q >= 1 {
+                    return Ok(BucketSpec::Smooth(q));
+                }
+            }
+        }
+        Err(KrrError::UnknownBucket(s.to_string()))
+    }
+}
+
+/// Exact kernel family selector — the parameter-free tag used inside
+/// [`MethodSpec::Exact`] (the fully parameterized form is [`KernelSpec`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelFamily {
+    Laplace,
+    SquaredExp,
+    Matern52,
+    Wlsh,
+}
+
+/// Which estimator family to train (paper §4 vs. the §1.1 baselines).
+///
+/// Strings are the historical method names: `wlsh`, `rff`,
+/// `exact-laplace`, `exact-se`, `exact-matern`, `exact-wlsh`, `nystrom` —
+/// so checkpoint headers and configs written before the typed API still
+/// parse.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MethodSpec {
+    /// The paper's WLSH random-binning estimator (budget = m instances).
+    Wlsh,
+    /// Random Fourier features baseline (budget = D features).
+    Rff,
+    /// Exact kernel operator (O(n²d) mat-vec) for a kernel family; the
+    /// family's parameters (scale, bucket, shape) come from the config.
+    Exact(KernelFamily),
+    /// Nyström landmark baseline (budget = landmark count).
+    Nystrom,
+}
+
+impl MethodSpec {
+    /// True for the exact (non-sketched) operators, which ignore `budget`.
+    pub fn is_exact(&self) -> bool {
+        matches!(self, MethodSpec::Exact(_))
+    }
+}
+
+impl FromStr for MethodSpec {
+    type Err = KrrError;
+
+    fn from_str(s: &str) -> Result<Self, KrrError> {
+        match s {
+            "wlsh" => Ok(MethodSpec::Wlsh),
+            "rff" => Ok(MethodSpec::Rff),
+            "exact-laplace" => Ok(MethodSpec::Exact(KernelFamily::Laplace)),
+            "exact-se" => Ok(MethodSpec::Exact(KernelFamily::SquaredExp)),
+            "exact-matern" => Ok(MethodSpec::Exact(KernelFamily::Matern52)),
+            "exact-wlsh" => Ok(MethodSpec::Exact(KernelFamily::Wlsh)),
+            "nystrom" => Ok(MethodSpec::Nystrom),
+            other => Err(KrrError::UnknownMethod(other.to_string())),
+        }
+    }
+}
+
+/// CG preconditioner choice, carrying its own parameters.
+///
+/// Strings: `none`, `jacobi`, `nystrom` (rank = 64), `nystrom(rank=R)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrecondSpec {
+    /// Plain CG.
+    None,
+    /// Rescale by `diag(K̃) + λ` — needs
+    /// [`KrrOperator::diag`](crate::sketch::KrrOperator::diag).
+    Jacobi,
+    /// Rank-`rank` Nyström approximation of the target kernel, applied via
+    /// the Woodbury identity.
+    Nystrom {
+        /// Landmark count of the preconditioner (clamped to n at train time).
+        rank: usize,
+    },
+}
+
+/// Default landmark count when `nystrom` is given without an explicit rank.
+pub const DEFAULT_PRECOND_RANK: usize = 64;
+
+impl FromStr for PrecondSpec {
+    type Err = KrrError;
+
+    fn from_str(s: &str) -> Result<Self, KrrError> {
+        match s {
+            "" | "none" => return Ok(PrecondSpec::None),
+            "jacobi" => return Ok(PrecondSpec::Jacobi),
+            "nystrom" => return Ok(PrecondSpec::Nystrom { rank: DEFAULT_PRECOND_RANK }),
+            _ => {}
+        }
+        let (name, params) = split_params(s)
+            .map_err(|_| KrrError::UnknownPrecond(s.to_string()))?;
+        if name == "nystrom" {
+            let mut rank = DEFAULT_PRECOND_RANK;
+            for (k, v) in params {
+                match k {
+                    "rank" => {
+                        rank = v.parse().map_err(|_| {
+                            KrrError::BadParam(format!("nystrom rank {v:?} is not an integer"))
+                        })?;
+                        if rank == 0 {
+                            return Err(KrrError::BadParam("nystrom rank must be ≥ 1".into()));
+                        }
+                    }
+                    other => {
+                        return Err(KrrError::BadParam(format!(
+                            "nystrom preconditioner has no parameter {other:?}"
+                        )))
+                    }
+                }
+            }
+            return Ok(PrecondSpec::Nystrom { rank });
+        }
+        Err(KrrError::UnknownPrecond(s.to_string()))
+    }
+}
+
+/// A fully parameterized shift-invariant kernel — the typed form of
+/// [`crate::kernels::Kernel`], used where a kernel is named by a string
+/// (the `gp` CLI, GP examples).
+///
+/// Strings: a family name (`laplace`, `se`, `matern52`, `wlsh`; aliases
+/// `squared-exp` and `matern` accepted) with optional `(key=value, ...)`
+/// parameters, e.g. `laplace(scale=3)`,
+/// `wlsh(bucket=smooth2,shape=7,scale=1.5)`. Omitted parameters default to
+/// scale = 1, bucket = rect, shape = 2.
+#[derive(Clone, Debug, PartialEq)]
+pub enum KernelSpec {
+    /// exp(-‖x-y‖₁ / scale)
+    Laplace { scale: f64 },
+    /// exp(-‖x-y‖₂² / scale²)
+    SquaredExp { scale: f64 },
+    /// (1 + r + r²/3) e^{-r}, r = ‖x-y‖₂ / scale
+    Matern52 { scale: f64 },
+    /// The WLSH kernel k_{f,p} of Def. 8.
+    Wlsh { bucket: BucketSpec, gamma_shape: f64, scale: f64 },
+}
+
+impl KernelSpec {
+    /// Instantiate the evaluable kernel.
+    pub fn build(&self) -> crate::kernels::Kernel {
+        use crate::kernels::Kernel;
+        match self {
+            KernelSpec::Laplace { scale } => Kernel::laplace(*scale),
+            KernelSpec::SquaredExp { scale } => Kernel::squared_exp(*scale),
+            KernelSpec::Matern52 { scale } => Kernel::matern52(*scale),
+            KernelSpec::Wlsh { bucket, gamma_shape, scale } => {
+                Kernel::wlsh_spec(bucket, *gamma_shape, *scale)
+            }
+        }
+    }
+}
+
+impl FromStr for KernelSpec {
+    type Err = KrrError;
+
+    fn from_str(s: &str) -> Result<Self, KrrError> {
+        let (name, params) =
+            split_params(s).map_err(|_| KrrError::UnknownKernel(s.to_string()))?;
+        let mut scale = 1.0f64;
+        let mut bucket = BucketSpec::Rect;
+        let mut gamma_shape = 2.0f64;
+        let is_wlsh = name == "wlsh";
+        for (k, v) in params {
+            match k {
+                "scale" => {
+                    scale = parse_f64_param("scale", v)?;
+                }
+                "bucket" if is_wlsh => bucket = v.parse()?,
+                "shape" if is_wlsh => {
+                    gamma_shape = parse_f64_param("shape", v)?;
+                }
+                other => {
+                    return Err(KrrError::BadParam(format!(
+                        "kernel {name:?} has no parameter {other:?}"
+                    )))
+                }
+            }
+        }
+        match name {
+            "laplace" => Ok(KernelSpec::Laplace { scale }),
+            "se" | "squared-exp" => Ok(KernelSpec::SquaredExp { scale }),
+            "matern52" | "matern" => Ok(KernelSpec::Matern52 { scale }),
+            "wlsh" => Ok(KernelSpec::Wlsh { bucket, gamma_shape, scale }),
+            other => Err(KrrError::UnknownKernel(other.to_string())),
+        }
+    }
+}
+
+fn parse_f64_param(key: &str, v: &str) -> Result<f64, KrrError> {
+    let x: f64 = v
+        .parse()
+        .map_err(|_| KrrError::BadParam(format!("{key} {v:?} is not a number")))?;
+    if !x.is_finite() || x <= 0.0 {
+        return Err(KrrError::BadParam(format!("{key} must be a positive finite number, got {v}")));
+    }
+    Ok(x)
+}
+
+/// Split `name(k=v,k2=v2)` into the name and its key/value pairs; a bare
+/// `name` yields no pairs. Whitespace around tokens is tolerated.
+fn split_params(s: &str) -> Result<(&str, Vec<(&str, &str)>), ()> {
+    let s = s.trim();
+    let Some(open) = s.find('(') else {
+        if s.is_empty() || s.contains(')') {
+            return Err(());
+        }
+        return Ok((s, Vec::new()));
+    };
+    let name = s[..open].trim();
+    let rest = &s[open + 1..];
+    let Some(body) = rest.strip_suffix(')') else { return Err(()) };
+    if name.is_empty() || body.contains('(') || body.contains(')') {
+        return Err(());
+    }
+    let mut pairs = Vec::new();
+    for part in body.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let Some((k, v)) = part.split_once('=') else { return Err(()) };
+        pairs.push((k.trim(), v.trim()));
+    }
+    Ok((name, pairs))
+}
+
+// ---- Display: the single place each spec's canonical string is defined ----
+
+impl fmt::Display for MethodSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            MethodSpec::Wlsh => "wlsh",
+            MethodSpec::Rff => "rff",
+            MethodSpec::Exact(KernelFamily::Laplace) => "exact-laplace",
+            MethodSpec::Exact(KernelFamily::SquaredExp) => "exact-se",
+            MethodSpec::Exact(KernelFamily::Matern52) => "exact-matern",
+            MethodSpec::Exact(KernelFamily::Wlsh) => "exact-wlsh",
+            MethodSpec::Nystrom => "nystrom",
+        };
+        write!(f, "{s}")
+    }
+}
+
+impl fmt::Display for PrecondSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PrecondSpec::None => write!(f, "none"),
+            PrecondSpec::Jacobi => write!(f, "jacobi"),
+            PrecondSpec::Nystrom { rank } => write!(f, "nystrom(rank={rank})"),
+        }
+    }
+}
+
+impl fmt::Display for KernelSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            KernelSpec::Laplace { scale } => write!(f, "laplace(scale={scale})"),
+            KernelSpec::SquaredExp { scale } => write!(f, "se(scale={scale})"),
+            KernelSpec::Matern52 { scale } => write!(f, "matern52(scale={scale})"),
+            KernelSpec::Wlsh { bucket, gamma_shape, scale } => {
+                write!(f, "wlsh(bucket={bucket},shape={gamma_shape},scale={scale})")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_strings_are_the_legacy_names() {
+        for (s, m) in [
+            ("wlsh", MethodSpec::Wlsh),
+            ("rff", MethodSpec::Rff),
+            ("exact-laplace", MethodSpec::Exact(KernelFamily::Laplace)),
+            ("exact-se", MethodSpec::Exact(KernelFamily::SquaredExp)),
+            ("exact-matern", MethodSpec::Exact(KernelFamily::Matern52)),
+            ("exact-wlsh", MethodSpec::Exact(KernelFamily::Wlsh)),
+            ("nystrom", MethodSpec::Nystrom),
+        ] {
+            assert_eq!(s.parse::<MethodSpec>().unwrap(), m);
+            assert_eq!(m.to_string(), s);
+        }
+        assert_eq!(
+            "wlshh".parse::<MethodSpec>(),
+            Err(KrrError::UnknownMethod("wlshh".into()))
+        );
+    }
+
+    #[test]
+    fn bucket_parses_shorthand_and_rejects_degenerate() {
+        assert_eq!("smooth".parse::<BucketSpec>().unwrap(), BucketSpec::Smooth(2));
+        assert_eq!("smooth3".parse::<BucketSpec>().unwrap(), BucketSpec::Smooth(3));
+        assert!(matches!(
+            "smooth0".parse::<BucketSpec>(),
+            Err(KrrError::UnknownBucket(_))
+        ));
+        assert!(matches!("bogus".parse::<BucketSpec>(), Err(KrrError::UnknownBucket(_))));
+    }
+
+    #[test]
+    fn precond_accepts_bare_and_parameterized_nystrom() {
+        assert_eq!(
+            "nystrom".parse::<PrecondSpec>().unwrap(),
+            PrecondSpec::Nystrom { rank: DEFAULT_PRECOND_RANK }
+        );
+        assert_eq!(
+            "nystrom(rank=17)".parse::<PrecondSpec>().unwrap(),
+            PrecondSpec::Nystrom { rank: 17 }
+        );
+        assert_eq!("".parse::<PrecondSpec>().unwrap(), PrecondSpec::None);
+        assert!(matches!(
+            "nystrom(rank=0)".parse::<PrecondSpec>(),
+            Err(KrrError::BadParam(_))
+        ));
+        assert!(matches!("ssor".parse::<PrecondSpec>(), Err(KrrError::UnknownPrecond(_))));
+    }
+
+    #[test]
+    fn kernel_aliases_and_defaults() {
+        assert_eq!(
+            "matern".parse::<KernelSpec>().unwrap(),
+            KernelSpec::Matern52 { scale: 1.0 }
+        );
+        assert_eq!(
+            "se(scale=2.5)".parse::<KernelSpec>().unwrap(),
+            KernelSpec::SquaredExp { scale: 2.5 }
+        );
+        assert_eq!(
+            "wlsh".parse::<KernelSpec>().unwrap(),
+            KernelSpec::Wlsh { bucket: BucketSpec::Rect, gamma_shape: 2.0, scale: 1.0 }
+        );
+        assert!(matches!(
+            "se(scale=-1)".parse::<KernelSpec>(),
+            Err(KrrError::BadParam(_))
+        ));
+        assert!(matches!(
+            "laplace(shape=2)".parse::<KernelSpec>(),
+            Err(KrrError::BadParam(_))
+        ));
+        assert!(matches!("cosine".parse::<KernelSpec>(), Err(KrrError::UnknownKernel(_))));
+    }
+
+    #[test]
+    fn split_params_grammar() {
+        assert_eq!(split_params("abc"), Ok(("abc", vec![])));
+        assert_eq!(
+            split_params("n(a=1, b=x)"),
+            Ok(("n", vec![("a", "1"), ("b", "x")]))
+        );
+        assert!(split_params("n(a=1").is_err());
+        assert!(split_params("n(a)").is_err());
+        assert!(split_params("(a=1)").is_err());
+    }
+}

@@ -1,8 +1,12 @@
 //! Experiment configuration: a TOML-subset parser (sections, `key = value`
-//! with strings/numbers/bools) plus the named presets driving the CLI,
-//! examples, and benches. No `toml`/`serde` offline — see DESIGN.md §5.
+//! with strings/numbers/bools) plus the typed [`KrrConfig`] driving the
+//! CLI, examples, and benches. No `toml`/`serde` offline — see DESIGN.md
+//! §5. Method/bucket/preconditioner values parse through the spec enums in
+//! [`crate::api`], so an unknown string is a [`KrrError`], not a panic.
 
 use std::collections::BTreeMap;
+
+use crate::api::{BucketSpec, KrrError, MethodSpec, PrecondSpec};
 
 /// Parsed config: section → key → raw value string.
 #[derive(Clone, Debug, Default)]
@@ -10,14 +14,30 @@ pub struct Config {
     sections: BTreeMap<String, BTreeMap<String, String>>,
 }
 
+/// Strip a `#` comment, but only outside double-quoted values — so
+/// `name = "issue #42"` keeps its fragment. The TOML subset has no escape
+/// sequences inside strings, so quote state is a simple toggle.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
 impl Config {
     /// Parse TOML-subset text. Supported: `[section]`, `key = value`,
-    /// `#` comments, bare/quoted strings, numbers, booleans.
+    /// `#` comments (outside quoted strings), bare/quoted strings, numbers,
+    /// booleans.
     pub fn parse(text: &str) -> Result<Config, String> {
         let mut cfg = Config::default();
         let mut section = String::new();
         for (lineno, raw) in text.lines().enumerate() {
-            let line = raw.split('#').next().unwrap_or("").trim();
+            let line = strip_comment(raw).trim();
             if line.is_empty() {
                 continue;
             }
@@ -70,16 +90,18 @@ impl Config {
     }
 }
 
-/// Everything needed to train one KRR model.
-#[derive(Clone, Debug)]
+/// Everything needed to train one KRR model. All method/bucket/precond
+/// choices are typed specs (see [`crate::api`]); numeric knobs are
+/// validated by [`KrrConfig::validate`] before training.
+#[derive(Clone, Debug, PartialEq)]
 pub struct KrrConfig {
-    /// "wlsh" | "rff" | "exact-laplace" | "exact-se" | "exact-matern" | "nystrom"
-    pub method: String,
+    /// Estimator family.
+    pub method: MethodSpec,
     /// WLSH: number of LSH instances (m). RFF: feature count D. Nyström:
-    /// landmark count.
+    /// landmark count. Ignored by the exact methods.
     pub budget: usize,
     /// Bucket-shaping function for WLSH.
-    pub bucket: String,
+    pub bucket: BucketSpec,
     /// Gamma shape of the width law.
     pub gamma_shape: f64,
     /// Kernel bandwidth.
@@ -89,10 +111,8 @@ pub struct KrrConfig {
     /// CG iteration cap and tolerance.
     pub cg_max_iters: usize,
     pub cg_tol: f64,
-    /// CG preconditioner: "none" | "jacobi" | "nystrom".
-    pub precond: String,
-    /// Landmark count (rank) of the Nyström preconditioner.
-    pub precond_rank: usize,
+    /// CG preconditioner (the Nyström variant carries its rank).
+    pub precond: PrecondSpec,
     /// Emit per-iteration CG progress lines to stderr.
     pub cg_verbose: bool,
     /// Sketch workers (instance shards) for the trainer.
@@ -101,18 +121,19 @@ pub struct KrrConfig {
 }
 
 impl Default for KrrConfig {
+    /// The single source of fallback values: the CLI, the TOML reader, the
+    /// builder, and the presets all defer to this impl.
     fn default() -> Self {
         KrrConfig {
-            method: "wlsh".into(),
+            method: MethodSpec::Wlsh,
             budget: 64,
-            bucket: "rect".into(),
+            bucket: BucketSpec::Rect,
             gamma_shape: 2.0,
-            scale: 1.0,
-            lambda: 1.0,
+            scale: 3.0,
+            lambda: 0.5,
             cg_max_iters: 100,
             cg_tol: 1e-4,
-            precond: "none".into(),
-            precond_rank: 64,
+            precond: PrecondSpec::None,
             cg_verbose: false,
             workers: 1,
             seed: 42,
@@ -121,38 +142,88 @@ impl Default for KrrConfig {
 }
 
 impl KrrConfig {
-    /// Read a `[krr]` section over the defaults.
-    pub fn from_config(cfg: &Config) -> KrrConfig {
+    /// Read a `[krr]` section over the defaults. Unknown
+    /// method/bucket/precond strings are errors; absent keys fall back to
+    /// [`KrrConfig::default`].
+    pub fn from_config(cfg: &Config) -> Result<KrrConfig, KrrError> {
         let d = KrrConfig::default();
-        KrrConfig {
-            method: cfg.get_str("krr", "method", &d.method).to_string(),
+        let method = match cfg.get("krr", "method") {
+            Some(s) => s.parse()?,
+            None => d.method,
+        };
+        let bucket = match cfg.get("krr", "bucket") {
+            Some(s) => s.parse()?,
+            None => d.bucket,
+        };
+        let raw_precond = cfg.get("krr", "precond");
+        let mut precond: PrecondSpec = match raw_precond {
+            Some(s) => s.parse()?,
+            None => d.precond,
+        };
+        // legacy key: a separate `precond_rank` fills in a bare `nystrom`;
+        // an explicit nystrom(rank=R) wins over the legacy key
+        if raw_precond == Some("nystrom") {
+            if let PrecondSpec::Nystrom { rank } = &mut precond {
+                *rank = cfg.get_usize("krr", "precond_rank", *rank);
+            }
+        }
+        Ok(KrrConfig {
+            method,
             budget: cfg.get_usize("krr", "budget", d.budget),
-            bucket: cfg.get_str("krr", "bucket", &d.bucket).to_string(),
+            bucket,
             gamma_shape: cfg.get_f64("krr", "gamma_shape", d.gamma_shape),
             scale: cfg.get_f64("krr", "scale", d.scale),
             lambda: cfg.get_f64("krr", "lambda", d.lambda),
             cg_max_iters: cfg.get_usize("krr", "cg_max_iters", d.cg_max_iters),
             cg_tol: cfg.get_f64("krr", "cg_tol", d.cg_tol),
-            precond: cfg.get_str("krr", "precond", &d.precond).to_string(),
-            precond_rank: cfg.get_usize("krr", "precond_rank", d.precond_rank),
+            precond,
             cg_verbose: cfg.get_bool("krr", "cg_verbose", d.cg_verbose),
             workers: cfg.get_usize("krr", "workers", d.workers),
             seed: cfg.get_usize("krr", "seed", d.seed as usize) as u64,
+        })
+    }
+
+    /// Range-check the numeric knobs (the enums are correct by
+    /// construction). Called by the builder and by
+    /// [`Trainer::train`](crate::coordinator::Trainer::train), so every
+    /// entry point shares one validation path.
+    pub fn validate(&self) -> Result<(), KrrError> {
+        if !(self.scale.is_finite() && self.scale > 0.0) {
+            return Err(KrrError::BadParam(format!("scale must be > 0, got {}", self.scale)));
         }
+        if !(self.lambda.is_finite() && self.lambda >= 0.0) {
+            return Err(KrrError::BadParam(format!("lambda must be ≥ 0, got {}", self.lambda)));
+        }
+        if !(self.gamma_shape.is_finite() && self.gamma_shape > 0.0) {
+            return Err(KrrError::BadParam(format!(
+                "gamma_shape must be > 0, got {}",
+                self.gamma_shape
+            )));
+        }
+        if !(self.cg_tol.is_finite() && self.cg_tol > 0.0) {
+            return Err(KrrError::BadParam(format!("cg_tol must be > 0, got {}", self.cg_tol)));
+        }
+        if self.budget == 0 && !self.method.is_exact() {
+            return Err(KrrError::BadParam(format!(
+                "method {} needs budget ≥ 1",
+                self.method
+            )));
+        }
+        Ok(())
     }
 
     /// Paper Table-2 presets per dataset (m / D values from the table).
-    pub fn paper_preset(dataset: &str, method: &str) -> KrrConfig {
-        let mut c = KrrConfig { method: method.to_string(), ..Default::default() };
+    pub fn paper_preset(dataset: &str, method: MethodSpec) -> KrrConfig {
+        let mut c = KrrConfig { method, ..Default::default() };
         match method {
-            "wlsh" => {
+            MethodSpec::Wlsh => {
                 c.budget = match dataset {
                     "wine" => 450,
                     "insurance" => 250,
                     _ => 50,
                 };
             }
-            "rff" => {
+            MethodSpec::Rff => {
                 c.budget = match dataset {
                     "wine" => 7000,
                     "insurance" => 5000,
@@ -163,13 +234,13 @@ impl KrrConfig {
             _ => {}
         }
         // bandwidths: standardized features, moderate smoothing; λ per size
-        c.scale = (match dataset {
+        c.scale = match dataset {
             "wine" => 3.0,
             "insurance" => 6.0,
             "ctslices" => 8.0,
             "covtype" => 4.0,
             _ => 3.0,
-        }) * 1.0;
+        };
         c.lambda = 0.5;
         c
     }
@@ -193,6 +264,16 @@ mod tests {
     }
 
     #[test]
+    fn hash_inside_quoted_value_is_not_a_comment() {
+        let cfg = Config::parse(
+            "[meta]\ntag = \"issue #42\"  # trailing comment\nplain = \"#all\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.get_str("meta", "tag", ""), "issue #42");
+        assert_eq!(cfg.get_str("meta", "plain", ""), "#all");
+    }
+
+    #[test]
     fn missing_keys_fall_back() {
         let cfg = Config::parse("[krr]\n").unwrap();
         assert_eq!(cfg.get_usize("krr", "budget", 7), 7);
@@ -207,33 +288,85 @@ mod tests {
     #[test]
     fn krr_config_roundtrip() {
         let cfg = Config::parse(
-            "[krr]\nmethod = rff\nbudget = 5000\nseed = 9\nprecond = jacobi\nprecond_rank = 32\ncg_verbose = true\n",
+            "[krr]\nmethod = rff\nbudget = 5000\nseed = 9\nprecond = jacobi\ncg_verbose = true\n",
         )
         .unwrap();
-        let k = KrrConfig::from_config(&cfg);
-        assert_eq!(k.method, "rff");
+        let k = KrrConfig::from_config(&cfg).unwrap();
+        assert_eq!(k.method, MethodSpec::Rff);
         assert_eq!(k.budget, 5000);
         assert_eq!(k.seed, 9);
-        assert_eq!(k.precond, "jacobi");
-        assert_eq!(k.precond_rank, 32);
+        assert_eq!(k.precond, PrecondSpec::Jacobi);
         assert!(k.cg_verbose);
         assert_eq!(k.cg_max_iters, KrrConfig::default().cg_max_iters);
     }
 
     #[test]
+    fn legacy_precond_rank_key_overrides_bare_nystrom() {
+        let cfg = Config::parse("[krr]\nprecond = nystrom\nprecond_rank = 32\n").unwrap();
+        let k = KrrConfig::from_config(&cfg).unwrap();
+        assert_eq!(k.precond, PrecondSpec::Nystrom { rank: 32 });
+        // the parameterized form needs no extra key
+        let cfg2 = Config::parse("[krr]\nprecond = nystrom(rank=12)\n").unwrap();
+        let k2 = KrrConfig::from_config(&cfg2).unwrap();
+        assert_eq!(k2.precond, PrecondSpec::Nystrom { rank: 12 });
+        // and an explicit rank wins over a stray legacy key
+        let cfg3 =
+            Config::parse("[krr]\nprecond = nystrom(rank=12)\nprecond_rank = 32\n").unwrap();
+        assert_eq!(
+            KrrConfig::from_config(&cfg3).unwrap().precond,
+            PrecondSpec::Nystrom { rank: 12 }
+        );
+    }
+
+    #[test]
+    fn unknown_spec_strings_error_instead_of_panicking() {
+        let cfg = Config::parse("[krr]\nmethod = wlshh\n").unwrap();
+        assert_eq!(
+            KrrConfig::from_config(&cfg),
+            Err(KrrError::UnknownMethod("wlshh".into()))
+        );
+        let cfg = Config::parse("[krr]\nbucket = round\n").unwrap();
+        assert!(matches!(
+            KrrConfig::from_config(&cfg),
+            Err(KrrError::UnknownBucket(_))
+        ));
+        let cfg = Config::parse("[krr]\nprecond = ssor\n").unwrap();
+        assert!(matches!(
+            KrrConfig::from_config(&cfg),
+            Err(KrrError::UnknownPrecond(_))
+        ));
+    }
+
+    #[test]
     fn precond_defaults_are_off() {
         let k = KrrConfig::default();
-        assert_eq!(k.precond, "none");
-        assert_eq!(k.precond_rank, 64);
+        assert_eq!(k.precond, PrecondSpec::None);
         assert!(!k.cg_verbose);
     }
 
     #[test]
+    fn validate_rejects_out_of_range_params() {
+        let ok = KrrConfig::default();
+        assert!(ok.validate().is_ok());
+        assert!(KrrConfig { scale: 0.0, ..ok.clone() }.validate().is_err());
+        assert!(KrrConfig { lambda: -1.0, ..ok.clone() }.validate().is_err());
+        assert!(KrrConfig { cg_tol: 0.0, ..ok.clone() }.validate().is_err());
+        assert!(KrrConfig { budget: 0, ..ok.clone() }.validate().is_err());
+        // exact methods ignore the budget
+        let exact = KrrConfig {
+            method: "exact-se".parse().unwrap(),
+            budget: 0,
+            ..ok
+        };
+        assert!(exact.validate().is_ok());
+    }
+
+    #[test]
     fn paper_presets_match_table2() {
-        assert_eq!(KrrConfig::paper_preset("wine", "wlsh").budget, 450);
-        assert_eq!(KrrConfig::paper_preset("insurance", "wlsh").budget, 250);
-        assert_eq!(KrrConfig::paper_preset("covtype", "wlsh").budget, 50);
-        assert_eq!(KrrConfig::paper_preset("wine", "rff").budget, 7000);
-        assert_eq!(KrrConfig::paper_preset("covtype", "rff").budget, 1500);
+        assert_eq!(KrrConfig::paper_preset("wine", MethodSpec::Wlsh).budget, 450);
+        assert_eq!(KrrConfig::paper_preset("insurance", MethodSpec::Wlsh).budget, 250);
+        assert_eq!(KrrConfig::paper_preset("covtype", MethodSpec::Wlsh).budget, 50);
+        assert_eq!(KrrConfig::paper_preset("wine", MethodSpec::Rff).budget, 7000);
+        assert_eq!(KrrConfig::paper_preset("covtype", MethodSpec::Rff).budget, 1500);
     }
 }

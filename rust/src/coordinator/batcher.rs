@@ -19,16 +19,22 @@ pub struct DynamicBatcher {
 
 impl DynamicBatcher {
     /// Spawn the dispatcher. `process` receives the concatenated feature
-    /// rows of a batch and must return one prediction per row.
+    /// rows of a batch and writes one prediction per row into the output
+    /// slice (the contract of
+    /// [`Predictor::predict_into`](crate::sketch::Predictor::predict_into))
+    /// — the dispatcher reuses its row/prediction buffers across batches,
+    /// so steady-state serving allocates nothing per batch.
     pub fn spawn<F>(d: usize, max_batch: usize, linger: Duration, process: F) -> DynamicBatcher
     where
-        F: Fn(&[f32]) -> Vec<f64> + Send + 'static,
+        F: Fn(&[f32], &mut [f64]) + Send + 'static,
     {
         let (tx, rx): (Sender<BatchItem>, Receiver<BatchItem>) = mpsc::channel();
         std::thread::Builder::new()
             .name("wlsh-batcher".into())
             .spawn(move || {
                 let mut pending: Vec<BatchItem> = Vec::with_capacity(max_batch);
+                let mut rows: Vec<f32> = Vec::with_capacity(max_batch * d);
+                let mut preds: Vec<f64> = Vec::with_capacity(max_batch);
                 loop {
                     // block for the first item
                     match rx.recv() {
@@ -47,16 +53,17 @@ impl DynamicBatcher {
                             Err(RecvTimeoutError::Disconnected) => break,
                         }
                     }
-                    // assemble and process
-                    let mut rows = Vec::with_capacity(pending.len() * d);
+                    // assemble and process into the reused buffers
+                    rows.clear();
                     for it in &pending {
                         debug_assert_eq!(it.features.len(), d);
                         rows.extend_from_slice(&it.features);
                     }
-                    let preds = process(&rows);
-                    debug_assert_eq!(preds.len(), pending.len());
-                    for (it, p) in pending.drain(..).zip(preds) {
-                        let _ = it.reply.send(p); // receiver may have gone away
+                    preds.clear();
+                    preds.resize(pending.len(), 0.0);
+                    process(&rows, &mut preds);
+                    for (it, p) in pending.drain(..).zip(&preds) {
+                        let _ = it.reply.send(*p); // receiver may have gone away
                     }
                 }
             })
@@ -86,8 +93,10 @@ mod tests {
     #[test]
     fn answers_are_matched_to_requests() {
         // identity-ish processor: prediction = first feature * 2
-        let b = DynamicBatcher::spawn(2, 8, Duration::from_millis(2), |rows| {
-            rows.chunks(2).map(|r| r[0] as f64 * 2.0).collect()
+        let b = DynamicBatcher::spawn(2, 8, Duration::from_millis(2), |rows, out| {
+            for (r, o) in rows.chunks(2).zip(out) {
+                *o = r[0] as f64 * 2.0;
+            }
         });
         let y = b.predict(vec![3.0, 0.0]).unwrap();
         assert_eq!(y, 6.0);
@@ -103,9 +112,11 @@ mod tests {
             1,
             64,
             Duration::from_millis(30),
-            move |rows| {
+            move |rows, out| {
                 bclone.fetch_add(1, Ordering::SeqCst);
-                rows.iter().map(|&v| v as f64).collect()
+                for (r, o) in rows.iter().zip(out) {
+                    *o = *r as f64;
+                }
             },
         ));
         let mut handles = Vec::new();
@@ -124,8 +135,10 @@ mod tests {
 
     #[test]
     fn linger_bound_releases_partial_batches() {
-        let b = DynamicBatcher::spawn(1, 1_000_000, Duration::from_millis(5), |rows| {
-            rows.iter().map(|&v| v as f64).collect()
+        let b = DynamicBatcher::spawn(1, 1_000_000, Duration::from_millis(5), |rows, out| {
+            for (r, o) in rows.iter().zip(out) {
+                *o = *r as f64;
+            }
         });
         let t = Instant::now();
         let y = b.predict(vec![7.0]).unwrap();

@@ -4,10 +4,16 @@
 //! deterministic in (data, config, seed), which keeps checkpoints tiny
 //! (O(n) for β) at the cost of an O(dn·m) rebuild on load, mirroring the
 //! paper's O(dn) preprocessing claim.
+//!
+//! The header's method/bucket/precond fields are the spec enums' `Display`
+//! strings, parsed back through their `FromStr` impls — the same grammar
+//! the CLI and TOML use. Headers written before the typed API (bare
+//! `precond` + separate `precond_rank` key) still load.
 
 use std::io::{Read, Write};
 use std::path::Path;
 
+use crate::api::{KrrError, PrecondSpec};
 use crate::config::KrrConfig;
 use crate::coordinator::{TrainReport, TrainedModel, Trainer};
 use crate::data::Dataset;
@@ -19,16 +25,15 @@ const MAGIC: &[u8; 8] = b"WLSHKRR1";
 pub fn save(model: &TrainedModel, path: &Path) -> std::io::Result<()> {
     let c = &model.config;
     let header = JsonWriter::object()
-        .field_str("method", &c.method)
+        .field_str("method", &c.method.to_string())
         .field_usize("budget", c.budget)
-        .field_str("bucket", &c.bucket)
+        .field_str("bucket", &c.bucket.to_string())
         .field_f64("gamma_shape", c.gamma_shape)
         .field_f64("scale", c.scale)
         .field_f64("lambda", c.lambda)
         .field_usize("cg_max_iters", c.cg_max_iters)
         .field_f64("cg_tol", c.cg_tol)
-        .field_str("precond", &c.precond)
-        .field_usize("precond_rank", c.precond_rank)
+        .field_str("precond", &c.precond.to_string())
         .field_usize("seed", c.seed as usize)
         .field_usize("n", model.beta.len())
         .finish();
@@ -45,54 +50,82 @@ pub fn save(model: &TrainedModel, path: &Path) -> std::io::Result<()> {
 /// Reload a checkpoint: rebuilds the operator from `train` (must be the
 /// same dataset/standardization the model was trained on) and reattaches
 /// the solved β.
-pub fn load(path: &Path, train: &Dataset) -> Result<TrainedModel, String> {
-    let mut f = std::fs::File::open(path).map_err(|e| format!("{}: {e}", path.display()))?;
+pub fn load(path: &Path, train: &Dataset) -> Result<TrainedModel, KrrError> {
+    let mut f = std::fs::File::open(path)
+        .map_err(|e| KrrError::Io(format!("{}: {e}", path.display())))?;
     let mut magic = [0u8; 8];
-    f.read_exact(&mut magic).map_err(|e| e.to_string())?;
+    f.read_exact(&mut magic)?;
     if &magic != MAGIC {
-        return Err("not a wlsh-krr checkpoint".into());
+        return Err(KrrError::Io("not a wlsh-krr checkpoint".into()));
     }
     let mut len8 = [0u8; 8];
-    f.read_exact(&mut len8).map_err(|e| e.to_string())?;
+    f.read_exact(&mut len8)?;
     let hlen = u64::from_le_bytes(len8) as usize;
     let mut hbuf = vec![0u8; hlen];
-    f.read_exact(&mut hbuf).map_err(|e| e.to_string())?;
-    let header = Json::parse(std::str::from_utf8(&hbuf).map_err(|e| e.to_string())?)?;
-    let g = |k: &str| header.get(k).and_then(Json::as_f64).ok_or(format!("missing {k}"));
+    f.read_exact(&mut hbuf)?;
+    let header = Json::parse(
+        std::str::from_utf8(&hbuf).map_err(|e| KrrError::Io(e.to_string()))?,
+    )
+    .map_err(KrrError::Io)?;
+    let g = |k: &str| {
+        header
+            .get(k)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| KrrError::Io(format!("checkpoint header missing {k}")))
+    };
+    let s = |k: &str| {
+        header
+            .get(k)
+            .and_then(Json::as_str)
+            .ok_or_else(|| KrrError::Io(format!("checkpoint header missing {k}")))
+    };
+    // the string fields parse through the same spec grammar the CLI and
+    // TOML use; legacy headers carry exactly these strings
+    let raw_precond = header.get("precond").and_then(Json::as_str);
+    let mut precond: PrecondSpec = match raw_precond {
+        Some(p) => p.parse()?,
+        None => PrecondSpec::None, // absent in pre-PCG checkpoints
+    };
+    // legacy headers stored the rank in a separate field next to a bare
+    // "nystrom"; an explicit nystrom(rank=R) wins over the legacy key
+    if raw_precond == Some("nystrom") {
+        if let (PrecondSpec::Nystrom { rank }, Some(legacy)) =
+            (&mut precond, header.get("precond_rank").and_then(Json::as_usize))
+        {
+            *rank = legacy;
+        }
+    }
     let config = KrrConfig {
-        method: header.get("method").and_then(Json::as_str).ok_or("missing method")?.into(),
+        method: s("method")?.parse()?,
         budget: g("budget")? as usize,
-        bucket: header.get("bucket").and_then(Json::as_str).ok_or("missing bucket")?.into(),
+        bucket: s("bucket")?.parse()?,
         gamma_shape: g("gamma_shape")?,
         scale: g("scale")?,
         lambda: g("lambda")?,
         cg_max_iters: g("cg_max_iters")? as usize,
         cg_tol: g("cg_tol")?,
-        // absent in pre-PCG checkpoints — default off
-        precond: header
-            .get("precond")
-            .and_then(Json::as_str)
-            .unwrap_or("none")
-            .into(),
-        precond_rank: header
-            .get("precond_rank")
-            .and_then(Json::as_usize)
-            .unwrap_or_else(|| KrrConfig::default().precond_rank),
+        precond,
         cg_verbose: false,
         workers: 1,
         seed: g("seed")? as u64,
     };
+    // same range-check path as the builder/CLI/TOML — a corrupt header
+    // (scale ≤ 0, negative λ) must not silently produce a NaN model
+    config.validate()?;
     let n = g("n")? as usize;
     if n != train.n {
-        return Err(format!("checkpoint n={n} but dataset has n={}", train.n));
+        return Err(KrrError::Io(format!(
+            "checkpoint n={n} but dataset has n={}",
+            train.n
+        )));
     }
     let mut beta = vec![0.0f64; n];
     let mut b8 = [0u8; 8];
     for bv in beta.iter_mut() {
-        f.read_exact(&mut b8).map_err(|e| e.to_string())?;
+        f.read_exact(&mut b8)?;
         *bv = f64::from_le_bytes(b8);
     }
-    let op = Trainer::new(config.clone()).build_operator(train);
+    let op = Trainer::new(config.clone()).build_operator(train)?;
     Ok(TrainedModel::assemble(
         op,
         beta,
@@ -113,6 +146,7 @@ pub fn load(path: &Path, train: &Dataset) -> Result<TrainedModel, String> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::MethodSpec;
     use crate::data::synthetic_by_name;
 
     #[test]
@@ -121,19 +155,58 @@ mod tests {
         ds.standardize();
         let (tr, te) = ds.split(200, 2);
         let cfg = KrrConfig {
-            method: "wlsh".into(),
+            method: MethodSpec::Wlsh,
             budget: 32,
             scale: 3.0,
             lambda: 0.5,
+            precond: PrecondSpec::Nystrom { rank: 24 },
             ..Default::default()
         };
-        let model = Trainer::new(cfg).train(&tr);
+        let model = Trainer::new(cfg).train(&tr).unwrap();
         let want = model.predict(&te.x);
         let path = std::env::temp_dir().join("wlsh_ckpt_test.bin");
         save(&model, &path).unwrap();
         let restored = load(&path, &tr).unwrap();
+        assert_eq!(restored.config, model.config);
         let got = restored.predict(&te.x);
         assert_eq!(want, got);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn legacy_header_with_separate_precond_rank_still_loads() {
+        // Reconstruct the pre-typed-API header format: bare "nystrom" with
+        // the rank in its own field, and the old key order.
+        let mut ds = synthetic_by_name("wine", Some(120), 3).unwrap();
+        ds.standardize();
+        let header = JsonWriter::object()
+            .field_str("method", "wlsh")
+            .field_usize("budget", 8)
+            .field_str("bucket", "smooth2")
+            .field_f64("gamma_shape", 7.0)
+            .field_f64("scale", 3.0)
+            .field_f64("lambda", 0.5)
+            .field_usize("cg_max_iters", 50)
+            .field_f64("cg_tol", 1e-4)
+            .field_str("precond", "nystrom")
+            .field_usize("precond_rank", 19)
+            .field_usize("seed", 11)
+            .field_usize("n", ds.n)
+            .finish();
+        let path = std::env::temp_dir().join("wlsh_ckpt_legacy.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        for i in 0..ds.n {
+            bytes.extend_from_slice(&(i as f64 * 0.01).to_le_bytes());
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        let model = load(&path, &ds).unwrap();
+        assert_eq!(model.config.method, MethodSpec::Wlsh);
+        assert_eq!(model.config.bucket, crate::api::BucketSpec::Smooth(2));
+        assert_eq!(model.config.precond, PrecondSpec::Nystrom { rank: 19 });
+        assert_eq!(model.beta[100], 1.0);
         std::fs::remove_file(&path).ok();
     }
 
@@ -142,8 +215,8 @@ mod tests {
         let mut ds = synthetic_by_name("wine", Some(250), 1).unwrap();
         ds.standardize();
         let (tr, _) = ds.split(200, 2);
-        let cfg = KrrConfig { method: "wlsh".into(), budget: 8, ..Default::default() };
-        let model = Trainer::new(cfg).train(&tr);
+        let cfg = KrrConfig { method: MethodSpec::Wlsh, budget: 8, ..Default::default() };
+        let model = Trainer::new(cfg).train(&tr).unwrap();
         let path = std::env::temp_dir().join("wlsh_ckpt_test2.bin");
         save(&model, &path).unwrap();
         let (smaller, _) = tr.split(100, 3);

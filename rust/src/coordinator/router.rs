@@ -17,7 +17,9 @@ pub struct PredictRouter {
 }
 
 impl PredictRouter {
-    pub fn new(model: Arc<TrainedModel>, workers: usize, d: usize) -> PredictRouter {
+    /// The feature arity comes from the model's predictor handle.
+    pub fn new(model: Arc<TrainedModel>, workers: usize) -> PredictRouter {
+        let d = model.dim();
         PredictRouter { model, workers: workers.max(1), d }
     }
 
@@ -57,11 +59,16 @@ mod tests {
         let mut ds = synthetic_by_name("wine", Some(200), 1).unwrap();
         ds.standardize();
         let (tr, te) = ds.split(160, 2);
-        let cfg = KrrConfig { method: "wlsh".into(), budget: 32, scale: 3.0, ..Default::default() };
-        let model = Arc::new(Trainer::new(cfg).train(&tr));
+        let cfg = KrrConfig {
+            method: crate::api::MethodSpec::Wlsh,
+            budget: 32,
+            scale: 3.0,
+            ..Default::default()
+        };
+        let model = Arc::new(Trainer::new(cfg).train(&tr).unwrap());
         let direct = model.predict(&te.x);
         for workers in [1, 2, 4] {
-            let router = PredictRouter::new(model.clone(), workers, te.d);
+            let router = PredictRouter::new(model.clone(), workers);
             let routed = router.predict(&te.x);
             assert_eq!(routed.len(), direct.len());
             for i in 0..direct.len() {
@@ -75,9 +82,14 @@ mod tests {
         let mut ds = synthetic_by_name("wine", Some(100), 3).unwrap();
         ds.standardize();
         let (tr, te) = ds.split(90, 4);
-        let cfg = KrrConfig { method: "wlsh".into(), budget: 8, scale: 3.0, ..Default::default() };
-        let model = Arc::new(Trainer::new(cfg).train(&tr));
-        let router = PredictRouter::new(model, 8, te.d);
+        let cfg = KrrConfig {
+            method: crate::api::MethodSpec::Wlsh,
+            budget: 8,
+            scale: 3.0,
+            ..Default::default()
+        };
+        let model = Arc::new(Trainer::new(cfg).train(&tr).unwrap());
+        let router = PredictRouter::new(model, 8);
         let one = router.predict(&te.x[..te.d]);
         assert_eq!(one.len(), 1);
     }

@@ -45,18 +45,32 @@ pub struct ServerStats {
 }
 
 /// Run the server until a `shutdown` command arrives. Returns the stats.
-/// `ready` (if given) is signalled with the bound address once listening.
+/// The feature arity comes from the model's
+/// [`Predictor`](crate::sketch::Predictor) handle; `ready` (if given) is
+/// signalled with the bound address once listening.
 pub fn serve(
     model: Arc<TrainedModel>,
-    d: usize,
     cfg: ServerConfig,
     ready: Option<std::sync::mpsc::Sender<String>>,
 ) -> std::io::Result<Arc<ServerStats>> {
+    let d = model.dim();
     let listener = TcpListener::bind(&cfg.addr)?;
-    let local = listener.local_addr()?.to_string();
+    let local_sock = listener.local_addr()?;
+    let local = local_sock.to_string();
     if let Some(tx) = ready {
         let _ = tx.send(local.clone());
     }
+    // Address the shutdown self-connect targets: a wildcard bind
+    // (0.0.0.0 / ::) is not connectable on every platform, so poke the
+    // loopback of the same family instead.
+    let mut poke_sock = local_sock;
+    if poke_sock.ip().is_unspecified() {
+        poke_sock.set_ip(match poke_sock.ip() {
+            std::net::IpAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+            std::net::IpAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
+        });
+    }
+    let poke_addr = poke_sock.to_string();
     let stats = Arc::new(ServerStats { latency: LatencyHistogram::new(4096) });
     let stop = Arc::new(AtomicBool::new(false));
     let m = model.clone();
@@ -64,14 +78,17 @@ pub fn serve(
         d,
         cfg.max_batch,
         cfg.linger,
-        move |rows| m.predict(rows),
+        move |rows, out| m.predict_into(rows, out),
     ));
     listener.set_nonblocking(false)?;
-    let mut conn_threads = Vec::new();
+    let mut conn_threads: Vec<std::thread::JoinHandle<()>> = Vec::new();
     for stream in listener.incoming() {
         if stop.load(Ordering::SeqCst) {
             break;
         }
+        // reap connections that already hung up, so a long-lived server
+        // doesn't accumulate one parked JoinHandle per past client
+        conn_threads.retain(|t| !t.is_finished());
         let stream = match stream {
             Ok(s) => s,
             Err(_) => continue,
@@ -80,8 +97,9 @@ pub fn serve(
         let stats = stats.clone();
         let stop2 = stop.clone();
         let d2 = d;
+        let listen_addr = poke_addr.clone();
         conn_threads.push(std::thread::spawn(move || {
-            let _ = handle_conn(stream, d2, &batcher, &stats, &stop2);
+            let _ = handle_conn(stream, d2, &batcher, &stats, &stop2, &listen_addr);
         }));
         // a shutdown handled inside a connection flips `stop`; poke the
         // accept loop by checking after each connection completes quickly
@@ -101,6 +119,7 @@ fn handle_conn(
     batcher: &DynamicBatcher,
     stats: &ServerStats,
     stop: &AtomicBool,
+    listen_addr: &str,
 ) -> std::io::Result<()> {
     stream.set_nodelay(true).ok();
     let mut writer = stream.try_clone()?;
@@ -126,14 +145,10 @@ fn handle_conn(
                         }
                         "shutdown" => {
                             stop.store(true, Ordering::SeqCst);
-                            // unblock the accept loop with a dummy connect
                             writeln!(writer, "{}", JsonWriter::object().field_str("ok", "true").finish())?;
-                            if let Ok(addr) = writer.peer_addr() {
-                                let _ = TcpStream::connect(addr);
-                            }
-                            if let Ok(addr) = writer.local_addr() {
-                                let _ = TcpStream::connect(addr);
-                            }
+                            // one deliberate self-connect to the listener's
+                            // own address unblocks the blocking accept loop
+                            let _ = TcpStream::connect(listen_addr);
                             return Ok(());
                         }
                         other => JsonWriter::object()
@@ -182,8 +197,13 @@ mod tests {
         let mut ds = synthetic_by_name("wine", Some(150), 1).unwrap();
         ds.standardize();
         let (tr, te) = ds.split(120, 2);
-        let cfg = KrrConfig { method: "wlsh".into(), budget: 16, scale: 3.0, ..Default::default() };
-        let model = Arc::new(Trainer::new(cfg).train(&tr));
+        let cfg = KrrConfig {
+            method: crate::api::MethodSpec::Wlsh,
+            budget: 16,
+            scale: 3.0,
+            ..Default::default()
+        };
+        let model = Arc::new(Trainer::new(cfg).train(&tr).unwrap());
         let expected = model.predict(&te.x[..te.d * 3]);
         (model, tr.d, te.x[..te.d * 3].to_vec(), expected)
     }
@@ -191,9 +211,10 @@ mod tests {
     #[test]
     fn end_to_end_roundtrip() {
         let (model, d, queries, expected) = small_model();
+        assert_eq!(model.dim(), d);
         let (tx, rx) = std::sync::mpsc::channel();
         let cfg = ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() };
-        let handle = std::thread::spawn(move || serve(model, d, cfg, Some(tx)).unwrap());
+        let handle = std::thread::spawn(move || serve(model, cfg, Some(tx)).unwrap());
         let addr = rx.recv().unwrap();
         let mut conn = TcpStream::connect(&addr).unwrap();
         conn.set_nodelay(true).ok();
@@ -224,10 +245,10 @@ mod tests {
 
     #[test]
     fn server_reports_errors() {
-        let (model, d, _, _) = small_model();
+        let (model, _d, _, _) = small_model();
         let (tx, rx) = std::sync::mpsc::channel();
         let cfg = ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() };
-        let handle = std::thread::spawn(move || serve(model, d, cfg, Some(tx)).unwrap());
+        let handle = std::thread::spawn(move || serve(model, cfg, Some(tx)).unwrap());
         let addr = rx.recv().unwrap();
         let mut conn = TcpStream::connect(&addr).unwrap();
         conn.set_nodelay(true).ok();

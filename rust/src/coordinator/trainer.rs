@@ -2,43 +2,69 @@
 //! WLSH instance construction across worker threads), solve the ridge
 //! system by CG — optionally preconditioned (Jacobi from the operator
 //! diagonal, or rank-r Nyström of the method's target kernel) via the
-//! `precond` config knob — and package a servable model.
+//! typed `precond` spec — and package a servable model. All failure modes
+//! (bad parameters, non-PD landmark matrices) surface as [`KrrError`];
+//! with the typed [`MethodSpec`]/[`PrecondSpec`] there is no "unknown
+//! string" case left to panic on.
 
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::api::{KernelFamily, KrrError, MethodSpec, PrecondSpec};
 use crate::config::KrrConfig;
 use crate::data::Dataset;
 use crate::kernels::Kernel;
 use crate::lsh::{IdMode, LshFamily};
 use crate::sketch::{
-    ExactKernelOp, KrrOperator, NystromSketch, RffSketch, WlshSketch,
+    ExactKernelOp, KrrOperator, NystromSketch, Predictor, RffSketch, WlshSketch,
 };
 use crate::solver::{solve_krr, solve_krr_pcg, CgOptions, Preconditioner};
 use crate::util::par;
 use crate::util::rng::Pcg64;
 
-/// A trained, servable KRR model.
+/// A trained, servable KRR model. Holds the operator, the solved β, and a
+/// frozen [`Predictor`] handle (the β-dependent serving state — WLSH
+/// bucket loads (§4.2), RFF θ, Nyström core — precomputed once so a
+/// prediction costs O(m·d), not O(n·m)).
 pub struct TrainedModel {
     pub op: Arc<dyn KrrOperator>,
     pub beta: Vec<f64>,
     pub config: KrrConfig,
     pub report: TrainReport,
-    /// β-dependent serving state (e.g. WLSH bucket loads, §4.2) —
-    /// precomputed once so a prediction costs O(m·d), not O(n·m).
-    pub prepared: crate::sketch::PreparedState,
+    predictor: Box<dyn Predictor>,
 }
 
 impl TrainedModel {
-    /// Assemble a model from parts, precomputing the serving state.
+    /// Assemble a model from parts, freezing the serving handle.
     pub fn assemble(
         op: Arc<dyn KrrOperator>,
         beta: Vec<f64>,
         config: KrrConfig,
         report: TrainReport,
     ) -> TrainedModel {
-        let prepared = op.prepare(&beta);
-        TrainedModel { op, beta, config, report, prepared }
+        let predictor = Arc::clone(&op).predictor(&beta);
+        TrainedModel { op, beta, config, report, predictor }
+    }
+
+    /// η̃(q) for each query row (through the frozen predictor handle).
+    pub fn predict(&self, queries: &[f32]) -> Vec<f64> {
+        self.predictor.predict(queries)
+    }
+
+    /// Allocation-free batch serving: one prediction per query row into
+    /// `out`.
+    pub fn predict_into(&self, queries: &[f32], out: &mut [f64]) {
+        self.predictor.predict_into(queries, out)
+    }
+
+    /// The frozen serving handle itself.
+    pub fn predictor(&self) -> &dyn Predictor {
+        &*self.predictor
+    }
+
+    /// Feature count per query row.
+    pub fn dim(&self) -> usize {
+        self.predictor.dim()
     }
 }
 
@@ -57,13 +83,6 @@ pub struct TrainReport {
     pub memory_bytes: usize,
 }
 
-impl TrainedModel {
-    /// η̃(q) for each query row (uses the prepared serving state).
-    pub fn predict(&self, queries: &[f32]) -> Vec<f64> {
-        self.op.predict_prepared(queries, &self.beta, &self.prepared)
-    }
-}
-
 /// Builds operators and runs the solve per a [`KrrConfig`].
 pub struct Trainer {
     pub config: KrrConfig,
@@ -75,35 +94,36 @@ impl Trainer {
     }
 
     /// Build the kernel operator for the configured method.
-    pub fn build_operator(&self, ds: &Dataset) -> Arc<dyn KrrOperator> {
+    pub fn build_operator(&self, ds: &Dataset) -> Result<Arc<dyn KrrOperator>, KrrError> {
         let c = &self.config;
-        match c.method.as_str() {
-            "wlsh" => Arc::new(self.build_wlsh_sharded(ds)),
-            "rff" => Arc::new(RffSketch::build(&ds.x, ds.n, ds.d, c.budget, c.scale, c.seed)),
-            "exact-laplace" => {
-                Arc::new(ExactKernelOp::new(&ds.x, ds.n, ds.d, Kernel::laplace(c.scale)))
+        Ok(match c.method {
+            MethodSpec::Wlsh => Arc::new(self.build_wlsh_sharded(ds)),
+            MethodSpec::Rff => {
+                Arc::new(RffSketch::build(&ds.x, ds.n, ds.d, c.budget, c.scale, c.seed))
             }
-            "exact-se" => {
-                Arc::new(ExactKernelOp::new(&ds.x, ds.n, ds.d, Kernel::squared_exp(c.scale)))
+            MethodSpec::Exact(family) => {
+                Arc::new(ExactKernelOp::new(&ds.x, ds.n, ds.d, self.exact_kernel(family)))
             }
-            "exact-matern" => {
-                Arc::new(ExactKernelOp::new(&ds.x, ds.n, ds.d, Kernel::matern52(c.scale)))
-            }
-            "exact-wlsh" => Arc::new(ExactKernelOp::new(
-                &ds.x,
-                ds.n,
-                ds.d,
-                Kernel::wlsh(&c.bucket, c.gamma_shape, c.scale),
-            )),
-            "nystrom" => Arc::new(NystromSketch::build(
+            MethodSpec::Nystrom => Arc::new(NystromSketch::build(
                 &ds.x,
                 ds.n,
                 ds.d,
                 c.budget.min(ds.n),
                 Kernel::squared_exp(c.scale),
                 c.seed,
-            )),
-            other => panic!("unknown method {other:?}"),
+            )?),
+        })
+    }
+
+    /// The evaluable kernel for an exact-method family, parameterized from
+    /// the config (scale; bucket + shape for the WLSH kernel).
+    fn exact_kernel(&self, family: KernelFamily) -> Kernel {
+        let c = &self.config;
+        match family {
+            KernelFamily::Laplace => Kernel::laplace(c.scale),
+            KernelFamily::SquaredExp => Kernel::squared_exp(c.scale),
+            KernelFamily::Matern52 => Kernel::matern52(c.scale),
+            KernelFamily::Wlsh => Kernel::wlsh_spec(&c.bucket, c.gamma_shape, c.scale),
         }
     }
 
@@ -113,7 +133,7 @@ impl Trainer {
     fn build_wlsh_sharded(&self, ds: &Dataset) -> WlshSketch {
         let c = &self.config;
         if c.workers <= 1 {
-            return WlshSketch::build(
+            return WlshSketch::build_spec(
                 &ds.x, ds.n, ds.d, c.budget, &c.bucket, c.gamma_shape, c.scale, c.seed,
             );
         }
@@ -135,12 +155,11 @@ impl Trainer {
     /// preconditioner against the same kernel the operator approximates.
     fn target_kernel(&self) -> Kernel {
         let c = &self.config;
-        match c.method.as_str() {
-            "wlsh" | "exact-wlsh" => Kernel::wlsh(&c.bucket, c.gamma_shape, c.scale),
-            "exact-laplace" => Kernel::laplace(c.scale),
-            "exact-matern" => Kernel::matern52(c.scale),
-            // exact-se, rff, nystrom, and anything new default to SE.
-            _ => Kernel::squared_exp(c.scale),
+        match c.method {
+            MethodSpec::Wlsh => Kernel::wlsh_spec(&c.bucket, c.gamma_shape, c.scale),
+            MethodSpec::Exact(family) => self.exact_kernel(family),
+            // rff and nystrom target the SE kernel.
+            MethodSpec::Rff | MethodSpec::Nystrom => Kernel::squared_exp(c.scale),
         }
     }
 
@@ -148,9 +167,9 @@ impl Trainer {
     /// (with a stderr warning) when the operator can't support it.
     fn build_preconditioner(&self, ds: &Dataset, op: &dyn KrrOperator) -> Preconditioner {
         let c = &self.config;
-        match c.precond.as_str() {
-            "" | "none" => Preconditioner::Identity,
-            "jacobi" => match op.diag() {
+        match c.precond {
+            PrecondSpec::None => Preconditioner::Identity,
+            PrecondSpec::Jacobi => match op.diag() {
                 Some(diag) => Preconditioner::jacobi(&diag, c.lambda),
                 None => {
                     eprintln!(
@@ -160,18 +179,21 @@ impl Trainer {
                     Preconditioner::Identity
                 }
             },
-            "nystrom" => {
-                let rank = c.precond_rank.clamp(1, ds.n);
+            PrecondSpec::Nystrom { rank } => {
+                let rank = rank.clamp(1, ds.n);
                 // decorrelate the landmark sample from the sketch seed
-                let nys = NystromSketch::build(
+                let precond = NystromSketch::build(
                     &ds.x,
                     ds.n,
                     ds.d,
                     rank,
                     self.target_kernel(),
                     c.seed.wrapping_add(0x9e37_79b9_7f4a_7c15),
-                );
-                match nys.ridge_precond(c.lambda) {
+                )
+                .and_then(|nys| {
+                    nys.ridge_precond(c.lambda).map_err(KrrError::SolveFailed)
+                });
+                match precond {
                     Ok(p) => Preconditioner::Nystrom(p),
                     Err(e) => {
                         eprintln!(
@@ -181,14 +203,16 @@ impl Trainer {
                     }
                 }
             }
-            other => panic!("unknown preconditioner {other:?} (none|jacobi|nystrom)"),
         }
     }
 
     /// Full training run: operator build + (preconditioned) CG solve.
-    pub fn train(&self, train: &Dataset) -> TrainedModel {
+    /// Validates the config first, so every entry point — builder, CLI,
+    /// TOML — shares one range-check path.
+    pub fn train(&self, train: &Dataset) -> Result<TrainedModel, KrrError> {
+        self.config.validate()?;
         let t0 = Instant::now();
-        let op = self.build_operator(train);
+        let op = self.build_operator(train)?;
         let build_secs = t0.elapsed().as_secs_f64();
         let t1 = Instant::now();
         let opts = CgOptions {
@@ -216,7 +240,7 @@ impl Trainer {
             precond: precond.name().to_string(),
             memory_bytes: op.memory_bytes(),
         };
-        TrainedModel::assemble(op, cg.beta, self.config.clone(), report)
+        Ok(TrainedModel::assemble(op, cg.beta, self.config.clone(), report))
     }
 }
 
@@ -236,13 +260,13 @@ mod tests {
         let ds = small_ds();
         let (tr, te) = ds.split(240, 2);
         let cfg = KrrConfig {
-            method: "wlsh".into(),
+            method: MethodSpec::Wlsh,
             budget: 128,
             scale: 3.0,
             lambda: 0.2,
             ..Default::default()
         };
-        let model = Trainer::new(cfg).train(&tr);
+        let model = Trainer::new(cfg).train(&tr).unwrap();
         let pred = model.predict(&te.x);
         let rmse = crate::data::rmse(&pred, &te.y);
         let mean_rmse = crate::data::rmse(&vec![0.0; te.n], &te.y);
@@ -254,8 +278,13 @@ mod tests {
     fn sharded_build_is_deterministic_across_worker_counts() {
         let ds = small_ds();
         let mk = |workers| {
-            let cfg = KrrConfig { method: "wlsh".into(), budget: 12, workers, ..Default::default() };
-            Trainer::new(cfg).build_operator(&ds)
+            let cfg = KrrConfig {
+                method: MethodSpec::Wlsh,
+                budget: 12,
+                workers,
+                ..Default::default()
+            };
+            Trainer::new(cfg).build_operator(&ds).unwrap()
         };
         let a = mk(1);
         let b = mk(3);
@@ -273,7 +302,7 @@ mod tests {
         let ds = small_ds();
         let (tr, te) = ds.split(240, 8);
         let base = KrrConfig {
-            method: "wlsh".into(),
+            method: MethodSpec::Wlsh,
             budget: 64,
             scale: 3.0,
             lambda: 0.2,
@@ -281,13 +310,13 @@ mod tests {
             cg_tol: 1e-8,
             ..Default::default()
         };
-        let plain = Trainer::new(base.clone()).train(&tr);
+        let plain = Trainer::new(base.clone()).train(&tr).unwrap();
         assert_eq!(plain.report.precond, "none");
         let want = plain.predict(&te.x);
-        for precond in ["jacobi", "nystrom"] {
-            let cfg = KrrConfig { precond: precond.into(), precond_rank: 48, ..base.clone() };
-            let model = Trainer::new(cfg).train(&tr);
-            assert_eq!(model.report.precond, precond);
+        for precond in [PrecondSpec::Jacobi, PrecondSpec::Nystrom { rank: 48 }] {
+            let cfg = KrrConfig { precond, ..base.clone() };
+            let model = Trainer::new(cfg).train(&tr).unwrap();
+            assert_eq!(model.report.precond, precond.to_string().split('(').next().unwrap());
             assert!(model.report.converged, "{precond} did not converge");
             let got = model.predict(&te.x);
             for i in 0..te.n {
@@ -301,20 +330,83 @@ mod tests {
         }
     }
 
+    /// An operator with no cheap diagonal, for exercising the Jacobi
+    /// fallback (every real operator now implements `diag`).
+    struct DiaglessOp {
+        n: usize,
+    }
+
+    struct ZeroPredictor {
+        d: usize,
+    }
+
+    impl Predictor for ZeroPredictor {
+        fn dim(&self) -> usize {
+            self.d
+        }
+
+        fn predict_into(&self, _queries: &[f32], out: &mut [f64]) {
+            out.fill(0.0);
+        }
+    }
+
+    impl KrrOperator for DiaglessOp {
+        fn n(&self) -> usize {
+            self.n
+        }
+
+        fn matvec(&self, beta: &[f64]) -> Vec<f64> {
+            beta.to_vec() // identity: SPD, so CG terminates
+        }
+
+        fn predict(&self, queries: &[f32], _beta: &[f64]) -> Vec<f64> {
+            vec![0.0; queries.len()]
+        }
+
+        fn predictor(self: Arc<Self>, _beta: &[f64]) -> Box<dyn Predictor> {
+            Box::new(ZeroPredictor { d: 1 })
+        }
+
+        fn name(&self) -> String {
+            "diagless".into()
+        }
+
+        fn memory_bytes(&self) -> usize {
+            0
+        }
+    }
+
     #[test]
     fn jacobi_falls_back_when_operator_has_no_diagonal() {
-        // rff exposes no cheap diagonal yet — the trainer must warn and
-        // solve unpreconditioned rather than fail.
+        // `KrrOperator::diag` defaults to None; the trainer must warn and
+        // fall back to Identity rather than fail.
+        let ds = small_ds();
+        let cfg = KrrConfig { precond: PrecondSpec::Jacobi, ..Default::default() };
+        let trainer = Trainer::new(cfg);
+        let op = DiaglessOp { n: ds.n };
+        assert!(op.diag().is_none());
+        let pre = trainer.build_preconditioner(&ds, &op);
+        assert_eq!(pre.name(), "none");
+        // ...while an operator with a diagonal gets the real thing
+        let rff = RffSketch::build(&ds.x, ds.n, ds.d, 64, 3.0, 7);
+        let pre = trainer.build_preconditioner(&ds, &rff);
+        assert_eq!(pre.name(), "jacobi");
+    }
+
+    #[test]
+    fn rff_jacobi_training_uses_the_new_diagonal() {
+        // rff now exposes diag(ZZᵀ) as cheap row norms, so requesting the
+        // Jacobi preconditioner must actually engage it.
         let ds = small_ds();
         let cfg = KrrConfig {
-            method: "rff".into(),
+            method: MethodSpec::Rff,
             budget: 128,
             scale: 3.0,
-            precond: "jacobi".into(),
+            precond: PrecondSpec::Jacobi,
             ..Default::default()
         };
-        let model = Trainer::new(cfg).train(&ds);
-        assert_eq!(model.report.precond, "none");
+        let model = Trainer::new(cfg).train(&ds).unwrap();
+        assert_eq!(model.report.precond, "jacobi");
         assert!(model.report.cg_iters > 0);
     }
 
@@ -324,17 +416,27 @@ mod tests {
         let (tr, te) = ds.split(200, 3);
         for method in ["wlsh", "rff", "exact-laplace", "exact-se", "exact-matern", "nystrom"] {
             let cfg = KrrConfig {
-                method: method.into(),
+                method: method.parse().unwrap(),
                 budget: 32,
                 scale: 3.0,
                 lambda: 0.5,
                 cg_max_iters: 50,
                 ..Default::default()
             };
-            let model = Trainer::new(cfg).train(&tr);
+            let model = Trainer::new(cfg).train(&tr).unwrap();
             let pred = model.predict(&te.x);
             assert_eq!(pred.len(), te.n);
             assert!(pred.iter().all(|p| p.is_finite()), "{method}");
         }
+    }
+
+    #[test]
+    fn invalid_config_is_rejected_before_building() {
+        let ds = small_ds();
+        let cfg = KrrConfig { scale: -1.0, ..Default::default() };
+        assert!(matches!(
+            Trainer::new(cfg).train(&ds),
+            Err(KrrError::BadParam(_))
+        ));
     }
 }

@@ -1,7 +1,7 @@
 //! Exact kernel functions (the paper's baselines plus the WLSH kernel
 //! family itself, Def. 8) with a uniform evaluation interface.
 
-use crate::bucketfn::bucket_by_name;
+use crate::api::BucketSpec;
 use crate::quadrature::KernelProfile;
 
 /// A shift-invariant kernel k(x, y) = k(x - y).
@@ -31,13 +31,11 @@ impl Kernel {
         Kernel::Matern52 { scale }
     }
 
-    /// Build the WLSH kernel for a named bucket function and Gamma shape.
+    /// Build the WLSH kernel for a typed bucket spec and Gamma shape.
     /// `scale` divides the input difference (bandwidth), matching how the
     /// estimator scales data before hashing.
-    pub fn wlsh(bucket: &str, gamma_shape: f64, scale: f64) -> Kernel {
-        let pp = bucket_by_name(bucket)
-            .unwrap_or_else(|| panic!("unknown bucket {bucket:?}"));
-        let ff = pp.autocorrelation();
+    pub fn wlsh_spec(bucket: &BucketSpec, gamma_shape: f64, scale: f64) -> Kernel {
+        let ff = bucket.poly().autocorrelation();
         // delta_max: Gamma(shape) has negligible mass past shape+10√shape;
         // (f*f) support ≤ 1 ⇒ k_1d(δ) ≈ 0 beyond that times the support.
         let delta_max = (gamma_shape + 12.0 * gamma_shape.sqrt()).max(16.0);
@@ -45,9 +43,20 @@ impl Kernel {
         Kernel::Wlsh { profile, scale }
     }
 
+    /// String-name convenience over [`Kernel::wlsh_spec`] for tests and
+    /// benches. Panics on a name that does not parse as a [`BucketSpec`] —
+    /// fallible callers should parse the spec themselves.
+    pub fn wlsh(bucket: &str, gamma_shape: f64, scale: f64) -> Kernel {
+        let spec: BucketSpec = match bucket.parse() {
+            Ok(s) => s,
+            Err(e) => panic!("{e}"),
+        };
+        Kernel::wlsh_spec(&spec, gamma_shape, scale)
+    }
+
     /// The paper's Table-1 smooth WLSH kernel: f = smooth2, p = Gamma(7,1).
     pub fn wlsh_paper_smooth(scale: f64) -> Kernel {
-        Kernel::wlsh("smooth2", 7.0, scale)
+        Kernel::wlsh_spec(&BucketSpec::Smooth(2), 7.0, scale)
     }
 
     /// Short name for reports.

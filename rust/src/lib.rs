@@ -27,11 +27,38 @@
 //! reference at every thread count (see `tests/parallel_determinism.rs`).
 //! Thread budget: `WLSH_THREADS` env var, default = available cores.
 //!
-//! Entry points: [`sketch::WlshSketch`] (the paper's estimator),
-//! [`solver::solve_krr`] (CG on `K̃ + λI`), [`coordinator::Trainer`] /
-//! [`coordinator::serve`] (the training/serving framework), and
-//! `examples/quickstart.rs`.
+//! ## Entry points
+//!
+//! The front door is the typed builder in [`api`]:
+//!
+//! ```no_run
+//! use wlsh_krr::api::{KrrModel, MethodSpec};
+//! # let train = wlsh_krr::data::synthetic_by_name("wine", Some(500), 1).unwrap();
+//! let model = KrrModel::builder()
+//!     .method(MethodSpec::Wlsh)   // or .method("wlsh")
+//!     .budget(450)
+//!     .scale(3.0)
+//!     .lambda(0.5)
+//!     .fit(&train)?;              // Err(KrrError), never a panic
+//! let preds = model.predict(&train.x);
+//! # Ok::<(), wlsh_krr::api::KrrError>(())
+//! ```
+//!
+//! Every method/bucket/preconditioner/kernel choice is a spec enum
+//! ([`api::MethodSpec`], [`api::BucketSpec`], [`api::PrecondSpec`],
+//! [`api::KernelSpec`]) with one `FromStr`/`Display` grammar shared by the
+//! CLI, the TOML subset, and checkpoint headers — misspelled strings
+//! surface as [`api::KrrError`] values. A trained model serves through a
+//! frozen [`api::Predictor`] handle (`predict` / allocation-free
+//! `predict_into`), which is what the TCP server and the benches use.
+//!
+//! Lower layers, for direct use: [`sketch::WlshSketch`] (the paper's
+//! estimator), [`solver::solve_krr`] (CG on `K̃ + λI`), and
+//! [`coordinator::Trainer`] / [`coordinator::serve`] (the
+//! training/serving framework). See `examples/quickstart.rs` for the
+//! canonical walkthrough.
 
+pub mod api;
 pub mod bucketfn;
 pub mod config;
 pub mod coordinator;

@@ -18,6 +18,7 @@ mod table;
 
 pub use table::{BucketTable, FxBuildHasher};
 
+use crate::api::BucketSpec;
 use crate::bucketfn::BucketEval;
 use crate::util::rng::Pcg64;
 
@@ -28,9 +29,10 @@ pub struct LshFamily {
     /// Gamma(shape, 1) law of the grid widths (2 ⇒ Laplace, 7 ⇒ paper's
     /// smooth Table-1 kernel).
     pub gamma_shape: f64,
-    /// Bucket-shaping function f.
+    /// Bucket-shaping function f (compiled evaluator).
     pub bucket: BucketEval,
-    pub bucket_name: String,
+    /// The typed spec `bucket` was compiled from.
+    pub bucket_spec: BucketSpec,
     /// i32 odd mixing multipliers (shared with the HLO kernel).
     pub mix32: Vec<i32>,
     /// u64 odd mixing multipliers (native default).
@@ -38,14 +40,15 @@ pub struct LshFamily {
 }
 
 impl LshFamily {
-    pub fn new(d: usize, gamma_shape: f64, bucket_name: &str, rng: &mut Pcg64) -> LshFamily {
-        let bucket = BucketEval::by_name(bucket_name)
-            .unwrap_or_else(|| panic!("unknown bucket function {bucket_name:?}"));
+    /// Build the family for a typed bucket spec — infallible: unknown
+    /// bucket strings are rejected earlier, when parsed into a
+    /// [`BucketSpec`].
+    pub fn new(d: usize, gamma_shape: f64, bucket: &BucketSpec, rng: &mut Pcg64) -> LshFamily {
         LshFamily {
             d,
             gamma_shape,
-            bucket,
-            bucket_name: bucket_name.to_string(),
+            bucket: bucket.eval(),
+            bucket_spec: *bucket,
             mix32: (0..d).map(|_| rng.odd_i32()).collect(),
             mix64: (0..d).map(|_| rng.odd_u64()).collect(),
         }
@@ -203,7 +206,7 @@ mod tests {
 
     fn family(d: usize, bucket: &str) -> (LshFamily, LshFunction) {
         let mut rng = Pcg64::new(7, 0);
-        let fam = LshFamily::new(d, 2.0, bucket, &mut rng);
+        let fam = LshFamily::new(d, 2.0, &bucket.parse().unwrap(), &mut rng);
         let f = fam.sample(&mut rng);
         (fam, f)
     }
@@ -249,7 +252,7 @@ mod tests {
     fn collision_probability_matches_laplace() {
         // P[h(x)=h(y)] = e^{-|x-y|_1} for rect + Gamma(2,1) (Rahimi-Recht)
         let mut rng = Pcg64::new(3, 0);
-        let fam = LshFamily::new(1, 2.0, "rect", &mut rng);
+        let fam = LshFamily::new(1, 2.0, &BucketSpec::Rect, &mut rng);
         let delta = 0.5f32;
         let trials = 40_000;
         let mut hits = 0;

@@ -2,14 +2,19 @@
 //!
 //! Subcommands:
 //!   info                         artifact + platform report
-//!   train   [--dataset wine --method wlsh --m 450 ...]
+//!   train   [--dataset wine --method wlsh --budget 450 ...]
 //!   serve   [--dataset wine --addr 127.0.0.1:7878 ...]
 //!   ose     [--n 256 --m 64 --lambda 1.0]   OSE spectral check (Thm 11)
 //!   gp      [--cov se --dim 5]              Table-1-style GP experiment
+//!
+//! All method/bucket/precond/kernel strings parse through the spec enums
+//! in [`wlsh_krr::api`]; a typo prints one error line on stderr and exits
+//! with code 2 (usage) — runtime failures exit with code 1.
 
 use std::sync::Arc;
 use std::time::Duration;
 
+use wlsh_krr::api::{BucketSpec, KernelSpec, KrrError, MethodSpec, PrecondSpec};
 use wlsh_krr::config::KrrConfig;
 use wlsh_krr::coordinator::{serve, ServerConfig, Trainer};
 use wlsh_krr::data::{load_csv, rmse, synthetic_by_name};
@@ -25,8 +30,11 @@ use wlsh_krr::util::rng::Pcg64;
 fn main() {
     let args = Args::from_env();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
-    match cmd {
-        "info" => cmd_info(&args),
+    let result = match cmd {
+        "info" => {
+            cmd_info(&args);
+            Ok(())
+        }
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
         "ose" => cmd_ose(&args),
@@ -50,41 +58,75 @@ fn main() {
             if other != "help" && other != "--help" {
                 std::process::exit(2);
             }
+            Ok(())
         }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(e.exit_code());
     }
 }
 
-fn load_dataset(args: &Args) -> wlsh_krr::data::Dataset {
+/// `--key spec-string` parsed through the spec's `FromStr`, defaulting
+/// when the flag is absent — the same grammar the TOML reader and
+/// checkpoint headers use.
+fn spec_flag<T>(args: &Args, key: &str, default: T) -> Result<T, KrrError>
+where
+    T: std::str::FromStr<Err = KrrError>,
+{
+    match args.get(key) {
+        Some(s) => s.parse(),
+        None => Ok(default),
+    }
+}
+
+fn load_dataset(args: &Args) -> Result<wlsh_krr::data::Dataset, KrrError> {
     let name = args.get_or("dataset", "wine");
-    let n_max = args.get("n-max").map(|v| v.parse().expect("--n-max"));
+    let n_max = match args.get("n-max") {
+        Some(v) => Some(v.parse().map_err(|_| {
+            KrrError::BadParam(format!("--n-max wants an integer, got {v:?}"))
+        })?),
+        None => None,
+    };
     let seed = args.get_usize("seed", 42) as u64;
     let mut ds = if name.ends_with(".csv") {
-        load_csv(name, -1, name).expect("load csv")
+        load_csv(name, -1, name).map_err(KrrError::Io)?
     } else {
         synthetic_by_name(name, n_max, seed)
-            .unwrap_or_else(|| panic!("unknown dataset {name:?} (and not a .csv path)"))
+            .ok_or_else(|| KrrError::UnknownDataset(name.to_string()))?
     };
     ds.standardize();
-    ds
+    Ok(ds)
 }
 
-fn config_from(args: &Args) -> KrrConfig {
+/// Assemble a [`KrrConfig`] from CLI flags. Every fallback value defers to
+/// the one [`KrrConfig::default`] impl — the CLI has no defaults of its
+/// own.
+fn config_from(args: &Args) -> Result<KrrConfig, KrrError> {
     let d = KrrConfig::default();
-    KrrConfig {
-        method: args.get_or("method", "wlsh").to_string(),
-        budget: args.get_usize("budget", 64),
-        bucket: args.get_or("bucket", "rect").to_string(),
-        gamma_shape: args.get_f64("gamma-shape", 2.0),
-        scale: args.get_f64("scale", 3.0),
-        lambda: args.get_f64("lambda", 0.5),
+    let raw_precond = args.get("precond");
+    let mut precond = spec_flag(args, "precond", d.precond)?;
+    // --precond-rank fills in a bare `nystrom`; an explicit
+    // nystrom(rank=R) spec wins over the separate flag
+    if raw_precond == Some("nystrom") {
+        if let PrecondSpec::Nystrom { rank } = &mut precond {
+            *rank = args.get_usize("precond-rank", *rank);
+        }
+    }
+    Ok(KrrConfig {
+        method: spec_flag(args, "method", d.method)?,
+        budget: args.get_usize("budget", d.budget),
+        bucket: spec_flag(args, "bucket", d.bucket)?,
+        gamma_shape: args.get_f64("gamma-shape", d.gamma_shape),
+        scale: args.get_f64("scale", d.scale),
+        lambda: args.get_f64("lambda", d.lambda),
         cg_max_iters: args.get_usize("cg-max-iters", d.cg_max_iters),
         cg_tol: args.get_f64("cg-tol", d.cg_tol),
-        precond: args.get_or("precond", &d.precond).to_string(),
-        precond_rank: args.get_usize("precond-rank", d.precond_rank),
+        precond,
         cg_verbose: args.get_bool("cg-verbose"),
-        workers: args.get_usize("workers", 1),
-        seed: args.get_usize("seed", 42) as u64,
-    }
+        workers: args.get_usize("workers", d.workers),
+        seed: args.get_usize("seed", d.seed as usize) as u64,
+    })
 }
 
 fn cmd_info(_args: &Args) {
@@ -103,16 +145,16 @@ fn cmd_info(_args: &Args) {
     }
 }
 
-fn cmd_train(args: &Args) {
-    let ds = load_dataset(args);
-    let cfg = config_from(args);
+fn cmd_train(args: &Args) -> Result<(), KrrError> {
+    let ds = load_dataset(args)?;
+    let cfg = config_from(args)?;
     let n_train = args.get_usize("n-train", (ds.n * 3) / 4);
     let (tr, te) = ds.split(n_train.min(ds.n - 1), cfg.seed);
     eprintln!(
         "training {} on {} (n={}, d={}, test={})",
         cfg.method, ds.name, tr.n, tr.d, te.n
     );
-    let model = Trainer::new(cfg).train(&tr);
+    let model = Trainer::new(cfg).train(&tr)?;
     let pred = model.predict(&te.x);
     let err = rmse(&pred, &te.y);
     let rep = &model.report;
@@ -121,6 +163,7 @@ fn cmd_train(args: &Args) {
         JsonWriter::object()
             .field_str("dataset", &ds.name)
             .field_str("operator", &rep.operator)
+            .field_str("method", &model.config.method.to_string())
             .field_f64("rmse", err)
             .field_f64("build_secs", rep.build_secs)
             .field_f64("solve_secs", rep.solve_secs)
@@ -130,14 +173,15 @@ fn cmd_train(args: &Args) {
             .field_usize("memory_bytes", rep.memory_bytes)
             .finish()
     );
+    Ok(())
 }
 
-fn cmd_serve(args: &Args) {
-    let ds = load_dataset(args);
-    let cfg = config_from(args);
+fn cmd_serve(args: &Args) -> Result<(), KrrError> {
+    let ds = load_dataset(args)?;
+    let cfg = config_from(args)?;
     let n_train = args.get_usize("n-train", (ds.n * 3) / 4);
     let (tr, _) = ds.split(n_train.min(ds.n - 1), cfg.seed);
-    let model = Arc::new(Trainer::new(cfg).train(&tr));
+    let model = Arc::new(Trainer::new(cfg).train(&tr)?);
     eprintln!("model trained ({}); serving...", model.report.operator);
     let scfg = ServerConfig {
         addr: args.get_or("addr", "127.0.0.1:7878").to_string(),
@@ -146,23 +190,23 @@ fn cmd_serve(args: &Args) {
         workers: args.get_usize("workers", 1),
     };
     eprintln!("listening on {}", scfg.addr);
-    let d = tr.d;
-    serve(model, d, scfg, None).expect("server");
+    serve(model, scfg, None).map_err(|e| KrrError::Io(e.to_string()))?;
+    Ok(())
 }
 
-fn cmd_ose(args: &Args) {
+fn cmd_ose(args: &Args) -> Result<(), KrrError> {
     let n = args.get_usize("n", 256);
     let m = args.get_usize("m", 64);
     let d = args.get_usize("dim", 2);
     let lambda = args.get_f64("lambda", 1.0);
-    let bucket = args.get_or("bucket", "rect");
-    let shape = if bucket == "rect" { 2.0 } else { 7.0 };
+    let bucket: BucketSpec = spec_flag(args, "bucket", BucketSpec::Rect)?;
+    let shape = if bucket == BucketSpec::Rect { 2.0 } else { 7.0 };
     let seed = args.get_usize("seed", 1) as u64;
     let mut rng = Pcg64::new(seed, 0);
     let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
-    let exact = ExactKernelOp::new(&x, n, d, Kernel::wlsh(bucket, shape, 1.0));
+    let exact = ExactKernelOp::new(&x, n, d, Kernel::wlsh_spec(&bucket, shape, 1.0));
     let k = materialize(&exact);
-    let sk = WlshSketch::build(&x, n, d, m, bucket, shape, 1.0, seed + 1);
+    let sk = WlshSketch::build_spec(&x, n, d, m, &bucket, shape, 1.0, seed + 1);
     let rep = ose_epsilon_dense(&k, &sk, lambda);
     println!(
         "{}",
@@ -170,51 +214,51 @@ fn cmd_ose(args: &Args) {
             .field_usize("n", n)
             .field_usize("m", m)
             .field_f64("lambda", lambda)
-            .field_str("bucket", bucket)
+            .field_str("bucket", &bucket.to_string())
             .field_f64("eps", rep.eps)
             .field_f64("lambda_min", rep.lambda_min)
             .field_f64("lambda_max", rep.lambda_max)
             .finish()
     );
+    Ok(())
 }
 
-fn cmd_gp(args: &Args) {
+fn cmd_gp(args: &Args) -> Result<(), KrrError> {
     let cov = args.get_or("cov", "se");
     let d = args.get_usize("dim", 5);
     let n = args.get_usize("n", 800);
     let n_train = (n * 3) / 4;
     let seed = args.get_usize("seed", 1) as u64;
-    let kernel = match cov {
-        "laplace" => Kernel::laplace(1.0),
-        "se" => Kernel::squared_exp(1.0),
-        "matern" => Kernel::matern52(1.0),
-        other => panic!("unknown covariance {other:?}"),
-    };
+    let kernel_spec: KernelSpec = cov.parse()?;
+    let kernel = kernel_spec.build();
     let mut rng = Pcg64::new(seed, 0);
     let pts: Vec<f32> = (0..n * d).map(|_| rng.uniform() as f32).collect();
-    let path = wlsh_krr::gp::sample_gp_exact(&kernel, &pts, d, &mut rng).expect("gp sample");
+    let path = wlsh_krr::gp::sample_gp_exact(&kernel, &pts, d, &mut rng)
+        .map_err(KrrError::SolveFailed)?;
     let noisy: Vec<f64> = path.iter().map(|v| v + 0.1 * rng.normal()).collect();
     let ds = wlsh_krr::data::Dataset::new(&format!("gp-{cov}"), pts, noisy, d);
     let (tr, te) = ds.split(n_train, seed + 1);
     for method in ["exact-laplace", "exact-se", "exact-matern", "exact-wlsh"] {
+        let method: MethodSpec = method.parse()?;
         let cfg = KrrConfig {
-            method: method.into(),
-            bucket: "smooth2".into(),
+            method,
+            bucket: BucketSpec::Smooth(2),
             gamma_shape: 7.0,
             scale: args.get_f64("scale", 1.0),
             lambda: args.get_f64("lambda", 0.05),
             ..Default::default()
         };
-        let model = Trainer::new(cfg).train(&tr);
+        let model = Trainer::new(cfg).train(&tr)?;
         let pred = model.predict(&te.x);
         println!(
             "{}",
             JsonWriter::object()
                 .field_str("cov", cov)
                 .field_usize("dim", d)
-                .field_str("method", method)
+                .field_str("method", &method.to_string())
                 .field_f64("rmse", rmse(&pred, &te.y))
                 .finish()
         );
     }
+    Ok(())
 }

@@ -5,9 +5,11 @@
 //! returns the runtime's "backend unavailable" error — which the parity
 //! tests and benches treat as a skip.
 
+use std::sync::Arc;
+
 use super::{Result, Runtime};
 use crate::lsh::LshFunction;
-use crate::sketch::KrrOperator;
+use crate::sketch::{KrrOperator, Predictor};
 
 impl Runtime {
     /// Hash `x_scaled` (n×d) under the given LSH instances through the HLO
@@ -105,6 +107,12 @@ impl KrrOperator for XlaExactKernelOp<'_> {
         self.rt
             .exact_matvec_xla(&self.kind, queries, q, &self.x, self.n, self.d, beta, self.scale, false)
             .expect("xla exact cross matvec")
+    }
+
+    fn predictor(self: Arc<Self>, _beta: &[f64]) -> Box<dyn Predictor> {
+        // the runtime-borrowing operator cannot outlive its Runtime; models
+        // served long-term go through the native operators
+        unimplemented!("XLA operator has no frozen serving handle")
     }
 
     fn name(&self) -> String {

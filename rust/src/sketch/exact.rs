@@ -1,7 +1,9 @@
 //! Exact kernel operator — the paper's exact-KRR baselines (Table 1/2).
 //! O(n²d) mat-vec, never materializes K (blockwise row streaming).
 
-use super::KrrOperator;
+use std::sync::Arc;
+
+use super::{KrrOperator, Predictor};
 use crate::kernels::Kernel;
 
 /// Exact K(X, X) as a mat-vec operator.
@@ -21,6 +23,34 @@ impl ExactKernelOp {
     #[inline]
     fn row(&self, i: usize) -> &[f32] {
         &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Shared predict kernel (one O(n·d) pass per query row).
+    fn predict_into_impl(&self, queries: &[f32], beta: &[f64], out: &mut [f64]) {
+        assert_eq!(out.len(), queries.len() / self.d);
+        for (qi, o) in out.iter_mut().enumerate() {
+            let xq = &queries[qi * self.d..(qi + 1) * self.d];
+            *o = (0..self.n)
+                .map(|j| self.kernel.eval_f32(xq, self.row(j)) * beta[j])
+                .sum();
+        }
+    }
+}
+
+/// Serving handle for the exact operator: the β-dependent state is β
+/// itself (there is no cheaper summary for an exact kernel).
+pub struct ExactPredictor {
+    op: Arc<ExactKernelOp>,
+    beta: Vec<f64>,
+}
+
+impl Predictor for ExactPredictor {
+    fn dim(&self) -> usize {
+        self.op.d
+    }
+
+    fn predict_into(&self, queries: &[f32], out: &mut [f64]) {
+        self.op.predict_into_impl(queries, &self.beta, out);
     }
 }
 
@@ -47,15 +77,14 @@ impl KrrOperator for ExactKernelOp {
     }
 
     fn predict(&self, queries: &[f32], beta: &[f64]) -> Vec<f64> {
-        let q = queries.len() / self.d;
-        (0..q)
-            .map(|qi| {
-                let xq = &queries[qi * self.d..(qi + 1) * self.d];
-                (0..self.n)
-                    .map(|j| self.kernel.eval_f32(xq, self.row(j)) * beta[j])
-                    .sum()
-            })
-            .collect()
+        let mut out = vec![0.0f64; queries.len() / self.d];
+        self.predict_into_impl(queries, beta, &mut out);
+        out
+    }
+
+    fn predictor(self: Arc<Self>, beta: &[f64]) -> Box<dyn Predictor> {
+        assert_eq!(beta.len(), self.n);
+        Box::new(ExactPredictor { op: self, beta: beta.to_vec() })
     }
 
     fn diag(&self) -> Option<Vec<f64>> {

@@ -1,7 +1,10 @@
 //! Kernel-matrix operators for KRR: the paper's WLSH sketch (§4), the RFF
 //! and Nyström baselines, and the exact kernel operator. All expose the
 //! same [`KrrOperator`] interface so the solver/trainer/benches are
-//! method-agnostic.
+//! method-agnostic, and each operator freezes its solved β into a
+//! [`Predictor`] handle for serving.
+
+use std::sync::Arc;
 
 mod exact;
 mod nystrom;
@@ -14,14 +17,25 @@ pub use rff::RffSketch;
 pub(crate) use wlsh::SERIAL_QUERY_CHUNK;
 pub use wlsh::{WlshPredictor, WlshSketch};
 
-/// β-dependent state precomputed once after the solve so that serving-time
-/// predictions avoid O(n)-cost recomputation per call: WLSH stores the
-/// per-instance bucket loads (paper §4.2), RFF the feature-space θ = Zᵀβ,
-/// Nyström the landmark core. Opaque container: each operator interprets
-/// its own slots.
-#[derive(Clone, Debug, Default)]
-pub struct PreparedState {
-    pub slots: Vec<Vec<f64>>,
+/// A frozen serving handle: the β-dependent state an operator needs at
+/// predict time — WLSH bucket loads (paper §4.2), RFF's θ = Zᵀβ, the
+/// Nyström landmark core — owned by the handle so a prediction never
+/// recomputes O(n) work. Obtained from [`KrrOperator::predictor`].
+pub trait Predictor: Send + Sync {
+    /// Feature count d expected per query row.
+    fn dim(&self) -> usize;
+
+    /// η̃(q_i) for each row of `queries` (row-major q×d), written into
+    /// `out` (`out.len()` must equal the number of query rows) — the
+    /// allocation-free batch-serving path.
+    fn predict_into(&self, queries: &[f32], out: &mut [f64]);
+
+    /// Allocating convenience over [`predict_into`](Self::predict_into).
+    fn predict(&self, queries: &[f32]) -> Vec<f64> {
+        let mut out = vec![0.0f64; queries.len() / self.dim()];
+        self.predict_into(queries, &mut out);
+        out
+    }
 }
 
 /// An (approximate) kernel matrix K̃ plus its out-of-sample extension —
@@ -35,23 +49,14 @@ pub trait KrrOperator: Send + Sync {
     fn matvec(&self, beta: &[f64]) -> Vec<f64>;
 
     /// η̃(q_i) = Σ_j k̃(q_i, x_j) β_j for each row of `queries` (row-major
-    /// q×d, same feature space as the training rows).
+    /// q×d, same feature space as the training rows). One-shot path; for
+    /// repeated serving use [`predictor`](Self::predictor).
     fn predict(&self, queries: &[f32], beta: &[f64]) -> Vec<f64>;
 
-    /// Precompute β-dependent serving state (default: none).
-    fn prepare(&self, _beta: &[f64]) -> PreparedState {
-        PreparedState::default()
-    }
-
-    /// Predict using prepared state (default: fall back to `predict`).
-    fn predict_prepared(
-        &self,
-        queries: &[f32],
-        beta: &[f64],
-        _state: &PreparedState,
-    ) -> Vec<f64> {
-        self.predict(queries, beta)
-    }
+    /// Freeze the solved β into a serving handle, precomputing the
+    /// β-dependent state once (so a query costs O(m·d) for WLSH, O(D·d)
+    /// for RFF, O(k·d) for Nyström).
+    fn predictor(self: Arc<Self>, beta: &[f64]) -> Box<dyn Predictor>;
 
     /// diag(K̃), when the operator can produce it in o(n²) time (feeds the
     /// solver's Jacobi preconditioner). Default: `None` — callers must fall
@@ -69,6 +74,8 @@ pub trait KrrOperator: Send + Sync {
 
 #[cfg(test)]
 mod tests {
+    use std::sync::Arc;
+
     use super::*;
     use crate::kernels::Kernel;
     use crate::util::rng::Pcg64;
@@ -119,7 +126,32 @@ mod tests {
         let exact = ExactKernelOp::new(&x, n, d, Kernel::laplace(1.0));
         check_operator(&exact, &x, d, 1e-8);
 
-        let nys = NystromSketch::build(&x, n, d, 24, Kernel::squared_exp(1.0), 11);
+        let nys = NystromSketch::build(&x, n, d, 24, Kernel::squared_exp(1.0), 11).unwrap();
         check_operator(&nys, &x, d, 1e-6);
+    }
+
+    #[test]
+    fn predictor_handles_match_one_shot_predict() {
+        let mut rng = Pcg64::new(6, 0);
+        let (n, d) = (64, 3);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let q: Vec<f32> = (0..20 * d).map(|_| rng.normal() as f32).collect();
+        let beta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let ops: Vec<Arc<dyn KrrOperator>> = vec![
+            Arc::new(WlshSketch::build(&x, n, d, 12, "smooth2", 7.0, 1.0, 3)),
+            Arc::new(RffSketch::build(&x, n, d, 96, 1.0, 4)),
+            Arc::new(ExactKernelOp::new(&x, n, d, Kernel::matern52(1.0))),
+            Arc::new(NystromSketch::build(&x, n, d, 16, Kernel::squared_exp(1.0), 5).unwrap()),
+        ];
+        for op in ops {
+            let want = op.predict(&q, &beta);
+            let handle = Arc::clone(&op).predictor(&beta);
+            assert_eq!(handle.dim(), d, "{}", op.name());
+            assert_eq!(handle.predict(&q), want, "{}", op.name());
+            // the allocation-free path fills a caller buffer identically
+            let mut buf = vec![f64::NAN; want.len()];
+            handle.predict_into(&q, &mut buf);
+            assert_eq!(buf, want, "{} predict_into", op.name());
+        }
     }
 }

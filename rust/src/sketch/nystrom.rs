@@ -3,7 +3,10 @@
 //! landmarks L. Data-dependent, unlike WLSH/RFF — included as the ablation
 //! point the paper contrasts against in §1.1.
 
-use super::KrrOperator;
+use std::sync::Arc;
+
+use super::{KrrOperator, Predictor};
+use crate::api::KrrError;
 use crate::kernels::Kernel;
 use crate::linalg::{CholeskyFactor, Matrix};
 use crate::util::rng::Pcg64;
@@ -24,6 +27,9 @@ pub struct NystromSketch {
 }
 
 impl NystromSketch {
+    /// Sample `k` landmarks and factor the core. Fails (rather than
+    /// panicking) when the landmark kernel matrix is not positive definite
+    /// — e.g. duplicate points under a degenerate kernel.
     pub fn build(
         x: &[f32],
         n: usize,
@@ -31,9 +37,13 @@ impl NystromSketch {
         k: usize,
         kernel: Kernel,
         seed: u64,
-    ) -> NystromSketch {
+    ) -> Result<NystromSketch, KrrError> {
         assert_eq!(x.len(), n * d);
-        assert!(k <= n && k > 0);
+        if k == 0 || k > n {
+            return Err(KrrError::BadParam(format!(
+                "nystrom landmark count must be in 1..={n}, got {k}"
+            )));
+        }
         let mut rng = Pcg64::new(seed, 0);
         // sample k distinct landmark indices (floyd's algorithm is overkill;
         // partial fisher-yates)
@@ -56,7 +66,7 @@ impl NystromSketch {
             }
         }
         let w_chol = CholeskyFactor::new(&w, 1e-8 * k as f64)
-            .expect("landmark kernel matrix not PD");
+            .map_err(|e| KrrError::SolveFailed(format!("landmark kernel matrix not PD: {e}")))?;
         let mut c = vec![0.0f64; n * k];
         for i in 0..n {
             for a in 0..k {
@@ -66,7 +76,7 @@ impl NystromSketch {
                 );
             }
         }
-        NystromSketch { x: x.to_vec(), n, d, kernel, landmarks, k, w_chol, c }
+        Ok(NystromSketch { x: x.to_vec(), n, d, kernel, landmarks, k, w_chol, c })
     }
 
     /// Factor (K̃ + λI)⁻¹ for use as a CG preconditioner (the rank-k
@@ -144,22 +154,14 @@ impl KrrOperator for NystromSketch {
             .collect()
     }
 
-    fn prepare(&self, beta: &[f64]) -> super::PreparedState {
-        super::PreparedState { slots: vec![self.core(beta)] }
-    }
-
-    fn predict_prepared(
-        &self,
-        queries: &[f32],
-        _beta: &[f64],
-        state: &super::PreparedState,
-    ) -> Vec<f64> {
-        self.predict_core(&state.slots[0], queries)
-    }
-
     fn predict(&self, queries: &[f32], beta: &[f64]) -> Vec<f64> {
         let v = self.core(beta);
         self.predict_core(&v, queries)
+    }
+
+    fn predictor(self: Arc<Self>, beta: &[f64]) -> Box<dyn Predictor> {
+        let core = self.core(beta);
+        Box::new(NystromPredictor { sketch: self, core })
     }
 
     fn diag(&self) -> Option<Vec<f64>> {
@@ -231,20 +233,40 @@ impl NystromPrecond {
 
 impl NystromSketch {
     fn predict_core(&self, v: &[f64], queries: &[f32]) -> Vec<f64> {
-        let q = queries.len() / self.d;
-        (0..q)
-            .map(|qi| {
-                let xq = &queries[qi * self.d..(qi + 1) * self.d];
-                (0..self.k)
-                    .map(|a| {
-                        self.kernel.eval_f32(
-                            xq,
-                            &self.landmarks[a * self.d..(a + 1) * self.d],
-                        ) * v[a]
-                    })
-                    .sum()
-            })
-            .collect()
+        let mut out = vec![0.0f64; queries.len() / self.d];
+        self.predict_core_into(v, queries, &mut out);
+        out
+    }
+
+    fn predict_core_into(&self, v: &[f64], queries: &[f32], out: &mut [f64]) {
+        assert_eq!(out.len(), queries.len() / self.d);
+        for (qi, o) in out.iter_mut().enumerate() {
+            let xq = &queries[qi * self.d..(qi + 1) * self.d];
+            *o = (0..self.k)
+                .map(|a| {
+                    self.kernel
+                        .eval_f32(xq, &self.landmarks[a * self.d..(a + 1) * self.d])
+                        * v[a]
+                })
+                .sum();
+        }
+    }
+}
+
+/// Frozen Nyström serving handle: the landmark core v = W⁻¹Cᵀβ, so a
+/// prediction is k kernel evaluations against the landmarks.
+pub struct NystromPredictor {
+    sketch: Arc<NystromSketch>,
+    core: Vec<f64>,
+}
+
+impl Predictor for NystromPredictor {
+    fn dim(&self) -> usize {
+        self.sketch.d
+    }
+
+    fn predict_into(&self, queries: &[f32], out: &mut [f64]) {
+        self.sketch.predict_core_into(&self.core, queries, out);
     }
 }
 
@@ -259,7 +281,7 @@ mod tests {
         let (n, d) = (12, 2);
         let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
         let kern = Kernel::squared_exp(1.0);
-        let nys = NystromSketch::build(&x, n, d, n, kern.clone(), 2);
+        let nys = NystromSketch::build(&x, n, d, n, kern.clone(), 2).unwrap();
         let beta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
         let y = nys.matvec(&beta);
         for i in 0..n {
@@ -276,7 +298,7 @@ mod tests {
         let mut rng = Pcg64::new(5, 0);
         let (n, d, k) = (30, 2, 10);
         let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
-        let nys = NystromSketch::build(&x, n, d, k, Kernel::squared_exp(1.0), 6);
+        let nys = NystromSketch::build(&x, n, d, k, Kernel::squared_exp(1.0), 6).unwrap();
         let lambda = 0.37;
         let pre = nys.ridge_precond(lambda).unwrap();
         let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
@@ -302,7 +324,7 @@ mod tests {
         let mut rng = Pcg64::new(7, 0);
         let (n, d) = (12, 2);
         let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
-        let nys = NystromSketch::build(&x, n, d, 4, Kernel::squared_exp(1.0), 8);
+        let nys = NystromSketch::build(&x, n, d, 4, Kernel::squared_exp(1.0), 8).unwrap();
         assert!(nys.ridge_precond(0.0).is_err());
         assert!(nys.ridge_precond(-1.0).is_err());
     }
@@ -312,7 +334,7 @@ mod tests {
         let mut rng = Pcg64::new(9, 0);
         let (n, d, k) = (25, 3, 9);
         let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
-        let nys = NystromSketch::build(&x, n, d, k, Kernel::matern52(1.0), 10);
+        let nys = NystromSketch::build(&x, n, d, k, Kernel::matern52(1.0), 10).unwrap();
         let diag = KrrOperator::diag(&nys).unwrap();
         for j in 0..n {
             let mut e = vec![0.0; n];
@@ -332,7 +354,7 @@ mod tests {
         let mut rng = Pcg64::new(3, 0);
         let (n, d, k) = (40, 3, 8);
         let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
-        let nys = NystromSketch::build(&x, n, d, k, Kernel::matern52(1.0), 4);
+        let nys = NystromSketch::build(&x, n, d, k, Kernel::matern52(1.0), 4).unwrap();
         for _ in 0..5 {
             let beta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
             let y = nys.matvec(&beta);

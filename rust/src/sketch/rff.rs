@@ -2,7 +2,9 @@
 //! the paper's Table 2: K̃ = Z Zᵀ with Z = sqrt(2/D) cos(X Ω + b),
 //! Ω columns ~ N(0, 2γ I), estimating k(x,y) = exp(-γ‖x-y‖²).
 
-use super::KrrOperator;
+use std::sync::Arc;
+
+use super::{KrrOperator, Predictor};
 use crate::linalg::dot_f32;
 use crate::util::rng::Pcg64;
 
@@ -95,26 +97,31 @@ impl KrrOperator for RffSketch {
     }
 
     fn predict(&self, queries: &[f32], beta: &[f64]) -> Vec<f64> {
-        let state = self.prepare(beta);
-        self.predict_prepared(queries, beta, &state)
-    }
-
-    fn prepare(&self, beta: &[f64]) -> super::PreparedState {
-        super::PreparedState { slots: vec![self.theta(beta)] }
-    }
-
-    fn predict_prepared(
-        &self,
-        queries: &[f32],
-        _beta: &[f64],
-        state: &super::PreparedState,
-    ) -> Vec<f64> {
-        let theta32: Vec<f32> = state.slots[0].iter().map(|&t| t as f32).collect();
+        let theta32: Vec<f32> = self.theta(beta).iter().map(|&t| t as f32).collect();
         let zq = self.featurize(queries);
         let q = queries.len() / self.d;
         (0..q)
             .map(|i| dot_f32(&zq[i * self.dd..(i + 1) * self.dd], &theta32))
             .collect()
+    }
+
+    fn predictor(self: Arc<Self>, beta: &[f64]) -> Box<dyn Predictor> {
+        let theta32: Vec<f32> = self.theta(beta).iter().map(|&t| t as f32).collect();
+        Box::new(RffPredictor { sketch: self, theta32 })
+    }
+
+    fn diag(&self) -> Option<Vec<f64>> {
+        // diag(Z Zᵀ)_ii = ‖z_i‖² — one pass over the feature matrix.
+        Some(
+            (0..self.n)
+                .map(|i| {
+                    self.z[i * self.dd..(i + 1) * self.dd]
+                        .iter()
+                        .map(|&v| v as f64 * v as f64)
+                        .sum()
+                })
+                .collect(),
+        )
     }
 
     fn name(&self) -> String {
@@ -123,6 +130,28 @@ impl KrrOperator for RffSketch {
 
     fn memory_bytes(&self) -> usize {
         (self.z.len() + self.omega.len() + self.b.len()) * 4
+    }
+}
+
+/// Frozen RFF serving handle: θ = Zᵀβ in f32, so a prediction is one
+/// featurize + dot per query.
+pub struct RffPredictor {
+    sketch: Arc<RffSketch>,
+    theta32: Vec<f32>,
+}
+
+impl Predictor for RffPredictor {
+    fn dim(&self) -> usize {
+        self.sketch.d
+    }
+
+    fn predict_into(&self, queries: &[f32], out: &mut [f64]) {
+        let dd = self.sketch.dd;
+        let zq = self.sketch.featurize(queries);
+        assert_eq!(out.len(), queries.len() / self.sketch.d);
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = dot_f32(&zq[i * dd..(i + 1) * dd], &self.theta32);
+        }
     }
 }
 
@@ -177,6 +206,27 @@ mod tests {
                 want += kij * beta[j];
             }
             assert!((y[i] - want).abs() < 1e-4 * (1.0 + want.abs()), "row {i}");
+        }
+    }
+
+    #[test]
+    fn diag_matches_matvec_columns() {
+        // diag(ZZᵀ) from row norms must equal the materialized diagonal.
+        let mut rng = Pcg64::new(11, 0);
+        let (n, d, dd) = (18, 3, 48);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let sk = RffSketch::build(&x, n, d, dd, 1.1, 12);
+        let diag = KrrOperator::diag(&sk).unwrap();
+        for j in 0..n {
+            let mut e = vec![0.0; n];
+            e[j] = 1.0;
+            let col = sk.matvec(&e);
+            assert!(
+                (diag[j] - col[j]).abs() < 1e-5 * (1.0 + col[j].abs()),
+                "diag[{j}] {} vs K_jj {}",
+                diag[j],
+                col[j]
+            );
         }
     }
 

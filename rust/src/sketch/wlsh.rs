@@ -18,7 +18,10 @@
 //! thread count. The pre-CSR instance-at-a-time path is kept as
 //! [`WlshSketch::matvec_unfused`] for benchmarking and cross-checking.
 
-use super::KrrOperator;
+use std::sync::Arc;
+
+use super::{KrrOperator, Predictor};
+use crate::api::BucketSpec;
 use crate::lsh::{BucketTable, IdMode, LshFamily, LshFunction};
 use crate::util::par;
 use crate::util::rng::Pcg64;
@@ -87,7 +90,10 @@ pub struct WlshSketch {
 }
 
 impl WlshSketch {
-    /// Hash all n training rows under m fresh LSH instances.
+    /// Hash all n training rows under m fresh LSH instances. The bucket is
+    /// given by its string name for test/bench convenience; it must parse
+    /// as a [`BucketSpec`] (typed callers use
+    /// [`build_spec`](Self::build_spec)).
     #[allow(clippy::too_many_arguments)]
     pub fn build(
         x: &[f32],
@@ -99,10 +105,30 @@ impl WlshSketch {
         scale: f64,
         seed: u64,
     ) -> WlshSketch {
-        Self::build_mode(x, n, d, m, bucket, gamma_shape, scale, seed, IdMode::U64)
+        let spec: BucketSpec = match bucket.parse() {
+            Ok(s) => s,
+            Err(e) => panic!("{e}"),
+        };
+        Self::build_spec_mode(x, n, d, m, &spec, gamma_shape, scale, seed, IdMode::U64)
     }
 
-    /// As [`build`], selecting the id-collapse mode (I32 = HLO-compatible).
+    /// As [`build`](Self::build) with a typed bucket spec.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_spec(
+        x: &[f32],
+        n: usize,
+        d: usize,
+        m: usize,
+        bucket: &BucketSpec,
+        gamma_shape: f64,
+        scale: f64,
+        seed: u64,
+    ) -> WlshSketch {
+        Self::build_spec_mode(x, n, d, m, bucket, gamma_shape, scale, seed, IdMode::U64)
+    }
+
+    /// As [`build`](Self::build), selecting the id-collapse mode
+    /// (I32 = HLO-compatible).
     #[allow(clippy::too_many_arguments)]
     pub fn build_mode(
         x: &[f32],
@@ -110,6 +136,26 @@ impl WlshSketch {
         d: usize,
         m: usize,
         bucket: &str,
+        gamma_shape: f64,
+        scale: f64,
+        seed: u64,
+        mode: IdMode,
+    ) -> WlshSketch {
+        let spec: BucketSpec = match bucket.parse() {
+            Ok(s) => s,
+            Err(e) => panic!("{e}"),
+        };
+        Self::build_spec_mode(x, n, d, m, &spec, gamma_shape, scale, seed, mode)
+    }
+
+    /// Fully-typed build: every other constructor funnels through here.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_spec_mode(
+        x: &[f32],
+        n: usize,
+        d: usize,
+        m: usize,
+        bucket: &BucketSpec,
         gamma_shape: f64,
         scale: f64,
         seed: u64,
@@ -214,7 +260,9 @@ impl WlshSketch {
     }
 
     /// Freeze the sketch + solved β into an O(m·d)-per-query predictor.
-    pub fn predictor(&self, beta: &[f64]) -> WlshPredictor<'_> {
+    /// The handle shares the sketch via `Arc`, so it outlives local
+    /// borrows and can be moved into server threads.
+    pub fn predictor(self: Arc<Self>, beta: &[f64]) -> WlshPredictor {
         let loads = self.loads_all(beta, self.auto_threads());
         WlshPredictor { sketch: self, loads }
     }
@@ -366,20 +414,12 @@ impl KrrOperator for WlshSketch {
     }
 
     fn predict(&self, queries: &[f32], beta: &[f64]) -> Vec<f64> {
-        self.predictor(beta).predict(queries)
+        let loads = self.loads_all(beta, self.auto_threads());
+        self.predict_with_loads(&loads, queries, par::num_threads())
     }
 
-    fn prepare(&self, beta: &[f64]) -> super::PreparedState {
-        super::PreparedState { slots: self.loads_all(beta, self.auto_threads()) }
-    }
-
-    fn predict_prepared(
-        &self,
-        queries: &[f32],
-        _beta: &[f64],
-        state: &super::PreparedState,
-    ) -> Vec<f64> {
-        self.predict_with_loads(&state.slots, queries, par::num_threads())
+    fn predictor(self: Arc<Self>, beta: &[f64]) -> Box<dyn Predictor> {
+        Box::new(WlshSketch::predictor(self, beta))
     }
 
     fn diag(&self) -> Option<Vec<f64>> {
@@ -389,7 +429,7 @@ impl KrrOperator for WlshSketch {
     fn name(&self) -> String {
         format!(
             "wlsh(f={},shape={},m={})",
-            self.family.bucket_name,
+            self.family.bucket_spec,
             self.family.gamma_shape,
             self.m()
         )
@@ -408,71 +448,104 @@ impl KrrOperator for WlshSketch {
 }
 
 /// Serving-time predictor: per-instance bucket loads are precomputed from
-/// the solved β, so a query costs O(m·d) — hash, lookup, multiply.
-pub struct WlshPredictor<'a> {
-    sketch: &'a WlshSketch,
+/// the solved β, so a query costs O(m·d) — hash, lookup, multiply. Owns an
+/// `Arc` of the sketch (hash functions + tables) and the load vectors; the
+/// only state a prediction touches.
+pub struct WlshPredictor {
+    sketch: Arc<WlshSketch>,
     loads: Vec<Vec<f64>>,
 }
 
-impl WlshPredictor<'_> {
-    /// η̃(q) for each row of `queries` (unscaled feature space).
-    pub fn predict(&self, queries: &[f32]) -> Vec<f64> {
-        self.predict_threads(queries, par::num_threads())
-    }
-
-    /// As [`predict`](Self::predict) with an explicit worker-thread count
+impl WlshPredictor {
+    /// As [`Predictor::predict`] with an explicit worker-thread count
     /// (1 = the serial reference path).
     pub fn predict_threads(&self, queries: &[f32], threads: usize) -> Vec<f64> {
         self.sketch.predict_with_loads(&self.loads, queries, threads)
     }
 }
 
+impl Predictor for WlshPredictor {
+    fn dim(&self) -> usize {
+        self.sketch.family.d
+    }
+
+    fn predict_into(&self, queries: &[f32], out: &mut [f64]) {
+        self.sketch
+            .predict_with_loads_into(&self.loads, queries, par::num_threads(), out);
+    }
+
+    fn predict(&self, queries: &[f32]) -> Vec<f64> {
+        self.predict_threads(queries, par::num_threads())
+    }
+}
+
 impl WlshSketch {
     /// Shared predict kernel: hash each query, look its bucket up in every
     /// instance, combine the precomputed loads (paper §4.2's η̃(x)).
-    ///
-    /// Queries are independent, so the batch is split into fixed-size
-    /// chunks fanned out over `threads` workers; per-query arithmetic is
-    /// untouched and results are reassembled in query order, keeping the
-    /// output bit-identical to the serial loop for any thread count.
     fn predict_with_loads(
         &self,
         loads: &[Vec<f64>],
         queries: &[f32],
         threads: usize,
     ) -> Vec<f64> {
+        let d = self.family.d;
+        let mut out = vec![0.0f64; queries.len() / d];
+        self.predict_with_loads_into(loads, queries, threads, &mut out);
+        out
+    }
+
+    /// As [`predict_with_loads`](Self::predict_with_loads), writing into a
+    /// caller-provided buffer (one slot per query row) — the batch-serving
+    /// path allocates nothing per call on the serial route.
+    ///
+    /// Queries are independent, so the batch is split into fixed-size
+    /// chunks fanned out over `threads` workers; per-query arithmetic is
+    /// untouched and results are reassembled in query order, keeping the
+    /// output bit-identical to the serial loop for any thread count.
+    fn predict_with_loads_into(
+        &self,
+        loads: &[Vec<f64>],
+        queries: &[f32],
+        threads: usize,
+        out: &mut [f64],
+    ) {
         // Chunk size is fixed (not derived from `threads`) so the work
         // decomposition never depends on the machine.
         let d = self.family.d;
         let nq = queries.len() / d;
+        assert_eq!(out.len(), nq, "one output slot per query row");
         if threads <= 1 || nq <= SERIAL_QUERY_CHUNK {
-            return self.predict_query_range(loads, queries, 0, nq);
+            self.predict_query_range(loads, queries, 0, nq, out);
+            return;
         }
         let n_chunks = nq.div_ceil(SERIAL_QUERY_CHUNK);
         let pieces = par::fan_out(n_chunks, threads, |c| {
             let lo = c * SERIAL_QUERY_CHUNK;
             let hi = ((c + 1) * SERIAL_QUERY_CHUNK).min(nq);
-            self.predict_query_range(loads, queries, lo, hi)
+            let mut buf = vec![0.0f64; hi - lo];
+            self.predict_query_range(loads, queries, lo, hi, &mut buf);
+            buf
         });
-        let mut out = Vec::with_capacity(nq);
+        let mut off = 0;
         for p in pieces {
-            out.extend(p);
+            out[off..off + p.len()].copy_from_slice(&p);
+            off += p.len();
         }
-        out
     }
 
-    /// Predict queries `lo..hi` of a row-major batch (the serial kernel).
+    /// Predict queries `lo..hi` of a row-major batch into `out` (the
+    /// serial kernel; `out.len() == hi - lo`).
     fn predict_query_range(
         &self,
         loads: &[Vec<f64>],
         queries: &[f32],
         lo: usize,
         hi: usize,
-    ) -> Vec<f64> {
+        out: &mut [f64],
+    ) {
         let d = self.family.d;
         let inv = (1.0 / self.scale) as f32;
         let inv_m = 1.0 / self.m() as f64;
-        let mut out = vec![0.0f64; hi - lo];
         let mut q_scaled = vec![0.0f32; d];
         for (qi, o) in (lo..hi).zip(out.iter_mut()) {
             let q = &queries[qi * d..(qi + 1) * d];
@@ -488,7 +561,6 @@ impl WlshSketch {
             }
             *o = acc * inv_m;
         }
-        out
     }
 }
 
@@ -582,12 +654,12 @@ mod tests {
     fn predictor_matches_trait_predict() {
         let (n, d, m) = (64, 5, 10);
         let x = random_x(5, n, d);
-        let sk = WlshSketch::build(&x, n, d, m, "smooth2", 7.0, 1.5, 6);
+        let sk = Arc::new(WlshSketch::build(&x, n, d, m, "smooth2", 7.0, 1.5, 6));
         let mut rng = Pcg64::new(7, 0);
         let beta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
         let q = random_x(8, 10, d);
         let a = sk.predict(&q, &beta);
-        let b = sk.predictor(&beta).predict(&q);
+        let b = sk.clone().predictor(&beta).predict(&q);
         assert_eq!(a, b);
     }
 
@@ -620,7 +692,7 @@ mod tests {
     fn parallel_matvec_and_predict_are_bit_identical() {
         let (n, d, m) = (300, 4, 64);
         let x = random_x(17, n, d);
-        let sk = WlshSketch::build(&x, n, d, m, "smooth2", 7.0, 1.0, 18);
+        let sk = Arc::new(WlshSketch::build(&x, n, d, m, "smooth2", 7.0, 1.0, 18));
         let mut rng = Pcg64::new(19, 0);
         let beta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
         let want = sk.matvec_serial(&beta);
@@ -628,7 +700,7 @@ mod tests {
             assert_eq!(sk.matvec_threads(&beta, threads), want, "threads={threads}");
         }
         let q = random_x(20, 600, d);
-        let pred = sk.predictor(&beta);
+        let pred = sk.clone().predictor(&beta);
         let want_p = pred.predict_threads(&q, 1);
         for threads in [2usize, 8] {
             assert_eq!(pred.predict_threads(&q, threads), want_p, "threads={threads}");

@@ -450,7 +450,7 @@ mod tests {
         let kernel = Kernel::squared_exp(1.0);
         let op = ExactKernelOp::new(&x, n, d, kernel.clone());
         let lambda = 0.05;
-        let nys = crate::sketch::NystromSketch::build(&x, n, d, 24, kernel, 10);
+        let nys = crate::sketch::NystromSketch::build(&x, n, d, 24, kernel, 10).unwrap();
         let pre = Preconditioner::Nystrom(nys.ridge_precond(lambda).unwrap());
         let opts = CgOptions { max_iters: 500, tol: 1e-11, verbose: false };
         let pcg = solve_krr_pcg(&op, &y, lambda, &opts, &pre);

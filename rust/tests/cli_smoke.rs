@@ -173,6 +173,60 @@ fn gp_emits_one_json_record_per_method() {
 }
 
 #[test]
+fn unknown_method_is_a_clean_usage_error() {
+    // a typoed spec must exit 2 with one stderr line — not a panic (which
+    // would exit 101 and dump a backtrace)
+    let out = run(&["train", "--dataset", "wine", "--n-max", "100", "--method", "wlshh"]);
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown method"), "stderr: {stderr}");
+    assert!(stderr.contains("wlshh"), "stderr: {stderr}");
+    assert!(!stderr.contains("panicked"), "stderr: {stderr}");
+}
+
+#[test]
+fn unknown_bucket_and_precond_are_clean_usage_errors() {
+    let base = ["train", "--dataset", "wine", "--n-max", "100"];
+    for (flag, value, needle) in [
+        ("--bucket", "round", "unknown bucket"),
+        ("--precond", "ssor", "unknown preconditioner"),
+    ] {
+        let mut args: Vec<&str> = base.to_vec();
+        args.push(flag);
+        args.push(value);
+        let out = run(&args);
+        assert_eq!(out.status.code(), Some(2), "{flag} {value}");
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(stderr.contains(needle), "{flag}: stderr: {stderr}");
+        assert!(!stderr.contains("panicked"), "{flag}: stderr: {stderr}");
+    }
+}
+
+#[test]
+fn unknown_dataset_is_a_clean_usage_error() {
+    let out = run(&["train", "--dataset", "no-such-data"]);
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown dataset"), "stderr: {stderr}");
+}
+
+#[test]
+fn gp_unknown_covariance_is_a_clean_usage_error() {
+    let out = run(&["gp", "--cov", "cosine", "--n", "40", "--dim", "2"]);
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown kernel"), "stderr: {stderr}");
+}
+
+#[test]
+fn bad_numeric_param_is_a_clean_usage_error() {
+    let out = run(&["train", "--dataset", "wine", "--n-max", "100", "--scale", "-3.0"]);
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("bad parameter"), "stderr: {stderr}");
+}
+
+#[test]
 fn unknown_subcommand_is_misuse() {
     let out = run(&["definitely-not-a-command"]);
     // usage on stderr, nonzero exit so scripts catch the typo

@@ -8,6 +8,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
 
+use wlsh_krr::api::MethodSpec;
 use wlsh_krr::config::KrrConfig;
 use wlsh_krr::coordinator::{serve, PredictRouter, ServerConfig, Trainer};
 use wlsh_krr::data::{rmse, synthetic_by_name};
@@ -22,8 +23,8 @@ fn wlsh_tracks_exact_wlsh_kernel_krr() {
     ds.standardize();
     let (tr, te) = ds.split(400, 2);
     let exact_cfg = KrrConfig {
-        method: "exact-wlsh".into(),
-        bucket: "rect".into(),
+        method: "exact-wlsh".parse().unwrap(),
+        bucket: "rect".parse().unwrap(),
         gamma_shape: 2.0,
         scale: 3.0,
         lambda: 1.0,
@@ -31,11 +32,11 @@ fn wlsh_tracks_exact_wlsh_kernel_krr() {
         cg_tol: 1e-8,
         ..Default::default()
     };
-    let exact = Trainer::new(exact_cfg.clone()).train(&tr);
+    let exact = Trainer::new(exact_cfg.clone()).train(&tr).unwrap();
     let exact_pred = exact.predict(&te.x);
     let dist_at = |m: usize| -> f64 {
-        let cfg = KrrConfig { method: "wlsh".into(), budget: m, ..exact_cfg.clone() };
-        let model = Trainer::new(cfg).train(&tr);
+        let cfg = KrrConfig { method: MethodSpec::Wlsh, budget: m, ..exact_cfg.clone() };
+        let model = Trainer::new(cfg).train(&tr).unwrap();
         let pred = model.predict(&te.x);
         rmse(&pred, &exact_pred)
     };
@@ -63,7 +64,7 @@ fn all_methods_beat_mean_on_synthetic_wine() {
         ("nystrom", 96),
     ] {
         let cfg = KrrConfig {
-            method: method.into(),
+            method: method.parse().unwrap(),
             budget,
             scale: 3.0,
             lambda: 0.3,
@@ -71,7 +72,7 @@ fn all_methods_beat_mean_on_synthetic_wine() {
             cg_tol: 1e-6,
             ..Default::default()
         };
-        let model = Trainer::new(cfg).train(&tr);
+        let model = Trainer::new(cfg).train(&tr).unwrap();
         let err = rmse(&model.predict(&te.x), &te.y);
         assert!(
             err < 0.97 * mean_rmse,
@@ -86,16 +87,16 @@ fn router_and_server_agree_with_direct_predict() {
     ds.standardize();
     let (tr, te) = ds.split(320, 6);
     let cfg = KrrConfig {
-        method: "wlsh".into(),
+        method: MethodSpec::Wlsh,
         budget: 64,
         scale: 5.0,
         lambda: 0.5,
         ..Default::default()
     };
-    let model = Arc::new(Trainer::new(cfg).train(&tr));
+    let model = Arc::new(Trainer::new(cfg).train(&tr).unwrap());
     let direct = model.predict(&te.x);
     // router path
-    let router = PredictRouter::new(model.clone(), 4, te.d);
+    let router = PredictRouter::new(model.clone(), 4);
     let routed = router.predict(&te.x);
     assert_eq!(routed, direct);
     // server path (first 5 queries)
@@ -103,7 +104,7 @@ fn router_and_server_agree_with_direct_predict() {
     let scfg = ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() };
     let d = te.d;
     let m2 = model.clone();
-    let handle = std::thread::spawn(move || serve(m2, d, scfg, Some(tx)).unwrap());
+    let handle = std::thread::spawn(move || serve(m2, scfg, Some(tx)).unwrap());
     let addr = rx.recv().unwrap();
     let mut conn = TcpStream::connect(&addr).unwrap();
     conn.set_nodelay(true).ok();
@@ -140,9 +141,9 @@ fn rank_proxy_grows_sublinearly() {
     let mk = |n: usize| {
         let mut ds = synthetic_by_name("wine", Some(n), 7).unwrap();
         ds.standardize();
-        let cfg = KrrConfig { method: "wlsh".into(), budget: 8, scale: 3.0, ..Default::default() };
+        let cfg = KrrConfig { method: MethodSpec::Wlsh, budget: 8, scale: 3.0, ..Default::default() };
         let trainer = Trainer::new(cfg);
-        let op = trainer.build_operator(&ds);
+        let op = trainer.build_operator(&ds).unwrap();
         // downcast via name; rebuild directly for the bucket count
         drop(op);
         let sk = wlsh_krr::sketch::WlshSketch::build(

@@ -5,10 +5,13 @@
 //! compound across iterations) and under the serving stack (where two
 //! replicas must answer identically).
 
+use std::sync::Arc;
+
+use wlsh_krr::api::MethodSpec;
 use wlsh_krr::config::KrrConfig;
 use wlsh_krr::coordinator::Trainer;
 use wlsh_krr::data::synthetic_by_name;
-use wlsh_krr::sketch::{KrrOperator, WlshSketch};
+use wlsh_krr::sketch::{KrrOperator, Predictor, WlshSketch};
 use wlsh_krr::util::rng::Pcg64;
 
 const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
@@ -25,14 +28,14 @@ fn random_beta(seed: u64, n: usize) -> Vec<f64> {
 
 /// m ≥ 64, and the shape clears both of the trait paths' serial gates
 /// (n = 2048 ≥ PAR_MIN_ROWS = 256, n·m = 147,456 ≥ PAR_MIN_WORK =
-/// 131,072), so `matvec`/`prepare`/`predictor` really fan out — not just
+/// 131,072), so `matvec`/`loads_all`/`predictor` really fan out — not just
 /// the explicit `*_threads` calls. m = 72 also straddles the fused path's
 /// 8-instance block boundary (9 blocks, one round), exercising the fixed
 /// block-order reduction.
-fn big_sketch(seed: u64) -> (WlshSketch, Vec<f64>, Vec<f32>) {
+fn big_sketch(seed: u64) -> (Arc<WlshSketch>, Vec<f64>, Vec<f32>) {
     let (n, d, m) = (2048, 8, 72);
     let x = random_x(seed, n, d);
-    let sk = WlshSketch::build(&x, n, d, m, "smooth2", 7.0, 1.2, seed + 1);
+    let sk = Arc::new(WlshSketch::build(&x, n, d, m, "smooth2", 7.0, 1.2, seed + 1));
     let beta = random_beta(seed + 2, n);
     let q = random_x(seed + 3, 700, d);
     (sk, beta, q)
@@ -83,24 +86,24 @@ fn prepared_loads_bit_identical_across_thread_counts() {
     for threads in THREAD_COUNTS {
         assert_eq!(sk.loads_all(&beta, threads), want, "loads diverged at threads={threads}");
     }
-    // prepare() (used by the serving stack) routes through the same kernel
-    let state = sk.prepare(&beta);
-    assert_eq!(state.slots, want, "prepare diverged from serial loads");
 }
 
 #[test]
 fn predict_bit_identical_across_thread_counts() {
     let (sk, beta, q) = big_sketch(400);
-    let predictor = sk.predictor(&beta);
+    let predictor = sk.clone().predictor(&beta);
     let want = predictor.predict_threads(&q, 1);
     for threads in THREAD_COUNTS {
         let got = predictor.predict_threads(&q, threads);
         assert_eq!(got, want, "predict diverged at threads={threads}");
     }
-    // trait predict and prepared predict must match the serial reference
+    // the trait predict, the Predictor::predict handle path, and the
+    // allocation-free predict_into must all match the serial reference
     assert_eq!(sk.predict(&q, &beta), want);
-    let state = sk.prepare(&beta);
-    assert_eq!(sk.predict_prepared(&q, &beta, &state), want);
+    assert_eq!(Predictor::predict(&predictor, &q), want);
+    let mut buf = vec![f64::NAN; want.len()];
+    predictor.predict_into(&q, &mut buf);
+    assert_eq!(buf, want);
 }
 
 #[test]
@@ -129,14 +132,14 @@ fn trained_model_is_thread_count_invariant_end_to_end() {
     // sketch *build* is deterministic all the way through solve + predict.
     let mk = |workers: usize| {
         let cfg = KrrConfig {
-            method: "wlsh".into(),
+            method: MethodSpec::Wlsh,
             budget: 300,
             scale: 3.0,
             lambda: 0.5,
             workers,
             ..Default::default()
         };
-        Trainer::new(cfg).train(&tr)
+        Trainer::new(cfg).train(&tr).unwrap()
     };
     let a = mk(1);
     let b = mk(4);

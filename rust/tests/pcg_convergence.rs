@@ -3,9 +3,11 @@
 //! unpreconditioned/direct solution within tolerance in fewer (or equal)
 //! outer iterations than plain CG.
 
+use std::sync::Arc;
+
 use wlsh_krr::kernels::Kernel;
 use wlsh_krr::linalg::Matrix;
-use wlsh_krr::sketch::{ExactKernelOp, KrrOperator, NystromSketch};
+use wlsh_krr::sketch::{ExactKernelOp, KrrOperator, NystromSketch, Predictor};
 use wlsh_krr::solver::{
     materialize, solve_krr, solve_krr_direct, solve_krr_pcg, CgOptions, Preconditioner,
 };
@@ -27,6 +29,10 @@ impl KrrOperator for DenseOp {
     }
 
     fn predict(&self, _queries: &[f32], _beta: &[f64]) -> Vec<f64> {
+        unimplemented!("test operator has no out-of-sample extension")
+    }
+
+    fn predictor(self: Arc<Self>, _beta: &[f64]) -> Box<dyn Predictor> {
         unimplemented!("test operator has no out-of-sample extension")
     }
 
@@ -107,7 +113,7 @@ fn nystrom_pcg_beats_plain_cg_on_small_lambda_kernel_system() {
     let opts = CgOptions { max_iters: 2000, tol: 1e-8, verbose: false };
 
     let plain = solve_krr(&op, &y, lambda, &opts);
-    let nys = NystromSketch::build(&x, n, d, 100, kernel, 17);
+    let nys = NystromSketch::build(&x, n, d, 100, kernel, 17).unwrap();
     let pre = Preconditioner::Nystrom(nys.ridge_precond(lambda).unwrap());
     let pcg = solve_krr_pcg(&op, &y, lambda, &opts, &pre);
 
@@ -149,7 +155,7 @@ fn every_preconditioner_solves_the_same_wlsh_sketch_system() {
     // on a well-scaled sketch Jacobi is ≈ scalar scaling: same ballpark
     assert!(jac.iters <= plain.iters * 2, "jacobi {} vs plain {}", jac.iters, plain.iters);
 
-    let nys = NystromSketch::build(&x, n, d, 64, Kernel::wlsh("smooth2", 7.0, 1.0), 21);
+    let nys = NystromSketch::build(&x, n, d, 64, Kernel::wlsh("smooth2", 7.0, 1.0), 21).unwrap();
     let nys_pre = Preconditioner::Nystrom(nys.ridge_precond(lambda).unwrap());
     let pcg = solve_krr_pcg(&sk, &y, lambda, &opts, &nys_pre);
     assert!(pcg.converged);

@@ -1,0 +1,173 @@
+//! The typed-spec API contract:
+//!
+//! 1. `parse(display(spec)) == spec` for every value of all four spec
+//!    enums (property-style over randomized parameters);
+//! 2. unknown strings surface as `Err(KrrError::Unknown...)` — never a
+//!    panic — from the builder, the TOML path, and the spec parsers
+//!    themselves (the CLI path is covered in `cli_smoke.rs`).
+
+use wlsh_krr::api::{
+    BucketSpec, KernelFamily, KernelSpec, KrrError, KrrModel, MethodSpec, PrecondSpec,
+};
+use wlsh_krr::config::{Config, KrrConfig};
+use wlsh_krr::util::prop::prop_check;
+use wlsh_krr::util::rng::Pcg64;
+
+fn roundtrip<T>(spec: &T)
+where
+    T: std::fmt::Display + std::fmt::Debug + std::str::FromStr<Err = KrrError> + PartialEq,
+{
+    let shown = spec.to_string();
+    match shown.parse::<T>() {
+        Ok(back) => assert!(
+            &back == spec,
+            "round-trip drift: {spec:?} -> {shown:?} -> {back:?}"
+        ),
+        Err(e) => panic!("display {shown:?} of {spec:?} failed to parse: {e}"),
+    }
+}
+
+/// A "nice" positive f64 whose Display round-trips visibly (Rust's f64
+/// Display always round-trips exactly; this just keeps the cases human).
+fn pos_param(rng: &mut Pcg64) -> f64 {
+    (rng.uniform_in(0.05, 50.0) * 1000.0).round() / 1000.0
+}
+
+fn random_bucket(rng: &mut Pcg64) -> BucketSpec {
+    if rng.below(3) == 0 {
+        BucketSpec::Rect
+    } else {
+        BucketSpec::Smooth(1 + rng.below(8) as usize)
+    }
+}
+
+#[test]
+fn method_specs_roundtrip() {
+    for m in [
+        MethodSpec::Wlsh,
+        MethodSpec::Rff,
+        MethodSpec::Exact(KernelFamily::Laplace),
+        MethodSpec::Exact(KernelFamily::SquaredExp),
+        MethodSpec::Exact(KernelFamily::Matern52),
+        MethodSpec::Exact(KernelFamily::Wlsh),
+        MethodSpec::Nystrom,
+    ] {
+        roundtrip(&m);
+    }
+}
+
+#[test]
+fn bucket_specs_roundtrip() {
+    prop_check(41, 60, random_bucket, |b| {
+        roundtrip(b);
+        Ok(())
+    });
+}
+
+#[test]
+fn precond_specs_roundtrip() {
+    prop_check(
+        43,
+        60,
+        |rng| match rng.below(3) {
+            0 => PrecondSpec::None,
+            1 => PrecondSpec::Jacobi,
+            _ => PrecondSpec::Nystrom { rank: 1 + rng.below(4096) as usize },
+        },
+        |p| {
+            roundtrip(p);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn kernel_specs_roundtrip() {
+    prop_check(
+        47,
+        80,
+        |rng| match rng.below(4) {
+            0 => KernelSpec::Laplace { scale: pos_param(rng) },
+            1 => KernelSpec::SquaredExp { scale: pos_param(rng) },
+            2 => KernelSpec::Matern52 { scale: pos_param(rng) },
+            _ => KernelSpec::Wlsh {
+                bucket: random_bucket(rng),
+                gamma_shape: pos_param(rng),
+                scale: pos_param(rng),
+            },
+        },
+        |k| {
+            roundtrip(k);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn unknown_strings_error_per_grammar() {
+    assert_eq!(
+        "wlshh".parse::<MethodSpec>(),
+        Err(KrrError::UnknownMethod("wlshh".into()))
+    );
+    assert_eq!(
+        "round".parse::<BucketSpec>(),
+        Err(KrrError::UnknownBucket("round".into()))
+    );
+    assert_eq!(
+        "ssor".parse::<PrecondSpec>(),
+        Err(KrrError::UnknownPrecond("ssor".into()))
+    );
+    assert_eq!(
+        "cosine".parse::<KernelSpec>(),
+        Err(KrrError::UnknownKernel("cosine".into()))
+    );
+}
+
+#[test]
+fn builder_surfaces_unknown_method_as_error() {
+    let mut ds = wlsh_krr::data::synthetic_by_name("wine", Some(120), 1).unwrap();
+    ds.standardize();
+    let err = KrrModel::builder().method("wlshh").fit(&ds).unwrap_err();
+    assert_eq!(err, KrrError::UnknownMethod("wlshh".into()));
+    // and a good spec right after a typo still reports the first error
+    let err = KrrModel::builder()
+        .method("wlshh")
+        .bucket("rect")
+        .fit(&ds)
+        .unwrap_err();
+    assert_eq!(err, KrrError::UnknownMethod("wlshh".into()));
+}
+
+#[test]
+fn toml_surfaces_unknown_specs_as_errors() {
+    let cfg = Config::parse("[krr]\nmethod = \"wlshh\"\nbudget = 16\n").unwrap();
+    assert_eq!(
+        KrrConfig::from_config(&cfg),
+        Err(KrrError::UnknownMethod("wlshh".into()))
+    );
+    let cfg = Config::parse("[krr]\nprecond = nystrom(rank=12)\n").unwrap();
+    assert_eq!(
+        KrrConfig::from_config(&cfg).unwrap().precond,
+        PrecondSpec::Nystrom { rank: 12 }
+    );
+}
+
+#[test]
+fn toml_config_trains_end_to_end() {
+    // the one-code-path claim, exercised: TOML string → typed config →
+    // builder-backed training.
+    let cfg = Config::parse(
+        "[krr]\nmethod = wlsh\nbudget = 16\nbucket = smooth2\ngamma_shape = 7.0\nscale = 3.0\nlambda = 0.5\ncg_max_iters = 40\n",
+    )
+    .unwrap();
+    let krr = KrrConfig::from_config(&cfg).unwrap();
+    assert_eq!(krr.method, MethodSpec::Wlsh);
+    assert_eq!(krr.bucket, BucketSpec::Smooth(2));
+    let mut ds = wlsh_krr::data::synthetic_by_name("wine", Some(200), 2).unwrap();
+    ds.standardize();
+    let (tr, te) = ds.split(160, 3);
+    let model = KrrModel::builder().config(krr).fit(&tr).unwrap();
+    let pred = model.predict(&te.x);
+    assert_eq!(pred.len(), te.n);
+    assert!(pred.iter().all(|p| p.is_finite()));
+}

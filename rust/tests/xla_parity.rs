@@ -33,7 +33,7 @@ fn hash_ids_and_weights_match_native_i32_mode() {
         let (n, d, m) = (500, 11, 7); // deliberately not multiples of chunks
         let x = random_x(1, n, d, 2.0);
         let mut rng = Pcg64::new(5, 0);
-        let family = LshFamily::new(d, shape, bucket, &mut rng);
+        let family = LshFamily::new(d, shape, &bucket.parse().unwrap(), &mut rng);
         let funcs: Vec<_> = (0..m).map(|_| family.sample(&mut rng)).collect();
         let (ids_x, w_x) = rt
             .hash_batch_xla(&x, n, d, &funcs, &family.mix32, bucket)
