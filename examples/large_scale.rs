@@ -112,6 +112,8 @@ fn main() {
             operator: "wlsh".into(),
             precond: "none".into(),
             memory_bytes: 0,
+            rows_per_sec: 0.0,
+            peak_rss_bytes: 0,
         },
     ));
     let (tx, rx) = std::sync::mpsc::channel();

@@ -23,6 +23,12 @@ pub enum KrrError {
     UnknownDataset(String),
     /// A parameter parsed but is out of range (λ < 0, scale ≤ 0, ...).
     BadParam(String),
+    /// A dataset file or stream is malformed (ragged CSV rows, bad floats,
+    /// invalid LIBSVM index/value pairs, no data rows, target column out
+    /// of range). Every loader — in-memory and streaming — reports content
+    /// problems through this one variant; [`KrrError::Io`] stays reserved
+    /// for filesystem failures.
+    Dataset(String),
     /// The linear-algebra stage failed (e.g. a landmark matrix that is not
     /// positive definite).
     SolveFailed(String),
@@ -50,6 +56,7 @@ impl fmt::Display for KrrError {
                 write!(f, "unknown dataset {s:?} (and not a .csv path)")
             }
             KrrError::BadParam(s) => write!(f, "bad parameter: {s}"),
+            KrrError::Dataset(s) => write!(f, "bad dataset: {s}"),
             KrrError::SolveFailed(s) => write!(f, "solve failed: {s}"),
             KrrError::Io(s) => write!(f, "io error: {s}"),
         }
@@ -75,7 +82,7 @@ impl KrrError {
             | KrrError::UnknownKernel(_)
             | KrrError::UnknownDataset(_)
             | KrrError::BadParam(_) => 2,
-            KrrError::SolveFailed(_) | KrrError::Io(_) => 1,
+            KrrError::Dataset(_) | KrrError::SolveFailed(_) | KrrError::Io(_) => 1,
         }
     }
 }
@@ -95,6 +102,8 @@ mod tests {
     fn exit_codes_split_usage_from_runtime() {
         assert_eq!(KrrError::UnknownMethod("x".into()).exit_code(), 2);
         assert_eq!(KrrError::BadParam("x".into()).exit_code(), 2);
+        // a malformed data *file* is a runtime failure, not CLI misuse
+        assert_eq!(KrrError::Dataset("x".into()).exit_code(), 1);
         assert_eq!(KrrError::SolveFailed("x".into()).exit_code(), 1);
         assert_eq!(KrrError::Io("x".into()).exit_code(), 1);
     }

@@ -33,7 +33,7 @@ pub use crate::sketch::Predictor;
 
 use crate::config::KrrConfig;
 use crate::coordinator::Trainer;
-use crate::data::Dataset;
+use crate::data::{DataSource, Dataset};
 
 /// Conversion into a spec, either from the typed value itself or from its
 /// string form — lets builder setters accept both `MethodSpec::Wlsh` and
@@ -180,6 +180,13 @@ impl KrrBuilder {
         self
     }
 
+    /// Rows per block when streaming data through the chunked sketch
+    /// builds (≥ 1; results are bit-identical at every chunk size).
+    pub fn chunk_rows(mut self, rows: usize) -> Self {
+        self.config.chunk_rows = rows;
+        self
+    }
+
     /// RNG seed (sketch + data splits derive from it deterministically).
     pub fn seed(mut self, seed: u64) -> Self {
         self.config.seed = seed;
@@ -200,6 +207,17 @@ impl KrrBuilder {
     pub fn fit(self, ds: &Dataset) -> Result<TrainedModel, KrrError> {
         let config = self.build_config()?;
         Trainer::new(config).train(ds)
+    }
+
+    /// Train from a chunked [`DataSource`] stream — out-of-core when the
+    /// source is file- or generator-backed, with peak memory
+    /// O(chunk + sketch) instead of O(n·d). Bit-identical to
+    /// [`fit`](Self::fit) on the materialized rows at every
+    /// [`chunk_rows`](Self::chunk_rows) / [`workers`](Self::workers)
+    /// setting.
+    pub fn fit_source(self, src: &dyn DataSource) -> Result<TrainedModel, KrrError> {
+        let config = self.build_config()?;
+        Trainer::new(config).train_source(src)
     }
 }
 
@@ -241,6 +259,21 @@ mod tests {
         assert_eq!(cfg.method, MethodSpec::Rff);
         assert_eq!(cfg.bucket, BucketSpec::Smooth(2));
         assert_eq!(cfg.precond, PrecondSpec::Nystrom { rank: 7 });
+    }
+
+    #[test]
+    fn fit_source_streams_and_matches_fit() {
+        let ds = small_ds();
+        let spec = |b: KrrBuilder| {
+            b.method(MethodSpec::Wlsh).budget(12).scale(3.0).lambda(0.5).chunk_rows(29)
+        };
+        let a = spec(KrrModel::builder()).fit(&ds).unwrap();
+        let b = spec(KrrModel::builder()).fit_source(&ds).unwrap();
+        assert_eq!(a.beta, b.beta);
+        assert!(matches!(
+            KrrModel::builder().chunk_rows(0).build_config(),
+            Err(KrrError::BadParam(_))
+        ));
     }
 
     #[test]

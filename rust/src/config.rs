@@ -117,6 +117,10 @@ pub struct KrrConfig {
     pub cg_verbose: bool,
     /// Sketch workers (instance shards) for the trainer.
     pub workers: usize,
+    /// Rows per block when streaming data through the chunked sketch
+    /// builds (peak transient memory is O(chunk_rows · d); results are
+    /// bit-identical at every chunk size).
+    pub chunk_rows: usize,
     pub seed: u64,
 }
 
@@ -136,6 +140,7 @@ impl Default for KrrConfig {
             precond: PrecondSpec::None,
             cg_verbose: false,
             workers: 1,
+            chunk_rows: 8192,
             seed: 42,
         }
     }
@@ -179,6 +184,7 @@ impl KrrConfig {
             precond,
             cg_verbose: cfg.get_bool("krr", "cg_verbose", d.cg_verbose),
             workers: cfg.get_usize("krr", "workers", d.workers),
+            chunk_rows: cfg.get_usize("krr", "chunk_rows", d.chunk_rows),
             seed: cfg.get_usize("krr", "seed", d.seed as usize) as u64,
         })
     }
@@ -208,6 +214,9 @@ impl KrrConfig {
                 "method {} needs budget ≥ 1",
                 self.method
             )));
+        }
+        if self.chunk_rows == 0 {
+            return Err(KrrError::BadParam("chunk_rows must be ≥ 1".to_string()));
         }
         Ok(())
     }
@@ -288,7 +297,7 @@ mod tests {
     #[test]
     fn krr_config_roundtrip() {
         let cfg = Config::parse(
-            "[krr]\nmethod = rff\nbudget = 5000\nseed = 9\nprecond = jacobi\ncg_verbose = true\n",
+            "[krr]\nmethod = rff\nbudget = 5000\nseed = 9\nprecond = jacobi\ncg_verbose = true\nchunk_rows = 4096\n",
         )
         .unwrap();
         let k = KrrConfig::from_config(&cfg).unwrap();
@@ -297,6 +306,7 @@ mod tests {
         assert_eq!(k.seed, 9);
         assert_eq!(k.precond, PrecondSpec::Jacobi);
         assert!(k.cg_verbose);
+        assert_eq!(k.chunk_rows, 4096);
         assert_eq!(k.cg_max_iters, KrrConfig::default().cg_max_iters);
     }
 
@@ -352,6 +362,7 @@ mod tests {
         assert!(KrrConfig { lambda: -1.0, ..ok.clone() }.validate().is_err());
         assert!(KrrConfig { cg_tol: 0.0, ..ok.clone() }.validate().is_err());
         assert!(KrrConfig { budget: 0, ..ok.clone() }.validate().is_err());
+        assert!(KrrConfig { chunk_rows: 0, ..ok.clone() }.validate().is_err());
         // exact methods ignore the budget
         let exact = KrrConfig {
             method: "exact-se".parse().unwrap(),

@@ -34,6 +34,7 @@ pub fn save(model: &TrainedModel, path: &Path) -> std::io::Result<()> {
         .field_usize("cg_max_iters", c.cg_max_iters)
         .field_f64("cg_tol", c.cg_tol)
         .field_str("precond", &c.precond.to_string())
+        .field_usize("chunk_rows", c.chunk_rows)
         .field_usize("seed", c.seed as usize)
         .field_usize("n", model.beta.len())
         .finish();
@@ -107,6 +108,12 @@ pub fn load(path: &Path, train: &Dataset) -> Result<TrainedModel, KrrError> {
         precond,
         cg_verbose: false,
         workers: 1,
+        // absent in pre-streaming checkpoints; irrelevant to the rebuilt
+        // operator's values (chunking is bit-transparent) either way
+        chunk_rows: header
+            .get("chunk_rows")
+            .and_then(Json::as_usize)
+            .unwrap_or(KrrConfig::default().chunk_rows),
         seed: g("seed")? as u64,
     };
     // same range-check path as the builder/CLI/TOML — a corrupt header
@@ -139,6 +146,8 @@ pub fn load(path: &Path, train: &Dataset) -> Result<TrainedModel, KrrError> {
             operator: "restored".into(),
             precond: "restored".into(),
             memory_bytes: 0,
+            rows_per_sec: 0.0,
+            peak_rss_bytes: 0,
         },
     ))
 }

@@ -1,26 +1,27 @@
-//! Training orchestration: build the requested kernel operator (sharding
-//! WLSH instance construction across worker threads), solve the ridge
-//! system by CG — optionally preconditioned (Jacobi from the operator
-//! diagonal, or rank-r Nyström of the method's target kernel) via the
-//! typed `precond` spec — and package a servable model. All failure modes
-//! (bad parameters, non-PD landmark matrices) surface as [`KrrError`];
-//! with the typed [`MethodSpec`]/[`PrecondSpec`] there is no "unknown
-//! string" case left to panic on.
+//! Training orchestration: build the requested kernel operator — from an
+//! in-memory [`Dataset`] or from any chunked [`DataSource`] stream
+//! ([`Trainer::train_source`]), sharding WLSH instance construction
+//! across worker threads — solve the ridge system by CG, optionally
+//! preconditioned (Jacobi from the operator diagonal, or rank-r Nyström
+//! of the method's target kernel) via the typed `precond` spec, and
+//! package a servable model. Streamed and in-memory training are
+//! bit-identical on the same row stream (`tests/stream_equivalence.rs`);
+//! all failure modes (bad parameters, malformed data files, non-PD
+//! landmark matrices) surface as [`KrrError`].
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::api::{KernelFamily, KrrError, MethodSpec, PrecondSpec};
 use crate::config::KrrConfig;
-use crate::data::Dataset;
+use crate::data::{ChunkFn, DataSource, Dataset};
 use crate::kernels::Kernel;
-use crate::lsh::{IdMode, LshFamily};
+use crate::lsh::IdMode;
 use crate::sketch::{
     ExactKernelOp, KrrOperator, NystromSketch, Predictor, RffSketch, WlshSketch,
 };
 use crate::solver::{solve_krr, solve_krr_pcg, CgOptions, Preconditioner};
-use crate::util::par;
-use crate::util::rng::Pcg64;
+use crate::util::mem;
 
 /// A trained, servable KRR model. Holds the operator, the solved β, and a
 /// frozen [`Predictor`] handle (the β-dependent serving state — WLSH
@@ -81,6 +82,12 @@ pub struct TrainReport {
     /// "nystrom") — may differ from the config when a fallback fired.
     pub precond: String,
     pub memory_bytes: usize,
+    /// Operator-build ingestion throughput (training rows / build_secs) —
+    /// the streaming pipeline's headline rate.
+    pub rows_per_sec: f64,
+    /// Peak resident-set estimate at packaging time
+    /// ([`mem::peak_rss_bytes`]; 0 where the platform exposes none).
+    pub peak_rss_bytes: usize,
 }
 
 /// Builds operators and runs the solve per a [`KrrConfig`].
@@ -93,25 +100,68 @@ impl Trainer {
         Trainer { config }
     }
 
-    /// Build the kernel operator for the configured method.
+    /// Build the kernel operator for the configured method from an
+    /// in-memory dataset. Everything except the exact methods funnels
+    /// through the chunked
+    /// [`build_operator_source`](Self::build_operator_source) path (the
+    /// dataset is its own [`DataSource`]); exact operators keep the
+    /// direct slice route to avoid a copy.
     pub fn build_operator(&self, ds: &Dataset) -> Result<Arc<dyn KrrOperator>, KrrError> {
-        let c = &self.config;
-        Ok(match c.method {
-            MethodSpec::Wlsh => Arc::new(self.build_wlsh_sharded(ds)),
-            MethodSpec::Rff => {
-                Arc::new(RffSketch::build(&ds.x, ds.n, ds.d, c.budget, c.scale, c.seed))
-            }
-            MethodSpec::Exact(family) => {
-                Arc::new(ExactKernelOp::new(&ds.x, ds.n, ds.d, self.exact_kernel(family)))
-            }
-            MethodSpec::Nystrom => Arc::new(NystromSketch::build(
+        if let MethodSpec::Exact(family) = self.config.method {
+            return Ok(Arc::new(ExactKernelOp::new(
                 &ds.x,
                 ds.n,
                 ds.d,
-                c.budget.min(ds.n),
-                Kernel::squared_exp(c.scale),
+                self.exact_kernel(family),
+            )));
+        }
+        self.build_operator_source(ds)
+    }
+
+    /// Build the kernel operator by streaming a chunked source: peak
+    /// memory is O(chunk + sketch) for wlsh/rff/nystrom. The exact
+    /// methods have no streaming formulation (every pairwise distance is
+    /// needed), so they materialize the source — documented fallback.
+    pub fn build_operator_source(
+        &self,
+        src: &dyn DataSource,
+    ) -> Result<Arc<dyn KrrOperator>, KrrError> {
+        let c = &self.config;
+        Ok(match c.method {
+            MethodSpec::Wlsh => Arc::new(WlshSketch::build_source(
+                src,
+                c.budget,
+                &c.bucket,
+                c.gamma_shape,
+                c.scale,
                 c.seed,
+                IdMode::U64,
+                c.chunk_rows,
+                c.workers,
             )?),
+            MethodSpec::Rff => Arc::new(RffSketch::build_source(
+                src,
+                c.budget,
+                c.scale,
+                c.seed,
+                c.chunk_rows,
+                c.workers,
+            )?),
+            MethodSpec::Nystrom => {
+                let n = src.count_rows(c.chunk_rows)?;
+                Arc::new(NystromSketch::build_source(
+                    src,
+                    c.budget.min(n),
+                    Kernel::squared_exp(c.scale),
+                    c.seed,
+                    c.chunk_rows,
+                    c.workers,
+                )?)
+            }
+            MethodSpec::Exact(family) => {
+                let ds = src.materialize(c.chunk_rows)?;
+                Arc::new(ExactKernelOp::new(&ds.x, ds.n, ds.d, self.exact_kernel(family)))
+            }
         })
     }
 
@@ -127,30 +177,6 @@ impl Trainer {
         }
     }
 
-    /// WLSH build with the m instances fanned out across `workers` threads
-    /// (each instance hashes with its own forked RNG stream, preserving
-    /// determinism regardless of worker count).
-    fn build_wlsh_sharded(&self, ds: &Dataset) -> WlshSketch {
-        let c = &self.config;
-        if c.workers <= 1 {
-            return WlshSketch::build_spec(
-                &ds.x, ds.n, ds.d, c.budget, &c.bucket, c.gamma_shape, c.scale, c.seed,
-            );
-        }
-        // replicate WlshSketch::build's RNG discipline, but hash instances
-        // in parallel
-        let mut rng = Pcg64::new(c.seed, 0);
-        let family = LshFamily::new(ds.d, c.gamma_shape, &c.bucket, &mut rng);
-        let inv = (1.0 / c.scale) as f32;
-        let x_scaled: Vec<f32> = ds.x.iter().map(|&v| v * inv).collect();
-        let seeds: Vec<Pcg64> = (0..c.budget).map(|s| rng.fork(s as u64)).collect();
-        let instances = par::fan_out(c.budget, c.workers, |s| {
-            let mut r = seeds[s].clone();
-            WlshSketch::build_instance(&x_scaled, &family, IdMode::U64, &mut r)
-        });
-        WlshSketch::from_parts(instances, family, IdMode::U64, x_scaled, ds.n, c.scale)
-    }
-
     /// Kernel the configured method targets — used to build the Nyström
     /// preconditioner against the same kernel the operator approximates.
     fn target_kernel(&self) -> Kernel {
@@ -163,9 +189,20 @@ impl Trainer {
         }
     }
 
-    /// Build the configured preconditioner, falling back to `Identity`
-    /// (with a stderr warning) when the operator can't support it.
-    fn build_preconditioner(&self, ds: &Dataset, op: &dyn KrrOperator) -> Preconditioner {
+    /// Shared preconditioner assembly: the Jacobi/Identity cases need only
+    /// the operator; the Nyström case builds its sketch through
+    /// `build_nys` (slice-backed or streamed, supplied by the caller).
+    /// Falls back to `Identity` (with a stderr warning) when the operator
+    /// can't support the request.
+    fn preconditioner_with<F>(
+        &self,
+        n: usize,
+        op: &dyn KrrOperator,
+        build_nys: F,
+    ) -> Preconditioner
+    where
+        F: FnOnce(usize) -> Result<NystromSketch, KrrError>,
+    {
         let c = &self.config;
         match c.precond {
             PrecondSpec::None => Preconditioner::Identity,
@@ -180,17 +217,8 @@ impl Trainer {
                 }
             },
             PrecondSpec::Nystrom { rank } => {
-                let rank = rank.clamp(1, ds.n);
-                // decorrelate the landmark sample from the sketch seed
-                let precond = NystromSketch::build(
-                    &ds.x,
-                    ds.n,
-                    ds.d,
-                    rank,
-                    self.target_kernel(),
-                    c.seed.wrapping_add(0x9e37_79b9_7f4a_7c15),
-                )
-                .and_then(|nys| {
+                let rank = rank.clamp(1, n);
+                let precond = build_nys(rank).and_then(|nys| {
                     nys.ridge_precond(c.lambda).map_err(KrrError::SolveFailed)
                 });
                 match precond {
@@ -206,28 +234,43 @@ impl Trainer {
         }
     }
 
-    /// Full training run: operator build + (preconditioned) CG solve.
-    /// Validates the config first, so every entry point — builder, CLI,
-    /// TOML — shares one range-check path.
-    pub fn train(&self, train: &Dataset) -> Result<TrainedModel, KrrError> {
-        self.config.validate()?;
-        let t0 = Instant::now();
-        let op = self.build_operator(train)?;
-        let build_secs = t0.elapsed().as_secs_f64();
+    /// Build the configured preconditioner against in-memory data.
+    fn build_preconditioner(&self, ds: &Dataset, op: &dyn KrrOperator) -> Preconditioner {
+        let c = &self.config;
+        self.preconditioner_with(ds.n, op, |rank| {
+            // decorrelate the landmark sample from the sketch seed
+            NystromSketch::build(
+                &ds.x,
+                ds.n,
+                ds.d,
+                rank,
+                self.target_kernel(),
+                c.seed.wrapping_add(0x9e37_79b9_7f4a_7c15),
+            )
+        })
+    }
+
+    /// CG solve + packaging shared by the in-memory and streamed paths.
+    fn solve_with(
+        &self,
+        op: Arc<dyn KrrOperator>,
+        y: &[f64],
+        build_secs: f64,
+        precond: Preconditioner,
+    ) -> Result<TrainedModel, KrrError> {
         let t1 = Instant::now();
         let opts = CgOptions {
             max_iters: self.config.cg_max_iters,
             tol: self.config.cg_tol,
             verbose: self.config.cg_verbose,
         };
-        let precond = self.build_preconditioner(train, op.as_ref());
         let cg = match &precond {
             // keep the plain-CG code path (and its exact iterate sequence)
             // when no preconditioning was requested
             Preconditioner::Identity => {
-                solve_krr(op.as_ref(), &train.y, self.config.lambda, &opts)
+                solve_krr(op.as_ref(), y, self.config.lambda, &opts)
             }
-            m => solve_krr_pcg(op.as_ref(), &train.y, self.config.lambda, &opts, m),
+            m => solve_krr_pcg(op.as_ref(), y, self.config.lambda, &opts, m),
         };
         let solve_secs = t1.elapsed().as_secs_f64();
         let report = TrainReport {
@@ -239,8 +282,103 @@ impl Trainer {
             operator: op.name(),
             precond: precond.name().to_string(),
             memory_bytes: op.memory_bytes(),
+            rows_per_sec: if build_secs > 0.0 { op.n() as f64 / build_secs } else { 0.0 },
+            peak_rss_bytes: mem::peak_rss_bytes().unwrap_or(0),
         };
         Ok(TrainedModel::assemble(op, cg.beta, self.config.clone(), report))
+    }
+
+    /// Full training run: operator build + (preconditioned) CG solve.
+    /// Validates the config first, so every entry point — builder, CLI,
+    /// TOML — shares one range-check path.
+    pub fn train(&self, train: &Dataset) -> Result<TrainedModel, KrrError> {
+        self.config.validate()?;
+        let t0 = Instant::now();
+        let op = self.build_operator(train)?;
+        let build_secs = t0.elapsed().as_secs_f64();
+        let precond = self.build_preconditioner(train, op.as_ref());
+        self.solve_with(op, &train.y, build_secs, precond)
+    }
+
+    /// Streamed training run: the operator is built chunk by chunk from a
+    /// re-iterable source (targets are collected during the same pass), so
+    /// peak memory during training is O(chunk + sketch) instead of
+    /// O(n·d). On the same row stream the solved coefficients are
+    /// bit-identical to [`train`](Self::train) on the materialized
+    /// dataset, at every chunk size and worker count.
+    pub fn train_source(&self, src: &dyn DataSource) -> Result<TrainedModel, KrrError> {
+        self.config.validate()?;
+        let collector = CollectTargets::new(src);
+        let t0 = Instant::now();
+        let op = self.build_operator_source(&collector)?;
+        let build_secs = t0.elapsed().as_secs_f64();
+        let y = collector.take();
+        if y.is_empty() {
+            return Err(KrrError::Dataset(format!("{}: no data rows", src.name())));
+        }
+        if y.len() != op.n() {
+            return Err(KrrError::Dataset(format!(
+                "{}: collected {} targets for {} operator rows",
+                src.name(),
+                y.len(),
+                op.n()
+            )));
+        }
+        let c = &self.config;
+        let precond = self.preconditioner_with(y.len(), op.as_ref(), |rank| {
+            // decorrelate the landmark sample from the sketch seed
+            NystromSketch::build_source(
+                src,
+                rank,
+                self.target_kernel(),
+                c.seed.wrapping_add(0x9e37_79b9_7f4a_7c15),
+                c.chunk_rows,
+                c.workers,
+            )
+        });
+        self.solve_with(op, &y, build_secs, precond)
+    }
+}
+
+/// Source adapter recording the targets seen by the most recent complete
+/// pass — so streamed training collects y during the operator build
+/// instead of paying an extra pass over the stream.
+struct CollectTargets<'a> {
+    inner: &'a dyn DataSource,
+    y: Mutex<Vec<f64>>,
+}
+
+impl<'a> CollectTargets<'a> {
+    fn new(inner: &'a dyn DataSource) -> CollectTargets<'a> {
+        CollectTargets { inner, y: Mutex::new(Vec::new()) }
+    }
+
+    fn take(self) -> Vec<f64> {
+        self.y.into_inner().expect("collector lock poisoned")
+    }
+}
+
+impl DataSource for CollectTargets<'_> {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        self.inner.len_hint()
+    }
+
+    fn for_each_chunk(&self, chunk_rows: usize, f: ChunkFn) -> Result<(), KrrError> {
+        let mut pass: Vec<f64> = Vec::new();
+        self.inner.for_each_chunk(chunk_rows, &mut |rows, ys| {
+            pass.extend_from_slice(ys);
+            f(rows, ys)
+        })?;
+        *self.y.lock().expect("collector lock poisoned") = pass;
+        Ok(())
     }
 }
 
@@ -248,6 +386,7 @@ impl Trainer {
 mod tests {
     use super::*;
     use crate::data::synthetic_by_name;
+    use crate::util::rng::Pcg64;
 
     fn small_ds() -> Dataset {
         let mut ds = synthetic_by_name("wine", Some(300), 1).unwrap();
@@ -428,6 +567,29 @@ mod tests {
             assert_eq!(pred.len(), te.n);
             assert!(pred.iter().all(|p| p.is_finite()), "{method}");
         }
+    }
+
+    #[test]
+    fn streamed_training_matches_in_memory_training() {
+        // Same rows through train() and train_source(): identical β, and
+        // the streamed report carries the new throughput fields.
+        let ds = small_ds();
+        let cfg = KrrConfig {
+            method: MethodSpec::Wlsh,
+            budget: 16,
+            scale: 3.0,
+            lambda: 0.3,
+            chunk_rows: 37,
+            workers: 2,
+            ..Default::default()
+        };
+        let a = Trainer::new(cfg.clone()).train(&ds).unwrap();
+        let b = Trainer::new(cfg).train_source(&ds).unwrap();
+        assert_eq!(a.beta, b.beta);
+        assert_eq!(a.report.operator, b.report.operator);
+        assert!(b.report.rows_per_sec >= 0.0);
+        let q = &ds.x[..5 * ds.d];
+        assert_eq!(a.predict(q), b.predict(q));
     }
 
     #[test]

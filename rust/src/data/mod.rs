@@ -1,11 +1,26 @@
-//! Datasets: container, CSV loading, standardization, train/test splits,
-//! and the synthetic generators substituting for the paper's UCI datasets
-//! (no network access in this environment — DESIGN.md §5).
+//! Datasets: the in-memory container, chunked/streaming ingestion
+//! ([`DataSource`] with CSV, LIBSVM, matrix, and synthetic
+//! implementations), streaming standardization ([`Standardizer`]),
+//! train/test splits, and the synthetic generators substituting for the
+//! paper's UCI datasets (no network access in this environment —
+//! DESIGN.md §5).
+//!
+//! Every loader reports malformed content as
+//! [`KrrError::Dataset`](crate::api::KrrError) and filesystem failures as
+//! `KrrError::Io` — one fallible surface, never a panic.
 
+mod source;
+mod standardize;
 mod synthetic;
 
-pub use synthetic::{synthetic_by_name, SyntheticSpec, SPECS};
+pub use source::{
+    head_sample, write_csv, write_libsvm, ChunkFn, CsvSource, DataSource, LibsvmSource,
+    MatrixSource,
+};
+pub use standardize::{StandardizedSource, Standardizer};
+pub use synthetic::{synthetic_by_name, SyntheticSource, SyntheticSpec, SPECS};
 
+use crate::api::KrrError;
 use crate::util::rng::Pcg64;
 
 /// A regression dataset: row-major f32 features + f64 targets.
@@ -32,6 +47,12 @@ impl Dataset {
 
     /// Standardize features to zero mean / unit variance in place, and
     /// center+scale targets. Returns the target (mean, std) for unscaling.
+    ///
+    /// This two-pass form can only rescale a whole in-memory dataset by
+    /// its *own* statistics. To fit on a training stream and re-apply the
+    /// same map to held-out data or single queries, use
+    /// [`Standardizer::fit`] + [`Standardizer::source`] /
+    /// [`Standardizer::transform_rows`].
     pub fn standardize(&mut self) -> (f64, f64) {
         for j in 0..self.d {
             let mut mean = 0.0f64;
@@ -93,31 +114,32 @@ impl Dataset {
 }
 
 /// Parse a numeric CSV (optional header) into a Dataset; the target is the
-/// given column index (negative = from the end).
-pub fn load_csv(path: &str, target_col: i64, name: &str) -> Result<Dataset, String> {
-    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+/// given column index (negative = from the end). Content problems are
+/// [`KrrError::Dataset`], filesystem problems [`KrrError::Io`] — the same
+/// fallible surface as [`CsvSource`]/[`LibsvmSource`].
+pub fn load_csv(path: &str, target_col: i64, name: &str) -> Result<Dataset, KrrError> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| KrrError::Io(format!("{path}: {e}")))?;
     let mut rows: Vec<Vec<f64>> = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
         let line = line.trim();
         if line.is_empty() {
             continue;
         }
-        let fields: Result<Vec<f64>, _> = line
-            .split([',', ';'])
-            .map(|f| f.trim().parse::<f64>())
-            .collect();
-        match fields {
+        match source::parse_csv_fields(line) {
             Ok(v) => rows.push(v),
             Err(_) if lineno == 0 => continue, // header
-            Err(e) => return Err(format!("{path}:{}: {e}", lineno + 1)),
+            Err(e) => {
+                return Err(KrrError::Dataset(format!("{path}:{}: {e}", lineno + 1)))
+            }
         }
     }
     if rows.is_empty() {
-        return Err(format!("{path}: no data rows"));
+        return Err(KrrError::Dataset(format!("{path}: no data rows")));
     }
     let width = rows[0].len();
     if rows.iter().any(|r| r.len() != width) {
-        return Err(format!("{path}: ragged rows"));
+        return Err(KrrError::Dataset(format!("{path}: ragged rows")));
     }
     let t = if target_col < 0 {
         (width as i64 + target_col) as usize
@@ -125,7 +147,7 @@ pub fn load_csv(path: &str, target_col: i64, name: &str) -> Result<Dataset, Stri
         target_col as usize
     };
     if t >= width {
-        return Err(format!("{path}: target column {t} out of range"));
+        return Err(KrrError::Dataset(format!("{path}: target column {t} out of range")));
     }
     let d = width - 1;
     let mut x = Vec::with_capacity(rows.len() * d);

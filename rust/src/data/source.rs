@@ -1,0 +1,650 @@
+//! Chunked data ingestion — the [`DataSource`] abstraction every operator
+//! build consumes.
+//!
+//! A source streams its rows in order as `(rows, targets)` blocks of a
+//! caller-chosen size, with the feature count `d` known up front and the
+//! row count available as a hint. Sources are **re-iterable**: every call
+//! to [`DataSource::for_each_chunk`] replays the identical row sequence
+//! from the start (file readers re-open the file), which is what lets the
+//! sketch builders run multi-pass algorithms — fit a
+//! [`Standardizer`](crate::data::Standardizer), collect Nyström landmarks,
+//! then assemble CSR tables — without ever holding the n×d matrix in
+//! memory.
+//!
+//! Implementations here:
+//!
+//! * [`Dataset`] — the in-memory matrix, chunked by row slicing (no copy).
+//! * [`CsvSource`] — buffered numeric-CSV reader (same grammar as
+//!   [`load_csv`](crate::data::load_csv): `,`/`;` separators, optional
+//!   header, target column by index with negative-from-the-end).
+//! * [`LibsvmSource`] — sparse `label idx:val ...` text reader; index
+//!   base (0- vs 1-based) is auto-detected on the open scan.
+//! * [`MatrixSource`] — a borrowed row-major `&[f32]` with zero targets
+//!   (the adapter the in-memory sketch constructors wrap their slice
+//!   arguments in, funnelling every build through the one chunked path).
+//! * [`SyntheticSource`](crate::data::SyntheticSource) — on-the-fly
+//!   generation of the Table-2 stand-ins (see `data/synthetic.rs`).
+//!
+//! Chunking is an execution detail, never a semantic one: all consumers in
+//! this crate are bit-identical across chunk sizes (asserted end-to-end by
+//! `tests/stream_equivalence.rs`).
+
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+
+use super::Dataset;
+use crate::api::KrrError;
+
+/// Visitor for one `(rows, targets)` block: `rows` is row-major with
+/// `rows.len() == targets.len() * d`. Returning `Err` aborts the pass.
+pub type ChunkFn<'a> = &'a mut dyn FnMut(&[f32], &[f64]) -> Result<(), KrrError>;
+
+/// A re-iterable, chunked stream of `(rows, targets)` training data.
+pub trait DataSource: Send + Sync {
+    /// Human-readable source name (reports, errors).
+    fn name(&self) -> &str;
+
+    /// Features per row, known before any chunk is produced.
+    fn dim(&self) -> usize;
+
+    /// Total row count, when the source knows it without a full pass.
+    fn len_hint(&self) -> Option<usize>;
+
+    /// Stream every row in order as blocks of at most `chunk_rows` rows
+    /// (a `chunk_rows` of 0 is treated as 1). Each call replays the full
+    /// sequence from the start; blocks arrive on the calling thread, in
+    /// order.
+    fn for_each_chunk(&self, chunk_rows: usize, f: ChunkFn) -> Result<(), KrrError>;
+
+    /// Collect the whole stream into an in-memory [`Dataset`].
+    fn materialize(&self, chunk_rows: usize) -> Result<Dataset, KrrError> {
+        let d = self.dim();
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        if let Some(n) = self.len_hint() {
+            x.reserve(n * d);
+            y.reserve(n);
+        }
+        self.for_each_chunk(chunk_rows, &mut |rows, ys| {
+            x.extend_from_slice(rows);
+            y.extend_from_slice(ys);
+            Ok(())
+        })?;
+        if y.is_empty() {
+            return Err(KrrError::Dataset(format!("{}: no data rows", self.name())));
+        }
+        Ok(Dataset::new(self.name(), x, y, d))
+    }
+
+    /// Count the rows by streaming (used when [`len_hint`](Self::len_hint)
+    /// is `None`).
+    fn count_rows(&self, chunk_rows: usize) -> Result<usize, KrrError> {
+        if let Some(n) = self.len_hint() {
+            return Ok(n);
+        }
+        let mut n = 0usize;
+        self.for_each_chunk(chunk_rows, &mut |_, ys| {
+            n += ys.len();
+            Ok(())
+        })?;
+        Ok(n)
+    }
+}
+
+impl DataSource for Dataset {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.n)
+    }
+
+    fn for_each_chunk(&self, chunk_rows: usize, f: ChunkFn) -> Result<(), KrrError> {
+        let chunk = chunk_rows.max(1);
+        let mut start = 0usize;
+        while start < self.n {
+            let end = (start + chunk).min(self.n);
+            f(&self.x[start * self.d..end * self.d], &self.y[start..end])?;
+            start = end;
+        }
+        Ok(())
+    }
+}
+
+/// A borrowed row-major feature matrix with all-zero targets — the adapter
+/// the in-memory sketch constructors use so that slice-based and streamed
+/// builds share one assembly path.
+pub struct MatrixSource<'a> {
+    x: &'a [f32],
+    d: usize,
+    n: usize,
+    name: String,
+}
+
+impl<'a> MatrixSource<'a> {
+    /// Wrap `x` (row-major, `x.len()` divisible by `d`).
+    pub fn new(name: &str, x: &'a [f32], d: usize) -> MatrixSource<'a> {
+        assert!(d > 0, "MatrixSource needs d > 0");
+        assert_eq!(x.len() % d, 0, "matrix length not divisible by d");
+        MatrixSource { x, d, n: x.len() / d, name: name.to_string() }
+    }
+}
+
+impl DataSource for MatrixSource<'_> {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.n)
+    }
+
+    fn for_each_chunk(&self, chunk_rows: usize, f: ChunkFn) -> Result<(), KrrError> {
+        let chunk = chunk_rows.max(1);
+        let zeros = vec![0.0f64; chunk.min(self.n.max(1))];
+        let mut start = 0usize;
+        while start < self.n {
+            let end = (start + chunk).min(self.n);
+            f(&self.x[start * self.d..end * self.d], &zeros[..end - start])?;
+            start = end;
+        }
+        Ok(())
+    }
+}
+
+/// Buffered chunked reader over a numeric CSV file. The open scan reads
+/// the first line to fix the column count (an unparseable first line is a
+/// header, exactly like [`load_csv`](crate::data::load_csv)) and counts
+/// data lines for [`len_hint`](DataSource::len_hint); content errors
+/// (ragged rows, bad floats) surface lazily as
+/// [`KrrError::Dataset`] from the streaming pass, with line numbers.
+pub struct CsvSource {
+    path: String,
+    name: String,
+    /// Columns per row (features + target).
+    width: usize,
+    /// Resolved target column in `0..width`.
+    target: usize,
+    has_header: bool,
+    n: usize,
+}
+
+/// Split a CSV line into parsed f64 fields (`,`/`;` separators, trimmed)
+/// — the one CSV grammar, shared by [`CsvSource`] and
+/// [`load_csv`](crate::data::load_csv).
+pub(crate) fn parse_csv_fields(line: &str) -> Result<Vec<f64>, std::num::ParseFloatError> {
+    line.split([',', ';']).map(|f| f.trim().parse::<f64>()).collect()
+}
+
+impl CsvSource {
+    /// Open `path`, fixing the schema from the first line(s). `target_col`
+    /// indexes the target column; negative counts from the end.
+    ///
+    /// The open scan reads the whole file once to count rows (no float
+    /// parsing past the first line) — a deliberate trade-off: the exact
+    /// `len_hint` lets the RFF build reserve its feature matrix in one
+    /// allocation and gives the two-pass Nyström build its row count
+    /// without a far costlier full-parse `count_rows` pass.
+    pub fn open(path: &str, target_col: i64) -> Result<CsvSource, KrrError> {
+        let file = File::open(path).map_err(|e| KrrError::Io(format!("{path}: {e}")))?;
+        let reader = BufReader::new(file);
+        let mut width = None;
+        let mut has_header = false;
+        let mut n = 0usize;
+        for (lineno, line) in reader.lines().enumerate() {
+            let line = line.map_err(|e| KrrError::Io(format!("{path}: {e}")))?;
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            match width {
+                None => match parse_csv_fields(line) {
+                    Ok(fields) => {
+                        width = Some(fields.len());
+                        n += 1;
+                    }
+                    Err(_) if lineno == 0 => has_header = true,
+                    Err(e) => {
+                        return Err(KrrError::Dataset(format!("{path}:{}: {e}", lineno + 1)))
+                    }
+                },
+                Some(_) => n += 1,
+            }
+        }
+        let width = match width {
+            Some(w) => w,
+            None => return Err(KrrError::Dataset(format!("{path}: no data rows"))),
+        };
+        let target = if target_col < 0 { width as i64 + target_col } else { target_col };
+        if target < 0 || target >= width as i64 {
+            return Err(KrrError::Dataset(format!(
+                "{path}: target column {target_col} out of range for {width} columns"
+            )));
+        }
+        if width < 2 {
+            return Err(KrrError::Dataset(format!(
+                "{path}: need at least one feature column besides the target"
+            )));
+        }
+        Ok(CsvSource {
+            path: path.to_string(),
+            name: path.to_string(),
+            width,
+            target: target as usize,
+            has_header,
+            n,
+        })
+    }
+}
+
+impl DataSource for CsvSource {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn dim(&self) -> usize {
+        self.width - 1
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.n)
+    }
+
+    fn for_each_chunk(&self, chunk_rows: usize, f: ChunkFn) -> Result<(), KrrError> {
+        let chunk = chunk_rows.max(1);
+        let d = self.dim();
+        let path = &self.path;
+        let file = File::open(path).map_err(|e| KrrError::Io(format!("{path}: {e}")))?;
+        let reader = BufReader::new(file);
+        let mut rows: Vec<f32> = Vec::with_capacity(chunk.min(self.n.max(1)) * d);
+        let mut ys: Vec<f64> = Vec::with_capacity(chunk.min(self.n.max(1)));
+        for (lineno, line) in reader.lines().enumerate() {
+            let line = line.map_err(|e| KrrError::Io(format!("{path}: {e}")))?;
+            let line = line.trim();
+            if line.is_empty() || (lineno == 0 && self.has_header) {
+                continue;
+            }
+            let fields = parse_csv_fields(line)
+                .map_err(|e| KrrError::Dataset(format!("{path}:{}: {e}", lineno + 1)))?;
+            if fields.len() != self.width {
+                return Err(KrrError::Dataset(format!(
+                    "{path}:{}: ragged row ({} columns, expected {})",
+                    lineno + 1,
+                    fields.len(),
+                    self.width
+                )));
+            }
+            for (j, v) in fields.iter().enumerate() {
+                if j == self.target {
+                    ys.push(*v);
+                } else {
+                    rows.push(*v as f32);
+                }
+            }
+            if ys.len() == chunk {
+                f(&rows, &ys)?;
+                rows.clear();
+                ys.clear();
+            }
+        }
+        if !ys.is_empty() {
+            f(&rows, &ys)?;
+        }
+        Ok(())
+    }
+}
+
+/// Chunked reader for LIBSVM/sparse-text files: one `label idx:val ...`
+/// row per line, absent indices meaning 0. The open scan fixes the
+/// dimensionality from the largest index and auto-detects the index base
+/// (a 0 index anywhere ⇒ 0-based; otherwise the conventional 1-based).
+pub struct LibsvmSource {
+    path: String,
+    name: String,
+    d: usize,
+    n: usize,
+    zero_based: bool,
+}
+
+/// Parse one LIBSVM line into (label, pairs). `Err` carries the reason
+/// without file/line context (the caller adds it).
+fn parse_libsvm_line(line: &str) -> Result<(f64, Vec<(u64, f64)>), String> {
+    let mut tokens = line.split_whitespace();
+    let label = match tokens.next() {
+        Some(t) => t
+            .parse::<f64>()
+            .map_err(|e| format!("bad label {t:?}: {e}"))?,
+        None => return Err("empty row".into()),
+    };
+    let mut pairs = Vec::new();
+    for t in tokens {
+        let (i, v) = t
+            .split_once(':')
+            .ok_or_else(|| format!("bad feature {t:?}: expected index:value"))?;
+        let idx = i
+            .parse::<u64>()
+            .map_err(|e| format!("bad feature index {i:?}: {e}"))?;
+        let val = v
+            .parse::<f64>()
+            .map_err(|e| format!("bad feature value {v:?}: {e}"))?;
+        pairs.push((idx, val));
+    }
+    Ok((label, pairs))
+}
+
+impl LibsvmSource {
+    /// Open `path` and scan it once for row count, dimensionality, and
+    /// index base. Content errors surface here (the scan parses every
+    /// line), so a successfully opened source streams cleanly.
+    ///
+    /// The index base is a heuristic: an index 0 anywhere ⇒ 0-based, else
+    /// the conventional 1-based. A 0-based file that never *mentions*
+    /// index 0 (its first column all zeros, hence never written) is
+    /// indistinguishable from a 1-based one and decodes shifted one
+    /// column left — when the convention is known, pin it with
+    /// [`open_with_base`](Self::open_with_base).
+    pub fn open(path: &str) -> Result<LibsvmSource, KrrError> {
+        Self::open_impl(path, None)
+    }
+
+    /// As [`open`](Self::open) with the index base pinned explicitly
+    /// instead of auto-detected. Fails if the file contains an index 0
+    /// while `zero_based` is false.
+    pub fn open_with_base(path: &str, zero_based: bool) -> Result<LibsvmSource, KrrError> {
+        Self::open_impl(path, Some(zero_based))
+    }
+
+    fn open_impl(path: &str, base: Option<bool>) -> Result<LibsvmSource, KrrError> {
+        let file = File::open(path).map_err(|e| KrrError::Io(format!("{path}: {e}")))?;
+        let reader = BufReader::new(file);
+        let mut n = 0usize;
+        let mut max_idx = 0u64;
+        let mut min_idx = u64::MAX;
+        for (lineno, line) in reader.lines().enumerate() {
+            let line = line.map_err(|e| KrrError::Io(format!("{path}: {e}")))?;
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (_, pairs) = parse_libsvm_line(line)
+                .map_err(|e| KrrError::Dataset(format!("{path}:{}: {e}", lineno + 1)))?;
+            for (idx, _) in pairs {
+                max_idx = max_idx.max(idx);
+                min_idx = min_idx.min(idx);
+            }
+            n += 1;
+        }
+        if n == 0 {
+            return Err(KrrError::Dataset(format!("{path}: no data rows")));
+        }
+        let zero_based = match base {
+            Some(false) if min_idx == 0 => {
+                return Err(KrrError::Dataset(format!(
+                    "{path}: contains a 0 feature index but was opened as 1-based"
+                )))
+            }
+            Some(b) => b,
+            None => min_idx == 0,
+        };
+        let d = if min_idx == u64::MAX {
+            0 // no features anywhere
+        } else if zero_based {
+            max_idx as usize + 1
+        } else {
+            max_idx as usize
+        };
+        if d == 0 {
+            return Err(KrrError::Dataset(format!("{path}: rows carry no features")));
+        }
+        Ok(LibsvmSource { path: path.to_string(), name: path.to_string(), d, n, zero_based })
+    }
+
+    /// Detected index convention (`true` ⇒ indices start at 0).
+    pub fn zero_based(&self) -> bool {
+        self.zero_based
+    }
+}
+
+impl DataSource for LibsvmSource {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.n)
+    }
+
+    fn for_each_chunk(&self, chunk_rows: usize, f: ChunkFn) -> Result<(), KrrError> {
+        let chunk = chunk_rows.max(1);
+        let d = self.d;
+        let path = &self.path;
+        let base = if self.zero_based { 0u64 } else { 1u64 };
+        let file = File::open(path).map_err(|e| KrrError::Io(format!("{path}: {e}")))?;
+        let reader = BufReader::new(file);
+        let mut rows: Vec<f32> = Vec::with_capacity(chunk.min(self.n) * d);
+        let mut ys: Vec<f64> = Vec::with_capacity(chunk.min(self.n));
+        for (lineno, line) in reader.lines().enumerate() {
+            let line = line.map_err(|e| KrrError::Io(format!("{path}: {e}")))?;
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (label, pairs) = parse_libsvm_line(line)
+                .map_err(|e| KrrError::Dataset(format!("{path}:{}: {e}", lineno + 1)))?;
+            let row_start = rows.len();
+            rows.resize(row_start + d, 0.0);
+            for (idx, val) in pairs {
+                // the open scan fixed d from the max index, but guard
+                // against the file changing between scan and stream
+                let j = idx
+                    .checked_sub(base)
+                    .filter(|&j| (j as usize) < d)
+                    .ok_or_else(|| {
+                        KrrError::Dataset(format!(
+                            "{path}:{}: feature index {idx} out of range for d={d}",
+                            lineno + 1
+                        ))
+                    })?;
+                rows[row_start + j as usize] = val as f32;
+            }
+            ys.push(label);
+            if ys.len() == chunk {
+                f(&rows, &ys)?;
+                rows.clear();
+                ys.clear();
+            }
+        }
+        if !ys.is_empty() {
+            f(&rows, &ys)?;
+        }
+        Ok(())
+    }
+}
+
+/// Serialize a dataset in LIBSVM format (nonzero features only) — test
+/// round-trips and dataset export. `zero_based` picks the index base.
+pub fn write_libsvm(ds: &Dataset, path: &str, zero_based: bool) -> Result<(), KrrError> {
+    use std::io::Write;
+    let base = if zero_based { 0 } else { 1 };
+    let file = File::create(path).map_err(|e| KrrError::Io(format!("{path}: {e}")))?;
+    let mut w = std::io::BufWriter::new(file);
+    for i in 0..ds.n {
+        let mut line = format!("{}", ds.y[i]);
+        for (j, &v) in ds.row(i).iter().enumerate() {
+            if v != 0.0 {
+                line.push_str(&format!(" {}:{}", j + base, v));
+            }
+        }
+        line.push('\n');
+        w.write_all(line.as_bytes())
+            .map_err(|e| KrrError::Io(format!("{path}: {e}")))?;
+    }
+    Ok(())
+}
+
+/// Serialize a dataset as a numeric CSV with the target as the last
+/// column (the `load_csv`/[`CsvSource`] convention for `target_col=-1`).
+pub fn write_csv(ds: &Dataset, path: &str) -> Result<(), KrrError> {
+    use std::io::Write;
+    let file = File::create(path).map_err(|e| KrrError::Io(format!("{path}: {e}")))?;
+    let mut w = std::io::BufWriter::new(file);
+    for i in 0..ds.n {
+        let mut line = String::new();
+        for &v in ds.row(i) {
+            line.push_str(&format!("{v},"));
+        }
+        line.push_str(&format!("{}\n", ds.y[i]));
+        w.write_all(line.as_bytes())
+            .map_err(|e| KrrError::Io(format!("{path}: {e}")))?;
+    }
+    Ok(())
+}
+
+/// Materialize the first `k` rows of a source (O(k·d) memory) — the
+/// CLI's held-in-memory evaluation sample for streamed training runs.
+/// The pass aborts (via the `ChunkFn` error channel) as soon as `k` rows
+/// are collected, so file-backed sources stop parsing after roughly `k`
+/// rows rather than replaying the whole stream.
+pub fn head_sample(
+    src: &dyn DataSource,
+    k: usize,
+    chunk_rows: usize,
+) -> Result<Dataset, KrrError> {
+    let d = src.dim();
+    let mut x = Vec::with_capacity(k * d);
+    let mut y = Vec::with_capacity(k);
+    // `done` distinguishes our own early-stop error from a genuine source
+    // error structurally — no dependence on message contents, which
+    // wrapping sources are free to reformat.
+    let mut done = false;
+    let result = src.for_each_chunk(chunk_rows, &mut |rows, ys| {
+        let take = (k - y.len()).min(ys.len());
+        x.extend_from_slice(&rows[..take * d]);
+        y.extend_from_slice(&ys[..take]);
+        if y.len() >= k {
+            done = true;
+            return Err(KrrError::Dataset("head sample complete".to_string()));
+        }
+        Ok(())
+    });
+    match result {
+        Ok(()) => {}
+        Err(_) if done => {}
+        Err(e) => return Err(e),
+    }
+    if y.is_empty() {
+        return Err(KrrError::Dataset(format!("{}: no data rows", src.name())));
+    }
+    Ok(Dataset::new(src.name(), x, y, d))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        let x = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0];
+        let y = vec![0.1, 0.2, 0.3, 0.4, 0.5];
+        Dataset::new("toy", x, y, 2)
+    }
+
+    #[test]
+    fn dataset_chunks_cover_all_rows_in_order() {
+        let ds = toy();
+        for chunk in [1usize, 2, 3, 5, 100] {
+            let got = ds.materialize(chunk).unwrap();
+            assert_eq!(got.x, ds.x, "chunk={chunk}");
+            assert_eq!(got.y, ds.y, "chunk={chunk}");
+            assert_eq!(got.d, ds.d);
+        }
+        // chunk_rows == 0 degrades to 1 instead of spinning
+        let got = ds.materialize(0).unwrap();
+        assert_eq!(got.y, ds.y);
+    }
+
+    #[test]
+    fn matrix_source_streams_rows_with_zero_targets() {
+        let x = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let src = MatrixSource::new("m", &x, 3);
+        assert_eq!(src.dim(), 3);
+        assert_eq!(src.len_hint(), Some(2));
+        let ds = src.materialize(1).unwrap();
+        assert_eq!(ds.x, x);
+        assert_eq!(ds.y, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn csv_source_matches_dataset_for_every_chunk_size() {
+        let path = std::env::temp_dir().join("wlsh_src_test.csv");
+        let ds = toy();
+        write_csv(&ds, path.to_str().unwrap()).unwrap();
+        let src = CsvSource::open(path.to_str().unwrap(), -1).unwrap();
+        assert_eq!(src.dim(), 2);
+        assert_eq!(src.len_hint(), Some(5));
+        for chunk in [1usize, 2, 5, 64] {
+            let got = src.materialize(chunk).unwrap();
+            assert_eq!(got.x, ds.x, "chunk={chunk}");
+            assert_eq!(got.y, ds.y, "chunk={chunk}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn csv_source_supports_header_and_target_column_choice() {
+        let path = std::env::temp_dir().join("wlsh_src_header.csv");
+        std::fs::write(&path, "a,b,c\n1.0,2.0,3.0\n4.0,5.0,6.0\n").unwrap();
+        let src = CsvSource::open(path.to_str().unwrap(), 0).unwrap();
+        let ds = src.materialize(16).unwrap();
+        assert_eq!(ds.y, vec![1.0, 4.0]);
+        assert_eq!(ds.x, vec![2.0, 3.0, 5.0, 6.0]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn libsvm_roundtrip_both_index_bases() {
+        let ds = toy();
+        for zero_based in [false, true] {
+            let path = std::env::temp_dir()
+                .join(format!("wlsh_src_{}.libsvm", if zero_based { "zb" } else { "ob" }));
+            write_libsvm(&ds, path.to_str().unwrap(), zero_based).unwrap();
+            let src = LibsvmSource::open(path.to_str().unwrap()).unwrap();
+            assert_eq!(src.zero_based(), zero_based);
+            assert_eq!(src.dim(), 2);
+            let got = src.materialize(2).unwrap();
+            assert_eq!(got.x, ds.x, "zero_based={zero_based}");
+            assert_eq!(got.y, ds.y, "zero_based={zero_based}");
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn head_sample_takes_a_prefix() {
+        let ds = toy();
+        let head = head_sample(&ds, 3, 2).unwrap();
+        assert_eq!(head.n, 3);
+        assert_eq!(head.y, vec![0.1, 0.2, 0.3]);
+        assert_eq!(head.x, ds.x[..6].to_vec());
+        // k larger than n yields everything
+        let all = head_sample(&ds, 99, 2).unwrap();
+        assert_eq!(all.n, ds.n);
+    }
+
+    #[test]
+    fn count_rows_streams_when_no_hint() {
+        let ds = toy();
+        assert_eq!(ds.count_rows(2).unwrap(), 5);
+    }
+}

@@ -1,0 +1,288 @@
+//! Streaming standardization: a single-pass Welford accumulator that
+//! produces a reusable [`Standardizer`] — fit once on the training
+//! source, then apply the same affine map to training chunks, held-out
+//! test sets, and serving-time queries. This replaces the pattern of
+//! calling [`Dataset::standardize`](crate::data::Dataset::standardize) on
+//! each split independently (which leaks test statistics into the test
+//! transform and cannot be applied to single query rows at all).
+//!
+//! Statistics match the two-pass population formulas of
+//! `Dataset::standardize` to floating-point accumulation error (≤1e-10
+//! relative on realistic data — asserted in the unit tests), and the
+//! degenerate-feature handling is identical: a variance at or below 1e-24
+//! maps the feature to 0 rather than dividing by ~0.
+
+use super::source::{ChunkFn, DataSource};
+use super::Dataset;
+use crate::api::KrrError;
+
+/// A fitted affine standardization: features map to
+/// `(x - mean) · inv_std`, targets to `(y - y_mean) / y_std`.
+#[derive(Clone, Debug)]
+pub struct Standardizer {
+    /// Per-feature mean.
+    pub mean: Vec<f64>,
+    /// Per-feature 1/std (0 for degenerate features, matching
+    /// `Dataset::standardize`).
+    pub inv_std: Vec<f64>,
+    /// Target mean.
+    pub y_mean: f64,
+    /// Target standard deviation (floored at 1e-12).
+    pub y_std: f64,
+    /// Rows the statistics were fitted on.
+    pub n: usize,
+}
+
+impl Standardizer {
+    /// Fit on a source in one streaming pass (Welford's algorithm per
+    /// feature and for the target; O(d) state, any chunk size).
+    pub fn fit(src: &dyn DataSource, chunk_rows: usize) -> Result<Standardizer, KrrError> {
+        let d = src.dim();
+        let mut count = 0usize;
+        let mut mean = vec![0.0f64; d];
+        let mut m2 = vec![0.0f64; d];
+        let mut y_mean = 0.0f64;
+        let mut y_m2 = 0.0f64;
+        src.for_each_chunk(chunk_rows, &mut |rows, ys| {
+            for (i, &yv) in ys.iter().enumerate() {
+                count += 1;
+                let c = count as f64;
+                let row = &rows[i * d..(i + 1) * d];
+                for ((&v, m), s) in row.iter().zip(mean.iter_mut()).zip(m2.iter_mut()) {
+                    let v = v as f64;
+                    let delta = v - *m;
+                    *m += delta / c;
+                    *s += delta * (v - *m);
+                }
+                let delta = yv - y_mean;
+                y_mean += delta / c;
+                y_m2 += delta * (yv - y_mean);
+            }
+            Ok(())
+        })?;
+        if count == 0 {
+            return Err(KrrError::Dataset(format!(
+                "{}: cannot standardize an empty source",
+                src.name()
+            )));
+        }
+        let n = count as f64;
+        let inv_std = m2
+            .iter()
+            .map(|&s| {
+                let var = s / n;
+                if var > 1e-24 {
+                    1.0 / var.sqrt()
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let y_std = (y_m2 / n).sqrt().max(1e-12);
+        Ok(Standardizer { mean, inv_std, y_mean, y_std, n: count })
+    }
+
+    /// Features per row this standardizer was fitted for.
+    pub fn dim(&self) -> usize {
+        self.mean.len()
+    }
+
+    /// Standardize a row-major block of feature rows in place — the same
+    /// map for training chunks and held-out queries.
+    pub fn transform_rows(&self, rows: &mut [f32]) {
+        let d = self.dim();
+        assert_eq!(rows.len() % d.max(1), 0, "row block shape mismatch");
+        for row in rows.chunks_mut(d.max(1)) {
+            for ((v, &m), &s) in row.iter_mut().zip(&self.mean).zip(&self.inv_std) {
+                *v = ((*v as f64 - m) * s) as f32;
+            }
+        }
+    }
+
+    /// Center and scale targets in place.
+    pub fn transform_targets(&self, ys: &mut [f64]) {
+        for y in ys.iter_mut() {
+            *y = (*y - self.y_mean) / self.y_std;
+        }
+    }
+
+    /// Standardize a whole dataset in place; returns the target
+    /// `(mean, std)` like [`Dataset::standardize`].
+    pub fn apply(&self, ds: &mut Dataset) -> (f64, f64) {
+        assert_eq!(ds.d, self.dim(), "dataset dimensionality mismatch");
+        self.transform_rows(&mut ds.x);
+        self.transform_targets(&mut ds.y);
+        (self.y_mean, self.y_std)
+    }
+
+    /// Map a standardized prediction back to the original target scale.
+    pub fn unscale_target(&self, y: f64) -> f64 {
+        y * self.y_std + self.y_mean
+    }
+
+    /// View `inner` through this standardizer: every chunk is transformed
+    /// on the fly, so a streamed training run standardizes without ever
+    /// materializing the data.
+    pub fn source<'a>(&'a self, inner: &'a dyn DataSource) -> StandardizedSource<'a> {
+        assert_eq!(inner.dim(), self.dim(), "source dimensionality mismatch");
+        StandardizedSource { std: self, inner }
+    }
+}
+
+/// A [`DataSource`] adapter applying a fitted [`Standardizer`] chunk by
+/// chunk (O(chunk) scratch).
+pub struct StandardizedSource<'a> {
+    std: &'a Standardizer,
+    inner: &'a dyn DataSource,
+}
+
+impl DataSource for StandardizedSource<'_> {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        self.inner.len_hint()
+    }
+
+    fn for_each_chunk(&self, chunk_rows: usize, f: ChunkFn) -> Result<(), KrrError> {
+        let mut x_buf: Vec<f32> = Vec::new();
+        let mut y_buf: Vec<f64> = Vec::new();
+        self.inner.for_each_chunk(chunk_rows, &mut |rows, ys| {
+            x_buf.clear();
+            x_buf.extend_from_slice(rows);
+            y_buf.clear();
+            y_buf.extend_from_slice(ys);
+            self.std.transform_rows(&mut x_buf);
+            self.std.transform_targets(&mut y_buf);
+            f(&x_buf, &y_buf)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic_by_name;
+
+    #[test]
+    fn welford_matches_two_pass_standardize() {
+        // The fitted statistics agree with the two-pass population
+        // formulas of Dataset::standardize to ≤1e-10 relative (both f64),
+        // and the transformed values match to f32 rounding (the casts can
+        // land one ulp apart when the f64 stats differ in the last bits).
+        let ds = synthetic_by_name("wine", Some(500), 7).unwrap();
+        let std = Standardizer::fit(&ds, 64).unwrap();
+        assert_eq!(std.n, ds.n);
+        for j in 0..ds.d {
+            let mean: f64 =
+                (0..ds.n).map(|i| ds.x[i * ds.d + j] as f64).sum::<f64>() / ds.n as f64;
+            let var: f64 = (0..ds.n)
+                .map(|i| (ds.x[i * ds.d + j] as f64 - mean).powi(2))
+                .sum::<f64>()
+                / ds.n as f64;
+            let inv = 1.0 / var.sqrt();
+            assert!(
+                (std.mean[j] - mean).abs() <= 1e-10 * (1.0 + mean.abs()),
+                "mean[{j}]: {} vs {mean}",
+                std.mean[j]
+            );
+            assert!(
+                (std.inv_std[j] - inv).abs() <= 1e-10 * inv,
+                "inv_std[{j}]: {} vs {inv}",
+                std.inv_std[j]
+            );
+        }
+        let mut two_pass = ds.clone();
+        let (ym, ys) = two_pass.standardize();
+        assert!((std.y_mean - ym).abs() <= 1e-10 * (1.0 + ym.abs()), "y mean");
+        assert!((std.y_std - ys).abs() <= 1e-10 * ys, "y std");
+        let mut streamed = ds.clone();
+        std.apply(&mut streamed);
+        for i in 0..ds.n {
+            for j in 0..ds.d {
+                let a = two_pass.x[i * ds.d + j] as f64;
+                let b = streamed.x[i * ds.d + j] as f64;
+                assert!((a - b).abs() <= 2e-6 * (1.0 + a.abs()), "x[{i},{j}]: {a} vs {b}");
+            }
+            let (a, b) = (two_pass.y[i], streamed.y[i]);
+            assert!((a - b).abs() <= 1e-10 * (1.0 + a.abs()), "y[{i}]: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn fit_is_chunk_size_invariant() {
+        let ds = synthetic_by_name("wine", Some(300), 3).unwrap();
+        let want = Standardizer::fit(&ds, ds.n).unwrap();
+        for chunk in [1usize, 7, 64] {
+            let got = Standardizer::fit(&ds, chunk).unwrap();
+            assert_eq!(got.n, want.n);
+            for j in 0..ds.d {
+                assert!(
+                    (got.mean[j] - want.mean[j]).abs() <= 1e-12 * (1.0 + want.mean[j].abs()),
+                    "chunk={chunk} mean[{j}]"
+                );
+                assert!(
+                    (got.inv_std[j] - want.inv_std[j]).abs() <= 1e-10 * want.inv_std[j].abs(),
+                    "chunk={chunk} inv_std[{j}]"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fitted_standardizer_applies_train_statistics_to_held_out_queries() {
+        // Fit on train only; the test transform must use *train* moments
+        // (the leak Dataset::standardize forces when called per split).
+        let ds = synthetic_by_name("wine", Some(400), 5).unwrap();
+        let (tr, te) = ds.split(300, 2);
+        let std = Standardizer::fit(&tr, 32).unwrap();
+        let mut q = te.x.clone();
+        std.transform_rows(&mut q);
+        for i in 0..te.n.min(20) {
+            for j in 0..te.d {
+                let want = ((te.x[i * te.d + j] as f64 - std.mean[j]) * std.inv_std[j]) as f32;
+                assert_eq!(q[i * te.d + j], want, "query {i} dim {j}");
+            }
+        }
+        // train rows through the same map have ~zero mean / unit variance
+        let mut trx = tr.x.clone();
+        std.transform_rows(&mut trx);
+        for j in 0..tr.d {
+            let mean: f64 =
+                (0..tr.n).map(|i| trx[i * tr.d + j] as f64).sum::<f64>() / tr.n as f64;
+            assert!(mean.abs() < 1e-6, "dim {j} mean {mean}");
+        }
+    }
+
+    #[test]
+    fn standardized_source_streams_the_transformed_values() {
+        let ds = synthetic_by_name("wine", Some(200), 9).unwrap();
+        let std = Standardizer::fit(&ds, 50).unwrap();
+        let mut want = ds.clone();
+        std.apply(&mut want);
+        let view = std.source(&ds);
+        assert_eq!(view.len_hint(), Some(ds.n));
+        for chunk in [1usize, 33, 200] {
+            let got = view.materialize(chunk).unwrap();
+            assert_eq!(got.x, want.x, "chunk={chunk}");
+            assert_eq!(got.y, want.y, "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn unscale_inverts_target_transform() {
+        let ds = synthetic_by_name("wine", Some(100), 1).unwrap();
+        let std = Standardizer::fit(&ds, 10).unwrap();
+        let mut y = ds.y.clone();
+        std.transform_targets(&mut y);
+        for (orig, scaled) in ds.y.iter().zip(&y) {
+            let back = std.unscale_target(*scaled);
+            assert!((back - orig).abs() < 1e-9 * (1.0 + orig.abs()));
+        }
+    }
+}

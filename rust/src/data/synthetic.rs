@@ -91,40 +91,63 @@ pub const SPECS: [SyntheticSpec; 4] = [
     },
 ];
 
-/// Build a synthetic dataset by spec (optionally capped to `n_max` rows
-/// while keeping the train fraction — used to scale benches to this box).
-pub fn generate(spec: &SyntheticSpec, n_max: Option<usize>, seed: u64) -> Dataset {
-    let n = n_max.map(|m| m.min(spec.n)).unwrap_or(spec.n);
-    let d = spec.d;
-    let mut rng = Pcg64::new(seed ^ name_seed(spec.name), 0);
-    // latent factors u ~ N(0, I_latent); features = random linear mixing of
-    // latent + per-dim noise, a fraction binarized by thresholding
-    let mixing: Vec<f64> = (0..d * spec.latent)
-        .map(|_| rng.normal() / (spec.latent as f64).sqrt())
-        .collect();
-    let n_binary = (d as f64 * spec.binary_frac) as usize;
-    // teacher: smooth random function of the *latent* coordinates
-    let teacher_kernel = if spec.rough_teacher {
-        Kernel::laplace(spec.teacher_scale)
-    } else {
-        Kernel::squared_exp(spec.teacher_scale)
-    };
-    let mut trng = rng.fork(1);
-    let teacher = SpectralGp::new(&teacher_kernel, spec.latent, 2048, &mut trng);
-    let mut x = vec![0.0f32; n * d];
-    let mut y = vec![0.0f64; n];
-    let mut u = vec![0.0f32; spec.latent];
-    for i in 0..n {
+/// Frozen row-independent generator state: the mixing matrix and teacher
+/// are drawn once from the base RNG; individual rows then only need a
+/// per-row RNG stream. Shared by the in-memory [`generate`] and the
+/// streaming [`SyntheticSource`].
+struct TeacherModel {
+    d: usize,
+    latent: usize,
+    n_binary: usize,
+    noise: f64,
+    rough: bool,
+    name: &'static str,
+    mixing: Vec<f64>,
+    teacher: SpectralGp,
+}
+
+impl TeacherModel {
+    fn new(spec: &SyntheticSpec, rng: &mut Pcg64) -> TeacherModel {
+        // latent factors u ~ N(0, I_latent); features = random linear
+        // mixing of latent + per-dim noise, a fraction binarized by
+        // thresholding
+        let mixing: Vec<f64> = (0..spec.d * spec.latent)
+            .map(|_| rng.normal() / (spec.latent as f64).sqrt())
+            .collect();
+        // teacher: smooth random function of the *latent* coordinates
+        let teacher_kernel = if spec.rough_teacher {
+            Kernel::laplace(spec.teacher_scale)
+        } else {
+            Kernel::squared_exp(spec.teacher_scale)
+        };
+        let mut trng = rng.fork(1);
+        let teacher = SpectralGp::new(&teacher_kernel, spec.latent, 2048, &mut trng);
+        TeacherModel {
+            d: spec.d,
+            latent: spec.latent,
+            n_binary: (spec.d as f64 * spec.binary_frac) as usize,
+            noise: spec.noise,
+            rough: spec.rough_teacher,
+            name: spec.name,
+            mixing,
+            teacher,
+        }
+    }
+
+    /// Generate one row into `row` (length d) from `rng`, returning its
+    /// target. `u` is a reused latent scratch buffer (length `latent`).
+    fn gen_row(&self, rng: &mut Pcg64, u: &mut [f32], row: &mut [f32]) -> f64 {
+        let (d, n_binary) = (self.d, self.n_binary);
         for ul in u.iter_mut() {
             *ul = rng.normal() as f32;
         }
-        for j in 0..d {
+        for (j, xv) in row.iter_mut().enumerate() {
             let mut v = 0.0;
             for (l, ul) in u.iter().enumerate() {
-                v += mixing[j * spec.latent + l] * *ul as f64;
+                v += self.mixing[j * self.latent + l] * *ul as f64;
             }
             v += 0.4 * rng.normal(); // idiosyncratic feature noise
-            x[i * d + j] = if j < n_binary {
+            *xv = if j < n_binary {
                 // binarize with a per-dim random threshold — one-hot-ish
                 let thr = ((j * 2654435761) % 97) as f64 / 97.0 * 1.2 - 0.6;
                 if v > thr {
@@ -136,28 +159,123 @@ pub fn generate(spec: &SyntheticSpec, n_max: Option<usize>, seed: u64) -> Datase
                 v as f32
             };
         }
-        let mut signal = teacher.eval(&u);
-        if spec.rough_teacher {
+        let mut signal = self.teacher.eval(u);
+        if self.rough {
             // Axis-aligned kinks on the continuous *feature* coordinates:
             // an additive piecewise-linear term per dim. This is the
             // structure that makes the real CT/covtype targets favor
             // product-Laplace kernels (and per-coordinate LSH bins) over
             // isotropic SE/RFF — visible in the paper's own Table 2.
-            let row = &x[i * d..(i + 1) * d];
             let mut kink = 0.0;
             let n_kink = (d - n_binary).min(16).max(1);
             for (k, &xv) in row[n_binary..n_binary + n_kink].iter().enumerate() {
-                let t = kink_knot(spec.name, k);
+                let t = kink_knot(self.name, k);
                 let v = xv as f64;
                 kink += (v - t).abs() - (v - t - 0.9).abs();
             }
             signal = 0.35 * signal + 0.75 * kink / (n_kink as f64).sqrt();
         }
         // heteroscedastic noise: scales mildly with |signal|
-        let noise = spec.noise * (1.0 + 0.3 * signal.abs()) * rng.normal();
-        y[i] = 3.0 + 2.0 * signal + noise; // unstandardized targets
+        let noise = self.noise * (1.0 + 0.3 * signal.abs()) * rng.normal();
+        3.0 + 2.0 * signal + noise // unstandardized targets
+    }
+}
+
+/// Build a synthetic dataset by spec (optionally capped to `n_max` rows
+/// while keeping the train fraction — used to scale benches to this box).
+pub fn generate(spec: &SyntheticSpec, n_max: Option<usize>, seed: u64) -> Dataset {
+    let n = n_max.map(|m| m.min(spec.n)).unwrap_or(spec.n);
+    let d = spec.d;
+    let mut rng = Pcg64::new(seed ^ name_seed(spec.name), 0);
+    let model = TeacherModel::new(spec, &mut rng);
+    let mut x = vec![0.0f32; n * d];
+    let mut y = vec![0.0f64; n];
+    let mut u = vec![0.0f32; spec.latent];
+    for i in 0..n {
+        y[i] = model.gen_row(&mut rng, &mut u, &mut x[i * d..(i + 1) * d]);
     }
     Dataset::new(spec.name, x, y, d)
+}
+
+/// On-the-fly streaming generator for a synthetic spec: rows are produced
+/// chunk by chunk from per-row RNG streams, so the sequence is
+/// deterministic in `(name, n, seed)` and independent of the chunk size —
+/// arbitrarily large training sets without an O(n·d) materialization.
+///
+/// The row stream is its own RNG discipline (per-row forks rather than
+/// [`generate`]'s single sequential stream), so a `SyntheticSource` is
+/// *not* row-for-row equal to `generate` with the same seed; it is equal
+/// to its own [`materialize`](crate::data::DataSource::materialize) at
+/// every chunk size, which is what the stream-vs-memory equivalence suite
+/// relies on.
+pub struct SyntheticSource {
+    spec: SyntheticSpec,
+    model: TeacherModel,
+    n: usize,
+    seed: u64,
+    name: String,
+}
+
+impl SyntheticSource {
+    /// Look up `name` among the Table-2 specs and stream `n` rows from
+    /// `seed`. Returns `None` for an unknown dataset name.
+    pub fn by_name(name: &str, n: usize, seed: u64) -> Option<SyntheticSource> {
+        let spec = SPECS.iter().find(|s| s.name == name)?.clone();
+        let mut rng = Pcg64::new(seed ^ name_seed(spec.name), 0);
+        let model = TeacherModel::new(&spec, &mut rng);
+        Some(SyntheticSource {
+            n,
+            seed,
+            name: format!("{name}-stream"),
+            model,
+            spec,
+        })
+    }
+
+    /// Per-row RNG stream: depends only on (seed, row), never on chunking.
+    fn row_rng(&self, row: usize) -> Pcg64 {
+        Pcg64::new(self.seed ^ name_seed(self.spec.name) ^ 0x5eed_5eed, row as u64 + 1)
+    }
+}
+
+impl crate::data::DataSource for SyntheticSource {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn dim(&self) -> usize {
+        self.spec.d
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.n)
+    }
+
+    fn for_each_chunk(
+        &self,
+        chunk_rows: usize,
+        f: crate::data::ChunkFn,
+    ) -> Result<(), crate::api::KrrError> {
+        let chunk = chunk_rows.max(1);
+        let d = self.spec.d;
+        let mut u = vec![0.0f32; self.spec.latent];
+        let mut rows = vec![0.0f32; chunk.min(self.n.max(1)) * d];
+        let mut ys = vec![0.0f64; chunk.min(self.n.max(1))];
+        let mut start = 0usize;
+        while start < self.n {
+            let end = (start + chunk).min(self.n);
+            let take = end - start;
+            for (k, i) in (start..end).enumerate() {
+                let mut rng = self.row_rng(i);
+                ys[k] = self
+                    .model
+                    .gen_row(&mut rng, &mut u, &mut rows[k * d..(k + 1) * d]);
+            }
+            f(&rows[..take * d], &ys[..take])?;
+            start = end;
+        }
+        Ok(())
+    }
 }
 
 /// Deterministic kink knot for coordinate `k` of a named dataset.
@@ -262,5 +380,29 @@ mod tests {
     #[test]
     fn unknown_name_is_none() {
         assert!(synthetic_by_name("nope", None, 0).is_none());
+    }
+
+    #[test]
+    fn synthetic_source_is_chunk_invariant_and_seeded() {
+        use crate::data::DataSource;
+        let src = SyntheticSource::by_name("wine", 150, 4).unwrap();
+        assert_eq!(src.dim(), 11);
+        assert_eq!(src.len_hint(), Some(150));
+        let want = src.materialize(150).unwrap();
+        for chunk in [1usize, 7, 64] {
+            let got = src.materialize(chunk).unwrap();
+            assert_eq!(got.x, want.x, "chunk={chunk}");
+            assert_eq!(got.y, want.y, "chunk={chunk}");
+        }
+        // a different seed streams different rows
+        let other = SyntheticSource::by_name("wine", 150, 5).unwrap().materialize(64).unwrap();
+        assert!(other.x != want.x);
+        // the row teacher still leaves learnable structure: targets vary
+        let y_var = {
+            let m = want.y.iter().sum::<f64>() / want.y.len() as f64;
+            want.y.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / want.y.len() as f64
+        };
+        assert!(y_var > 0.1, "target variance {y_var}");
+        assert!(SyntheticSource::by_name("nope", 10, 0).is_none());
     }
 }

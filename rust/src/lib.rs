@@ -52,6 +52,38 @@
 //! frozen [`api::Predictor`] handle (`predict` / allocation-free
 //! `predict_into`), which is what the TCP server and the benches use.
 //!
+//! ## Streaming / out-of-core training
+//!
+//! Training never needs the n×d matrix in RAM: every operator build
+//! consumes a chunked, re-iterable [`data::DataSource`] — the in-memory
+//! [`data::Dataset`], a buffered [`data::CsvSource`], a sparse-text
+//! [`data::LibsvmSource`], or an on-the-fly [`data::SyntheticSource`] —
+//! so peak memory is O(chunk + sketch). Fit a single-pass Welford
+//! [`data::Standardizer`] on the training stream, view the source through
+//! it, and train with `fit_source`:
+//!
+//! ```no_run
+//! use wlsh_krr::api::KrrModel;
+//! use wlsh_krr::data::{CsvSource, Standardizer};
+//! let src = CsvSource::open("train.csv", -1)?;            // target = last column
+//! let std = Standardizer::fit(&src, 8192)?;               // one streaming pass
+//! let model = KrrModel::builder()
+//!     .method("wlsh")
+//!     .chunk_rows(8192)
+//!     .fit_source(&std.source(&src))?;                    // chunked build + CG
+//! let mut q = vec![0.0f32; model.dim()];
+//! std.transform_rows(&mut q);                             // train-time semantics
+//! let pred = std.unscale_target(model.predict(&q)[0]);
+//! # Ok::<(), wlsh_krr::api::KrrError>(())
+//! ```
+//!
+//! Chunking is bit-transparent: streamed training produces coefficients
+//! identical to the in-memory path at every chunk size and thread count
+//! (`tests/stream_equivalence.rs`). The CLI exposes the same pipeline via
+//! `train --data-format csv|libsvm --chunk-rows R`, and
+//! `examples/streaming.rs` trains from an on-disk CSV larger than the
+//! process memory budget.
+//!
 //! Lower layers, for direct use: [`sketch::WlshSketch`] (the paper's
 //! estimator), [`solver::solve_krr`] (CG on `K̃ + λI`), and
 //! [`coordinator::Trainer`] / [`coordinator::serve`] (the

@@ -16,7 +16,7 @@
 
 mod table;
 
-pub use table::{BucketTable, FxBuildHasher};
+pub use table::{BucketTable, BucketTableBuilder, FxBuildHasher};
 
 use crate::api::BucketSpec;
 use crate::bucketfn::BucketEval;

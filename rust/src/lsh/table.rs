@@ -73,20 +73,52 @@ pub struct BucketTable {
     map: HashMap<u64, u32, FxBuildHasher>,
 }
 
-impl BucketTable {
-    /// Build from raw ids: one hash pass for the dense renumbering, then a
-    /// counting sort into the CSR arrays (O(n) total).
-    pub fn build(ids: &[u64]) -> BucketTable {
-        let mut map: HashMap<u64, u32, FxBuildHasher> =
-            HashMap::with_capacity_and_hasher(ids.len() / 2 + 1, FxBuildHasher::default());
-        let mut bucket_of = Vec::with_capacity(ids.len());
-        for &id in ids {
-            let next = map.len() as u32;
-            let b = *map.entry(id).or_insert(next);
-            bucket_of.push(b);
+/// Incremental [`BucketTable`] assembly for chunked/streaming builds:
+/// raw ids are pushed in point order (any chunking), the dense
+/// renumbering map grows by first appearance — exactly the order the
+/// whole-array constructor assigns — and [`finish`](Self::finish) runs
+/// the same counting sort, so a table built from N pushes is
+/// bit-identical to `BucketTable::build` over the concatenated ids.
+#[derive(Default)]
+pub struct BucketTableBuilder {
+    map: HashMap<u64, u32, FxBuildHasher>,
+    bucket_of: Vec<u32>,
+}
+
+impl BucketTableBuilder {
+    pub fn new() -> BucketTableBuilder {
+        BucketTableBuilder::default()
+    }
+
+    /// Pre-size the renumbering map for an expected point count.
+    pub fn with_capacity(n: usize) -> BucketTableBuilder {
+        BucketTableBuilder {
+            map: HashMap::with_capacity_and_hasher(n / 2 + 1, FxBuildHasher::default()),
+            bucket_of: Vec::with_capacity(n),
         }
+    }
+
+    /// Append the next point's raw id (points arrive in order).
+    #[inline]
+    pub fn push(&mut self, id: u64) {
+        let next = self.map.len() as u32;
+        let b = *self.map.entry(id).or_insert(next);
+        self.bucket_of.push(b);
+    }
+
+    /// Points pushed so far.
+    pub fn len(&self) -> usize {
+        self.bucket_of.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bucket_of.is_empty()
+    }
+
+    /// Counting sort: histogram → exclusive prefix sum → stable placement.
+    pub fn finish(self) -> BucketTable {
+        let BucketTableBuilder { map, bucket_of } = self;
         let n_buckets = map.len();
-        // Counting sort: histogram → exclusive prefix sum → stable placement.
         let mut offsets = vec![0u32; n_buckets + 1];
         for &b in &bucket_of {
             offsets[b as usize + 1] += 1;
@@ -102,6 +134,20 @@ impl BucketTable {
             *slot += 1;
         }
         BucketTable { bucket_of, n_buckets, offsets, members, map }
+    }
+}
+
+impl BucketTable {
+    /// Build from raw ids: one hash pass for the dense renumbering, then a
+    /// counting sort into the CSR arrays (O(n) total). Delegates to
+    /// [`BucketTableBuilder`], the same assembly path the streaming
+    /// builds push chunks through.
+    pub fn build(ids: &[u64]) -> BucketTable {
+        let mut b = BucketTableBuilder::with_capacity(ids.len());
+        for &id in ids {
+            b.push(id);
+        }
+        b.finish()
     }
 
     /// Dense index of a raw id, if that bucket is non-empty.
@@ -214,5 +260,27 @@ mod tests {
         assert_eq!(t.offsets, vec![0]);
         assert!(t.members.is_empty());
         assert!(t.sizes().is_empty());
+    }
+
+    #[test]
+    fn incremental_builder_matches_whole_array_build_for_any_chunking() {
+        let ids: Vec<u64> = (0..500).map(|i| (i * 37 % 113) as u64).collect();
+        let want = BucketTable::build(&ids);
+        for chunk in [1usize, 7, 64, 500] {
+            let mut b = BucketTableBuilder::new();
+            assert!(b.is_empty());
+            for block in ids.chunks(chunk) {
+                for &id in block {
+                    b.push(id);
+                }
+            }
+            assert_eq!(b.len(), ids.len());
+            let t = b.finish();
+            assert_eq!(t.bucket_of, want.bucket_of, "chunk={chunk}");
+            assert_eq!(t.offsets, want.offsets, "chunk={chunk}");
+            assert_eq!(t.members, want.members, "chunk={chunk}");
+            assert_eq!(t.n_buckets, want.n_buckets, "chunk={chunk}");
+            assert_eq!(t.lookup(ids[3]), want.lookup(ids[3]));
+        }
     }
 }

@@ -17,7 +17,10 @@ use std::time::Duration;
 use wlsh_krr::api::{BucketSpec, KernelSpec, KrrError, MethodSpec, PrecondSpec};
 use wlsh_krr::config::KrrConfig;
 use wlsh_krr::coordinator::{serve, ServerConfig, Trainer};
-use wlsh_krr::data::{load_csv, rmse, synthetic_by_name};
+use wlsh_krr::data::{
+    head_sample, load_csv, rmse, synthetic_by_name, CsvSource, DataSource, LibsvmSource,
+    Standardizer,
+};
 use wlsh_krr::kernels::Kernel;
 use wlsh_krr::risk::ose_epsilon_dense;
 use wlsh_krr::runtime::Runtime;
@@ -49,6 +52,8 @@ fn main() {
                         --budget M --scale S --lambda L --n-max N --seed K\n\
                         --precond none|jacobi|nystrom --precond-rank R\n\
                         --cg-verbose=true  (per-iteration CG progress on stderr)\n\
+                        --data-format csv|libsvm --chunk-rows R  (streamed\n\
+                        out-of-core training from --dataset <path>)\n\
                  serve  same dataset/method flags plus --addr HOST:PORT\n\
                  ose    --n N --m M --lambda L --bucket rect|smooth2\n\
                  gp     --cov laplace|se|matern --dim D --n N",
@@ -90,7 +95,7 @@ fn load_dataset(args: &Args) -> Result<wlsh_krr::data::Dataset, KrrError> {
     };
     let seed = args.get_usize("seed", 42) as u64;
     let mut ds = if name.ends_with(".csv") {
-        load_csv(name, -1, name).map_err(KrrError::Io)?
+        load_csv(name, -1, name)?
     } else {
         synthetic_by_name(name, n_max, seed)
             .ok_or_else(|| KrrError::UnknownDataset(name.to_string()))?
@@ -125,6 +130,7 @@ fn config_from(args: &Args) -> Result<KrrConfig, KrrError> {
         precond,
         cg_verbose: args.get_bool("cg-verbose"),
         workers: args.get_usize("workers", d.workers),
+        chunk_rows: args.get_usize("chunk-rows", d.chunk_rows),
         seed: args.get_usize("seed", d.seed as usize) as u64,
     })
 }
@@ -145,7 +151,23 @@ fn cmd_info(_args: &Args) {
     }
 }
 
+/// Append the shared [`TrainReport`] diagnostics fields to a JSON record
+/// (one block for both the in-memory and streamed train outputs).
+fn report_fields(w: JsonWriter, rep: &wlsh_krr::coordinator::TrainReport) -> JsonWriter {
+    w.field_f64("build_secs", rep.build_secs)
+        .field_f64("solve_secs", rep.solve_secs)
+        .field_usize("cg_iters", rep.cg_iters)
+        .field_f64("cg_rel_residual", rep.cg_rel_residual)
+        .field_str("precond", &rep.precond)
+        .field_usize("memory_bytes", rep.memory_bytes)
+        .field_f64("rows_per_sec", rep.rows_per_sec)
+        .field_usize("peak_rss_bytes", rep.peak_rss_bytes)
+}
+
 fn cmd_train(args: &Args) -> Result<(), KrrError> {
+    if let Some(format) = args.get("data-format") {
+        return cmd_train_streamed(args, format);
+    }
     let ds = load_dataset(args)?;
     let cfg = config_from(args)?;
     let n_train = args.get_usize("n-train", (ds.n * 3) / 4);
@@ -158,21 +180,66 @@ fn cmd_train(args: &Args) -> Result<(), KrrError> {
     let pred = model.predict(&te.x);
     let err = rmse(&pred, &te.y);
     let rep = &model.report;
-    println!(
-        "{}",
-        JsonWriter::object()
-            .field_str("dataset", &ds.name)
-            .field_str("operator", &rep.operator)
-            .field_str("method", &model.config.method.to_string())
-            .field_f64("rmse", err)
-            .field_f64("build_secs", rep.build_secs)
-            .field_f64("solve_secs", rep.solve_secs)
-            .field_usize("cg_iters", rep.cg_iters)
-            .field_f64("cg_rel_residual", rep.cg_rel_residual)
-            .field_str("precond", &rep.precond)
-            .field_usize("memory_bytes", rep.memory_bytes)
-            .finish()
+    let record = JsonWriter::object()
+        .field_str("dataset", &ds.name)
+        .field_str("operator", &rep.operator)
+        .field_str("method", &model.config.method.to_string())
+        .field_f64("rmse", err);
+    println!("{}", report_fields(record, rep).finish());
+    Ok(())
+}
+
+/// Open a file-backed chunked source by format name. The format check
+/// runs before any filesystem access so a typo exits 2 without touching
+/// the path.
+fn open_source(path: &str, format: &str) -> Result<Box<dyn DataSource>, KrrError> {
+    match format {
+        "csv" => Ok(Box::new(CsvSource::open(path, -1)?)),
+        "libsvm" => Ok(Box::new(LibsvmSource::open(path)?)),
+        other => Err(KrrError::BadParam(format!(
+            "--data-format wants csv|libsvm, got {other:?}"
+        ))),
+    }
+}
+
+/// Streamed out-of-core training: fit a Welford standardizer on the file
+/// (pass 1), then train chunk by chunk through the standardized view —
+/// the n×d matrix is never materialized. The reported RMSE is over a
+/// held-in-memory sample of the first `--eval-rows` *training* rows
+/// (streamed runs keep no split).
+fn cmd_train_streamed(args: &Args, format: &str) -> Result<(), KrrError> {
+    let cfg = config_from(args)?;
+    // surface --chunk-rows 0 etc. as usage errors before touching the file
+    cfg.validate()?;
+    let path = args.get("dataset").ok_or_else(|| {
+        KrrError::BadParam("--data-format needs --dataset <path>".to_string())
+    })?;
+    let src = open_source(path, format)?;
+    let standardizer = Standardizer::fit(src.as_ref(), cfg.chunk_rows)?;
+    let view = standardizer.source(src.as_ref());
+    eprintln!(
+        "training {} streamed from {} (d={}, rows={}, chunk={})",
+        cfg.method,
+        path,
+        view.dim(),
+        view.len_hint().unwrap_or(0),
+        cfg.chunk_rows
     );
+    let chunk_rows = cfg.chunk_rows;
+    let model = Trainer::new(cfg).train_source(&view)?;
+    let sample = head_sample(&view, args.get_usize("eval-rows", 1000), chunk_rows)?;
+    let pred = model.predict(&sample.x);
+    let err = rmse(&pred, &sample.y);
+    let rep = &model.report;
+    let record = JsonWriter::object()
+        .field_str("dataset", path)
+        .field_str("data_format", format)
+        .field_str("operator", &rep.operator)
+        .field_str("method", &model.config.method.to_string())
+        .field_usize("n_train", model.beta.len())
+        .field_usize("chunk_rows", chunk_rows)
+        .field_f64("train_sample_rmse", err);
+    println!("{}", report_fields(record, rep).finish());
     Ok(())
 }
 

@@ -7,13 +7,23 @@ use std::sync::Arc;
 
 use super::{KrrOperator, Predictor};
 use crate::api::KrrError;
+use crate::data::{DataSource, MatrixSource};
 use crate::kernels::Kernel;
 use crate::linalg::{CholeskyFactor, Matrix};
+use crate::util::par;
 use crate::util::rng::Pcg64;
 
+/// Rows per thread task when evaluating C = K(X, L) in parallel. Fixed so
+/// the decomposition is machine-independent (the evaluation is pure per
+/// row, so any decomposition is bit-identical to the serial loop).
+const C_BLOCK: usize = 128;
+
 /// Nyström sketch with `k` uniformly-sampled landmarks.
+///
+/// The sketch retains only the k×d landmarks and the n×k cross matrix C —
+/// never the n×d training matrix; both in-memory and streamed builds
+/// funnel through the chunked [`build_source`](Self::build_source) path.
 pub struct NystromSketch {
-    x: Vec<f32>,
     n: usize,
     d: usize,
     kernel: Kernel,
@@ -39,6 +49,28 @@ impl NystromSketch {
         seed: u64,
     ) -> Result<NystromSketch, KrrError> {
         assert_eq!(x.len(), n * d);
+        let src = MatrixSource::new("mem", x, d);
+        Self::build_source(&src, k, kernel, seed, n.max(1), 1)
+    }
+
+    /// Streaming build over a re-iterable source: pass 1 collects the
+    /// sampled landmark rows (indices drawn exactly as the in-memory
+    /// constructor draws them), then W factors, then pass 2 evaluates the
+    /// cross matrix C chunk by chunk (rows within a chunk fanned out over
+    /// `workers`). Peak memory is O(chunk·d + n·k + k·d) — the sketch
+    /// itself plus one chunk — and the result is bit-identical to
+    /// [`build`](Self::build) on the materialized rows for every chunk
+    /// size and worker count.
+    pub fn build_source(
+        src: &dyn DataSource,
+        k: usize,
+        kernel: Kernel,
+        seed: u64,
+        chunk_rows: usize,
+        workers: usize,
+    ) -> Result<NystromSketch, KrrError> {
+        let d = src.dim();
+        let n = src.count_rows(chunk_rows)?;
         if k == 0 || k > n {
             return Err(KrrError::BadParam(format!(
                 "nystrom landmark count must be in 1..={n}, got {k}"
@@ -52,9 +84,27 @@ impl NystromSketch {
             let j = i + rng.below((n - i) as u64) as usize;
             idx.swap(i, j);
         }
-        let mut landmarks = Vec::with_capacity(k * d);
-        for &i in idx.iter().take(k) {
-            landmarks.extend_from_slice(&x[i * d..(i + 1) * d]);
+        // landmark slot of each sampled row index, for the collection pass
+        let slot_of: std::collections::HashMap<usize, usize> =
+            idx.iter().take(k).enumerate().map(|(s, &i)| (i, s)).collect();
+        drop(idx);
+        // pass 1: pull the landmark rows out of the stream
+        let mut landmarks = vec![0.0f32; k * d];
+        let mut row0 = 0usize;
+        src.for_each_chunk(chunk_rows, &mut |rows, ys| {
+            for r in 0..ys.len() {
+                if let Some(&s) = slot_of.get(&(row0 + r)) {
+                    landmarks[s * d..(s + 1) * d].copy_from_slice(&rows[r * d..(r + 1) * d]);
+                }
+            }
+            row0 += ys.len();
+            Ok(())
+        })?;
+        if row0 != n {
+            return Err(KrrError::Dataset(format!(
+                "{}: row count changed between passes ({row0} vs {n})",
+                src.name()
+            )));
         }
         let mut w = Matrix::zeros(k, k);
         for a in 0..k {
@@ -67,16 +117,51 @@ impl NystromSketch {
         }
         let w_chol = CholeskyFactor::new(&w, 1e-8 * k as f64)
             .map_err(|e| KrrError::SolveFailed(format!("landmark kernel matrix not PD: {e}")))?;
-        let mut c = vec![0.0f64; n * k];
-        for i in 0..n {
-            for a in 0..k {
-                c[i * k + a] = kernel.eval_f32(
-                    &x[i * d..(i + 1) * d],
-                    &landmarks[a * d..(a + 1) * d],
-                );
+        // pass 2: C = K(X, L), appended in row order chunk by chunk
+        let mut c: Vec<f64> = Vec::with_capacity(n * k);
+        src.for_each_chunk(chunk_rows, &mut |rows, ys| {
+            let q = ys.len();
+            if workers <= 1 || q <= C_BLOCK {
+                // push straight into the reserved c — the whole-matrix
+                // chunk of the in-memory build() must not transiently
+                // double the dominant n×k allocation
+                for r in 0..q {
+                    let xr = &rows[r * d..(r + 1) * d];
+                    for a in 0..k {
+                        c.push(kernel.eval_f32(xr, &landmarks[a * d..(a + 1) * d]));
+                    }
+                }
+            } else {
+                let eval_block = |lo: usize, hi: usize| {
+                    let mut block = Vec::with_capacity((hi - lo) * k);
+                    for r in lo..hi {
+                        let xr = &rows[r * d..(r + 1) * d];
+                        for a in 0..k {
+                            block.push(kernel.eval_f32(xr, &landmarks[a * d..(a + 1) * d]));
+                        }
+                    }
+                    block
+                };
+                let n_blocks = q.div_ceil(C_BLOCK);
+                let pieces = par::fan_out(n_blocks, workers, |b| {
+                    eval_block(b * C_BLOCK, ((b + 1) * C_BLOCK).min(q))
+                });
+                for p in pieces {
+                    c.extend_from_slice(&p);
+                }
             }
+            Ok(())
+        })?;
+        // same TOCTOU guard as pass 1: a file shrinking between passes
+        // must be a clean error, not an out-of-bounds panic in matvec
+        if c.len() != n * k {
+            return Err(KrrError::Dataset(format!(
+                "{}: row count changed between passes ({} vs {n})",
+                src.name(),
+                c.len() / k
+            )));
         }
-        Ok(NystromSketch { x: x.to_vec(), n, d, kernel, landmarks, k, w_chol, c })
+        Ok(NystromSketch { n, d, kernel, landmarks, k, w_chol, c })
     }
 
     /// Factor (K̃ + λI)⁻¹ for use as a CG preconditioner (the rank-k
@@ -182,7 +267,7 @@ impl KrrOperator for NystromSketch {
     }
 
     fn memory_bytes(&self) -> usize {
-        self.x.len() * 4 + self.c.len() * 8 + self.landmarks.len() * 4
+        self.c.len() * 8 + self.landmarks.len() * 4
     }
 }
 

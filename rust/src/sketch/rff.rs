@@ -5,8 +5,17 @@
 use std::sync::Arc;
 
 use super::{KrrOperator, Predictor};
+use crate::api::KrrError;
+use crate::data::DataSource;
 use crate::linalg::dot_f32;
+use crate::util::par;
 use crate::util::rng::Pcg64;
+
+/// Rows per thread task when featurizing a block in parallel. Fixed (never
+/// derived from the thread count) so the work decomposition — and hence
+/// the output — is machine-independent; featurization is pure per row, so
+/// any decomposition is bit-identical to the serial loop anyway.
+const FEAT_BLOCK: usize = 256;
 
 /// RFF sketch of the squared-exponential kernel exp(-‖x-y‖²/s²).
 pub struct RffSketch {
@@ -27,6 +36,14 @@ impl RffSketch {
     /// (γ = 1/scale²).
     pub fn build(x: &[f32], n: usize, d: usize, dd: usize, scale: f64, seed: u64) -> RffSketch {
         assert_eq!(x.len(), n * d);
+        let mut sk = Self::empty(d, dd, scale, seed);
+        sk.z = sk.featurize(x);
+        sk.n = n;
+        sk
+    }
+
+    /// Draw Ω and b for the bandwidth, with no rows featurized yet.
+    fn empty(d: usize, dd: usize, scale: f64, seed: u64) -> RffSketch {
         let mut rng = Pcg64::new(seed, 0);
         let gamma = 1.0 / (scale * scale);
         let sd = (2.0 * gamma).sqrt();
@@ -35,9 +52,61 @@ impl RffSketch {
             .map(|_| rng.uniform_in(0.0, 2.0 * std::f64::consts::PI) as f32)
             .collect();
         let feat_scale = (2.0 / dd as f64).sqrt() as f32;
-        let mut sk = RffSketch { z: Vec::new(), omega, b, n, d, dd, feat_scale };
-        sk.z = sk.featurize(x);
-        sk
+        RffSketch { z: Vec::new(), omega, b, n: 0, d, dd, feat_scale }
+    }
+
+    /// Streaming build: featurize the source chunk by chunk (rows within a
+    /// chunk fanned out over `workers` in fixed `FEAT_BLOCK`-row blocks),
+    /// appending to the n×D feature matrix. Featurization is pure per row,
+    /// so the result is bit-identical to [`build`](Self::build) on the
+    /// materialized rows for every chunk size and worker count; peak
+    /// transient memory is one O(chunk·d) block — the feature matrix
+    /// itself *is* the sketch.
+    pub fn build_source(
+        src: &dyn DataSource,
+        dd: usize,
+        scale: f64,
+        seed: u64,
+        chunk_rows: usize,
+        workers: usize,
+    ) -> Result<RffSketch, KrrError> {
+        let d = src.dim();
+        let mut sk = Self::empty(d, dd, scale, seed);
+        if let Some(n) = src.len_hint() {
+            sk.z.reserve(n * dd);
+        }
+        src.for_each_chunk(chunk_rows, &mut |rows, ys| {
+            sk.append_rows(rows, workers);
+            sk.n += ys.len();
+            Ok(())
+        })?;
+        Ok(sk)
+    }
+
+    /// Featurize a row block and append it to `z`, threading over fixed
+    /// `FEAT_BLOCK`-row sub-blocks and stitching results in order.
+    fn append_rows(&mut self, rows: &[f32], workers: usize) {
+        let q = rows.len() / self.d;
+        if workers <= 1 || q <= FEAT_BLOCK {
+            let feats = self.featurize(rows);
+            self.z.extend_from_slice(&feats);
+            return;
+        }
+        let n_blocks = q.div_ceil(FEAT_BLOCK);
+        let pieces = par::fan_out(n_blocks, workers, |b| {
+            let lo = b * FEAT_BLOCK;
+            let hi = ((b + 1) * FEAT_BLOCK).min(q);
+            self.featurize(&rows[lo * self.d..hi * self.d])
+        });
+        for p in pieces {
+            self.z.extend_from_slice(&p);
+        }
+    }
+
+    /// The n×D feature matrix Z (row-major) — exposed for equivalence
+    /// tests and diagnostics.
+    pub fn features(&self) -> &[f32] {
+        &self.z
     }
 
     /// φ(rows) for row-major input (q×d) → q×D features.

@@ -21,8 +21,9 @@
 use std::sync::Arc;
 
 use super::{KrrOperator, Predictor};
-use crate::api::BucketSpec;
-use crate::lsh::{BucketTable, IdMode, LshFamily, LshFunction};
+use crate::api::{BucketSpec, KrrError};
+use crate::data::{DataSource, MatrixSource};
+use crate::lsh::{BucketTable, BucketTableBuilder, IdMode, LshFamily, LshFunction};
 use crate::util::par;
 use crate::util::rng::Pcg64;
 
@@ -76,13 +77,30 @@ impl WlshInstance {
     }
 }
 
+/// Per-instance accumulator of the streaming build: the sampled hash
+/// function, the incremental bucket renumbering, and the weights gathered
+/// so far. Advanced one shared chunk at a time (instances are mutually
+/// independent, so accumulators thread freely without affecting results).
+struct InstanceAccum {
+    func: LshFunction,
+    builder: BucketTableBuilder,
+    weights: Vec<f32>,
+    /// Reused per-chunk scratch (raw ids / weights of the current chunk).
+    ids_buf: Vec<u64>,
+    w_buf: Vec<f32>,
+    done: Option<WlshInstance>,
+}
+
 /// The averaged m-instance WLSH sketch of the training set.
+///
+/// Memory is O(n) per instance (Lemma 27) — the sketch never retains the
+/// n×d training matrix: every constructor funnels through the chunked
+/// [`build_source`](Self::build_source) assembly, which only ever holds
+/// one O(chunk·d) block of (scaled) rows at a time.
 pub struct WlshSketch {
     pub instances: Vec<WlshInstance>,
     pub family: LshFamily,
     pub mode: IdMode,
-    /// Training rows scaled by 1/scale (hash space).
-    x_scaled: Vec<f32>,
     n: usize,
     /// Kernel bandwidth: data is divided by `scale` before hashing, so the
     /// sketch estimates k_{f,p}((x-y)/scale).
@@ -148,7 +166,10 @@ impl WlshSketch {
         Self::build_spec_mode(x, n, d, m, &spec, gamma_shape, scale, seed, mode)
     }
 
-    /// Fully-typed build: every other constructor funnels through here.
+    /// Fully-typed in-memory build: wraps the slice in a
+    /// [`MatrixSource`] and runs the one chunked assembly path
+    /// ([`build_source`](Self::build_source)) with a single whole-matrix
+    /// chunk.
     #[allow(clippy::too_many_arguments)]
     pub fn build_spec_mode(
         x: &[f32],
@@ -162,48 +183,82 @@ impl WlshSketch {
         mode: IdMode,
     ) -> WlshSketch {
         assert_eq!(x.len(), n * d);
+        let src = MatrixSource::new("mem", x, d);
+        Self::build_source(&src, m, bucket, gamma_shape, scale, seed, mode, n.max(1), 1)
+            .expect("in-memory WLSH build cannot fail")
+    }
+
+    /// Streaming build over a re-iterable chunked source: one pass,
+    /// holding O(chunk·d) scaled rows plus the growing O(n·m) sketch —
+    /// never the n×d matrix. Each chunk is hashed under all m instances
+    /// (the per-instance accumulators fanned out over `workers` threads
+    /// via [`par::fan_out_mut`]), raw ids feed the incremental
+    /// [`BucketTableBuilder`] renumbering, and tables finish with the same
+    /// counting sort as the in-memory constructor — so the result is
+    /// bit-identical to [`build_spec_mode`](Self::build_spec_mode) on the
+    /// materialized rows, for every chunk size and worker count
+    /// (asserted by `tests/stream_equivalence.rs`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_source(
+        src: &dyn DataSource,
+        m: usize,
+        bucket: &BucketSpec,
+        gamma_shape: f64,
+        scale: f64,
+        seed: u64,
+        mode: IdMode,
+        chunk_rows: usize,
+        workers: usize,
+    ) -> Result<WlshSketch, KrrError> {
+        let d = src.dim();
         let mut rng = Pcg64::new(seed, 0);
         let family = LshFamily::new(d, gamma_shape, bucket, &mut rng);
-        let inv = (1.0 / scale) as f32;
-        let x_scaled: Vec<f32> = x.iter().map(|&v| v * inv).collect();
-        let instances = (0..m)
+        let n_hint = src.len_hint().unwrap_or(0);
+        // Sample every instance's hash function up front, in instance
+        // order from per-instance RNG forks — the exact draw sequence of
+        // the in-memory constructor.
+        let mut accums: Vec<InstanceAccum> = (0..m)
             .map(|s| {
                 let mut irng = rng.fork(s as u64);
-                Self::build_instance(&x_scaled, &family, mode, &mut irng)
+                InstanceAccum {
+                    func: family.sample(&mut irng),
+                    builder: BucketTableBuilder::with_capacity(n_hint),
+                    weights: Vec::with_capacity(n_hint),
+                    ids_buf: Vec::new(),
+                    w_buf: Vec::new(),
+                    done: None,
+                }
             })
             .collect();
-        WlshSketch { instances, family, mode, x_scaled, n, scale }
-    }
-
-    /// Assemble a sketch from externally-built parts (the trainer's sharded
-    /// build and the XLA-backend build path).
-    pub fn from_parts(
-        instances: Vec<WlshInstance>,
-        family: LshFamily,
-        mode: IdMode,
-        x_scaled: Vec<f32>,
-        n: usize,
-        scale: f64,
-    ) -> WlshSketch {
-        assert!(instances
-            .iter()
-            .all(|i| i.weights.len() == n && i.weights_csr.len() == n));
-        WlshSketch { instances, family, mode, x_scaled, n, scale }
-    }
-
-    /// Hash + renumber one instance (used by the trainer's worker shards).
-    pub fn build_instance(
-        x_scaled: &[f32],
-        family: &LshFamily,
-        mode: IdMode,
-        rng: &mut Pcg64,
-    ) -> WlshInstance {
-        let func = family.sample(rng);
-        let mut ids = Vec::new();
-        let mut weights = Vec::new();
-        func.hash_batch(x_scaled, family, mode, &mut ids, &mut weights);
-        let table = BucketTable::build(&ids);
-        WlshInstance::new(func, table, weights)
+        let inv = (1.0 / scale) as f32;
+        let mut x_buf: Vec<f32> = Vec::new();
+        let mut n = 0usize;
+        src.for_each_chunk(chunk_rows, &mut |rows, ys| {
+            x_buf.clear();
+            x_buf.extend(rows.iter().map(|&v| v * inv));
+            n += ys.len();
+            par::fan_out_mut(&mut accums, workers, |_, acc| {
+                acc.ids_buf.clear();
+                acc.w_buf.clear();
+                acc.func
+                    .hash_batch(&x_buf, &family, mode, &mut acc.ids_buf, &mut acc.w_buf);
+                for &id in &acc.ids_buf {
+                    acc.builder.push(id);
+                }
+                acc.weights.extend_from_slice(&acc.w_buf);
+            });
+            Ok(())
+        })?;
+        par::fan_out_mut(&mut accums, workers, |_, acc| {
+            let table = std::mem::take(&mut acc.builder).finish();
+            let weights = std::mem::take(&mut acc.weights);
+            acc.done = Some(WlshInstance::new(acc.func.clone(), table, weights));
+        });
+        let instances = accums
+            .into_iter()
+            .map(|a| a.done.expect("instance finalized"))
+            .collect();
+        Ok(WlshSketch { instances, family, mode, n, scale })
     }
 
     pub fn m(&self) -> usize {
@@ -436,14 +491,12 @@ impl KrrOperator for WlshSketch {
     }
 
     fn memory_bytes(&self) -> usize {
-        self.x_scaled.len() * 4
-            + self
-                .instances
-                .iter()
-                .map(|i| {
-                    i.table.memory_bytes() + i.weights.len() * 4 + i.weights_csr.len() * 4
-                })
-                .sum::<usize>()
+        // O(n) words per instance and nothing else: the training matrix is
+        // never retained (Lemma 27).
+        self.instances
+            .iter()
+            .map(|i| i.table.memory_bytes() + i.weights.len() * 4 + i.weights_csr.len() * 4)
+            .sum::<usize>()
     }
 }
 

@@ -6,6 +6,7 @@
 
 pub mod cli;
 pub mod json;
+pub mod mem;
 pub mod par;
 pub mod prop;
 pub mod rng;

@@ -64,6 +64,41 @@ where
     out
 }
 
+/// Apply `f(i, &mut states[i])` for every index, splitting the slice into
+/// contiguous per-worker blocks. The streaming sketch builders use this to
+/// advance m independent per-instance accumulators over one shared data
+/// chunk without collecting intermediate results.
+///
+/// Determinism contract: each state is visited exactly once, by exactly one
+/// thread, and `f` must depend only on `(i, states[i])` plus captured
+/// immutable context — never on which thread runs it — so the final states
+/// are identical for every thread count.
+pub fn fan_out_mut<S, F>(states: &mut [S], threads: usize, f: F)
+where
+    S: Send,
+    F: Fn(usize, &mut S) + Sync,
+{
+    let n = states.len();
+    let workers = if threads > n { n } else { threads };
+    if workers <= 1 {
+        for (i, s) in states.iter_mut().enumerate() {
+            f(i, s);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(workers);
+    let f = &f;
+    std::thread::scope(|scope| {
+        for (w, block) in states.chunks_mut(chunk).enumerate() {
+            scope.spawn(move || {
+                for (k, s) in block.iter_mut().enumerate() {
+                    f(w * chunk + k, s);
+                }
+            });
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -113,5 +148,28 @@ mod tests {
     #[test]
     fn num_threads_is_positive() {
         assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn fan_out_mut_visits_every_state_once_in_place() {
+        for threads in [1usize, 2, 3, 8, 200] {
+            let mut states: Vec<(usize, usize)> = (0..97).map(|i| (i, 0)).collect();
+            fan_out_mut(&mut states, threads, |i, s| {
+                assert_eq!(s.0, i, "index/state mismatch");
+                s.1 += i * i + 1;
+            });
+            for (i, s) in states.iter().enumerate() {
+                assert_eq!(s.1, i * i + 1, "threads={threads} state {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn fan_out_mut_handles_empty_and_tiny_slices() {
+        let mut empty: Vec<usize> = Vec::new();
+        fan_out_mut(&mut empty, 4, |_, _| unreachable!());
+        let mut one = vec![7usize];
+        fan_out_mut(&mut one, 4, |_, s| *s += 1);
+        assert_eq!(one, vec![8]);
     }
 }

@@ -226,6 +226,130 @@ fn bad_numeric_param_is_a_clean_usage_error() {
     assert!(stderr.contains("bad parameter"), "stderr: {stderr}");
 }
 
+/// Write a small well-formed CSV (target = last column) for the streamed
+/// train tests; returns its path as a String.
+fn write_demo_csv(name: &str, rows: usize) -> String {
+    let path = std::env::temp_dir().join(name);
+    let mut text = String::new();
+    for i in 0..rows {
+        let a = (i as f64 * 0.37).sin();
+        let b = (i as f64 * 0.11).cos();
+        let c = 0.01 * i as f64;
+        let y = 2.0 * a - b + 0.3 * c;
+        text.push_str(&format!("{a:.6},{b:.6},{c:.6},{y:.6}\n"));
+    }
+    std::fs::write(&path, text).unwrap();
+    path.to_string_lossy().into_owned()
+}
+
+#[test]
+fn streamed_csv_train_reports_throughput_json() {
+    let path = write_demo_csv("wlsh_cli_stream.csv", 240);
+    let out = run(&[
+        "train",
+        "--dataset",
+        &path,
+        "--data-format",
+        "csv",
+        "--chunk-rows",
+        "32",
+        "--method",
+        "rff",
+        "--budget",
+        "16",
+        "--cg-max-iters",
+        "30",
+        "--seed",
+        "3",
+    ]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let j = last_json(&out);
+    assert_eq!(j.get("data_format").and_then(Json::as_str), Some("csv"));
+    assert_eq!(j.get("chunk_rows").and_then(Json::as_usize), Some(32));
+    assert_eq!(j.get("n_train").and_then(Json::as_usize), Some(240));
+    let rmse = j.get("train_sample_rmse").and_then(Json::as_f64).expect("rmse field");
+    assert!(rmse.is_finite() && rmse >= 0.0, "rmse {rmse}");
+    let rate = j.get("rows_per_sec").and_then(Json::as_f64).expect("rows_per_sec field");
+    assert!(rate > 0.0, "rows_per_sec {rate}");
+    // peak_rss_bytes is best-effort (0 off-Linux) but must be present
+    assert!(j.get("peak_rss_bytes").and_then(Json::as_usize).is_some());
+    assert!(j.get("operator").and_then(Json::as_str).unwrap().contains("rff"));
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn streamed_libsvm_train_round_trips_through_the_sparse_loader() {
+    let path = std::env::temp_dir().join("wlsh_cli_stream.libsvm");
+    let mut text = String::new();
+    for i in 0..200 {
+        let a = (i as f64 * 0.29).sin();
+        let y = 1.5 * a;
+        // sparse row: feature 2 often omitted (zero)
+        if i % 3 == 0 {
+            text.push_str(&format!("{y:.6} 1:{a:.6}\n"));
+        } else {
+            text.push_str(&format!("{y:.6} 1:{a:.6} 2:{:.6}\n", -a));
+        }
+    }
+    std::fs::write(&path, text).unwrap();
+    let p = path.to_string_lossy().into_owned();
+    let out = run(&[
+        "train",
+        "--dataset",
+        &p,
+        "--data-format",
+        "libsvm",
+        "--chunk-rows",
+        "64",
+        "--budget",
+        "8",
+        "--cg-max-iters",
+        "20",
+    ]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let j = last_json(&out);
+    assert_eq!(j.get("data_format").and_then(Json::as_str), Some("libsvm"));
+    assert_eq!(j.get("n_train").and_then(Json::as_usize), Some(200));
+    assert!(j.get("train_sample_rmse").and_then(Json::as_f64).unwrap().is_finite());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn bad_data_format_is_a_clean_usage_error() {
+    let path = write_demo_csv("wlsh_cli_badfmt.csv", 20);
+    let out = run(&["train", "--dataset", &path, "--data-format", "parquet"]);
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("csv|libsvm"), "stderr: {stderr}");
+    assert!(!stderr.contains("panicked"), "stderr: {stderr}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn zero_chunk_rows_is_a_clean_usage_error() {
+    let path = write_demo_csv("wlsh_cli_badchunk.csv", 20);
+    let out = run(&[
+        "train", "--dataset", &path, "--data-format", "csv", "--chunk-rows", "0",
+    ]);
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("chunk_rows"), "stderr: {stderr}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn malformed_streamed_csv_is_a_runtime_error_not_a_panic() {
+    let path = std::env::temp_dir().join("wlsh_cli_ragged.csv");
+    std::fs::write(&path, "1,2,3\n4,5\n").unwrap();
+    let p = path.to_string_lossy().into_owned();
+    let out = run(&["train", "--dataset", &p, "--data-format", "csv"]);
+    assert_eq!(out.status.code(), Some(1));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("bad dataset"), "stderr: {stderr}");
+    assert!(!stderr.contains("panicked"), "stderr: {stderr}");
+    std::fs::remove_file(&path).ok();
+}
+
 #[test]
 fn unknown_subcommand_is_misuse() {
     let out = run(&["definitely-not-a-command"]);

@@ -1,0 +1,210 @@
+//! Stream-vs-memory equivalence: the chunked `DataSource` builds must be
+//! **bit-identical** to the in-memory builds on the same row stream, for
+//! every tested chunk size {1, 7, 64, n} × worker count {1, 2, 8}, for
+//! wlsh / rff / nystrom — including end-to-end CG coefficients through
+//! `Trainer::train` vs `Trainer::train_source`. Exact f64/f32 equality
+//! throughout; no tolerances.
+
+use wlsh_krr::api::MethodSpec;
+use wlsh_krr::config::KrrConfig;
+use wlsh_krr::coordinator::Trainer;
+use wlsh_krr::data::{synthetic_by_name, DataSource, Dataset, SyntheticSource};
+use wlsh_krr::kernels::Kernel;
+use wlsh_krr::lsh::IdMode;
+use wlsh_krr::sketch::{KrrOperator, NystromSketch, RffSketch, WlshSketch};
+use wlsh_krr::util::rng::Pcg64;
+
+const CHUNKS: [usize; 3] = [1, 7, 64];
+const THREADS: [usize; 3] = [1, 2, 8];
+
+fn standardized_wine(n: usize) -> Dataset {
+    let mut ds = synthetic_by_name("wine", Some(n), 11).unwrap();
+    ds.standardize();
+    ds
+}
+
+fn random_beta(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg64::new(seed, 0);
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+#[test]
+fn wlsh_streamed_build_is_bit_identical_to_in_memory() {
+    let ds = standardized_wine(200);
+    let (m, shape, scale, seed) = (16usize, 7.0, 3.0, 5u64);
+    let bucket = "smooth2".parse().unwrap();
+    let want = WlshSketch::build_spec(&ds.x, ds.n, ds.d, m, &bucket, shape, scale, seed);
+    let beta = random_beta(ds.n, 3);
+    let queries = &ds.x[..40 * ds.d];
+    let want_mv = want.matvec_serial(&beta);
+    let want_pred = want.predict(queries, &beta);
+    let want_diag = want.diag_values();
+    for chunk in CHUNKS.into_iter().chain([ds.n]) {
+        for workers in THREADS {
+            let got = WlshSketch::build_source(
+                &ds, m, &bucket, shape, scale, seed, IdMode::U64, chunk, workers,
+            )
+            .unwrap();
+            assert_eq!(got.m(), m);
+            // instance internals: tables, weights, CSR arrays — all equal
+            for (a, b) in want.instances.iter().zip(&got.instances) {
+                let tag = format!("chunk={chunk} workers={workers}");
+                assert_eq!(a.table.bucket_of, b.table.bucket_of, "{tag} bucket_of");
+                assert_eq!(a.table.offsets, b.table.offsets, "{tag} offsets");
+                assert_eq!(a.table.members, b.table.members, "{tag} members");
+                assert_eq!(a.weights, b.weights, "{tag} weights");
+                assert_eq!(a.weights_csr, b.weights_csr, "{tag} weights_csr");
+            }
+            assert_eq!(got.matvec_serial(&beta), want_mv);
+            assert_eq!(got.predict(queries, &beta), want_pred);
+            assert_eq!(got.diag_values(), want_diag);
+        }
+    }
+}
+
+#[test]
+fn rff_streamed_build_is_bit_identical_to_in_memory() {
+    let ds = standardized_wine(200);
+    let (dd, scale, seed) = (64usize, 3.0, 7u64);
+    let want = RffSketch::build(&ds.x, ds.n, ds.d, dd, scale, seed);
+    let beta = random_beta(ds.n, 4);
+    let queries = &ds.x[..40 * ds.d];
+    let want_mv = want.matvec(&beta);
+    let want_pred = want.predict(queries, &beta);
+    for chunk in CHUNKS.into_iter().chain([ds.n]) {
+        for workers in THREADS {
+            let got = RffSketch::build_source(&ds, dd, scale, seed, chunk, workers).unwrap();
+            let tag = format!("chunk={chunk} workers={workers}");
+            assert_eq!(got.features(), want.features(), "{tag} feature matrix");
+            assert_eq!(got.matvec(&beta), want_mv, "{tag} matvec");
+            assert_eq!(got.predict(queries, &beta), want_pred, "{tag} predict");
+        }
+    }
+}
+
+#[test]
+fn nystrom_streamed_build_is_bit_identical_to_in_memory() {
+    let ds = standardized_wine(150);
+    let (k, seed) = (24usize, 9u64);
+    let want =
+        NystromSketch::build(&ds.x, ds.n, ds.d, k, Kernel::squared_exp(3.0), seed).unwrap();
+    let beta = random_beta(ds.n, 5);
+    let queries = &ds.x[..30 * ds.d];
+    let want_mv = want.matvec(&beta);
+    let want_pred = want.predict(queries, &beta);
+    let want_diag = KrrOperator::diag(&want).unwrap();
+    for chunk in CHUNKS.into_iter().chain([ds.n]) {
+        for workers in THREADS {
+            let got =
+                NystromSketch::build_source(&ds, k, Kernel::squared_exp(3.0), seed, chunk, workers)
+                    .unwrap();
+            let tag = format!("chunk={chunk} workers={workers}");
+            assert_eq!(got.matvec(&beta), want_mv, "{tag} matvec");
+            assert_eq!(got.predict(queries, &beta), want_pred, "{tag} predict");
+            assert_eq!(KrrOperator::diag(&got), Some(want_diag.clone()), "{tag} diag");
+        }
+    }
+}
+
+#[test]
+fn end_to_end_cg_coefficients_are_bit_identical_for_every_method() {
+    // train() on the materialized dataset vs train_source() on the same
+    // rows: identical β, report metadata, and predictions — for all three
+    // streaming methods, across chunk sizes and worker counts.
+    let ds = standardized_wine(160);
+    for method in [MethodSpec::Wlsh, MethodSpec::Rff, MethodSpec::Nystrom] {
+        let base = KrrConfig {
+            method,
+            budget: 24,
+            scale: 3.0,
+            lambda: 0.4,
+            cg_max_iters: 60,
+            ..Default::default()
+        };
+        let want = Trainer::new(base.clone()).train(&ds).unwrap();
+        for chunk in CHUNKS.into_iter().chain([ds.n]) {
+            for workers in THREADS {
+                let cfg = KrrConfig { chunk_rows: chunk, workers, ..base.clone() };
+                let got = Trainer::new(cfg).train_source(&ds).unwrap();
+                let tag = format!("{method} chunk={chunk} workers={workers}");
+                assert_eq!(got.beta, want.beta, "{tag} β");
+                assert_eq!(got.report.operator, want.report.operator, "{tag} operator");
+                assert_eq!(got.report.cg_iters, want.report.cg_iters, "{tag} iters");
+                let q = &ds.x[..20 * ds.d];
+                assert_eq!(got.predict(q), want.predict(q), "{tag} predict");
+            }
+        }
+    }
+}
+
+#[test]
+fn preconditioned_streamed_training_matches_in_memory() {
+    // The Nyström preconditioner is itself built from the stream; the
+    // whole preconditioned solve must still be bit-identical.
+    let ds = standardized_wine(150);
+    for precond in ["jacobi", "nystrom(rank=24)"] {
+        let base = KrrConfig {
+            method: MethodSpec::Wlsh,
+            budget: 16,
+            scale: 3.0,
+            lambda: 0.4,
+            precond: precond.parse().unwrap(),
+            cg_max_iters: 80,
+            ..Default::default()
+        };
+        let want = Trainer::new(base.clone()).train(&ds).unwrap();
+        for chunk in [7usize, 64] {
+            let cfg = KrrConfig { chunk_rows: chunk, workers: 2, ..base.clone() };
+            let got = Trainer::new(cfg).train_source(&ds).unwrap();
+            assert_eq!(got.report.precond, want.report.precond, "{precond} chunk={chunk}");
+            assert_eq!(got.beta, want.beta, "{precond} chunk={chunk} β");
+        }
+    }
+}
+
+#[test]
+fn synthetic_source_streams_identically_to_its_materialization() {
+    // An on-the-fly generator (no backing file or matrix) through the
+    // streamed trainer vs the same rows materialized through the
+    // in-memory trainer.
+    let src = SyntheticSource::by_name("wine", 180, 21).unwrap();
+    let ds = src.materialize(64).unwrap();
+    let cfg = KrrConfig {
+        method: MethodSpec::Wlsh,
+        budget: 12,
+        scale: 4.0,
+        lambda: 0.5,
+        cg_max_iters: 40,
+        chunk_rows: 13,
+        workers: 2,
+        ..Default::default()
+    };
+    let want = Trainer::new(cfg.clone()).train(&ds).unwrap();
+    let got = Trainer::new(cfg).train_source(&src).unwrap();
+    assert_eq!(got.beta, want.beta);
+}
+
+#[test]
+fn operator_memory_excludes_the_training_matrix() {
+    // The sketches must not retain O(n·d): on a high-dimensional dataset
+    // their reported footprint undercuts the n×d matrix they used to
+    // carry (wlsh is O(n) per instance regardless of d; nystrom keeps
+    // only C and the landmarks).
+    let mut wide = synthetic_by_name("ctslices", Some(200), 1).unwrap(); // d = 384
+    wide.standardize();
+    let matrix_bytes = wide.n * wide.d * 4;
+    let bucket = "rect".parse().unwrap();
+    let sk = WlshSketch::build_spec(&wide.x, wide.n, wide.d, 8, &bucket, 2.0, 3.0, 2);
+    let wlsh_bytes = sk.memory_bytes();
+    assert!(
+        wlsh_bytes > 0 && wlsh_bytes < matrix_bytes,
+        "wlsh footprint {wlsh_bytes} should undercut the {matrix_bytes}-byte matrix"
+    );
+    let nys = NystromSketch::build(&wide.x, wide.n, wide.d, 10, Kernel::squared_exp(3.0), 3)
+        .unwrap();
+    let nys_bytes = nys.memory_bytes();
+    assert!(
+        nys_bytes > 0 && nys_bytes < matrix_bytes,
+        "nystrom footprint {nys_bytes} should undercut the {matrix_bytes}-byte matrix"
+    );
+}
