@@ -18,7 +18,7 @@ use std::time::{Duration, Instant};
 
 use wlsh_krr::api::MethodSpec;
 use wlsh_krr::config::KrrConfig;
-use wlsh_krr::coordinator::{serve, ServerConfig, Trainer};
+use wlsh_krr::coordinator::{serve, ModelRegistry, ServerConfig, Trainer};
 use wlsh_krr::data::{rmse, synthetic_by_name};
 use wlsh_krr::solver::{solve_krr, CgOptions};
 use wlsh_krr::util::cli::Args;
@@ -121,11 +121,13 @@ fn main() {
         addr: "127.0.0.1:0".into(),
         max_batch: 64,
         linger: Duration::from_micros(300),
-        workers: 1,
+        workers: wlsh_krr::util::par::num_threads(),
+        queue_depth: 1024,
     };
     let d = model.dim();
     let m = model.clone();
-    let server = std::thread::spawn(move || serve(m, scfg, Some(tx)).unwrap());
+    let server =
+        std::thread::spawn(move || serve(ModelRegistry::single(m), scfg, Some(tx)).unwrap());
     let addr = rx.recv().unwrap();
     let n_req = 500.min(test.n);
     let t4 = Instant::now();

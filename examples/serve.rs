@@ -1,7 +1,9 @@
-//! Serving demo: trains a model, starts the TCP JSON-lines server, fires a
-//! concurrent client workload through it, and prints the latency report.
+//! Serving demo: trains a model, starts the worker-pool TCP JSON-lines
+//! server, fires a concurrent client workload (single + batched requests)
+//! through it, and prints the latency report.
 //!
-//! Run with:  cargo run --release --example serve [-- --clients 4 --requests 400]
+//! Run with:
+//!   cargo run --release --example serve [-- --clients 4 --requests 400 --workers 4]
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -9,7 +11,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use wlsh_krr::api::{KrrError, KrrModel, MethodSpec};
-use wlsh_krr::coordinator::{serve, ServerConfig};
+use wlsh_krr::coordinator::{serve, ModelRegistry, ServerConfig};
 use wlsh_krr::data::synthetic_by_name;
 use wlsh_krr::util::cli::Args;
 use wlsh_krr::util::json::Json;
@@ -18,6 +20,7 @@ fn main() -> Result<(), KrrError> {
     let args = Args::from_env();
     let clients = args.get_usize("clients", 4);
     let requests = args.get_usize("requests", 400);
+    let workers = args.get_usize("workers", wlsh_krr::util::par::num_threads());
 
     let mut ds = synthetic_by_name("insurance", Some(3000), 7).expect("dataset");
     ds.standardize();
@@ -37,13 +40,16 @@ fn main() -> Result<(), KrrError> {
         addr: args.get_or("addr", "127.0.0.1:0").to_string(),
         max_batch: args.get_usize("max-batch", 64),
         linger: Duration::from_micros(args.get_usize("linger-us", 300) as u64),
-        workers: 1,
+        workers,
+        queue_depth: args.get_usize("queue-depth", 1024),
     };
     let d = model.dim();
-    let m = model.clone();
-    let server = std::thread::spawn(move || serve(m, scfg, Some(tx)).unwrap());
+    let registry = ModelRegistry::single(model);
+    let server = std::thread::spawn(move || serve(registry, scfg, Some(tx)).unwrap());
     let addr = rx.recv().unwrap();
-    println!("serving on {addr}; {clients} clients × {requests} requests each");
+    println!(
+        "serving on {addr} with {workers} workers; {clients} clients × {requests} requests each"
+    );
 
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
@@ -55,14 +61,29 @@ fn main() -> Result<(), KrrError> {
             let mut conn = TcpStream::connect(&addr).unwrap();
             conn.set_nodelay(true).ok();
             let mut reader = BufReader::new(conn.try_clone().unwrap());
-            for r in 0..requests {
-                let qi = (c * 7919 + r) % nq;
+            let row = |qi: usize| {
                 let feats: Vec<String> =
                     rows[qi * d..(qi + 1) * d].iter().map(|v| format!("{v}")).collect();
-                writeln!(conn, "{{\"features\": [{}]}}", feats.join(",")).unwrap();
-                let mut line = String::new();
-                reader.read_line(&mut line).unwrap();
-                assert!(line.contains("pred"), "bad response: {line}");
+                format!("[{}]", feats.join(","))
+            };
+            for r in 0..requests {
+                if r % 5 == 4 {
+                    // every fifth request: a batch of 4 rows, one reply per row
+                    let idxs: Vec<usize> = (0..4).map(|k| (c * 7919 + r + k) % nq).collect();
+                    let rows_json: Vec<String> = idxs.iter().map(|&qi| row(qi)).collect();
+                    writeln!(conn, "{{\"batch\": [{}]}}", rows_json.join(",")).unwrap();
+                    for _ in &idxs {
+                        let mut line = String::new();
+                        reader.read_line(&mut line).unwrap();
+                        assert!(line.contains("pred"), "bad response: {line}");
+                    }
+                } else {
+                    let qi = (c * 7919 + r) % nq;
+                    writeln!(conn, "{{\"features\": {}}}", row(qi)).unwrap();
+                    let mut line = String::new();
+                    reader.read_line(&mut line).unwrap();
+                    assert!(line.contains("pred"), "bad response: {line}");
+                }
             }
         }));
     }
@@ -80,10 +101,13 @@ fn main() -> Result<(), KrrError> {
     reader.read_line(&mut line).unwrap();
     let stats = Json::parse(&line).unwrap();
     println!(
-        "{total} requests in {secs:.2}s = {:.0} qps | latency p50 {:.0}us p90 {:.0}us p99 {:.0}us",
+        "{total} requests in {secs:.2}s = {:.0} req/s | served {} rows, rejected {} | \
+         latency p50 {:.0}us p95 {:.0}us p99 {:.0}us",
         total as f64 / secs,
+        stats.get("served").and_then(Json::as_usize).unwrap_or(0),
+        stats.get("rejected").and_then(Json::as_usize).unwrap_or(0),
         stats.get("p50_us").and_then(Json::as_f64).unwrap_or(0.0),
-        stats.get("p90_us").and_then(Json::as_f64).unwrap_or(0.0),
+        stats.get("p95_us").and_then(Json::as_f64).unwrap_or(0.0),
         stats.get("p99_us").and_then(Json::as_f64).unwrap_or(0.0),
     );
     writeln!(conn, "{{\"cmd\": \"shutdown\"}}").unwrap();

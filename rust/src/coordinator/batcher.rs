@@ -1,86 +1,314 @@
-//! Dynamic micro-batcher: collects prediction requests until either the
-//! batch-size or the linger-time bound is hit, then hands the whole batch
-//! to the processing closure. Amortizes per-query hashing overhead on the
-//! serving path (paper §4.2: a query costs O(m·d) after batch-hashing).
+//! Worker-pool micro-batcher: the serving engine's compute tier. A bounded
+//! shared queue feeds `workers` batcher threads; each worker collects
+//! requests until the batch-size or linger-time bound is hit, then runs
+//! the whole batch through the model's allocation-free `predict_into`
+//! contract (paper §4.2: a query costs O(m·d) after batch-hashing, and
+//! binning features parallelize across cores — Wu et al., *Revisiting
+//! Random Binning Features*).
+//!
+//! Admission control: the queue depth is a hard bound. A full queue
+//! rejects the submit ([`SubmitError::Overloaded`]) instead of letting
+//! latency grow without limit; the server tier turns that into an
+//! `{"error":"overloaded"}` reply.
+//!
+//! Determinism: every prediction depends only on its own feature rows
+//! (each row is hashed and looked up independently inside
+//! `predict_into`), so results are bit-identical for every worker count,
+//! queue depth, batch boundary, and arrival order —
+//! `tests/serve_pool.rs` asserts this end-to-end through the TCP server.
 
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::mpsc::{self, Sender};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// One queued request: a feature row and the channel to answer on.
+use super::TrainedModel;
+
+/// Batch-prediction surface the pool drives: one prediction per feature
+/// row, written into `out` (the
+/// [`Predictor::predict_into`](crate::sketch::Predictor::predict_into)
+/// contract). Implemented by [`TrainedModel`]; tests substitute slow or
+/// identity models to exercise overload and drain behavior.
+pub trait BatchPredict: Send + Sync {
+    fn predict_rows(&self, rows: &[f32], out: &mut [f64]);
+}
+
+impl BatchPredict for TrainedModel {
+    fn predict_rows(&self, rows: &[f32], out: &mut [f64]) {
+        self.predict_into(rows, out)
+    }
+}
+
+/// One queued request: `nrows` concatenated feature rows bound for
+/// `model`, and the channel to answer on (one prediction per row).
 pub struct BatchItem {
-    pub features: Vec<f32>,
-    pub reply: Sender<f64>,
+    pub rows: Vec<f32>,
+    pub nrows: usize,
+    pub model: Arc<dyn BatchPredict>,
+    pub reply: Sender<Vec<f64>>,
 }
 
-/// Batching queue with a background dispatcher thread.
-pub struct DynamicBatcher {
-    tx: Sender<BatchItem>,
+/// Why a submit did not enter the queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Queue is at its configured depth — shed load instead of queueing.
+    Overloaded,
+    /// The pool has been shut down; no new work is accepted.
+    ShuttingDown,
+    /// The worker dropped the reply channel (worker thread panicked).
+    WorkerGone,
 }
 
-impl DynamicBatcher {
-    /// Spawn the dispatcher. `process` receives the concatenated feature
-    /// rows of a batch and writes one prediction per row into the output
-    /// slice (the contract of
-    /// [`Predictor::predict_into`](crate::sketch::Predictor::predict_into))
-    /// — the dispatcher reuses its row/prediction buffers across batches,
-    /// so steady-state serving allocates nothing per batch.
-    pub fn spawn<F>(d: usize, max_batch: usize, linger: Duration, process: F) -> DynamicBatcher
-    where
-        F: Fn(&[f32], &mut [f64]) + Send + 'static,
-    {
-        let (tx, rx): (Sender<BatchItem>, Receiver<BatchItem>) = mpsc::channel();
-        std::thread::Builder::new()
-            .name("wlsh-batcher".into())
-            .spawn(move || {
-                let mut pending: Vec<BatchItem> = Vec::with_capacity(max_batch);
-                let mut rows: Vec<f32> = Vec::with_capacity(max_batch * d);
-                let mut preds: Vec<f64> = Vec::with_capacity(max_batch);
-                loop {
-                    // block for the first item
-                    match rx.recv() {
-                        Ok(item) => pending.push(item),
-                        Err(_) => return, // all senders dropped
-                    }
-                    let deadline = Instant::now() + linger;
-                    while pending.len() < max_batch {
-                        let now = Instant::now();
-                        if now >= deadline {
-                            break;
-                        }
-                        match rx.recv_timeout(deadline - now) {
-                            Ok(item) => pending.push(item),
-                            Err(RecvTimeoutError::Timeout) => break,
-                            Err(RecvTimeoutError::Disconnected) => break,
-                        }
-                    }
-                    // assemble and process into the reused buffers
-                    rows.clear();
-                    for it in &pending {
-                        debug_assert_eq!(it.features.len(), d);
-                        rows.extend_from_slice(&it.features);
-                    }
-                    preds.clear();
-                    preds.resize(pending.len(), 0.0);
-                    process(&rows, &mut preds);
-                    for (it, p) in pending.drain(..).zip(&preds) {
-                        let _ = it.reply.send(*p); // receiver may have gone away
-                    }
-                }
-            })
-            .expect("spawn batcher");
-        DynamicBatcher { tx }
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::Overloaded => write!(f, "overloaded"),
+            SubmitError::ShuttingDown => write!(f, "shutting down"),
+            SubmitError::WorkerGone => write!(f, "batcher unavailable"),
+        }
+    }
+}
+
+struct Queue {
+    items: VecDeque<BatchItem>,
+    closed: bool,
+}
+
+/// Queue + knobs shared between the pool handle and its worker threads.
+/// Workers hold only this (not the [`WorkerPool`] itself), so dropping the
+/// last pool handle closes and joins them instead of leaking a reference
+/// cycle.
+struct Shared {
+    q: Mutex<Queue>,
+    available: Condvar,
+    depth: usize,
+    max_batch: usize,
+    linger: Duration,
+    workers: usize,
+}
+
+/// Bounded multi-producer queue + `workers` batcher threads with
+/// per-worker reusable row/prediction buffers. Dropping the last handle
+/// (or calling [`shutdown`](Self::shutdown)) closes the queue, drains it,
+/// and joins the workers.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` batcher threads over a queue bounded at `depth`
+    /// items. Each worker gathers up to `max_batch` items per cycle,
+    /// waiting at most `linger` for stragglers after the first.
+    pub fn spawn(
+        workers: usize,
+        depth: usize,
+        max_batch: usize,
+        linger: Duration,
+    ) -> Arc<WorkerPool> {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            q: Mutex::new(Queue { items: VecDeque::new(), closed: false }),
+            available: Condvar::new(),
+            depth: depth.max(1),
+            max_batch: max_batch.max(1),
+            linger,
+            workers,
+        });
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let s = Arc::clone(&shared);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("wlsh-worker-{w}"))
+                    .spawn(move || s.run())
+                    .expect("spawn pool worker"),
+            );
+        }
+        Arc::new(WorkerPool { shared, handles: Mutex::new(handles) })
     }
 
-    /// Enqueue one request; blocks until the batch containing it is served.
-    pub fn predict(&self, features: Vec<f32>) -> Option<f64> {
+    /// Number of batcher threads.
+    pub fn workers(&self) -> usize {
+        self.shared.workers
+    }
+
+    /// Most rows/items a worker fuses into one cycle (also the server's
+    /// per-request batch cap).
+    pub fn max_batch(&self) -> usize {
+        self.shared.max_batch
+    }
+
+    /// Requests currently queued (not yet picked up by a worker).
+    pub fn queue_len(&self) -> usize {
+        self.shared.q.lock().unwrap().items.len()
+    }
+
+    /// Enqueue one request without blocking. A full queue or a closed pool
+    /// rejects immediately — admission control happens here, not by
+    /// letting the queue grow.
+    pub fn submit(&self, item: BatchItem) -> Result<(), SubmitError> {
+        {
+            let mut q = self.shared.q.lock().unwrap();
+            if q.closed {
+                return Err(SubmitError::ShuttingDown);
+            }
+            if q.items.len() >= self.shared.depth {
+                return Err(SubmitError::Overloaded);
+            }
+            q.items.push_back(item);
+        }
+        self.shared.available.notify_one();
+        Ok(())
+    }
+
+    /// Submit `nrows` concatenated feature rows and block until the batch
+    /// containing them is served. One prediction per row, in row order.
+    pub fn predict(
+        &self,
+        model: Arc<dyn BatchPredict>,
+        rows: Vec<f32>,
+        nrows: usize,
+    ) -> Result<Vec<f64>, SubmitError> {
         let (reply, rx) = mpsc::channel();
-        self.tx.send(BatchItem { features, reply }).ok()?;
-        rx.recv().ok()
+        self.submit(BatchItem { rows, nrows, model, reply })?;
+        rx.recv().map_err(|_| SubmitError::WorkerGone)
     }
 
-    /// Clone a submitter handle (for per-connection threads).
-    pub fn handle(&self) -> Sender<BatchItem> {
-        self.tx.clone()
+    /// Deterministic shutdown: stop admitting, wake every worker, and join
+    /// them. Workers drain whatever is already queued before exiting, so
+    /// every accepted request still gets its reply. Idempotent (and run by
+    /// `Drop`, so an abandoned pool cannot leak its threads).
+    pub fn shutdown(&self) {
+        {
+            let mut q = self.shared.q.lock().unwrap();
+            q.closed = true;
+        }
+        self.shared.available.notify_all();
+        let handles = std::mem::take(&mut *self.handles.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl Shared {
+    fn run(&self) {
+        let mut pending: Vec<BatchItem> = Vec::with_capacity(self.max_batch);
+        // per-worker reusable buffers: steady-state serving allocates only
+        // the per-request reply vectors
+        let mut rows: Vec<f32> = Vec::new();
+        let mut preds: Vec<f64> = Vec::new();
+        while self.next_batch(&mut pending) {
+            // a panicking model (bad BatchPredict impl, inconsistent
+            // nrows) must not kill the worker: callers blocked on queued
+            // items would hang forever with no one left to pop them.
+            // Catch, drop the batch's reply senders (callers see
+            // WorkerGone), and keep serving.
+            let batch = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                self.process(&mut pending, &mut rows, &mut preds)
+            }));
+            if batch.is_err() {
+                pending.clear();
+            }
+        }
+    }
+
+    /// Fill `pending` with the next batch. Returns `false` only when the
+    /// pool is closed AND the queue is fully drained.
+    fn next_batch(&self, pending: &mut Vec<BatchItem>) -> bool {
+        let mut q = self.q.lock().unwrap();
+        // block for the first item (drain-then-exit once closed)
+        loop {
+            if let Some(it) = q.items.pop_front() {
+                pending.push(it);
+                break;
+            }
+            if q.closed {
+                return false;
+            }
+            q = self.available.wait(q).unwrap();
+        }
+        while pending.len() < self.max_batch {
+            match q.items.pop_front() {
+                Some(it) => pending.push(it),
+                None => break,
+            }
+        }
+        if pending.len() >= self.max_batch || self.linger.is_zero() {
+            return true;
+        }
+        // linger for stragglers up to the deadline (or until closed)
+        let deadline = Instant::now() + self.linger;
+        loop {
+            if q.closed {
+                return true;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return true;
+            }
+            let (guard, _timeout) = self.available.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+            while pending.len() < self.max_batch {
+                match q.items.pop_front() {
+                    Some(it) => pending.push(it),
+                    None => break,
+                }
+            }
+            if pending.len() >= self.max_batch {
+                return true;
+            }
+        }
+    }
+
+    /// Run one gathered batch: consecutive items bound for the same model
+    /// share a single `predict_rows` call over the concatenated rows
+    /// (per-row results are independent, so fusing request boundaries is
+    /// bit-transparent), then each item gets its slice of predictions.
+    /// Fused calls are bounded by `max_batch` *rows* (not just items), so
+    /// a run of batch requests can't push one `predict_rows` call past
+    /// the predict kernel's serial threshold and nest its threading
+    /// inside the worker's.
+    fn process(&self, pending: &mut Vec<BatchItem>, rows: &mut Vec<f32>, preds: &mut Vec<f64>) {
+        // Arc identity via the data pointer (distinct Arc allocations have
+        // distinct addresses) — avoids comparing trait-object vtables,
+        // which are not guaranteed unique.
+        let model_id = |it: &BatchItem| Arc::as_ptr(&it.model) as *const ();
+        let mut i = 0;
+        while i < pending.len() {
+            let mut total = pending[i].nrows;
+            let mut j = i + 1;
+            while j < pending.len()
+                && std::ptr::eq(model_id(&pending[j]), model_id(&pending[i]))
+                && total + pending[j].nrows <= self.max_batch
+            {
+                total += pending[j].nrows;
+                j += 1;
+            }
+            rows.clear();
+            for it in &pending[i..j] {
+                rows.extend_from_slice(&it.rows);
+            }
+            preds.clear();
+            preds.resize(total, 0.0);
+            pending[i].model.predict_rows(rows, preds);
+            let mut off = 0;
+            for it in &pending[i..j] {
+                // receiver may have gone away; losing that send is fine
+                let _ = it.reply.send(preds[off..off + it.nrows].to_vec());
+                off += it.nrows;
+            }
+            i = j;
+        }
+        pending.clear();
     }
 }
 
@@ -88,61 +316,216 @@ impl DynamicBatcher {
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
-    use std::sync::Arc;
+
+    /// prediction = first feature of the row × 2 (arity `d`).
+    struct Doubler {
+        d: usize,
+        batches: AtomicUsize,
+    }
+
+    impl BatchPredict for Doubler {
+        fn predict_rows(&self, rows: &[f32], out: &mut [f64]) {
+            self.batches.fetch_add(1, Ordering::SeqCst);
+            for (r, o) in rows.chunks(self.d).zip(out) {
+                *o = r[0] as f64 * 2.0;
+            }
+        }
+    }
+
+    /// sleeps per batch, then echoes the row's first feature.
+    struct Sleeper {
+        ms: u64,
+    }
+
+    impl BatchPredict for Sleeper {
+        fn predict_rows(&self, rows: &[f32], out: &mut [f64]) {
+            std::thread::sleep(Duration::from_millis(self.ms));
+            for (r, o) in rows.iter().zip(out) {
+                *o = *r as f64;
+            }
+        }
+    }
 
     #[test]
     fn answers_are_matched_to_requests() {
-        // identity-ish processor: prediction = first feature * 2
-        let b = DynamicBatcher::spawn(2, 8, Duration::from_millis(2), |rows, out| {
-            for (r, o) in rows.chunks(2).zip(out) {
-                *o = r[0] as f64 * 2.0;
-            }
-        });
-        let y = b.predict(vec![3.0, 0.0]).unwrap();
-        assert_eq!(y, 6.0);
-        let y2 = b.predict(vec![-1.5, 9.0]).unwrap();
-        assert_eq!(y2, -3.0);
+        let model: Arc<dyn BatchPredict> =
+            Arc::new(Doubler { d: 2, batches: AtomicUsize::new(0) });
+        let pool = WorkerPool::spawn(2, 64, 8, Duration::from_millis(2));
+        let y = pool.predict(model.clone(), vec![3.0, 0.0], 1).unwrap();
+        assert_eq!(y, vec![6.0]);
+        let y2 = pool.predict(model.clone(), vec![-1.5, 9.0, 4.0, 1.0], 2).unwrap();
+        assert_eq!(y2, vec![-3.0, 8.0]);
+        pool.shutdown();
+        // post-shutdown submits are refused, not queued
+        assert_eq!(
+            pool.predict(model, vec![1.0, 0.0], 1),
+            Err(SubmitError::ShuttingDown)
+        );
     }
 
     #[test]
     fn batches_multiple_concurrent_requests() {
-        let batches = Arc::new(AtomicUsize::new(0));
-        let bclone = batches.clone();
-        let b = Arc::new(DynamicBatcher::spawn(
-            1,
-            64,
-            Duration::from_millis(30),
-            move |rows, out| {
-                bclone.fetch_add(1, Ordering::SeqCst);
-                for (r, o) in rows.iter().zip(out) {
-                    *o = *r as f64;
-                }
-            },
-        ));
+        let doubler = Arc::new(Doubler { d: 1, batches: AtomicUsize::new(0) });
+        let model: Arc<dyn BatchPredict> = doubler.clone();
+        let pool = WorkerPool::spawn(1, 1024, 64, Duration::from_millis(30));
         let mut handles = Vec::new();
         for i in 0..16 {
-            let bb = b.clone();
+            let p = pool.clone();
+            let m = model.clone();
             handles.push(std::thread::spawn(move || {
-                bb.predict(vec![i as f32]).unwrap()
+                p.predict(m, vec![i as f32], 1).unwrap()[0]
             }));
         }
         let mut results: Vec<f64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
         results.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        assert_eq!(results, (0..16).map(|i| i as f64).collect::<Vec<_>>());
-        // all 16 should have been served in far fewer than 16 batches
-        assert!(batches.load(Ordering::SeqCst) <= 8, "batches {}", batches.load(Ordering::SeqCst));
+        assert_eq!(results, (0..16).map(|i| i as f64 * 2.0).collect::<Vec<_>>());
+        // far fewer batches than requests: the linger window coalesced them
+        let batches = doubler.batches.load(Ordering::SeqCst);
+        assert!(batches <= 8, "batches {batches}");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn full_queue_rejects_with_overloaded() {
+        let model: Arc<dyn BatchPredict> = Arc::new(Sleeper { ms: 300 });
+        let pool = WorkerPool::spawn(1, 1, 1, Duration::ZERO);
+        // occupy the single worker
+        let p = pool.clone();
+        let m = model.clone();
+        let busy = std::thread::spawn(move || p.predict(m, vec![1.0], 1).unwrap());
+        // give the worker time to pick the first item up
+        std::thread::sleep(Duration::from_millis(100));
+        // fill the queue (depth 1) ...
+        let (reply, rx_queued) = mpsc::channel();
+        pool.submit(BatchItem { rows: vec![2.0], nrows: 1, model: model.clone(), reply })
+            .expect("first queued item fits");
+        // ... and the next submit is shed, not queued
+        let (reply2, _rx) = mpsc::channel();
+        let err = pool
+            .submit(BatchItem { rows: vec![3.0], nrows: 1, model: model.clone(), reply: reply2 })
+            .unwrap_err();
+        assert_eq!(err, SubmitError::Overloaded);
+        assert_eq!(busy.join().unwrap(), vec![1.0]);
+        assert_eq!(rx_queued.recv().unwrap(), vec![2.0]);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_queued_items_before_exiting() {
+        let model: Arc<dyn BatchPredict> = Arc::new(Sleeper { ms: 50 });
+        let pool = WorkerPool::spawn(1, 64, 1, Duration::ZERO);
+        let mut rxs = Vec::new();
+        // first item occupies the worker; the rest sit in the queue
+        for i in 0..5 {
+            let (reply, rx) = mpsc::channel();
+            pool.submit(BatchItem {
+                rows: vec![i as f32],
+                nrows: 1,
+                model: model.clone(),
+                reply,
+            })
+            .unwrap();
+            rxs.push(rx);
+        }
+        pool.shutdown(); // must drain all 5, then join
+        for (i, rx) in rxs.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap(), vec![i as f64], "item {i} lost in shutdown");
+        }
+        // double shutdown is a no-op
+        pool.shutdown();
+    }
+
+    #[test]
+    fn mixed_model_batches_group_by_model() {
+        let a: Arc<dyn BatchPredict> = Arc::new(Doubler { d: 1, batches: AtomicUsize::new(0) });
+        let b: Arc<dyn BatchPredict> = Arc::new(Sleeper { ms: 0 });
+        let pool = WorkerPool::spawn(2, 64, 16, Duration::from_millis(5));
+        let mut handles = Vec::new();
+        for i in 0..12 {
+            let p = pool.clone();
+            let m = if i % 2 == 0 { a.clone() } else { b.clone() };
+            handles.push(std::thread::spawn(move || {
+                (i, p.predict(m, vec![i as f32], 1).unwrap()[0])
+            }));
+        }
+        for h in handles {
+            let (i, y) = h.join().unwrap();
+            let want = if i % 2 == 0 { i as f64 * 2.0 } else { i as f64 };
+            assert_eq!(y, want, "request {i}");
+        }
+        pool.shutdown();
+    }
+
+    /// echoes rows, panicking when it sees the trigger value.
+    struct PanicOn {
+        trigger: f32,
+    }
+
+    impl BatchPredict for PanicOn {
+        fn predict_rows(&self, rows: &[f32], out: &mut [f64]) {
+            for (r, o) in rows.iter().zip(out) {
+                assert!(*r != self.trigger, "boom");
+                *o = *r as f64;
+            }
+        }
+    }
+
+    #[test]
+    fn worker_survives_a_panicking_model() {
+        let model: Arc<dyn BatchPredict> = Arc::new(PanicOn { trigger: 13.0 });
+        // max_batch 1 isolates the poisoned request in its own batch
+        let pool = WorkerPool::spawn(1, 64, 1, Duration::ZERO);
+        assert_eq!(pool.predict(model.clone(), vec![1.0], 1), Ok(vec![1.0]));
+        assert_eq!(pool.predict(model.clone(), vec![13.0], 1), Err(SubmitError::WorkerGone));
+        // the worker caught the panic and keeps serving
+        assert_eq!(pool.predict(model.clone(), vec![2.0], 1), Ok(vec![2.0]));
+        pool.shutdown();
+    }
+
+    /// echoes rows, recording the largest fused call it ever saw.
+    struct MaxRows {
+        max: AtomicUsize,
+    }
+
+    impl BatchPredict for MaxRows {
+        fn predict_rows(&self, rows: &[f32], out: &mut [f64]) {
+            self.max.fetch_max(out.len(), Ordering::SeqCst);
+            for (r, o) in rows.iter().zip(out) {
+                *o = *r as f64;
+            }
+        }
+    }
+
+    #[test]
+    fn fused_calls_respect_the_row_budget() {
+        let mr = Arc::new(MaxRows { max: AtomicUsize::new(0) });
+        let model: Arc<dyn BatchPredict> = mr.clone();
+        // 3-row items against a 4-row budget: no two items may fuse
+        let pool = WorkerPool::spawn(1, 1024, 4, Duration::from_millis(20));
+        let mut handles = Vec::new();
+        for i in 0..10 {
+            let p = pool.clone();
+            let m = model.clone();
+            handles.push(std::thread::spawn(move || {
+                p.predict(m, vec![i as f32, 0.0, 0.0], 3).unwrap()
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap().len(), 3);
+        }
+        let seen = mr.max.load(Ordering::SeqCst);
+        assert!(seen <= 4, "fused call of {seen} rows exceeded the 4-row budget");
+        pool.shutdown();
     }
 
     #[test]
     fn linger_bound_releases_partial_batches() {
-        let b = DynamicBatcher::spawn(1, 1_000_000, Duration::from_millis(5), |rows, out| {
-            for (r, o) in rows.iter().zip(out) {
-                *o = *r as f64;
-            }
-        });
+        let model: Arc<dyn BatchPredict> = Arc::new(Sleeper { ms: 0 });
+        let pool = WorkerPool::spawn(1, 64, 1_000_000, Duration::from_millis(5));
         let t = Instant::now();
-        let y = b.predict(vec![7.0]).unwrap();
-        assert_eq!(y, 7.0);
+        let y = pool.predict(model, vec![7.0], 1).unwrap();
+        assert_eq!(y, vec![7.0]);
         assert!(t.elapsed() < Duration::from_secs(2));
+        pool.shutdown();
     }
 }

@@ -9,6 +9,13 @@
 //! strings, parsed back through their `FromStr` impls — the same grammar
 //! the CLI and TOML use. Headers written before the typed API (bare
 //! `precond` + separate `precond_rank` key) still load.
+//!
+//! The serving tier is built on these files: `serve --model name=path`
+//! loads named checkpoints into the
+//! [`ModelRegistry`](crate::coordinator::ModelRegistry), and the
+//! protocol's `reload` command hot-swaps one atomically — both through a
+//! loader closure over the same training split the checkpoint was saved
+//! against (`load` rejects a mismatched `n`).
 
 use std::io::{Read, Write};
 use std::path::Path;

@@ -1,17 +1,21 @@
 //! L3 coordinator — the serving/training framework around the WLSH
 //! estimator: a trainer that shards sketch construction across workers and
 //! runs the CG solve, a router that fans prediction batches out over
-//! worker threads, a dynamic micro-batcher, and a TCP JSON-lines
-//! prediction server. (std threads + channels; tokio is unavailable in the
-//! offline registry — DESIGN.md §5.)
+//! worker threads, a worker-pool serving engine (bounded request queue →
+//! batcher threads, with admission control), a named model registry with
+//! atomic hot-reload, and a TCP JSON-lines prediction server. (std
+//! threads + channels; tokio is unavailable in the offline registry —
+//! DESIGN.md §5.)
 
 mod batcher;
 pub mod checkpoint;
+mod registry;
 mod router;
 mod server;
 mod trainer;
 
-pub use batcher::{BatchItem, DynamicBatcher};
+pub use batcher::{BatchItem, BatchPredict, SubmitError, WorkerPool};
+pub use registry::{ModelLoader, ModelRegistry, ModelStats, DEFAULT_MODEL};
 pub use router::PredictRouter;
 pub use server::{serve, ServerConfig, ServerStats};
 pub use trainer::{TrainReport, TrainedModel, Trainer};

@@ -1,0 +1,246 @@
+//! Named model registry for the serving tier: multiple checkpoints served
+//! side by side, routed by the request's optional `"model"` field, with
+//! atomic hot-reload.
+//!
+//! Swapping a model is one `Arc` store under a write lock: in-flight
+//! requests keep the `Arc` they already resolved (they finish on the old
+//! model), new requests see the new one, and no connection is dropped.
+//! Per-model serving stats live beside the models and survive swaps, so a
+//! hot-reload does not reset a model's served count.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+use super::TrainedModel;
+use crate::api::KrrError;
+use crate::metrics::{Counter, LatencyHistogram};
+
+/// Name a request routes to when it carries no `"model"` field and more
+/// than one model is registered.
+pub const DEFAULT_MODEL: &str = "default";
+
+/// Per-model serving counters (persist across hot-reloads of the model).
+pub struct ModelStats {
+    /// Predictions served (rows, not requests — a batch of 8 counts 8).
+    pub served: Counter,
+    pub latency: LatencyHistogram,
+}
+
+impl ModelStats {
+    fn new() -> ModelStats {
+        ModelStats { served: Counter::default(), latency: LatencyHistogram::new(4096) }
+    }
+}
+
+/// Checkpoint loader the `reload` protocol command calls: path → servable
+/// model. Supplied by the host (it knows the training dataset a
+/// checkpoint rebuilds against); without one, `reload` is refused.
+pub type ModelLoader = dyn Fn(&str) -> Result<Arc<TrainedModel>, KrrError> + Send + Sync;
+
+/// One registry slot: the servable model plus its persistent stats (the
+/// stats `Arc` survives model swaps, so hot-reloads don't reset counts).
+struct Entry {
+    model: Arc<TrainedModel>,
+    stats: Arc<ModelStats>,
+}
+
+/// Thread-safe name → model map with optional checkpoint loader.
+pub struct ModelRegistry {
+    models: RwLock<BTreeMap<String, Entry>>,
+    loader: Option<Box<ModelLoader>>,
+}
+
+impl Default for ModelRegistry {
+    fn default() -> Self {
+        ModelRegistry::new()
+    }
+}
+
+impl ModelRegistry {
+    /// Empty registry without a checkpoint loader (`reload` is refused).
+    pub fn new() -> ModelRegistry {
+        ModelRegistry { models: RwLock::new(BTreeMap::new()), loader: None }
+    }
+
+    /// Empty registry whose `reload` command loads checkpoints through
+    /// `loader`.
+    pub fn with_loader(loader: Box<ModelLoader>) -> ModelRegistry {
+        ModelRegistry { loader: Some(loader), ..ModelRegistry::new() }
+    }
+
+    /// One-model registry under [`DEFAULT_MODEL`] — the common case for
+    /// benches/tests and the train-then-serve CLI path.
+    pub fn single(model: Arc<TrainedModel>) -> Arc<ModelRegistry> {
+        let r = ModelRegistry::new();
+        r.insert(DEFAULT_MODEL, model);
+        Arc::new(r)
+    }
+
+    /// Register (or atomically replace) `name`. Returns the previous
+    /// model, if any. In-flight requests holding the old `Arc` finish on
+    /// it; the swap drops no connection and keeps the slot's stats.
+    pub fn insert(&self, name: &str, model: Arc<TrainedModel>) -> Option<Arc<TrainedModel>> {
+        let mut models = self.models.write().unwrap();
+        match models.get_mut(name) {
+            Some(entry) => Some(std::mem::replace(&mut entry.model, model)),
+            None => {
+                models.insert(
+                    name.to_string(),
+                    Entry { model, stats: Arc::new(ModelStats::new()) },
+                );
+                None
+            }
+        }
+    }
+
+    /// Resolve a request's optional model name to
+    /// `(name, model, stats)`: an explicit name looks up exactly that
+    /// entry; no name routes to the single registered model, or to
+    /// [`DEFAULT_MODEL`] when several are registered. One read-lock
+    /// acquisition, two `Arc` clones, and one small name allocation —
+    /// this sits on the per-request hot path.
+    #[allow(clippy::type_complexity)]
+    pub fn resolve(
+        &self,
+        name: Option<&str>,
+    ) -> Option<(String, Arc<TrainedModel>, Arc<ModelStats>)> {
+        let models = self.models.read().unwrap();
+        let (n, e) = match name {
+            Some(n) => (n, models.get(n)?),
+            None => {
+                if models.len() == 1 {
+                    let (n, e) = models.iter().next().unwrap();
+                    (n.as_str(), e)
+                } else {
+                    (DEFAULT_MODEL, models.get(DEFAULT_MODEL)?)
+                }
+            }
+        };
+        Some((n.to_string(), Arc::clone(&e.model), Arc::clone(&e.stats)))
+    }
+
+    /// The persistent stats slot for a registered model.
+    pub fn stats_for(&self, name: &str) -> Option<Arc<ModelStats>> {
+        self.models.read().unwrap().get(name).map(|e| Arc::clone(&e.stats))
+    }
+
+    /// Registered model names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.models.read().unwrap().keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.read().unwrap().is_empty()
+    }
+
+    /// Hot-reload `name` from a checkpoint at `path` through the
+    /// configured loader. Only names that are already registered can be
+    /// reloaded — a typo'd name must fail loudly, not silently grow the
+    /// registry while stale traffic keeps hitting the old model (and the
+    /// check runs before the expensive O(dn·m) checkpoint rebuild). The
+    /// load happens outside the registry lock; only the final pointer
+    /// swap serializes with readers.
+    pub fn reload(&self, name: &str, path: &str) -> Result<(), KrrError> {
+        let loader = self.loader.as_ref().ok_or_else(|| {
+            KrrError::BadParam("reload unavailable: server started without a model loader".into())
+        })?;
+        if !self.models.read().unwrap().contains_key(name) {
+            return Err(KrrError::BadParam(format!(
+                "reload of unregistered model {name:?} (serving: {})",
+                self.names().join(", ")
+            )));
+        }
+        let model = loader(path)?;
+        self.insert(name, model);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::MethodSpec;
+    use crate::config::KrrConfig;
+    use crate::coordinator::Trainer;
+    use crate::data::synthetic_by_name;
+
+    fn tiny_model(budget: usize) -> Arc<TrainedModel> {
+        let mut ds = synthetic_by_name("wine", Some(120), 1).unwrap();
+        ds.standardize();
+        let cfg = KrrConfig {
+            method: MethodSpec::Wlsh,
+            budget,
+            scale: 3.0,
+            ..Default::default()
+        };
+        Arc::new(Trainer::new(cfg).train(&ds).unwrap())
+    }
+
+    #[test]
+    fn resolve_routes_by_name_and_defaults() {
+        let a = tiny_model(4);
+        let b = tiny_model(8);
+        let r = ModelRegistry::new();
+        assert!(r.resolve(None).is_none());
+        r.insert("a", a.clone());
+        // single model: no name needed, whatever it is called
+        let (name, m, _) = r.resolve(None).unwrap();
+        assert_eq!(name, "a");
+        assert!(Arc::ptr_eq(&m, &a));
+        r.insert(DEFAULT_MODEL, b.clone());
+        // several models: bare requests go to "default", names still work
+        let (name, m, _) = r.resolve(None).unwrap();
+        assert_eq!(name, DEFAULT_MODEL);
+        assert!(Arc::ptr_eq(&m, &b));
+        assert!(Arc::ptr_eq(&r.resolve(Some("a")).unwrap().1, &a));
+        assert!(r.resolve(Some("missing")).is_none());
+        assert!(r.stats_for("missing").is_none());
+        assert_eq!(r.names(), vec!["a".to_string(), DEFAULT_MODEL.to_string()]);
+    }
+
+    #[test]
+    fn insert_swaps_atomically_and_stats_persist() {
+        let v1 = tiny_model(4);
+        let v2 = tiny_model(8);
+        let r = ModelRegistry::new();
+        r.insert(DEFAULT_MODEL, v1.clone());
+        r.stats_for(DEFAULT_MODEL).unwrap().served.add(5);
+        let prev = r.insert(DEFAULT_MODEL, v2.clone()).unwrap();
+        assert!(Arc::ptr_eq(&prev, &v1));
+        assert!(Arc::ptr_eq(&r.resolve(None).unwrap().1, &v2));
+        // the old handle still predicts — in-flight requests are safe
+        let q = vec![0.0f32; prev.dim()];
+        assert_eq!(prev.predict(&q).len(), 1);
+        // served count survived the swap (the slot's stats Arc is kept)
+        assert_eq!(r.stats_for(DEFAULT_MODEL).unwrap().served.get(), 5);
+    }
+
+    #[test]
+    fn reload_without_loader_is_refused() {
+        let r = ModelRegistry::new();
+        let err = r.reload(DEFAULT_MODEL, "/nonexistent").unwrap_err();
+        assert!(matches!(err, KrrError::BadParam(_)), "{err}");
+    }
+
+    #[test]
+    fn reload_through_loader_swaps_the_model() {
+        let v2 = tiny_model(8);
+        let v2c = v2.clone();
+        let r = ModelRegistry::with_loader(Box::new(move |path: &str| {
+            assert_eq!(path, "ckpt-v2");
+            Ok(v2c.clone())
+        }));
+        r.insert(DEFAULT_MODEL, tiny_model(4));
+        r.reload(DEFAULT_MODEL, "ckpt-v2").unwrap();
+        assert!(Arc::ptr_eq(&r.resolve(None).unwrap().1, &v2));
+        // a typo'd name errors (before the loader runs) instead of
+        // silently registering a new entry
+        let err = r.reload("defaultt", "ckpt-v2").unwrap_err();
+        assert!(matches!(err, KrrError::BadParam(_)), "{err}");
+        assert_eq!(r.names(), vec![DEFAULT_MODEL.to_string()]);
+    }
+}

@@ -1,7 +1,9 @@
-//! Prediction router: fans a batch of queries out over worker threads,
-//! each holding a shared reference to the trained model, and collects the
-//! results in order. Structural on a 1-core box, but the sharding keeps
-//! the serving path scalable and is exercised by the tests/benches.
+//! Prediction router: fans one large *offline* batch of queries out over
+//! worker threads, each holding a shared reference to the trained model,
+//! and collects the results in order. This is the bulk-scoring
+//! counterpart to the online [`WorkerPool`](super::WorkerPool) engine
+//! (which batches many small concurrent requests); both bound their own
+//! threading so parallelism never nests.
 
 use std::sync::Arc;
 

@@ -1,31 +1,51 @@
 //! TCP JSON-lines prediction server (the request path).
 //!
 //! Protocol (one JSON object per line):
-//!   → {"features": [f1, f2, ...]}
-//!   ← {"pred": 1.234}           | {"error": "..."}
-//!   → {"cmd": "stats"}          ← {"served": n, "p50_us": ..., ...}
-//!   → {"cmd": "shutdown"}       ← {"ok": true}   (stops accepting)
+//!   → {"features": [f1, ...], "model": "m"?}  ← {"pred": 1.234} | {"error": "..."}
+//!   → {"batch": [[...], ...], "model": "m"?}  ← one {"pred": ...} line per row, in order
+//!   → {"cmd": "stats"}                        ← {"served": ..., "rejected": ...,
+//!                                                "queue_depth": ..., "workers": ...,
+//!                                                p50/p90/p95/p99, "models": {per-model}}
+//!   → {"cmd": "reload", "model": "m", "path": "ckpt"}  ← {"ok": true}  (atomic hot swap)
+//!   → {"cmd": "shutdown"}                     ← {"ok": true}  (signal-driven, idempotent)
 //!
-//! Every connection gets a reader thread; requests flow through the
-//! [`DynamicBatcher`] so concurrent clients share batch hashing.
+//! Every connection gets a reader thread; requests from all connections
+//! flow through one bounded queue into the [`WorkerPool`]'s batcher
+//! threads, so the serving tier scales with cores the way the training
+//! tier does. A full queue sheds load with `{"error":"overloaded"}`
+//! instead of queueing unboundedly. Shutdown is signal-driven: the accept
+//! loop polls a stop flag (no self-connect poke), connection threads
+//! finish the requests they already read, and the pool drains its queue
+//! before its workers exit — no accepted request loses its reply.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use super::{DynamicBatcher, TrainedModel};
-use crate::metrics::LatencyHistogram;
+use super::{BatchPredict, ModelRegistry, SubmitError, WorkerPool};
+use crate::metrics::{Counter, LatencyHistogram};
 use crate::util::json::{Json, JsonWriter};
+
+/// How often blocked reads/accepts re-check the stop flag.
+const POLL: Duration = Duration::from_millis(25);
 
 /// Server knobs.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub addr: String,
+    /// Most queued requests a worker fuses per cycle, and the cap on rows
+    /// a single `{"batch": ...}` request may carry (bounds one request's
+    /// share of a worker).
     pub max_batch: usize,
+    /// How long a worker waits for stragglers after its first request.
     pub linger: Duration,
+    /// Batcher threads sharing the request queue.
     pub workers: usize,
+    /// Admission bound: requests queued beyond this are rejected with
+    /// `{"error":"overloaded"}`.
+    pub queue_depth: usize,
 }
 
 impl Default for ServerConfig {
@@ -35,165 +55,343 @@ impl Default for ServerConfig {
             max_batch: 64,
             linger: Duration::from_micros(500),
             workers: 1,
+            queue_depth: 1024,
         }
     }
 }
 
-/// Shared serving metrics.
+/// Shared serving metrics (global across models; per-model counters live
+/// in the registry).
 pub struct ServerStats {
+    /// Request latency, enqueue → reply (single and batch requests alike).
     pub latency: LatencyHistogram,
+    /// Predictions served (rows — a batch of 8 counts 8).
+    pub served: Counter,
+    /// Requests shed by admission control.
+    pub rejected: Counter,
 }
 
 /// Run the server until a `shutdown` command arrives. Returns the stats.
-/// The feature arity comes from the model's
-/// [`Predictor`](crate::sketch::Predictor) handle; `ready` (if given) is
+///
+/// Requests route through `registry` (single model: see
+/// [`ModelRegistry::single`]); the feature arity comes from each model's
+/// [`Predictor`](crate::sketch::Predictor) handle. `ready` (if given) is
 /// signalled with the bound address once listening.
 pub fn serve(
-    model: Arc<TrainedModel>,
+    registry: Arc<ModelRegistry>,
     cfg: ServerConfig,
     ready: Option<std::sync::mpsc::Sender<String>>,
 ) -> std::io::Result<Arc<ServerStats>> {
-    let d = model.dim();
     let listener = TcpListener::bind(&cfg.addr)?;
-    let local_sock = listener.local_addr()?;
-    let local = local_sock.to_string();
+    let local = listener.local_addr()?.to_string();
     if let Some(tx) = ready {
         let _ = tx.send(local.clone());
     }
-    // Address the shutdown self-connect targets: a wildcard bind
-    // (0.0.0.0 / ::) is not connectable on every platform, so poke the
-    // loopback of the same family instead.
-    let mut poke_sock = local_sock;
-    if poke_sock.ip().is_unspecified() {
-        poke_sock.set_ip(match poke_sock.ip() {
-            std::net::IpAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
-            std::net::IpAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
-        });
-    }
-    let poke_addr = poke_sock.to_string();
-    let stats = Arc::new(ServerStats { latency: LatencyHistogram::new(4096) });
+    // the accept loop polls: a blocking accept could only be interrupted
+    // by the old self-connect poke, which raced real connections
+    listener.set_nonblocking(true)?;
+    let stats = Arc::new(ServerStats {
+        latency: LatencyHistogram::new(4096),
+        served: Counter::default(),
+        rejected: Counter::default(),
+    });
     let stop = Arc::new(AtomicBool::new(false));
-    let m = model.clone();
-    let batcher = Arc::new(DynamicBatcher::spawn(
-        d,
-        cfg.max_batch,
-        cfg.linger,
-        move |rows, out| m.predict_into(rows, out),
-    ));
-    listener.set_nonblocking(false)?;
+    let pool = WorkerPool::spawn(cfg.workers, cfg.queue_depth, cfg.max_batch, cfg.linger);
     let mut conn_threads: Vec<std::thread::JoinHandle<()>> = Vec::new();
-    for stream in listener.incoming() {
-        if stop.load(Ordering::SeqCst) {
-            break;
-        }
-        // reap connections that already hung up, so a long-lived server
-        // doesn't accumulate one parked JoinHandle per past client
-        conn_threads.retain(|t| !t.is_finished());
-        let stream = match stream {
-            Ok(s) => s,
-            Err(_) => continue,
-        };
-        let batcher = batcher.clone();
-        let stats = stats.clone();
-        let stop2 = stop.clone();
-        let d2 = d;
-        let listen_addr = poke_addr.clone();
-        conn_threads.push(std::thread::spawn(move || {
-            let _ = handle_conn(stream, d2, &batcher, &stats, &stop2, &listen_addr);
-        }));
-        // a shutdown handled inside a connection flips `stop`; poke the
-        // accept loop by checking after each connection completes quickly
-        if stop.load(Ordering::SeqCst) {
-            break;
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // reap connections that already hung up, so a long-lived
+                // server doesn't accumulate one JoinHandle per past client
+                conn_threads.retain(|t| !t.is_finished());
+                let pool = pool.clone();
+                let registry = registry.clone();
+                let stats = stats.clone();
+                let stop2 = stop.clone();
+                conn_threads.push(std::thread::spawn(move || {
+                    let _ = handle_conn(stream, &registry, &pool, &stats, &stop2);
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => std::thread::sleep(POLL),
+            // persistent accept errors (e.g. fd exhaustion) must not
+            // busy-spin the accept loop at 100% CPU
+            Err(_) => std::thread::sleep(POLL),
         }
     }
+    // deterministic drain: connection threads finish the requests they
+    // already read (their reads poll `stop`), then the pool drains its
+    // queue and joins its workers — replies for accepted work all land
     for t in conn_threads {
         let _ = t.join();
     }
+    pool.shutdown();
     Ok(stats)
 }
 
+/// How long a connection keeps serving after shutdown is signalled, so
+/// requests the client already pipelined (buffered kernel-side or
+/// user-side) still get replies while a client that streams forever
+/// cannot hold the server open.
+const SHUTDOWN_GRACE: Duration = Duration::from_secs(1);
+
+/// Cap on how long one reply write may block on a client that has
+/// stopped draining its socket.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Read lines off one connection until EOF or server stop. Reads use a
+/// short timeout so a quiet connection notices shutdown; bytes already
+/// received keep being served through a bounded grace window, so requests
+/// pipelined before a shutdown lose no replies — but shutdown still
+/// completes within `SHUTDOWN_GRACE` even against a client that never
+/// stops sending.
 fn handle_conn(
-    stream: TcpStream,
-    d: usize,
-    batcher: &DynamicBatcher,
+    mut stream: TcpStream,
+    registry: &ModelRegistry,
+    pool: &WorkerPool,
     stats: &ServerStats,
     stop: &AtomicBool,
-    listen_addr: &str,
 ) -> std::io::Result<()> {
     stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(POLL))?;
+    // a client that stops reading must not park this thread in write_all
+    // forever (that would outlive the shutdown grace window and hang
+    // serve()'s join) — time the write out and drop the connection
+    stream.set_write_timeout(Some(WRITE_TIMEOUT))?;
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
+    let mut acc: Vec<u8> = Vec::new();
+    let mut tmp = [0u8; 8192];
+    let mut stop_deadline: Option<Instant> = None;
+    loop {
+        // serve every complete line already buffered
+        while let Some(nl) = acc.iter().position(|&b| b == b'\n') {
+            let line: Vec<u8> = acc.drain(..=nl).collect();
+            let text = String::from_utf8_lossy(&line);
+            let text = text.trim();
+            if !text.is_empty() {
+                handle_line(text, registry, pool, stats, stop, &mut writer)?;
+            }
         }
-        let reply = match Json::parse(&line) {
-            Ok(req) => {
-                if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
-                    match cmd {
-                        "stats" => {
-                            let (p50, p90, p99) = stats.latency.percentiles();
-                            JsonWriter::object()
-                                .field_usize("served", stats.latency.count.get() as usize)
-                                .field_f64("mean_us", stats.latency.mean() * 1e6)
-                                .field_f64("p50_us", p50 * 1e6)
-                                .field_f64("p90_us", p90 * 1e6)
-                                .field_f64("p99_us", p99 * 1e6)
-                                .finish()
-                        }
-                        "shutdown" => {
-                            stop.store(true, Ordering::SeqCst);
-                            writeln!(writer, "{}", JsonWriter::object().field_str("ok", "true").finish())?;
-                            // one deliberate self-connect to the listener's
-                            // own address unblocks the blocking accept loop
-                            let _ = TcpStream::connect(listen_addr);
-                            return Ok(());
-                        }
-                        other => JsonWriter::object()
-                            .field_str("error", &format!("unknown cmd {other:?}"))
-                            .finish(),
-                    }
-                } else if let Some(f) = req.get("features").and_then(Json::as_f64_vec) {
-                    if f.len() != d {
-                        JsonWriter::object()
-                            .field_str("error", &format!("expected {d} features, got {}", f.len()))
-                            .finish()
-                    } else {
-                        let t = Instant::now();
-                        let features: Vec<f32> = f.iter().map(|&v| v as f32).collect();
-                        match batcher.predict(features) {
-                            Some(pred) => {
-                                stats.latency.record(t.elapsed().as_secs_f64());
-                                JsonWriter::object().field_f64("pred", pred).finish()
-                            }
-                            None => JsonWriter::object()
-                                .field_str("error", "batcher unavailable")
-                                .finish(),
-                        }
-                    }
-                } else {
-                    JsonWriter::object()
-                        .field_str("error", "need \"features\" or \"cmd\"")
-                        .finish()
+        if stop.load(Ordering::SeqCst) {
+            let deadline = *stop_deadline.get_or_insert_with(|| Instant::now() + SHUTDOWN_GRACE);
+            if Instant::now() >= deadline {
+                return Ok(()); // grace spent: stop even mid-stream
+            }
+        }
+        match stream.read(&mut tmp) {
+            Ok(0) => {
+                // client closed its write side; a final request without a
+                // trailing newline still deserves its reply
+                let text = String::from_utf8_lossy(&acc);
+                let text = text.trim();
+                if !text.is_empty() {
+                    handle_line(text, registry, pool, stats, stop, &mut writer)?;
+                }
+                return Ok(());
+            }
+            Ok(n) => acc.extend_from_slice(&tmp[..n]),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // an idle gap after the stop signal means the pipeline is
+                // drained — no need to sit out the rest of the grace window
+                if stop.load(Ordering::SeqCst) {
+                    return Ok(());
                 }
             }
-            Err(e) => JsonWriter::object().field_str("error", &e).finish(),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+fn err_json(msg: &str) -> String {
+    JsonWriter::object().field_str("error", msg).finish()
+}
+
+/// Parse and answer one request line (always exactly ≥1 reply line).
+fn handle_line(
+    line: &str,
+    registry: &ModelRegistry,
+    pool: &WorkerPool,
+    stats: &ServerStats,
+    stop: &AtomicBool,
+    writer: &mut TcpStream,
+) -> std::io::Result<()> {
+    let req = match Json::parse(line) {
+        Ok(r) => r,
+        Err(e) => {
+            writeln!(writer, "{}", err_json(&e))?;
+            return Ok(());
+        }
+    };
+    if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
+        let reply = match cmd {
+            "stats" => stats_json(registry, pool, stats),
+            "shutdown" => {
+                // idempotent: flipping an already-set flag is harmless
+                stop.store(true, Ordering::SeqCst);
+                JsonWriter::object().field_str("ok", "true").finish()
+            }
+            "reload" => {
+                let name = req
+                    .get("model")
+                    .and_then(Json::as_str)
+                    .unwrap_or(super::DEFAULT_MODEL);
+                match req.get("path").and_then(Json::as_str) {
+                    None => err_json("reload needs \"path\""),
+                    Some(path) => match registry.reload(name, path) {
+                        Ok(()) => JsonWriter::object()
+                            .field_str("ok", "true")
+                            .field_str("model", name)
+                            .finish(),
+                        Err(e) => err_json(&e.to_string()),
+                    },
+                }
+            }
+            other => err_json(&format!("unknown cmd {other:?}")),
         };
         writeln!(writer, "{reply}")?;
+        return Ok(());
+    }
+    // prediction path: resolve the model first (its dim validates arity)
+    let model_name = req.get("model").and_then(Json::as_str);
+    let (_name, model, mstats) = match registry.resolve(model_name) {
+        Some(v) => v,
+        None => {
+            let msg = match model_name {
+                Some(m) => format!("unknown model {m:?}"),
+                None if registry.is_empty() => "no models registered".to_string(),
+                None => "no model named \"default\" among several registered".to_string(),
+            };
+            writeln!(writer, "{}", err_json(&msg))?;
+            return Ok(());
+        }
+    };
+    let d = model.dim();
+    let (rows, nrows) = match gather_rows(&req, d, pool.max_batch()) {
+        Ok(v) => v,
+        Err(msg) => {
+            writeln!(writer, "{}", err_json(&msg))?;
+            return Ok(());
+        }
+    };
+    let t = Instant::now();
+    let handle: Arc<dyn BatchPredict> = model;
+    match pool.predict(handle, rows, nrows) {
+        Ok(preds) => {
+            let secs = t.elapsed().as_secs_f64();
+            stats.latency.record(secs);
+            stats.served.add(nrows as u64);
+            mstats.latency.record(secs);
+            mstats.served.add(nrows as u64);
+            // one buffered write per request, not one syscall per row
+            let mut reply = String::with_capacity(preds.len() * 24);
+            for p in &preds {
+                reply.push_str(&JsonWriter::object().field_f64("pred", *p).finish());
+                reply.push('\n');
+            }
+            writer.write_all(reply.as_bytes())?;
+        }
+        Err(e) => {
+            if e == SubmitError::Overloaded {
+                stats.rejected.add(1);
+            }
+            writeln!(writer, "{}", err_json(&e.to_string()))?;
+        }
     }
     Ok(())
+}
+
+/// Extract the request's feature rows: `"features"` (one row) or
+/// `"batch"` (up to `max_rows` of them — the pool's batch bound caps one
+/// request's share of a worker). Arity is checked per row against `d`; a
+/// malformed request gets one error reply for the whole request.
+fn gather_rows(req: &Json, d: usize, max_rows: usize) -> Result<(Vec<f32>, usize), String> {
+    if let Some(f) = req.get("features") {
+        let f = f
+            .as_f64_vec()
+            .ok_or_else(|| "\"features\" must be an array of numbers".to_string())?;
+        if f.len() != d {
+            return Err(format!("expected {d} features, got {}", f.len()));
+        }
+        return Ok((f.iter().map(|&v| v as f32).collect(), 1));
+    }
+    if let Some(batch) = req.get("batch") {
+        let batch = batch
+            .as_arr()
+            .ok_or_else(|| "\"batch\" must be an array of feature rows".to_string())?;
+        if batch.is_empty() {
+            return Err("\"batch\" must contain at least one row".to_string());
+        }
+        if batch.len() > max_rows {
+            return Err(format!(
+                "batch of {} rows exceeds the server's max_batch of {max_rows}; split it",
+                batch.len()
+            ));
+        }
+        let mut rows = Vec::with_capacity(batch.len() * d);
+        for (i, row) in batch.iter().enumerate() {
+            let row = row
+                .as_f64_vec()
+                .ok_or_else(|| format!("batch row {i} must be an array of numbers"))?;
+            if row.len() != d {
+                return Err(format!("batch row {i}: expected {d} features, got {}", row.len()));
+            }
+            rows.extend(row.iter().map(|&v| v as f32));
+        }
+        return Ok((rows, batch.len()));
+    }
+    Err("need \"features\", \"batch\", or \"cmd\"".to_string())
+}
+
+/// The `stats` reply: global counters + latency quantiles, queue state,
+/// and a nested per-model block.
+fn stats_json(registry: &ModelRegistry, pool: &WorkerPool, stats: &ServerStats) -> String {
+    let s = stats.latency.summary();
+    let mut models = JsonWriter::object();
+    for name in registry.names() {
+        let ms = match registry.stats_for(&name) {
+            Some(ms) => ms,
+            None => continue, // removed between names() and here
+        };
+        let m = ms.latency.summary();
+        models = models.field_raw(
+            &name,
+            &JsonWriter::object()
+                .field_usize("served", ms.served.get() as usize)
+                .field_f64("p50_us", m.p50 * 1e6)
+                .field_f64("p95_us", m.p95 * 1e6)
+                .field_f64("p99_us", m.p99 * 1e6)
+                .finish(),
+        );
+    }
+    JsonWriter::object()
+        .field_usize("served", stats.served.get() as usize)
+        .field_usize("rejected", stats.rejected.get() as usize)
+        .field_usize("queue_depth", pool.queue_len())
+        .field_usize("workers", pool.workers())
+        .field_f64("mean_us", stats.latency.mean() * 1e6)
+        .field_f64("p50_us", s.p50 * 1e6)
+        .field_f64("p90_us", s.p90 * 1e6)
+        .field_f64("p95_us", s.p95 * 1e6)
+        .field_f64("p99_us", s.p99 * 1e6)
+        .field_raw("models", &models.finish())
+        .finish()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::io::{BufRead, BufReader};
+
     use crate::config::KrrConfig;
     use crate::coordinator::Trainer;
     use crate::data::synthetic_by_name;
 
-    fn small_model() -> (Arc<TrainedModel>, usize, Vec<f32>, Vec<f64>) {
+    fn small_model() -> (Arc<super::super::TrainedModel>, usize, Vec<f32>, Vec<f64>) {
         let mut ds = synthetic_by_name("wine", Some(150), 1).unwrap();
         ds.standardize();
         let (tr, te) = ds.split(120, 2);
@@ -208,14 +406,22 @@ mod tests {
         (model, tr.d, te.x[..te.d * 3].to_vec(), expected)
     }
 
+    fn start(
+        registry: Arc<ModelRegistry>,
+        workers: usize,
+    ) -> (String, std::thread::JoinHandle<Arc<ServerStats>>) {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let cfg =
+            ServerConfig { addr: "127.0.0.1:0".into(), workers, ..Default::default() };
+        let handle = std::thread::spawn(move || serve(registry, cfg, Some(tx)).unwrap());
+        (rx.recv().unwrap(), handle)
+    }
+
     #[test]
     fn end_to_end_roundtrip() {
         let (model, d, queries, expected) = small_model();
         assert_eq!(model.dim(), d);
-        let (tx, rx) = std::sync::mpsc::channel();
-        let cfg = ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() };
-        let handle = std::thread::spawn(move || serve(model, cfg, Some(tx)).unwrap());
-        let addr = rx.recv().unwrap();
+        let (addr, handle) = start(ModelRegistry::single(model), 2);
         let mut conn = TcpStream::connect(&addr).unwrap();
         conn.set_nodelay(true).ok();
         let mut reader = BufReader::new(conn.try_clone().unwrap());
@@ -237,6 +443,51 @@ mod tests {
         reader.read_line(&mut line).unwrap();
         let resp = Json::parse(&line).unwrap();
         assert_eq!(resp.get("served").and_then(Json::as_usize).unwrap(), expected.len());
+        assert_eq!(resp.get("rejected").and_then(Json::as_usize).unwrap(), 0);
+        assert_eq!(resp.get("workers").and_then(Json::as_usize).unwrap(), 2);
+        let p95 = resp.get("p95_us").and_then(Json::as_f64).unwrap();
+        assert!(p95 >= 0.0);
+        let per_model = resp
+            .get("models")
+            .and_then(|m| m.get("default"))
+            .and_then(|m| m.get("served"))
+            .and_then(Json::as_usize)
+            .unwrap();
+        assert_eq!(per_model, expected.len());
+        writeln!(conn, "{{\"cmd\": \"shutdown\"}}").unwrap();
+        let mut line2 = String::new();
+        reader.read_line(&mut line2).unwrap();
+        assert!(line2.contains("ok"), "{line2}");
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn batch_requests_reply_one_line_per_row() {
+        let (model, d, queries, expected) = small_model();
+        let (addr, handle) = start(ModelRegistry::single(model), 1);
+        let mut conn = TcpStream::connect(&addr).unwrap();
+        conn.set_nodelay(true).ok();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let rows: Vec<String> = (0..expected.len())
+            .map(|qi| {
+                let feats: Vec<String> =
+                    queries[qi * d..(qi + 1) * d].iter().map(|v| format!("{v}")).collect();
+                format!("[{}]", feats.join(","))
+            })
+            .collect();
+        writeln!(conn, "{{\"batch\": [{}]}}", rows.join(",")).unwrap();
+        for (qi, want) in expected.iter().enumerate() {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let got = Json::parse(&line).unwrap().get("pred").and_then(Json::as_f64).unwrap();
+            assert!((got - want).abs() < 1e-6, "row {qi}: {got} vs {want}");
+        }
+        // per-row served accounting
+        writeln!(conn, "{{\"cmd\": \"stats\"}}").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let served = Json::parse(&line).unwrap().get("served").and_then(Json::as_usize).unwrap();
+        assert_eq!(served, expected.len());
         writeln!(conn, "{{\"cmd\": \"shutdown\"}}").unwrap();
         let mut line2 = String::new();
         reader.read_line(&mut line2).unwrap();
@@ -246,24 +497,70 @@ mod tests {
     #[test]
     fn server_reports_errors() {
         let (model, _d, _, _) = small_model();
-        let (tx, rx) = std::sync::mpsc::channel();
-        let cfg = ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() };
-        let handle = std::thread::spawn(move || serve(model, cfg, Some(tx)).unwrap());
-        let addr = rx.recv().unwrap();
+        let (addr, handle) = start(ModelRegistry::single(model), 1);
         let mut conn = TcpStream::connect(&addr).unwrap();
         conn.set_nodelay(true).ok();
         let mut reader = BufReader::new(conn.try_clone().unwrap());
-        writeln!(conn, "{{\"features\": [1.0]}}").unwrap(); // wrong arity
-        let mut line = String::new();
-        reader.read_line(&mut line).unwrap();
-        assert!(line.contains("error"));
-        writeln!(conn, "not json").unwrap();
-        let mut line2 = String::new();
-        reader.read_line(&mut line2).unwrap();
-        assert!(line2.contains("error"));
+        let mut expect_error = |req: &str| {
+            writeln!(conn, "{req}").unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains("error"), "{req} → {line}");
+        };
+        expect_error("{\"features\": [1.0]}"); // wrong arity
+        expect_error("not json");
+        expect_error("{\"batch\": []}");
+        expect_error("{\"batch\": [[1.0], \"x\"]}");
+        // a batch beyond max_batch is rejected whole, before any work
+        let big: Vec<String> = (0..65).map(|_| "[1.0]".to_string()).collect();
+        expect_error(&format!("{{\"batch\": [{}]}}", big.join(",")));
+        expect_error("{\"features\": [1,2,3], \"model\": \"nope\"}"); // unknown model
+        expect_error("{\"cmd\": \"reload\", \"path\": \"x\"}"); // no loader configured
+        expect_error("{\"cmd\": \"nope\"}");
         writeln!(conn, "{{\"cmd\": \"shutdown\"}}").unwrap();
         let mut line3 = String::new();
         reader.read_line(&mut line3).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn routes_by_model_name_and_hot_reload_keeps_connection() {
+        let (m1, d, queries, want1) = small_model();
+        // a different budget gives a genuinely different predictor
+        let mut ds = synthetic_by_name("wine", Some(150), 1).unwrap();
+        ds.standardize();
+        let (tr, _) = ds.split(120, 2);
+        let cfg = KrrConfig {
+            method: crate::api::MethodSpec::Wlsh,
+            budget: 32,
+            scale: 3.0,
+            ..Default::default()
+        };
+        let m2 = Arc::new(Trainer::new(cfg).train(&tr).unwrap());
+        let want2 = m2.predict(&queries);
+        let registry = ModelRegistry::single(m1);
+        registry.insert("alt", m2.clone());
+        let reg2 = registry.clone();
+        let (addr, handle) = start(registry, 2);
+        let mut conn = TcpStream::connect(&addr).unwrap();
+        conn.set_nodelay(true).ok();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let feats: Vec<String> = queries[..d].iter().map(|v| format!("{v}")).collect();
+        let ask = |conn: &mut TcpStream, reader: &mut BufReader<TcpStream>, model: &str| {
+            writeln!(conn, "{{\"features\": [{}], \"model\": \"{model}\"}}", feats.join(","))
+                .unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            Json::parse(&line).unwrap().get("pred").and_then(Json::as_f64).unwrap()
+        };
+        assert!((ask(&mut conn, &mut reader, "default") - want1[0]).abs() < 1e-9);
+        assert!((ask(&mut conn, &mut reader, "alt") - want2[0]).abs() < 1e-9);
+        // hot-swap "default" → m2 while this connection stays open
+        reg2.insert("default", m2);
+        assert!((ask(&mut conn, &mut reader, "default") - want2[0]).abs() < 1e-9);
+        writeln!(conn, "{{\"cmd\": \"shutdown\"}}").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
         handle.join().unwrap();
     }
 }

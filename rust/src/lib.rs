@@ -84,6 +84,18 @@
 //! `examples/streaming.rs` trains from an on-disk CSV larger than the
 //! process memory budget.
 //!
+//! ## Serving
+//!
+//! The request path is a worker-pool engine: [`coordinator::serve`]
+//! feeds a bounded shared queue into `workers` batcher threads
+//! ([`coordinator::WorkerPool`]), each fusing concurrent requests into
+//! one allocation-free `predict_into` call, with admission control (a
+//! full queue answers `{"error":"overloaded"}`) instead of unbounded
+//! latency. A [`coordinator::ModelRegistry`] routes requests to named
+//! models and hot-swaps checkpoints atomically without dropping
+//! connections. Predictions are bit-identical at every worker count,
+//! queue depth, and batch boundary (`tests/serve_pool.rs`).
+//!
 //! Lower layers, for direct use: [`sketch::WlshSketch`] (the paper's
 //! estimator), [`solver::solve_krr`] (CG on `K̃ + λI`), and
 //! [`coordinator::Trainer`] / [`coordinator::serve`] (the

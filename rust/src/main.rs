@@ -16,7 +16,9 @@ use std::time::Duration;
 
 use wlsh_krr::api::{BucketSpec, KernelSpec, KrrError, MethodSpec, PrecondSpec};
 use wlsh_krr::config::KrrConfig;
-use wlsh_krr::coordinator::{serve, ServerConfig, Trainer};
+use wlsh_krr::coordinator::{
+    checkpoint, serve, ModelRegistry, ServerConfig, Trainer, DEFAULT_MODEL,
+};
 use wlsh_krr::data::{
     head_sample, load_csv, rmse, synthetic_by_name, CsvSource, DataSource, LibsvmSource,
     Standardizer,
@@ -54,7 +56,12 @@ fn main() {
                         --cg-verbose=true  (per-iteration CG progress on stderr)\n\
                         --data-format csv|libsvm --chunk-rows R  (streamed\n\
                         out-of-core training from --dataset <path>)\n\
+                        --checkpoint-out PATH  (save the trained model)\n\
                  serve  same dataset/method flags plus --addr HOST:PORT\n\
+                        --workers N --queue-depth Q --max-batch B --linger-us U\n\
+                        --model name=ckpt[,name=ckpt...]  (serve saved\n\
+                        checkpoints instead of training; same dataset flags\n\
+                        as the `train` run that wrote them)\n\
                  ose    --n N --m M --lambda L --bucket rect|smooth2\n\
                  gp     --cov laplace|se|matern --dim D --n N",
                 wlsh_krr::version()
@@ -177,6 +184,11 @@ fn cmd_train(args: &Args) -> Result<(), KrrError> {
         cfg.method, ds.name, tr.n, tr.d, te.n
     );
     let model = Trainer::new(cfg).train(&tr)?;
+    if let Some(path) = args.get("checkpoint-out") {
+        checkpoint::save(&model, std::path::Path::new(path))
+            .map_err(|e| KrrError::Io(format!("{path}: {e}")))?;
+        eprintln!("checkpoint written to {path}");
+    }
     let pred = model.predict(&te.x);
     let err = rmse(&pred, &te.y);
     let rep = &model.report;
@@ -243,21 +255,79 @@ fn cmd_train_streamed(args: &Args, format: &str) -> Result<(), KrrError> {
     Ok(())
 }
 
+/// Parse `--model name=path[,name=path...]` (usage errors surface before
+/// any dataset or checkpoint I/O).
+fn parse_model_specs(spec: &str) -> Result<Vec<(String, String)>, KrrError> {
+    spec.split(',')
+        .map(|part| {
+            let (name, path) = part.split_once('=').ok_or_else(|| {
+                KrrError::BadParam(format!("--model wants name=path, got {part:?}"))
+            })?;
+            if name.is_empty() || path.is_empty() {
+                return Err(KrrError::BadParam(format!(
+                    "--model wants name=path, got {part:?}"
+                )));
+            }
+            Ok((name.to_string(), path.to_string()))
+        })
+        .collect()
+}
+
 fn cmd_serve(args: &Args) -> Result<(), KrrError> {
+    // validate the model specs before touching data or training anything
+    let model_specs = match args.get("model") {
+        Some(spec) => Some(parse_model_specs(spec)?),
+        None => None,
+    };
     let ds = load_dataset(args)?;
     let cfg = config_from(args)?;
     let n_train = args.get_usize("n-train", (ds.n * 3) / 4);
     let (tr, _) = ds.split(n_train.min(ds.n - 1), cfg.seed);
-    let model = Arc::new(Trainer::new(cfg).train(&tr)?);
-    eprintln!("model trained ({}); serving...", model.report.operator);
+    // checkpoints rebuild their sketch against the training split, so the
+    // loader (used by --model and the `reload` protocol command) closes
+    // over it
+    let tr = Arc::new(tr);
+    let loader_tr = tr.clone();
+    let registry = Arc::new(ModelRegistry::with_loader(Box::new(move |path: &str| {
+        checkpoint::load(std::path::Path::new(path), &loader_tr).map(Arc::new)
+    })));
+    match model_specs {
+        Some(specs) => {
+            for (name, path) in &specs {
+                let model = checkpoint::load(std::path::Path::new(path), &tr)?;
+                eprintln!("loaded model {name:?} from {path} ({})", model.report.operator);
+                registry.insert(name, Arc::new(model));
+            }
+        }
+        None => {
+            let model = Trainer::new(cfg).train(&tr)?;
+            eprintln!(
+                "model trained ({}); serving as {DEFAULT_MODEL:?}",
+                model.report.operator
+            );
+            registry.insert(DEFAULT_MODEL, Arc::new(model));
+        }
+    }
     let scfg = ServerConfig {
         addr: args.get_or("addr", "127.0.0.1:7878").to_string(),
         max_batch: args.get_usize("max-batch", 64),
         linger: Duration::from_micros(args.get_usize("linger-us", 500) as u64),
-        workers: args.get_usize("workers", 1),
+        workers: args.get_usize("workers", wlsh_krr::util::par::num_threads()),
+        queue_depth: args.get_usize("queue-depth", 1024),
     };
-    eprintln!("listening on {}", scfg.addr);
-    serve(model, scfg, None).map_err(|e| KrrError::Io(e.to_string()))?;
+    // serve() on a thread so the bound address (port 0 resolves at bind
+    // time) can be announced on stderr for scripts/tests to scrape
+    let (tx, rx) = std::sync::mpsc::channel();
+    let workers = scfg.workers;
+    let depth = scfg.queue_depth;
+    let handle = std::thread::spawn(move || serve(registry, scfg, Some(tx)));
+    if let Ok(addr) = rx.recv() {
+        eprintln!("listening on {addr} ({workers} workers, queue depth {depth})");
+    }
+    handle
+        .join()
+        .map_err(|_| KrrError::Io("server thread panicked".to_string()))?
+        .map_err(|e| KrrError::Io(e.to_string()))?;
     Ok(())
 }
 

@@ -18,6 +18,15 @@ impl Counter {
     }
 }
 
+/// Quantiles of one latency population, in seconds.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencySummary {
+    pub p50: f64,
+    pub p90: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
 /// Latency recorder: keeps up to `cap` most recent samples (ring) and
 /// aggregate sums for mean/throughput.
 pub struct LatencyHistogram {
@@ -50,15 +59,22 @@ impl LatencyHistogram {
         }
     }
 
-    /// (p50, p90, p99) over retained samples.
-    pub fn percentiles(&self) -> (f64, f64, f64) {
+    /// Percentile summary over retained samples (one sort for all four
+    /// quantiles — the serving `stats` command reads them together).
+    pub fn summary(&self) -> LatencySummary {
         let mut s = self.samples.lock().unwrap().clone();
         if s.is_empty() {
-            return (0.0, 0.0, 0.0);
+            return LatencySummary::default();
         }
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let at = |p: f64| s[((s.len() as f64 * p) as usize).min(s.len() - 1)];
-        (at(0.50), at(0.90), at(0.99))
+        LatencySummary { p50: at(0.50), p90: at(0.90), p95: at(0.95), p99: at(0.99) }
+    }
+
+    /// (p50, p90, p99) over retained samples.
+    pub fn percentiles(&self) -> (f64, f64, f64) {
+        let s = self.summary();
+        (s.p50, s.p90, s.p99)
     }
 
     pub fn mean(&self) -> f64 {
@@ -95,6 +111,21 @@ mod tests {
         assert!((p99 - 100.0).abs() <= 1.0);
         assert!((h.mean() - 50.5).abs() < 1e-9);
         assert_eq!(h.count.get(), 100);
+    }
+
+    #[test]
+    fn summary_quantiles_are_ordered_and_include_p95() {
+        let h = LatencyHistogram::new(1000);
+        for i in 1..=200 {
+            h.record(i as f64);
+        }
+        let s = h.summary();
+        assert!((s.p95 - 191.0).abs() <= 1.0, "p95 {}", s.p95);
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p95 && s.p95 <= s.p99);
+        // tuple view stays consistent with the summary
+        assert_eq!(h.percentiles(), (s.p50, s.p90, s.p99));
+        // empty histogram: all zeros, no panic
+        assert_eq!(LatencyHistogram::new(8).summary(), LatencySummary::default());
     }
 
     #[test]

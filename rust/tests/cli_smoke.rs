@@ -351,6 +351,44 @@ fn malformed_streamed_csv_is_a_runtime_error_not_a_panic() {
 }
 
 #[test]
+fn train_checkpoint_out_writes_a_checkpoint() {
+    let path = std::env::temp_dir().join("wlsh_cli_ckpt_out.bin");
+    let p = path.to_string_lossy().into_owned();
+    let out = run(&[
+        "train", "--dataset", "wine", "--n-max", "200", "--budget", "8", "--seed", "3",
+        "--checkpoint-out", &p,
+    ]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let bytes = std::fs::read(&path).expect("checkpoint written");
+    assert_eq!(&bytes[..8], b"WLSHKRR1", "checkpoint magic");
+    // the train JSON still lands on stdout
+    assert!(last_json(&out).get("rmse").and_then(Json::as_f64).is_some());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn serve_malformed_model_flag_is_a_clean_usage_error() {
+    // no name=path separator: must exit 2 before loading data or training
+    let out = run(&["serve", "--dataset", "wine", "--n-max", "100", "--model", "bogus"]);
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("name=path"), "stderr: {stderr}");
+    assert!(!stderr.contains("panicked"), "stderr: {stderr}");
+}
+
+#[test]
+fn serve_missing_checkpoint_is_a_runtime_error() {
+    let out = run(&[
+        "serve", "--dataset", "wine", "--n-max", "100", "--model",
+        "a=/definitely/not/a/checkpoint",
+    ]);
+    assert_eq!(out.status.code(), Some(1));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("error"), "stderr: {stderr}");
+    assert!(!stderr.contains("panicked"), "stderr: {stderr}");
+}
+
+#[test]
 fn unknown_subcommand_is_misuse() {
     let out = run(&["definitely-not-a-command"]);
     // usage on stderr, nonzero exit so scripts catch the typo

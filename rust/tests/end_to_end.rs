@@ -10,7 +10,7 @@ use std::sync::Arc;
 
 use wlsh_krr::api::MethodSpec;
 use wlsh_krr::config::KrrConfig;
-use wlsh_krr::coordinator::{serve, PredictRouter, ServerConfig, Trainer};
+use wlsh_krr::coordinator::{serve, ModelRegistry, PredictRouter, ServerConfig, Trainer};
 use wlsh_krr::data::{rmse, synthetic_by_name};
 use wlsh_krr::util::json::Json;
 
@@ -104,7 +104,8 @@ fn router_and_server_agree_with_direct_predict() {
     let scfg = ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() };
     let d = te.d;
     let m2 = model.clone();
-    let handle = std::thread::spawn(move || serve(m2, scfg, Some(tx)).unwrap());
+    let handle =
+        std::thread::spawn(move || serve(ModelRegistry::single(m2), scfg, Some(tx)).unwrap());
     let addr = rx.recv().unwrap();
     let mut conn = TcpStream::connect(&addr).unwrap();
     conn.set_nodelay(true).ok();

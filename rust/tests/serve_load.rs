@@ -1,0 +1,233 @@
+//! CI load-test smoke for the binary's `serve` mode: spawn the server
+//! process, fire ≥8 concurrent clients with mixed single/batch requests,
+//! check every prediction bit-exactly against an in-process reference
+//! model, read stats, and require a clean, timely shutdown (exit 0).
+//! Also covers `--checkpoint-out` → `serve --model name=ckpt` routing.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use wlsh_krr::api::MethodSpec;
+use wlsh_krr::config::KrrConfig;
+use wlsh_krr::coordinator::{Trainer, TrainedModel};
+use wlsh_krr::data::{synthetic_by_name, Dataset};
+use wlsh_krr::util::json::Json;
+
+/// Dataset/config flags shared by every binary invocation below.
+const FLAGS: [&str; 8] =
+    ["--dataset", "wine", "--n-max", "300", "--budget", "16", "--seed", "7"];
+
+/// The exact model `serve` trains for those flags (mirrors main.rs:
+/// synthetic seed = --seed, standardize, 3/4 split at the config seed).
+fn reference() -> (Arc<TrainedModel>, Dataset) {
+    let mut ds = synthetic_by_name("wine", Some(300), 7).unwrap();
+    ds.standardize();
+    let n_train = (ds.n * 3) / 4;
+    let (tr, te) = ds.split(n_train.min(ds.n - 1), 7);
+    let cfg = KrrConfig {
+        method: MethodSpec::Wlsh,
+        budget: 16,
+        scale: 3.0,
+        seed: 7,
+        ..Default::default()
+    };
+    (Arc::new(Trainer::new(cfg).train(&tr).unwrap()), te)
+}
+
+/// Spawn `wlsh-krr serve` on an ephemeral port and scrape the bound
+/// address from its stderr announcement.
+fn spawn_serve(extra: &[&str]) -> (Child, String) {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_wlsh-krr"))
+        .arg("serve")
+        .args(FLAGS)
+        .args(["--addr", "127.0.0.1:0"])
+        .args(extra)
+        .stdout(Stdio::null())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn wlsh-krr serve");
+    let stderr = child.stderr.take().unwrap();
+    let mut reader = BufReader::new(stderr);
+    let addr = loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).expect("read serve stderr");
+        assert!(n > 0, "server exited before announcing its address");
+        if let Some(rest) = line.strip_prefix("listening on ") {
+            break rest.split_whitespace().next().unwrap().to_string();
+        }
+    };
+    // keep draining stderr so the child never blocks on a full pipe
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        let _ = reader.read_to_string(&mut sink);
+    });
+    (child, addr)
+}
+
+fn wait_with_timeout(child: &mut Child, dur: Duration) -> std::process::ExitStatus {
+    let t0 = Instant::now();
+    loop {
+        if let Some(st) = child.try_wait().expect("try_wait") {
+            return st;
+        }
+        if t0.elapsed() > dur {
+            let _ = child.kill();
+            panic!("server did not exit within {dur:?} after shutdown");
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+fn row_json(x: &[f32], d: usize, qi: usize) -> String {
+    let feats: Vec<String> = x[qi * d..(qi + 1) * d].iter().map(|v| format!("{v}")).collect();
+    format!("[{}]", feats.join(","))
+}
+
+fn read_pred(reader: &mut BufReader<TcpStream>) -> f64 {
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    Json::parse(&line)
+        .unwrap_or_else(|e| panic!("bad reply {line:?}: {e}"))
+        .get("pred")
+        .and_then(Json::as_f64)
+        .unwrap_or_else(|| panic!("no pred in {line:?}"))
+}
+
+fn request_stats(addr: &str) -> Json {
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    writeln!(conn, "{{\"cmd\": \"stats\"}}").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    Json::parse(&line).unwrap_or_else(|e| panic!("bad stats {line:?}: {e}"))
+}
+
+fn shutdown_and_expect_exit_0(mut child: Child, addr: &str) {
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    writeln!(conn, "{{\"cmd\": \"shutdown\"}}").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("ok"), "{line}");
+    drop(conn);
+    let status = wait_with_timeout(&mut child, Duration::from_secs(30));
+    assert!(status.success(), "serve exited with {status:?}");
+}
+
+#[test]
+#[ignore = "heavy: run by CI's dedicated serve load-test step (release, --ignored, serial)"]
+fn serve_binary_survives_concurrent_mixed_load_then_exits_cleanly() {
+    let (model, te) = reference();
+    let d = te.d;
+    let nq = te.n;
+    let want = model.predict(&te.x);
+    let (child, addr) = spawn_serve(&[
+        "--workers",
+        "2",
+        "--queue-depth",
+        "256",
+        "--linger-us",
+        "100",
+    ]);
+    let clients = 8usize;
+    let iters = 24usize; // every 4th request is a batch of 4 rows
+    let rows_per_client: usize = (0..iters).map(|r| if r % 4 == 3 { 4 } else { 1 }).sum();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let addr = addr.clone();
+            let te_x = &te.x;
+            let want = &want;
+            scope.spawn(move || {
+                let mut conn = TcpStream::connect(&addr).unwrap();
+                conn.set_nodelay(true).ok();
+                let mut reader = BufReader::new(conn.try_clone().unwrap());
+                for r in 0..iters {
+                    if r % 4 == 3 {
+                        let idxs: Vec<usize> =
+                            (0..4).map(|k| (c * 7919 + r * 13 + k) % nq).collect();
+                        let rows: Vec<String> =
+                            idxs.iter().map(|&qi| row_json(te_x, d, qi)).collect();
+                        writeln!(conn, "{{\"batch\": [{}]}}", rows.join(",")).unwrap();
+                        for &qi in &idxs {
+                            let got = read_pred(&mut reader);
+                            assert!(
+                                got == want[qi],
+                                "client {c} req {r} row {qi}: {got} vs {}",
+                                want[qi]
+                            );
+                        }
+                    } else {
+                        let qi = (c * 7919 + r * 13) % nq;
+                        writeln!(conn, "{{\"features\": {}}}", row_json(te_x, d, qi)).unwrap();
+                        let got = read_pred(&mut reader);
+                        assert!(
+                            got == want[qi],
+                            "client {c} req {r} row {qi}: {got} vs {}",
+                            want[qi]
+                        );
+                    }
+                }
+            });
+        }
+    });
+    // stats: exact served accounting, sane percentiles, zero rejects
+    let stats = request_stats(&addr);
+    let total = clients * rows_per_client;
+    assert_eq!(stats.get("served").and_then(Json::as_usize), Some(total));
+    assert_eq!(stats.get("rejected").and_then(Json::as_usize), Some(0));
+    assert_eq!(stats.get("workers").and_then(Json::as_usize), Some(2));
+    let p50 = stats.get("p50_us").and_then(Json::as_f64).unwrap();
+    let p95 = stats.get("p95_us").and_then(Json::as_f64).unwrap();
+    let p99 = stats.get("p99_us").and_then(Json::as_f64).unwrap();
+    assert!(p50 > 0.0 && p50 <= p95 && p95 <= p99, "percentiles {p50}/{p95}/{p99}");
+    let per_model = stats
+        .get("models")
+        .and_then(|m| m.get("default"))
+        .and_then(|m| m.get("served"))
+        .and_then(Json::as_usize);
+    assert_eq!(per_model, Some(total));
+    shutdown_and_expect_exit_0(child, &addr);
+}
+
+#[test]
+#[ignore = "heavy: run by CI's dedicated serve load-test step (release, --ignored, serial)"]
+fn serve_binary_routes_to_named_checkpoints_from_model_flag() {
+    let (model, te) = reference();
+    let d = te.d;
+    let want = model.predict(&te.x[..d * 4]);
+    // write the checkpoint with the binary's own train command
+    let ckpt = std::env::temp_dir().join("wlsh_serve_load_main.ckpt");
+    let out = Command::new(env!("CARGO_BIN_EXE_wlsh-krr"))
+        .arg("train")
+        .args(FLAGS)
+        .args(["--checkpoint-out", ckpt.to_str().unwrap()])
+        .output()
+        .expect("spawn wlsh-krr train");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let spec = format!("main={}", ckpt.display());
+    let (child, addr) = spawn_serve(&["--model", &spec, "--workers", "2"]);
+    let mut conn = TcpStream::connect(&addr).unwrap();
+    conn.set_nodelay(true).ok();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    for (qi, w) in want.iter().enumerate() {
+        // routed explicitly by name
+        writeln!(conn, "{{\"features\": {}, \"model\": \"main\"}}", row_json(&te.x, d, qi))
+            .unwrap();
+        let got = read_pred(&mut reader);
+        assert!(got == *w, "row {qi}: {got} vs {w}");
+    }
+    // a single registered model also serves bare requests...
+    writeln!(conn, "{{\"features\": {}}}", row_json(&te.x, d, 0)).unwrap();
+    assert!(read_pred(&mut reader) == want[0]);
+    // ...and unknown names are a clean error
+    writeln!(conn, "{{\"features\": {}, \"model\": \"nope\"}}", row_json(&te.x, d, 0)).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("error") && line.contains("nope"), "{line}");
+    drop(conn);
+    shutdown_and_expect_exit_0(child, &addr);
+    std::fs::remove_file(&ckpt).ok();
+}

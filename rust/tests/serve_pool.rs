@@ -1,0 +1,260 @@
+//! Worker-pool serving engine, end-to-end through the TCP server:
+//! bit-identical predictions for every worker count / queue depth / batch
+//! boundary / arrival order, lossless signal-driven shutdown, and atomic
+//! hot-reload over a live connection.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use wlsh_krr::api::MethodSpec;
+use wlsh_krr::config::KrrConfig;
+use wlsh_krr::coordinator::{
+    checkpoint, serve, ModelRegistry, ServerConfig, ServerStats, Trainer, TrainedModel,
+};
+use wlsh_krr::data::{synthetic_by_name, Dataset};
+use wlsh_krr::util::json::{Json, JsonWriter};
+
+fn trained(budget: usize) -> (Arc<TrainedModel>, Dataset) {
+    let mut ds = synthetic_by_name("wine", Some(150), 1).unwrap();
+    ds.standardize();
+    let (tr, te) = ds.split(120, 2);
+    let cfg = KrrConfig {
+        method: MethodSpec::Wlsh,
+        budget,
+        scale: 3.0,
+        ..Default::default()
+    };
+    (Arc::new(Trainer::new(cfg).train(&tr).unwrap()), te)
+}
+
+fn start(
+    registry: Arc<ModelRegistry>,
+    cfg: ServerConfig,
+) -> (String, std::thread::JoinHandle<Arc<ServerStats>>) {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || serve(registry, cfg, Some(tx)).unwrap());
+    (rx.recv().unwrap(), handle)
+}
+
+/// One query row as a JSON array literal, with shortest-roundtrip floats
+/// (the wire format recovers the exact f32s, so server-side predictions
+/// are bit-identical to calling the model in-process).
+fn row_json(queries: &[f32], d: usize, qi: usize) -> String {
+    let feats: Vec<String> =
+        queries[qi * d..(qi + 1) * d].iter().map(|v| format!("{v}")).collect();
+    format!("[{}]", feats.join(","))
+}
+
+fn read_pred(reader: &mut BufReader<TcpStream>) -> f64 {
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    Json::parse(&line)
+        .unwrap_or_else(|e| panic!("bad reply {line:?}: {e}"))
+        .get("pred")
+        .and_then(Json::as_f64)
+        .unwrap_or_else(|| panic!("no pred in {line:?}"))
+}
+
+fn shutdown(addr: &str) {
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    writeln!(conn, "{{\"cmd\": \"shutdown\"}}").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("ok"), "{line}");
+}
+
+#[test]
+fn predictions_bit_identical_across_workers_queue_depth_and_batching() {
+    let (model, te) = trained(16);
+    let d = te.d;
+    let nq = te.n.min(48);
+    let queries = &te.x[..nq * d];
+    let want = model.predict(queries);
+    // worker count × queue depth × batch bound × linger, all over the same
+    // request set with mixed single/batch requests and shuffled arrival
+    for (workers, depth, max_batch, linger_us) in [
+        (1usize, 1024usize, 64usize, 200u64),
+        (2, 3, 1, 0),
+        (8, 1024, 4, 100),
+        (4, 8, 64, 0),
+    ] {
+        let cfg = ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_batch,
+            linger: Duration::from_micros(linger_us),
+            workers,
+            queue_depth: depth,
+        };
+        let (addr, handle) = start(ModelRegistry::single(model.clone()), cfg);
+        let got = Mutex::new(vec![f64::NAN; nq]);
+        std::thread::scope(|scope| {
+            for c in 0..3usize {
+                let addr = addr.clone();
+                let got = &got;
+                scope.spawn(move || {
+                    let mut conn = TcpStream::connect(&addr).unwrap();
+                    conn.set_nodelay(true).ok();
+                    let mut reader = BufReader::new(conn.try_clone().unwrap());
+                    // this client's rows; one client sends in reverse so
+                    // arrival order differs from index order
+                    let mut mine: Vec<usize> = (0..nq).filter(|i| i % 3 == c).collect();
+                    if c == 1 {
+                        mine.reverse();
+                    }
+                    let mut k = 0;
+                    let mut use_batch = false;
+                    while k < mine.len() {
+                        if !use_batch || k + 1 == mine.len() {
+                            let qi = mine[k];
+                            writeln!(conn, "{{\"features\": {}}}", row_json(queries, d, qi))
+                                .unwrap();
+                            got.lock().unwrap()[qi] = read_pred(&mut reader);
+                            k += 1;
+                        } else {
+                            // batch requests may not exceed the server's
+                            // max_batch row cap
+                            let take = (mine.len() - k).min(4).min(max_batch);
+                            let idxs: Vec<usize> = mine[k..k + take].to_vec();
+                            let rows: Vec<String> =
+                                idxs.iter().map(|&qi| row_json(queries, d, qi)).collect();
+                            writeln!(conn, "{{\"batch\": [{}]}}", rows.join(",")).unwrap();
+                            for &qi in &idxs {
+                                got.lock().unwrap()[qi] = read_pred(&mut reader);
+                            }
+                            k += take;
+                        }
+                        use_batch = !use_batch;
+                    }
+                });
+            }
+        });
+        let got = got.into_inner().unwrap();
+        for i in 0..nq {
+            assert!(
+                got[i] == want[i],
+                "workers={workers} depth={depth} max_batch={max_batch} row {i}: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+        shutdown(&addr);
+        handle.join().unwrap();
+    }
+}
+
+#[test]
+fn shutdown_during_in_flight_requests_loses_no_replies() {
+    let (model, te) = trained(8);
+    let d = te.d;
+    // linger 0 keeps the pipelined burst well inside the shutdown grace
+    // window even on a loaded machine
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        linger: Duration::from_micros(0),
+        ..Default::default()
+    };
+    let (addr, handle) = start(ModelRegistry::single(model), cfg);
+    // client A pipelines a burst without reading any replies...
+    let mut a = TcpStream::connect(&addr).unwrap();
+    a.set_nodelay(true).ok();
+    let mut ra = BufReader::new(a.try_clone().unwrap());
+    const N: usize = 40;
+    let mut burst = String::new();
+    for i in 0..N {
+        burst.push_str(&format!("{{\"features\": {}}}\n", row_json(&te.x, d, i % te.n)));
+    }
+    a.write_all(burst.as_bytes()).unwrap();
+    // ...then a second client shuts the server down while A's requests are
+    // still in flight. Two pipelined shutdowns in one write: idempotent.
+    let mut b = TcpStream::connect(&addr).unwrap();
+    b.set_nodelay(true).ok();
+    let mut rb = BufReader::new(b.try_clone().unwrap());
+    b.write_all(b"{\"cmd\": \"shutdown\"}\n{\"cmd\": \"shutdown\"}\n").unwrap();
+    for k in 0..2 {
+        let mut line = String::new();
+        rb.read_line(&mut line).unwrap();
+        assert!(line.contains("ok"), "shutdown reply {k}: {line:?}");
+    }
+    // every request A managed to send still gets its reply
+    for i in 0..N {
+        let mut line = String::new();
+        ra.read_line(&mut line).unwrap();
+        assert!(line.contains("pred"), "request {i} lost in shutdown: {line:?}");
+    }
+    drop(a);
+    drop(b);
+    let stats = handle.join().unwrap();
+    assert_eq!(stats.served.get(), N as u64);
+    assert_eq!(stats.rejected.get(), 0);
+}
+
+#[test]
+fn reload_cmd_hot_swaps_checkpoints_without_dropping_the_connection() {
+    let mut ds = synthetic_by_name("wine", Some(150), 1).unwrap();
+    ds.standardize();
+    let (tr, te) = ds.split(120, 2);
+    let tr = Arc::new(tr);
+    let mk = |budget: usize| {
+        let cfg = KrrConfig {
+            method: MethodSpec::Wlsh,
+            budget,
+            scale: 3.0,
+            ..Default::default()
+        };
+        Trainer::new(cfg).train(&tr).unwrap()
+    };
+    let m1 = mk(8);
+    let m2 = mk(32);
+    let p2 = std::env::temp_dir().join("wlsh_serve_pool_v2.ckpt");
+    checkpoint::save(&m2, &p2).unwrap();
+    let q = &te.x[..te.d];
+    let want1 = m1.predict(q)[0];
+    let want2 = m2.predict(q)[0];
+    assert!(want1 != want2, "budgets 8 vs 32 must disagree for this test to bite");
+    let ltr = tr.clone();
+    let registry = Arc::new(ModelRegistry::with_loader(Box::new(move |path: &str| {
+        checkpoint::load(std::path::Path::new(path), &ltr).map(Arc::new)
+    })));
+    registry.insert("default", Arc::new(m1));
+    let cfg = ServerConfig { addr: "127.0.0.1:0".into(), workers: 2, ..Default::default() };
+    let (addr, handle) = start(registry, cfg);
+    let mut conn = TcpStream::connect(&addr).unwrap();
+    conn.set_nodelay(true).ok();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let features = row_json(&te.x, te.d, 0);
+    writeln!(conn, "{{\"features\": {features}}}").unwrap();
+    assert_eq!(read_pred(&mut reader), want1);
+    // hot-reload "default" from the v2 checkpoint — same connection
+    let req = JsonWriter::object()
+        .field_str("cmd", "reload")
+        .field_str("model", "default")
+        .field_str("path", p2.to_str().unwrap())
+        .finish();
+    writeln!(conn, "{req}").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("ok"), "reload failed: {line}");
+    writeln!(conn, "{{\"features\": {features}}}").unwrap();
+    assert_eq!(read_pred(&mut reader), want2);
+    // a bad reload errors but the server keeps serving the current model
+    let bad = JsonWriter::object()
+        .field_str("cmd", "reload")
+        .field_str("model", "default")
+        .field_str("path", "/nonexistent/ckpt")
+        .finish();
+    writeln!(conn, "{bad}").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("error"), "{line}");
+    writeln!(conn, "{{\"features\": {features}}}").unwrap();
+    assert_eq!(read_pred(&mut reader), want2);
+    writeln!(conn, "{{\"cmd\": \"shutdown\"}}").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    handle.join().unwrap();
+    std::fs::remove_file(&p2).ok();
+}

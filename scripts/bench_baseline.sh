@@ -62,10 +62,13 @@ extract() {
         next
     }
     FILENAME ~ /serve\.jsonl$/ {
-        c = num($0, "clients"); b = str($0, "batching")
-        if (c == "" || b == "") next
-        if ((v = num($0, "p50_us")) != "") print "serve.p50_us.c" c ".batch_" b, v
-        if ((v = num($0, "p99_us")) != "") print "serve.p99_us.c" c ".batch_" b, v
+        # worker-pool engine capture: keyed by client count x worker count;
+        # us_per_req is inverse throughput, so every key stays lower-is-better
+        c = num($0, "clients"); w = num($0, "workers")
+        if (c == "" || w == "") next
+        if ((v = num($0, "us_per_req")) != "") print "serve.us_per_req.c" c ".w" w, v
+        if ((v = num($0, "p50_us")) != "")     print "serve.p50_us.c" c ".w" w, v
+        if ((v = num($0, "p99_us")) != "")     print "serve.p99_us.c" c ".w" w, v
         next
     }
     ' "$@"
