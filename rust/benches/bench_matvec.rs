@@ -9,6 +9,8 @@
 mod common;
 
 use common::{by_scale, record, secs, Table};
+use wlsh_krr::api::BucketSpec;
+use wlsh_krr::data::{DensifySource, LibsvmSource};
 use wlsh_krr::kernels::Kernel;
 use wlsh_krr::lsh::IdMode;
 use wlsh_krr::runtime::Runtime;
@@ -93,6 +95,59 @@ fn main() {
          terms, contiguous member/weight walks, one buffer per 8-instance\n\
          block)."
     );
+
+    // Sparse CSR streaming builds: the operators consume a LIBSVM stream's
+    // stored coordinates only, vs the same file forced dense through
+    // DensifySource — the per-row hash/featurize win approaches the d/nnz
+    // work ratio (file parsing is common to both sides).
+    let (sn, sd, snnz) = (by_scale(1000, 4000, 16384), 2000usize, 40usize);
+    println!("\n=== sparse CSR streaming build (n={sn}, d={sd}, ~{snnz} nnz/row) ===\n");
+    let sparse_path = std::env::temp_dir().join("wlsh_bench_sparse.svm");
+    write_sparse_libsvm(&sparse_path, sn, sd, snnz, 11);
+    let sp = sparse_path.to_string_lossy().into_owned();
+    let src = LibsvmSource::open(&sp).expect("bench libsvm source");
+    let dense = DensifySource::new(&src);
+    let rect = BucketSpec::Rect;
+    let sbudget = by_scale(0.1, 0.3, 0.5);
+    let s_wlsh_sp = bench("wlsh-sparse", sbudget, || {
+        WlshSketch::build_source(&src, m, &rect, 2.0, 4.0, 1, IdMode::U64, 2048, 1).unwrap()
+    });
+    let s_wlsh_dn = bench("wlsh-densified", sbudget, || {
+        WlshSketch::build_source(&dense, m, &rect, 2.0, 4.0, 1, IdMode::U64, 2048, 1).unwrap()
+    });
+    let s_rff_sp = bench("rff-sparse", sbudget, || {
+        RffSketch::build_source(&src, 128, 4.0, 2, 2048, 1).unwrap()
+    });
+    let s_rff_dn = bench("rff-densified", sbudget, || {
+        RffSketch::build_source(&dense, 128, 4.0, 2, 2048, 1).unwrap()
+    });
+    let ts = Table::new(&[("build", 8), ("sparse", 10), ("densified", 10), ("speedup", 8)]);
+    ts.row(&[
+        "wlsh".into(),
+        secs(s_wlsh_sp.min_secs),
+        secs(s_wlsh_dn.min_secs),
+        format!("{:.1}x", s_wlsh_dn.min_secs / s_wlsh_sp.min_secs),
+    ]);
+    ts.row(&[
+        "rff".into(),
+        secs(s_rff_sp.min_secs),
+        secs(s_rff_dn.min_secs),
+        format!("{:.1}x", s_rff_dn.min_secs / s_rff_sp.min_secs),
+    ]);
+    record(
+        "matvec",
+        &JsonWriter::object()
+            .field_str("series", "sparse_stream_build")
+            .field_usize("n", sn)
+            .field_usize("d", sd)
+            .field_usize("nnz_row", snnz)
+            .field_f64("wlsh_sparse_secs", s_wlsh_sp.min_secs)
+            .field_f64("wlsh_densified_secs", s_wlsh_dn.min_secs)
+            .field_f64("rff_sparse_secs", s_rff_sp.min_secs)
+            .field_f64("rff_densified_secs", s_rff_dn.min_secs)
+            .finish(),
+    );
+    std::fs::remove_file(&sparse_path).ok();
 
     // Parallel WLSH mat-vec: scoped-thread fan-out over instances, reduced
     // in fixed instance order (bit-identical to serial — asserted here and
@@ -179,5 +234,31 @@ fn main() {
             );
         }
         Err(e) => println!("\n(xla backend skipped: {e})"),
+    }
+}
+
+/// Generate an n-row LIBSVM file with ~`nnz` stored values per row over
+/// `d` features (1-based indices, ascending random jumps) — no dense
+/// n×d matrix is ever materialized.
+fn write_sparse_libsvm(path: &std::path::Path, n: usize, d: usize, nnz: usize, seed: u64) {
+    use std::io::Write;
+    let mut rng = Pcg64::new(seed, 0);
+    let file = std::fs::File::create(path).expect("bench libsvm file");
+    let mut w = std::io::BufWriter::new(file);
+    for i in 0..n {
+        let mut line = format!("{:.6}", (i as f64 * 0.37).sin());
+        // pin the dimensionality via row 0 (the loader sorts + dedupes)
+        if i == 0 {
+            line.push_str(&format!(" {d}:0.5"));
+        }
+        let mut idx = 0usize;
+        loop {
+            idx += 1 + (rng.uniform() * (2 * d / nnz) as f64) as usize;
+            if idx > d {
+                break;
+            }
+            line.push_str(&format!(" {}:{:.4}", idx, rng.uniform() * 2.0 - 1.0));
+        }
+        writeln!(w, "{line}").expect("bench libsvm write");
     }
 }

@@ -29,6 +29,9 @@ pub use spec::{
 };
 
 pub use crate::coordinator::TrainedModel;
+// Re-exported so `Predictor::predict_sparse_into` is usable from the api
+// module alone — CSR queries need the chunk type to be nameable here.
+pub use crate::data::SparseChunk;
 pub use crate::sketch::Predictor;
 
 use crate::config::KrrConfig;
@@ -215,6 +218,15 @@ impl KrrBuilder {
     /// [`fit`](Self::fit) on the materialized rows at every
     /// [`chunk_rows`](Self::chunk_rows) / [`workers`](Self::workers)
     /// setting.
+    ///
+    /// Sources whose [`DataSource::is_sparse`] is true (e.g. a
+    /// [`LibsvmSource`](crate::data::LibsvmSource)) stream native CSR
+    /// chunks end to end: the sketch builds consume stored coordinates
+    /// only, so peak memory scales with nnz rather than n·d, and the
+    /// result stays bit-identical to training on the densified rows.
+    /// Wrap the source in
+    /// [`DensifySource`](crate::data::DensifySource) to force the dense
+    /// path.
     pub fn fit_source(self, src: &dyn DataSource) -> Result<TrainedModel, KrrError> {
         let config = self.build_config()?;
         Trainer::new(config).train_source(src)

@@ -24,6 +24,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::TrainedModel;
+use crate::data::SparseChunk;
 
 /// Batch-prediction surface the pool drives: one prediction per feature
 /// row, written into `out` (the
@@ -32,18 +33,47 @@ use super::TrainedModel;
 /// identity models to exercise overload and drain behavior.
 pub trait BatchPredict: Send + Sync {
     fn predict_rows(&self, rows: &[f32], out: &mut [f64]);
+
+    /// One prediction per CSR query row (`d` features per row). The
+    /// default densifies the block and defers to
+    /// [`predict_rows`](Self::predict_rows); [`TrainedModel`] routes to
+    /// the operator's native sparse kernel.
+    fn predict_sparse_rows(&self, d: usize, queries: SparseChunk<'_>, out: &mut [f64]) {
+        let mut rows = vec![0.0f32; queries.nrows() * d];
+        for i in 0..queries.nrows() {
+            let (idx, vals) = queries.row(i);
+            for (&j, &v) in idx.iter().zip(vals) {
+                rows[i * d + j as usize] = v;
+            }
+        }
+        self.predict_rows(&rows, out);
+    }
 }
 
 impl BatchPredict for TrainedModel {
     fn predict_rows(&self, rows: &[f32], out: &mut [f64]) {
         self.predict_into(rows, out)
     }
+
+    fn predict_sparse_rows(&self, d: usize, queries: SparseChunk<'_>, out: &mut [f64]) {
+        assert_eq!(d, self.dim(), "sparse query dimensionality mismatch");
+        self.predict_sparse_into(&queries, out)
+    }
 }
 
-/// One queued request: `nrows` concatenated feature rows bound for
-/// `model`, and the channel to answer on (one prediction per row).
+/// A queued request's feature rows, in whichever representation the
+/// client sent them.
+pub enum RowBlock {
+    /// Row-major concatenated dense rows.
+    Dense(Vec<f32>),
+    /// An owned CSR block (`d` features per row; `indptr.len() == nrows+1`).
+    Sparse { d: usize, indptr: Vec<usize>, indices: Vec<u32>, values: Vec<f32> },
+}
+
+/// One queued request: `nrows` feature rows bound for `model`, and the
+/// channel to answer on (one prediction per row).
 pub struct BatchItem {
-    pub rows: Vec<f32>,
+    pub rows: RowBlock,
     pub nrows: usize,
     pub model: Arc<dyn BatchPredict>,
     pub reply: Sender<Vec<f64>>,
@@ -172,7 +202,29 @@ impl WorkerPool {
         nrows: usize,
     ) -> Result<Vec<f64>, SubmitError> {
         let (reply, rx) = mpsc::channel();
-        self.submit(BatchItem { rows, nrows, model, reply })?;
+        self.submit(BatchItem { rows: RowBlock::Dense(rows), nrows, model, reply })?;
+        rx.recv().map_err(|_| SubmitError::WorkerGone)
+    }
+
+    /// Submit an owned CSR block of query rows and block until it is
+    /// served. One prediction per row, in row order — bit-identical to
+    /// [`predict`](Self::predict) on the densified rows.
+    pub fn predict_sparse(
+        &self,
+        model: Arc<dyn BatchPredict>,
+        d: usize,
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+    ) -> Result<Vec<f64>, SubmitError> {
+        let nrows = indptr.len().saturating_sub(1);
+        let (reply, rx) = mpsc::channel();
+        self.submit(BatchItem {
+            rows: RowBlock::Sparse { d, indptr, indices, values },
+            nrows,
+            model,
+            reply,
+        })?;
         rx.recv().map_err(|_| SubmitError::WorkerGone)
     }
 
@@ -282,12 +334,27 @@ impl Shared {
         // distinct addresses) — avoids comparing trait-object vtables,
         // which are not guaranteed unique.
         let model_id = |it: &BatchItem| Arc::as_ptr(&it.model) as *const ();
+        let is_dense = |it: &BatchItem| matches!(it.rows, RowBlock::Dense(_));
         let mut i = 0;
         while i < pending.len() {
+            // Sparse items are served one per call — CSR blocks would need
+            // an offset-shifting concatenation to fuse, and each row's
+            // prediction is independent anyway, so fusing buys nothing
+            // numerically. Dense fusion below is unchanged.
+            if let RowBlock::Sparse { d, indptr, indices, values } = &pending[i].rows {
+                preds.clear();
+                preds.resize(pending[i].nrows, 0.0);
+                let sp = SparseChunk { indptr, indices, values };
+                pending[i].model.predict_sparse_rows(*d, sp, preds);
+                let _ = pending[i].reply.send(preds.clone());
+                i += 1;
+                continue;
+            }
             let mut total = pending[i].nrows;
             let mut j = i + 1;
             while j < pending.len()
                 && std::ptr::eq(model_id(&pending[j]), model_id(&pending[i]))
+                && is_dense(&pending[j])
                 && total + pending[j].nrows <= self.max_batch
             {
                 total += pending[j].nrows;
@@ -295,7 +362,9 @@ impl Shared {
             }
             rows.clear();
             for it in &pending[i..j] {
-                rows.extend_from_slice(&it.rows);
+                if let RowBlock::Dense(r) = &it.rows {
+                    rows.extend_from_slice(r);
+                }
             }
             preds.clear();
             preds.resize(total, 0.0);
@@ -397,12 +466,22 @@ mod tests {
         std::thread::sleep(Duration::from_millis(100));
         // fill the queue (depth 1) ...
         let (reply, rx_queued) = mpsc::channel();
-        pool.submit(BatchItem { rows: vec![2.0], nrows: 1, model: model.clone(), reply })
-            .expect("first queued item fits");
+        pool.submit(BatchItem {
+            rows: RowBlock::Dense(vec![2.0]),
+            nrows: 1,
+            model: model.clone(),
+            reply,
+        })
+        .expect("first queued item fits");
         // ... and the next submit is shed, not queued
         let (reply2, _rx) = mpsc::channel();
         let err = pool
-            .submit(BatchItem { rows: vec![3.0], nrows: 1, model: model.clone(), reply: reply2 })
+            .submit(BatchItem {
+                rows: RowBlock::Dense(vec![3.0]),
+                nrows: 1,
+                model: model.clone(),
+                reply: reply2,
+            })
             .unwrap_err();
         assert_eq!(err, SubmitError::Overloaded);
         assert_eq!(busy.join().unwrap(), vec![1.0]);
@@ -419,7 +498,7 @@ mod tests {
         for i in 0..5 {
             let (reply, rx) = mpsc::channel();
             pool.submit(BatchItem {
-                rows: vec![i as f32],
+                rows: RowBlock::Dense(vec![i as f32]),
                 nrows: 1,
                 model: model.clone(),
                 reply,
@@ -515,6 +594,19 @@ mod tests {
         }
         let seen = mr.max.load(Ordering::SeqCst);
         assert!(seen <= 4, "fused call of {seen} rows exceeded the 4-row budget");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn sparse_items_flow_through_the_default_densify_path() {
+        let model: Arc<dyn BatchPredict> =
+            Arc::new(Doubler { d: 3, batches: AtomicUsize::new(0) });
+        let pool = WorkerPool::spawn(1, 16, 8, Duration::ZERO);
+        // two CSR rows over d=3: [4,0,1] and [0,2,0]
+        let y = pool
+            .predict_sparse(model, 3, vec![0, 2, 3], vec![0, 2, 1], vec![4.0, 1.0, 2.0])
+            .unwrap();
+        assert_eq!(y, vec![8.0, 0.0]);
         pool.shutdown();
     }
 

@@ -14,7 +14,7 @@ mod router;
 mod server;
 mod trainer;
 
-pub use batcher::{BatchItem, BatchPredict, SubmitError, WorkerPool};
+pub use batcher::{BatchItem, BatchPredict, RowBlock, SubmitError, WorkerPool};
 pub use registry::{ModelLoader, ModelRegistry, ModelStats, DEFAULT_MODEL};
 pub use router::PredictRouter;
 pub use server::{serve, ServerConfig, ServerStats};

@@ -3,6 +3,8 @@
 //! Protocol (one JSON object per line):
 //!   → {"features": [f1, ...], "model": "m"?}  ← {"pred": 1.234} | {"error": "..."}
 //!   → {"batch": [[...], ...], "model": "m"?}  ← one {"pred": ...} line per row, in order
+//!   → {"sparse": [[idx, val], ...], "model": "m"?}  ← {"pred": ...}  (one CSR row;
+//!       omitted indices are 0, duplicate indices keep the last value)
 //!   → {"cmd": "stats"}                        ← {"served": ..., "rejected": ...,
 //!                                                "queue_depth": ..., "workers": ...,
 //!                                                p50/p90/p95/p99, "models": {per-model}}
@@ -271,16 +273,28 @@ fn handle_line(
         }
     };
     let d = model.dim();
-    let (rows, nrows) = match gather_rows(&req, d, pool.max_batch()) {
-        Ok(v) => v,
-        Err(msg) => {
-            writeln!(writer, "{}", err_json(&msg))?;
-            return Ok(());
+    let handle: Arc<dyn BatchPredict> = model;
+    let t = Instant::now();
+    let (outcome, nrows) = if let Some(sp) = req.get("sparse") {
+        match gather_sparse(sp, d) {
+            Ok((indptr, indices, values)) => {
+                (pool.predict_sparse(handle, d, indptr, indices, values), 1)
+            }
+            Err(msg) => {
+                writeln!(writer, "{}", err_json(&msg))?;
+                return Ok(());
+            }
+        }
+    } else {
+        match gather_rows(&req, d, pool.max_batch()) {
+            Ok((rows, nrows)) => (pool.predict(handle, rows, nrows), nrows),
+            Err(msg) => {
+                writeln!(writer, "{}", err_json(&msg))?;
+                return Ok(());
+            }
         }
     };
-    let t = Instant::now();
-    let handle: Arc<dyn BatchPredict> = model;
-    match pool.predict(handle, rows, nrows) {
+    match outcome {
         Ok(preds) => {
             let secs = t.elapsed().as_secs_f64();
             stats.latency.record(secs);
@@ -345,6 +359,48 @@ fn gather_rows(req: &Json, d: usize, max_rows: usize) -> Result<(Vec<f32>, usize
         return Ok((rows, batch.len()));
     }
     Err("need \"features\", \"batch\", or \"cmd\"".to_string())
+}
+
+/// Extract one CSR query row from a `"sparse"` value: an array of
+/// `[index, value]` pairs. Indices must be non-negative integers below
+/// `d` ([`Json::as_usize`] rejects negative, fractional, and non-finite
+/// numbers); pairs are sorted and deduplicated (last value wins) to the
+/// loader's CSR invariant. An empty array is a valid all-zeros row.
+fn gather_sparse(sp: &Json, d: usize) -> Result<(Vec<usize>, Vec<u32>, Vec<f32>), String> {
+    let pairs = sp
+        .as_arr()
+        .ok_or_else(|| "\"sparse\" must be an array of [index, value] pairs".to_string())?;
+    let mut entries: Vec<(u32, f32)> = Vec::with_capacity(pairs.len());
+    for (i, p) in pairs.iter().enumerate() {
+        let p = p
+            .as_arr()
+            .filter(|p| p.len() == 2)
+            .ok_or_else(|| format!("sparse entry {i} must be an [index, value] pair"))?;
+        let idx = p[0]
+            .as_usize()
+            .ok_or_else(|| format!("sparse entry {i}: index must be a non-negative integer"))?;
+        if idx >= d {
+            return Err(format!("sparse entry {i}: index {idx} out of range for {d} features"));
+        }
+        let val = p[1]
+            .as_f64()
+            .ok_or_else(|| format!("sparse entry {i}: value must be a number"))?;
+        entries.push((idx as u32, val as f32));
+    }
+    // ascending unique indices; the stable sort keeps arrival order among
+    // duplicates, so last-wins matches a dense scatter's overwrite
+    entries.sort_by_key(|e| e.0);
+    let mut indices: Vec<u32> = Vec::with_capacity(entries.len());
+    let mut values: Vec<f32> = Vec::with_capacity(entries.len());
+    for (j, v) in entries {
+        if indices.last() == Some(&j) {
+            *values.last_mut().expect("non-empty") = v;
+        } else {
+            indices.push(j);
+            values.push(v);
+        }
+    }
+    Ok((vec![0, indices.len()], indices, values))
 }
 
 /// The `stats` reply: global counters + latency quantiles, queue state,
@@ -517,9 +573,61 @@ mod tests {
         expect_error("{\"features\": [1,2,3], \"model\": \"nope\"}"); // unknown model
         expect_error("{\"cmd\": \"reload\", \"path\": \"x\"}"); // no loader configured
         expect_error("{\"cmd\": \"nope\"}");
+        // sparse request malformations — a negative or fractional index
+        // must be an error, not a silently saturated huge/zero index
+        expect_error("{\"sparse\": [[-1, 2.0]]}");
+        expect_error("{\"sparse\": [[0.5, 2.0]]}");
+        expect_error("{\"sparse\": [[99999, 2.0]]}"); // out of range
+        expect_error("{\"sparse\": \"x\"}");
+        expect_error("{\"sparse\": [[1.0]]}"); // not a pair
+        expect_error("{\"sparse\": [[0, \"x\"]]}"); // non-numeric value
         writeln!(conn, "{{\"cmd\": \"shutdown\"}}").unwrap();
         let mut line3 = String::new();
         reader.read_line(&mut line3).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn sparse_requests_roundtrip_bit_identically_to_dense() {
+        let (model, d, queries, expected) = small_model();
+        let (addr, handle) = start(ModelRegistry::single(model), 1);
+        let mut conn = TcpStream::connect(&addr).unwrap();
+        conn.set_nodelay(true).ok();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let ask = |conn: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str| {
+            writeln!(conn, "{req}").unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            Json::parse(&line)
+                .unwrap_or_else(|e| panic!("{req} → {line}: {e}"))
+                .get("pred")
+                .and_then(Json::as_f64)
+                .unwrap_or_else(|| panic!("{req} → {line}"))
+        };
+        for (qi, want) in expected.iter().enumerate() {
+            let row = &queries[qi * d..(qi + 1) * d];
+            // full row as pairs — and again in reverse order with a stale
+            // duplicate first (last value wins), exercising sort + dedupe
+            let pairs: Vec<String> =
+                row.iter().enumerate().map(|(j, v)| format!("[{j},{v}]")).collect();
+            let mut rev = pairs.clone();
+            rev.reverse();
+            rev.insert(0, format!("[0,{}]", row[0] as f64 + 7.0));
+            rev.push(format!("[0,{}]", row[0]));
+            for req in
+                [format!("{{\"sparse\": [{}]}}", pairs.join(",")),
+                 format!("{{\"sparse\": [{}]}}", rev.join(","))]
+            {
+                let got = ask(&mut conn, &mut reader, &req);
+                assert!((got - want).abs() < 1e-12, "query {qi}: {got} vs {want}");
+            }
+        }
+        // an empty pair list is a valid all-zeros row
+        let got = ask(&mut conn, &mut reader, "{\"sparse\": []}");
+        assert!(got.is_finite());
+        writeln!(conn, "{{\"cmd\": \"shutdown\"}}").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
         handle.join().unwrap();
     }
 

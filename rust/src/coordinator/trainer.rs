@@ -14,7 +14,7 @@ use std::time::Instant;
 
 use crate::api::{KernelFamily, KrrError, MethodSpec, PrecondSpec};
 use crate::config::KrrConfig;
-use crate::data::{ChunkFn, DataSource, Dataset};
+use crate::data::{ChunkAnyFn, ChunkFn, DataSource, Dataset, SparseChunk};
 use crate::kernels::Kernel;
 use crate::lsh::IdMode;
 use crate::sketch::{
@@ -56,6 +56,13 @@ impl TrainedModel {
     /// `out`.
     pub fn predict_into(&self, queries: &[f32], out: &mut [f64]) {
         self.predictor.predict_into(queries, out)
+    }
+
+    /// Sparse batch serving: one prediction per CSR query row into `out`
+    /// (WLSH/RFF handles hash/featurize the rows without densifying; other
+    /// operators densify row by row).
+    pub fn predict_sparse_into(&self, queries: &SparseChunk<'_>, out: &mut [f64]) {
+        self.predictor.predict_sparse_into(queries, out)
     }
 
     /// The frozen serving handle itself.
@@ -376,6 +383,22 @@ impl DataSource for CollectTargets<'_> {
         self.inner.for_each_chunk(chunk_rows, &mut |rows, ys| {
             pass.extend_from_slice(ys);
             f(rows, ys)
+        })?;
+        *self.y.lock().expect("collector lock poisoned") = pass;
+        Ok(())
+    }
+
+    fn is_sparse(&self) -> bool {
+        self.inner.is_sparse()
+    }
+
+    fn for_each_chunk_any(&self, chunk_rows: usize, f: ChunkAnyFn) -> Result<(), KrrError> {
+        // Pass sparse chunks through untouched (the default would densify
+        // via `for_each_chunk`), still collecting the targets.
+        let mut pass: Vec<f64> = Vec::new();
+        self.inner.for_each_chunk_any(chunk_rows, &mut |chunk, ys| {
+            pass.extend_from_slice(ys);
+            f(chunk, ys)
         })?;
         *self.y.lock().expect("collector lock poisoned") = pass;
         Ok(())

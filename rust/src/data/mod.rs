@@ -14,8 +14,9 @@ mod standardize;
 mod synthetic;
 
 pub use source::{
-    head_sample, write_csv, write_libsvm, ChunkFn, CsvSource, DataSource, LibsvmSource,
-    MatrixSource,
+    head_sample, head_sample_sparse, write_csv, write_libsvm, Chunk, ChunkAnyFn, ChunkFn,
+    CsvSource, DataSource, DensifySource, LibsvmSource, MatrixSource, SparseBlock,
+    SparseChunk,
 };
 pub use standardize::{StandardizedSource, Standardizer};
 pub use synthetic::{synthetic_by_name, SyntheticSource, SyntheticSpec, SPECS};

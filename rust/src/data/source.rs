@@ -28,6 +28,22 @@
 //! Chunking is an execution detail, never a semantic one: all consumers in
 //! this crate are bit-identical across chunk sizes (asserted end-to-end by
 //! `tests/stream_equivalence.rs`).
+//!
+//! ## Sparse chunks
+//!
+//! Sources whose rows are naturally sparse ([`LibsvmSource`]) can stream
+//! CSR blocks instead of densified ones through
+//! [`for_each_chunk_any`](DataSource::for_each_chunk_any): a
+//! [`SparseChunk`] carries `indptr`/`indices`/`values` for a block of rows
+//! with absent coordinates meaning exactly 0. Consumers that opt into
+//! `for_each_chunk_any` receive whichever representation the source emits
+//! natively ([`is_sparse`](DataSource::is_sparse) says which, so callers
+//! can size buffers); everything else keeps calling
+//! [`for_each_chunk`](DataSource::for_each_chunk) and sees dense rows as
+//! before. Within a row, indices are ascending and unique — the loader
+//! sorts and deduplicates (last value wins, matching the dense scatter's
+//! overwrite), so per-row walks are mergeable against a dense dimension
+//! sweep.
 
 use std::fs::File;
 use std::io::{BufRead, BufReader};
@@ -38,6 +54,93 @@ use crate::api::KrrError;
 /// Visitor for one `(rows, targets)` block: `rows` is row-major with
 /// `rows.len() == targets.len() * d`. Returning `Err` aborts the pass.
 pub type ChunkFn<'a> = &'a mut dyn FnMut(&[f32], &[f64]) -> Result<(), KrrError>;
+
+/// Visitor for one representation-tagged block (dense or sparse CSR) with
+/// its targets. Returning `Err` aborts the pass.
+pub type ChunkAnyFn<'a> = &'a mut dyn FnMut(Chunk<'_>, &[f64]) -> Result<(), KrrError>;
+
+/// One block of rows in its native representation.
+pub enum Chunk<'a> {
+    /// Row-major dense rows, `rows.len() == nrows * d`.
+    Dense(&'a [f32]),
+    /// CSR rows; absent coordinates are exactly 0.
+    Sparse(SparseChunk<'a>),
+}
+
+/// A borrowed CSR view of one block of sparse rows: row `i`'s nonzeros
+/// are `indices[indptr[i]..indptr[i+1]]` (ascending, unique within a row)
+/// with the matching `values`. A listed value may still be 0.0 (an
+/// explicit `idx:0` in the file); consumers that skip zeros must skip it
+/// the same way the dense path does.
+#[derive(Clone, Copy)]
+pub struct SparseChunk<'a> {
+    /// Row offsets, `len == nrows + 1`, `indptr[0] == 0`.
+    pub indptr: &'a [usize],
+    /// Column indices per row, ascending and unique within each row.
+    pub indices: &'a [u32],
+    /// Values at those indices.
+    pub values: &'a [f32],
+}
+
+impl<'a> SparseChunk<'a> {
+    /// Rows in this block.
+    pub fn nrows(&self) -> usize {
+        self.indptr.len().saturating_sub(1)
+    }
+
+    /// Stored entries in this block.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Row `i`'s `(indices, values)` pair.
+    pub fn row(&self, i: usize) -> (&'a [u32], &'a [f32]) {
+        let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Scatter the block into a freshly-zeroed row-major dense buffer of
+    /// `nrows * d` — the densified equivalent the bit-identity tests
+    /// compare against.
+    pub fn densify_into(&self, d: usize, out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(self.nrows() * d, 0.0);
+        for i in 0..self.nrows() {
+            let (idx, vals) = self.row(i);
+            for (&j, &v) in idx.iter().zip(vals) {
+                out[i * d + j as usize] = v;
+            }
+        }
+    }
+}
+
+/// An owned CSR block of rows plus targets — the sparse analogue of a
+/// small [`Dataset`], returned by [`head_sample_sparse`] so streamed
+/// evaluation never allocates `k × d` dense floats.
+pub struct SparseBlock {
+    /// Features per row.
+    pub d: usize,
+    /// Row offsets (`len == n + 1`).
+    pub indptr: Vec<usize>,
+    /// Column indices (ascending, unique within each row).
+    pub indices: Vec<u32>,
+    /// Values at those indices.
+    pub values: Vec<f32>,
+    /// Targets.
+    pub y: Vec<f64>,
+}
+
+impl SparseBlock {
+    /// Rows in the block.
+    pub fn n(&self) -> usize {
+        self.y.len()
+    }
+
+    /// Borrow the rows as a [`SparseChunk`].
+    pub fn view(&self) -> SparseChunk<'_> {
+        SparseChunk { indptr: &self.indptr, indices: &self.indices, values: &self.values }
+    }
+}
 
 /// A re-iterable, chunked stream of `(rows, targets)` training data.
 pub trait DataSource: Send + Sync {
@@ -55,6 +158,21 @@ pub trait DataSource: Send + Sync {
     /// sequence from the start; blocks arrive on the calling thread, in
     /// order.
     fn for_each_chunk(&self, chunk_rows: usize, f: ChunkFn) -> Result<(), KrrError>;
+
+    /// Whether [`for_each_chunk_any`](Self::for_each_chunk_any) streams
+    /// sparse CSR chunks natively. `false` (the default) means it yields
+    /// the same dense blocks as [`for_each_chunk`](Self::for_each_chunk).
+    fn is_sparse(&self) -> bool {
+        false
+    }
+
+    /// Stream every row in its native representation: sources override
+    /// this to emit [`Chunk::Sparse`] CSR blocks without densifying; the
+    /// default wraps the dense stream. Same ordering/replay contract as
+    /// [`for_each_chunk`](Self::for_each_chunk).
+    fn for_each_chunk_any(&self, chunk_rows: usize, f: ChunkAnyFn) -> Result<(), KrrError> {
+        self.for_each_chunk(chunk_rows, &mut |rows, ys| f(Chunk::Dense(rows), ys))
+    }
 
     /// Collect the whole stream into an in-memory [`Dataset`].
     fn materialize(&self, chunk_rows: usize) -> Result<Dataset, KrrError> {
@@ -405,6 +523,12 @@ impl LibsvmSource {
         if d == 0 {
             return Err(KrrError::Dataset(format!("{path}: rows carry no features")));
         }
+        if d > u32::MAX as usize {
+            // sparse chunks store indices as u32
+            return Err(KrrError::Dataset(format!(
+                "{path}: dimensionality {d} exceeds the supported 2^32-1"
+            )));
+        }
         Ok(LibsvmSource { path: path.to_string(), name: path.to_string(), d, n, zero_based })
     }
 
@@ -472,6 +596,107 @@ impl DataSource for LibsvmSource {
         }
         Ok(())
     }
+
+    fn is_sparse(&self) -> bool {
+        true
+    }
+
+    fn for_each_chunk_any(&self, chunk_rows: usize, f: ChunkAnyFn) -> Result<(), KrrError> {
+        let chunk = chunk_rows.max(1);
+        let d = self.d;
+        let path = &self.path;
+        let base = if self.zero_based { 0u64 } else { 1u64 };
+        let file = File::open(path).map_err(|e| KrrError::Io(format!("{path}: {e}")))?;
+        let reader = BufReader::new(file);
+        let mut indptr: Vec<usize> = Vec::with_capacity(chunk.min(self.n) + 1);
+        indptr.push(0);
+        let mut indices: Vec<u32> = Vec::new();
+        let mut values: Vec<f32> = Vec::new();
+        let mut ys: Vec<f64> = Vec::with_capacity(chunk.min(self.n));
+        for (lineno, line) in reader.lines().enumerate() {
+            let line = line.map_err(|e| KrrError::Io(format!("{path}: {e}")))?;
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (label, mut pairs) = parse_libsvm_line(line)
+                .map_err(|e| KrrError::Dataset(format!("{path}:{}: {e}", lineno + 1)))?;
+            // ascending, unique indices per row (stable sort + last-wins
+            // dedupe keeps the dense scatter's overwrite semantics)
+            pairs.sort_by_key(|p| p.0);
+            let row_start = indices.len();
+            for (idx, val) in pairs {
+                let j = idx
+                    .checked_sub(base)
+                    .filter(|&j| (j as usize) < d)
+                    .ok_or_else(|| {
+                        KrrError::Dataset(format!(
+                            "{path}:{}: feature index {idx} out of range for d={d}",
+                            lineno + 1
+                        ))
+                    })? as u32;
+                if indices.len() > row_start && *indices.last().unwrap() == j {
+                    *values.last_mut().unwrap() = val as f32;
+                } else {
+                    indices.push(j);
+                    values.push(val as f32);
+                }
+            }
+            indptr.push(indices.len());
+            ys.push(label);
+            if ys.len() == chunk {
+                let view =
+                    SparseChunk { indptr: &indptr, indices: &indices, values: &values };
+                f(Chunk::Sparse(view), &ys)?;
+                indptr.clear();
+                indptr.push(0);
+                indices.clear();
+                values.clear();
+                ys.clear();
+            }
+        }
+        if !ys.is_empty() {
+            let view = SparseChunk { indptr: &indptr, indices: &indices, values: &values };
+            f(Chunk::Sparse(view), &ys)?;
+        }
+        Ok(())
+    }
+}
+
+/// Force the dense chunk representation: `for_each_chunk_any` on this
+/// adapter always yields [`Chunk::Dense`] regardless of the inner
+/// source's native representation — the `--sparse=false` escape hatch
+/// that restores the densifying pipeline (and its centered
+/// standardization) for sparse files.
+pub struct DensifySource<'a> {
+    inner: &'a dyn DataSource,
+}
+
+impl<'a> DensifySource<'a> {
+    /// View `inner` as a dense-only source.
+    pub fn new(inner: &'a dyn DataSource) -> DensifySource<'a> {
+        DensifySource { inner }
+    }
+}
+
+impl DataSource for DensifySource<'_> {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        self.inner.len_hint()
+    }
+
+    fn for_each_chunk(&self, chunk_rows: usize, f: ChunkFn) -> Result<(), KrrError> {
+        self.inner.for_each_chunk(chunk_rows, f)
+    }
+    // is_sparse / for_each_chunk_any deliberately stay at the dense
+    // defaults, which route through the inner source's dense stream
 }
 
 /// Serialize a dataset in LIBSVM format (nonzero features only) — test
@@ -549,6 +774,66 @@ pub fn head_sample(
         return Err(KrrError::Dataset(format!("{}: no data rows", src.name())));
     }
     Ok(Dataset::new(src.name(), x, y, d))
+}
+
+/// Sparse analogue of [`head_sample`]: the first `k` rows as an owned CSR
+/// [`SparseBlock`] (O(k·nnz) memory instead of O(k·d)) — the evaluation
+/// sample for sparse streamed training, where densifying even the head
+/// would cost `k × d` floats. Dense chunks from a mixed stream are
+/// compressed (zeros dropped).
+pub fn head_sample_sparse(
+    src: &dyn DataSource,
+    k: usize,
+    chunk_rows: usize,
+) -> Result<SparseBlock, KrrError> {
+    let d = src.dim();
+    let mut out = SparseBlock {
+        d,
+        indptr: vec![0usize],
+        indices: Vec::new(),
+        values: Vec::new(),
+        y: Vec::with_capacity(k),
+    };
+    let mut done = false;
+    let result = src.for_each_chunk_any(chunk_rows, &mut |chunk, ys| {
+        let take = (k - out.y.len()).min(ys.len());
+        match chunk {
+            Chunk::Sparse(sp) => {
+                for i in 0..take {
+                    let (idx, vals) = sp.row(i);
+                    out.indices.extend_from_slice(idx);
+                    out.values.extend_from_slice(vals);
+                    out.indptr.push(out.indices.len());
+                }
+            }
+            Chunk::Dense(rows) => {
+                for row in rows.chunks(d).take(take) {
+                    for (j, &v) in row.iter().enumerate() {
+                        if v != 0.0 {
+                            out.indices.push(j as u32);
+                            out.values.push(v);
+                        }
+                    }
+                    out.indptr.push(out.indices.len());
+                }
+            }
+        }
+        out.y.extend_from_slice(&ys[..take]);
+        if out.y.len() >= k {
+            done = true;
+            return Err(KrrError::Dataset("head sample complete".to_string()));
+        }
+        Ok(())
+    });
+    match result {
+        Ok(()) => {}
+        Err(_) if done => {}
+        Err(e) => return Err(e),
+    }
+    if out.y.is_empty() {
+        return Err(KrrError::Dataset(format!("{}: no data rows", src.name())));
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -646,5 +931,105 @@ mod tests {
     fn count_rows_streams_when_no_hint() {
         let ds = toy();
         assert_eq!(ds.count_rows(2).unwrap(), 5);
+    }
+
+    /// Materialize through the representation-tagged stream, densifying
+    /// sparse chunks — exercises `for_each_chunk_any` end to end.
+    fn materialize_any(src: &dyn DataSource, chunk: usize) -> Dataset {
+        let d = src.dim();
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        let mut buf = Vec::new();
+        src.for_each_chunk_any(chunk, &mut |c, ys| {
+            match c {
+                Chunk::Dense(rows) => x.extend_from_slice(rows),
+                Chunk::Sparse(sp) => {
+                    sp.densify_into(d, &mut buf);
+                    x.extend_from_slice(&buf);
+                }
+            }
+            y.extend_from_slice(ys);
+            Ok(())
+        })
+        .unwrap();
+        Dataset::new(src.name(), x, y, d)
+    }
+
+    #[test]
+    fn libsvm_sparse_chunks_densify_to_the_dense_stream() {
+        let ds = toy();
+        let path = std::env::temp_dir().join("wlsh_src_sparse_eq.libsvm");
+        write_libsvm(&ds, path.to_str().unwrap(), false).unwrap();
+        let src = LibsvmSource::open(path.to_str().unwrap()).unwrap();
+        assert!(src.is_sparse());
+        for chunk in [1usize, 2, 3, 5, 64] {
+            let got = materialize_any(&src, chunk);
+            assert_eq!(got.x, ds.x, "chunk={chunk}");
+            assert_eq!(got.y, ds.y, "chunk={chunk}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn libsvm_sparse_chunks_sort_and_dedupe_indices() {
+        // out-of-order and duplicate indices: ascending unique output,
+        // last value winning like the dense scatter's overwrite
+        let path = std::env::temp_dir().join("wlsh_src_sparse_dup.libsvm");
+        std::fs::write(&path, "1.5 3:9 1:2 3:7 2:4\n").unwrap();
+        let src = LibsvmSource::open(path.to_str().unwrap()).unwrap();
+        src.for_each_chunk_any(8, &mut |c, ys| {
+            let sp = match c {
+                Chunk::Sparse(sp) => sp,
+                Chunk::Dense(_) => panic!("expected sparse"),
+            };
+            assert_eq!(ys, [1.5]);
+            let (idx, vals) = sp.row(0);
+            assert_eq!(idx, [0, 1, 2]);
+            assert_eq!(vals, [2.0, 4.0, 7.0]);
+            Ok(())
+        })
+        .unwrap();
+        let dense = src.materialize(8).unwrap();
+        assert_eq!(dense.x, vec![2.0, 4.0, 7.0]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn densify_source_hides_the_sparse_representation() {
+        let ds = toy();
+        let path = std::env::temp_dir().join("wlsh_src_densify.libsvm");
+        write_libsvm(&ds, path.to_str().unwrap(), false).unwrap();
+        let src = LibsvmSource::open(path.to_str().unwrap()).unwrap();
+        let dense_view = DensifySource::new(&src);
+        assert!(!dense_view.is_sparse());
+        let got = materialize_any(&dense_view, 2);
+        assert_eq!(got.x, ds.x);
+        dense_view
+            .for_each_chunk_any(2, &mut |c, _| {
+                assert!(matches!(c, Chunk::Dense(_)));
+                Ok(())
+            })
+            .unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn head_sample_sparse_takes_a_csr_prefix() {
+        let ds = toy();
+        let path = std::env::temp_dir().join("wlsh_src_head_sparse.libsvm");
+        write_libsvm(&ds, path.to_str().unwrap(), false).unwrap();
+        let src = LibsvmSource::open(path.to_str().unwrap()).unwrap();
+        let head = head_sample_sparse(&src, 3, 2).unwrap();
+        assert_eq!(head.n(), 3);
+        assert_eq!(head.y, vec![0.1, 0.2, 0.3]);
+        let mut dense = Vec::new();
+        head.view().densify_into(head.d, &mut dense);
+        assert_eq!(dense, ds.x[..6].to_vec());
+        // a dense source compresses through the same helper
+        let from_dense = head_sample_sparse(&ds, 3, 2).unwrap();
+        let mut dense2 = Vec::new();
+        from_dense.view().densify_into(from_dense.d, &mut dense2);
+        assert_eq!(dense2, ds.x[..6].to_vec());
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -11,8 +11,21 @@
 //! relative on realistic data — asserted in the unit tests), and the
 //! degenerate-feature handling is identical: a variance at or below 1e-24
 //! maps the feature to 0 rather than dividing by ~0.
+//!
+//! ## Sparse semantics
+//!
+//! A sparse source ([`DataSource::is_sparse`]) is fitted in one sparse
+//! pass (per-feature sum/sum-of-squares over the stored entries; absent
+//! coordinates contribute exactly 0) and transformed by **scaling only**:
+//! features map to `x · inv_std` with *no mean subtraction*, so zeros
+//! stay zeros and CSR blocks keep their sparsity pattern. Centering a
+//! sparse matrix would densify it — every absent coordinate would become
+//! `-mean/std` — defeating the entire memory argument; for the
+//! kernel-approximation operators the lost centering is a benign
+//! translation of the input space. Targets are dense and are centered
+//! and scaled exactly as in the dense path.
 
-use super::source::{ChunkFn, DataSource};
+use super::source::{Chunk, ChunkAnyFn, ChunkFn, DataSource, SparseChunk};
 use super::Dataset;
 use crate::api::KrrError;
 
@@ -35,8 +48,13 @@ pub struct Standardizer {
 
 impl Standardizer {
     /// Fit on a source in one streaming pass (Welford's algorithm per
-    /// feature and for the target; O(d) state, any chunk size).
+    /// feature and for the target; O(d) state, any chunk size). Sparse
+    /// sources are fitted from their CSR stream without densifying (see
+    /// the module docs for the sparse transform semantics).
     pub fn fit(src: &dyn DataSource, chunk_rows: usize) -> Result<Standardizer, KrrError> {
+        if src.is_sparse() {
+            return Self::fit_sparse(src, chunk_rows);
+        }
         let d = src.dim();
         let mut count = 0usize;
         let mut mean = vec![0.0f64; d];
@@ -82,6 +100,68 @@ impl Standardizer {
         Ok(Standardizer { mean, inv_std, y_mean, y_std, n: count })
     }
 
+    /// One sparse pass: per-feature sum and sum-of-squares over the
+    /// stored entries (absent coordinates contribute exactly 0, so
+    /// `mean = Σx/n` and `var = Σx²/n − mean²` are the full-data
+    /// moments), Welford for the dense targets.
+    fn fit_sparse(src: &dyn DataSource, chunk_rows: usize) -> Result<Standardizer, KrrError> {
+        let d = src.dim();
+        let mut count = 0usize;
+        let mut sum = vec![0.0f64; d];
+        let mut sumsq = vec![0.0f64; d];
+        let mut y_mean = 0.0f64;
+        let mut y_m2 = 0.0f64;
+        let mut dense_buf: Vec<f32> = Vec::new();
+        src.for_each_chunk_any(chunk_rows, &mut |chunk, ys| {
+            match chunk {
+                Chunk::Sparse(sp) => {
+                    for (&j, &v) in sp.indices.iter().zip(sp.values) {
+                        let v = v as f64;
+                        sum[j as usize] += v;
+                        sumsq[j as usize] += v * v;
+                    }
+                }
+                Chunk::Dense(rows) => {
+                    // a mixed stream is possible through adapters; fold
+                    // dense blocks into the same moment accumulators
+                    dense_buf.clear();
+                    dense_buf.extend_from_slice(rows);
+                    for row in dense_buf.chunks(d) {
+                        for (j, &v) in row.iter().enumerate() {
+                            let v = v as f64;
+                            sum[j] += v;
+                            sumsq[j] += v * v;
+                        }
+                    }
+                }
+            }
+            for &yv in ys {
+                count += 1;
+                let delta = yv - y_mean;
+                y_mean += delta / count as f64;
+                y_m2 += delta * (yv - y_mean);
+            }
+            Ok(())
+        })?;
+        if count == 0 {
+            return Err(KrrError::Dataset(format!(
+                "{}: cannot standardize an empty source",
+                src.name()
+            )));
+        }
+        let n = count as f64;
+        let mut mean = vec![0.0f64; d];
+        let mut inv_std = vec![0.0f64; d];
+        for j in 0..d {
+            let m = sum[j] / n;
+            let var = sumsq[j] / n - m * m;
+            mean[j] = m;
+            inv_std[j] = if var > 1e-24 { 1.0 / var.sqrt() } else { 0.0 };
+        }
+        let y_std = (y_m2 / n).sqrt().max(1e-12);
+        Ok(Standardizer { mean, inv_std, y_mean, y_std, n: count })
+    }
+
     /// Features per row this standardizer was fitted for.
     pub fn dim(&self) -> usize {
         self.mean.len()
@@ -96,6 +176,31 @@ impl Standardizer {
             for ((v, &m), &s) in row.iter_mut().zip(&self.mean).zip(&self.inv_std) {
                 *v = ((*v as f64 - m) * s) as f32;
             }
+        }
+    }
+
+    /// The sparse feature map on a *dense* row block: scale by `inv_std`
+    /// without subtracting the mean, so zeros map to zeros. This is the
+    /// densified equivalent the sparse bit-identity tests compare against
+    /// — the same per-value arithmetic as
+    /// [`transform_sparse_values`](Self::transform_sparse_values).
+    pub fn scale_rows(&self, rows: &mut [f32]) {
+        let d = self.dim();
+        assert_eq!(rows.len() % d.max(1), 0, "row block shape mismatch");
+        for row in rows.chunks_mut(d.max(1)) {
+            for (v, &s) in row.iter_mut().zip(&self.inv_std) {
+                *v = ((*v as f64) * s) as f32;
+            }
+        }
+    }
+
+    /// The sparse feature map on a CSR block's stored values: each value
+    /// scales by its feature's `inv_std` (no centering — see the module
+    /// docs). Zeros are preserved, stored or absent alike.
+    pub fn transform_sparse_values(&self, indices: &[u32], values: &mut [f32]) {
+        assert_eq!(indices.len(), values.len(), "CSR index/value length mismatch");
+        for (&j, v) in indices.iter().zip(values.iter_mut()) {
+            *v = ((*v as f64) * self.inv_std[j as usize]) as f32;
         }
     }
 
@@ -150,6 +255,12 @@ impl DataSource for StandardizedSource<'_> {
     }
 
     fn for_each_chunk(&self, chunk_rows: usize, f: ChunkFn) -> Result<(), KrrError> {
+        // The feature map is a property of the *source*, not of the
+        // visitor API: a sparse source gets the scale-only sparse map even
+        // when a consumer asks for densified rows, so every path through
+        // this adapter (operator build, preconditioner, head sample) sees
+        // one consistent transform.
+        let sparse = self.inner.is_sparse();
         let mut x_buf: Vec<f32> = Vec::new();
         let mut y_buf: Vec<f64> = Vec::new();
         self.inner.for_each_chunk(chunk_rows, &mut |rows, ys| {
@@ -157,9 +268,48 @@ impl DataSource for StandardizedSource<'_> {
             x_buf.extend_from_slice(rows);
             y_buf.clear();
             y_buf.extend_from_slice(ys);
-            self.std.transform_rows(&mut x_buf);
+            if sparse {
+                self.std.scale_rows(&mut x_buf);
+            } else {
+                self.std.transform_rows(&mut x_buf);
+            }
             self.std.transform_targets(&mut y_buf);
             f(&x_buf, &y_buf)
+        })
+    }
+
+    fn is_sparse(&self) -> bool {
+        self.inner.is_sparse()
+    }
+
+    fn for_each_chunk_any(&self, chunk_rows: usize, f: ChunkAnyFn) -> Result<(), KrrError> {
+        let mut v_buf: Vec<f32> = Vec::new();
+        let mut x_buf: Vec<f32> = Vec::new();
+        let mut y_buf: Vec<f64> = Vec::new();
+        self.inner.for_each_chunk_any(chunk_rows, &mut |chunk, ys| {
+            y_buf.clear();
+            y_buf.extend_from_slice(ys);
+            self.std.transform_targets(&mut y_buf);
+            match chunk {
+                Chunk::Sparse(sp) => {
+                    // scale-only map: the sparsity pattern passes through
+                    v_buf.clear();
+                    v_buf.extend_from_slice(sp.values);
+                    self.std.transform_sparse_values(sp.indices, &mut v_buf);
+                    let out = SparseChunk {
+                        indptr: sp.indptr,
+                        indices: sp.indices,
+                        values: &v_buf,
+                    };
+                    f(Chunk::Sparse(out), &y_buf)
+                }
+                Chunk::Dense(rows) => {
+                    x_buf.clear();
+                    x_buf.extend_from_slice(rows);
+                    self.std.transform_rows(&mut x_buf);
+                    f(Chunk::Dense(&x_buf), &y_buf)
+                }
+            }
         })
     }
 }
@@ -272,6 +422,72 @@ mod tests {
             assert_eq!(got.x, want.x, "chunk={chunk}");
             assert_eq!(got.y, want.y, "chunk={chunk}");
         }
+    }
+
+    #[test]
+    fn sparse_fit_matches_two_pass_moments_and_scales_without_centering() {
+        use crate::data::{write_libsvm, Chunk, LibsvmSource};
+        // sparsify wine: zero out a deterministic third of the entries
+        let mut ds = synthetic_by_name("wine", Some(120), 13).unwrap();
+        for (i, v) in ds.x.iter_mut().enumerate() {
+            if i % 3 == 0 {
+                *v = 0.0;
+            }
+        }
+        let path = std::env::temp_dir().join("wlsh_std_sparse.libsvm");
+        write_libsvm(&ds, path.to_str().unwrap(), false).unwrap();
+        let src = LibsvmSource::open(path.to_str().unwrap()).unwrap();
+        assert!(src.is_sparse());
+        let std = Standardizer::fit(&src, 17).unwrap();
+        assert_eq!(std.n, ds.n);
+        // moments are the full-data moments (zeros included)
+        for j in 0..ds.d {
+            let mean: f64 =
+                (0..ds.n).map(|i| ds.x[i * ds.d + j] as f64).sum::<f64>() / ds.n as f64;
+            let var: f64 = (0..ds.n)
+                .map(|i| (ds.x[i * ds.d + j] as f64 - mean).powi(2))
+                .sum::<f64>()
+                / ds.n as f64;
+            assert!(
+                (std.mean[j] - mean).abs() <= 1e-9 * (1.0 + mean.abs()),
+                "mean[{j}]: {} vs {mean}",
+                std.mean[j]
+            );
+            assert!(
+                (std.inv_std[j] - 1.0 / var.sqrt()).abs() <= 1e-8 * std.inv_std[j].abs(),
+                "inv_std[{j}]"
+            );
+        }
+        // the streamed sparse transform equals scale_rows on the
+        // densified rows, bit for bit — and zeros stay zeros
+        let view = std.source(&src);
+        assert!(view.is_sparse());
+        let mut want = ds.x.clone();
+        std.scale_rows(&mut want);
+        let mut got = vec![0.0f32; ds.n * ds.d];
+        let mut at = 0usize;
+        view.for_each_chunk_any(7, &mut |chunk, ys| {
+            let sp = match chunk {
+                Chunk::Sparse(sp) => sp,
+                Chunk::Dense(_) => panic!("expected sparse"),
+            };
+            for i in 0..sp.nrows() {
+                let (idx, vals) = sp.row(i);
+                for (&j, &v) in idx.iter().zip(vals) {
+                    got[at * ds.d + j as usize] = v;
+                }
+                at += 1;
+            }
+            // targets are centered exactly as in the dense path
+            for (k, y) in ys.iter().enumerate() {
+                let orig = ds.y[at - ys.len() + k];
+                assert_eq!(*y, (orig - std.y_mean) / std.y_std);
+            }
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(got, want);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -84,6 +84,17 @@
 //! `examples/streaming.rs` trains from an on-disk CSV larger than the
 //! process memory budget.
 //!
+//! Sparse-native sources stay sparse end to end: a
+//! [`data::LibsvmSource`] streams CSR chunks ([`data::SparseChunk`])
+//! through standardization (scale-only for features — centering would
+//! fill the zeros — targets centered as usual), the WLSH/RFF sketch
+//! builds, evaluation sampling ([`data::head_sample_sparse`]), and
+//! serving ([`api::Predictor::predict_sparse_into`], the server's
+//! `{"sparse": [[idx, val], ...]}` request). Peak training memory scales
+//! with nnz rather than n·d, and results are bit-identical to densifying
+//! first; wrap a source in [`data::DensifySource`] (CLI:
+//! `--sparse=false`) to force the dense pipeline.
+//!
 //! ## Serving
 //!
 //! The request path is a worker-pool engine: [`coordinator::serve`]

@@ -20,6 +20,7 @@ pub use table::{BucketTable, BucketTableBuilder, FxBuildHasher};
 
 use crate::api::BucketSpec;
 use crate::bucketfn::BucketEval;
+use crate::data::SparseChunk;
 use crate::util::rng::Pcg64;
 
 /// Shared parameters of the LSH family (Def. 5) + bucket shaping (Def. 6).
@@ -80,6 +81,47 @@ struct HashPlan<'a> {
     z: &'a [f32],
     inv_w: Vec<f32>,
     mix64: &'a [u64],
+}
+
+/// Precomputed per-instance state for hashing sparse CSR rows
+/// **bit-identically** to the dense U64 [`hash_batch`](LshFunction::hash_batch)
+/// loop, in O(nnz) id work per row.
+///
+/// The trick: the u64 id is a wrapping sum `Σ_l c_l·mix_l` over Z/2⁶⁴ — a
+/// commutative group — so a sparse row's id is the all-zeros baseline
+/// `id0 = Σ_l c⁰_l·mix_l` plus, per stored coordinate, the difference
+/// `c_l·mix_l − c⁰_l·mix_l`. Every `c⁰_l` is computed with the *same*
+/// reciprocal-multiply f32 arithmetic the dense plan uses on a literal
+/// 0.0, so absent coordinates contribute exactly the cached term and the
+/// group sum equals the dense one bit for bit.
+///
+/// Smooth-bucket weights are a *sequential f32 product* over all d dims —
+/// non-associative, so they cannot be sparsified the same way. Instead
+/// [`hash_sparse`](LshFunction::hash_sparse) replays the full-order
+/// product, substituting the cached per-dim baseline factor `f0[l]` at
+/// absent coordinates (O(d) multiplies per row — the documented smooth
+/// trade-off). Rect buckets skip the product entirely, exactly like the
+/// dense loop.
+///
+/// Two arithmetic flavors exist because the dense code has two:
+/// [`sparse_plan`](LshFunction::sparse_plan) mirrors the batched build
+/// loop's reciprocal multiply `(x−z)·(1/w)`, while
+/// [`sparse_plan_point`](LshFunction::sparse_plan_point) mirrors
+/// [`hash_point`](LshFunction::hash_point)'s division `(x−z)/w` (the
+/// query path). Match the plan to the dense code being replaced, or the
+/// floor can land one cell off near grid boundaries.
+pub struct SparseHashPlan {
+    /// 1/w per dim — the reciprocals the dense batch loop multiplies by
+    /// (empty for point-arithmetic plans, which divide by `w` directly).
+    inv_w: Vec<f32>,
+    /// Per-dim mixed baseline `c⁰_l·mix_l` for x_l = 0.
+    c0m: Vec<u64>,
+    /// Id of the all-zeros row: wrapping `Σ_l c0m[l]`.
+    id0: u64,
+    /// Per-dim baseline bucket weight `f(c⁰−t⁰)` (empty for rect).
+    f0: Vec<f32>,
+    /// `true` ⇒ per-coordinate terms use `hash_point`'s division.
+    point_arith: bool,
 }
 
 /// Which id-collapse arithmetic to use.
@@ -198,6 +240,128 @@ impl LshFunction {
             }
         }
     }
+
+    /// Precompute the per-instance baseline terms for
+    /// [`hash_sparse`](Self::hash_sparse) with the *batched build* loop's
+    /// reciprocal-multiply arithmetic (O(d) time and space; build once
+    /// per instance, reuse across every chunk).
+    pub fn sparse_plan(&self, family: &LshFamily) -> SparseHashPlan {
+        self.plan_impl(family, false)
+    }
+
+    /// As [`sparse_plan`](Self::sparse_plan) with
+    /// [`hash_point`](Self::hash_point)'s division arithmetic — for
+    /// query-side sparse hashing that must match dense per-point hashing
+    /// bit for bit.
+    pub fn sparse_plan_point(&self, family: &LshFamily) -> SparseHashPlan {
+        self.plan_impl(family, true)
+    }
+
+    fn plan_impl(&self, family: &LshFamily, point_arith: bool) -> SparseHashPlan {
+        let inv_w: Vec<f32> = if point_arith {
+            Vec::new()
+        } else {
+            self.w.iter().map(|&w| 1.0 / w).collect()
+        };
+        let rect = family.bucket.is_rect;
+        let mut c0m = Vec::with_capacity(family.d);
+        let mut f0 = Vec::with_capacity(if rect { 0 } else { family.d });
+        let mut id0: u64 = 0;
+        for l in 0..family.d {
+            // the exact dense arithmetic applied to a literal 0.0
+            let t0 = if point_arith {
+                (0.0f32 - self.z[l]) / self.w[l]
+            } else {
+                (0.0f32 - self.z[l]) * inv_w[l]
+            };
+            let c0 = (t0 + 0.5).floor();
+            let m = (c0 as i64 as u64).wrapping_mul(family.mix64[l]);
+            id0 = id0.wrapping_add(m);
+            c0m.push(m);
+            if !rect {
+                f0.push(family.bucket.eval(c0 - t0));
+            }
+        }
+        SparseHashPlan { inv_w, c0m, id0, f0, point_arith }
+    }
+
+    /// Hash one CSR row (U64 mode) — bit-identical to the dense loop the
+    /// plan was built for ([`hash_batch`](Self::hash_batch) or
+    /// [`hash_point`](Self::hash_point)). `idx` must be ascending and
+    /// unique, which the loaders guarantee.
+    #[inline]
+    pub fn hash_sparse_row(
+        &self,
+        idx: &[u32],
+        vals: &[f32],
+        plan: &SparseHashPlan,
+        family: &LshFamily,
+    ) -> (u64, f32) {
+        let mut id = plan.id0;
+        if family.bucket.is_rect {
+            for (&j, &xv) in idx.iter().zip(vals) {
+                let l = j as usize;
+                let t = if plan.point_arith {
+                    (xv - self.z[l]) / self.w[l]
+                } else {
+                    (xv - self.z[l]) * plan.inv_w[l]
+                };
+                let c = (t + 0.5).floor();
+                id = id
+                    .wrapping_add((c as i64 as u64).wrapping_mul(family.mix64[l]))
+                    .wrapping_sub(plan.c0m[l]);
+            }
+            (id, 1.0)
+        } else {
+            // replay the dense full-order f32 product, substituting the
+            // cached baseline factor at absent coordinates (f32 products
+            // don't reassociate, so the order must match the dense loop)
+            let mut weight: f32 = 1.0;
+            let mut p = 0usize; // cursor into idx (ascending)
+            for l in 0..family.d {
+                if p < idx.len() && idx[p] as usize == l {
+                    let xv = vals[p];
+                    let t = if plan.point_arith {
+                        (xv - self.z[l]) / self.w[l]
+                    } else {
+                        (xv - self.z[l]) * plan.inv_w[l]
+                    };
+                    let c = (t + 0.5).floor();
+                    id = id
+                        .wrapping_add((c as i64 as u64).wrapping_mul(family.mix64[l]))
+                        .wrapping_sub(plan.c0m[l]);
+                    weight *= family.bucket.eval(c - t);
+                    p += 1;
+                } else {
+                    weight *= plan.f0[l];
+                }
+            }
+            (id, weight)
+        }
+    }
+
+    /// Hash a CSR block (U64 mode), appending into `ids`/`weights` —
+    /// bit-identical to [`hash_batch`](Self::hash_batch) on the densified
+    /// rows when given a [`sparse_plan`](Self::sparse_plan) (see
+    /// [`SparseHashPlan`]).
+    pub fn hash_sparse(
+        &self,
+        chunk: &SparseChunk<'_>,
+        plan: &SparseHashPlan,
+        family: &LshFamily,
+        ids: &mut Vec<u64>,
+        weights: &mut Vec<f32>,
+    ) {
+        let n = chunk.nrows();
+        ids.reserve(n);
+        weights.reserve(n);
+        for i in 0..n {
+            let (idx, vals) = chunk.row(i);
+            let (id, w) = self.hash_sparse_row(idx, vals, plan, family);
+            ids.push(id);
+            weights.push(w);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -299,6 +463,35 @@ mod tests {
                     id32[i] == id32[j],
                     "pair ({i},{j})"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_hash_is_bit_identical_to_dense_on_densified_rows() {
+        for bucket in ["rect", "smooth2"] {
+            let (fam, f) = family(9, bucket);
+            // sparse rows with gaps, a stored zero, and an empty row
+            let indptr = [0usize, 3, 3, 5, 9];
+            let indices = [1u32, 4, 7, 0, 8, 2, 3, 5, 6];
+            let values = [0.7f32, -1.3, 2.2, 0.0, -0.4, 1.0, -2.0, 0.25, 3.5];
+            let chunk = SparseChunk { indptr: &indptr, indices: &indices, values: &values };
+            let mut dense = Vec::new();
+            chunk.densify_into(fam.d, &mut dense);
+            let (mut want_ids, mut want_ws) = (Vec::new(), Vec::new());
+            f.hash_batch(&dense, &fam, IdMode::U64, &mut want_ids, &mut want_ws);
+            let plan = f.sparse_plan(&fam);
+            let (mut ids, mut ws) = (Vec::new(), Vec::new());
+            f.hash_sparse(&chunk, &plan, &fam, &mut ids, &mut ws);
+            assert_eq!(ids, want_ids, "{bucket} ids");
+            assert_eq!(ws, want_ws, "{bucket} weights");
+            // the point-arithmetic plan matches hash_point per row
+            let plan_p = f.sparse_plan_point(&fam);
+            for i in 0..chunk.nrows() {
+                let (idx, vals) = chunk.row(i);
+                let got = f.hash_sparse_row(idx, vals, &plan_p, &fam);
+                let want = f.hash_point(&dense[i * fam.d..(i + 1) * fam.d], &fam, IdMode::U64);
+                assert_eq!(got, want, "{bucket} point row {i}");
             }
         }
     }

@@ -20,8 +20,8 @@ use wlsh_krr::coordinator::{
     checkpoint, serve, ModelRegistry, ServerConfig, Trainer, DEFAULT_MODEL,
 };
 use wlsh_krr::data::{
-    head_sample, load_csv, rmse, synthetic_by_name, CsvSource, DataSource, LibsvmSource,
-    Standardizer,
+    head_sample, head_sample_sparse, load_csv, rmse, synthetic_by_name, CsvSource, DataSource,
+    DensifySource, LibsvmSource, Standardizer,
 };
 use wlsh_krr::kernels::Kernel;
 use wlsh_krr::risk::ose_epsilon_dense;
@@ -56,6 +56,10 @@ fn main() {
                         --cg-verbose=true  (per-iteration CG progress on stderr)\n\
                         --data-format csv|libsvm --chunk-rows R  (streamed\n\
                         out-of-core training from --dataset <path>)\n\
+                        --libsvm-base auto|0|1  (LIBSVM feature-index base;\n\
+                        auto = 0-based iff an index 0 appears)\n\
+                        --sparse auto|true|false  (stream native CSR chunks;\n\
+                        auto = whatever the source emits)\n\
                         --checkpoint-out PATH  (save the trained model)\n\
                  serve  same dataset/method flags plus --addr HOST:PORT\n\
                         --workers N --queue-depth Q --max-batch B --linger-us U\n\
@@ -201,13 +205,32 @@ fn cmd_train(args: &Args) -> Result<(), KrrError> {
     Ok(())
 }
 
-/// Open a file-backed chunked source by format name. The format check
-/// runs before any filesystem access so a typo exits 2 without touching
-/// the path.
-fn open_source(path: &str, format: &str) -> Result<Box<dyn DataSource>, KrrError> {
+/// Open a file-backed chunked source by format name. The format and
+/// `--libsvm-base` checks run before any filesystem access so a typo
+/// exits 2 without touching the path.
+fn open_source(args: &Args, path: &str, format: &str) -> Result<Box<dyn DataSource>, KrrError> {
     match format {
         "csv" => Ok(Box::new(CsvSource::open(path, -1)?)),
-        "libsvm" => Ok(Box::new(LibsvmSource::open(path)?)),
+        "libsvm" => {
+            // pin the index base explicitly when the convention is known —
+            // the auto heuristic decodes a 0-based file that never mentions
+            // index 0 shifted one column left
+            let base = match args.get_or("libsvm-base", "auto") {
+                "auto" => None,
+                "0" => Some(true),
+                "1" => Some(false),
+                other => {
+                    return Err(KrrError::BadParam(format!(
+                        "--libsvm-base wants auto|0|1, got {other:?}"
+                    )))
+                }
+            };
+            let src = match base {
+                None => LibsvmSource::open(path)?,
+                Some(zero_based) => LibsvmSource::open_with_base(path, zero_based)?,
+            };
+            Ok(Box::new(src))
+        }
         other => Err(KrrError::BadParam(format!(
             "--data-format wants csv|libsvm, got {other:?}"
         ))),
@@ -216,36 +239,75 @@ fn open_source(path: &str, format: &str) -> Result<Box<dyn DataSource>, KrrError
 
 /// Streamed out-of-core training: fit a Welford standardizer on the file
 /// (pass 1), then train chunk by chunk through the standardized view —
-/// the n×d matrix is never materialized. The reported RMSE is over a
-/// held-in-memory sample of the first `--eval-rows` *training* rows
-/// (streamed runs keep no split).
+/// the n×d matrix is never materialized. Sparse-native sources (LIBSVM)
+/// stream CSR chunks end to end unless `--sparse=false` forces the dense
+/// path; see the data-module docs for the scale-only standardization
+/// sparse streams use. The reported RMSE is over a held-in-memory sample
+/// of the first `--eval-rows` *training* rows (streamed runs keep no
+/// split).
 fn cmd_train_streamed(args: &Args, format: &str) -> Result<(), KrrError> {
     let cfg = config_from(args)?;
     // surface --chunk-rows 0 etc. as usage errors before touching the file
     cfg.validate()?;
+    let sparse_flag = args.get_or("sparse", "auto");
+    if !matches!(sparse_flag, "auto" | "true" | "false") {
+        return Err(KrrError::BadParam(format!(
+            "--sparse wants auto|true|false, got {sparse_flag:?}"
+        )));
+    }
     let path = args.get("dataset").ok_or_else(|| {
         KrrError::BadParam("--data-format needs --dataset <path>".to_string())
     })?;
-    let src = open_source(path, format)?;
-    let standardizer = Standardizer::fit(src.as_ref(), cfg.chunk_rows)?;
-    let view = standardizer.source(src.as_ref());
+    let src = open_source(args, path, format)?;
+    let sparse = match sparse_flag {
+        "auto" => src.is_sparse(),
+        "true" => {
+            if !src.is_sparse() {
+                return Err(KrrError::BadParam(format!(
+                    "--sparse=true needs a sparse-capable source; {format} streams dense rows"
+                )));
+            }
+            true
+        }
+        _ => false,
+    };
+    let densified;
+    let src_ref: &dyn DataSource = if sparse {
+        src.as_ref()
+    } else {
+        // force Chunk::Dense (and the centered standardization that goes
+        // with it) even when the file is sparse-native
+        densified = DensifySource::new(src.as_ref());
+        &densified
+    };
+    let standardizer = Standardizer::fit(src_ref, cfg.chunk_rows)?;
+    let view = standardizer.source(src_ref);
     eprintln!(
-        "training {} streamed from {} (d={}, rows={}, chunk={})",
+        "training {} streamed from {} (d={}, rows={}, chunk={}, {})",
         cfg.method,
         path,
         view.dim(),
         view.len_hint().unwrap_or(0),
-        cfg.chunk_rows
+        cfg.chunk_rows,
+        if sparse { "sparse CSR chunks" } else { "dense chunks" }
     );
     let chunk_rows = cfg.chunk_rows;
     let model = Trainer::new(cfg).train_source(&view)?;
-    let sample = head_sample(&view, args.get_usize("eval-rows", 1000), chunk_rows)?;
-    let pred = model.predict(&sample.x);
-    let err = rmse(&pred, &sample.y);
+    let eval_rows = args.get_usize("eval-rows", 1000);
+    let err = if sparse {
+        let sample = head_sample_sparse(&view, eval_rows, chunk_rows)?;
+        let mut pred = vec![0.0f64; sample.n()];
+        model.predict_sparse_into(&sample.view(), &mut pred);
+        rmse(&pred, &sample.y)
+    } else {
+        let sample = head_sample(&view, eval_rows, chunk_rows)?;
+        rmse(&model.predict(&sample.x), &sample.y)
+    };
     let rep = &model.report;
     let record = JsonWriter::object()
         .field_str("dataset", path)
         .field_str("data_format", format)
+        .field_raw("sparse", if sparse { "true" } else { "false" })
         .field_str("operator", &rep.operator)
         .field_str("method", &model.config.method.to_string())
         .field_usize("n_train", model.beta.len())

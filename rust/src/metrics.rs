@@ -10,7 +10,13 @@ pub struct Counter(AtomicU64);
 
 impl Counter {
     pub fn add(&self, v: u64) {
-        self.0.fetch_add(v, Ordering::Relaxed);
+        self.add_fetch(v);
+    }
+
+    /// Adds `v` and returns the counter value from *before* the addition —
+    /// a unique per-call sequence number under concurrent use.
+    pub fn add_fetch(&self, v: u64) -> u64 {
+        self.0.fetch_add(v, Ordering::Relaxed)
     }
 
     pub fn get(&self) -> u64 {
@@ -47,12 +53,15 @@ impl LatencyHistogram {
     }
 
     pub fn record(&self, secs: f64) {
-        self.count.add(1);
+        // Pre-increment value: unique per call even when threads race, unlike
+        // re-reading the counter after the add.
+        let seq = self.count.add_fetch(1);
         *self.sum_secs.lock().unwrap() += secs;
         let mut s = self.samples.lock().unwrap();
         if s.len() == self.cap {
-            // overwrite pseudo-randomly to stay representative
-            let idx = (self.count.get() as usize * 2654435761) % self.cap;
+            // Overwrite pseudo-randomly (Fibonacci hashing, wrapping so large
+            // sequence numbers cannot overflow) to stay representative.
+            let idx = (seq as usize).wrapping_mul(2654435761) % self.cap;
             s[idx] = secs;
         } else {
             s.push(secs);
@@ -67,7 +76,13 @@ impl LatencyHistogram {
             return LatencySummary::default();
         }
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let at = |p: f64| s[((s.len() as f64 * p) as usize).min(s.len() - 1)];
+        // Nearest-rank percentile: the value at 1-based rank ceil(p * n).
+        // Truncating `n * p` instead over-reports at small counts (e.g. the
+        // p50 of [1, 2] would read 2 rather than 1).
+        let at = |p: f64| {
+            let rank = (s.len() as f64 * p).ceil() as usize;
+            s[rank.saturating_sub(1).min(s.len() - 1)]
+        };
         LatencySummary { p50: at(0.50), p90: at(0.90), p95: at(0.95), p99: at(0.99) }
     }
 
@@ -106,11 +121,39 @@ mod tests {
             h.record(i as f64);
         }
         let (p50, p90, p99) = h.percentiles();
-        assert!((p50 - 51.0).abs() <= 1.0);
-        assert!((p90 - 91.0).abs() <= 1.0);
-        assert!((p99 - 100.0).abs() <= 1.0);
+        // Nearest-rank is exact on 1..=100: rank ceil(p * 100).
+        assert_eq!(p50, 50.0);
+        assert_eq!(p90, 90.0);
+        assert_eq!(p99, 99.0);
         assert!((h.mean() - 50.5).abs() < 1e-9);
         assert_eq!(h.count.get(), 100);
+    }
+
+    #[test]
+    fn percentiles_do_not_over_report_at_small_counts() {
+        let h = LatencyHistogram::new(8);
+        h.record(1.0);
+        h.record(2.0);
+        // p50 of two samples is the lower one under nearest-rank; the old
+        // truncating index `(n * p) as usize` returned the upper.
+        assert_eq!(h.summary().p50, 1.0);
+        let one = LatencyHistogram::new(8);
+        one.record(3.0);
+        assert_eq!(one.summary(), LatencySummary { p50: 3.0, p90: 3.0, p95: 3.0, p99: 3.0 });
+    }
+
+    #[test]
+    fn histogram_survives_huge_counter_values() {
+        let h = LatencyHistogram::new(8);
+        // Seed the request counter far past the range where the old slot
+        // computation (`count * 2654435761` without wrapping) overflowed and
+        // panicked in debug builds.
+        h.count.add(u64::MAX - 1_000);
+        for i in 0..64 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.samples.lock().unwrap().len(), 8);
+        assert_eq!(h.count.add_fetch(0), (u64::MAX - 1_000).wrapping_add(64));
     }
 
     #[test]
@@ -120,7 +163,7 @@ mod tests {
             h.record(i as f64);
         }
         let s = h.summary();
-        assert!((s.p95 - 191.0).abs() <= 1.0, "p95 {}", s.p95);
+        assert_eq!(s.p95, 190.0, "nearest-rank p95 of 1..=200 is rank 190");
         assert!(s.p50 <= s.p90 && s.p90 <= s.p95 && s.p95 <= s.p99);
         // tuple view stays consistent with the summary
         assert_eq!(h.percentiles(), (s.p50, s.p90, s.p99));

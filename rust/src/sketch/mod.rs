@@ -6,6 +6,8 @@
 
 use std::sync::Arc;
 
+use crate::data::SparseChunk;
+
 mod exact;
 mod nystrom;
 mod rff;
@@ -35,6 +37,27 @@ pub trait Predictor: Send + Sync {
         let mut out = vec![0.0f64; queries.len() / self.dim()];
         self.predict_into(queries, &mut out);
         out
+    }
+
+    /// η̃(q_i) for each CSR row of `queries` (`out.len()` must equal
+    /// `queries.nrows()`). The default densifies one row at a time into an
+    /// O(d) scratch buffer and defers to
+    /// [`predict_into`](Self::predict_into); operators with a native sparse
+    /// kernel (WLSH, RFF) override it to skip the scatter entirely.
+    fn predict_sparse_into(&self, queries: &SparseChunk<'_>, out: &mut [f64]) {
+        let d = self.dim();
+        assert_eq!(out.len(), queries.nrows(), "output length mismatch");
+        let mut row = vec![0.0f32; d];
+        for (i, o) in out.iter_mut().enumerate() {
+            let (idx, vals) = queries.row(i);
+            for v in row.iter_mut() {
+                *v = 0.0;
+            }
+            for (&j, &v) in idx.iter().zip(vals) {
+                row[j as usize] = v;
+            }
+            self.predict_into(&row, std::slice::from_mut(o));
+        }
     }
 }
 

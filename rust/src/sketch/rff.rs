@@ -6,7 +6,7 @@ use std::sync::Arc;
 
 use super::{KrrOperator, Predictor};
 use crate::api::KrrError;
-use crate::data::DataSource;
+use crate::data::{Chunk, DataSource, SparseChunk};
 use crate::linalg::dot_f32;
 use crate::util::par;
 use crate::util::rng::Pcg64;
@@ -75,8 +75,11 @@ impl RffSketch {
         if let Some(n) = src.len_hint() {
             sk.z.reserve(n * dd);
         }
-        src.for_each_chunk(chunk_rows, &mut |rows, ys| {
-            sk.append_rows(rows, workers);
+        src.for_each_chunk_any(chunk_rows, &mut |chunk, ys| {
+            match chunk {
+                Chunk::Dense(rows) => sk.append_rows(rows, workers),
+                Chunk::Sparse(sp) => sk.append_rows_sparse(&sp, workers),
+            }
             sk.n += ys.len();
             Ok(())
         })?;
@@ -103,6 +106,33 @@ impl RffSketch {
         }
     }
 
+    /// Featurize a CSR row block and append it to `z` — the sparse
+    /// analogue of [`append_rows`](Self::append_rows), threading over the
+    /// same fixed `FEAT_BLOCK`-row sub-blocks (sub-views slice `indptr`
+    /// only; offsets are absolute into the block's `indices`/`values`).
+    fn append_rows_sparse(&mut self, sp: &SparseChunk<'_>, workers: usize) {
+        let q = sp.nrows();
+        if workers <= 1 || q <= FEAT_BLOCK {
+            let feats = self.featurize_sparse(sp);
+            self.z.extend_from_slice(&feats);
+            return;
+        }
+        let n_blocks = q.div_ceil(FEAT_BLOCK);
+        let pieces = par::fan_out(n_blocks, workers, |b| {
+            let lo = b * FEAT_BLOCK;
+            let hi = ((b + 1) * FEAT_BLOCK).min(q);
+            let sub = SparseChunk {
+                indptr: &sp.indptr[lo..=hi],
+                indices: sp.indices,
+                values: sp.values,
+            };
+            self.featurize_sparse(&sub)
+        });
+        for p in pieces {
+            self.z.extend_from_slice(&p);
+        }
+    }
+
     /// The n×D feature matrix Z (row-major) — exposed for equivalence
     /// tests and diagnostics.
     pub fn features(&self) -> &[f32] {
@@ -123,6 +153,38 @@ impl RffSketch {
                     continue;
                 }
                 let orow = &self.omega[l * self.dd..(l + 1) * self.dd];
+                for (zv, ov) in zi.iter_mut().zip(orow) {
+                    *zv += xl * ov;
+                }
+            }
+            for zv in zi.iter_mut() {
+                *zv = self.feat_scale * zv.cos();
+            }
+        }
+        out
+    }
+
+    /// φ(rows) for CSR input (q rows) → q×D features.
+    ///
+    /// Bit-identical to [`featurize`](Self::featurize) on the densified
+    /// rows: the dense kernel accumulates `z += x_l · Ω_l` over dims in
+    /// ascending order skipping `x_l == 0.0`, and a CSR row walks exactly
+    /// those dims in the same order (indices are ascending and unique;
+    /// explicitly stored zeros are skipped the same way) — so the f32
+    /// accumulation sequence per feature is identical, in O(nnz·D) per
+    /// row instead of O(d·D).
+    pub fn featurize_sparse(&self, rows: &SparseChunk<'_>) -> Vec<f32> {
+        let q = rows.nrows();
+        let mut out = vec![0.0f32; q * self.dd];
+        for i in 0..q {
+            let (idx, vals) = rows.row(i);
+            let zi = &mut out[i * self.dd..(i + 1) * self.dd];
+            zi.copy_from_slice(&self.b);
+            for (&l, &xl) in idx.iter().zip(vals) {
+                if xl == 0.0 {
+                    continue;
+                }
+                let orow = &self.omega[l as usize * self.dd..(l as usize + 1) * self.dd];
                 for (zv, ov) in zi.iter_mut().zip(orow) {
                     *zv += xl * ov;
                 }
@@ -222,6 +284,18 @@ impl Predictor for RffPredictor {
             *o = dot_f32(&zq[i * dd..(i + 1) * dd], &self.theta32);
         }
     }
+
+    /// Native sparse serve path: featurize CSR rows directly (bit-identical
+    /// to densifying first — see [`RffSketch::featurize_sparse`]) and dot
+    /// against θ.
+    fn predict_sparse_into(&self, queries: &SparseChunk<'_>, out: &mut [f64]) {
+        let dd = self.sketch.dd;
+        assert_eq!(out.len(), queries.nrows(), "one output slot per query row");
+        let zq = self.sketch.featurize_sparse(queries);
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = dot_f32(&zq[i * dd..(i + 1) * dd], &self.theta32);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -297,6 +371,21 @@ mod tests {
                 col[j]
             );
         }
+    }
+
+    #[test]
+    fn sparse_featurize_is_bit_identical_to_dense() {
+        let (d, dd) = (7, 32);
+        let sk = RffSketch::empty(d, dd, 1.0, 13);
+        // four CSR rows: a generic row, an empty row, a row holding an
+        // explicit 0.0, and a full row
+        let indptr = [0usize, 3, 3, 5, 9];
+        let indices: Vec<u32> = vec![0, 2, 6, 1, 4, 0, 3, 5, 6];
+        let values: Vec<f32> = vec![0.5, -1.25, 2.0, 1.5, 0.0, -0.75, 0.25, 3.5, -2.0];
+        let sp = SparseChunk { indptr: &indptr, indices: &indices, values: &values };
+        let mut dense = Vec::new();
+        sp.densify_into(d, &mut dense);
+        assert_eq!(sk.featurize_sparse(&sp), sk.featurize(&dense));
     }
 
     #[test]

@@ -18,12 +18,14 @@
 //! thread count. The pre-CSR instance-at-a-time path is kept as
 //! [`WlshSketch::matvec_unfused`] for benchmarking and cross-checking.
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use super::{KrrOperator, Predictor};
 use crate::api::{BucketSpec, KrrError};
-use crate::data::{DataSource, MatrixSource};
-use crate::lsh::{BucketTable, BucketTableBuilder, IdMode, LshFamily, LshFunction};
+use crate::data::{Chunk, DataSource, MatrixSource, SparseChunk};
+use crate::lsh::{
+    BucketTable, BucketTableBuilder, IdMode, LshFamily, LshFunction, SparseHashPlan,
+};
 use crate::util::par;
 use crate::util::rng::Pcg64;
 
@@ -88,6 +90,9 @@ struct InstanceAccum {
     /// Reused per-chunk scratch (raw ids / weights of the current chunk).
     ids_buf: Vec<u64>,
     w_buf: Vec<f32>,
+    /// Sparse hash plan (batch arithmetic), built lazily on the first
+    /// sparse chunk so dense-only builds pay nothing.
+    plan: Option<SparseHashPlan>,
     done: Option<WlshInstance>,
 }
 
@@ -198,6 +203,12 @@ impl WlshSketch {
     /// bit-identical to [`build_spec_mode`](Self::build_spec_mode) on the
     /// materialized rows, for every chunk size and worker count
     /// (asserted by `tests/stream_equivalence.rs`).
+    ///
+    /// Sparse sources stay sparse: CSR chunks are hashed through
+    /// [`LshFunction::hash_sparse`] in O(nnz) per rect row (O(d) with a
+    /// smooth bucket, for the weight product), and the sparse ids/weights
+    /// are bit-identical to hashing the densified rows — so the whole
+    /// equivalence above carries over to sparse streams unchanged.
     #[allow(clippy::too_many_arguments)]
     pub fn build_source(
         src: &dyn DataSource,
@@ -226,22 +237,63 @@ impl WlshSketch {
                     weights: Vec::with_capacity(n_hint),
                     ids_buf: Vec::new(),
                     w_buf: Vec::new(),
+                    plan: None,
                     done: None,
                 }
             })
             .collect();
         let inv = (1.0 / scale) as f32;
         let mut x_buf: Vec<f32> = Vec::new();
+        let mut v_buf: Vec<f32> = Vec::new();
         let mut n = 0usize;
-        src.for_each_chunk(chunk_rows, &mut |rows, ys| {
-            x_buf.clear();
-            x_buf.extend(rows.iter().map(|&v| v * inv));
+        src.for_each_chunk_any(chunk_rows, &mut |chunk, ys| {
             n += ys.len();
+            // Bandwidth-scale the chunk into reused buffers, keeping its
+            // representation: dense rows scale in place; sparse chunks
+            // scale only the stored values (0 · inv = 0, so the implicit
+            // zeros need no work). The I32 id collapse has no sparse hash
+            // kernel, so sparse chunks densify there — a fallback, not the
+            // streaming path (HLO mode is a compatibility mode).
+            let scaled: Chunk<'_> = match chunk {
+                Chunk::Dense(rows) => {
+                    x_buf.clear();
+                    x_buf.extend(rows.iter().map(|&v| v * inv));
+                    Chunk::Dense(&x_buf)
+                }
+                Chunk::Sparse(sp) if mode == IdMode::U64 => {
+                    v_buf.clear();
+                    v_buf.extend(sp.values.iter().map(|&v| v * inv));
+                    Chunk::Sparse(SparseChunk {
+                        indptr: sp.indptr,
+                        indices: sp.indices,
+                        values: &v_buf,
+                    })
+                }
+                Chunk::Sparse(sp) => {
+                    sp.densify_into(d, &mut x_buf);
+                    for v in x_buf.iter_mut() {
+                        *v *= inv;
+                    }
+                    Chunk::Dense(&x_buf)
+                }
+            };
             par::fan_out_mut(&mut accums, workers, |_, acc| {
                 acc.ids_buf.clear();
                 acc.w_buf.clear();
-                acc.func
-                    .hash_batch(&x_buf, &family, mode, &mut acc.ids_buf, &mut acc.w_buf);
+                match &scaled {
+                    Chunk::Dense(rows) => {
+                        acc.func
+                            .hash_batch(rows, &family, mode, &mut acc.ids_buf, &mut acc.w_buf);
+                    }
+                    Chunk::Sparse(sp) => {
+                        if acc.plan.is_none() {
+                            acc.plan = Some(acc.func.sparse_plan(&family));
+                        }
+                        let plan = acc.plan.as_ref().expect("plan just built");
+                        acc.func
+                            .hash_sparse(sp, plan, &family, &mut acc.ids_buf, &mut acc.w_buf);
+                    }
+                }
                 for &id in &acc.ids_buf {
                     acc.builder.push(id);
                 }
@@ -319,7 +371,7 @@ impl WlshSketch {
     /// borrows and can be moved into server threads.
     pub fn predictor(self: Arc<Self>, beta: &[f64]) -> WlshPredictor {
         let loads = self.loads_all(beta, self.auto_threads());
-        WlshPredictor { sketch: self, loads }
+        WlshPredictor { sketch: self, loads, sparse_plans: OnceLock::new() }
     }
 
     /// Mean bucket count across instances (rank(K̃) proxy, Lemma 30's
@@ -507,6 +559,11 @@ impl KrrOperator for WlshSketch {
 pub struct WlshPredictor {
     sketch: Arc<WlshSketch>,
     loads: Vec<Vec<f64>>,
+    /// Per-instance sparse hash plans in *point* arithmetic (the query
+    /// path divides by w where the batch path multiplies by 1/w — the two
+    /// differ in f32, so each side carries its own plan). Built lazily on
+    /// the first sparse query and shared across serve threads.
+    sparse_plans: OnceLock<Vec<SparseHashPlan>>,
 }
 
 impl WlshPredictor {
@@ -529,6 +586,53 @@ impl Predictor for WlshPredictor {
 
     fn predict(&self, queries: &[f32]) -> Vec<f64> {
         self.predict_threads(queries, par::num_threads())
+    }
+
+    /// Native sparse serve path: hash each CSR row with the point-arithmetic
+    /// [`SparseHashPlan`]s — bit-identical to densifying the row and calling
+    /// [`predict_into`](Predictor::predict_into), but O(nnz + d) per query
+    /// with no scatter. I32/HLO mode has no sparse kernel and densifies
+    /// row-by-row.
+    fn predict_sparse_into(&self, queries: &SparseChunk<'_>, out: &mut [f64]) {
+        let sk = &self.sketch;
+        assert_eq!(out.len(), queries.nrows(), "one output slot per query row");
+        if sk.mode != IdMode::U64 {
+            let d = sk.family.d;
+            let mut row = vec![0.0f32; d];
+            for (i, o) in out.iter_mut().enumerate() {
+                let (idx, vals) = queries.row(i);
+                for v in row.iter_mut() {
+                    *v = 0.0;
+                }
+                for (&j, &v) in idx.iter().zip(vals) {
+                    row[j as usize] = v;
+                }
+                self.predict_into(&row, std::slice::from_mut(o));
+            }
+            return;
+        }
+        let plans = self.sparse_plans.get_or_init(|| {
+            sk.instances
+                .iter()
+                .map(|inst| inst.func.sparse_plan_point(&sk.family))
+                .collect()
+        });
+        let inv = (1.0 / sk.scale) as f32;
+        let inv_m = 1.0 / sk.m() as f64;
+        let mut vals_buf: Vec<f32> = Vec::new();
+        for (i, o) in out.iter_mut().enumerate() {
+            let (idx, vals) = queries.row(i);
+            vals_buf.clear();
+            vals_buf.extend(vals.iter().map(|&v| v * inv));
+            let mut acc = 0.0f64;
+            for ((inst, loads_s), plan) in sk.instances.iter().zip(&self.loads).zip(plans) {
+                let (id, w) = inst.func.hash_sparse_row(idx, &vals_buf, plan, &sk.family);
+                if let Some(b) = inst.table.lookup(id) {
+                    acc += w as f64 * loads_s[b as usize];
+                }
+            }
+            *o = acc * inv_m;
+        }
     }
 }
 

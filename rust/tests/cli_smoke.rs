@@ -310,8 +310,119 @@ fn streamed_libsvm_train_round_trips_through_the_sparse_loader() {
     let j = last_json(&out);
     assert_eq!(j.get("data_format").and_then(Json::as_str), Some("libsvm"));
     assert_eq!(j.get("n_train").and_then(Json::as_usize), Some(200));
+    // LIBSVM streams native CSR chunks by default
+    assert_eq!(j.get("sparse"), Some(&Json::Bool(true)));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("sparse CSR chunks"));
     assert!(j.get("train_sample_rmse").and_then(Json::as_f64).unwrap().is_finite());
     std::fs::remove_file(&path).ok();
+}
+
+/// Write a LIBSVM file whose feature indices are `base..base+2` (3
+/// features, every index present on some row) for the index-base tests.
+fn write_demo_libsvm(name: &str, rows: usize, base: usize) -> String {
+    let path = std::env::temp_dir().join(name);
+    let mut text = String::new();
+    for i in 0..rows {
+        let a = (i as f64 * 0.23).sin();
+        let b = (i as f64 * 0.17).cos();
+        let y = a - 0.5 * b;
+        // drop one feature per row so the file stays genuinely sparse
+        match i % 3 {
+            0 => text.push_str(&format!("{y:.6} {}:{a:.6} {}:{b:.6}\n", base, base + 1)),
+            1 => text.push_str(&format!("{y:.6} {}:{a:.6} {}:{b:.6}\n", base + 1, base + 2)),
+            _ => text.push_str(&format!("{y:.6} {}:{a:.6} {}:{b:.6}\n", base, base + 2)),
+        }
+    }
+    std::fs::write(&path, text).unwrap();
+    path.to_string_lossy().into_owned()
+}
+
+#[test]
+fn libsvm_base_flag_pins_the_index_convention() {
+    // indices 1..=3, index 0 never appears: the auto heuristic reads this
+    // as 1-based (d=3) — pinning --libsvm-base 0 decodes it as d=4
+    let p = write_demo_libsvm("wlsh_cli_base.libsvm", 120, 1);
+    let base_args: Vec<&str> = vec![
+        "train", "--dataset", &p, "--data-format", "libsvm", "--chunk-rows", "32", "--budget",
+        "8", "--cg-max-iters", "15",
+    ];
+    let auto = run(&base_args);
+    assert!(auto.status.success(), "stderr: {}", String::from_utf8_lossy(&auto.stderr));
+    assert!(
+        String::from_utf8_lossy(&auto.stderr).contains("d=3"),
+        "stderr: {}",
+        String::from_utf8_lossy(&auto.stderr)
+    );
+    let mut pinned_args = base_args.clone();
+    pinned_args.extend(["--libsvm-base", "0"]);
+    let pinned = run(&pinned_args);
+    assert!(pinned.status.success(), "stderr: {}", String::from_utf8_lossy(&pinned.stderr));
+    assert!(
+        String::from_utf8_lossy(&pinned.stderr).contains("d=4"),
+        "stderr: {}",
+        String::from_utf8_lossy(&pinned.stderr)
+    );
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn libsvm_base_conflicts_and_typos_are_clean_errors() {
+    // a file that *does* use index 0 cannot be opened as 1-based: runtime
+    // data error (exit 1), not a panic
+    let p0 = write_demo_libsvm("wlsh_cli_base0.libsvm", 60, 0);
+    let out = run(&[
+        "train", "--dataset", &p0, "--data-format", "libsvm", "--libsvm-base", "1",
+    ]);
+    assert_eq!(out.status.code(), Some(1));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("1-based"), "stderr: {stderr}");
+    assert!(!stderr.contains("panicked"), "stderr: {stderr}");
+    // a typoed base value is usage (exit 2), surfaced before any file I/O
+    let out = run(&[
+        "train", "--dataset", "/definitely/not/a/file", "--data-format", "libsvm",
+        "--libsvm-base", "2",
+    ]);
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("auto|0|1"), "stderr: {stderr}");
+    std::fs::remove_file(&p0).ok();
+}
+
+#[test]
+fn sparse_flag_false_forces_the_dense_pipeline() {
+    let p = write_demo_libsvm("wlsh_cli_dense_forced.libsvm", 120, 1);
+    let out = run(&[
+        "train", "--dataset", &p, "--data-format", "libsvm", "--chunk-rows", "32", "--budget",
+        "8", "--cg-max-iters", "15", "--sparse=false",
+    ]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let j = last_json(&out);
+    assert_eq!(j.get("sparse"), Some(&Json::Bool(false)));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("dense chunks"));
+    assert!(j.get("train_sample_rmse").and_then(Json::as_f64).unwrap().is_finite());
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn sparse_flag_misuse_is_a_clean_usage_error() {
+    // --sparse=true on a dense-only format: usage error, exit 2
+    let p = write_demo_csv("wlsh_cli_sparse_csv.csv", 30);
+    let out = run(&[
+        "train", "--dataset", &p, "--data-format", "csv", "--sparse=true",
+    ]);
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("sparse"), "stderr: {stderr}");
+    assert!(!stderr.contains("panicked"), "stderr: {stderr}");
+    // a typoed --sparse value is rejected before touching the file
+    let out = run(&[
+        "train", "--dataset", "/definitely/not/a/file", "--data-format", "libsvm",
+        "--sparse=maybe",
+    ]);
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("auto|true|false"), "stderr: {stderr}");
+    std::fs::remove_file(&p).ok();
 }
 
 #[test]

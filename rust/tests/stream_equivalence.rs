@@ -8,7 +8,10 @@
 use wlsh_krr::api::MethodSpec;
 use wlsh_krr::config::KrrConfig;
 use wlsh_krr::coordinator::Trainer;
-use wlsh_krr::data::{synthetic_by_name, DataSource, Dataset, SyntheticSource};
+use wlsh_krr::data::{
+    head_sample, head_sample_sparse, synthetic_by_name, write_libsvm, DataSource, Dataset,
+    LibsvmSource, Standardizer, SyntheticSource,
+};
 use wlsh_krr::kernels::Kernel;
 use wlsh_krr::lsh::IdMode;
 use wlsh_krr::sketch::{KrrOperator, NystromSketch, RffSketch, WlshSketch};
@@ -182,6 +185,136 @@ fn synthetic_source_streams_identically_to_its_materialization() {
     let want = Trainer::new(cfg.clone()).train(&ds).unwrap();
     let got = Trainer::new(cfg).train_source(&src).unwrap();
     assert_eq!(got.beta, want.beta);
+}
+
+/// Zero out ~60% of wine's entries deterministically and serialize the
+/// result as a 1-based LIBSVM file (stored nonzeros only). Returns the
+/// file path. `write_libsvm` → `LibsvmSource` round-trips values exactly
+/// (shortest-round-trip float formatting), so the stream reproduces the
+/// sparsified matrix bit for bit.
+fn sparse_wine_file(n: usize, name: &str) -> String {
+    let mut ds = synthetic_by_name("wine", Some(n), 11).unwrap();
+    for i in 0..ds.n {
+        for j in 0..ds.d {
+            // keep the last feature of row 0 so the file pins d
+            if (i * 31 + j * 17) % 10 < 6 && !(i == 0 && j == ds.d - 1) {
+                ds.x[i * ds.d + j] = 0.0;
+            }
+        }
+    }
+    let path = std::env::temp_dir().join(name).to_string_lossy().into_owned();
+    write_libsvm(&ds, &path, false).unwrap();
+    path
+}
+
+/// Open a sparse LIBSVM stream and materialize its densified equivalent:
+/// the dense visitor of a sparse standardized stream applies the same
+/// scale-only feature map as the sparse chunks, so a full `head_sample`
+/// *is* the densified reference matrix.
+fn sparse_stream_and_reference(path: &str) -> (LibsvmSource, Standardizer, Dataset) {
+    let src = LibsvmSource::open(path).unwrap();
+    assert!(src.is_sparse());
+    let standardizer = Standardizer::fit(&src, 64).unwrap();
+    let n = src.len_hint().unwrap();
+    let dsref = head_sample(&standardizer.source(&src), n, 64).unwrap();
+    assert_eq!(dsref.n, n);
+    (src, standardizer, dsref)
+}
+
+#[test]
+fn sparse_streamed_wlsh_build_is_bit_identical_to_densified() {
+    let path = sparse_wine_file(160, "wlsh_equiv_sparse_wlsh.libsvm");
+    let (src, standardizer, dsref) = sparse_stream_and_reference(&path);
+    let view = standardizer.source(&src);
+    let n = dsref.n;
+    let beta = random_beta(n, 3);
+    let queries = &dsref.x[..20 * dsref.d];
+    for (bucket_s, shape) in [("rect", 2.0), ("smooth2", 7.0)] {
+        let bucket = bucket_s.parse().unwrap();
+        let want = WlshSketch::build_spec(&dsref.x, n, dsref.d, 12, &bucket, shape, 3.0, 5);
+        let want_mv = want.matvec_serial(&beta);
+        let want_pred = want.predict(queries, &beta);
+        let want_diag = want.diag_values();
+        for chunk in CHUNKS.into_iter().chain([n]) {
+            for workers in THREADS {
+                let got = WlshSketch::build_source(
+                    &view, 12, &bucket, shape, 3.0, 5, IdMode::U64, chunk, workers,
+                )
+                .unwrap();
+                let tag = format!("{bucket_s} chunk={chunk} workers={workers}");
+                for (a, b) in want.instances.iter().zip(&got.instances) {
+                    assert_eq!(a.table.bucket_of, b.table.bucket_of, "{tag} bucket_of");
+                    assert_eq!(a.table.offsets, b.table.offsets, "{tag} offsets");
+                    assert_eq!(a.table.members, b.table.members, "{tag} members");
+                    assert_eq!(a.weights, b.weights, "{tag} weights");
+                    assert_eq!(a.weights_csr, b.weights_csr, "{tag} weights_csr");
+                }
+                assert_eq!(got.matvec_serial(&beta), want_mv, "{tag} matvec");
+                assert_eq!(got.predict(queries, &beta), want_pred, "{tag} predict");
+                assert_eq!(got.diag_values(), want_diag, "{tag} diag");
+            }
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn sparse_streamed_rff_build_is_bit_identical_to_densified() {
+    let path = sparse_wine_file(160, "wlsh_equiv_sparse_rff.libsvm");
+    let (src, standardizer, dsref) = sparse_stream_and_reference(&path);
+    let view = standardizer.source(&src);
+    let n = dsref.n;
+    let want = RffSketch::build(&dsref.x, n, dsref.d, 48, 3.0, 7);
+    let beta = random_beta(n, 4);
+    let queries = &dsref.x[..20 * dsref.d];
+    let want_mv = want.matvec(&beta);
+    let want_pred = want.predict(queries, &beta);
+    for chunk in CHUNKS.into_iter().chain([n]) {
+        for workers in THREADS {
+            let got = RffSketch::build_source(&view, 48, 3.0, 7, chunk, workers).unwrap();
+            let tag = format!("chunk={chunk} workers={workers}");
+            assert_eq!(got.features(), want.features(), "{tag} feature matrix");
+            assert_eq!(got.matvec(&beta), want_mv, "{tag} matvec");
+            assert_eq!(got.predict(queries, &beta), want_pred, "{tag} predict");
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn sparse_streamed_training_matches_densified_training() {
+    // End to end: CG coefficients from the sparse CSR stream equal those
+    // from training on the densified reference rows, and CSR queries
+    // through `predict_sparse_into` equal dense queries bit for bit.
+    let path = sparse_wine_file(150, "wlsh_equiv_sparse_train.libsvm");
+    let (src, standardizer, dsref) = sparse_stream_and_reference(&path);
+    let view = standardizer.source(&src);
+    let n = dsref.n;
+    let sample = head_sample_sparse(&view, 20, 64).unwrap();
+    for method in [MethodSpec::Wlsh, MethodSpec::Rff] {
+        let base = KrrConfig {
+            method,
+            budget: 24,
+            scale: 3.0,
+            lambda: 0.4,
+            cg_max_iters: 60,
+            ..Default::default()
+        };
+        let want = Trainer::new(base.clone()).train(&dsref).unwrap();
+        let want_pred = want.predict(&dsref.x[..20 * dsref.d]);
+        for chunk in CHUNKS.into_iter().chain([n]) {
+            for workers in THREADS {
+                let cfg = KrrConfig { chunk_rows: chunk, workers, ..base.clone() };
+                let got = Trainer::new(cfg).train_source(&view).unwrap();
+                let tag = format!("{method} chunk={chunk} workers={workers}");
+                assert_eq!(got.beta, want.beta, "{tag} β");
+                let mut sp_pred = vec![0.0f64; sample.n()];
+                got.predict_sparse_into(&sample.view(), &mut sp_pred);
+                assert_eq!(sp_pred, want_pred, "{tag} sparse predict");
+            }
+        }
+    }
+    std::fs::remove_file(&path).ok();
 }
 
 #[test]

@@ -51,6 +51,10 @@ extract() {
             n = num($0, "n"); m = num($0, "m")
             if ((v = num($0, "serial_secs")) != "")    print "matvec.serial_secs.n" n ".m" m, v
             if ((v = num($0, "parallel_secs")) != "")  print "matvec.parallel_secs.n" n ".m" m, v
+        } else if (series == "sparse_stream_build") {
+            n = num($0, "n")
+            if ((v = num($0, "wlsh_sparse_secs")) != "") print "matvec.wlsh_sparse_secs.n" n, v
+            if ((v = num($0, "rff_sparse_secs")) != "")  print "matvec.rff_sparse_secs.n" n, v
         }
         next
     }
