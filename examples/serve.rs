@@ -1,6 +1,9 @@
 //! Serving demo: trains a model, starts the worker-pool TCP JSON-lines
 //! server, fires a concurrent client workload (single + batched requests)
-//! through it, and prints the latency report.
+//! through it, and prints the latency report. The client side speaks the
+//! typed wire protocol (`wlsh_krr::coordinator::proto`) — requests are
+//! built as [`Request`] values and replies parsed as [`Response`]s, the
+//! same types the server itself uses.
 //!
 //! Run with:
 //!   cargo run --release --example serve [-- --clients 4 --requests 400 --workers 4]
@@ -11,10 +14,10 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use wlsh_krr::api::{KrrError, KrrModel, MethodSpec};
+use wlsh_krr::coordinator::proto::{Request, Response};
 use wlsh_krr::coordinator::{serve, ModelRegistry, ServerConfig};
 use wlsh_krr::data::synthetic_by_name;
 use wlsh_krr::util::cli::Args;
-use wlsh_krr::util::json::Json;
 
 fn main() -> Result<(), KrrError> {
     let args = Args::from_env();
@@ -61,28 +64,32 @@ fn main() -> Result<(), KrrError> {
             let mut conn = TcpStream::connect(&addr).unwrap();
             conn.set_nodelay(true).ok();
             let mut reader = BufReader::new(conn.try_clone().unwrap());
-            let row = |qi: usize| {
-                let feats: Vec<String> =
-                    rows[qi * d..(qi + 1) * d].iter().map(|v| format!("{v}")).collect();
-                format!("[{}]", feats.join(","))
+            let row = |qi: usize| rows[qi * d..(qi + 1) * d].to_vec();
+            let mut expect_pred = |reader: &mut BufReader<TcpStream>| {
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                match Response::parse(line.trim_end()) {
+                    Ok(Response::Pred(_)) => {}
+                    other => panic!("bad response: {other:?} ({line})"),
+                }
             };
             for r in 0..requests {
                 if r % 5 == 4 {
                     // every fifth request: a batch of 4 rows, one reply per row
                     let idxs: Vec<usize> = (0..4).map(|k| (c * 7919 + r + k) % nq).collect();
-                    let rows_json: Vec<String> = idxs.iter().map(|&qi| row(qi)).collect();
-                    writeln!(conn, "{{\"batch\": [{}]}}", rows_json.join(",")).unwrap();
+                    let req = Request::Batch {
+                        rows: idxs.iter().map(|&qi| row(qi)).collect(),
+                        model: None,
+                    };
+                    writeln!(conn, "{}", req.to_line()).unwrap();
                     for _ in &idxs {
-                        let mut line = String::new();
-                        reader.read_line(&mut line).unwrap();
-                        assert!(line.contains("pred"), "bad response: {line}");
+                        expect_pred(&mut reader);
                     }
                 } else {
                     let qi = (c * 7919 + r) % nq;
-                    writeln!(conn, "{{\"features\": {}}}", row(qi)).unwrap();
-                    let mut line = String::new();
-                    reader.read_line(&mut line).unwrap();
-                    assert!(line.contains("pred"), "bad response: {line}");
+                    let req = Request::Predict { features: row(qi), model: None };
+                    writeln!(conn, "{}", req.to_line()).unwrap();
+                    expect_pred(&mut reader);
                 }
             }
         }));
@@ -96,21 +103,24 @@ fn main() -> Result<(), KrrError> {
     let mut conn = TcpStream::connect(&addr).unwrap();
     conn.set_nodelay(true).ok();
     let mut reader = BufReader::new(conn.try_clone().unwrap());
-    writeln!(conn, "{{\"cmd\": \"stats\"}}").unwrap();
+    writeln!(conn, "{}", Request::Stats.to_line()).unwrap();
     let mut line = String::new();
     reader.read_line(&mut line).unwrap();
-    let stats = Json::parse(&line).unwrap();
+    let stats = match Response::parse(line.trim_end()) {
+        Ok(Response::Stats(s)) => s,
+        other => panic!("bad stats reply: {other:?} ({line})"),
+    };
     println!(
         "{total} requests in {secs:.2}s = {:.0} req/s | served {} rows, rejected {} | \
          latency p50 {:.0}us p95 {:.0}us p99 {:.0}us",
         total as f64 / secs,
-        stats.get("served").and_then(Json::as_usize).unwrap_or(0),
-        stats.get("rejected").and_then(Json::as_usize).unwrap_or(0),
-        stats.get("p50_us").and_then(Json::as_f64).unwrap_or(0.0),
-        stats.get("p95_us").and_then(Json::as_f64).unwrap_or(0.0),
-        stats.get("p99_us").and_then(Json::as_f64).unwrap_or(0.0),
+        stats.served,
+        stats.rejected,
+        stats.p50_us,
+        stats.p95_us,
+        stats.p99_us,
     );
-    writeln!(conn, "{{\"cmd\": \"shutdown\"}}").unwrap();
+    writeln!(conn, "{}", Request::Shutdown.to_line()).unwrap();
     let mut line2 = String::new();
     reader.read_line(&mut line2).unwrap();
     server.join().unwrap();

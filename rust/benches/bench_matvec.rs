@@ -201,6 +201,67 @@ fn main() {
          once n·m is large enough to amortize thread spawns."
     );
 
+    // Sharded solve: the same end-to-end train (sketch build + CG) with
+    // the m instances partitioned across 2 shard workers — run in-thread
+    // here, but speaking the full wire protocol over real TCP sockets —
+    // vs the single-process train. The gap is the serialization +
+    // round-trip tax per CG iteration; CI's baseline tracks it as
+    // solve.sharded_secs.
+    {
+        use std::sync::mpsc;
+        use wlsh_krr::api::{MethodSpec, TopologySpec};
+        use wlsh_krr::config::KrrConfig;
+        use wlsh_krr::coordinator::{run_worker, Trainer};
+        use wlsh_krr::data::synthetic_by_name;
+        let sn = by_scale(1024, 4096, 16384);
+        let shards = 2usize;
+        let mut ds = synthetic_by_name("wine", Some(sn), 7).expect("bench dataset");
+        ds.standardize();
+        let cfg = KrrConfig {
+            method: MethodSpec::Wlsh,
+            budget: 32,
+            scale: 3.0,
+            lambda: 0.5,
+            seed: 7,
+            cg_max_iters: 20,
+            ..Default::default()
+        };
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..shards {
+            let tx = tx.clone();
+            std::thread::spawn(move || run_worker("127.0.0.1:0", Some(tx)).unwrap());
+        }
+        let addrs: Vec<String> = (0..shards).map(|_| rx.recv().expect("worker addr")).collect();
+        let mut sharded_cfg = cfg.clone();
+        sharded_cfg.topology = TopologySpec::Remote { addrs };
+        println!("\n=== sharded solve (n={sn}, m=32, shards={shards}, in-thread workers) ===\n");
+        let budget = by_scale(0.3, 1.0, 2.0);
+        let s_local = bench("solve-local", budget, || {
+            Trainer::new(cfg.clone()).train(&ds).expect("local train")
+        });
+        let s_sharded = bench("solve-sharded", budget, || {
+            Trainer::new(sharded_cfg.clone()).train(&ds).expect("sharded train")
+        });
+        let tsh = Table::new(&[("topology", 10), ("solve", 10), ("vs local", 9)]);
+        tsh.row(&["local".into(), secs(s_local.min_secs), "1.00x".into()]);
+        tsh.row(&[
+            format!("shards={shards}"),
+            secs(s_sharded.min_secs),
+            format!("{:.2}x", s_sharded.min_secs / s_local.min_secs),
+        ]);
+        record(
+            "matvec",
+            &JsonWriter::object()
+                .field_str("series", "sharded_solve")
+                .field_usize("n", sn)
+                .field_usize("m", 32)
+                .field_usize("shards", shards)
+                .field_f64("local_solve_secs", s_local.min_secs)
+                .field_f64("sharded_secs", s_sharded.min_secs)
+                .finish(),
+        );
+    }
+
     // XLA-backend mat-vec comparison at a fixed shape (if artifacts exist)
     match Runtime::open_default() {
         Ok(rt) => {

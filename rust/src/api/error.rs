@@ -34,6 +34,10 @@ pub enum KrrError {
     SolveFailed(String),
     /// Filesystem / network I/O failure (checkpoints, CSV loads).
     Io(String),
+    /// A shard worker failed (connect refused after retries, mid-solve
+    /// disconnect, malformed reply). Names the shard address so the
+    /// runbook's "which process died" question has a one-line answer.
+    Shard(String),
 }
 
 impl fmt::Display for KrrError {
@@ -59,6 +63,7 @@ impl fmt::Display for KrrError {
             KrrError::Dataset(s) => write!(f, "bad dataset: {s}"),
             KrrError::SolveFailed(s) => write!(f, "solve failed: {s}"),
             KrrError::Io(s) => write!(f, "io error: {s}"),
+            KrrError::Shard(s) => write!(f, "shard failure: {s}"),
         }
     }
 }
@@ -82,7 +87,10 @@ impl KrrError {
             | KrrError::UnknownKernel(_)
             | KrrError::UnknownDataset(_)
             | KrrError::BadParam(_) => 2,
-            KrrError::Dataset(_) | KrrError::SolveFailed(_) | KrrError::Io(_) => 1,
+            KrrError::Dataset(_)
+            | KrrError::SolveFailed(_)
+            | KrrError::Io(_)
+            | KrrError::Shard(_) => 1,
         }
     }
 }
@@ -106,6 +114,8 @@ mod tests {
         assert_eq!(KrrError::Dataset("x".into()).exit_code(), 1);
         assert_eq!(KrrError::SolveFailed("x".into()).exit_code(), 1);
         assert_eq!(KrrError::Io("x".into()).exit_code(), 1);
+        // a shard dying mid-solve is a runtime failure too
+        assert_eq!(KrrError::Shard("x".into()).exit_code(), 1);
     }
 
     #[test]

@@ -25,7 +25,8 @@ mod spec;
 
 pub use error::KrrError;
 pub use spec::{
-    BucketSpec, KernelFamily, KernelSpec, MethodSpec, PrecondSpec, DEFAULT_PRECOND_RANK,
+    BucketSpec, KernelFamily, KernelSpec, MethodSpec, PrecondSpec, TopologySpec,
+    DEFAULT_PRECOND_RANK,
 };
 
 pub use crate::coordinator::TrainedModel;
@@ -72,6 +73,7 @@ impl_into_spec!(MethodSpec);
 impl_into_spec!(BucketSpec);
 impl_into_spec!(PrecondSpec);
 impl_into_spec!(KernelSpec);
+impl_into_spec!(TopologySpec);
 
 /// Entry point for the builder API. `KrrModel` is a namespace: the trained
 /// artifact itself is a [`TrainedModel`].
@@ -132,6 +134,13 @@ impl KrrBuilder {
     /// CG preconditioner: a [`PrecondSpec`] or its string form.
     pub fn precond(mut self, p: impl IntoSpec<PrecondSpec>) -> Self {
         self.record(p.into_spec(), |c, v| c.precond = v);
+        self
+    }
+
+    /// Solve/serving topology: a [`TopologySpec`] or its string form
+    /// (`local`, `shards(n=N)`, `remote(addr=host:port,...)`).
+    pub fn topology(mut self, t: impl IntoSpec<TopologySpec>) -> Self {
+        self.record(t.into_spec(), |c, v| c.topology = v);
         self
     }
 

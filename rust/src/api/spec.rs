@@ -253,6 +253,110 @@ impl FromStr for KernelSpec {
     }
 }
 
+/// Where the m WLSH instances live during solve and serving.
+///
+/// Strings: `local`, `shards(n=N)` with N ≥ 1 locally spawned worker
+/// processes, `remote(addr=host:port,addr=host:port,...)` with one
+/// `addr=` pair per already-running `shard-worker` process. The shard
+/// order is the listed order — it fixes the reduction order, so it is
+/// part of the spec, not an implementation detail.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TopologySpec {
+    /// Everything in this address space (the default).
+    Local,
+    /// Spawn `n` local `shard-worker` child processes on ephemeral ports.
+    Shards {
+        /// Worker-process count (≥ 1; `shards(n=1)` is the distributed
+        /// path with a single remote operator, bit-identical to `local`).
+        n: usize,
+    },
+    /// Connect to externally managed shard workers at these addresses,
+    /// in this order.
+    Remote {
+        /// `host:port` of each worker, in reduction order.
+        addrs: Vec<String>,
+    },
+}
+
+impl TopologySpec {
+    /// True for the distributed topologies (anything but [`Local`](Self::Local)).
+    pub fn is_distributed(&self) -> bool {
+        !matches!(self, TopologySpec::Local)
+    }
+}
+
+impl FromStr for TopologySpec {
+    type Err = KrrError;
+
+    fn from_str(s: &str) -> Result<Self, KrrError> {
+        if s.trim() == "local" {
+            return Ok(TopologySpec::Local);
+        }
+        let bad = || {
+            KrrError::BadParam(format!(
+                "unknown topology {s:?} (local|shards(n=N)|remote(addr=host:port,...))"
+            ))
+        };
+        let (name, params) = split_params(s).map_err(|_| bad())?;
+        match name {
+            "shards" => {
+                let mut n = None;
+                for (k, v) in params {
+                    match k {
+                        "n" => {
+                            let parsed: usize = v.parse().map_err(|_| {
+                                KrrError::BadParam(format!(
+                                    "shards n {v:?} is not an integer"
+                                ))
+                            })?;
+                            if parsed == 0 {
+                                return Err(KrrError::BadParam(
+                                    "shards n must be ≥ 1".into(),
+                                ));
+                            }
+                            n = Some(parsed);
+                        }
+                        other => {
+                            return Err(KrrError::BadParam(format!(
+                                "shards topology has no parameter {other:?}"
+                            )))
+                        }
+                    }
+                }
+                let n = n.ok_or_else(|| {
+                    KrrError::BadParam("shards topology requires n, e.g. shards(n=4)".into())
+                })?;
+                Ok(TopologySpec::Shards { n })
+            }
+            "remote" => {
+                let mut addrs = Vec::new();
+                for (k, v) in params {
+                    match k {
+                        "addr" if !v.is_empty() => addrs.push(v.to_string()),
+                        "addr" => {
+                            return Err(KrrError::BadParam(
+                                "remote topology addr must be non-empty".into(),
+                            ))
+                        }
+                        other => {
+                            return Err(KrrError::BadParam(format!(
+                                "remote topology has no parameter {other:?}"
+                            )))
+                        }
+                    }
+                }
+                if addrs.is_empty() {
+                    return Err(KrrError::BadParam(
+                        "remote topology requires at least one addr=host:port".into(),
+                    ));
+                }
+                Ok(TopologySpec::Remote { addrs })
+            }
+            _ => Err(bad()),
+        }
+    }
+}
+
 fn parse_f64_param(key: &str, v: &str) -> Result<f64, KrrError> {
     let x: f64 = v
         .parse()
@@ -314,6 +418,25 @@ impl fmt::Display for PrecondSpec {
             PrecondSpec::None => write!(f, "none"),
             PrecondSpec::Jacobi => write!(f, "jacobi"),
             PrecondSpec::Nystrom { rank } => write!(f, "nystrom(rank={rank})"),
+        }
+    }
+}
+
+impl fmt::Display for TopologySpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TopologySpec::Local => write!(f, "local"),
+            TopologySpec::Shards { n } => write!(f, "shards(n={n})"),
+            TopologySpec::Remote { addrs } => {
+                write!(f, "remote(")?;
+                for (i, a) in addrs.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write!(f, "addr={a}")?;
+                }
+                write!(f, ")")
+            }
         }
     }
 }
@@ -407,6 +530,30 @@ mod tests {
             Err(KrrError::BadParam(_))
         ));
         assert!(matches!("cosine".parse::<KernelSpec>(), Err(KrrError::UnknownKernel(_))));
+    }
+
+    #[test]
+    fn topology_round_trips_and_rejects_degenerate() {
+        for (s, t) in [
+            ("local", TopologySpec::Local),
+            ("shards(n=4)", TopologySpec::Shards { n: 4 }),
+            (
+                "remote(addr=127.0.0.1:9001,addr=127.0.0.1:9002)",
+                TopologySpec::Remote {
+                    addrs: vec!["127.0.0.1:9001".into(), "127.0.0.1:9002".into()],
+                },
+            ),
+        ] {
+            assert_eq!(s.parse::<TopologySpec>().unwrap(), t);
+            assert_eq!(t.to_string(), s);
+        }
+        for bad in ["", "shards", "shards(n=0)", "shards(m=2)", "remote", "remote()", "ring(n=3)"]
+        {
+            assert!(
+                matches!(bad.parse::<TopologySpec>(), Err(KrrError::BadParam(_))),
+                "{bad:?} should be rejected"
+            );
+        }
     }
 
     #[test]

@@ -6,7 +6,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::api::{BucketSpec, KrrError, MethodSpec, PrecondSpec};
+use crate::api::{BucketSpec, KrrError, MethodSpec, PrecondSpec, TopologySpec};
 
 /// Parsed config: section → key → raw value string.
 #[derive(Clone, Debug, Default)]
@@ -122,6 +122,11 @@ pub struct KrrConfig {
     /// bit-identical at every chunk size).
     pub chunk_rows: usize,
     pub seed: u64,
+    /// Where the m WLSH instances live during solve/serving: this
+    /// process, locally spawned shard workers, or remote addresses.
+    /// Distributed topologies require `method = wlsh` (the instance
+    /// average is what shards).
+    pub topology: TopologySpec,
 }
 
 impl Default for KrrConfig {
@@ -142,6 +147,7 @@ impl Default for KrrConfig {
             workers: 1,
             chunk_rows: 8192,
             seed: 42,
+            topology: TopologySpec::Local,
         }
     }
 }
@@ -172,6 +178,10 @@ impl KrrConfig {
                 *rank = cfg.get_usize("krr", "precond_rank", *rank);
             }
         }
+        let topology = match cfg.get("krr", "topology") {
+            Some(s) => s.parse()?,
+            None => d.topology,
+        };
         Ok(KrrConfig {
             method,
             budget: cfg.get_usize("krr", "budget", d.budget),
@@ -186,6 +196,7 @@ impl KrrConfig {
             workers: cfg.get_usize("krr", "workers", d.workers),
             chunk_rows: cfg.get_usize("krr", "chunk_rows", d.chunk_rows),
             seed: cfg.get_usize("krr", "seed", d.seed as usize) as u64,
+            topology,
         })
     }
 
@@ -217,6 +228,12 @@ impl KrrConfig {
         }
         if self.chunk_rows == 0 {
             return Err(KrrError::BadParam("chunk_rows must be ≥ 1".to_string()));
+        }
+        if self.topology.is_distributed() && self.method != MethodSpec::Wlsh {
+            return Err(KrrError::BadParam(format!(
+                "topology {} requires method wlsh (only the m-instance average shards)",
+                self.topology
+            )));
         }
         Ok(())
     }
@@ -345,6 +362,24 @@ mod tests {
             KrrConfig::from_config(&cfg),
             Err(KrrError::UnknownPrecond(_))
         ));
+    }
+
+    #[test]
+    fn topology_parses_from_toml_and_defaults_local() {
+        let cfg = Config::parse("[krr]\ntopology = \"shards(n=3)\"\n").unwrap();
+        let k = KrrConfig::from_config(&cfg).unwrap();
+        assert_eq!(k.topology, TopologySpec::Shards { n: 3 });
+        let bare = KrrConfig::from_config(&Config::parse("[krr]\n").unwrap()).unwrap();
+        assert_eq!(bare.topology, TopologySpec::Local);
+        let bad = Config::parse("[krr]\ntopology = ring\n").unwrap();
+        assert!(matches!(KrrConfig::from_config(&bad), Err(KrrError::BadParam(_))));
+        // distributed topologies are WLSH-only
+        let k = KrrConfig {
+            method: MethodSpec::Rff,
+            topology: TopologySpec::Shards { n: 2 },
+            ..KrrConfig::default()
+        };
+        assert!(matches!(k.validate(), Err(KrrError::BadParam(_))));
     }
 
     #[test]

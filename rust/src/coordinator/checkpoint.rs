@@ -20,7 +20,7 @@
 use std::io::{Read, Write};
 use std::path::Path;
 
-use crate::api::{KrrError, PrecondSpec};
+use crate::api::{KrrError, PrecondSpec, TopologySpec};
 use crate::config::KrrConfig;
 use crate::coordinator::{TrainReport, TrainedModel, Trainer};
 use crate::data::Dataset;
@@ -41,6 +41,7 @@ pub fn save(model: &TrainedModel, path: &Path) -> std::io::Result<()> {
         .field_usize("cg_max_iters", c.cg_max_iters)
         .field_f64("cg_tol", c.cg_tol)
         .field_str("precond", &c.precond.to_string())
+        .field_str("topology", &c.topology.to_string())
         .field_usize("chunk_rows", c.chunk_rows)
         .field_usize("seed", c.seed as usize)
         .field_usize("n", model.beta.len())
@@ -103,6 +104,11 @@ pub fn load(path: &Path, train: &Dataset) -> Result<TrainedModel, KrrError> {
             *rank = legacy;
         }
     }
+    // absent in pre-distributed checkpoints — those are local by definition
+    let topology: TopologySpec = match header.get("topology").and_then(Json::as_str) {
+        Some(t) => t.parse()?,
+        None => TopologySpec::Local,
+    };
     let config = KrrConfig {
         method: s("method")?.parse()?,
         budget: g("budget")? as usize,
@@ -122,6 +128,7 @@ pub fn load(path: &Path, train: &Dataset) -> Result<TrainedModel, KrrError> {
             .and_then(Json::as_usize)
             .unwrap_or(KrrConfig::default().chunk_rows),
         seed: g("seed")? as u64,
+        topology,
     };
     // same range-check path as the builder/CLI/TOML — a corrupt header
     // (scale ≤ 0, negative λ) must not silently produce a NaN model
@@ -222,6 +229,8 @@ mod tests {
         assert_eq!(model.config.method, MethodSpec::Wlsh);
         assert_eq!(model.config.bucket, crate::api::BucketSpec::Smooth(2));
         assert_eq!(model.config.precond, PrecondSpec::Nystrom { rank: 19 });
+        // no topology key either — legacy checkpoints are local
+        assert_eq!(model.config.topology, TopologySpec::Local);
         assert_eq!(model.beta[100], 1.0);
         std::fs::remove_file(&path).ok();
     }

@@ -9,13 +9,16 @@
 
 mod batcher;
 pub mod checkpoint;
+pub mod proto;
 mod registry;
 mod router;
 mod server;
+pub mod shard;
 mod trainer;
 
 pub use batcher::{BatchItem, BatchPredict, RowBlock, SubmitError, WorkerPool};
 pub use registry::{ModelLoader, ModelRegistry, ModelStats, DEFAULT_MODEL};
 pub use router::PredictRouter;
 pub use server::{serve, ServerConfig, ServerStats};
+pub use shard::{run_worker, ShardClient, ShardGroup, ShardPlan, ShardedOperator};
 pub use trainer::{TrainReport, TrainedModel, Trainer};

@@ -1,0 +1,923 @@
+//! Typed wire protocol for the JSON-lines serving/shard fabric.
+//!
+//! One request/response grammar, shared by every endpoint that speaks the
+//! TCP protocol: the serving tier ([`serve`](crate::coordinator::serve)),
+//! the shard-worker loop (`krr shard-worker`), the example clients, and
+//! the load tests. A [`Request`] parses from one line and serializes back
+//! to one line ([`Request::to_line`] / [`Request::parse`] round-trip
+//! bit-exactly, property-tested below); same for [`Response`].
+//!
+//! Serving requests (wire-compatible with the pre-typed protocol):
+//!
+//! ```text
+//! → {"features": [f32...], "model"?: "name"}      ← {"pred": η̃(q)}
+//! → {"batch": [[f32...],...], "model"?: "name"}   ← one {"pred": ...} line per row
+//! → {"sparse": [[idx, val],...], "model"?: "..."} ← {"pred": ...}
+//! → {"cmd": "stats"}                              ← {"served": ..., "p50_us": ..., ...}
+//! → {"cmd": "reload", "model"?: "m", "path": "ckpt"} ← {"ok": "true", "model": "m"}
+//! → {"cmd": "shutdown"}                           ← {"ok": "true"}
+//! ```
+//!
+//! Shard operations (new verbs under the same `"cmd"` key; the
+//! coordinator is the only client):
+//!
+//! ```text
+//! → {"cmd": "shard-build", n, d, x, m_total, lo, hi, bucket, ...}
+//!                                   ← {"shard": {n, d, m_local, blocks}}
+//! → {"cmd": "shard-matvec", "beta": [f64...]}
+//!                                   ← {"block_partials": [[f64...],...]}
+//! → {"cmd": "shard-load-beta", "beta": [f64...]}
+//!                                   ← {"shard": {...}}
+//! → {"cmd": "shard-predict", "rows": [[f32...],...]}
+//!                                   ← {"query_partials": [[f64|null,...],...]}
+//! → {"cmd": "shard-info"}           ← {"shard": {...}}
+//! ```
+//!
+//! Number transport is bit-exact for finite values: Rust's `{}` Display
+//! for f64/f32 emits the shortest decimal that round-trips, and the JSON
+//! parser reads it back through `str::parse::<f64>` — so β, partial sums,
+//! and f32 feature rows cross the wire without losing a bit (this is what
+//! lets the distributed solve reproduce the single-process solution
+//! exactly). Non-finite values serialize as `null`: a semantic bucket-miss
+//! marker inside `query_partials`, a loud parse error everywhere else.
+//!
+//! Parsing here is *structural* (shapes and types, with the exact error
+//! strings the server has always replied with); *semantic* checks that
+//! need server state (feature-count mismatches, `max_batch`, sparse index
+//! range vs the model dimension) stay in the endpoint that owns the
+//! state.
+
+use crate::util::json::{escape, Json, JsonWriter};
+use std::fmt::Write as _;
+
+/// One parsed protocol request line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Predict one dense feature row.
+    Predict { features: Vec<f32>, model: Option<String> },
+    /// Predict a batch of dense rows (one reply line per row).
+    Batch { rows: Vec<Vec<f32>>, model: Option<String> },
+    /// Predict one sparse row given as `[index, value]` pairs.
+    Sparse { pairs: Vec<(usize, f64)>, model: Option<String> },
+    /// Server-wide serving statistics.
+    Stats,
+    /// Atomically hot-swap `model` (default: the registry's default slot)
+    /// from the checkpoint at `path`.
+    Reload { model: Option<String>, path: String },
+    /// Stop accepting connections and drain.
+    Shutdown,
+    /// Build this worker's instance range of the WLSH sketch.
+    ShardBuild(ShardBuild),
+    /// Raw per-block mat-vec partials for the coordinator's CG step.
+    ShardMatvec { beta: Vec<f64> },
+    /// Freeze serving loads from the solved β.
+    ShardLoadBeta { beta: Vec<f64> },
+    /// Raw per-instance prediction terms for a query batch.
+    ShardPredict { rows: Vec<Vec<f32>> },
+    /// Describe the worker's current shard state.
+    ShardInfo,
+}
+
+/// Everything a shard worker needs to build instances `[lo, hi)` of an
+/// m_total-instance WLSH sketch bit-identically to a single-process
+/// build: the raw (already standardized) training rows plus the exact
+/// sketch parameters. `chunk_rows`/`workers` shape memory and threading
+/// only — the result is bit-transparent to both.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardBuild {
+    pub n: usize,
+    pub d: usize,
+    /// Row-major n×d training matrix.
+    pub x: Vec<f32>,
+    pub m_total: usize,
+    pub lo: usize,
+    pub hi: usize,
+    /// Bucket spec string (`BucketSpec` grammar).
+    pub bucket: String,
+    pub gamma_shape: f64,
+    pub scale: f64,
+    pub seed: u64,
+    pub chunk_rows: usize,
+    pub workers: usize,
+}
+
+/// One parsed protocol response line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// One prediction.
+    Pred(f64),
+    /// Command acknowledged (`reload` echoes the swapped model name).
+    Ok { model: Option<String> },
+    /// Request-level failure (the connection stays open).
+    Error(String),
+    /// Server-wide serving statistics.
+    Stats(StatsReply),
+    /// Shard worker state (reply to build / load-beta / info).
+    ShardReady(ShardReady),
+    /// Raw per-FUSE_BLOCK mat-vec partial vectors, in local block order,
+    /// without the 1/m normalization (the coordinator owns the global
+    /// reduction order and applies 1/m_total once).
+    MatvecPartials(Vec<Vec<f64>>),
+    /// Per query row, the raw per-instance terms `w · B_{h(q)}` for this
+    /// worker's instances, in local instance order; `None` marks a bucket
+    /// miss (skipped, not added as 0.0, so coordinator-side accumulation
+    /// replays the single-process chain exactly).
+    PredictPartials(Vec<Vec<Option<f64>>>),
+}
+
+/// Shard worker state echoed after `shard-build`/`shard-load-beta`, and
+/// on demand via `shard-info`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardReady {
+    /// Training rows hashed (0 before a build).
+    pub n: usize,
+    /// Feature dimension (0 before a build).
+    pub d: usize,
+    /// Instances this worker owns.
+    pub m_local: usize,
+    /// FUSE_BLOCK-blocks this worker owns.
+    pub blocks: usize,
+    /// Whether serving loads are frozen (a β has been loaded).
+    pub loaded: bool,
+}
+
+/// Typed form of the server's `stats` reply.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StatsReply {
+    pub served: usize,
+    pub rejected: usize,
+    pub queue_depth: usize,
+    pub workers: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p90_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    /// Per-model counters, name-sorted.
+    pub models: Vec<(String, ModelStatsReply)>,
+}
+
+/// One model's slice of the `stats` reply.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelStatsReply {
+    pub served: usize,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+}
+
+// ---------------------------------------------------------------- helpers
+
+fn push_f64(buf: &mut String, v: f64) {
+    if v.is_finite() {
+        let _ = write!(buf, "{v}");
+    } else {
+        buf.push_str("null");
+    }
+}
+
+fn push_f64s(buf: &mut String, vs: &[f64]) {
+    buf.push('[');
+    for (i, v) in vs.iter().enumerate() {
+        if i > 0 {
+            buf.push(',');
+        }
+        push_f64(buf, *v);
+    }
+    buf.push(']');
+}
+
+fn push_f32s(buf: &mut String, vs: &[f32]) {
+    buf.push('[');
+    for (i, v) in vs.iter().enumerate() {
+        if i > 0 {
+            buf.push(',');
+        }
+        if v.is_finite() {
+            let _ = write!(buf, "{v}");
+        } else {
+            buf.push_str("null");
+        }
+    }
+    buf.push(']');
+}
+
+fn push_f32_rows(buf: &mut String, rows: &[Vec<f32>]) {
+    buf.push('[');
+    for (i, row) in rows.iter().enumerate() {
+        if i > 0 {
+            buf.push(',');
+        }
+        push_f32s(buf, row);
+    }
+    buf.push(']');
+}
+
+fn push_model(buf: &mut String, model: &Option<String>) {
+    if let Some(m) = model {
+        buf.push_str(",\"model\":");
+        buf.push_str(&escape(m));
+    }
+}
+
+/// f64 vec → f32 vec (the wire carries f32 features as their exact f64
+/// embedding, so this cast is lossless for values that started as f32).
+fn to_f32s(vs: Vec<f64>) -> Vec<f32> {
+    vs.into_iter().map(|v| v as f32).collect()
+}
+
+fn f32_rows_field(req: &Json, key: &str) -> Result<Vec<Vec<f32>>, String> {
+    let rows = req
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("{key:?} must be an array of feature rows"))?;
+    rows.iter()
+        .enumerate()
+        .map(|(i, row)| {
+            row.as_f64_vec()
+                .map(to_f32s)
+                .ok_or_else(|| format!("{key} row {i} must be an array of numbers"))
+        })
+        .collect()
+}
+
+fn f64_vec_field(req: &Json, key: &str) -> Result<Vec<f64>, String> {
+    req.get(key)
+        .and_then(Json::as_f64_vec)
+        .ok_or_else(|| format!("{key:?} must be an array of numbers"))
+}
+
+fn usize_field(req: &Json, key: &str) -> Result<usize, String> {
+    req.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| format!("{key:?} must be a non-negative integer"))
+}
+
+fn f64_field(req: &Json, key: &str) -> Result<f64, String> {
+    req.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("{key:?} must be a number"))
+}
+
+fn str_field(req: &Json, key: &str) -> Result<String, String> {
+    req.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| format!("{key:?} must be a string"))
+}
+
+fn sparse_pairs(j: &Json) -> Result<Vec<(usize, f64)>, String> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| "\"sparse\" must be an array of [index, value] pairs".to_string())?;
+    let mut pairs = Vec::with_capacity(arr.len());
+    for (i, pair) in arr.iter().enumerate() {
+        let pv = pair
+            .as_arr()
+            .filter(|p| p.len() == 2)
+            .ok_or_else(|| format!("sparse entry {i} must be an [index, value] pair"))?;
+        let idx = pv[0]
+            .as_usize()
+            .ok_or_else(|| format!("sparse entry {i}: index must be a non-negative integer"))?;
+        let val = pv[1]
+            .as_f64()
+            .ok_or_else(|| format!("sparse entry {i}: value must be a number"))?;
+        pairs.push((idx, val));
+    }
+    Ok(pairs)
+}
+
+// ---------------------------------------------------------------- Request
+
+impl Request {
+    /// Parse one request line. The error string is ready to send back as
+    /// a [`Response::Error`] (these are the exact messages the server has
+    /// always used).
+    pub fn parse(line: &str) -> Result<Request, String> {
+        let req = Json::parse(line)?;
+        let model = req.get("model").and_then(Json::as_str).map(str::to_string);
+        if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
+            return match cmd {
+                "stats" => Ok(Request::Stats),
+                "shutdown" => Ok(Request::Shutdown),
+                "reload" => {
+                    let path = req
+                        .get("path")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| "reload needs \"path\"".to_string())?;
+                    Ok(Request::Reload { model, path: path.to_string() })
+                }
+                "shard-build" => Ok(Request::ShardBuild(ShardBuild {
+                    n: usize_field(&req, "n")?,
+                    d: usize_field(&req, "d")?,
+                    x: to_f32s(f64_vec_field(&req, "x")?),
+                    m_total: usize_field(&req, "m_total")?,
+                    lo: usize_field(&req, "lo")?,
+                    hi: usize_field(&req, "hi")?,
+                    bucket: str_field(&req, "bucket")?,
+                    gamma_shape: f64_field(&req, "gamma_shape")?,
+                    scale: f64_field(&req, "scale")?,
+                    seed: usize_field(&req, "seed")? as u64,
+                    chunk_rows: usize_field(&req, "chunk_rows")?,
+                    workers: usize_field(&req, "workers")?,
+                })),
+                "shard-matvec" => {
+                    Ok(Request::ShardMatvec { beta: f64_vec_field(&req, "beta")? })
+                }
+                "shard-load-beta" => {
+                    Ok(Request::ShardLoadBeta { beta: f64_vec_field(&req, "beta")? })
+                }
+                "shard-predict" => {
+                    Ok(Request::ShardPredict { rows: f32_rows_field(&req, "rows")? })
+                }
+                "shard-info" => Ok(Request::ShardInfo),
+                other => Err(format!("unknown cmd {other:?}")),
+            };
+        }
+        if let Some(sp) = req.get("sparse") {
+            return Ok(Request::Sparse { pairs: sparse_pairs(sp)?, model });
+        }
+        if let Some(f) = req.get("features") {
+            let features = f
+                .as_f64_vec()
+                .map(to_f32s)
+                .ok_or_else(|| "\"features\" must be an array of numbers".to_string())?;
+            return Ok(Request::Predict { features, model });
+        }
+        if req.get("batch").is_some() {
+            let rows = f32_rows_field(&req, "batch")?;
+            if rows.is_empty() {
+                return Err("\"batch\" must contain at least one row".to_string());
+            }
+            return Ok(Request::Batch { rows, model });
+        }
+        Err("need \"features\", \"batch\", or \"cmd\"".to_string())
+    }
+
+    /// Serialize to one wire line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        match self {
+            Request::Predict { features, model } => {
+                let mut s = String::from("{\"features\":");
+                push_f32s(&mut s, features);
+                push_model(&mut s, model);
+                s.push('}');
+                s
+            }
+            Request::Batch { rows, model } => {
+                let mut s = String::from("{\"batch\":");
+                push_f32_rows(&mut s, rows);
+                push_model(&mut s, model);
+                s.push('}');
+                s
+            }
+            Request::Sparse { pairs, model } => {
+                let mut s = String::from("{\"sparse\":[");
+                for (i, (idx, val)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        s.push(',');
+                    }
+                    let _ = write!(s, "[{idx},");
+                    push_f64(&mut s, *val);
+                    s.push(']');
+                }
+                s.push(']');
+                push_model(&mut s, model);
+                s.push('}');
+                s
+            }
+            Request::Stats => "{\"cmd\":\"stats\"}".to_string(),
+            Request::Shutdown => "{\"cmd\":\"shutdown\"}".to_string(),
+            Request::Reload { model, path } => {
+                let mut s = String::from("{\"cmd\":\"reload\"");
+                push_model(&mut s, model);
+                s.push_str(",\"path\":");
+                s.push_str(&escape(path));
+                s.push('}');
+                s
+            }
+            Request::ShardBuild(b) => {
+                let mut s = String::with_capacity(b.x.len() * 8 + 256);
+                let _ = write!(
+                    s,
+                    "{{\"cmd\":\"shard-build\",\"n\":{},\"d\":{},\"m_total\":{},\"lo\":{},\
+                     \"hi\":{},\"bucket\":{},\"gamma_shape\":",
+                    b.n,
+                    b.d,
+                    b.m_total,
+                    b.lo,
+                    b.hi,
+                    escape(&b.bucket)
+                );
+                push_f64(&mut s, b.gamma_shape);
+                s.push_str(",\"scale\":");
+                push_f64(&mut s, b.scale);
+                let _ = write!(
+                    s,
+                    ",\"seed\":{},\"chunk_rows\":{},\"workers\":{},\"x\":",
+                    b.seed, b.chunk_rows, b.workers
+                );
+                push_f32s(&mut s, &b.x);
+                s.push('}');
+                s
+            }
+            Request::ShardMatvec { beta } => {
+                let mut s = String::with_capacity(beta.len() * 10 + 32);
+                s.push_str("{\"cmd\":\"shard-matvec\",\"beta\":");
+                push_f64s(&mut s, beta);
+                s.push('}');
+                s
+            }
+            Request::ShardLoadBeta { beta } => {
+                let mut s = String::with_capacity(beta.len() * 10 + 32);
+                s.push_str("{\"cmd\":\"shard-load-beta\",\"beta\":");
+                push_f64s(&mut s, beta);
+                s.push('}');
+                s
+            }
+            Request::ShardPredict { rows } => {
+                let mut s = String::from("{\"cmd\":\"shard-predict\",\"rows\":");
+                push_f32_rows(&mut s, rows);
+                s.push('}');
+                s
+            }
+            Request::ShardInfo => "{\"cmd\":\"shard-info\"}".to_string(),
+        }
+    }
+}
+
+// --------------------------------------------------------------- Response
+
+impl Response {
+    /// Parse one reply line. `Err` means the line was not even a
+    /// recognizable reply (a protocol-level failure, distinct from a
+    /// well-formed [`Response::Error`]).
+    pub fn parse(line: &str) -> Result<Response, String> {
+        let j = Json::parse(line)?;
+        if let Some(msg) = j.get("error").and_then(Json::as_str) {
+            return Ok(Response::Error(msg.to_string()));
+        }
+        if let Some(p) = j.get("pred") {
+            return p
+                .as_f64()
+                .map(Response::Pred)
+                .ok_or_else(|| "\"pred\" must be a number".to_string());
+        }
+        if let Some(sh) = j.get("shard") {
+            return Ok(Response::ShardReady(ShardReady {
+                n: usize_field(sh, "n")?,
+                d: usize_field(sh, "d")?,
+                m_local: usize_field(sh, "m_local")?,
+                blocks: usize_field(sh, "blocks")?,
+                loaded: matches!(sh.get("loaded"), Some(Json::Bool(true))),
+            }));
+        }
+        if let Some(bp) = j.get("block_partials").and_then(Json::as_arr) {
+            let partials = bp
+                .iter()
+                .enumerate()
+                .map(|(i, p)| {
+                    p.as_f64_vec()
+                        .ok_or_else(|| format!("block partial {i} must be an array of numbers"))
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            return Ok(Response::MatvecPartials(partials));
+        }
+        if let Some(qp) = j.get("query_partials").and_then(Json::as_arr) {
+            let partials = qp
+                .iter()
+                .enumerate()
+                .map(|(i, row)| {
+                    let terms = row.as_arr().ok_or_else(|| {
+                        format!("query partial {i} must be an array of numbers/nulls")
+                    })?;
+                    terms
+                        .iter()
+                        .map(|t| match t {
+                            Json::Null => Ok(None),
+                            Json::Num(v) => Ok(Some(*v)),
+                            _ => Err(format!(
+                                "query partial {i} must be an array of numbers/nulls"
+                            )),
+                        })
+                        .collect::<Result<Vec<_>, _>>()
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            return Ok(Response::PredictPartials(partials));
+        }
+        if j.get("served").is_some() && j.get("workers").is_some() {
+            return Ok(Response::Stats(stats_reply(&j)?));
+        }
+        if let Some(ok) = j.get("ok") {
+            // historic wire form is the *string* "true"; accept a real
+            // bool too
+            if ok.as_str() == Some("true") || *ok == Json::Bool(true) {
+                let model = j.get("model").and_then(Json::as_str).map(str::to_string);
+                return Ok(Response::Ok { model });
+            }
+            return Err(format!("unrecognized \"ok\" value in reply: {line}"));
+        }
+        Err(format!("unrecognized reply: {line}"))
+    }
+
+    /// Serialize to one wire line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        match self {
+            Response::Pred(p) => JsonWriter::object().field_f64("pred", *p).finish(),
+            Response::Ok { model } => {
+                let w = JsonWriter::object().field_str("ok", "true");
+                match model {
+                    Some(m) => w.field_str("model", m).finish(),
+                    None => w.finish(),
+                }
+            }
+            Response::Error(msg) => JsonWriter::object().field_str("error", msg).finish(),
+            Response::Stats(s) => {
+                let mut models = String::from("{");
+                for (i, (name, m)) in s.models.iter().enumerate() {
+                    if i > 0 {
+                        models.push(',');
+                    }
+                    models.push_str(&escape(name));
+                    models.push(':');
+                    models.push_str(
+                        &JsonWriter::object()
+                            .field_usize("served", m.served)
+                            .field_f64("p50_us", m.p50_us)
+                            .field_f64("p95_us", m.p95_us)
+                            .field_f64("p99_us", m.p99_us)
+                            .finish(),
+                    );
+                }
+                models.push('}');
+                JsonWriter::object()
+                    .field_usize("served", s.served)
+                    .field_usize("rejected", s.rejected)
+                    .field_usize("queue_depth", s.queue_depth)
+                    .field_usize("workers", s.workers)
+                    .field_f64("mean_us", s.mean_us)
+                    .field_f64("p50_us", s.p50_us)
+                    .field_f64("p90_us", s.p90_us)
+                    .field_f64("p95_us", s.p95_us)
+                    .field_f64("p99_us", s.p99_us)
+                    .field_raw("models", &models)
+                    .finish()
+            }
+            Response::ShardReady(sh) => {
+                let body = JsonWriter::object()
+                    .field_usize("n", sh.n)
+                    .field_usize("d", sh.d)
+                    .field_usize("m_local", sh.m_local)
+                    .field_usize("blocks", sh.blocks)
+                    .field_raw("loaded", if sh.loaded { "true" } else { "false" })
+                    .finish();
+                JsonWriter::object().field_raw("shard", &body).finish()
+            }
+            Response::MatvecPartials(partials) => {
+                let mut s =
+                    String::with_capacity(partials.iter().map(|p| p.len() * 10).sum::<usize>() + 32);
+                s.push_str("{\"block_partials\":[");
+                for (i, p) in partials.iter().enumerate() {
+                    if i > 0 {
+                        s.push(',');
+                    }
+                    push_f64s(&mut s, p);
+                }
+                s.push_str("]}");
+                s
+            }
+            Response::PredictPartials(partials) => {
+                let mut s = String::from("{\"query_partials\":[");
+                for (i, row) in partials.iter().enumerate() {
+                    if i > 0 {
+                        s.push(',');
+                    }
+                    s.push('[');
+                    for (k, t) in row.iter().enumerate() {
+                        if k > 0 {
+                            s.push(',');
+                        }
+                        match t {
+                            Some(v) => push_f64(&mut s, *v),
+                            None => s.push_str("null"),
+                        }
+                    }
+                    s.push(']');
+                }
+                s.push_str("]}");
+                s
+            }
+        }
+    }
+}
+
+fn stats_reply(j: &Json) -> Result<StatsReply, String> {
+    let f = |k: &str| {
+        j.get(k)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("stats reply missing {k:?}"))
+    };
+    let u = |k: &str| {
+        j.get(k)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| format!("stats reply missing {k:?}"))
+    };
+    let mut models = Vec::new();
+    if let Some(Json::Obj(map)) = j.get("models") {
+        for (name, m) in map {
+            let mf = |k: &str| {
+                m.get(k)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("stats model {name:?} missing {k:?}"))
+            };
+            models.push((
+                name.clone(),
+                ModelStatsReply {
+                    served: m
+                        .get("served")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| format!("stats model {name:?} missing \"served\""))?,
+                    p50_us: mf("p50_us")?,
+                    p95_us: mf("p95_us")?,
+                    p99_us: mf("p99_us")?,
+                },
+            ));
+        }
+    }
+    Ok(StatsReply {
+        served: u("served")?,
+        rejected: u("rejected")?,
+        queue_depth: u("queue_depth")?,
+        workers: u("workers")?,
+        mean_us: f("mean_us")?,
+        p50_us: f("p50_us")?,
+        p90_us: f("p90_us")?,
+        p95_us: f("p95_us")?,
+        p99_us: f("p99_us")?,
+        models,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+    use crate::util::rng::Pcg64;
+
+    fn roundtrip_req(req: &Request) -> Result<(), String> {
+        let line = req.to_line();
+        let back = Request::parse(&line).map_err(|e| format!("{line}: {e}"))?;
+        if back != *req {
+            return Err(format!("{req:?} → {line} → {back:?}"));
+        }
+        Ok(())
+    }
+
+    fn roundtrip_resp(resp: &Response) -> Result<(), String> {
+        let line = resp.to_line();
+        let back = Response::parse(&line).map_err(|e| format!("{line}: {e}"))?;
+        if back != *resp {
+            return Err(format!("{resp:?} → {line} → {back:?}"));
+        }
+        Ok(())
+    }
+
+    fn wild_f64(r: &mut Pcg64) -> f64 {
+        // spread across magnitudes, including subnormal-ish extremes
+        let mag = r.uniform_in(-300.0, 300.0);
+        (r.normal()) * 10f64.powf(mag)
+    }
+
+    fn wild_f32(r: &mut Pcg64) -> f32 {
+        let mag = r.uniform_in(-37.0, 37.0);
+        ((r.normal()) * 10f64.powf(mag)) as f32
+    }
+
+    fn name(r: &mut Pcg64) -> String {
+        // exercise escaping: quotes, backslashes, controls, unicode
+        let alphabet = ['a', 'Z', '9', '"', '\\', '\n', '\t', 'é', '-', '_'];
+        (0..r.below(8) + 1)
+            .map(|_| alphabet[r.below(alphabet.len() as u64) as usize])
+            .collect()
+    }
+
+    #[test]
+    fn prop_requests_roundtrip_bit_exactly() {
+        prop_check(
+            101,
+            60,
+            |r| {
+                let variant = r.below(9);
+                let model = if r.below(2) == 0 { None } else { Some(name(r)) };
+                match variant {
+                    0 => Request::Predict {
+                        features: (0..r.below(6) + 1).map(|_| wild_f32(r)).collect(),
+                        model,
+                    },
+                    1 => Request::Batch {
+                        rows: (0..r.below(4) + 1)
+                            .map(|_| (0..3).map(|_| wild_f32(r)).collect())
+                            .collect(),
+                        model,
+                    },
+                    2 => Request::Sparse {
+                        pairs: (0..r.below(5))
+                            .map(|_| (r.below(1000) as usize, wild_f64(r)))
+                            .collect(),
+                        model,
+                    },
+                    3 => Request::Stats,
+                    4 => Request::Reload { model, path: name(r) },
+                    5 => Request::Shutdown,
+                    6 => Request::ShardBuild(ShardBuild {
+                        n: r.below(50) as usize,
+                        d: r.below(8) as usize + 1,
+                        x: (0..r.below(20)).map(|_| wild_f32(r)).collect(),
+                        m_total: r.below(64) as usize + 1,
+                        lo: r.below(8) as usize,
+                        hi: r.below(64) as usize,
+                        bucket: "smooth2".to_string(),
+                        gamma_shape: wild_f64(r).abs(),
+                        scale: wild_f64(r).abs(),
+                        seed: r.below(1 << 40),
+                        chunk_rows: r.below(100) as usize + 1,
+                        workers: r.below(8) as usize + 1,
+                    }),
+                    7 => Request::ShardMatvec {
+                        beta: (0..r.below(10) + 1).map(|_| wild_f64(r)).collect(),
+                    },
+                    _ => Request::ShardPredict {
+                        rows: (0..r.below(4) + 1)
+                            .map(|_| (0..2).map(|_| wild_f32(r)).collect())
+                            .collect(),
+                    },
+                }
+            },
+            roundtrip_req,
+        );
+    }
+
+    #[test]
+    fn prop_responses_roundtrip_bit_exactly() {
+        prop_check(
+            202,
+            60,
+            |r| match r.below(6) {
+                0 => Response::Pred(wild_f64(r)),
+                1 => Response::Ok {
+                    model: if r.below(2) == 0 { None } else { Some(name(r)) },
+                },
+                2 => Response::Error(name(r)),
+                3 => Response::ShardReady(ShardReady {
+                    n: r.below(1000) as usize,
+                    d: r.below(50) as usize,
+                    m_local: r.below(64) as usize,
+                    blocks: r.below(8) as usize,
+                    loaded: r.below(2) == 1,
+                }),
+                4 => Response::MatvecPartials(
+                    (0..r.below(4) + 1)
+                        .map(|_| (0..r.below(6) + 1).map(|_| wild_f64(r)).collect())
+                        .collect(),
+                ),
+                _ => Response::PredictPartials(
+                    (0..r.below(4) + 1)
+                        .map(|_| {
+                            (0..r.below(6) + 1)
+                                .map(|_| {
+                                    if r.below(3) == 0 { None } else { Some(wild_f64(r)) }
+                                })
+                                .collect()
+                        })
+                        .collect(),
+                ),
+            },
+            roundtrip_resp,
+        );
+    }
+
+    #[test]
+    fn stats_roundtrips_and_matches_legacy_shape() {
+        let s = StatsReply {
+            served: 12,
+            rejected: 1,
+            queue_depth: 1024,
+            workers: 2,
+            mean_us: 12.5,
+            p50_us: 10.0,
+            p90_us: 20.0,
+            p95_us: 30.5,
+            p99_us: 99.25,
+            models: vec![
+                (
+                    "default".to_string(),
+                    ModelStatsReply { served: 12, p50_us: 10.0, p95_us: 30.5, p99_us: 99.25 },
+                ),
+                (
+                    "other".to_string(),
+                    ModelStatsReply { served: 0, p50_us: 0.0, p95_us: 0.0, p99_us: 0.0 },
+                ),
+            ],
+        };
+        let resp = Response::Stats(s);
+        roundtrip_resp(&resp).unwrap();
+        // legacy clients pluck these fields from the flat object
+        let line = resp.to_line();
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("served").and_then(Json::as_usize), Some(12));
+        assert_eq!(j.get("p95_us").and_then(Json::as_f64), Some(30.5));
+        let per_model = j
+            .get("models")
+            .and_then(|m| m.get("default"))
+            .and_then(|m| m.get("served"))
+            .and_then(Json::as_usize);
+        assert_eq!(per_model, Some(12));
+    }
+
+    #[test]
+    fn legacy_request_lines_still_parse() {
+        // hand-written pre-proto client lines (whitespace, string "ok"
+        // replies, optional model routing) must keep working verbatim
+        let r = Request::parse("{\"features\": [1.0, -2.5, 3e-2]}").unwrap();
+        assert_eq!(
+            r,
+            Request::Predict { features: vec![1.0, -2.5, 3e-2], model: None }
+        );
+        let r = Request::parse("{\"batch\": [[1, 2], [3, 4]], \"model\": \"m\"}").unwrap();
+        assert!(matches!(r, Request::Batch { ref rows, ref model }
+            if rows.len() == 2 && model.as_deref() == Some("m")));
+        let r = Request::parse("{\"sparse\": [[0, 1.5], [7, -2.0]]}").unwrap();
+        assert_eq!(
+            r,
+            Request::Sparse { pairs: vec![(0, 1.5), (7, -2.0)], model: None }
+        );
+        assert_eq!(Request::parse("{\"cmd\": \"stats\"}").unwrap(), Request::Stats);
+        assert_eq!(Request::parse("{\"cmd\": \"shutdown\"}").unwrap(), Request::Shutdown);
+        let r = Request::parse("{\"cmd\": \"reload\", \"model\": \"m\", \"path\": \"c\"}")
+            .unwrap();
+        assert_eq!(
+            r,
+            Request::Reload { model: Some("m".to_string()), path: "c".to_string() }
+        );
+        let ok = Response::parse("{\"ok\":\"true\",\"model\":\"m\"}").unwrap();
+        assert_eq!(ok, Response::Ok { model: Some("m".to_string()) });
+    }
+
+    #[test]
+    fn malformed_requests_keep_the_historic_error_strings() {
+        let err = |line: &str| Request::parse(line).unwrap_err();
+        assert_eq!(err("{}"), "need \"features\", \"batch\", or \"cmd\"");
+        assert_eq!(
+            err("{\"features\": \"x\"}"),
+            "\"features\" must be an array of numbers"
+        );
+        assert_eq!(
+            err("{\"batch\": []}"),
+            "\"batch\" must contain at least one row"
+        );
+        assert_eq!(
+            err("{\"batch\": [17]}"),
+            "batch row 0 must be an array of numbers"
+        );
+        assert_eq!(err("{\"cmd\": \"nope\"}"), "unknown cmd \"nope\"");
+        assert_eq!(err("{\"cmd\": \"reload\"}"), "reload needs \"path\"");
+        assert_eq!(
+            err("{\"sparse\": [[-1, 2.0]]}"),
+            "sparse entry 0: index must be a non-negative integer"
+        );
+        assert_eq!(
+            err("{\"sparse\": [[0.5, 2.0]]}"),
+            "sparse entry 0: index must be a non-negative integer"
+        );
+        assert_eq!(
+            err("{\"sparse\": [\"x\"]}"),
+            "sparse entry 0 must be an [index, value] pair"
+        );
+        assert_eq!(
+            err("{\"sparse\": [[0, \"x\"]]}"),
+            "sparse entry 0: value must be a number"
+        );
+        assert!(Request::parse("not json").is_err());
+    }
+
+    #[test]
+    fn extreme_f64_values_cross_the_wire_bit_exactly() {
+        for v in [
+            f64::MIN_POSITIVE,
+            f64::MAX,
+            -f64::MAX,
+            5e-324, // smallest subnormal
+            1.0 + f64::EPSILON,
+            -0.0,
+            std::f64::consts::PI,
+        ] {
+            let line = Request::ShardMatvec { beta: vec![v] }.to_line();
+            match Request::parse(&line).unwrap() {
+                Request::ShardMatvec { beta } => {
+                    assert_eq!(beta[0].to_bits(), v.to_bits(), "{v:e} via {line}")
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+}

@@ -11,6 +11,13 @@
 //!   → {"cmd": "reload", "model": "m", "path": "ckpt"}  ← {"ok": true}  (atomic hot swap)
 //!   → {"cmd": "shutdown"}                     ← {"ok": true}  (signal-driven, idempotent)
 //!
+//! Lines parse through the typed wire module
+//! ([`proto`](crate::coordinator::proto)): structural validation and the
+//! historic error strings live there, shared with the shard-worker loop
+//! and the example/test clients; the semantic checks that need server
+//! state (feature arity vs the model, `max_batch`, sparse index range)
+//! stay here.
+//!
 //! Every connection gets a reader thread; requests from all connections
 //! flow through one bounded queue into the [`WorkerPool`]'s batcher
 //! threads, so the serving tier scales with cores the way the training
@@ -18,7 +25,11 @@
 //! instead of queueing unboundedly. Shutdown is signal-driven: the accept
 //! loop polls a stop flag (no self-connect poke), connection threads
 //! finish the requests they already read, and the pool drains its queue
-//! before its workers exit — no accepted request loses its reply.
+//! before its workers exit — no accepted request loses its reply. Idle
+//! waits (accept retries and quiet-connection reads) back off from
+//! [`IDLE_MIN`] to [`IDLE_MAX`] and snap back on activity, so an idle
+//! server wakes a few times a second instead of forty — while shutdown
+//! latency stays bounded by `IDLE_MAX` + the drain.
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -26,12 +37,18 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use super::proto::{Request, Response};
 use super::{BatchPredict, ModelRegistry, SubmitError, WorkerPool};
 use crate::metrics::{Counter, LatencyHistogram};
-use crate::util::json::{Json, JsonWriter};
+use crate::util::json::JsonWriter;
 
-/// How often blocked reads/accepts re-check the stop flag.
-const POLL: Duration = Duration::from_millis(25);
+/// Shortest idle wait (right after activity): blocked reads/accepts
+/// re-check for work and the stop flag this often at first...
+const IDLE_MIN: Duration = Duration::from_millis(1);
+/// ...then double per empty wait up to this cap. Must stay comfortably
+/// below [`SHUTDOWN_GRACE`] so every thread notices a stop signal well
+/// within the drain budget.
+const IDLE_MAX: Duration = Duration::from_millis(250);
 
 /// Server knobs.
 #[derive(Clone, Debug)]
@@ -100,9 +117,11 @@ pub fn serve(
     let stop = Arc::new(AtomicBool::new(false));
     let pool = WorkerPool::spawn(cfg.workers, cfg.queue_depth, cfg.max_batch, cfg.linger);
     let mut conn_threads: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let mut idle = IDLE_MIN;
     while !stop.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _peer)) => {
+                idle = IDLE_MIN;
                 // reap connections that already hung up, so a long-lived
                 // server doesn't accumulate one JoinHandle per past client
                 conn_threads.retain(|t| !t.is_finished());
@@ -114,10 +133,13 @@ pub fn serve(
                     let _ = handle_conn(stream, &registry, &pool, &stats, &stop2);
                 }));
             }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => std::thread::sleep(POLL),
-            // persistent accept errors (e.g. fd exhaustion) must not
-            // busy-spin the accept loop at 100% CPU
-            Err(_) => std::thread::sleep(POLL),
+            // empty accept queue (and persistent accept errors, e.g. fd
+            // exhaustion — those must not busy-spin at 100% CPU either):
+            // back off while idle, snap back on the next connection
+            Err(_) => {
+                std::thread::sleep(idle);
+                idle = (idle * 2).min(IDLE_MAX);
+            }
         }
     }
     // deterministic drain: connection threads finish the requests they
@@ -141,11 +163,14 @@ const SHUTDOWN_GRACE: Duration = Duration::from_secs(1);
 const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// Read lines off one connection until EOF or server stop. Reads use a
-/// short timeout so a quiet connection notices shutdown; bytes already
-/// received keep being served through a bounded grace window, so requests
-/// pipelined before a shutdown lose no replies — but shutdown still
-/// completes within `SHUTDOWN_GRACE` even against a client that never
-/// stops sending.
+/// timeout so a quiet connection notices shutdown; the timeout starts at
+/// [`IDLE_MIN`] and doubles per empty read up to [`IDLE_MAX`], snapping
+/// back whenever bytes arrive — a long-lived idle connection costs a few
+/// wakeups a second, not forty, while shutdown is still noticed within
+/// `IDLE_MAX`. Bytes already received keep being served through a bounded
+/// grace window, so requests pipelined before a shutdown lose no replies
+/// — but shutdown still completes within `SHUTDOWN_GRACE` even against a
+/// client that never stops sending.
 fn handle_conn(
     mut stream: TcpStream,
     registry: &ModelRegistry,
@@ -154,7 +179,8 @@ fn handle_conn(
     stop: &AtomicBool,
 ) -> std::io::Result<()> {
     stream.set_nodelay(true).ok();
-    stream.set_read_timeout(Some(POLL))?;
+    let mut idle = IDLE_MIN;
+    stream.set_read_timeout(Some(idle))?;
     // a client that stops reading must not park this thread in write_all
     // forever (that would outlive the shutdown grace window and hang
     // serve()'s join) — time the write out and drop the connection
@@ -190,7 +216,13 @@ fn handle_conn(
                 }
                 return Ok(());
             }
-            Ok(n) => acc.extend_from_slice(&tmp[..n]),
+            Ok(n) => {
+                acc.extend_from_slice(&tmp[..n]);
+                if idle > IDLE_MIN {
+                    idle = IDLE_MIN;
+                    stream.set_read_timeout(Some(idle))?;
+                }
+            }
             Err(e)
                 if matches!(
                     e.kind(),
@@ -201,6 +233,10 @@ fn handle_conn(
                 // drained — no need to sit out the rest of the grace window
                 if stop.load(Ordering::SeqCst) {
                     return Ok(());
+                }
+                if idle < IDLE_MAX {
+                    idle = (idle * 2).min(IDLE_MAX);
+                    stream.set_read_timeout(Some(idle))?;
                 }
             }
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
@@ -213,7 +249,8 @@ fn err_json(msg: &str) -> String {
     JsonWriter::object().field_str("error", msg).finish()
 }
 
-/// Parse and answer one request line (always exactly ≥1 reply line).
+/// Parse (via the typed wire module) and answer one request line (always
+/// exactly ≥1 reply line).
 fn handle_line(
     line: &str,
     registry: &ModelRegistry,
@@ -222,44 +259,54 @@ fn handle_line(
     stop: &AtomicBool,
     writer: &mut TcpStream,
 ) -> std::io::Result<()> {
-    let req = match Json::parse(line) {
+    let req = match Request::parse(line) {
         Ok(r) => r,
         Err(e) => {
             writeln!(writer, "{}", err_json(&e))?;
             return Ok(());
         }
     };
-    if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
-        let reply = match cmd {
-            "stats" => stats_json(registry, pool, stats),
-            "shutdown" => {
-                // idempotent: flipping an already-set flag is harmless
-                stop.store(true, Ordering::SeqCst);
-                JsonWriter::object().field_str("ok", "true").finish()
-            }
-            "reload" => {
-                let name = req
-                    .get("model")
-                    .and_then(Json::as_str)
-                    .unwrap_or(super::DEFAULT_MODEL);
-                match req.get("path").and_then(Json::as_str) {
-                    None => err_json("reload needs \"path\""),
-                    Some(path) => match registry.reload(name, path) {
-                        Ok(()) => JsonWriter::object()
-                            .field_str("ok", "true")
-                            .field_str("model", name)
-                            .finish(),
-                        Err(e) => err_json(&e.to_string()),
-                    },
-                }
-            }
-            other => err_json(&format!("unknown cmd {other:?}")),
-        };
-        writeln!(writer, "{reply}")?;
-        return Ok(());
+    match &req {
+        Request::Stats => {
+            writeln!(writer, "{}", stats_json(registry, pool, stats))?;
+            return Ok(());
+        }
+        Request::Shutdown => {
+            // idempotent: flipping an already-set flag is harmless
+            stop.store(true, Ordering::SeqCst);
+            writeln!(writer, "{}", Response::Ok { model: None }.to_line())?;
+            return Ok(());
+        }
+        Request::Reload { model, path } => {
+            let name = model.as_deref().unwrap_or(super::DEFAULT_MODEL);
+            let reply = match registry.reload(name, path) {
+                Ok(()) => Response::Ok { model: Some(name.to_string()) }.to_line(),
+                Err(e) => err_json(&e.to_string()),
+            };
+            writeln!(writer, "{reply}")?;
+            return Ok(());
+        }
+        Request::ShardBuild(_)
+        | Request::ShardMatvec { .. }
+        | Request::ShardLoadBeta { .. }
+        | Request::ShardPredict { .. }
+        | Request::ShardInfo => {
+            writeln!(
+                writer,
+                "{}",
+                err_json("shard-* ops go to `wlsh-krr shard-worker` processes, not the serving endpoint")
+            )?;
+            return Ok(());
+        }
+        Request::Predict { .. } | Request::Batch { .. } | Request::Sparse { .. } => {}
     }
     // prediction path: resolve the model first (its dim validates arity)
-    let model_name = req.get("model").and_then(Json::as_str);
+    let model_name = match &req {
+        Request::Predict { model, .. }
+        | Request::Batch { model, .. }
+        | Request::Sparse { model, .. } => model.as_deref(),
+        _ => unreachable!("non-prediction requests replied above"),
+    };
     let (_name, model, mstats) = match registry.resolve(model_name) {
         Some(v) => v,
         None => {
@@ -275,8 +322,8 @@ fn handle_line(
     let d = model.dim();
     let handle: Arc<dyn BatchPredict> = model;
     let t = Instant::now();
-    let (outcome, nrows) = if let Some(sp) = req.get("sparse") {
-        match gather_sparse(sp, d) {
+    let (outcome, nrows) = match req {
+        Request::Sparse { pairs, .. } => match sparse_csr(&pairs, d) {
             Ok((indptr, indices, values)) => {
                 (pool.predict_sparse(handle, d, indptr, indices, values), 1)
             }
@@ -284,15 +331,26 @@ fn handle_line(
                 writeln!(writer, "{}", err_json(&msg))?;
                 return Ok(());
             }
+        },
+        Request::Predict { features, .. } => {
+            if features.len() != d {
+                writeln!(
+                    writer,
+                    "{}",
+                    err_json(&format!("expected {d} features, got {}", features.len()))
+                )?;
+                return Ok(());
+            }
+            (pool.predict(handle, features, 1), 1)
         }
-    } else {
-        match gather_rows(&req, d, pool.max_batch()) {
-            Ok((rows, nrows)) => (pool.predict(handle, rows, nrows), nrows),
+        Request::Batch { rows, .. } => match flatten_batch(rows, d, pool.max_batch()) {
+            Ok((flat, nrows)) => (pool.predict(handle, flat, nrows), nrows),
             Err(msg) => {
                 writeln!(writer, "{}", err_json(&msg))?;
                 return Ok(());
             }
-        }
+        },
+        _ => unreachable!("non-prediction requests replied above"),
     };
     match outcome {
         Ok(preds) => {
@@ -319,72 +377,47 @@ fn handle_line(
     Ok(())
 }
 
-/// Extract the request's feature rows: `"features"` (one row) or
-/// `"batch"` (up to `max_rows` of them — the pool's batch bound caps one
-/// request's share of a worker). Arity is checked per row against `d`; a
+/// Flatten a typed batch (shape already validated by the wire parser)
+/// into the pool's row-major buffer, applying the server-side semantic
+/// checks: per-row arity against the model's `d`, and the `max_rows` cap
+/// (the pool's batch bound caps one request's share of a worker). A
 /// malformed request gets one error reply for the whole request.
-fn gather_rows(req: &Json, d: usize, max_rows: usize) -> Result<(Vec<f32>, usize), String> {
-    if let Some(f) = req.get("features") {
-        let f = f
-            .as_f64_vec()
-            .ok_or_else(|| "\"features\" must be an array of numbers".to_string())?;
-        if f.len() != d {
-            return Err(format!("expected {d} features, got {}", f.len()));
-        }
-        return Ok((f.iter().map(|&v| v as f32).collect(), 1));
+fn flatten_batch(
+    rows: Vec<Vec<f32>>,
+    d: usize,
+    max_rows: usize,
+) -> Result<(Vec<f32>, usize), String> {
+    if rows.len() > max_rows {
+        return Err(format!(
+            "batch of {} rows exceeds the server's max_batch of {max_rows}; split it",
+            rows.len()
+        ));
     }
-    if let Some(batch) = req.get("batch") {
-        let batch = batch
-            .as_arr()
-            .ok_or_else(|| "\"batch\" must be an array of feature rows".to_string())?;
-        if batch.is_empty() {
-            return Err("\"batch\" must contain at least one row".to_string());
+    let nrows = rows.len();
+    let mut flat = Vec::with_capacity(nrows * d);
+    for (i, row) in rows.iter().enumerate() {
+        if row.len() != d {
+            return Err(format!("batch row {i}: expected {d} features, got {}", row.len()));
         }
-        if batch.len() > max_rows {
-            return Err(format!(
-                "batch of {} rows exceeds the server's max_batch of {max_rows}; split it",
-                batch.len()
-            ));
-        }
-        let mut rows = Vec::with_capacity(batch.len() * d);
-        for (i, row) in batch.iter().enumerate() {
-            let row = row
-                .as_f64_vec()
-                .ok_or_else(|| format!("batch row {i} must be an array of numbers"))?;
-            if row.len() != d {
-                return Err(format!("batch row {i}: expected {d} features, got {}", row.len()));
-            }
-            rows.extend(row.iter().map(|&v| v as f32));
-        }
-        return Ok((rows, batch.len()));
+        flat.extend_from_slice(row);
     }
-    Err("need \"features\", \"batch\", or \"cmd\"".to_string())
+    Ok((flat, nrows))
 }
 
-/// Extract one CSR query row from a `"sparse"` value: an array of
-/// `[index, value]` pairs. Indices must be non-negative integers below
-/// `d` ([`Json::as_usize`] rejects negative, fractional, and non-finite
-/// numbers); pairs are sorted and deduplicated (last value wins) to the
-/// loader's CSR invariant. An empty array is a valid all-zeros row.
-fn gather_sparse(sp: &Json, d: usize) -> Result<(Vec<usize>, Vec<u32>, Vec<f32>), String> {
-    let pairs = sp
-        .as_arr()
-        .ok_or_else(|| "\"sparse\" must be an array of [index, value] pairs".to_string())?;
+/// Turn typed `[index, value]` pairs (shape and integer-ness already
+/// validated by the wire parser) into one CSR query row: range-check
+/// indices against the model's `d`, then sort and deduplicate (last value
+/// wins) to the loader's CSR invariant. An empty pair list is a valid
+/// all-zeros row.
+fn sparse_csr(
+    pairs: &[(usize, f64)],
+    d: usize,
+) -> Result<(Vec<usize>, Vec<u32>, Vec<f32>), String> {
     let mut entries: Vec<(u32, f32)> = Vec::with_capacity(pairs.len());
-    for (i, p) in pairs.iter().enumerate() {
-        let p = p
-            .as_arr()
-            .filter(|p| p.len() == 2)
-            .ok_or_else(|| format!("sparse entry {i} must be an [index, value] pair"))?;
-        let idx = p[0]
-            .as_usize()
-            .ok_or_else(|| format!("sparse entry {i}: index must be a non-negative integer"))?;
+    for (i, &(idx, val)) in pairs.iter().enumerate() {
         if idx >= d {
             return Err(format!("sparse entry {i}: index {idx} out of range for {d} features"));
         }
-        let val = p[1]
-            .as_f64()
-            .ok_or_else(|| format!("sparse entry {i}: value must be a number"))?;
         entries.push((idx as u32, val as f32));
     }
     // ascending unique indices; the stable sort keeps arrival order among
@@ -446,6 +479,7 @@ mod tests {
     use crate::config::KrrConfig;
     use crate::coordinator::Trainer;
     use crate::data::synthetic_by_name;
+    use crate::util::json::Json;
 
     fn small_model() -> (Arc<super::super::TrainedModel>, usize, Vec<f32>, Vec<f64>) {
         let mut ds = synthetic_by_name("wine", Some(150), 1).unwrap();
@@ -629,6 +663,35 @@ mod tests {
         let mut line = String::new();
         reader.read_line(&mut line).unwrap();
         handle.join().unwrap();
+    }
+
+    #[test]
+    fn shutdown_latency_stays_bounded_after_idle() {
+        // after a long quiet stretch every wait in the server sits at its
+        // deepest backoff (IDLE_MAX for both the accept loop and this
+        // connection's reads) — a shutdown must still complete promptly,
+        // not wait out some accumulated poll schedule
+        let (model, _d, _, _) = small_model();
+        let (addr, handle) = start(ModelRegistry::single(model), 1);
+        let mut conn = TcpStream::connect(&addr).unwrap();
+        conn.set_nodelay(true).ok();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        std::thread::sleep(IDLE_MAX * 3); // escalate everything to the cap
+        let t = Instant::now();
+        writeln!(conn, "{{\"cmd\": \"shutdown\"}}").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("ok"), "{line}");
+        drop(reader);
+        drop(conn);
+        handle.join().unwrap();
+        let elapsed = t.elapsed();
+        // generous bound for slow CI machines; still far below what any
+        // fixed multi-second poll schedule would allow
+        assert!(
+            elapsed < Duration::from_millis(1500),
+            "shutdown after idle took {elapsed:?}"
+        );
     }
 
     #[test]

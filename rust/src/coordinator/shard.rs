@@ -1,0 +1,827 @@
+//! Sharded distributed CG solve and serving: partition the m WLSH
+//! instances across N worker processes, keep the CG loop (and all vector
+//! arithmetic) on the coordinator, and fan the fused mat-vec / predict
+//! kernels out over the shards through the typed wire protocol
+//! ([`proto`](crate::coordinator::proto)).
+//!
+//! Bit-identity discipline (the same contract `util/par.rs` enforces for
+//! threads, extended across processes): instance ranges cut on
+//! `FUSE_BLOCK` boundaries, every shard returns *raw* per-block partial
+//! vectors, and the coordinator accumulates them in global block order
+//! before applying `1/m_total` once — exactly the reduction
+//! `WlshSketch::matvec_threads` performs in one process. Prediction ships
+//! raw per-instance terms with explicit bucket-miss markers, accumulated
+//! left-to-right in global instance order. Numbers cross the wire as
+//! shortest-round-trip decimals, which are bit-exact for finite f64/f32.
+//! Consequence: the N-shard solve's β and predictions equal the
+//! single-process results *exactly*, for every shard count
+//! (`tests/shard_equivalence.rs`).
+//!
+//! Failure semantics: shard connections retry with backoff while a worker
+//! is coming up; once the solve is running, any I/O error, protocol
+//! error, or worker death surfaces as [`KrrError::Shard`] naming the
+//! shard address. `KrrOperator::matvec` is infallible by design, so
+//! [`ShardedOperator`] latches the first failure, short-circuits every
+//! subsequent mat-vec (CG then terminates within its iteration cap in
+//! microseconds), and the trainer converts the latch into a hard error —
+//! no partial result is ever returned.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::api::{BucketSpec, KrrError, TopologySpec};
+use crate::config::KrrConfig;
+use crate::coordinator::proto::{Request, Response, ShardBuild, ShardReady};
+use crate::data::MatrixSource;
+use crate::lsh::IdMode;
+use crate::sketch::{KrrOperator, Predictor, WlshSketch};
+use std::sync::Arc;
+
+/// How long a shard connection keeps retrying before giving up (workers
+/// announce their address only after binding, so refusals here mean a
+/// worker is mid-spawn, not absent). Override in milliseconds with
+/// `WLSH_SHARD_CONNECT_MS` (tests shrink it to fail fast).
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
+/// First retry delay; doubles per attempt up to [`CONNECT_BACKOFF_MAX`].
+const CONNECT_BACKOFF_START: Duration = Duration::from_millis(25);
+const CONNECT_BACKOFF_MAX: Duration = Duration::from_millis(400);
+/// Per-reply read budget. A dead worker fails in microseconds (reset /
+/// EOF); this bound only catches a live-but-wedged worker, so it is
+/// sized for the slowest legitimate reply (a full sketch build).
+const READ_TIMEOUT: Duration = Duration::from_secs(120);
+const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+fn connect_timeout() -> Duration {
+    match std::env::var("WLSH_SHARD_CONNECT_MS").ok().and_then(|v| v.parse::<u64>().ok()) {
+        Some(ms) => Duration::from_millis(ms),
+        None => CONNECT_TIMEOUT,
+    }
+}
+
+/// Partition of `m_total` WLSH instances over `n_shards` workers, cut on
+/// `FUSE_BLOCK` boundaries so the distributed mat-vec reduction replays
+/// the single-process block order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardPlan {
+    pub m_total: usize,
+    /// Per-shard instance ranges `[lo, hi)`, contiguous and in order.
+    pub ranges: Vec<(usize, usize)>,
+}
+
+impl ShardPlan {
+    /// Split `m_total` instances over `n_shards` at block granularity
+    /// (shard s gets blocks `[⌊s·nb/N⌋, ⌊(s+1)·nb/N⌋)`; trailing shards
+    /// may own zero instances when there are fewer blocks than shards).
+    pub fn new(m_total: usize, n_shards: usize) -> ShardPlan {
+        assert!(n_shards >= 1, "need at least one shard");
+        let fb = WlshSketch::FUSE_BLOCK;
+        let nblocks = m_total.div_ceil(fb);
+        let ranges = (0..n_shards)
+            .map(|s| {
+                let blo = s * nblocks / n_shards;
+                let bhi = (s + 1) * nblocks / n_shards;
+                ((blo * fb).min(m_total), (bhi * fb).min(m_total))
+            })
+            .collect();
+        ShardPlan { m_total, ranges }
+    }
+}
+
+/// One shard connection: lazy, auto-reconnecting while the worker comes
+/// up, line-oriented request/reply. All replies funnel through
+/// [`call`](Self::call), which converts every transport or protocol
+/// failure into [`KrrError::Shard`] naming the address.
+pub struct ShardClient {
+    addr: String,
+    conn: Mutex<Option<(TcpStream, BufReader<TcpStream>)>>,
+}
+
+impl ShardClient {
+    pub fn new(addr: &str) -> ShardClient {
+        ShardClient { addr: addr.to_string(), conn: Mutex::new(None) }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    fn shard_err(&self, what: impl std::fmt::Display) -> KrrError {
+        KrrError::Shard(format!("{}: {what}", self.addr))
+    }
+
+    /// Connect with retry/backoff (covers the worker's bind-to-announce
+    /// window and slow process spawns).
+    fn connect(&self) -> Result<(TcpStream, BufReader<TcpStream>), KrrError> {
+        let deadline = Instant::now() + connect_timeout();
+        let mut backoff = CONNECT_BACKOFF_START;
+        loop {
+            match TcpStream::connect(&self.addr) {
+                Ok(stream) => {
+                    stream.set_nodelay(true).ok();
+                    stream.set_read_timeout(Some(READ_TIMEOUT)).ok();
+                    stream.set_write_timeout(Some(WRITE_TIMEOUT)).ok();
+                    let reader = BufReader::new(
+                        stream.try_clone().map_err(|e| self.shard_err(e))?,
+                    );
+                    return Ok((stream, reader));
+                }
+                Err(e) => {
+                    if Instant::now() + backoff > deadline {
+                        return Err(self.shard_err(format!(
+                            "connect failed after retrying for {:?}: {e}",
+                            connect_timeout()
+                        )));
+                    }
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(CONNECT_BACKOFF_MAX);
+                }
+            }
+        }
+    }
+
+    /// One request → one reply. Transport failures drop the cached
+    /// connection (the next call re-dials, with the same retry budget);
+    /// a worker-side [`Response::Error`] also surfaces as
+    /// [`KrrError::Shard`] — shard workers are internal, so their errors
+    /// are failures, not user input problems.
+    pub fn call(&self, req: &Request) -> Result<Response, KrrError> {
+        let mut guard = self.conn.lock().expect("shard client lock poisoned");
+        if guard.is_none() {
+            *guard = Some(self.connect()?);
+        }
+        let (stream, reader) = guard.as_mut().expect("just connected");
+        let line = req.to_line();
+        let io = (|| -> std::io::Result<String> {
+            stream.write_all(line.as_bytes())?;
+            stream.write_all(b"\n")?;
+            let mut reply = String::new();
+            let nread = reader.read_line(&mut reply)?;
+            if nread == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "worker closed the connection",
+                ));
+            }
+            Ok(reply)
+        })();
+        let reply = match io {
+            Ok(r) => r,
+            Err(e) => {
+                *guard = None; // poisoned stream; re-dial on next call
+                return Err(self.shard_err(e));
+            }
+        };
+        match Response::parse(reply.trim_end()) {
+            Ok(Response::Error(msg)) => Err(self.shard_err(msg)),
+            Ok(resp) => Ok(resp),
+            Err(e) => Err(self.shard_err(format!("bad reply: {e}"))),
+        }
+    }
+
+    /// Best-effort shutdown request (used when tearing down local
+    /// workers; errors are ignored — the process is about to be reaped).
+    fn send_shutdown(&self) {
+        let _ = self.call(&Request::Shutdown);
+    }
+}
+
+/// A set of shard workers executing one [`ShardPlan`]: the clients, and —
+/// for locally spawned topologies — the child processes themselves.
+/// Dropping the group shuts local workers down (remote workers are not
+/// ours to stop). The solved model's operator holds the group in an
+/// `Arc`, so shards live exactly as long as something can still route
+/// queries to them.
+pub struct ShardGroup {
+    pub plan: ShardPlan,
+    clients: Vec<ShardClient>,
+    children: Mutex<Vec<Child>>,
+}
+
+impl ShardGroup {
+    /// Spawn `n_shards` local `shard-worker` processes (ephemeral ports,
+    /// addresses scraped from their stdout announcements) and connect.
+    pub fn spawn_local(n_shards: usize, m_total: usize) -> Result<ShardGroup, KrrError> {
+        let bin = worker_binary()?;
+        let mut children = Vec::with_capacity(n_shards);
+        let mut clients = Vec::with_capacity(n_shards);
+        for s in 0..n_shards {
+            let mut child = Command::new(&bin)
+                .args(["shard-worker", "--addr", "127.0.0.1:0"])
+                .stdout(Stdio::piped())
+                .stderr(Stdio::inherit())
+                .spawn()
+                .map_err(|e| {
+                    KrrError::Shard(format!("spawn {} (shard {s}): {e}", bin.display()))
+                })?;
+            let stdout = child.stdout.take().expect("stdout was piped");
+            let mut reader = BufReader::new(stdout);
+            let mut line = String::new();
+            let addr = loop {
+                line.clear();
+                let nread = reader.read_line(&mut line).map_err(|e| {
+                    KrrError::Shard(format!("shard {s} stdout: {e}"))
+                })?;
+                if nread == 0 {
+                    // reap the corpse for a useful exit status
+                    let status = child.wait().map(|s| s.to_string()).unwrap_or_default();
+                    return Err(KrrError::Shard(format!(
+                        "shard {s} exited before announcing its address ({status})"
+                    )));
+                }
+                if let Some(rest) = line.trim_end().strip_prefix("shard listening on ") {
+                    break rest.to_string();
+                }
+            };
+            children.push(child);
+            clients.push(ShardClient::new(&addr));
+        }
+        Ok(ShardGroup {
+            plan: ShardPlan::new(m_total, n_shards),
+            clients,
+            children: Mutex::new(children),
+        })
+    }
+
+    /// Connect to already-running workers at `addrs` (the
+    /// `remote(addr=...)` topology; one shard per address, in spec
+    /// order — the order is part of the reduction contract).
+    pub fn connect_remote(addrs: &[String], m_total: usize) -> Result<ShardGroup, KrrError> {
+        assert!(!addrs.is_empty(), "need at least one shard address");
+        Ok(ShardGroup {
+            plan: ShardPlan::new(m_total, addrs.len()),
+            clients: addrs.iter().map(|a| ShardClient::new(a)).collect(),
+            children: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.clients.len()
+    }
+
+    /// Run `f(shard_index, client)` for every shard concurrently and
+    /// return the results in shard order (the caller performs all
+    /// order-sensitive reductions; this only parallelizes the waiting).
+    /// The first failure (lowest shard index) wins.
+    fn for_each_shard<T: Send>(
+        &self,
+        f: impl Fn(usize, &ShardClient) -> Result<T, KrrError> + Sync,
+    ) -> Result<Vec<T>, KrrError> {
+        let f = &f;
+        let results: Vec<Result<T, KrrError>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .clients
+                .iter()
+                .enumerate()
+                .map(|(s, client)| scope.spawn(move || f(s, client)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| match h.join() {
+                    Ok(r) => r,
+                    Err(_) => Err(KrrError::Shard("shard call panicked".to_string())),
+                })
+                .collect()
+        });
+        results.into_iter().collect()
+    }
+
+    /// Distribute the training matrix: every shard builds its instance
+    /// range of the sketch (in parallel — builds are the expensive part).
+    fn build(&self, cfg: &KrrConfig, x: &[f32], n: usize, d: usize) -> Result<(), KrrError> {
+        self.for_each_shard(|s, client| {
+            let (lo, hi) = self.plan.ranges[s];
+            let req = Request::ShardBuild(ShardBuild {
+                n,
+                d,
+                x: x.to_vec(),
+                m_total: self.plan.m_total,
+                lo,
+                hi,
+                bucket: cfg.bucket.to_string(),
+                gamma_shape: cfg.gamma_shape,
+                scale: cfg.scale,
+                seed: cfg.seed,
+                chunk_rows: cfg.chunk_rows,
+                workers: cfg.workers,
+            });
+            match client.call(&req)? {
+                Response::ShardReady(ShardReady { m_local, .. }) if m_local == hi - lo => Ok(()),
+                Response::ShardReady(sh) => Err(KrrError::Shard(format!(
+                    "{}: built {} instances, expected {}",
+                    client.addr(),
+                    sh.m_local,
+                    hi - lo
+                ))),
+                other => Err(KrrError::Shard(format!(
+                    "{}: unexpected build reply {other:?}",
+                    client.addr()
+                ))),
+            }
+        })?;
+        Ok(())
+    }
+
+    /// Distributed fused mat-vec: gather every shard's raw block
+    /// partials, reduce in global block order (shard order × in-shard
+    /// block order), normalize once. Bit-identical to
+    /// `WlshSketch::matvec_threads` on the full sketch.
+    fn matvec(&self, beta: &[f64], n: usize) -> Result<Vec<f64>, KrrError> {
+        let per_shard = self.for_each_shard(|_, client| {
+            match client.call(&Request::ShardMatvec { beta: beta.to_vec() })? {
+                Response::MatvecPartials(partials) => Ok(partials),
+                other => Err(KrrError::Shard(format!(
+                    "{}: unexpected matvec reply {other:?}",
+                    client.addr()
+                ))),
+            }
+        })?;
+        let mut out = vec![0.0f64; n];
+        for (s, partials) in per_shard.iter().enumerate() {
+            for p in partials {
+                if p.len() != n {
+                    return Err(KrrError::Shard(format!(
+                        "{}: partial has {} rows, expected {n}",
+                        self.clients[s].addr(),
+                        p.len()
+                    )));
+                }
+                for (o, v) in out.iter_mut().zip(p) {
+                    *o += *v;
+                }
+            }
+        }
+        let inv_m = 1.0 / self.plan.m_total as f64;
+        for v in out.iter_mut() {
+            *v *= inv_m;
+        }
+        Ok(out)
+    }
+
+    /// Freeze every shard's serving loads from the solved β.
+    fn load_beta(&self, beta: &[f64]) -> Result<(), KrrError> {
+        self.for_each_shard(|_, client| {
+            match client.call(&Request::ShardLoadBeta { beta: beta.to_vec() })? {
+                Response::ShardReady(ShardReady { loaded: true, .. }) => Ok(()),
+                other => Err(KrrError::Shard(format!(
+                    "{}: unexpected load-beta reply {other:?}",
+                    client.addr()
+                ))),
+            }
+        })?;
+        Ok(())
+    }
+
+    /// Distributed prediction: gather raw per-instance terms from every
+    /// shard, accumulate left-to-right in global instance order
+    /// (skipping bucket misses), normalize once. Bit-identical to the
+    /// single-process predictor.
+    fn predict(&self, rows: &[Vec<f32>], out: &mut [f64]) -> Result<(), KrrError> {
+        assert_eq!(rows.len(), out.len(), "one output slot per query row");
+        let per_shard = self.for_each_shard(|_, client| {
+            match client.call(&Request::ShardPredict { rows: rows.to_vec() })? {
+                Response::PredictPartials(terms) => Ok(terms),
+                other => Err(KrrError::Shard(format!(
+                    "{}: unexpected predict reply {other:?}",
+                    client.addr()
+                ))),
+            }
+        })?;
+        for (s, terms) in per_shard.iter().enumerate() {
+            if terms.len() != rows.len() {
+                return Err(KrrError::Shard(format!(
+                    "{}: {} query rows replied, expected {}",
+                    self.clients[s].addr(),
+                    terms.len(),
+                    rows.len()
+                )));
+            }
+        }
+        let inv_m = 1.0 / self.plan.m_total as f64;
+        for (qi, o) in out.iter_mut().enumerate() {
+            let mut acc = 0.0f64;
+            for terms in &per_shard {
+                for t in terms[qi].iter().flatten() {
+                    acc += *t;
+                }
+            }
+            *o = acc * inv_m;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for ShardGroup {
+    fn drop(&mut self) {
+        let mut children = self.children.lock().expect("children lock poisoned");
+        if children.is_empty() {
+            return;
+        }
+        // polite shutdown first (lets workers exit 0), then the axe
+        for client in &self.clients {
+            client.send_shutdown();
+        }
+        for child in children.iter_mut() {
+            let deadline = Instant::now() + Duration::from_millis(500);
+            loop {
+                match child.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if Instant::now() < deadline => {
+                        std::thread::sleep(Duration::from_millis(10))
+                    }
+                    _ => {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Resolve the `shard-worker` binary for locally spawned shards:
+/// `WLSH_SHARD_BIN` wins; otherwise the current executable (when it *is*
+/// `wlsh-krr`), else `wlsh-krr` next to it or one directory up (test
+/// binaries live in `target/<profile>/deps/`).
+fn worker_binary() -> Result<std::path::PathBuf, KrrError> {
+    if let Ok(bin) = std::env::var("WLSH_SHARD_BIN") {
+        return Ok(bin.into());
+    }
+    let exe = std::env::current_exe()
+        .map_err(|e| KrrError::Shard(format!("cannot locate own binary: {e}")))?;
+    let name = format!("wlsh-krr{}", std::env::consts::EXE_SUFFIX);
+    if exe.file_name().map(|f| f == name.as_str()).unwrap_or(false) {
+        return Ok(exe);
+    }
+    let dir = exe.parent().unwrap_or(std::path::Path::new("."));
+    for candidate in [dir.join(&name), dir.join("..").join(&name)] {
+        if candidate.is_file() {
+            return Ok(candidate);
+        }
+    }
+    Err(KrrError::Shard(format!(
+        "cannot find the wlsh-krr binary near {} (set WLSH_SHARD_BIN)",
+        exe.display()
+    )))
+}
+
+/// The m-instance WLSH operator, physically partitioned across a
+/// [`ShardGroup`]. The CG loop calls [`KrrOperator::matvec`]
+/// coordinator-side exactly as for a local sketch; only the fused-block
+/// kernel runs remotely.
+///
+/// `matvec` is infallible by trait contract, so shard failures latch
+/// into an internal slot: the first error is recorded, every subsequent
+/// mat-vec/predict short-circuits to zeros, and the trainer turns the
+/// latch into `Err(KrrError::Shard)` after the solve — a dead worker
+/// costs one read-timeout at most, never a hang, never a silently wrong
+/// model.
+pub struct ShardedOperator {
+    group: Arc<ShardGroup>,
+    n: usize,
+    d: usize,
+    failure: Mutex<Option<KrrError>>,
+}
+
+impl ShardedOperator {
+    /// Stand up the topology (spawn or connect per `config.topology`)
+    /// and distribute the sketch build.
+    pub fn build(
+        config: &KrrConfig,
+        x: &[f32],
+        n: usize,
+        d: usize,
+    ) -> Result<Arc<ShardedOperator>, KrrError> {
+        let group = match &config.topology {
+            TopologySpec::Local => {
+                return Err(KrrError::BadParam(
+                    "ShardedOperator::build called with a local topology".into(),
+                ))
+            }
+            TopologySpec::Shards { n: shards } => {
+                ShardGroup::spawn_local(*shards, config.budget)?
+            }
+            TopologySpec::Remote { addrs } => ShardGroup::connect_remote(addrs, config.budget)?,
+        };
+        group.build(config, x, n, d)?;
+        Ok(Arc::new(ShardedOperator {
+            group: Arc::new(group),
+            n,
+            d,
+            failure: Mutex::new(None),
+        }))
+    }
+
+    /// The first shard failure, if any (checked by the trainer after the
+    /// solve; the slot stays latched so later checks see it too).
+    pub fn failure(&self) -> Option<KrrError> {
+        self.failure.lock().expect("failure lock poisoned").clone()
+    }
+
+    fn latch(&self, e: KrrError) {
+        self.failure.lock().expect("failure lock poisoned").get_or_insert(e);
+    }
+
+    fn failed(&self) -> bool {
+        self.failure.lock().expect("failure lock poisoned").is_some()
+    }
+
+    pub fn group(&self) -> &Arc<ShardGroup> {
+        &self.group
+    }
+}
+
+impl KrrOperator for ShardedOperator {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn matvec(&self, beta: &[f64]) -> Vec<f64> {
+        if self.failed() {
+            return vec![0.0; self.n];
+        }
+        match self.group.matvec(beta, self.n) {
+            Ok(y) => y,
+            Err(e) => {
+                self.latch(e);
+                vec![0.0; self.n]
+            }
+        }
+    }
+
+    fn predict(&self, queries: &[f32], beta: &[f64]) -> Vec<f64> {
+        let rows: Vec<Vec<f32>> = queries.chunks(self.d).map(<[f32]>::to_vec).collect();
+        let mut out = vec![0.0f64; rows.len()];
+        let run = || -> Result<(), KrrError> {
+            self.group.load_beta(beta)?;
+            self.group.predict(&rows, &mut out)
+        };
+        if let Err(e) = run() {
+            self.latch(e);
+            out.fill(0.0);
+        }
+        out
+    }
+
+    fn predictor(self: Arc<Self>, beta: &[f64]) -> Box<dyn Predictor> {
+        if let Err(e) = self.group.load_beta(beta) {
+            self.latch(e);
+        }
+        let d = self.d;
+        Box::new(ShardedPredictor { op: self, d })
+    }
+
+    // `diag()` stays the default `None`: the diagonal lives with the
+    // shard weights, and the Jacobi path already falls back (with a
+    // warning) when an operator exposes no cheap diagonal.
+
+    fn name(&self) -> String {
+        format!(
+            "sharded-wlsh(m={},shards={})",
+            self.group.plan.m_total,
+            self.group.n_shards()
+        )
+    }
+
+    fn memory_bytes(&self) -> usize {
+        // coordinator-side footprint only — the sketch lives in the
+        // worker processes
+        0
+    }
+}
+
+/// Serving handle over a [`ShardedOperator`]: fans each query batch to
+/// every shard and reduces the raw terms in instance order. Implements
+/// the same [`Predictor`] contract local sketches do, so a sharded model
+/// flows through the registry / worker pool / TCP server (backpressure,
+/// stats, hot-reload) unchanged.
+pub struct ShardedPredictor {
+    op: Arc<ShardedOperator>,
+    d: usize,
+}
+
+impl Predictor for ShardedPredictor {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn predict_into(&self, queries: &[f32], out: &mut [f64]) {
+        if self.op.failed() {
+            out.fill(0.0);
+            return;
+        }
+        let rows: Vec<Vec<f32>> = queries.chunks(self.d).map(<[f32]>::to_vec).collect();
+        if let Err(e) = self.op.group.predict(&rows, out) {
+            self.op.latch(e);
+            out.fill(0.0);
+        }
+    }
+}
+
+// ------------------------------------------------------------- the worker
+
+/// Shard-worker state: the owned instance range of the sketch, plus
+/// serving loads once a β has been frozen.
+struct WorkerState {
+    sketch: Option<Arc<WlshSketch>>,
+    loads: Option<Vec<Vec<f64>>>,
+    d: usize,
+    n: usize,
+    workers: usize,
+}
+
+impl WorkerState {
+    fn ready(&self) -> ShardReady {
+        ShardReady {
+            n: self.n,
+            d: self.d,
+            m_local: self.sketch.as_ref().map(|s| s.m()).unwrap_or(0),
+            blocks: self
+                .sketch
+                .as_ref()
+                .map(|s| s.m().div_ceil(WlshSketch::FUSE_BLOCK))
+                .unwrap_or(0),
+            loaded: self.loads.is_some(),
+        }
+    }
+
+    fn handle(&mut self, req: Request) -> Result<Response, String> {
+        match req {
+            Request::ShardBuild(b) => {
+                if b.x.len() != b.n * b.d {
+                    return Err(format!(
+                        "shard-build: x has {} values, expected n·d = {}",
+                        b.x.len(),
+                        b.n * b.d
+                    ));
+                }
+                let bucket: BucketSpec = b.bucket.parse().map_err(|e| format!("{e}"))?;
+                let src = MatrixSource::new("shard", &b.x, b.d.max(1));
+                let sketch = WlshSketch::build_source_range(
+                    &src,
+                    b.m_total,
+                    b.lo,
+                    b.hi,
+                    &bucket,
+                    b.gamma_shape,
+                    b.scale,
+                    b.seed,
+                    IdMode::U64,
+                    b.chunk_rows.max(1),
+                    b.workers.max(1),
+                )
+                .map_err(|e| format!("{e}"))?;
+                self.n = b.n;
+                self.d = b.d;
+                self.workers = b.workers.max(1);
+                self.sketch = Some(Arc::new(sketch));
+                self.loads = None;
+                Ok(Response::ShardReady(self.ready()))
+            }
+            Request::ShardMatvec { beta } => {
+                let sketch = self.sketch.as_ref().ok_or("no sketch built yet")?;
+                if beta.len() != self.n {
+                    return Err(format!(
+                        "shard-matvec: beta has {} rows, sketch has {}",
+                        beta.len(),
+                        self.n
+                    ));
+                }
+                Ok(Response::MatvecPartials(sketch.block_partials(&beta, self.workers)))
+            }
+            Request::ShardLoadBeta { beta } => {
+                let sketch = self.sketch.as_ref().ok_or("no sketch built yet")?;
+                if beta.len() != self.n {
+                    return Err(format!(
+                        "shard-load-beta: beta has {} rows, sketch has {}",
+                        beta.len(),
+                        self.n
+                    ));
+                }
+                self.loads = Some(sketch.loads_all(&beta, self.workers));
+                Ok(Response::ShardReady(self.ready()))
+            }
+            Request::ShardPredict { rows } => {
+                let sketch = self.sketch.as_ref().ok_or("no sketch built yet")?;
+                let loads = self.loads.as_ref().ok_or("no beta loaded yet")?;
+                let mut flat = Vec::with_capacity(rows.len() * self.d);
+                for (i, row) in rows.iter().enumerate() {
+                    if row.len() != self.d {
+                        return Err(format!(
+                            "shard-predict row {i}: expected {} features, got {}",
+                            self.d,
+                            row.len()
+                        ));
+                    }
+                    flat.extend_from_slice(row);
+                }
+                Ok(Response::PredictPartials(sketch.predict_terms(loads, &flat)))
+            }
+            Request::ShardInfo => Ok(Response::ShardReady(self.ready())),
+            Request::Shutdown => unreachable!("handled by the connection loop"),
+            _ => Err("shard worker speaks shard-* ops only".to_string()),
+        }
+    }
+}
+
+/// Run a shard worker: bind `addr`, announce `shard listening on
+/// <addr>` on stdout (machine-readable — the spawner scrapes it), then
+/// serve coordinator connections sequentially until a `shutdown`
+/// request. Exposed as a library function so tests can run in-thread
+/// workers; the `wlsh-krr shard-worker` subcommand is a thin wrapper.
+pub fn run_worker(addr: &str, ready: Option<mpsc::Sender<String>>) -> Result<(), KrrError> {
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| KrrError::Io(format!("shard bind {addr}: {e}")))?;
+    let local = listener
+        .local_addr()
+        .map_err(|e| KrrError::Io(e.to_string()))?
+        .to_string();
+    println!("shard listening on {local}");
+    // stdout is scraped by the spawner; make sure the line is visible
+    // even through a pipe
+    std::io::stdout().flush().ok();
+    if let Some(tx) = ready {
+        tx.send(local).ok();
+    }
+    let mut state = WorkerState { sketch: None, loads: None, d: 0, n: 0, workers: 1 };
+    for conn in listener.incoming() {
+        let stream = match conn {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        stream.set_nodelay(true).ok();
+        stream.set_write_timeout(Some(WRITE_TIMEOUT)).ok();
+        let mut writer = stream.try_clone().map_err(|e| KrrError::Io(e.to_string()))?;
+        let reader = BufReader::new(stream);
+        for line in reader.lines() {
+            let line = match line {
+                Ok(l) => l,
+                Err(_) => break, // connection died; await the next one
+            };
+            if line.trim().is_empty() {
+                continue;
+            }
+            let reply = match Request::parse(&line) {
+                Ok(Request::Shutdown) => {
+                    let bye = Response::Ok { model: None }.to_line();
+                    let _ = writeln!(writer, "{bye}");
+                    return Ok(());
+                }
+                Ok(req) => match state.handle(req) {
+                    Ok(resp) => resp,
+                    Err(msg) => Response::Error(msg),
+                },
+                Err(msg) => Response::Error(msg),
+            };
+            if writeln!(writer, "{}", reply.to_line()).is_err() {
+                break;
+            }
+        }
+        // EOF: the coordinator disconnected; keep state and wait for a
+        // reconnect (sketches are expensive to rebuild)
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_cuts_on_block_boundaries_and_covers_everything() {
+        for (m, shards) in [(64usize, 4usize), (37, 2), (8, 3), (100, 7), (16, 1), (4, 3)] {
+            let plan = ShardPlan::new(m, shards);
+            assert_eq!(plan.ranges.len(), shards);
+            assert_eq!(plan.ranges[0].0, 0);
+            assert_eq!(plan.ranges[shards - 1].1, m, "m={m} shards={shards}");
+            for w in plan.ranges.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous: m={m} shards={shards}");
+            }
+            for &(lo, hi) in &plan.ranges {
+                assert!(lo <= hi);
+                assert_eq!(lo % WlshSketch::FUSE_BLOCK, 0, "lo={lo} not block-aligned");
+                assert!(
+                    hi % WlshSketch::FUSE_BLOCK == 0 || hi == m,
+                    "hi={hi} not block-aligned (m={m})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn worker_rejects_serving_requests_and_premature_ops() {
+        let mut state = WorkerState { sketch: None, loads: None, d: 0, n: 0, workers: 1 };
+        let err = state
+            .handle(Request::Predict { features: vec![1.0], model: None })
+            .unwrap_err();
+        assert!(err.contains("shard-* ops only"), "{err}");
+        let err = state.handle(Request::ShardMatvec { beta: vec![] }).unwrap_err();
+        assert!(err.contains("no sketch"), "{err}");
+        let err = state.handle(Request::ShardPredict { rows: vec![] }).unwrap_err();
+        assert!(err.contains("no sketch"), "{err}");
+    }
+}

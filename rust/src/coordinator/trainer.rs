@@ -14,6 +14,7 @@ use std::time::Instant;
 
 use crate::api::{KernelFamily, KrrError, MethodSpec, PrecondSpec};
 use crate::config::KrrConfig;
+use crate::coordinator::shard::ShardedOperator;
 use crate::data::{ChunkAnyFn, ChunkFn, DataSource, Dataset, SparseChunk};
 use crate::kernels::Kernel;
 use crate::lsh::IdMode;
@@ -300,11 +301,40 @@ impl Trainer {
     /// TOML — shares one range-check path.
     pub fn train(&self, train: &Dataset) -> Result<TrainedModel, KrrError> {
         self.config.validate()?;
+        if self.config.topology.is_distributed() {
+            return self.train_distributed(train);
+        }
         let t0 = Instant::now();
         let op = self.build_operator(train)?;
         let build_secs = t0.elapsed().as_secs_f64();
         let precond = self.build_preconditioner(train, op.as_ref());
         self.solve_with(op, &train.y, build_secs, precond)
+    }
+
+    /// Sharded training run: stand up the configured topology (spawn
+    /// local `shard-worker` processes or connect to remote addresses),
+    /// distribute the WLSH instance build, and run the CG loop here with
+    /// the fused mat-vec fanned out over the shards. The solved β is
+    /// bit-identical to the single-process [`train`](Self::train) at
+    /// every shard count (`tests/shard_equivalence.rs`). Any shard
+    /// failure during the solve surfaces as [`KrrError::Shard`] — never a
+    /// hang, never a partial model.
+    fn train_distributed(&self, train: &Dataset) -> Result<TrainedModel, KrrError> {
+        let t0 = Instant::now();
+        let op = ShardedOperator::build(&self.config, &train.x, train.n, train.d)?;
+        let build_secs = t0.elapsed().as_secs_f64();
+        // Nyström preconditioning still assembles coordinator-side (it
+        // needs the raw rows, which we have); Jacobi falls back with a
+        // warning since the diagonal lives with the shard weights.
+        let precond = self.build_preconditioner(train, op.as_ref());
+        let dyn_op: Arc<dyn KrrOperator> = Arc::clone(&op);
+        let model = self.solve_with(dyn_op, &train.y, build_secs, precond);
+        // matvec is infallible by trait contract, so shard deaths latch
+        // inside the operator; surface them as the hard error they are.
+        if let Some(e) = op.failure() {
+            return Err(e);
+        }
+        model
     }
 
     /// Streamed training run: the operator is built chunk by chunk from a
@@ -315,6 +345,13 @@ impl Trainer {
     /// dataset, at every chunk size and worker count.
     pub fn train_source(&self, src: &dyn DataSource) -> Result<TrainedModel, KrrError> {
         self.config.validate()?;
+        if self.config.topology.is_distributed() {
+            // Shard builds ship the standardized rows over the wire, so
+            // the distributed path needs the materialized matrix anyway —
+            // streaming buys nothing there. Documented fallback.
+            let ds = src.materialize(self.config.chunk_rows)?;
+            return self.train_distributed(&ds);
+        }
         let collector = CollectTargets::new(src);
         let t0 = Instant::now();
         let op = self.build_operator_source(&collector)?;

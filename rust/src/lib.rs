@@ -107,6 +107,23 @@
 //! connections. Predictions are bit-identical at every worker count,
 //! queue depth, and batch boundary (`tests/serve_pool.rs`).
 //!
+//! ## Distributed solve & serving
+//!
+//! The m sketch instances shard across worker processes: set a
+//! [`api::TopologySpec`] on the builder (`.topology("shards(n=3)")` to
+//! spawn local workers, `.topology("remote(addr=host:port, ...)")` to
+//! use running ones — start them with `wlsh-krr shard-worker`, or
+//! in-process via [`coordinator::run_worker`]). The CG loop stays on the
+//! coordinator; each iteration's fused mat-vec fans out over the typed
+//! wire protocol ([`coordinator::proto`]), shards return raw per-block
+//! partials, and the fixed-order reduction makes the N-shard β
+//! **bit-identical to the local solve** at every shard and thread count
+//! (`tests/shard_equivalence.rs`). A sharded model's [`api::Predictor`]
+//! fans queries out the same way, so it serves through the registry /
+//! worker pool unchanged. Shard failures surface as typed
+//! [`api::KrrError::Shard`] values — never a hang, never a partial
+//! result. See the README's "Distributed solve & serving" runbook.
+//!
 //! Lower layers, for direct use: [`sketch::WlshSketch`] (the paper's
 //! estimator), [`solver::solve_krr`] (CG on `K̃ + λI`), and
 //! [`coordinator::Trainer`] / [`coordinator::serve`] (the

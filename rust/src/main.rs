@@ -17,7 +17,7 @@ use std::time::Duration;
 use wlsh_krr::api::{BucketSpec, KernelSpec, KrrError, MethodSpec, PrecondSpec};
 use wlsh_krr::config::KrrConfig;
 use wlsh_krr::coordinator::{
-    checkpoint, serve, ModelRegistry, ServerConfig, Trainer, DEFAULT_MODEL,
+    checkpoint, run_worker, serve, ModelRegistry, ServerConfig, Trainer, DEFAULT_MODEL,
 };
 use wlsh_krr::data::{
     head_sample, head_sample_sparse, load_csv, rmse, synthetic_by_name, CsvSource, DataSource,
@@ -44,10 +44,13 @@ fn main() {
         "serve" => cmd_serve(&args),
         "ose" => cmd_ose(&args),
         "gp" => cmd_gp(&args),
+        "shard-worker" => {
+            run_worker(args.get_or("addr", "127.0.0.1:0"), None)
+        }
         other => {
             eprintln!(
                 "wlsh-krr {} — Scaling up KRR via Locality Sensitive Hashing\n\
-                 usage: wlsh-krr <info|train|serve|ose|gp> [--flags]\n\
+                 usage: wlsh-krr <info|train|serve|shard-worker|ose|gp> [--flags]\n\
                  \n\
                  train  --dataset wine|insurance|ctslices|covtype|<csv path>\n\
                         --method wlsh|rff|exact-laplace|exact-se|exact-matern|nystrom\n\
@@ -61,11 +64,17 @@ fn main() {
                         --sparse auto|true|false  (stream native CSR chunks;\n\
                         auto = whatever the source emits)\n\
                         --checkpoint-out PATH  (save the trained model)\n\
+                        --topology local|shards(n=N)|remote(addr=H:P,...)\n\
+                        (shard the m WLSH instances over worker processes;\n\
+                        beta is bit-identical at every shard count)\n\
                  serve  same dataset/method flags plus --addr HOST:PORT\n\
                         --workers N --queue-depth Q --max-batch B --linger-us U\n\
                         --model name=ckpt[,name=ckpt...]  (serve saved\n\
                         checkpoints instead of training; same dataset flags\n\
                         as the `train` run that wrote them)\n\
+                 shard-worker  --addr HOST:PORT  (one shard of a\n\
+                        distributed topology; spawned automatically by\n\
+                        shards(n=N), run by hand for remote(...))\n\
                  ose    --n N --m M --lambda L --bucket rect|smooth2\n\
                  gp     --cov laplace|se|matern --dim D --n N",
                 wlsh_krr::version()
@@ -143,6 +152,7 @@ fn config_from(args: &Args) -> Result<KrrConfig, KrrError> {
         workers: args.get_usize("workers", d.workers),
         chunk_rows: args.get_usize("chunk-rows", d.chunk_rows),
         seed: args.get_usize("seed", d.seed as usize) as u64,
+        topology: spec_flag(args, "topology", d.topology)?,
     })
 }
 
@@ -160,6 +170,20 @@ fn cmd_info(_args: &Args) {
         }
         Err(e) => println!("runtime unavailable: {e} (native backend only)"),
     }
+}
+
+/// FNV-1a over the solved β's little-endian bytes — a cheap fingerprint
+/// for the bit-identity contract (the CI shard smoke compares it between
+/// single-process and sharded runs of the same config).
+fn beta_hash(beta: &[f64]) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for v in beta {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    format!("{h:016x}")
 }
 
 /// Append the shared [`TrainReport`] diagnostics fields to a JSON record
@@ -200,6 +224,8 @@ fn cmd_train(args: &Args) -> Result<(), KrrError> {
         .field_str("dataset", &ds.name)
         .field_str("operator", &rep.operator)
         .field_str("method", &model.config.method.to_string())
+        .field_str("topology", &model.config.topology.to_string())
+        .field_str("beta_hash", &beta_hash(&model.beta))
         .field_f64("rmse", err);
     println!("{}", report_fields(record, rep).finish());
     Ok(())
@@ -312,6 +338,7 @@ fn cmd_train_streamed(args: &Args, format: &str) -> Result<(), KrrError> {
         .field_str("method", &model.config.method.to_string())
         .field_usize("n_train", model.beta.len())
         .field_usize("chunk_rows", chunk_rows)
+        .field_str("beta_hash", &beta_hash(&model.beta))
         .field_f64("train_sample_rmse", err);
     println!("{}", report_fields(record, rep).finish());
     Ok(())

@@ -113,6 +113,12 @@ pub struct WlshSketch {
 }
 
 impl WlshSketch {
+    /// The fused-mat-vec block size, re-exported for the shard topology
+    /// layer: distributed instance ranges must cut on block boundaries so
+    /// the coordinator's partial reduction replays
+    /// [`matvec_threads`](Self::matvec_threads)'s block order exactly.
+    pub const FUSE_BLOCK: usize = FUSE_BLOCK;
+
     /// Hash all n training rows under m fresh LSH instances. The bucket is
     /// given by its string name for test/bench convenience; it must parse
     /// as a [`BucketSpec`] (typed callers use
@@ -221,17 +227,55 @@ impl WlshSketch {
         chunk_rows: usize,
         workers: usize,
     ) -> Result<WlshSketch, KrrError> {
+        Self::build_source_range(
+            src, m, 0, m, bucket, gamma_shape, scale, seed, mode, chunk_rows, workers,
+        )
+    }
+
+    /// Build only instances `[lo, hi)` of an `m_total`-instance sketch —
+    /// the shard worker's constructor. Instance `s`'s hash function is
+    /// sampled from the `s`-th fork of the seed RNG, and forking advances
+    /// the parent state, so the range build replays every fork below `hi`
+    /// and samples only the owned ones: the produced instances are
+    /// *bit-identical* to instances `[lo, hi)` of the full build.
+    ///
+    /// The returned sketch's `m()` is the local count `hi - lo`, so its
+    /// trait `matvec`/`predict` normalize by the *local* instance count —
+    /// distributed callers must use the raw partial kernels
+    /// ([`block_partials`](Self::block_partials),
+    /// [`predict_terms`](Self::predict_terms)) and let the coordinator
+    /// apply `1/m_total` once.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_source_range(
+        src: &dyn DataSource,
+        m_total: usize,
+        lo: usize,
+        hi: usize,
+        bucket: &BucketSpec,
+        gamma_shape: f64,
+        scale: f64,
+        seed: u64,
+        mode: IdMode,
+        chunk_rows: usize,
+        workers: usize,
+    ) -> Result<WlshSketch, KrrError> {
+        assert!(
+            lo <= hi && hi <= m_total,
+            "instance range [{lo}, {hi}) out of bounds for m_total={m_total}"
+        );
         let d = src.dim();
         let mut rng = Pcg64::new(seed, 0);
         let family = LshFamily::new(d, gamma_shape, bucket, &mut rng);
         let n_hint = src.len_hint().unwrap_or(0);
-        // Sample every instance's hash function up front, in instance
+        // Sample the owned instances' hash functions up front, in instance
         // order from per-instance RNG forks — the exact draw sequence of
-        // the in-memory constructor.
-        let mut accums: Vec<InstanceAccum> = (0..m)
-            .map(|s| {
-                let mut irng = rng.fork(s as u64);
-                InstanceAccum {
+        // the full build (each fork advances the parent, so forks below
+        // `lo` are drawn and discarded).
+        let mut accums: Vec<InstanceAccum> = Vec::with_capacity(hi - lo);
+        for s in 0..hi {
+            let mut irng = rng.fork(s as u64);
+            if s >= lo {
+                accums.push(InstanceAccum {
                     func: family.sample(&mut irng),
                     builder: BucketTableBuilder::with_capacity(n_hint),
                     weights: Vec::with_capacity(n_hint),
@@ -239,9 +283,9 @@ impl WlshSketch {
                     w_buf: Vec::new(),
                     plan: None,
                     done: None,
-                }
-            })
-            .collect();
+                });
+            }
+        }
         let inv = (1.0 / scale) as f32;
         let mut x_buf: Vec<f32> = Vec::new();
         let mut v_buf: Vec<f32> = Vec::new();
@@ -457,6 +501,52 @@ impl WlshSketch {
             *v *= inv_m;
         }
         out
+    }
+
+    /// Raw per-block mat-vec partials, in local block order: entry `b` is
+    /// the un-normalized contribution of instance block `b`
+    /// (`FUSE_BLOCK` instances each) — exactly the vectors
+    /// [`matvec_threads`](Self::matvec_threads) reduces. The distributed
+    /// solve ships these to the coordinator, which accumulates them in
+    /// global block order and applies `1/m_total` once, reproducing the
+    /// single-process mat-vec bit for bit (blocks are computed
+    /// independently, so `threads` never affects the values).
+    pub fn block_partials(&self, beta: &[f64], threads: usize) -> Vec<Vec<f64>> {
+        assert_eq!(beta.len(), self.n);
+        let blocks: Vec<&[WlshInstance]> = self.instances.chunks(FUSE_BLOCK).collect();
+        par::fan_out(blocks.len(), threads, |b| self.block_contrib(blocks[b], beta))
+    }
+
+    /// Raw per-instance prediction terms for a row-major query batch: for
+    /// query `q` and local instance `s`, `Some(w · B_{h(q)})` when `q`'s
+    /// bucket is non-empty in instance `s`, else `None`. These are the
+    /// exact addends of the serial predict kernel
+    /// (`predict_query_range`), un-normalized; the coordinator
+    /// concatenates shards in instance order, accumulates left-to-right
+    /// skipping the `None`s, and applies `1/m_total` — bit-identical to
+    /// the single-process prediction. (A miss must stay a skip, not a
+    /// `0.0` addend: adding 0.0 can flip a `-0.0` accumulator to `+0.0`.)
+    pub fn predict_terms(&self, loads: &[Vec<f64>], queries: &[f32]) -> Vec<Vec<Option<f64>>> {
+        let d = self.family.d;
+        let inv = (1.0 / self.scale) as f32;
+        let nq = queries.len() / d;
+        let mut q_scaled = vec![0.0f32; d];
+        (0..nq)
+            .map(|qi| {
+                let q = &queries[qi * d..(qi + 1) * d];
+                for (dst, src) in q_scaled.iter_mut().zip(q) {
+                    *dst = *src * inv;
+                }
+                self.instances
+                    .iter()
+                    .zip(loads)
+                    .map(|(inst, loads_s)| {
+                        let (id, w) = inst.func.hash_point(&q_scaled, &self.family, self.mode);
+                        inst.table.lookup(id).map(|b| w as f64 * loads_s[b as usize])
+                    })
+                    .collect()
+            })
+            .collect()
     }
 
     /// One instance's additive mat-vec contribution (the pre-fusion
@@ -905,6 +995,99 @@ mod tests {
         }
         // the trait accessor exposes the same values
         assert_eq!(KrrOperator::diag(&sk), Some(diag));
+    }
+
+    #[test]
+    fn range_builds_reproduce_the_full_build_exactly() {
+        // Shard constructor: instances [lo, hi) of a range build must be
+        // bit-identical to the same slice of the full build, including at
+        // non-block-aligned cuts.
+        let (n, d, m) = (120, 4, 20);
+        let x = random_x(31, n, d);
+        let src = crate::data::MatrixSource::new("mem", &x, d);
+        let spec: BucketSpec = "smooth2".parse().unwrap();
+        let full =
+            WlshSketch::build_source(&src, m, &spec, 7.0, 1.0, 32, IdMode::U64, 50, 2).unwrap();
+        for (lo, hi) in [(0usize, 7usize), (7, 16), (16, 20), (0, 20), (8, 16)] {
+            let part = WlshSketch::build_source_range(
+                &src,
+                m,
+                lo,
+                hi,
+                &spec,
+                7.0,
+                1.0,
+                32,
+                IdMode::U64,
+                17,
+                3,
+            )
+            .unwrap();
+            assert_eq!(part.m(), hi - lo);
+            for (k, inst) in part.instances.iter().enumerate() {
+                let want = &full.instances[lo + k];
+                assert_eq!(inst.weights, want.weights, "instance {} weights", lo + k);
+                assert_eq!(
+                    inst.table.bucket_of,
+                    want.table.bucket_of,
+                    "instance {} buckets",
+                    lo + k
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn block_partials_reassemble_into_the_exact_matvec() {
+        // Coordinator-side reduction contract: accumulate the raw block
+        // partials in global block order, then normalize once — must be
+        // bit-identical to matvec_threads at any thread count.
+        let (n, d, m) = (150, 3, 37); // m not a multiple of FUSE_BLOCK
+        let x = random_x(33, n, d);
+        let sk = WlshSketch::build(&x, n, d, m, "smooth2", 7.0, 1.0, 34);
+        let mut rng = Pcg64::new(35, 0);
+        let beta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let want = sk.matvec_serial(&beta);
+        for threads in [1usize, 3] {
+            let partials = sk.block_partials(&beta, threads);
+            assert_eq!(partials.len(), m.div_ceil(FUSE_BLOCK));
+            let mut out = vec![0.0f64; n];
+            for p in &partials {
+                for (o, v) in out.iter_mut().zip(p) {
+                    *o += *v;
+                }
+            }
+            let inv_m = 1.0 / m as f64;
+            for v in out.iter_mut() {
+                *v *= inv_m;
+            }
+            assert_eq!(out, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn predict_terms_reassemble_into_the_exact_prediction() {
+        let (n, d, m) = (90, 4, 11);
+        let x = random_x(37, n, d);
+        let sk = Arc::new(WlshSketch::build(&x, n, d, m, "rect", 2.0, 1.0, 38));
+        let mut rng = Pcg64::new(39, 0);
+        let beta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        // include a far query so at least one row has all-miss terms
+        let mut q = random_x(40, 12, d);
+        q[0] = 1e6;
+        let want = sk.clone().predictor(&beta).predict_threads(&q, 1);
+        let loads = sk.loads_all(&beta, 1);
+        let terms = sk.predict_terms(&loads, &q);
+        assert_eq!(terms.len(), 12);
+        let inv_m = 1.0 / m as f64;
+        for (qi, row) in terms.iter().enumerate() {
+            assert_eq!(row.len(), m);
+            let mut acc = 0.0f64;
+            for t in row.iter().flatten() {
+                acc += *t;
+            }
+            assert_eq!(acc * inv_m, want[qi], "query {qi}");
+        }
     }
 
     #[test]

@@ -3,6 +3,10 @@
 //! check every prediction bit-exactly against an in-process reference
 //! model, read stats, and require a clean, timely shutdown (exit 0).
 //! Also covers `--checkpoint-out` → `serve --model name=ckpt` routing.
+//! The client side drives everything through the typed wire protocol
+//! (`coordinator::proto`) — the same `Request`/`Response` types the
+//! server parses, so the test doubles as an over-the-wire round-trip
+//! check for the typed module.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
@@ -12,9 +16,9 @@ use std::time::{Duration, Instant};
 
 use wlsh_krr::api::MethodSpec;
 use wlsh_krr::config::KrrConfig;
+use wlsh_krr::coordinator::proto::{Request, Response, StatsReply};
 use wlsh_krr::coordinator::{Trainer, TrainedModel};
 use wlsh_krr::data::{synthetic_by_name, Dataset};
-use wlsh_krr::util::json::Json;
 
 /// Dataset/config flags shared by every binary invocation below.
 const FLAGS: [&str; 8] =
@@ -81,37 +85,45 @@ fn wait_with_timeout(child: &mut Child, dur: Duration) -> std::process::ExitStat
     }
 }
 
-fn row_json(x: &[f32], d: usize, qi: usize) -> String {
-    let feats: Vec<String> = x[qi * d..(qi + 1) * d].iter().map(|v| format!("{v}")).collect();
-    format!("[{}]", feats.join(","))
+fn row(x: &[f32], d: usize, qi: usize) -> Vec<f32> {
+    x[qi * d..(qi + 1) * d].to_vec()
+}
+
+fn send(conn: &mut TcpStream, req: &Request) {
+    writeln!(conn, "{}", req.to_line()).unwrap();
+}
+
+fn read_resp(reader: &mut BufReader<TcpStream>) -> Response {
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    Response::parse(line.trim_end()).unwrap_or_else(|e| panic!("bad reply {line:?}: {e}"))
 }
 
 fn read_pred(reader: &mut BufReader<TcpStream>) -> f64 {
-    let mut line = String::new();
-    reader.read_line(&mut line).unwrap();
-    Json::parse(&line)
-        .unwrap_or_else(|e| panic!("bad reply {line:?}: {e}"))
-        .get("pred")
-        .and_then(Json::as_f64)
-        .unwrap_or_else(|| panic!("no pred in {line:?}"))
+    match read_resp(reader) {
+        Response::Pred(p) => p,
+        other => panic!("expected a prediction, got {other:?}"),
+    }
 }
 
-fn request_stats(addr: &str) -> Json {
+fn request_stats(addr: &str) -> StatsReply {
     let mut conn = TcpStream::connect(addr).unwrap();
     let mut reader = BufReader::new(conn.try_clone().unwrap());
-    writeln!(conn, "{{\"cmd\": \"stats\"}}").unwrap();
-    let mut line = String::new();
-    reader.read_line(&mut line).unwrap();
-    Json::parse(&line).unwrap_or_else(|e| panic!("bad stats {line:?}: {e}"))
+    send(&mut conn, &Request::Stats);
+    match read_resp(&mut reader) {
+        Response::Stats(s) => s,
+        other => panic!("expected stats, got {other:?}"),
+    }
 }
 
 fn shutdown_and_expect_exit_0(mut child: Child, addr: &str) {
     let mut conn = TcpStream::connect(addr).unwrap();
     let mut reader = BufReader::new(conn.try_clone().unwrap());
-    writeln!(conn, "{{\"cmd\": \"shutdown\"}}").unwrap();
-    let mut line = String::new();
-    reader.read_line(&mut line).unwrap();
-    assert!(line.contains("ok"), "{line}");
+    send(&mut conn, &Request::Shutdown);
+    match read_resp(&mut reader) {
+        Response::Ok { .. } => {}
+        other => panic!("expected shutdown ack, got {other:?}"),
+    }
     drop(conn);
     let status = wait_with_timeout(&mut child, Duration::from_secs(30));
     assert!(status.success(), "serve exited with {status:?}");
@@ -148,9 +160,11 @@ fn serve_binary_survives_concurrent_mixed_load_then_exits_cleanly() {
                     if r % 4 == 3 {
                         let idxs: Vec<usize> =
                             (0..4).map(|k| (c * 7919 + r * 13 + k) % nq).collect();
-                        let rows: Vec<String> =
-                            idxs.iter().map(|&qi| row_json(te_x, d, qi)).collect();
-                        writeln!(conn, "{{\"batch\": [{}]}}", rows.join(",")).unwrap();
+                        let req = Request::Batch {
+                            rows: idxs.iter().map(|&qi| row(te_x, d, qi)).collect(),
+                            model: None,
+                        };
+                        send(&mut conn, &req);
                         for &qi in &idxs {
                             let got = read_pred(&mut reader);
                             assert!(
@@ -161,7 +175,9 @@ fn serve_binary_survives_concurrent_mixed_load_then_exits_cleanly() {
                         }
                     } else {
                         let qi = (c * 7919 + r * 13) % nq;
-                        writeln!(conn, "{{\"features\": {}}}", row_json(te_x, d, qi)).unwrap();
+                        let req =
+                            Request::Predict { features: row(te_x, d, qi), model: None };
+                        send(&mut conn, &req);
                         let got = read_pred(&mut reader);
                         assert!(
                             got == want[qi],
@@ -176,18 +192,21 @@ fn serve_binary_survives_concurrent_mixed_load_then_exits_cleanly() {
     // stats: exact served accounting, sane percentiles, zero rejects
     let stats = request_stats(&addr);
     let total = clients * rows_per_client;
-    assert_eq!(stats.get("served").and_then(Json::as_usize), Some(total));
-    assert_eq!(stats.get("rejected").and_then(Json::as_usize), Some(0));
-    assert_eq!(stats.get("workers").and_then(Json::as_usize), Some(2));
-    let p50 = stats.get("p50_us").and_then(Json::as_f64).unwrap();
-    let p95 = stats.get("p95_us").and_then(Json::as_f64).unwrap();
-    let p99 = stats.get("p99_us").and_then(Json::as_f64).unwrap();
-    assert!(p50 > 0.0 && p50 <= p95 && p95 <= p99, "percentiles {p50}/{p95}/{p99}");
+    assert_eq!(stats.served, total);
+    assert_eq!(stats.rejected, 0);
+    assert_eq!(stats.workers, 2);
+    assert!(
+        stats.p50_us > 0.0 && stats.p50_us <= stats.p95_us && stats.p95_us <= stats.p99_us,
+        "percentiles {}/{}/{}",
+        stats.p50_us,
+        stats.p95_us,
+        stats.p99_us
+    );
     let per_model = stats
-        .get("models")
-        .and_then(|m| m.get("default"))
-        .and_then(|m| m.get("served"))
-        .and_then(Json::as_usize);
+        .models
+        .iter()
+        .find(|(name, _)| name == "default")
+        .map(|(_, m)| m.served);
     assert_eq!(per_model, Some(total));
     shutdown_and_expect_exit_0(child, &addr);
 }
@@ -214,19 +233,26 @@ fn serve_binary_routes_to_named_checkpoints_from_model_flag() {
     let mut reader = BufReader::new(conn.try_clone().unwrap());
     for (qi, w) in want.iter().enumerate() {
         // routed explicitly by name
-        writeln!(conn, "{{\"features\": {}, \"model\": \"main\"}}", row_json(&te.x, d, qi))
-            .unwrap();
+        let req = Request::Predict {
+            features: row(&te.x, d, qi),
+            model: Some("main".to_string()),
+        };
+        send(&mut conn, &req);
         let got = read_pred(&mut reader);
         assert!(got == *w, "row {qi}: {got} vs {w}");
     }
     // a single registered model also serves bare requests...
-    writeln!(conn, "{{\"features\": {}}}", row_json(&te.x, d, 0)).unwrap();
+    send(&mut conn, &Request::Predict { features: row(&te.x, d, 0), model: None });
     assert!(read_pred(&mut reader) == want[0]);
     // ...and unknown names are a clean error
-    writeln!(conn, "{{\"features\": {}, \"model\": \"nope\"}}", row_json(&te.x, d, 0)).unwrap();
-    let mut line = String::new();
-    reader.read_line(&mut line).unwrap();
-    assert!(line.contains("error") && line.contains("nope"), "{line}");
+    send(
+        &mut conn,
+        &Request::Predict { features: row(&te.x, d, 0), model: Some("nope".to_string()) },
+    );
+    match read_resp(&mut reader) {
+        Response::Error(msg) => assert!(msg.contains("nope"), "{msg}"),
+        other => panic!("expected an error, got {other:?}"),
+    }
     drop(conn);
     shutdown_and_expect_exit_0(child, &addr);
     std::fs::remove_file(&ckpt).ok();

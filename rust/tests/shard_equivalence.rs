@@ -1,0 +1,187 @@
+//! The sharded solve's correctness contract: for every shard count and
+//! every worker-thread count, the distributed CG produces a β (and
+//! predictions) **bit-identical** to the single-process solve — raw
+//! block partials reduced in global block order, normalized once. And
+//! its failure contract: a dead or unreachable shard surfaces as a
+//! typed [`KrrError::Shard`] within the connection timeout — no hang,
+//! no partial result.
+//!
+//! Workers run two ways here: in-thread (`run_worker` on a std thread,
+//! addressed through a `remote(...)` topology — fast, no process spawn)
+//! and as real `wlsh-krr shard-worker` child processes (the
+//! `shards(n=N)` local-spawn path and the kill tests).
+
+use std::io::{BufRead, BufReader};
+use std::net::TcpListener;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use wlsh_krr::api::{KrrError, MethodSpec, TopologySpec};
+use wlsh_krr::config::KrrConfig;
+use wlsh_krr::coordinator::{run_worker, ShardedOperator, Trainer};
+use wlsh_krr::data::{synthetic_by_name, Dataset};
+use wlsh_krr::sketch::KrrOperator;
+
+fn dataset() -> (Dataset, Dataset) {
+    let mut ds = synthetic_by_name("wine", Some(240), 11).expect("dataset");
+    ds.standardize();
+    ds.split(180, 11)
+}
+
+fn config(workers: usize) -> KrrConfig {
+    KrrConfig {
+        method: MethodSpec::Wlsh,
+        budget: 24, // 3 FUSE_BLOCKs: a 4-shard plan includes an empty shard
+        scale: 3.0,
+        lambda: 0.5,
+        seed: 11,
+        workers,
+        ..Default::default()
+    }
+}
+
+/// Start `n` in-thread shard workers on ephemeral ports; returns their
+/// addresses in shard order. The threads serve until process exit.
+fn spawn_thread_workers(n: usize) -> Vec<String> {
+    let (tx, rx) = mpsc::channel();
+    for _ in 0..n {
+        let tx = tx.clone();
+        std::thread::spawn(move || run_worker("127.0.0.1:0", Some(tx)).unwrap());
+    }
+    (0..n).map(|_| rx.recv().expect("worker announced its address")).collect()
+}
+
+/// Spawn a real `shard-worker` child process and scrape its address.
+fn spawn_process_worker() -> (Child, String) {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_wlsh-krr"))
+        .args(["shard-worker", "--addr", "127.0.0.1:0"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawn wlsh-krr shard-worker");
+    let stdout = child.stdout.take().unwrap();
+    let mut reader = BufReader::new(stdout);
+    let addr = loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).expect("read worker stdout");
+        assert!(n > 0, "worker exited before announcing its address");
+        if let Some(rest) = line.trim_end().strip_prefix("shard listening on ") {
+            break rest.to_string();
+        }
+    };
+    (child, addr)
+}
+
+#[test]
+fn sharded_beta_and_predictions_match_single_process_bit_for_bit() {
+    let (tr, te) = dataset();
+    for workers in [1usize, 2] {
+        let reference = Trainer::new(config(workers)).train(&tr).expect("local train");
+        let want_beta = reference.beta.clone();
+        let want_pred = reference.predict(&te.x);
+        for shards in [1usize, 2, 4] {
+            let mut cfg = config(workers);
+            cfg.topology = TopologySpec::Remote { addrs: spawn_thread_workers(shards) };
+            let model = Trainer::new(cfg).train(&tr).expect("sharded train");
+            assert_eq!(
+                model.beta, want_beta,
+                "beta diverged at shards={shards} workers={workers}"
+            );
+            // predictions fan out through the sharded predictor; must
+            // also be exact (read before the next train rebuilds state)
+            let pred = model.predict(&te.x);
+            assert_eq!(
+                pred, want_pred,
+                "predictions diverged at shards={shards} workers={workers}"
+            );
+        }
+    }
+}
+
+#[test]
+fn locally_spawned_shard_processes_reproduce_the_local_beta() {
+    // tests run from a harness binary in target/*/deps; point the
+    // spawner at the real CLI binary cargo built for us
+    std::env::set_var("WLSH_SHARD_BIN", env!("CARGO_BIN_EXE_wlsh-krr"));
+    let (tr, te) = dataset();
+    let reference = Trainer::new(config(1)).train(&tr).expect("local train");
+    let mut cfg = config(1);
+    cfg.topology = TopologySpec::Shards { n: 2 };
+    let model = Trainer::new(cfg).train(&tr).expect("process-sharded train");
+    assert_eq!(model.beta, reference.beta, "beta diverged across processes");
+    let nq = te.d * 8;
+    assert_eq!(
+        model.predict(&te.x[..nq]),
+        reference.predict(&te.x[..nq]),
+        "predictions diverged across processes"
+    );
+    // model drop tears the worker processes down here
+}
+
+#[test]
+fn killed_shard_latches_a_typed_error_without_hanging() {
+    let (tr, _) = dataset();
+    let (mut child0, addr0) = spawn_process_worker();
+    let (mut child1, addr1) = spawn_process_worker();
+    let mut cfg = config(1);
+    cfg.topology = TopologySpec::Remote { addrs: vec![addr0, addr1.clone()] };
+    let op = ShardedOperator::build(&cfg, &tr.x, tr.n, tr.d).expect("sharded build");
+
+    // healthy: a mat-vec against both shards produces real numbers
+    let beta = vec![1.0f64; tr.n];
+    let y = op.matvec(&beta);
+    assert!(y.iter().any(|v| *v != 0.0), "healthy matvec returned zeros");
+    assert!(op.failure().is_none());
+
+    // kill shard 1 and mat-vec again: the failure must latch within the
+    // read budget (a dead peer resets the socket — this takes
+    // microseconds, not the 120s wedge timeout), naming the shard
+    child1.kill().expect("kill shard 1");
+    child1.wait().expect("reap shard 1");
+    let t0 = Instant::now();
+    let y2 = op.matvec(&beta);
+    let elapsed = t0.elapsed();
+    assert!(y2.iter().all(|v| *v == 0.0), "failed matvec must not return partials");
+    match op.failure() {
+        Some(KrrError::Shard(msg)) => {
+            assert!(msg.contains(&addr1), "error names the wrong shard: {msg}")
+        }
+        other => panic!("expected a latched KrrError::Shard, got {other:?}"),
+    }
+    assert!(elapsed < Duration::from_secs(10), "failure took {elapsed:?} to surface");
+
+    // latched: subsequent mat-vecs short-circuit instantly
+    let t1 = Instant::now();
+    let y3 = op.matvec(&beta);
+    assert!(y3.iter().all(|v| *v == 0.0));
+    assert!(t1.elapsed() < Duration::from_secs(1));
+
+    drop(op);
+    // shard 0 is a remote worker (not ours to stop); reap it explicitly
+    child0.kill().ok();
+    child0.wait().ok();
+}
+
+#[test]
+fn unreachable_shard_fails_the_train_quickly_with_a_typed_error() {
+    // an address nothing listens on: bind, read the port, drop the
+    // listener. Shrink the connect budget so the test stays fast.
+    std::env::set_var("WLSH_SHARD_CONNECT_MS", "500");
+    let port = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().port()
+    };
+    let (tr, _) = dataset();
+    let mut cfg = config(1);
+    cfg.topology = TopologySpec::Remote { addrs: vec![format!("127.0.0.1:{port}")] };
+    let t0 = Instant::now();
+    let res = Trainer::new(cfg).train(&tr);
+    let elapsed = t0.elapsed();
+    std::env::remove_var("WLSH_SHARD_CONNECT_MS");
+    match res {
+        Err(KrrError::Shard(msg)) => assert!(msg.contains("connect"), "{msg}"),
+        other => panic!("expected KrrError::Shard, got {:?}", other.map(|m| m.report)),
+    }
+    assert!(elapsed < Duration::from_secs(30), "dead-shard train took {elapsed:?}");
+}

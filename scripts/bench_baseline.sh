@@ -55,6 +55,13 @@ extract() {
             n = num($0, "n")
             if ((v = num($0, "wlsh_sparse_secs")) != "") print "matvec.wlsh_sparse_secs.n" n, v
             if ((v = num($0, "rff_sparse_secs")) != "")  print "matvec.rff_sparse_secs.n" n, v
+        } else if (series == "sharded_solve") {
+            # end-to-end train seconds through the sharded (wire-protocol)
+            # path vs the single-process solve, keyed by shard count
+            s = num($0, "shards")
+            if (s == "") next
+            if ((v = num($0, "sharded_secs")) != "")     print "solve.sharded_secs.s" s, v
+            if ((v = num($0, "local_solve_secs")) != "") print "solve.local_secs.s" s, v
         }
         next
     }
