@@ -262,6 +262,70 @@ fn main() {
         );
     }
 
+    // Warm vs cold re-solve: fit on the head of the dataset, append a
+    // small tail through the online trainer, and compare CG iteration
+    // counts — the warm solve starts from the previous β zero-padded for
+    // the new rows, the cold solve from zero. ColdExact mode runs both
+    // against the identical appended system, so the counts are directly
+    // comparable (and deterministic: fixed seeds, fixed reduction order).
+    {
+        use wlsh_krr::api::MethodSpec;
+        use wlsh_krr::config::KrrConfig;
+        use wlsh_krr::data::{synthetic_by_name, Dataset};
+        use wlsh_krr::online::OnlineTrainer;
+        let wn = by_scale(2048, 8192, 32768);
+        let tail_rows = wn / 32;
+        let mut ds = synthetic_by_name("wine", Some(wn), 7).expect("bench dataset");
+        ds.standardize();
+        let cut = wn - tail_rows;
+        // order-preserving head/tail cut (Dataset::split shuffles)
+        let head = Dataset::new(
+            "head",
+            ds.x[..cut * ds.d].to_vec(),
+            ds.y[..cut].to_vec(),
+            ds.d,
+        );
+        let cfg = KrrConfig {
+            method: MethodSpec::Wlsh,
+            budget: 32,
+            scale: 3.0,
+            lambda: 0.5,
+            seed: 7,
+            cg_max_iters: 400,
+            cg_tol: 1e-8,
+            ..Default::default()
+        };
+        let mut online = OnlineTrainer::fit(cfg, &head).expect("online fit");
+        let t0 = std::time::Instant::now();
+        let (report, _) = online
+            .append(&ds.x[cut * ds.d..], &ds.y[cut..])
+            .expect("online append");
+        let update_secs = t0.elapsed().as_secs_f64();
+        let cold = report.cold_iters.expect("ColdExact measures both solves");
+        println!("\n=== warm vs cold re-solve (n={wn}, +{tail_rows} rows, m=32) ===\n");
+        let tw = Table::new(&[("resolve", 8), ("cg iters", 9)]);
+        tw.row(&["warm".into(), report.warm_iters.to_string()]);
+        tw.row(&["cold".into(), cold.to_string()]);
+        println!(
+            "\n(append + both re-solves took {update_secs:.3}s; the warm start\n\
+             saves {} of {cold} iterations because the appended system differs\n\
+             from the already-solved one by only {tail_rows} rows, leaving the\n\
+             previous β near the new solution)",
+            cold.saturating_sub(report.warm_iters)
+        );
+        record(
+            "matvec",
+            &JsonWriter::object()
+                .field_str("series", "warm_vs_cold_resolve")
+                .field_usize("n", wn)
+                .field_usize("appended", tail_rows)
+                .field_usize("warm_iters", report.warm_iters)
+                .field_usize("cold_iters", cold)
+                .field_f64("update_secs", update_secs)
+                .finish(),
+        );
+    }
+
     // XLA-backend mat-vec comparison at a fixed shape (if artifacts exist)
     match Runtime::open_default() {
         Ok(rt) => {

@@ -48,6 +48,16 @@ pub trait BatchPredict: Send + Sync {
         }
         self.predict_rows(&rows, out);
     }
+
+    /// One (prediction, posterior variance) pair per feature row. The
+    /// default declines (`None`): only models carrying a variance
+    /// estimator — [`TrainedModel`] via
+    /// [`predict_with_var`](TrainedModel::predict_with_var) — answer
+    /// `"var":true` requests.
+    fn predict_rows_with_var(&self, rows: &[f32], out: &mut [f64], var: &mut [f64]) -> Option<()> {
+        let _ = (rows, out, var);
+        None
+    }
 }
 
 impl BatchPredict for TrainedModel {
@@ -58,6 +68,10 @@ impl BatchPredict for TrainedModel {
     fn predict_sparse_rows(&self, d: usize, queries: SparseChunk<'_>, out: &mut [f64]) {
         assert_eq!(d, self.dim(), "sparse query dimensionality mismatch");
         self.predict_sparse_into(&queries, out)
+    }
+
+    fn predict_rows_with_var(&self, rows: &[f32], out: &mut [f64], var: &mut [f64]) -> Option<()> {
+        self.predict_with_var(rows, out, var)
     }
 }
 
@@ -70,13 +84,23 @@ pub enum RowBlock {
     Sparse { d: usize, indptr: Vec<usize>, indices: Vec<u32>, values: Vec<f32> },
 }
 
+/// A served item's answer: one prediction per row, plus one posterior
+/// variance per row when the item asked for them (`vars` stays `None`
+/// for plain items, and for `"var":true` items whose model declines).
+pub struct PoolReply {
+    pub preds: Vec<f64>,
+    pub vars: Option<Vec<f64>>,
+}
+
 /// One queued request: `nrows` feature rows bound for `model`, and the
 /// channel to answer on (one prediction per row).
 pub struct BatchItem {
     pub rows: RowBlock,
     pub nrows: usize,
     pub model: Arc<dyn BatchPredict>,
-    pub reply: Sender<Vec<f64>>,
+    /// Answer with posterior variances too (served unfused, like sparse).
+    pub want_var: bool,
+    pub reply: Sender<PoolReply>,
 }
 
 /// Why a submit did not enter the queue.
@@ -202,8 +226,36 @@ impl WorkerPool {
         nrows: usize,
     ) -> Result<Vec<f64>, SubmitError> {
         let (reply, rx) = mpsc::channel();
-        self.submit(BatchItem { rows: RowBlock::Dense(rows), nrows, model, reply })?;
-        rx.recv().map_err(|_| SubmitError::WorkerGone)
+        self.submit(BatchItem {
+            rows: RowBlock::Dense(rows),
+            nrows,
+            model,
+            want_var: false,
+            reply,
+        })?;
+        rx.recv().map(|r| r.preds).map_err(|_| SubmitError::WorkerGone)
+    }
+
+    /// Like [`predict`](Self::predict), but also asks for one posterior
+    /// variance per row. The variance half is `None` when the model
+    /// declines (no estimator attached — e.g. a raw [`BatchPredict`]
+    /// stub, or an operator without a cross-kernel); the caller decides
+    /// whether that is an error.
+    pub fn predict_with_var(
+        &self,
+        model: Arc<dyn BatchPredict>,
+        rows: Vec<f32>,
+        nrows: usize,
+    ) -> Result<(Vec<f64>, Option<Vec<f64>>), SubmitError> {
+        let (reply, rx) = mpsc::channel();
+        self.submit(BatchItem {
+            rows: RowBlock::Dense(rows),
+            nrows,
+            model,
+            want_var: true,
+            reply,
+        })?;
+        rx.recv().map(|r| (r.preds, r.vars)).map_err(|_| SubmitError::WorkerGone)
     }
 
     /// Submit an owned CSR block of query rows and block until it is
@@ -223,9 +275,10 @@ impl WorkerPool {
             rows: RowBlock::Sparse { d, indptr, indices, values },
             nrows,
             model,
+            want_var: false,
             reply,
         })?;
-        rx.recv().map_err(|_| SubmitError::WorkerGone)
+        rx.recv().map(|r| r.preds).map_err(|_| SubmitError::WorkerGone)
     }
 
     /// Deterministic shutdown: stop admitting, wake every worker, and join
@@ -337,6 +390,28 @@ impl Shared {
         let is_dense = |it: &BatchItem| matches!(it.rows, RowBlock::Dense(_));
         let mut i = 0;
         while i < pending.len() {
+            // Variance items are served one per call: the per-row Lanczos
+            // solve dominates, so fusing request boundaries buys nothing,
+            // and the reply shape differs from the fused path's.
+            if pending[i].want_var {
+                let it = &pending[i];
+                preds.clear();
+                preds.resize(it.nrows, 0.0);
+                let mut vars = vec![0.0f64; it.nrows];
+                let supported = match &it.rows {
+                    RowBlock::Dense(r) => {
+                        it.model.predict_rows_with_var(r, preds, &mut vars).is_some()
+                    }
+                    // the wire has no sparse+var form; decline cleanly
+                    RowBlock::Sparse { .. } => false,
+                };
+                let _ = it.reply.send(PoolReply {
+                    preds: preds.clone(),
+                    vars: if supported { Some(vars) } else { None },
+                });
+                i += 1;
+                continue;
+            }
             // Sparse items are served one per call — CSR blocks would need
             // an offset-shifting concatenation to fuse, and each row's
             // prediction is independent anyway, so fusing buys nothing
@@ -346,7 +421,7 @@ impl Shared {
                 preds.resize(pending[i].nrows, 0.0);
                 let sp = SparseChunk { indptr, indices, values };
                 pending[i].model.predict_sparse_rows(*d, sp, preds);
-                let _ = pending[i].reply.send(preds.clone());
+                let _ = pending[i].reply.send(PoolReply { preds: preds.clone(), vars: None });
                 i += 1;
                 continue;
             }
@@ -355,6 +430,7 @@ impl Shared {
             while j < pending.len()
                 && std::ptr::eq(model_id(&pending[j]), model_id(&pending[i]))
                 && is_dense(&pending[j])
+                && !pending[j].want_var
                 && total + pending[j].nrows <= self.max_batch
             {
                 total += pending[j].nrows;
@@ -372,7 +448,10 @@ impl Shared {
             let mut off = 0;
             for it in &pending[i..j] {
                 // receiver may have gone away; losing that send is fine
-                let _ = it.reply.send(preds[off..off + it.nrows].to_vec());
+                let _ = it.reply.send(PoolReply {
+                    preds: preds[off..off + it.nrows].to_vec(),
+                    vars: None,
+                });
                 off += it.nrows;
             }
             i = j;
@@ -470,6 +549,7 @@ mod tests {
             rows: RowBlock::Dense(vec![2.0]),
             nrows: 1,
             model: model.clone(),
+            want_var: false,
             reply,
         })
         .expect("first queued item fits");
@@ -480,12 +560,13 @@ mod tests {
                 rows: RowBlock::Dense(vec![3.0]),
                 nrows: 1,
                 model: model.clone(),
+                want_var: false,
                 reply: reply2,
             })
             .unwrap_err();
         assert_eq!(err, SubmitError::Overloaded);
         assert_eq!(busy.join().unwrap(), vec![1.0]);
-        assert_eq!(rx_queued.recv().unwrap(), vec![2.0]);
+        assert_eq!(rx_queued.recv().unwrap().preds, vec![2.0]);
         pool.shutdown();
     }
 
@@ -501,6 +582,7 @@ mod tests {
                 rows: RowBlock::Dense(vec![i as f32]),
                 nrows: 1,
                 model: model.clone(),
+                want_var: false,
                 reply,
             })
             .unwrap();
@@ -508,7 +590,7 @@ mod tests {
         }
         pool.shutdown(); // must drain all 5, then join
         for (i, rx) in rxs.into_iter().enumerate() {
-            assert_eq!(rx.recv().unwrap(), vec![i as f64], "item {i} lost in shutdown");
+            assert_eq!(rx.recv().unwrap().preds, vec![i as f64], "item {i} lost in shutdown");
         }
         // double shutdown is a no-op
         pool.shutdown();
@@ -607,6 +689,47 @@ mod tests {
             .predict_sparse(model, 3, vec![0, 2, 3], vec![0, 2, 1], vec![4.0, 1.0, 2.0])
             .unwrap();
         assert_eq!(y, vec![8.0, 0.0]);
+        pool.shutdown();
+    }
+
+    /// echoes rows; variance = row value + 0.5.
+    struct VarEcho;
+
+    impl BatchPredict for VarEcho {
+        fn predict_rows(&self, rows: &[f32], out: &mut [f64]) {
+            for (r, o) in rows.iter().zip(out) {
+                *o = *r as f64;
+            }
+        }
+
+        fn predict_rows_with_var(
+            &self,
+            rows: &[f32],
+            out: &mut [f64],
+            var: &mut [f64],
+        ) -> Option<()> {
+            self.predict_rows(rows, out);
+            for (r, v) in rows.iter().zip(var) {
+                *v = *r as f64 + 0.5;
+            }
+            Some(())
+        }
+    }
+
+    #[test]
+    fn var_items_flow_through_unfused_and_plain_models_decline() {
+        let with_var: Arc<dyn BatchPredict> = Arc::new(VarEcho);
+        let plain: Arc<dyn BatchPredict> = Arc::new(Sleeper { ms: 0 });
+        let pool = WorkerPool::spawn(2, 64, 8, Duration::from_millis(2));
+        let (preds, vars) = pool.predict_with_var(with_var.clone(), vec![3.0, -1.0], 2).unwrap();
+        assert_eq!(preds, vec![3.0, -1.0]);
+        assert_eq!(vars, Some(vec![3.5, -0.5]));
+        // a model without an estimator declines but still predicts
+        let (preds, vars) = pool.predict_with_var(plain, vec![7.0], 1).unwrap();
+        assert_eq!(vars, None);
+        assert_eq!(preds.len(), 1);
+        // the plain path through the same model stays untouched
+        assert_eq!(pool.predict(with_var, vec![4.0], 1).unwrap(), vec![4.0]);
         pool.shutdown();
     }
 

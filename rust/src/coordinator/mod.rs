@@ -16,7 +16,7 @@ mod server;
 pub mod shard;
 mod trainer;
 
-pub use batcher::{BatchItem, BatchPredict, RowBlock, SubmitError, WorkerPool};
+pub use batcher::{BatchItem, BatchPredict, PoolReply, RowBlock, SubmitError, WorkerPool};
 pub use registry::{ModelLoader, ModelRegistry, ModelStats, DEFAULT_MODEL};
 pub use router::PredictRouter;
 pub use server::{serve, ServerConfig, ServerStats};

@@ -18,6 +18,19 @@
 //! → {"cmd": "shutdown"}                           ← {"ok": "true"}
 //! ```
 //!
+//! Online-learning and uncertainty extensions: predict/batch accept an
+//! optional `"var": true` flag (answered with `{"pred":…,"var":…}` lines
+//! carrying the sketched posterior variance), and `append` streams new
+//! training rows into a model's online trainer:
+//!
+//! ```text
+//! → {"features": [...], "var": true}              ← {"pred": ..., "var": ...}
+//! → {"batch": [[...],...], "var": true}           ← one {"pred":…,"var":…} line per row
+//! → {"cmd": "append", "rows": [[f32...],...], "targets": [f64...], "model"?: "m"}
+//!           ← {"appended": k, "n": n, "generation": g, "last_update": ts,
+//!              "warm_iters": w, "cold_iters": c|null}
+//! ```
+//!
 //! Shard operations (new verbs under the same `"cmd"` key; the
 //! coordinator is the only client):
 //!
@@ -30,6 +43,10 @@
 //!                                   ← {"shard": {...}}
 //! → {"cmd": "shard-predict", "rows": [[f32...],...]}
 //!                                   ← {"query_partials": [[f64|null,...],...]}
+//! → {"cmd": "shard-append", "x": [f32...]}
+//!                                   ← {"shard": {...}}
+//! → {"cmd": "shard-cross", "row": [f32...]}
+//!                                   ← {"cross_kxx": [f64...], "cross_blocks": [[f64...],...]}
 //! → {"cmd": "shard-info"}           ← {"shard": {...}}
 //! ```
 //!
@@ -53,10 +70,12 @@ use std::fmt::Write as _;
 /// One parsed protocol request line.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
-    /// Predict one dense feature row.
-    Predict { features: Vec<f32>, model: Option<String> },
-    /// Predict a batch of dense rows (one reply line per row).
-    Batch { rows: Vec<Vec<f32>>, model: Option<String> },
+    /// Predict one dense feature row. `var` asks for the sketched
+    /// posterior variance alongside the point prediction.
+    Predict { features: Vec<f32>, model: Option<String>, var: bool },
+    /// Predict a batch of dense rows (one reply line per row). `var` asks
+    /// for per-row variance.
+    Batch { rows: Vec<Vec<f32>>, model: Option<String>, var: bool },
     /// Predict one sparse row given as `[index, value]` pairs.
     Sparse { pairs: Vec<(usize, f64)>, model: Option<String> },
     /// Server-wide serving statistics.
@@ -66,6 +85,9 @@ pub enum Request {
     Reload { model: Option<String>, path: String },
     /// Stop accepting connections and drain.
     Shutdown,
+    /// Append training rows to `model`'s online trainer and re-solve
+    /// (requires an attached [`crate::online::OnlineTrainer`]).
+    Append { model: Option<String>, rows: Vec<Vec<f32>>, targets: Vec<f64> },
     /// Build this worker's instance range of the WLSH sketch.
     ShardBuild(ShardBuild),
     /// Raw per-block mat-vec partials for the coordinator's CG step.
@@ -74,6 +96,13 @@ pub enum Request {
     ShardLoadBeta { beta: Vec<f64> },
     /// Raw per-instance prediction terms for a query batch.
     ShardPredict { rows: Vec<Vec<f32>> },
+    /// Hash additional training rows (row-major, the worker's `d`) into
+    /// this worker's instance range, resuming the incremental build.
+    ShardAppend { x: Vec<f32> },
+    /// Raw per-block cross-kernel partials `(Σ w_s(q)², unnormalized
+    /// k̃_q-contribution)` for one query row — the distributed half of
+    /// `WlshSketch::cross_vector`.
+    ShardCross { row: Vec<f32> },
     /// Describe the worker's current shard state.
     ShardInfo,
 }
@@ -106,12 +135,27 @@ pub struct ShardBuild {
 pub enum Response {
     /// One prediction.
     Pred(f64),
+    /// One prediction plus its sketched posterior variance (reply to a
+    /// `"var": true` predict/batch).
+    PredVar { pred: f64, var: f64 },
     /// Command acknowledged (`reload` echoes the swapped model name).
     Ok { model: Option<String> },
     /// Request-level failure (the connection stays open).
     Error(String),
     /// Server-wide serving statistics.
     Stats(StatsReply),
+    /// Online append acknowledged: rows accepted, new training-set size,
+    /// the slot's post-swap generation / last-update stamp, and the CG
+    /// iteration counts of the warm (and, in `ColdExact` mode, cold)
+    /// re-solves.
+    Appended {
+        appended: usize,
+        n: usize,
+        generation: usize,
+        last_update: usize,
+        warm_iters: usize,
+        cold_iters: Option<usize>,
+    },
     /// Shard worker state (reply to build / load-beta / info).
     ShardReady(ShardReady),
     /// Raw per-FUSE_BLOCK mat-vec partial vectors, in local block order,
@@ -123,6 +167,11 @@ pub enum Response {
     /// miss (skipped, not added as 0.0, so coordinator-side accumulation
     /// replays the single-process chain exactly).
     PredictPartials(Vec<Vec<Option<f64>>>),
+    /// Per-FUSE_BLOCK cross-kernel partials `(kxx_partial, unnormalized
+    /// vector)`, in local block order, without the 1/m normalization —
+    /// the coordinator concatenates shard replies in shard order (= the
+    /// global block order) and normalizes once.
+    CrossPartials(Vec<(f64, Vec<f64>)>),
 }
 
 /// Shard worker state echoed after `shard-build`/`shard-load-beta`, and
@@ -164,6 +213,10 @@ pub struct ModelStatsReply {
     pub p50_us: f64,
     pub p95_us: f64,
     pub p99_us: f64,
+    /// Monotonic model version (1 = first registration; +1 per swap).
+    pub generation: usize,
+    /// Unix seconds of the most recent swap into the slot (0 = never).
+    pub last_update: usize,
 }
 
 // ---------------------------------------------------------------- helpers
@@ -296,6 +349,9 @@ impl Request {
     pub fn parse(line: &str) -> Result<Request, String> {
         let req = Json::parse(line)?;
         let model = req.get("model").and_then(Json::as_str).map(str::to_string);
+        // `"var": true` opts in; absent / false / anything else means no
+        // variance (legacy lines carry no "var" key at all)
+        let var = matches!(req.get("var"), Some(Json::Bool(true)));
         if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
             return match cmd {
                 "stats" => Ok(Request::Stats),
@@ -306,6 +362,21 @@ impl Request {
                         .and_then(Json::as_str)
                         .ok_or_else(|| "reload needs \"path\"".to_string())?;
                     Ok(Request::Reload { model, path: path.to_string() })
+                }
+                "append" => {
+                    let rows = f32_rows_field(&req, "rows")?;
+                    let targets = f64_vec_field(&req, "targets")?;
+                    if rows.is_empty() {
+                        return Err("append needs at least one row".to_string());
+                    }
+                    if rows.len() != targets.len() {
+                        return Err(format!(
+                            "append has {} rows but {} targets",
+                            rows.len(),
+                            targets.len()
+                        ));
+                    }
+                    Ok(Request::Append { model, rows, targets })
                 }
                 "shard-build" => Ok(Request::ShardBuild(ShardBuild {
                     n: usize_field(&req, "n")?,
@@ -330,6 +401,12 @@ impl Request {
                 "shard-predict" => {
                     Ok(Request::ShardPredict { rows: f32_rows_field(&req, "rows")? })
                 }
+                "shard-append" => {
+                    Ok(Request::ShardAppend { x: to_f32s(f64_vec_field(&req, "x")?) })
+                }
+                "shard-cross" => {
+                    Ok(Request::ShardCross { row: to_f32s(f64_vec_field(&req, "row")?) })
+                }
                 "shard-info" => Ok(Request::ShardInfo),
                 other => Err(format!("unknown cmd {other:?}")),
             };
@@ -342,14 +419,14 @@ impl Request {
                 .as_f64_vec()
                 .map(to_f32s)
                 .ok_or_else(|| "\"features\" must be an array of numbers".to_string())?;
-            return Ok(Request::Predict { features, model });
+            return Ok(Request::Predict { features, model, var });
         }
         if req.get("batch").is_some() {
             let rows = f32_rows_field(&req, "batch")?;
             if rows.is_empty() {
                 return Err("\"batch\" must contain at least one row".to_string());
             }
-            return Ok(Request::Batch { rows, model });
+            return Ok(Request::Batch { rows, model, var });
         }
         Err("need \"features\", \"batch\", or \"cmd\"".to_string())
     }
@@ -357,17 +434,23 @@ impl Request {
     /// Serialize to one wire line (no trailing newline).
     pub fn to_line(&self) -> String {
         match self {
-            Request::Predict { features, model } => {
+            Request::Predict { features, model, var } => {
                 let mut s = String::from("{\"features\":");
                 push_f32s(&mut s, features);
                 push_model(&mut s, model);
+                if *var {
+                    s.push_str(",\"var\":true");
+                }
                 s.push('}');
                 s
             }
-            Request::Batch { rows, model } => {
+            Request::Batch { rows, model, var } => {
                 let mut s = String::from("{\"batch\":");
                 push_f32_rows(&mut s, rows);
                 push_model(&mut s, model);
+                if *var {
+                    s.push_str(",\"var\":true");
+                }
                 s.push('}');
                 s
             }
@@ -388,6 +471,15 @@ impl Request {
             }
             Request::Stats => "{\"cmd\":\"stats\"}".to_string(),
             Request::Shutdown => "{\"cmd\":\"shutdown\"}".to_string(),
+            Request::Append { model, rows, targets } => {
+                let mut s = String::from("{\"cmd\":\"append\",\"rows\":");
+                push_f32_rows(&mut s, rows);
+                s.push_str(",\"targets\":");
+                push_f64s(&mut s, targets);
+                push_model(&mut s, model);
+                s.push('}');
+                s
+            }
             Request::Reload { model, path } => {
                 let mut s = String::from("{\"cmd\":\"reload\"");
                 push_model(&mut s, model);
@@ -441,6 +533,19 @@ impl Request {
                 s.push('}');
                 s
             }
+            Request::ShardAppend { x } => {
+                let mut s = String::with_capacity(x.len() * 8 + 32);
+                s.push_str("{\"cmd\":\"shard-append\",\"x\":");
+                push_f32s(&mut s, x);
+                s.push('}');
+                s
+            }
+            Request::ShardCross { row } => {
+                let mut s = String::from("{\"cmd\":\"shard-cross\",\"row\":");
+                push_f32s(&mut s, row);
+                s.push('}');
+                s
+            }
             Request::ShardInfo => "{\"cmd\":\"shard-info\"}".to_string(),
         }
     }
@@ -458,10 +563,32 @@ impl Response {
             return Ok(Response::Error(msg.to_string()));
         }
         if let Some(p) = j.get("pred") {
-            return p
+            let pred = p
                 .as_f64()
-                .map(Response::Pred)
-                .ok_or_else(|| "\"pred\" must be a number".to_string());
+                .ok_or_else(|| "\"pred\" must be a number".to_string())?;
+            if let Some(v) = j.get("var") {
+                let var = v
+                    .as_f64()
+                    .ok_or_else(|| "\"var\" must be a number".to_string())?;
+                return Ok(Response::PredVar { pred, var });
+            }
+            return Ok(Response::Pred(pred));
+        }
+        if j.get("appended").is_some() {
+            let cold_iters = match j.get("cold_iters") {
+                None | Some(Json::Null) => None,
+                Some(c) => Some(c.as_usize().ok_or_else(|| {
+                    "\"cold_iters\" must be a non-negative integer or null".to_string()
+                })?),
+            };
+            return Ok(Response::Appended {
+                appended: usize_field(&j, "appended")?,
+                n: usize_field(&j, "n")?,
+                generation: usize_field(&j, "generation")?,
+                last_update: usize_field(&j, "last_update")?,
+                warm_iters: usize_field(&j, "warm_iters")?,
+                cold_iters,
+            });
         }
         if let Some(sh) = j.get("shard") {
             return Ok(Response::ShardReady(ShardReady {
@@ -505,6 +632,28 @@ impl Response {
                 .collect::<Result<Vec<_>, _>>()?;
             return Ok(Response::PredictPartials(partials));
         }
+        if let Some(kb) = j.get("cross_blocks").and_then(Json::as_arr) {
+            let kxx = j
+                .get("cross_kxx")
+                .and_then(Json::as_f64_vec)
+                .ok_or_else(|| "\"cross_kxx\" must be an array of numbers".to_string())?;
+            if kxx.len() != kb.len() {
+                return Err(format!(
+                    "cross reply has {} kxx entries but {} blocks",
+                    kxx.len(),
+                    kb.len()
+                ));
+            }
+            let blocks = kb
+                .iter()
+                .enumerate()
+                .map(|(i, p)| {
+                    p.as_f64_vec()
+                        .ok_or_else(|| format!("cross block {i} must be an array of numbers"))
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            return Ok(Response::CrossPartials(kxx.into_iter().zip(blocks).collect()));
+        }
         if j.get("served").is_some() && j.get("workers").is_some() {
             return Ok(Response::Stats(stats_reply(&j)?));
         }
@@ -524,6 +673,22 @@ impl Response {
     pub fn to_line(&self) -> String {
         match self {
             Response::Pred(p) => JsonWriter::object().field_f64("pred", *p).finish(),
+            Response::PredVar { pred, var } => JsonWriter::object()
+                .field_f64("pred", *pred)
+                .field_f64("var", *var)
+                .finish(),
+            Response::Appended { appended, n, generation, last_update, warm_iters, cold_iters } => {
+                let w = JsonWriter::object()
+                    .field_usize("appended", *appended)
+                    .field_usize("n", *n)
+                    .field_usize("generation", *generation)
+                    .field_usize("last_update", *last_update)
+                    .field_usize("warm_iters", *warm_iters);
+                match cold_iters {
+                    Some(c) => w.field_usize("cold_iters", *c).finish(),
+                    None => w.field_raw("cold_iters", "null").finish(),
+                }
+            }
             Response::Ok { model } => {
                 let w = JsonWriter::object().field_str("ok", "true");
                 match model {
@@ -546,6 +711,8 @@ impl Response {
                             .field_f64("p50_us", m.p50_us)
                             .field_f64("p95_us", m.p95_us)
                             .field_f64("p99_us", m.p99_us)
+                            .field_usize("generation", m.generation)
+                            .field_usize("last_update", m.last_update)
                             .finish(),
                     );
                 }
@@ -607,6 +774,26 @@ impl Response {
                 s.push_str("]}");
                 s
             }
+            Response::CrossPartials(partials) => {
+                let mut s =
+                    String::with_capacity(partials.iter().map(|(_, p)| p.len() * 10).sum::<usize>() + 48);
+                s.push_str("{\"cross_kxx\":[");
+                for (i, (kxx, _)) in partials.iter().enumerate() {
+                    if i > 0 {
+                        s.push(',');
+                    }
+                    push_f64(&mut s, *kxx);
+                }
+                s.push_str("],\"cross_blocks\":[");
+                for (i, (_, p)) in partials.iter().enumerate() {
+                    if i > 0 {
+                        s.push(',');
+                    }
+                    push_f64s(&mut s, p);
+                }
+                s.push_str("]}");
+                s
+            }
         }
     }
 }
@@ -630,16 +817,20 @@ fn stats_reply(j: &Json) -> Result<StatsReply, String> {
                     .and_then(Json::as_f64)
                     .ok_or_else(|| format!("stats model {name:?} missing {k:?}"))
             };
+            let mu = |k: &str| {
+                m.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| format!("stats model {name:?} missing {k:?}"))
+            };
             models.push((
                 name.clone(),
                 ModelStatsReply {
-                    served: m
-                        .get("served")
-                        .and_then(Json::as_usize)
-                        .ok_or_else(|| format!("stats model {name:?} missing \"served\""))?,
+                    served: mu("served")?,
                     p50_us: mf("p50_us")?,
                     p95_us: mf("p95_us")?,
                     p99_us: mf("p99_us")?,
+                    generation: mu("generation")?,
+                    last_update: mu("last_update")?,
                 },
             ));
         }
@@ -707,18 +898,20 @@ mod tests {
             101,
             60,
             |r| {
-                let variant = r.below(9);
+                let variant = r.below(12);
                 let model = if r.below(2) == 0 { None } else { Some(name(r)) };
                 match variant {
                     0 => Request::Predict {
                         features: (0..r.below(6) + 1).map(|_| wild_f32(r)).collect(),
                         model,
+                        var: r.below(2) == 1,
                     },
                     1 => Request::Batch {
                         rows: (0..r.below(4) + 1)
                             .map(|_| (0..3).map(|_| wild_f32(r)).collect())
                             .collect(),
                         model,
+                        var: r.below(2) == 1,
                     },
                     2 => Request::Sparse {
                         pairs: (0..r.below(5))
@@ -746,10 +939,24 @@ mod tests {
                     7 => Request::ShardMatvec {
                         beta: (0..r.below(10) + 1).map(|_| wild_f64(r)).collect(),
                     },
-                    _ => Request::ShardPredict {
+                    8 => Request::ShardPredict {
                         rows: (0..r.below(4) + 1)
                             .map(|_| (0..2).map(|_| wild_f32(r)).collect())
                             .collect(),
+                    },
+                    9 => {
+                        let k = r.below(4) as usize + 1;
+                        Request::Append {
+                            model,
+                            rows: (0..k).map(|_| (0..2).map(|_| wild_f32(r)).collect()).collect(),
+                            targets: (0..k).map(|_| wild_f64(r)).collect(),
+                        }
+                    }
+                    10 => Request::ShardAppend {
+                        x: (0..r.below(12)).map(|_| wild_f32(r)).collect(),
+                    },
+                    _ => Request::ShardCross {
+                        row: (0..r.below(6) + 1).map(|_| wild_f32(r)).collect(),
                     },
                 }
             },
@@ -762,7 +969,7 @@ mod tests {
         prop_check(
             202,
             60,
-            |r| match r.below(6) {
+            |r| match r.below(9) {
                 0 => Response::Pred(wild_f64(r)),
                 1 => Response::Ok {
                     model: if r.below(2) == 0 { None } else { Some(name(r)) },
@@ -780,7 +987,7 @@ mod tests {
                         .map(|_| (0..r.below(6) + 1).map(|_| wild_f64(r)).collect())
                         .collect(),
                 ),
-                _ => Response::PredictPartials(
+                5 => Response::PredictPartials(
                     (0..r.below(4) + 1)
                         .map(|_| {
                             (0..r.below(6) + 1)
@@ -788,6 +995,29 @@ mod tests {
                                     if r.below(3) == 0 { None } else { Some(wild_f64(r)) }
                                 })
                                 .collect()
+                        })
+                        .collect(),
+                ),
+                6 => Response::PredVar { pred: wild_f64(r), var: wild_f64(r).abs() },
+                7 => Response::Appended {
+                    appended: r.below(100) as usize,
+                    n: r.below(100_000) as usize,
+                    generation: r.below(1000) as usize + 1,
+                    last_update: r.below(1 << 31) as usize,
+                    warm_iters: r.below(500) as usize,
+                    cold_iters: if r.below(2) == 0 {
+                        None
+                    } else {
+                        Some(r.below(500) as usize)
+                    },
+                },
+                _ => Response::CrossPartials(
+                    (0..r.below(4) + 1)
+                        .map(|_| {
+                            (
+                                wild_f64(r),
+                                (0..r.below(6) + 1).map(|_| wild_f64(r)).collect(),
+                            )
                         })
                         .collect(),
                 ),
@@ -811,11 +1041,25 @@ mod tests {
             models: vec![
                 (
                     "default".to_string(),
-                    ModelStatsReply { served: 12, p50_us: 10.0, p95_us: 30.5, p99_us: 99.25 },
+                    ModelStatsReply {
+                        served: 12,
+                        p50_us: 10.0,
+                        p95_us: 30.5,
+                        p99_us: 99.25,
+                        generation: 3,
+                        last_update: 1_700_000_000,
+                    },
                 ),
                 (
                     "other".to_string(),
-                    ModelStatsReply { served: 0, p50_us: 0.0, p95_us: 0.0, p99_us: 0.0 },
+                    ModelStatsReply {
+                        served: 0,
+                        p50_us: 0.0,
+                        p95_us: 0.0,
+                        p99_us: 0.0,
+                        generation: 1,
+                        last_update: 0,
+                    },
                 ),
             ],
         };
@@ -832,6 +1076,13 @@ mod tests {
             .and_then(|m| m.get("served"))
             .and_then(Json::as_usize);
         assert_eq!(per_model, Some(12));
+        // the online-update freshness fields ride in the same per-model map
+        let generation = j
+            .get("models")
+            .and_then(|m| m.get("default"))
+            .and_then(|m| m.get("generation"))
+            .and_then(Json::as_usize);
+        assert_eq!(generation, Some(3));
     }
 
     #[test]
@@ -841,10 +1092,10 @@ mod tests {
         let r = Request::parse("{\"features\": [1.0, -2.5, 3e-2]}").unwrap();
         assert_eq!(
             r,
-            Request::Predict { features: vec![1.0, -2.5, 3e-2], model: None }
+            Request::Predict { features: vec![1.0, -2.5, 3e-2], model: None, var: false }
         );
         let r = Request::parse("{\"batch\": [[1, 2], [3, 4]], \"model\": \"m\"}").unwrap();
-        assert!(matches!(r, Request::Batch { ref rows, ref model }
+        assert!(matches!(r, Request::Batch { ref rows, ref model, var: false }
             if rows.len() == 2 && model.as_deref() == Some("m")));
         let r = Request::parse("{\"sparse\": [[0, 1.5], [7, -2.0]]}").unwrap();
         assert_eq!(
@@ -898,6 +1149,92 @@ mod tests {
             "sparse entry 0: value must be a number"
         );
         assert!(Request::parse("not json").is_err());
+    }
+
+    #[test]
+    fn var_and_append_forms_parse_and_roundtrip() {
+        // "var": true opts in; absent or false stays a plain predict, so
+        // legacy clients never see a "var" field in serialized lines
+        let r = Request::parse("{\"features\": [1.5], \"var\": true}").unwrap();
+        assert_eq!(
+            r,
+            Request::Predict { features: vec![1.5], model: None, var: true }
+        );
+        assert!(r.to_line().contains("\"var\":true"));
+        let r = Request::parse("{\"features\": [1.5], \"var\": false}").unwrap();
+        assert!(matches!(r, Request::Predict { var: false, .. }));
+        assert!(!r.to_line().contains("var"));
+        let r = Request::parse(
+            "{\"cmd\": \"append\", \"rows\": [[1, 2], [3, 4]], \"targets\": [0.5, -1.5]}",
+        )
+        .unwrap();
+        assert_eq!(
+            r,
+            Request::Append {
+                model: None,
+                rows: vec![vec![1.0, 2.0], vec![3.0, 4.0]],
+                targets: vec![0.5, -1.5],
+            }
+        );
+        // reply forms: pred+var on one line, appended ack with nullable
+        // cold_iters — all bit-exact through the wire
+        roundtrip_resp(&Response::PredVar { pred: 1.0 + f64::EPSILON, var: 5e-324 }).unwrap();
+        roundtrip_resp(&Response::Appended {
+            appended: 7,
+            n: 107,
+            generation: 2,
+            last_update: 1_723_000_000,
+            warm_iters: 9,
+            cold_iters: None,
+        })
+        .unwrap();
+        let parsed = Response::parse(
+            "{\"appended\":7,\"n\":107,\"generation\":2,\"last_update\":0,\"warm_iters\":9,\"cold_iters\":31}",
+        )
+        .unwrap();
+        assert!(matches!(parsed, Response::Appended { cold_iters: Some(31), .. }));
+    }
+
+    #[test]
+    fn malformed_append_and_var_fields_error_cleanly() {
+        let err = |line: &str| Request::parse(line).unwrap_err();
+        assert_eq!(
+            err("{\"cmd\": \"append\"}"),
+            "\"rows\" must be an array of feature rows"
+        );
+        assert_eq!(
+            err("{\"cmd\": \"append\", \"rows\": [[1]], \"targets\": \"x\"}"),
+            "\"targets\" must be an array of numbers"
+        );
+        assert_eq!(
+            err("{\"cmd\": \"append\", \"rows\": [], \"targets\": []}"),
+            "append needs at least one row"
+        );
+        assert_eq!(
+            err("{\"cmd\": \"append\", \"rows\": [[1], [2]], \"targets\": [0.5]}"),
+            "append has 2 rows but 1 targets"
+        );
+        assert_eq!(
+            err("{\"cmd\": \"shard-append\"}"),
+            "\"x\" must be an array of numbers"
+        );
+        assert_eq!(
+            err("{\"cmd\": \"shard-cross\", \"row\": \"x\"}"),
+            "\"row\" must be an array of numbers"
+        );
+        assert_eq!(
+            Response::parse("{\"pred\": 1.0, \"var\": \"big\"}").unwrap_err(),
+            "\"var\" must be a number"
+        );
+        assert_eq!(
+            Response::parse("{\"appended\": 1, \"n\": 2, \"warm_iters\": 3}").unwrap_err(),
+            "\"generation\" must be a non-negative integer"
+        );
+        assert_eq!(
+            Response::parse("{\"cross_kxx\": [1.0], \"cross_blocks\": [[1.0], [2.0]]}")
+                .unwrap_err(),
+            "cross reply has 1 kxx entries but 2 blocks"
+        );
     }
 
     #[test]

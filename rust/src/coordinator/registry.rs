@@ -9,11 +9,14 @@
 //! hot-reload does not reset a model's served count.
 
 use std::collections::BTreeMap;
-use std::sync::{Arc, RwLock};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{SystemTime, UNIX_EPOCH};
 
 use super::TrainedModel;
 use crate::api::KrrError;
 use crate::metrics::{Counter, LatencyHistogram};
+use crate::online::OnlineTrainer;
 
 /// Name a request routes to when it carries no `"model"` field and more
 /// than one model is registered.
@@ -24,11 +27,33 @@ pub struct ModelStats {
     /// Predictions served (rows, not requests — a batch of 8 counts 8).
     pub served: Counter,
     pub latency: LatencyHistogram,
+    /// Monotonic model version: 1 when the slot is first registered,
+    /// +1 on every swap into the slot (hot-reload or online update) — an
+    /// operator-visible freshness signal surfaced in the `stats` reply.
+    pub generation: Counter,
+    /// Unix seconds of the most recent swap into this slot (0 = never).
+    pub last_update: AtomicU64,
 }
 
 impl ModelStats {
     fn new() -> ModelStats {
-        ModelStats { served: Counter::default(), latency: LatencyHistogram::new(4096) }
+        ModelStats {
+            served: Counter::default(),
+            latency: LatencyHistogram::new(4096),
+            generation: Counter::default(),
+            last_update: AtomicU64::new(0),
+        }
+    }
+
+    /// Record a model swap into the slot (registration, hot-reload, or
+    /// online update): bump the generation and stamp the wall clock.
+    fn bump(&self) {
+        self.generation.add(1);
+        let now = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        self.last_update.store(now, Ordering::Relaxed);
     }
 }
 
@@ -42,6 +67,11 @@ pub type ModelLoader = dyn Fn(&str) -> Result<Arc<TrainedModel>, KrrError> + Sen
 struct Entry {
     model: Arc<TrainedModel>,
     stats: Arc<ModelStats>,
+    /// Online-update handle for the slot, when the host attached one.
+    /// Appends serialize under the trainer's mutex; the re-solved model
+    /// swaps in through the same [`ModelRegistry::insert`] path as a
+    /// hot-reload, so the handle (like the stats) survives swaps.
+    online: Option<Arc<Mutex<OnlineTrainer>>>,
 }
 
 /// Thread-safe name → model map with optional checkpoint loader.
@@ -82,15 +112,42 @@ impl ModelRegistry {
     pub fn insert(&self, name: &str, model: Arc<TrainedModel>) -> Option<Arc<TrainedModel>> {
         let mut models = self.models.write().unwrap();
         match models.get_mut(name) {
-            Some(entry) => Some(std::mem::replace(&mut entry.model, model)),
+            Some(entry) => {
+                entry.stats.bump();
+                Some(std::mem::replace(&mut entry.model, model))
+            }
             None => {
-                models.insert(
-                    name.to_string(),
-                    Entry { model, stats: Arc::new(ModelStats::new()) },
-                );
+                let stats = Arc::new(ModelStats::new());
+                stats.bump();
+                models.insert(name.to_string(), Entry { model, stats, online: None });
                 None
             }
         }
+    }
+
+    /// Attach an online-update handle to an already-registered slot, so
+    /// `append` requests can route to it. The handle persists across model
+    /// swaps (it is the thing *producing* the swaps).
+    pub fn attach_online(
+        &self,
+        name: &str,
+        trainer: Arc<Mutex<OnlineTrainer>>,
+    ) -> Result<(), KrrError> {
+        let mut models = self.models.write().unwrap();
+        match models.get_mut(name) {
+            Some(entry) => {
+                entry.online = Some(trainer);
+                Ok(())
+            }
+            None => Err(KrrError::BadParam(format!(
+                "cannot attach online trainer to unregistered model {name:?}"
+            ))),
+        }
+    }
+
+    /// The online-update handle for a registered model, if one is attached.
+    pub fn online_for(&self, name: &str) -> Option<Arc<Mutex<OnlineTrainer>>> {
+        self.models.read().unwrap().get(name)?.online.as_ref().map(Arc::clone)
     }
 
     /// Resolve a request's optional model name to

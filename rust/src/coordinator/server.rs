@@ -5,9 +5,19 @@
 //!   → {"batch": [[...], ...], "model": "m"?}  ← one {"pred": ...} line per row, in order
 //!   → {"sparse": [[idx, val], ...], "model": "m"?}  ← {"pred": ...}  (one CSR row;
 //!       omitted indices are 0, duplicate indices keep the last value)
+//!   → {"features": [...], "var": true}        ← {"pred": ..., "var": ...}  (posterior
+//!       variance per row; also on "batch" — errors if the model has no estimator)
+//!   → {"cmd": "append", "rows": [[...], ...], "targets": [...], "model": "m"?}
+//!                                             ← {"appended": ..., "n": ...,
+//!                                                "generation": ..., "last_update": ...,
+//!                                                "warm_iters": ..., "cold_iters": ...}
+//!       (online update: rows join the model's sketch, a warm-started re-solve
+//!       runs, and the result hot-swaps into the slot — needs an attached
+//!       [`OnlineTrainer`](crate::online::OnlineTrainer))
 //!   → {"cmd": "stats"}                        ← {"served": ..., "rejected": ...,
 //!                                                "queue_depth": ..., "workers": ...,
-//!                                                p50/p90/p95/p99, "models": {per-model}}
+//!                                                p50/p90/p95/p99, "models": {per-model
+//!                                                incl. generation/last_update}}
 //!   → {"cmd": "reload", "model": "m", "path": "ckpt"}  ← {"ok": true}  (atomic hot swap)
 //!   → {"cmd": "shutdown"}                     ← {"ok": true}  (signal-driven, idempotent)
 //!
@@ -286,10 +296,21 @@ fn handle_line(
             writeln!(writer, "{reply}")?;
             return Ok(());
         }
+        Request::Append { model, rows, targets } => {
+            let name = model.as_deref().unwrap_or(super::DEFAULT_MODEL);
+            let reply = match append_rows(registry, name, rows, targets) {
+                Ok(resp) => resp.to_line(),
+                Err(msg) => err_json(&msg),
+            };
+            writeln!(writer, "{reply}")?;
+            return Ok(());
+        }
         Request::ShardBuild(_)
         | Request::ShardMatvec { .. }
         | Request::ShardLoadBeta { .. }
         | Request::ShardPredict { .. }
+        | Request::ShardAppend { .. }
+        | Request::ShardCross { .. }
         | Request::ShardInfo => {
             writeln!(
                 writer,
@@ -307,7 +328,7 @@ fn handle_line(
         | Request::Sparse { model, .. } => model.as_deref(),
         _ => unreachable!("non-prediction requests replied above"),
     };
-    let (_name, model, mstats) = match registry.resolve(model_name) {
+    let (resolved_name, model, mstats) = match registry.resolve(model_name) {
         Some(v) => v,
         None => {
             let msg = match model_name {
@@ -321,11 +342,15 @@ fn handle_line(
     };
     let d = model.dim();
     let handle: Arc<dyn BatchPredict> = model;
+    let want_var = matches!(
+        req,
+        Request::Predict { var: true, .. } | Request::Batch { var: true, .. }
+    );
     let t = Instant::now();
     let (outcome, nrows) = match req {
         Request::Sparse { pairs, .. } => match sparse_csr(&pairs, d) {
             Ok((indptr, indices, values)) => {
-                (pool.predict_sparse(handle, d, indptr, indices, values), 1)
+                (pool.predict_sparse(handle, d, indptr, indices, values).map(|p| (p, None)), 1)
             }
             Err(msg) => {
                 writeln!(writer, "{}", err_json(&msg))?;
@@ -341,10 +366,20 @@ fn handle_line(
                 )?;
                 return Ok(());
             }
-            (pool.predict(handle, features, 1), 1)
+            if want_var {
+                (pool.predict_with_var(handle, features, 1), 1)
+            } else {
+                (pool.predict(handle, features, 1).map(|p| (p, None)), 1)
+            }
         }
         Request::Batch { rows, .. } => match flatten_batch(rows, d, pool.max_batch()) {
-            Ok((flat, nrows)) => (pool.predict(handle, flat, nrows), nrows),
+            Ok((flat, nrows)) => {
+                if want_var {
+                    (pool.predict_with_var(handle, flat, nrows), nrows)
+                } else {
+                    (pool.predict(handle, flat, nrows).map(|p| (p, None)), nrows)
+                }
+            }
             Err(msg) => {
                 writeln!(writer, "{}", err_json(&msg))?;
                 return Ok(());
@@ -353,7 +388,15 @@ fn handle_line(
         _ => unreachable!("non-prediction requests replied above"),
     };
     match outcome {
-        Ok(preds) => {
+        Ok((preds, vars)) => {
+            if want_var && vars.is_none() {
+                writeln!(
+                    writer,
+                    "{}",
+                    err_json(&format!("model {resolved_name:?} exposes no variance estimate"))
+                )?;
+                return Ok(());
+            }
             let secs = t.elapsed().as_secs_f64();
             stats.latency.record(secs);
             stats.served.add(nrows as u64);
@@ -361,9 +404,19 @@ fn handle_line(
             mstats.served.add(nrows as u64);
             // one buffered write per request, not one syscall per row
             let mut reply = String::with_capacity(preds.len() * 24);
-            for p in &preds {
-                reply.push_str(&JsonWriter::object().field_f64("pred", *p).finish());
-                reply.push('\n');
+            match &vars {
+                Some(vs) => {
+                    for (p, v) in preds.iter().zip(vs) {
+                        reply.push_str(&Response::PredVar { pred: *p, var: *v }.to_line());
+                        reply.push('\n');
+                    }
+                }
+                None => {
+                    for p in &preds {
+                        reply.push_str(&JsonWriter::object().field_f64("pred", *p).finish());
+                        reply.push('\n');
+                    }
+                }
             }
             writer.write_all(reply.as_bytes())?;
         }
@@ -375,6 +428,46 @@ fn handle_line(
         }
     }
     Ok(())
+}
+
+/// Serve one `append` request: route to the slot's
+/// [`OnlineTrainer`](crate::online::OnlineTrainer), run the incremental
+/// sketch update + warm-started re-solve, and hot-swap the re-solved
+/// model into the registry — all under the trainer's mutex, so
+/// concurrent appends publish in append order and the registry never
+/// regresses to a model missing rows a later append saw. In-flight
+/// predictions keep the `Arc` they already resolved; no connection
+/// drops.
+fn append_rows(
+    registry: &ModelRegistry,
+    name: &str,
+    rows: &[Vec<f32>],
+    targets: &[f64],
+) -> Result<Response, String> {
+    let trainer = registry
+        .online_for(name)
+        .ok_or_else(|| format!("model {name:?} has no online trainer attached"))?;
+    // the wire parser guarantees rows and targets are non-empty and of
+    // equal length; per-row arity is the trainer's check
+    let mut flat = Vec::with_capacity(rows.len() * rows.first().map_or(0, Vec::len));
+    for r in rows {
+        flat.extend_from_slice(r);
+    }
+    let mut t = trainer.lock().unwrap();
+    let (report, model) = t.append(&flat, targets).map_err(|e| e.to_string())?;
+    registry.insert(name, model);
+    drop(t);
+    let stats = registry
+        .stats_for(name)
+        .ok_or_else(|| format!("model {name:?} vanished during append"))?;
+    Ok(Response::Appended {
+        appended: report.appended,
+        n: report.n,
+        generation: stats.generation.get() as usize,
+        last_update: stats.last_update.load(Ordering::Relaxed) as usize,
+        warm_iters: report.warm_iters,
+        cold_iters: report.cold_iters,
+    })
 }
 
 /// Flatten a typed batch (shape already validated by the wire parser)
@@ -451,6 +544,8 @@ fn stats_json(registry: &ModelRegistry, pool: &WorkerPool, stats: &ServerStats) 
             &name,
             &JsonWriter::object()
                 .field_usize("served", ms.served.get() as usize)
+                .field_usize("generation", ms.generation.get() as usize)
+                .field_usize("last_update", ms.last_update.load(Ordering::Relaxed) as usize)
                 .field_f64("p50_us", m.p50 * 1e6)
                 .field_f64("p95_us", m.p95 * 1e6)
                 .field_f64("p99_us", m.p99 * 1e6)
@@ -692,6 +787,109 @@ mod tests {
             elapsed < Duration::from_millis(1500),
             "shutdown after idle took {elapsed:?}"
         );
+    }
+
+    #[test]
+    fn append_hot_swaps_and_var_lines_flow_on_a_live_connection() {
+        let mut ds = synthetic_by_name("wine", Some(160), 1).unwrap();
+        ds.standardize();
+        let d = ds.d;
+        // order-preserving cut: head trains, tail arrives over the wire
+        let head = crate::data::Dataset::new(
+            "head",
+            ds.x[..120 * d].to_vec(),
+            ds.y[..120].to_vec(),
+            d,
+        );
+        let cfg = KrrConfig {
+            method: crate::api::MethodSpec::Wlsh,
+            budget: 16,
+            scale: 3.0,
+            ..Default::default()
+        };
+        let online = crate::online::OnlineTrainer::fit(cfg, &head).unwrap();
+        let registry = ModelRegistry::single(online.model());
+        registry
+            .attach_online(
+                crate::coordinator::DEFAULT_MODEL,
+                Arc::new(std::sync::Mutex::new(online)),
+            )
+            .unwrap();
+        let (addr, handle) = start(registry, 2);
+        let mut conn = TcpStream::connect(&addr).unwrap();
+        conn.set_nodelay(true).ok();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let ask = |conn: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str| {
+            writeln!(conn, "{req}").unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            Json::parse(&line).unwrap_or_else(|e| panic!("{req} → {line}: {e}"))
+        };
+        // uncertainty-aware serving: {"var": true} answers pred + var
+        let feats: Vec<String> = ds.x[..d].iter().map(|v| format!("{v}")).collect();
+        let resp = ask(
+            &mut conn,
+            &mut reader,
+            &format!("{{\"features\": [{}], \"var\": true}}", feats.join(",")),
+        );
+        let pred = resp.get("pred").and_then(Json::as_f64).unwrap();
+        let var = resp.get("var").and_then(Json::as_f64).unwrap();
+        assert!(pred.is_finite());
+        assert!(var.is_finite() && var >= 0.0, "var {var}");
+        // generation starts at 1 and is surfaced in stats
+        let stats = ask(&mut conn, &mut reader, "{\"cmd\": \"stats\"}");
+        let generation = |stats: &Json| {
+            stats
+                .get("models")
+                .and_then(|m| m.get(crate::coordinator::DEFAULT_MODEL))
+                .and_then(|m| m.get("generation"))
+                .and_then(Json::as_usize)
+                .unwrap()
+        };
+        assert_eq!(generation(&stats), 1);
+        // append the tail over the wire: sketch grows, model hot-swaps
+        let rows: Vec<String> = (120..160)
+            .map(|i| {
+                let r: Vec<String> =
+                    ds.x[i * d..(i + 1) * d].iter().map(|v| format!("{v}")).collect();
+                format!("[{}]", r.join(","))
+            })
+            .collect();
+        let targets: Vec<String> = ds.y[120..].iter().map(|v| format!("{v}")).collect();
+        let resp = ask(
+            &mut conn,
+            &mut reader,
+            &format!(
+                "{{\"cmd\": \"append\", \"rows\": [{}], \"targets\": [{}]}}",
+                rows.join(","),
+                targets.join(",")
+            ),
+        );
+        assert_eq!(resp.get("appended").and_then(Json::as_usize), Some(40), "{resp:?}");
+        assert_eq!(resp.get("n").and_then(Json::as_usize), Some(160));
+        assert_eq!(resp.get("generation").and_then(Json::as_usize), Some(2));
+        assert!(resp.get("warm_iters").and_then(Json::as_usize).is_some());
+        assert!(resp.get("cold_iters").and_then(Json::as_usize).is_some());
+        // the same connection keeps serving through the swap — and the
+        // swapped-in model answers with variance intact
+        let resp = ask(
+            &mut conn,
+            &mut reader,
+            &format!("{{\"features\": [{}], \"var\": true}}", feats.join(",")),
+        );
+        assert!(resp.get("pred").and_then(Json::as_f64).unwrap().is_finite());
+        assert!(resp.get("var").and_then(Json::as_f64).unwrap() >= 0.0);
+        // append to a slot without a trainer is a clean error
+        let resp = ask(
+            &mut conn,
+            &mut reader,
+            "{\"cmd\": \"append\", \"rows\": [[1.0]], \"targets\": [0.5], \"model\": \"nope\"}",
+        );
+        assert!(resp.get("error").is_some(), "{resp:?}");
+        writeln!(conn, "{{\"cmd\": \"shutdown\"}}").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        handle.join().unwrap();
     }
 
     #[test]

@@ -29,6 +29,7 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -361,6 +362,67 @@ impl ShardGroup {
         Ok(out)
     }
 
+    /// Hash `x_new` (row-major) into every shard's instance range,
+    /// resuming the incremental build. Every shard sees the same rows (a
+    /// shard owns a slice of the m *instances*, each hashed over all n
+    /// rows), and each must agree on the resulting row count.
+    fn append(&self, x_new: &[f32], expect_n: usize) -> Result<(), KrrError> {
+        self.for_each_shard(|_, client| {
+            match client.call(&Request::ShardAppend { x: x_new.to_vec() })? {
+                Response::ShardReady(ShardReady { n, .. }) if n == expect_n => Ok(()),
+                Response::ShardReady(sh) => Err(KrrError::Shard(format!(
+                    "{}: appended to {} rows, expected {expect_n}",
+                    client.addr(),
+                    sh.n
+                ))),
+                other => Err(KrrError::Shard(format!(
+                    "{}: unexpected append reply {other:?}",
+                    client.addr()
+                ))),
+            }
+        })?;
+        Ok(())
+    }
+
+    /// Distributed cross-kernel vector for one query row: gather every
+    /// shard's raw per-block `(kxx, vector)` partials, reduce in global
+    /// block order (shard order × in-shard block order), normalize once.
+    /// Bit-identical to `WlshSketch::cross_vector` on the full sketch.
+    fn cross_vector(&self, row: &[f32], n: usize) -> Result<(f64, Vec<f64>), KrrError> {
+        let per_shard = self.for_each_shard(|_, client| {
+            match client.call(&Request::ShardCross { row: row.to_vec() })? {
+                Response::CrossPartials(partials) => Ok(partials),
+                other => Err(KrrError::Shard(format!(
+                    "{}: unexpected cross reply {other:?}",
+                    client.addr()
+                ))),
+            }
+        })?;
+        let mut kxx = 0.0f64;
+        let mut out = vec![0.0f64; n];
+        for (s, partials) in per_shard.iter().enumerate() {
+            for (kp, p) in partials {
+                if p.len() != n {
+                    return Err(KrrError::Shard(format!(
+                        "{}: cross partial has {} rows, expected {n}",
+                        self.clients[s].addr(),
+                        p.len()
+                    )));
+                }
+                kxx += kp;
+                for (o, v) in out.iter_mut().zip(p) {
+                    *o += *v;
+                }
+            }
+        }
+        let inv_m = 1.0 / self.plan.m_total as f64;
+        kxx *= inv_m;
+        for v in out.iter_mut() {
+            *v *= inv_m;
+        }
+        Ok((kxx, out))
+    }
+
     /// Freeze every shard's serving loads from the solved β.
     fn load_beta(&self, beta: &[f64]) -> Result<(), KrrError> {
         self.for_each_shard(|_, client| {
@@ -482,7 +544,9 @@ fn worker_binary() -> Result<std::path::PathBuf, KrrError> {
 /// model.
 pub struct ShardedOperator {
     group: Arc<ShardGroup>,
-    n: usize,
+    /// Training rows currently hashed (atomic: online appends grow it
+    /// while CG/serving readers hold the same `Arc`).
+    n: AtomicUsize,
     d: usize,
     failure: Mutex<Option<KrrError>>,
 }
@@ -510,10 +574,33 @@ impl ShardedOperator {
         group.build(config, x, n, d)?;
         Ok(Arc::new(ShardedOperator {
             group: Arc::new(group),
-            n,
+            n: AtomicUsize::new(n),
             d,
             failure: Mutex::new(None),
         }))
+    }
+
+    /// Append `x_new` (row-major, `d` features per row) to every shard's
+    /// sketch, resuming the incremental build. Unlike the in-process
+    /// sketches there is no copy-on-write here — the sketch state lives
+    /// in the worker processes, so the append mutates it in place for
+    /// every handle sharing this operator.
+    pub fn append(&self, x_new: &[f32]) -> Result<usize, KrrError> {
+        if let Some(e) = self.failure() {
+            return Err(e);
+        }
+        if x_new.len() % self.d != 0 {
+            return Err(KrrError::BadParam(format!(
+                "append expects {} features per row, got {} values",
+                self.d,
+                x_new.len()
+            )));
+        }
+        let k = x_new.len() / self.d;
+        let expect_n = self.n.load(Ordering::SeqCst) + k;
+        self.group.append(x_new, expect_n)?;
+        self.n.store(expect_n, Ordering::SeqCst);
+        Ok(k)
     }
 
     /// The first shard failure, if any (checked by the trainer after the
@@ -537,18 +624,19 @@ impl ShardedOperator {
 
 impl KrrOperator for ShardedOperator {
     fn n(&self) -> usize {
-        self.n
+        self.n.load(Ordering::SeqCst)
     }
 
     fn matvec(&self, beta: &[f64]) -> Vec<f64> {
+        let n = self.n();
         if self.failed() {
-            return vec![0.0; self.n];
+            return vec![0.0; n];
         }
-        match self.group.matvec(beta, self.n) {
+        match self.group.matvec(beta, n) {
             Ok(y) => y,
             Err(e) => {
                 self.latch(e);
-                vec![0.0; self.n]
+                vec![0.0; n]
             }
         }
     }
@@ -578,6 +666,20 @@ impl KrrOperator for ShardedOperator {
     // `diag()` stays the default `None`: the diagonal lives with the
     // shard weights, and the Jacobi path already falls back (with a
     // warning) when an operator exposes no cheap diagonal.
+
+    fn cross_vector(&self, query: &[f32]) -> Option<(f64, Vec<f64>)> {
+        let n = self.n();
+        if self.failed() {
+            return None;
+        }
+        match self.group.cross_vector(query, n) {
+            Ok(kv) => Some(kv),
+            Err(e) => {
+                self.latch(e);
+                None
+            }
+        }
+    }
 
     fn name(&self) -> String {
         format!(
@@ -632,6 +734,7 @@ struct WorkerState {
     d: usize,
     n: usize,
     workers: usize,
+    chunk_rows: usize,
 }
 
 impl WorkerState {
@@ -678,9 +781,39 @@ impl WorkerState {
                 self.n = b.n;
                 self.d = b.d;
                 self.workers = b.workers.max(1);
+                self.chunk_rows = b.chunk_rows.max(1);
                 self.sketch = Some(Arc::new(sketch));
                 self.loads = None;
                 Ok(Response::ShardReady(self.ready()))
+            }
+            Request::ShardAppend { x } => {
+                let sketch = self.sketch.as_mut().ok_or("no sketch built yet")?;
+                if self.d == 0 || x.len() % self.d != 0 {
+                    return Err(format!(
+                        "shard-append: x has {} values, not a multiple of d = {}",
+                        x.len(),
+                        self.d
+                    ));
+                }
+                let src = MatrixSource::new("shard-append", &x, self.d);
+                let appended = Arc::make_mut(sketch)
+                    .append_source(&src, self.chunk_rows, self.workers)
+                    .map_err(|e| format!("{e}"))?;
+                self.n += appended;
+                // any frozen β predates the new rows; force a reload
+                self.loads = None;
+                Ok(Response::ShardReady(self.ready()))
+            }
+            Request::ShardCross { row } => {
+                let sketch = self.sketch.as_ref().ok_or("no sketch built yet")?;
+                if row.len() != self.d {
+                    return Err(format!(
+                        "shard-cross: expected {} features, got {}",
+                        self.d,
+                        row.len()
+                    ));
+                }
+                Ok(Response::CrossPartials(sketch.cross_partials(&row, self.workers)))
             }
             Request::ShardMatvec { beta } => {
                 let sketch = self.sketch.as_ref().ok_or("no sketch built yet")?;
@@ -747,7 +880,8 @@ pub fn run_worker(addr: &str, ready: Option<mpsc::Sender<String>>) -> Result<(),
     if let Some(tx) = ready {
         tx.send(local).ok();
     }
-    let mut state = WorkerState { sketch: None, loads: None, d: 0, n: 0, workers: 1 };
+    let mut state =
+        WorkerState { sketch: None, loads: None, d: 0, n: 0, workers: 1, chunk_rows: 1 };
     for conn in listener.incoming() {
         let stream = match conn {
             Ok(s) => s,
@@ -814,9 +948,10 @@ mod tests {
 
     #[test]
     fn worker_rejects_serving_requests_and_premature_ops() {
-        let mut state = WorkerState { sketch: None, loads: None, d: 0, n: 0, workers: 1 };
+        let mut state =
+            WorkerState { sketch: None, loads: None, d: 0, n: 0, workers: 1, chunk_rows: 1 };
         let err = state
-            .handle(Request::Predict { features: vec![1.0], model: None })
+            .handle(Request::Predict { features: vec![1.0], model: None, var: false })
             .unwrap_err();
         assert!(err.contains("shard-* ops only"), "{err}");
         let err = state.handle(Request::ShardMatvec { beta: vec![] }).unwrap_err();

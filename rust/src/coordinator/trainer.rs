@@ -18,6 +18,7 @@ use crate::coordinator::shard::ShardedOperator;
 use crate::data::{ChunkAnyFn, ChunkFn, DataSource, Dataset, SparseChunk};
 use crate::kernels::Kernel;
 use crate::lsh::IdMode;
+use crate::online::{UncertainPredictor, VarianceEstimator};
 use crate::sketch::{
     ExactKernelOp, KrrOperator, NystromSketch, Predictor, RffSketch, WlshSketch,
 };
@@ -37,14 +38,19 @@ pub struct TrainedModel {
 }
 
 impl TrainedModel {
-    /// Assemble a model from parts, freezing the serving handle.
+    /// Assemble a model from parts, freezing the serving handle. The
+    /// handle is wrapped in an [`UncertainPredictor`] so every model can
+    /// answer `predict_with_var` when its operator exposes a cross-kernel
+    /// vector (point predictions delegate untouched — one vtable hop).
     pub fn assemble(
         op: Arc<dyn KrrOperator>,
         beta: Vec<f64>,
         config: KrrConfig,
         report: TrainReport,
     ) -> TrainedModel {
-        let predictor = Arc::clone(&op).predictor(&beta);
+        let base = Arc::clone(&op).predictor(&beta);
+        let var = VarianceEstimator::new(Arc::clone(&op), config.lambda);
+        let predictor = Box::new(UncertainPredictor::new(base, var));
         TrainedModel { op, beta, config, report, predictor }
     }
 
@@ -64,6 +70,17 @@ impl TrainedModel {
     /// operators densify row by row).
     pub fn predict_sparse_into(&self, queries: &SparseChunk<'_>, out: &mut [f64]) {
         self.predictor.predict_sparse_into(queries, out)
+    }
+
+    /// Predictions plus sketched posterior variance per query row, or
+    /// `None` when the operator exposes no cross-kernel vector.
+    pub fn predict_with_var(
+        &self,
+        queries: &[f32],
+        out: &mut [f64],
+        var: &mut [f64],
+    ) -> Option<()> {
+        self.predictor.predict_with_var(queries, out, var)
     }
 
     /// The frozen serving handle itself.
@@ -271,6 +288,7 @@ impl Trainer {
             max_iters: self.config.cg_max_iters,
             tol: self.config.cg_tol,
             verbose: self.config.cg_verbose,
+            x0: None,
         };
         let cg = match &precond {
             // keep the plain-CG code path (and its exact iterate sequence)

@@ -124,6 +124,24 @@
 //! [`api::KrrError::Shard`] values — never a hang, never a partial
 //! result. See the README's "Distributed solve & serving" runbook.
 //!
+//! ## Online learning & uncertainty
+//!
+//! A served model can keep learning without a rebuild:
+//! [`online::OnlineTrainer`] hashes newly arrived rows into the existing
+//! per-instance bucket tables (bit-identical to retraining from scratch
+//! on the concatenated data — `tests/online_equivalence.rs`), re-solves
+//! the ridge system with a warm-started CG (previous β as the initial
+//! iterate; the report states the iterations saved), and hands back a
+//! model the registry hot-swaps atomically. Every WLSH/RFF/exact model
+//! also reports *sketched posterior variance* alongside its predictions
+//! ([`online::VarianceEstimator`], served via
+//! [`api::Predictor::predict_with_var`] and the protocol's `"var":true`
+//! flag) — a deterministic rank-r Gauss–Lanczos estimate of
+//! k̃(q,q) − k̃_qᵀ(K̃+λI)⁻¹k̃_q that never understates the model's
+//! uncertainty. Over the wire, `{"cmd":"append", ...}` routes rows to the
+//! slot's trainer and each swap bumps the registry's `generation`
+//! counter, surfaced in the `stats` reply.
+//!
 //! Lower layers, for direct use: [`sketch::WlshSketch`] (the paper's
 //! estimator), [`solver::solve_krr`] (CG on `K̃ + λI`), and
 //! [`coordinator::Trainer`] / [`coordinator::serve`] (the
@@ -140,6 +158,7 @@ pub mod kernels;
 pub mod linalg;
 pub mod lsh;
 pub mod metrics;
+pub mod online;
 pub mod quadrature;
 pub mod risk;
 pub mod runtime;

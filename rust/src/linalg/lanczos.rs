@@ -76,6 +76,82 @@ where
     }
 }
 
+/// Result of a Gauss–Lanczos quadrature estimate of vᵀA⁻¹v.
+#[derive(Debug, Clone)]
+pub struct QuadformResult {
+    /// The estimate of vᵀ A⁻¹ v.
+    pub value: f64,
+    /// Lanczos steps actually taken (early breakdown stops sooner).
+    pub iters: usize,
+}
+
+/// Estimate the quadratic form vᵀ A⁻¹ v for an SPD operator `op: u → A u`
+/// by Gauss–Lanczos quadrature (Golub & Meurant): `k` Lanczos steps
+/// started from v/‖v‖ build the Jacobi matrix T_k, and
+/// ‖v‖² · e₁ᵀ T_k⁻¹ e₁ is the k-point Gauss estimate of the Stieltjes
+/// integral ∫ μ⁻¹ dω(μ). Deterministic — the start vector *is* v, no RNG
+/// is drawn — and exact once k reaches the Krylov dimension of (A, v);
+/// breakdown (invariant subspace found) stops early with the already-exact
+/// estimate. For SPD A the estimate is a non-negative quadratic form.
+pub fn lanczos_quadform_inv<F>(n: usize, k: usize, v: &[f64], mut op: F) -> QuadformResult
+where
+    F: FnMut(&[f64]) -> Vec<f64>,
+{
+    assert_eq!(v.len(), n, "probe vector must match the operator size");
+    let k = k.min(n).max(1);
+    let vnorm2: f64 = dot(v, v);
+    if vnorm2 == 0.0 {
+        return QuadformResult { value: 0.0, iters: 0 };
+    }
+    let nrm = vnorm2.sqrt();
+    let mut q: Vec<Vec<f64>> = Vec::with_capacity(k);
+    q.push(v.iter().map(|x| x / nrm).collect());
+    let mut alphas = Vec::with_capacity(k);
+    let mut betas = Vec::with_capacity(k);
+    for j in 0..k {
+        let mut w = op(&q[j]);
+        let alpha = dot(&q[j], &w);
+        alphas.push(alpha);
+        axpy(-alpha, &q[j], &mut w);
+        if j > 0 {
+            let b: f64 = betas[j - 1];
+            axpy(-b, &q[j - 1], &mut w);
+        }
+        // full reorthogonalization (twice is enough)
+        for _ in 0..2 {
+            for qi in &q {
+                let c = dot(qi, &w);
+                axpy(-c, qi, &mut w);
+            }
+        }
+        let beta = norm2(&w);
+        if beta < 1e-13 || j + 1 == k {
+            break;
+        }
+        betas.push(beta);
+        w.iter_mut().for_each(|x| *x /= beta);
+        q.push(w);
+    }
+    // e₁ᵀ T⁻¹ e₁ through the spectral decomposition of the small Jacobi
+    // matrix: Σ_j U₁ⱼ² / θ_j (θ_j the Ritz values, all > 0 for SPD A).
+    let steps = alphas.len();
+    let mut t = Matrix::zeros(steps, steps);
+    for i in 0..steps {
+        t[(i, i)] = alphas[i];
+        if i + 1 < steps {
+            t[(i, i + 1)] = betas[i];
+            t[(i + 1, i)] = betas[i];
+        }
+    }
+    let eig = sym_eig(&t);
+    let mut e1_t_inv_e1 = 0.0f64;
+    for j in 0..steps {
+        let u1j = eig.vectors[(0, j)];
+        e1_t_inv_e1 += u1j * u1j / eig.values[j];
+    }
+    QuadformResult { value: vnorm2 * e1_t_inv_e1, iters: steps }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -104,6 +180,79 @@ mod tests {
         let res = lanczos_extreme(60, 60, 2, move |v| a2.matvec(v));
         assert!((res.max - dense.values[59]).abs() < 1e-6 * dense.values[59]);
         assert!((res.min - dense.values[0]).abs() < 1e-4 * dense.values[59]);
+    }
+
+    #[test]
+    fn quadform_exact_on_diagonal() {
+        // A = diag(d): vᵀA⁻¹v = Σ v_i²/d_i, reached exactly once the
+        // Krylov space saturates.
+        let n = 40;
+        let diag: Vec<f64> = (0..n).map(|i| 1.0 + (i as f64) * 0.25).collect();
+        let v: Vec<f64> = (0..n).map(|i| ((i * 7 % 11) as f64) - 5.0).collect();
+        let want: f64 = v.iter().zip(&diag).map(|(x, d)| x * x / d).sum();
+        let d = diag.clone();
+        let res = lanczos_quadform_inv(n, n, &v, move |u| {
+            u.iter().zip(&d).map(|(x, di)| x * di).collect()
+        });
+        assert!(
+            (res.value - want).abs() < 1e-8 * want,
+            "{} vs {want}",
+            res.value
+        );
+    }
+
+    #[test]
+    fn quadform_matches_dense_solve_on_random_spd() {
+        let mut rng = Pcg64::new(9, 0);
+        let b = Matrix::random_normal(&mut rng, 30, 30);
+        let mut a = b.matmul(&b.transpose());
+        a.add_diag(2.0);
+        a.symmetrize();
+        let v: Vec<f64> = (0..30).map(|_| rng.normal()).collect();
+        // dense reference via eigendecomposition
+        let eig = sym_eig(&a);
+        let mut want = 0.0;
+        for j in 0..30 {
+            let uj: f64 = (0..30).map(|i| eig.vectors[(i, j)] * v[i]).sum();
+            want += uj * uj / eig.values[j];
+        }
+        let a2 = a.clone();
+        let res = lanczos_quadform_inv(30, 30, &v, move |u| a2.matvec(u));
+        assert!(
+            (res.value - want).abs() < 1e-7 * (1.0 + want.abs()),
+            "{} vs {want}",
+            res.value
+        );
+        assert!(res.value >= 0.0);
+    }
+
+    #[test]
+    fn quadform_truncated_rank_is_nonnegative_and_close() {
+        let mut rng = Pcg64::new(10, 0);
+        let b = Matrix::random_normal(&mut rng, 50, 50);
+        let mut a = b.matmul(&b.transpose());
+        a.add_diag(5.0);
+        a.symmetrize();
+        let v: Vec<f64> = (0..50).map(|_| rng.normal()).collect();
+        let a2 = a.clone();
+        let full = lanczos_quadform_inv(50, 50, &v, |u| a2.matvec(u));
+        let a3 = a.clone();
+        let low = lanczos_quadform_inv(50, 12, &v, |u| a3.matvec(u));
+        assert!(low.value >= 0.0);
+        assert!(low.iters <= 12);
+        assert!(
+            (low.value - full.value).abs() < 0.05 * full.value.abs().max(1e-12),
+            "rank-12 {} vs full {}",
+            low.value,
+            full.value
+        );
+    }
+
+    #[test]
+    fn quadform_zero_vector_is_zero() {
+        let res = lanczos_quadform_inv(8, 8, &[0.0; 8], |u| u.to_vec());
+        assert_eq!(res.value, 0.0);
+        assert_eq!(res.iters, 0);
     }
 
     #[test]

@@ -12,7 +12,7 @@ mod lanczos;
 pub use cholesky::CholeskyFactor;
 pub use dense::Matrix;
 pub use eig::{sym_eig, SymEig};
-pub use lanczos::{lanczos_extreme, LanczosResult};
+pub use lanczos::{lanczos_extreme, lanczos_quadform_inv, LanczosResult, QuadformResult};
 
 /// y += alpha * x
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {

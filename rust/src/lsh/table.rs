@@ -138,6 +138,17 @@ impl BucketTableBuilder {
 }
 
 impl BucketTable {
+    /// Reopen a finished table as a builder positioned exactly where the
+    /// original build left off: the renumbering map and per-point indices
+    /// are the builder's whole state, so pushing further ids and calling
+    /// [`BucketTableBuilder::finish`] again yields a table bit-identical
+    /// to one built from the concatenated id stream in a single pass —
+    /// the incremental-append path of the online subsystem.
+    pub fn into_builder(self) -> BucketTableBuilder {
+        let BucketTable { bucket_of, map, .. } = self;
+        BucketTableBuilder { map, bucket_of }
+    }
+
     /// Build from raw ids: one hash pass for the dense renumbering, then a
     /// counting sort into the CSR arrays (O(n) total). Delegates to
     /// [`BucketTableBuilder`], the same assembly path the streaming
@@ -260,6 +271,24 @@ mod tests {
         assert_eq!(t.offsets, vec![0]);
         assert!(t.members.is_empty());
         assert!(t.sizes().is_empty());
+    }
+
+    #[test]
+    fn resumed_builder_matches_concatenated_build_at_any_split() {
+        let ids: Vec<u64> = (0..600).map(|i| (i * 41 % 131) as u64).collect();
+        let want = BucketTable::build(&ids);
+        for split in [0usize, 1, 59, 300, 599, 600] {
+            let first = BucketTable::build(&ids[..split]);
+            let mut b = first.into_builder();
+            for &id in &ids[split..] {
+                b.push(id);
+            }
+            let t = b.finish();
+            assert_eq!(t.bucket_of, want.bucket_of, "split={split}");
+            assert_eq!(t.offsets, want.offsets, "split={split}");
+            assert_eq!(t.members, want.members, "split={split}");
+            assert_eq!(t.n_buckets, want.n_buckets, "split={split}");
+        }
     }
 
     #[test]

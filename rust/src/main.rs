@@ -11,7 +11,7 @@
 //! in [`wlsh_krr::api`]; a typo prints one error line on stderr and exits
 //! with code 2 (usage) — runtime failures exit with code 1.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use wlsh_krr::api::{BucketSpec, KernelSpec, KrrError, MethodSpec, PrecondSpec};
@@ -24,6 +24,7 @@ use wlsh_krr::data::{
     DensifySource, LibsvmSource, Standardizer,
 };
 use wlsh_krr::kernels::Kernel;
+use wlsh_krr::online::OnlineTrainer;
 use wlsh_krr::risk::ose_epsilon_dense;
 use wlsh_krr::runtime::Runtime;
 use wlsh_krr::sketch::{ExactKernelOp, WlshSketch};
@@ -72,6 +73,9 @@ fn main() {
                         --model name=ckpt[,name=ckpt...]  (serve saved\n\
                         checkpoints instead of training; same dataset flags\n\
                         as the `train` run that wrote them)\n\
+                        wlsh/rff models serve with online appends enabled:\n\
+                        the wire accepts {\"cmd\":\"append\",...} updates and\n\
+                        \"var\":true uncertainty-flagged predictions\n\
                  shard-worker  --addr HOST:PORT  (one shard of a\n\
                         distributed topology; spawned automatically by\n\
                         shards(n=N), run by hand for remote(...))\n\
@@ -389,12 +393,30 @@ fn cmd_serve(args: &Args) -> Result<(), KrrError> {
             }
         }
         None => {
-            let model = Trainer::new(cfg).train(&tr)?;
-            eprintln!(
-                "model trained ({}); serving as {DEFAULT_MODEL:?}",
-                model.report.operator
-            );
-            registry.insert(DEFAULT_MODEL, Arc::new(model));
+            // attach the online-update handle when the method has an
+            // incremental formulation (wlsh/rff, non-nystrom precond), so
+            // `{"cmd":"append",...}` works out of the box; other methods
+            // serve a frozen model through the identical train path
+            let supports_online = matches!(cfg.method, MethodSpec::Wlsh | MethodSpec::Rff)
+                && !matches!(cfg.precond, PrecondSpec::Nystrom { .. })
+                && cfg.validate().is_ok();
+            if supports_online {
+                let online = OnlineTrainer::fit(cfg, &tr)?;
+                let model = online.model();
+                eprintln!(
+                    "model trained ({}); serving as {DEFAULT_MODEL:?} with online appends",
+                    model.report.operator
+                );
+                registry.insert(DEFAULT_MODEL, model);
+                registry.attach_online(DEFAULT_MODEL, Arc::new(Mutex::new(online)))?;
+            } else {
+                let model = Trainer::new(cfg).train(&tr)?;
+                eprintln!(
+                    "model trained ({}); serving as {DEFAULT_MODEL:?}",
+                    model.report.operator
+                );
+                registry.insert(DEFAULT_MODEL, Arc::new(model));
+            }
         }
     }
     let scfg = ServerConfig {

@@ -1,0 +1,647 @@
+//! Online-learning subsystem: incremental sketch updates, warm-started
+//! re-solves, and uncertainty-aware serving.
+//!
+//! Three pieces turn a trained model into a continuously-updating,
+//! uncertainty-reporting service:
+//!
+//! * [`OnlineTrainer`] — owns the growable sketch and the target vector.
+//!   [`append`](OnlineTrainer::append) hashes new rows into the existing
+//!   per-instance bucket tables (bit-identical to a from-scratch build on
+//!   the concatenated data — `tests/online_equivalence.rs`), re-solves the
+//!   ridge system, and hands back a fresh [`TrainedModel`] the caller
+//!   swaps into the [`ModelRegistry`](crate::coordinator::ModelRegistry)
+//!   without dropping a connection.
+//! * [`VarianceEstimator`] — sketched KRR posterior variance
+//!   σ²(q) = k̃(q,q) − k̃_qᵀ(K̃+λI)⁻¹k̃_q, with the quadratic form
+//!   approximated by rank-r Gauss–Lanczos quadrature
+//!   ([`lanczos_quadform_inv`]) and cross-checked against an exact dense
+//!   solve at small n ([`variance_exact`](VarianceEstimator::variance_exact)).
+//! * [`UncertainPredictor`] — wraps any serving
+//!   [`Predictor`] and implements
+//!   [`predict_with_var`](Predictor::predict_with_var), the surface the
+//!   protocol's `"var":true` flag routes to.
+//!
+//! # Warm starts vs bit-identity
+//!
+//! A warm-started CG run takes a different iterate path than a cold one,
+//! so its β agrees with the cold solution only to the solver tolerance —
+//! never bit for bit. [`ResolveMode`] makes the trade explicit:
+//! [`ColdExact`](ResolveMode::ColdExact) (the default) *publishes* the
+//! cold re-solve (bit-identical to retraining from scratch on the
+//! concatenated data) while still running the warm solve to report the
+//! iterations it saves; [`Warm`](ResolveMode::Warm) publishes the
+//! warm-started β directly and skips the cold solve.
+//!
+//! # Determinism of the variance path
+//!
+//! The Lanczos quadrature draws no random probes: its start vector is the
+//! cross-kernel vector k̃_q itself, so the estimate is a deterministic
+//! function of (sketch, λ, rank, query) — no seed is involved, and
+//! repeated `{"var":true}` queries return bit-identical variances. By the
+//! Gauss quadrature lower-bound property on the convex integrand 1/μ, the
+//! truncated quadratic-form estimate understates k̃_qᵀ(K̃+λI)⁻¹k̃_q, so the
+//! reported variance overstates (never understates) the model's
+//! uncertainty; the final `.max(0.0)` only guards rounding at
+//! machine precision.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::api::{KrrError, MethodSpec, PrecondSpec};
+use crate::config::KrrConfig;
+use crate::coordinator::{ShardedOperator, TrainReport, TrainedModel};
+use crate::data::{Dataset, MatrixSource};
+use crate::linalg::{axpy, dot, lanczos_quadform_inv, Matrix};
+use crate::sketch::{KrrOperator, Predictor, RffSketch, WlshSketch};
+use crate::solver::{
+    solve_krr, solve_krr_direct, solve_krr_pcg, CgOptions, CgResult, Preconditioner,
+};
+use crate::util::mem;
+
+/// Default Lanczos rank for the serving-path variance estimate (clamped
+/// to n). Rank-32 quadrature resolves 1/μ over the ridge-regularized
+/// spectrum to well under serving tolerance on every bundled dataset.
+pub const DEFAULT_VARIANCE_RANK: usize = 32;
+
+/// Which β an [`OnlineTrainer::append`] publishes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResolveMode {
+    /// Publish the cold re-solve (bit-identical to a from-scratch train
+    /// on the concatenated data), and *also* run the warm-started solve
+    /// so the report can state the iterations a warm start saves.
+    ColdExact,
+    /// Publish the warm-started re-solve (previous β padded with zeros as
+    /// the CG initial iterate). Equal to the cold solution only to the CG
+    /// tolerance; `cold_iters` is not measured.
+    Warm,
+}
+
+/// Diagnostics from one [`OnlineTrainer::append`].
+#[derive(Clone, Debug)]
+pub struct AppendReport {
+    /// Rows appended by this call.
+    pub appended: usize,
+    /// Training rows after the append.
+    pub n: usize,
+    /// CG iterations of the warm-started re-solve.
+    pub warm_iters: usize,
+    /// CG iterations of the cold re-solve ([`ResolveMode::ColdExact`]
+    /// only).
+    pub cold_iters: Option<usize>,
+    /// Relative residual of the published solve.
+    pub rel_residual: f64,
+    pub converged: bool,
+    /// Wall-clock seconds for the append + re-solve(s).
+    pub update_secs: f64,
+}
+
+/// The growable operator behind an [`OnlineTrainer`]. In-process sketches
+/// are held behind `Arc` and appended copy-on-write (`Arc::make_mut`):
+/// models already serving the old sketch keep it untouched. The sharded
+/// operator's state lives in the shard worker processes, so appends there
+/// mutate in place (every shard appends the same rows to its own
+/// instance range).
+enum OnlineOp {
+    Wlsh(Arc<WlshSketch>),
+    Rff(Arc<RffSketch>),
+    Sharded(Arc<ShardedOperator>),
+}
+
+impl OnlineOp {
+    fn as_dyn(&self) -> Arc<dyn KrrOperator> {
+        match self {
+            OnlineOp::Wlsh(s) => Arc::clone(s) as Arc<dyn KrrOperator>,
+            OnlineOp::Rff(s) => Arc::clone(s) as Arc<dyn KrrOperator>,
+            OnlineOp::Sharded(s) => Arc::clone(s) as Arc<dyn KrrOperator>,
+        }
+    }
+}
+
+/// Incremental trainer: fit once, then [`append`](Self::append) chunks of
+/// rows as they arrive. Each append extends the sketch in place of a
+/// rebuild (new rows are hashed under the *existing* per-instance hash
+/// functions, so the updated sketch is bit-identical to one built from
+/// scratch on the concatenated data), re-solves the ridge system per the
+/// configured [`ResolveMode`], and returns a fresh servable model.
+///
+/// Supported methods: `wlsh` and `rff` (including the sharded `wlsh`
+/// topology). The exact and Nyström operators have no incremental
+/// formulation (landmarks/pairwise state would need re-sampling), and the
+/// Nyström *preconditioner* would need the raw training rows at every
+/// re-solve — all three are rejected at [`fit`](Self::fit) with
+/// [`KrrError::BadParam`].
+pub struct OnlineTrainer {
+    config: KrrConfig,
+    op: OnlineOp,
+    d: usize,
+    y: Vec<f64>,
+    beta: Vec<f64>,
+    mode: ResolveMode,
+    model: Arc<TrainedModel>,
+}
+
+impl OnlineTrainer {
+    /// Initial fit, replicating the
+    /// [`Trainer`](crate::coordinator::Trainer) build/solve path exactly
+    /// (same operator constructor arguments, same solver options), so the
+    /// starting model is bit-identical to `Trainer::train` on the same
+    /// dataset.
+    pub fn fit(config: KrrConfig, ds: &Dataset) -> Result<OnlineTrainer, KrrError> {
+        config.validate()?;
+        if let PrecondSpec::Nystrom { .. } = config.precond {
+            return Err(KrrError::BadParam(
+                "online updates cannot use the nystrom preconditioner: \
+                 it must be re-sampled from the raw training rows at every \
+                 re-solve; use `jacobi` or `none`"
+                    .into(),
+            ));
+        }
+        let op = if config.topology.is_distributed() {
+            OnlineOp::Sharded(ShardedOperator::build(&config, &ds.x, ds.n, ds.d)?)
+        } else {
+            match config.method {
+                MethodSpec::Wlsh => OnlineOp::Wlsh(Arc::new(WlshSketch::build_source(
+                    ds,
+                    config.budget,
+                    &config.bucket,
+                    config.gamma_shape,
+                    config.scale,
+                    config.seed,
+                    crate::lsh::IdMode::U64,
+                    config.chunk_rows,
+                    config.workers,
+                )?)),
+                MethodSpec::Rff => OnlineOp::Rff(Arc::new(RffSketch::build_source(
+                    ds,
+                    config.budget,
+                    config.scale,
+                    config.seed,
+                    config.chunk_rows,
+                    config.workers,
+                )?)),
+                MethodSpec::Exact(_) | MethodSpec::Nystrom => {
+                    return Err(KrrError::BadParam(format!(
+                        "online updates support wlsh and rff; {} has no \
+                         incremental formulation",
+                        config.method
+                    )));
+                }
+            }
+        };
+        let t0 = Instant::now();
+        let mut tr = OnlineTrainer {
+            d: ds.d,
+            y: ds.y.clone(),
+            beta: Vec::new(),
+            mode: ResolveMode::ColdExact,
+            // placeholder; replaced right below once the solve lands
+            model: Arc::new(TrainedModel::assemble(
+                op.as_dyn(),
+                vec![0.0; ds.n],
+                config.clone(),
+                TrainReport {
+                    build_secs: 0.0,
+                    solve_secs: 0.0,
+                    cg_iters: 0,
+                    cg_rel_residual: 0.0,
+                    converged: false,
+                    operator: String::new(),
+                    precond: String::new(),
+                    memory_bytes: 0,
+                    rows_per_sec: 0.0,
+                    peak_rss_bytes: 0,
+                },
+            )),
+            config,
+            op,
+        };
+        let build_secs = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let cg = tr.solve(None);
+        let solve_secs = t1.elapsed().as_secs_f64();
+        tr.beta = cg.beta.clone();
+        tr.model = Arc::new(tr.assemble(cg, build_secs, solve_secs));
+        if let Some(e) = tr.shard_failure() {
+            return Err(e);
+        }
+        Ok(tr)
+    }
+
+    /// Choose which β future appends publish (default
+    /// [`ResolveMode::ColdExact`]).
+    pub fn set_mode(&mut self, mode: ResolveMode) {
+        self.mode = mode;
+    }
+
+    /// The most recently published servable model.
+    pub fn model(&self) -> Arc<TrainedModel> {
+        Arc::clone(&self.model)
+    }
+
+    /// Training rows currently in the sketch.
+    pub fn n(&self) -> usize {
+        self.y.len()
+    }
+
+    /// Feature count per row.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Append `y_new.len()` rows (row-major `x_new`, `d` features each)
+    /// and re-solve. Returns the diagnostics and the fresh model; the
+    /// caller swaps the model into its registry (the trainer deliberately
+    /// holds no registry handle).
+    pub fn append(
+        &mut self,
+        x_new: &[f32],
+        y_new: &[f64],
+    ) -> Result<(AppendReport, Arc<TrainedModel>), KrrError> {
+        let k = y_new.len();
+        if k == 0 {
+            return Err(KrrError::BadParam("append of zero rows".into()));
+        }
+        if x_new.len() != k * self.d {
+            return Err(KrrError::BadParam(format!(
+                "append expects {} features per row: {} rows need {} values, got {}",
+                self.d,
+                k,
+                k * self.d,
+                x_new.len()
+            )));
+        }
+        let t0 = Instant::now();
+        let chunk = self.config.chunk_rows.max(1);
+        let workers = self.config.workers.max(1);
+        let src = MatrixSource::new("online-append", x_new, self.d);
+        let appended = match &mut self.op {
+            // copy-on-write: serving models holding the old Arc keep the
+            // pre-append sketch; only the trainer's copy grows
+            OnlineOp::Wlsh(s) => Arc::make_mut(s).append_source(&src, chunk, workers)?,
+            OnlineOp::Rff(s) => Arc::make_mut(s).append_source(&src, chunk, workers)?,
+            OnlineOp::Sharded(s) => s.append(x_new)?,
+        };
+        self.y.extend_from_slice(y_new);
+        let n = self.y.len();
+        // warm start: previous β padded with zeros for the new rows
+        let mut x0 = self.beta.clone();
+        x0.resize(n, 0.0);
+        let warm = self.solve(Some(x0));
+        let warm_iters = warm.iters;
+        let (published, cold_iters) = match self.mode {
+            ResolveMode::ColdExact => {
+                let cold = self.solve(None);
+                let iters = cold.iters;
+                (cold, Some(iters))
+            }
+            ResolveMode::Warm => (warm, None),
+        };
+        let update_secs = t0.elapsed().as_secs_f64();
+        let report = AppendReport {
+            appended,
+            n,
+            warm_iters,
+            cold_iters,
+            rel_residual: published.rel_residual,
+            converged: published.converged,
+            update_secs,
+        };
+        self.beta = published.beta.clone();
+        let model = Arc::new(self.assemble(published, 0.0, update_secs));
+        if let Some(e) = self.shard_failure() {
+            return Err(e);
+        }
+        self.model = Arc::clone(&model);
+        Ok((report, model))
+    }
+
+    /// One (P)CG solve over the current operator/targets, replicating the
+    /// `Trainer` solver selection (plain CG when unpreconditioned, PCG
+    /// otherwise) so a cold solve is bit-identical to `Trainer::train`.
+    fn solve(&self, x0: Option<Vec<f64>>) -> CgResult {
+        let c = &self.config;
+        let opts = CgOptions {
+            max_iters: c.cg_max_iters,
+            tol: c.cg_tol,
+            verbose: c.cg_verbose,
+            x0,
+        };
+        let op = self.op.as_dyn();
+        let precond = match c.precond {
+            PrecondSpec::None => Preconditioner::Identity,
+            PrecondSpec::Jacobi => match op.diag() {
+                Some(diag) => Preconditioner::jacobi(&diag, c.lambda),
+                None => Preconditioner::Identity,
+            },
+            // rejected in fit()
+            PrecondSpec::Nystrom { .. } => Preconditioner::Identity,
+        };
+        match &precond {
+            Preconditioner::Identity => solve_krr(op.as_ref(), &self.y, c.lambda, &opts),
+            m => solve_krr_pcg(op.as_ref(), &self.y, c.lambda, &opts, m),
+        }
+    }
+
+    /// Package a solve into a servable model (same report fields the
+    /// offline trainer fills).
+    fn assemble(&self, cg: CgResult, build_secs: f64, solve_secs: f64) -> TrainedModel {
+        let op = self.op.as_dyn();
+        let report = TrainReport {
+            build_secs,
+            solve_secs,
+            cg_iters: cg.iters,
+            cg_rel_residual: cg.rel_residual,
+            converged: cg.converged,
+            operator: op.name(),
+            precond: match self.config.precond {
+                PrecondSpec::Jacobi => "jacobi",
+                _ => "none",
+            }
+            .to_string(),
+            memory_bytes: op.memory_bytes(),
+            rows_per_sec: 0.0,
+            peak_rss_bytes: mem::peak_rss_bytes().unwrap_or(0),
+        };
+        TrainedModel::assemble(op, cg.beta, self.config.clone(), report)
+    }
+
+    /// Latched shard failure, when the operator is sharded (matvec is
+    /// infallible by trait contract, so shard deaths latch inside the
+    /// operator and must be surfaced after each solve).
+    fn shard_failure(&self) -> Option<KrrError> {
+        match &self.op {
+            OnlineOp::Sharded(s) => s.failure(),
+            _ => None,
+        }
+    }
+}
+
+/// Sketched KRR posterior variance
+/// σ²(q) = k̃(q,q) − k̃_qᵀ(K̃+λI)⁻¹k̃_q, the quadratic form approximated by
+/// rank-`rank` Gauss–Lanczos quadrature seeded at k̃_q itself (no random
+/// probe — see the module docs on determinism).
+pub struct VarianceEstimator {
+    op: Arc<dyn KrrOperator>,
+    lambda: f64,
+    rank: usize,
+}
+
+impl VarianceEstimator {
+    /// Estimator at [`DEFAULT_VARIANCE_RANK`] (clamped to n at query
+    /// time).
+    pub fn new(op: Arc<dyn KrrOperator>, lambda: f64) -> VarianceEstimator {
+        VarianceEstimator { op, lambda, rank: DEFAULT_VARIANCE_RANK }
+    }
+
+    /// Override the Lanczos rank (higher = tighter estimate, linearly
+    /// more mat-vecs per query).
+    pub fn with_rank(mut self, rank: usize) -> VarianceEstimator {
+        self.rank = rank.max(1);
+        self
+    }
+
+    /// Posterior variance at one query row, or `None` when the operator
+    /// exposes no cross-kernel vector (`KrrOperator::cross_vector`).
+    /// Deterministic; non-negative; an *over*-estimate of the sketched
+    /// posterior variance at truncated rank (Gauss lower bound on the
+    /// quadratic form).
+    pub fn variance(&self, query: &[f32]) -> Option<f64> {
+        let (kxx, kx) = self.op.cross_vector(query)?;
+        let n = self.op.n();
+        debug_assert_eq!(kx.len(), n);
+        let lambda = self.lambda;
+        let op = &self.op;
+        let quad = lanczos_quadform_inv(n, self.rank.min(n), &kx, |v| {
+            let mut out = op.matvec(v);
+            axpy(lambda, v, &mut out);
+            out
+        });
+        Some((kxx - quad.value).max(0.0))
+    }
+
+    /// Exact-solve cross-check (O(n²) memory, O(n³) time — tests and
+    /// small n only): materializes K̃ column by column and solves
+    /// (K̃+λI)α = k̃_q by dense Cholesky.
+    pub fn variance_exact(&self, query: &[f32]) -> Result<f64, KrrError> {
+        let (kxx, kx) = self.op.cross_vector(query).ok_or_else(|| {
+            KrrError::BadParam(format!(
+                "{} exposes no cross-kernel vector",
+                self.op.name()
+            ))
+        })?;
+        let n = self.op.n();
+        let mut k = Matrix::zeros(n, n);
+        for j in 0..n {
+            let mut e = vec![0.0; n];
+            e[j] = 1.0;
+            let col = self.op.matvec(&e);
+            for i in 0..n {
+                k[(i, j)] = col[i];
+            }
+        }
+        let alpha = solve_krr_direct(&k, &kx, self.lambda)?;
+        Ok((kxx - dot(&kx, &alpha)).max(0.0))
+    }
+}
+
+/// Serving predictor that carries a [`VarianceEstimator`] beside the base
+/// point-prediction handle: plain predictions delegate untouched, and
+/// [`predict_with_var`](Predictor::predict_with_var) answers the
+/// protocol's `"var":true` queries.
+pub struct UncertainPredictor {
+    base: Box<dyn Predictor>,
+    var: VarianceEstimator,
+}
+
+impl UncertainPredictor {
+    pub fn new(base: Box<dyn Predictor>, var: VarianceEstimator) -> UncertainPredictor {
+        UncertainPredictor { base, var }
+    }
+}
+
+impl Predictor for UncertainPredictor {
+    fn dim(&self) -> usize {
+        self.base.dim()
+    }
+
+    fn predict_into(&self, queries: &[f32], out: &mut [f64]) {
+        self.base.predict_into(queries, out)
+    }
+
+    fn predict_sparse_into(&self, queries: &crate::data::SparseChunk<'_>, out: &mut [f64]) {
+        self.base.predict_sparse_into(queries, out)
+    }
+
+    fn predict_with_var(&self, queries: &[f32], out: &mut [f64], var: &mut [f64]) -> Option<()> {
+        let d = self.base.dim();
+        assert_eq!(queries.len() % d.max(1), 0, "query rows must have d features");
+        assert_eq!(out.len(), var.len());
+        self.base.predict_into(queries, out);
+        for (i, v) in var.iter_mut().enumerate() {
+            *v = self.var.variance(&queries[i * d..(i + 1) * d])?;
+        }
+        Some(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::MethodSpec;
+    use crate::coordinator::Trainer;
+    use crate::data::synthetic_by_name;
+
+    fn small_ds(n: usize) -> Dataset {
+        let mut ds = synthetic_by_name("wine", Some(n), 1).unwrap();
+        ds.standardize();
+        ds
+    }
+
+    fn cfg(method: MethodSpec) -> KrrConfig {
+        KrrConfig {
+            method,
+            budget: 24,
+            scale: 3.0,
+            lambda: 0.4,
+            cg_max_iters: 400,
+            cg_tol: 1e-8,
+            chunk_rows: 64,
+            ..Default::default()
+        }
+    }
+
+    /// Order-preserving head/tail cut (`Dataset::split` shuffles, which
+    /// would break append-vs-retrain bit-identity: the sketch build is
+    /// row-order-dependent).
+    fn cut(ds: &Dataset, at: usize) -> (Dataset, Dataset) {
+        let head = Dataset::new(
+            "head",
+            ds.x[..at * ds.d].to_vec(),
+            ds.y[..at].to_vec(),
+            ds.d,
+        );
+        let tail = Dataset::new(
+            "tail",
+            ds.x[at * ds.d..].to_vec(),
+            ds.y[at..].to_vec(),
+            ds.d,
+        );
+        (head, tail)
+    }
+
+    #[test]
+    fn fit_matches_offline_trainer_bitwise() {
+        let ds = small_ds(160);
+        for method in [MethodSpec::Wlsh, MethodSpec::Rff] {
+            let c = cfg(method);
+            let offline = Trainer::new(c.clone()).train(&ds).unwrap();
+            let online = OnlineTrainer::fit(c, &ds).unwrap();
+            assert_eq!(offline.beta, online.model().beta, "{method:?}");
+        }
+    }
+
+    #[test]
+    fn append_then_cold_resolve_is_bitwise_retraining() {
+        let ds = small_ds(200);
+        let (head, tail) = cut(&ds, 160);
+        for method in [MethodSpec::Wlsh, MethodSpec::Rff] {
+            let c = cfg(method);
+            let mut online = OnlineTrainer::fit(c.clone(), &head).unwrap();
+            let (report, model) = online.append(&tail.x, &tail.y).unwrap();
+            assert_eq!(report.appended, tail.n);
+            assert_eq!(report.n, ds.n);
+            assert!(report.cold_iters.is_some(), "ColdExact must measure both solves");
+            let scratch = Trainer::new(c).train(&ds).unwrap();
+            assert_eq!(scratch.beta, model.beta, "{method:?}");
+        }
+    }
+
+    #[test]
+    fn warm_mode_matches_cold_to_solver_tolerance() {
+        let ds = small_ds(200);
+        let (head, tail) = cut(&ds, 150);
+        let c = cfg(MethodSpec::Wlsh);
+        let mut online = OnlineTrainer::fit(c.clone(), &head).unwrap();
+        online.set_mode(ResolveMode::Warm);
+        let (report, model) = online.append(&tail.x, &tail.y).unwrap();
+        assert!(report.cold_iters.is_none());
+        assert!(report.converged);
+        let scratch = Trainer::new(c).train(&ds).unwrap();
+        for (a, b) in model.beta.iter().zip(&scratch.beta) {
+            assert!((a - b).abs() < 1e-5 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn unsupported_methods_are_rejected() {
+        let ds = small_ds(60);
+        for method in ["exact-se", "nystrom"] {
+            let c = cfg(method.parse().unwrap());
+            assert!(matches!(
+                OnlineTrainer::fit(c, &ds),
+                Err(KrrError::BadParam(_))
+            ));
+        }
+        let c = KrrConfig {
+            precond: crate::api::PrecondSpec::Nystrom { rank: 8 },
+            ..cfg(MethodSpec::Wlsh)
+        };
+        assert!(matches!(OnlineTrainer::fit(c, &ds), Err(KrrError::BadParam(_))));
+    }
+
+    #[test]
+    fn append_input_validation() {
+        let ds = small_ds(80);
+        let mut online = OnlineTrainer::fit(cfg(MethodSpec::Wlsh), &ds).unwrap();
+        assert!(matches!(online.append(&[], &[]), Err(KrrError::BadParam(_))));
+        assert!(matches!(
+            online.append(&[1.0, 2.0], &[0.5]),
+            Err(KrrError::BadParam(_))
+        ));
+    }
+
+    #[test]
+    fn variance_agrees_with_exact_solve_at_small_n() {
+        let ds = small_ds(90);
+        let model = Trainer::new(cfg(MethodSpec::Wlsh)).train(&ds).unwrap();
+        let est = VarianceEstimator::new(Arc::clone(&model.op), 0.4).with_rank(90);
+        for qi in [0usize, 7, 33] {
+            let q = &ds.x[qi * ds.d..(qi + 1) * ds.d];
+            let fast = est.variance(q).unwrap();
+            let exact = est.variance_exact(q).unwrap();
+            assert!(fast >= 0.0);
+            assert!(
+                (fast - exact).abs() <= 1e-6 * (1.0 + exact.abs()),
+                "query {qi}: lanczos {fast} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn truncated_rank_overestimates_but_stays_close() {
+        let ds = small_ds(120);
+        let model = Trainer::new(cfg(MethodSpec::Rff)).train(&ds).unwrap();
+        let est32 = VarianceEstimator::new(Arc::clone(&model.op), 0.4);
+        let q = &ds.x[..ds.d];
+        let fast = est32.variance(q).unwrap();
+        let exact = est32.variance_exact(q).unwrap();
+        // Gauss quadrature under-integrates 1/μ ⇒ variance over-estimates
+        assert!(fast >= exact - 1e-9, "lanczos {fast} under exact {exact}");
+        assert!((fast - exact).abs() <= 0.05 * (1.0 + exact.abs()));
+    }
+
+    #[test]
+    fn predict_with_var_flows_through_the_model() {
+        let ds = small_ds(100);
+        let model = Trainer::new(cfg(MethodSpec::Wlsh)).train(&ds).unwrap();
+        let q = &ds.x[..3 * ds.d];
+        let mut out = vec![0.0; 3];
+        let mut var = vec![0.0; 3];
+        model
+            .predictor()
+            .predict_with_var(q, &mut out, &mut var)
+            .expect("wlsh models support variance");
+        assert_eq!(out, model.predict(q));
+        assert!(var.iter().all(|v| v.is_finite() && *v >= 0.0), "{var:?}");
+    }
+}

@@ -225,4 +225,62 @@ mod tests {
         let want = prof.eval(0.5) * prof.eval(0.25);
         assert!((prof.eval_vec(&x, &y) - want).abs() < 1e-12);
     }
+
+    /// Posterior variance under the quadrature-tabulated exact kernel:
+    /// non-negative, full-rank Lanczos matches the dense direct solve, and
+    /// observing the query point itself shrinks the variance there (the
+    /// kernel matrix grows by a PSD Schur complement — GP conditioning
+    /// never increases posterior variance).
+    #[test]
+    fn profile_kernel_posterior_variance_properties() {
+        use std::sync::Arc;
+
+        use crate::kernels::Kernel;
+        use crate::online::VarianceEstimator;
+        use crate::sketch::ExactKernelOp;
+        use crate::util::prop::{gens, prop_check};
+
+        // one profile-backed kernel shared across cases (each build runs
+        // the adaptive quadrature over 2048 table points)
+        let kernel = Kernel::wlsh("rect", 2.0, 1.0);
+        prop_check(
+            23,
+            6,
+            |r| {
+                let n = gens::size(r, 12, 22);
+                let d = 2usize;
+                let x = gens::matrix_f32(r, n, d);
+                let q = gens::vec_normal_f32(r, d);
+                let lambda = r.uniform_in(0.5, 2.0);
+                (n, d, x, q, lambda)
+            },
+            |(n, d, x, q, lambda)| {
+                let op = ExactKernelOp::new(x, *n, *d, kernel.clone());
+                let est = VarianceEstimator::new(Arc::new(op), *lambda).with_rank(*n);
+                let fast = est.variance(q).ok_or("exact op must expose cross_vector")?;
+                let exact = est.variance_exact(q).map_err(|e| e.to_string())?;
+                if !(fast.is_finite() && fast >= 0.0) {
+                    return Err(format!("variance {fast} not finite non-negative"));
+                }
+                if (fast - exact).abs() > 1e-6 * (1.0 + exact.abs()) {
+                    return Err(format!("lanczos {fast} vs exact {exact}"));
+                }
+                // grow the training set by the query row (the exact
+                // operator has no incremental path; rebuild)
+                let mut grown = x.clone();
+                grown.extend_from_slice(q);
+                let op2 = ExactKernelOp::new(&grown, *n + 1, *d, kernel.clone());
+                let shrunk = VarianceEstimator::new(Arc::new(op2), *lambda)
+                    .variance_exact(q)
+                    .map_err(|e| e.to_string())?;
+                if shrunk > exact + 1e-9 * (1.0 + exact.abs()) {
+                    return Err(format!("variance grew on conditioning: {exact} -> {shrunk}"));
+                }
+                if exact > 1e-9 && shrunk >= exact {
+                    return Err(format!("variance never shrank: {exact} -> {shrunk}"));
+                }
+                Ok(())
+            },
+        );
+    }
 }

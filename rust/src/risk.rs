@@ -137,10 +137,15 @@ pub fn empirical_risk(pred: &[f64], truth: &[f64]) -> f64 {
 
 #[cfg(test)]
 mod tests {
+    use std::sync::Arc;
+
     use super::*;
+    use crate::data::MatrixSource;
     use crate::kernels::Kernel;
+    use crate::online::VarianceEstimator;
     use crate::sketch::{ExactKernelOp, WlshSketch};
     use crate::solver::materialize;
+    use crate::util::prop::{gens, prop_check};
     use crate::util::rng::Pcg64;
 
     #[test]
@@ -198,5 +203,101 @@ mod tests {
     fn empirical_risk_basics() {
         assert_eq!(empirical_risk(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
         assert!((empirical_risk(&[1.0, 3.0], &[1.0, 1.0]) - 2.0).abs() < 1e-12);
+    }
+
+    /// The posterior variance the OSE guarantees underwrite: for random
+    /// data, queries, and ridges, the full-rank Lanczos estimate is
+    /// non-negative and agrees with the exact dense solve at small n.
+    #[test]
+    fn posterior_variance_nonnegative_and_matches_exact_at_small_n() {
+        prop_check(
+            11,
+            10,
+            |r| {
+                let n = gens::size(r, 18, 36);
+                let d = gens::size(r, 2, 3);
+                let x = gens::matrix_f32(r, n, d);
+                let q = gens::vec_normal_f32(r, d);
+                let lambda = r.uniform_in(0.3, 2.0);
+                (n, d, x, q, lambda)
+            },
+            |(n, d, x, q, lambda)| {
+                let sk = WlshSketch::build(x, *n, *d, 32, "rect", 2.0, 1.0, 13);
+                let est = VarianceEstimator::new(Arc::new(sk), *lambda).with_rank(*n);
+                let fast = est.variance(q).ok_or("wlsh must expose cross_vector")?;
+                let exact = est.variance_exact(q).map_err(|e| e.to_string())?;
+                if !(fast.is_finite() && fast >= 0.0) {
+                    return Err(format!("variance {fast} not finite non-negative"));
+                }
+                if (fast - exact).abs() > 1e-6 * (1.0 + exact.abs()) {
+                    return Err(format!("lanczos {fast} vs exact {exact}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// σ² = λ z_qᵀ(ZᵀZ+λI)⁻¹z_q in the sketch's feature space: appending
+    /// rows adds a PSD increment to ZᵀZ, so the posterior variance at any
+    /// query is monotonically non-increasing — and strictly shrinks when
+    /// the appended rows include the query itself.
+    #[test]
+    fn posterior_variance_shrinks_monotonically_as_rows_arrive_near_the_query() {
+        prop_check(
+            17,
+            8,
+            |r| {
+                let n = gens::size(r, 16, 30);
+                let d = gens::size(r, 2, 3);
+                let x = gens::matrix_f32(r, n, d);
+                let q = gens::vec_normal_f32(r, d);
+                let lambda = r.uniform_in(0.3, 2.0);
+                // three batches of rows at / jittered around the query
+                let batches: Vec<Vec<f32>> = (0..3)
+                    .map(|b| {
+                        (0..2 * d)
+                            .map(|i| {
+                                let jitter = if b == 0 && i < d {
+                                    0.0 // first batch leads with q itself
+                                } else {
+                                    (r.normal() * 0.05) as f32
+                                };
+                                q[i % d] + jitter
+                            })
+                            .collect()
+                    })
+                    .collect();
+                (n, d, x, q, lambda, batches)
+            },
+            |(n, d, x, q, lambda, batches)| {
+                let mut sk = WlshSketch::build(x, *n, *d, 32, "rect", 2.0, 1.0, 29);
+                let var_of = |sk: &WlshSketch| -> Result<f64, String> {
+                    VarianceEstimator::new(Arc::new(sk.clone()), *lambda)
+                        .variance_exact(q)
+                        .map_err(|e| e.to_string())
+                };
+                let first = var_of(&sk)?;
+                let mut prev = first;
+                for batch in batches {
+                    sk.append_source(
+                        &MatrixSource::new("near-query", batch, *d),
+                        8,
+                        1,
+                    )
+                    .map_err(|e| e.to_string())?;
+                    let next = var_of(&sk)?;
+                    if next > prev + 1e-9 * (1.0 + prev.abs()) {
+                        return Err(format!("variance grew: {prev} -> {next}"));
+                    }
+                    prev = next;
+                }
+                // observing the query itself must genuinely reduce
+                // uncertainty there (unless it was already ≈ certain)
+                if first > 1e-9 && prev >= first {
+                    return Err(format!("variance never shrank: {first} -> {prev}"));
+                }
+                Ok(())
+            },
+        );
     }
 }

@@ -92,6 +92,14 @@ impl KrrOperator for ExactKernelOp {
         Some(vec![self.kernel.diag(); self.n])
     }
 
+    fn cross_vector(&self, query: &[f32]) -> Option<(f64, Vec<f64>)> {
+        assert_eq!(query.len(), self.d, "query must have d features");
+        let v = (0..self.n)
+            .map(|j| self.kernel.eval_f32(query, self.row(j)))
+            .collect();
+        Some((self.kernel.diag(), v))
+    }
+
     fn name(&self) -> String {
         format!("exact({})", self.kernel.name())
     }

@@ -39,6 +39,16 @@ pub trait Predictor: Send + Sync {
         out
     }
 
+    /// η̃(q_i) **and** the sketched posterior variance σ̃²(q_i) for each row
+    /// of `queries`, written into `out`/`var` (both `queries.len()/dim()`
+    /// long). Variance semantics, determinism, and tolerance are documented
+    /// on `online::VarianceEstimator`, which backs every implementation.
+    /// Default: `None` — the handle was frozen without an estimator.
+    fn predict_with_var(&self, queries: &[f32], out: &mut [f64], var: &mut [f64]) -> Option<()> {
+        let _ = (queries, out, var);
+        None
+    }
+
     /// η̃(q_i) for each CSR row of `queries` (`out.len()` must equal
     /// `queries.nrows()`). The default densifies one row at a time into an
     /// O(d) scratch buffer and defers to
@@ -85,6 +95,16 @@ pub trait KrrOperator: Send + Sync {
     /// solver's Jacobi preconditioner). Default: `None` — callers must fall
     /// back to an unpreconditioned solve or a different preconditioner.
     fn diag(&self) -> Option<Vec<f64>> {
+        None
+    }
+
+    /// Cross-covariance of one query row against the training set in the
+    /// operator's (sketched) geometry: `(k̃(x,x), [k̃(x, x_i)]_i)` — the
+    /// ingredients of the posterior-variance estimate
+    /// σ²(x) = k̃(x,x) − k̃ₓᵀ(K̃+λI)⁻¹k̃ₓ (see `online::VarianceEstimator`).
+    /// Default: `None` — the operator does not support variance estimation.
+    fn cross_vector(&self, query: &[f32]) -> Option<(f64, Vec<f64>)> {
+        let _ = query;
         None
     }
 

@@ -18,6 +18,9 @@ use crate::util::rng::Pcg64;
 const FEAT_BLOCK: usize = 256;
 
 /// RFF sketch of the squared-exponential kernel exp(-‖x-y‖²/s²).
+/// `Clone` supports the online-update path's copy-on-write
+/// (`Arc::make_mut`).
+#[derive(Clone)]
 pub struct RffSketch {
     /// n×D row-major feature matrix.
     z: Vec<f32>,
@@ -84,6 +87,37 @@ impl RffSketch {
             Ok(())
         })?;
         Ok(sk)
+    }
+
+    /// Online append: featurize further rows from `src` and extend the n×D
+    /// feature matrix under the already-drawn Ω and b (no RNG is consumed).
+    /// Featurization is pure per row, so the grown sketch is bit-identical
+    /// to a from-scratch [`build_source`](Self::build_source) over the
+    /// concatenated data at every chunk size and worker count. Returns the
+    /// number of rows appended.
+    pub fn append_source(
+        &mut self,
+        src: &dyn DataSource,
+        chunk_rows: usize,
+        workers: usize,
+    ) -> Result<usize, KrrError> {
+        if src.dim() != self.d {
+            return Err(KrrError::Dataset(format!(
+                "append expects {} features per row, got {}",
+                self.d,
+                src.dim()
+            )));
+        }
+        let before = self.n;
+        src.for_each_chunk_any(chunk_rows, &mut |chunk, ys| {
+            match chunk {
+                Chunk::Dense(rows) => self.append_rows(rows, workers),
+                Chunk::Sparse(sp) => self.append_rows_sparse(&sp, workers),
+            }
+            self.n += ys.len();
+            Ok(())
+        })?;
+        Ok(self.n - before)
     }
 
     /// Featurize a row block and append it to `z`, threading over fixed
@@ -196,6 +230,19 @@ impl RffSketch {
         out
     }
 
+    /// Cross-covariance of one query against the training set in the
+    /// sketched geometry: `(k̃(x,x), k̃ₓ)` with k̃(x,x) = ‖z(x)‖² and
+    /// (k̃ₓ)_i = z(x_i)ᵀz(x) — one featurize plus one pass over Z.
+    pub fn cross_vector(&self, query: &[f32]) -> (f64, Vec<f64>) {
+        assert_eq!(query.len(), self.d, "query must have d features");
+        let zq = self.featurize(query);
+        let kxx = zq.iter().map(|&v| v as f64 * v as f64).sum();
+        let v = (0..self.n)
+            .map(|i| dot_f32(&self.z[i * self.dd..(i + 1) * self.dd], &zq) as f64)
+            .collect();
+        (kxx, v)
+    }
+
     /// θ = Zᵀ β (feature-space coefficients; predict is φ(q)ᵀθ).
     pub fn theta(&self, beta: &[f64]) -> Vec<f64> {
         let mut theta = vec![0.0f64; self.dd];
@@ -253,6 +300,10 @@ impl KrrOperator for RffSketch {
                 })
                 .collect(),
         )
+    }
+
+    fn cross_vector(&self, query: &[f32]) -> Option<(f64, Vec<f64>)> {
+        Some(RffSketch::cross_vector(self, query))
     }
 
     fn name(&self) -> String {

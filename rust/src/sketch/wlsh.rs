@@ -60,6 +60,7 @@ const PAR_ROUND: usize = 32;
 
 /// One hashed instance: the function, its dense CSR bucket table, the
 /// per-point weights, and the same weights permuted into CSR member order.
+#[derive(Clone)]
 pub struct WlshInstance {
     pub func: LshFunction,
     pub table: BucketTable,
@@ -102,6 +103,11 @@ struct InstanceAccum {
 /// n×d training matrix: every constructor funnels through the chunked
 /// [`build_source`](Self::build_source) assembly, which only ever holds
 /// one O(chunk·d) block of (scaled) rows at a time.
+///
+/// `Clone` supports the online-update path's copy-on-write
+/// (`Arc::make_mut`): models already serving the old sketch keep it,
+/// while the online trainer appends into its private copy.
+#[derive(Clone)]
 pub struct WlshSketch {
     pub instances: Vec<WlshInstance>,
     pub family: LshFamily,
@@ -357,6 +363,113 @@ impl WlshSketch {
         Ok(WlshSketch { instances, family, mode, n, scale })
     }
 
+    /// Hash additional rows into the existing sketch — the online-update
+    /// path. Every instance keeps its already-sampled hash function (no RNG
+    /// is consumed), its finished bucket table reopens as a
+    /// [`BucketTableBuilder`] positioned exactly where the original build
+    /// stopped, and the appended chunks run through the same scale /
+    /// hash / push / counting-sort pipeline as
+    /// [`build_source`](Self::build_source) — so the appended sketch is
+    /// **bit-identical** to a from-scratch build over the concatenated
+    /// data, at every chunk size and worker count
+    /// (`tests/online_equivalence.rs`). Returns the number of rows
+    /// appended.
+    pub fn append_source(
+        &mut self,
+        src: &dyn DataSource,
+        chunk_rows: usize,
+        workers: usize,
+    ) -> Result<usize, KrrError> {
+        let d = self.family.d;
+        if src.dim() != d {
+            return Err(KrrError::Dataset(format!(
+                "append expects {d} features per row, got {}",
+                src.dim()
+            )));
+        }
+        let family = self.family.clone();
+        let mode = self.mode;
+        // Reopen every instance as a mid-build accumulator: the finished
+        // table's renumbering map + per-point indices ARE the builder
+        // state after the original rows.
+        let mut accums: Vec<InstanceAccum> = std::mem::take(&mut self.instances)
+            .into_iter()
+            .map(|inst| InstanceAccum {
+                func: inst.func,
+                builder: inst.table.into_builder(),
+                weights: inst.weights,
+                ids_buf: Vec::new(),
+                w_buf: Vec::new(),
+                plan: None,
+                done: None,
+            })
+            .collect();
+        let inv = (1.0 / self.scale) as f32;
+        let mut x_buf: Vec<f32> = Vec::new();
+        let mut v_buf: Vec<f32> = Vec::new();
+        let mut appended = 0usize;
+        src.for_each_chunk_any(chunk_rows, &mut |chunk, ys| {
+            appended += ys.len();
+            let scaled: Chunk<'_> = match chunk {
+                Chunk::Dense(rows) => {
+                    x_buf.clear();
+                    x_buf.extend(rows.iter().map(|&v| v * inv));
+                    Chunk::Dense(&x_buf)
+                }
+                Chunk::Sparse(sp) if mode == IdMode::U64 => {
+                    v_buf.clear();
+                    v_buf.extend(sp.values.iter().map(|&v| v * inv));
+                    Chunk::Sparse(SparseChunk {
+                        indptr: sp.indptr,
+                        indices: sp.indices,
+                        values: &v_buf,
+                    })
+                }
+                Chunk::Sparse(sp) => {
+                    sp.densify_into(d, &mut x_buf);
+                    for v in x_buf.iter_mut() {
+                        *v *= inv;
+                    }
+                    Chunk::Dense(&x_buf)
+                }
+            };
+            par::fan_out_mut(&mut accums, workers, |_, acc| {
+                acc.ids_buf.clear();
+                acc.w_buf.clear();
+                match &scaled {
+                    Chunk::Dense(rows) => {
+                        acc.func
+                            .hash_batch(rows, &family, mode, &mut acc.ids_buf, &mut acc.w_buf);
+                    }
+                    Chunk::Sparse(sp) => {
+                        if acc.plan.is_none() {
+                            acc.plan = Some(acc.func.sparse_plan(&family));
+                        }
+                        let plan = acc.plan.as_ref().expect("plan just built");
+                        acc.func
+                            .hash_sparse(sp, plan, &family, &mut acc.ids_buf, &mut acc.w_buf);
+                    }
+                }
+                for &id in &acc.ids_buf {
+                    acc.builder.push(id);
+                }
+                acc.weights.extend_from_slice(&acc.w_buf);
+            });
+            Ok(())
+        })?;
+        par::fan_out_mut(&mut accums, workers, |_, acc| {
+            let table = std::mem::take(&mut acc.builder).finish();
+            let weights = std::mem::take(&mut acc.weights);
+            acc.done = Some(WlshInstance::new(acc.func.clone(), table, weights));
+        });
+        self.instances = accums
+            .into_iter()
+            .map(|a| a.done.expect("instance finalized"))
+            .collect();
+        self.n += appended;
+        Ok(appended)
+    }
+
     pub fn m(&self) -> usize {
         self.instances.len()
     }
@@ -549,6 +662,70 @@ impl WlshSketch {
             .collect()
     }
 
+    /// One fused block's un-normalized cross-covariance contribution for a
+    /// pre-scaled query: `(Σ_s w_s(q)², Σ_s w_s(q)·w_s(x_i)·1[h_s(x_i)=h_s(q)])`
+    /// over the block's instances, walking each matched bucket's CSR member
+    /// range. Instances inside the block accumulate in order, mirroring
+    /// [`block_contrib`](Self::block_contrib).
+    fn cross_block_contrib(&self, block: &[WlshInstance], q_scaled: &[f32]) -> (f64, Vec<f64>) {
+        let mut kxx = 0.0f64;
+        let mut out = vec![0.0f64; self.n];
+        for inst in block {
+            let (id, w) = inst.func.hash_point(q_scaled, &self.family, self.mode);
+            kxx += w as f64 * w as f64;
+            if let Some(b) = inst.table.lookup(id) {
+                let lo = inst.table.offsets[b as usize] as usize;
+                let hi = inst.table.offsets[b as usize + 1] as usize;
+                for k in lo..hi {
+                    out[inst.table.members[k] as usize] += w as f64 * inst.weights_csr[k] as f64;
+                }
+            }
+        }
+        (kxx, out)
+    }
+
+    /// Raw per-block cross-covariance partials for one query, in local
+    /// block order: entry `b` is the un-normalized
+    /// `(Σ w_s(q)², cross vector)` contribution of instance block `b` —
+    /// the cross-vector analogue of [`block_partials`](Self::block_partials).
+    /// Shard workers ship these to the coordinator, which reduces them in
+    /// global block order and applies `1/m_total` once, reproducing the
+    /// single-process [`cross_vector`](Self::cross_vector) bit for bit.
+    pub fn cross_partials(&self, query: &[f32], threads: usize) -> Vec<(f64, Vec<f64>)> {
+        let d = self.family.d;
+        assert_eq!(query.len(), d, "query must have d features");
+        let inv = (1.0 / self.scale) as f32;
+        let q_scaled: Vec<f32> = query.iter().map(|&x| x * inv).collect();
+        let blocks: Vec<&[WlshInstance]> = self.instances.chunks(FUSE_BLOCK).collect();
+        par::fan_out(blocks.len(), threads, |b| {
+            self.cross_block_contrib(blocks[b], &q_scaled)
+        })
+    }
+
+    /// Cross-covariance of one query against the training set in the
+    /// sketched geometry: `(k̃(q,q), k̃_q)` with
+    /// k̃(q,q) = (1/m)·Σ_s w_s(q)² and
+    /// (k̃_q)_i = (1/m)·Σ_s w_s(q)·w_s(x_i)·1[h_s(x_i)=h_s(q)] — O(m·d)
+    /// hashing plus one walk over each matched bucket. Block partials are
+    /// reduced in fixed block order, so the value is thread-count
+    /// independent.
+    pub fn cross_vector(&self, query: &[f32]) -> (f64, Vec<f64>) {
+        let partials = self.cross_partials(query, self.auto_threads());
+        let mut kxx = 0.0f64;
+        let mut v = vec![0.0f64; self.n];
+        for (kp, p) in &partials {
+            kxx += kp;
+            for (o, x) in v.iter_mut().zip(p) {
+                *o += *x;
+            }
+        }
+        let inv_m = 1.0 / self.m() as f64;
+        for x in v.iter_mut() {
+            *x *= inv_m;
+        }
+        (kxx * inv_m, v)
+    }
+
     /// One instance's additive mat-vec contribution (the pre-fusion
     /// formulation: one O(n) buffer per instance).
     fn instance_contrib(&self, inst: &WlshInstance, beta: &[f64]) -> Vec<f64> {
@@ -621,6 +798,10 @@ impl KrrOperator for WlshSketch {
 
     fn diag(&self) -> Option<Vec<f64>> {
         Some(self.diag_values())
+    }
+
+    fn cross_vector(&self, query: &[f32]) -> Option<(f64, Vec<f64>)> {
+        Some(WlshSketch::cross_vector(self, query))
     }
 
     fn name(&self) -> String {

@@ -6,6 +6,7 @@
 //! makes sketched KRR competitive at small λ), plus a dense direct solve
 //! for small n / ground-truthing.
 
+use crate::api::KrrError;
 use crate::linalg::{axpy, dot, norm2, CholeskyFactor, Matrix};
 use crate::sketch::{KrrOperator, NystromPrecond};
 
@@ -18,11 +19,16 @@ pub struct CgOptions {
     /// When set, the solver prints one progress line per iteration
     /// (`iter`, `rel_res`) to stderr.
     pub verbose: bool,
+    /// Warm-start iterate β₀. `None` starts from zero (the historic path,
+    /// byte-identical to before this field existed). `Some(x0)` seeds the
+    /// solve at x0 with r₀ = y − (K̃+λI)x0 — the online re-solve path seeds
+    /// this with the previous β padded with zeros for the appended rows.
+    pub x0: Option<Vec<f64>>,
 }
 
 impl Default for CgOptions {
     fn default() -> Self {
-        CgOptions { max_iters: 200, tol: 1e-5, verbose: false }
+        CgOptions { max_iters: 200, tol: 1e-5, verbose: false, x0: None }
     }
 }
 
@@ -37,6 +43,27 @@ pub struct CgResult {
     pub history: Vec<f64>,
 }
 
+/// Initial iterate and residual for a (P)CG solve. `x0 = None` reproduces
+/// the historic cold start (β = 0, r = y — no operator application, no
+/// float ops, so the path is byte-identical to before warm starts
+/// existed); `x0 = Some(v)` starts at v with r = y − (K̃+λI)v.
+fn warm_start<F: Fn(&[f64]) -> Vec<f64>>(
+    n: usize,
+    y: &[f64],
+    opts: &CgOptions,
+    apply: &F,
+) -> (Vec<f64>, Vec<f64>) {
+    match &opts.x0 {
+        None => (vec![0.0f64; n], y.to_vec()),
+        Some(x0) => {
+            assert_eq!(x0.len(), n, "x0 length must match the operator size");
+            let ax = apply(x0);
+            let r = y.iter().zip(&ax).map(|(yv, av)| yv - av).collect();
+            (x0.clone(), r)
+        }
+    }
+}
+
 /// Solve (K̃ + λI) β = y by conjugate gradients; K̃ is PSD by Claim 10, so
 /// the shifted system is SPD and CG applies.
 pub fn solve_krr(op: &dyn KrrOperator, y: &[f64], lambda: f64, opts: &CgOptions) -> CgResult {
@@ -48,8 +75,7 @@ pub fn solve_krr(op: &dyn KrrOperator, y: &[f64], lambda: f64, opts: &CgOptions)
         out
     };
     let y_norm = norm2(y).max(1e-300);
-    let mut beta = vec![0.0f64; n];
-    let mut r = y.to_vec();
+    let (mut beta, mut r) = warm_start(n, y, opts, &apply);
     let mut p = r.clone();
     let mut rs_old = dot(&r, &r);
     let mut history = Vec::new();
@@ -150,8 +176,7 @@ pub fn solve_krr_pcg(
         out
     };
     let y_norm = norm2(y).max(1e-300);
-    let mut beta = vec![0.0f64; n];
-    let mut r = y.to_vec();
+    let (mut beta, mut r) = warm_start(n, y, opts, &apply);
     let mut z = precond.apply(&r);
     let mut p = z.clone();
     let mut rz = dot(&r, &z);
@@ -278,11 +303,12 @@ pub fn solve_krr_preconditioned(
 }
 
 /// Dense direct KRR solve (Cholesky of K + λI) — ground truth for tests
-/// and the small-n fast path.
-pub fn solve_krr_direct(k: &Matrix, y: &[f64], lambda: f64) -> Result<Vec<f64>, String> {
+/// and the small-n fast path. A non-SPD matrix surfaces as
+/// [`KrrError::SolveFailed`], like every other solver entry point.
+pub fn solve_krr_direct(k: &Matrix, y: &[f64], lambda: f64) -> Result<Vec<f64>, KrrError> {
     let mut a = k.clone();
     a.add_diag(lambda);
-    let ch = CholeskyFactor::new(&a, 0.0)?;
+    let ch = CholeskyFactor::new(&a, 0.0).map_err(KrrError::SolveFailed)?;
     Ok(ch.solve(y))
 }
 
@@ -321,7 +347,7 @@ mod tests {
         let (x, y) = toy_problem(n, d, 1);
         let op = ExactKernelOp::new(&x, n, d, Kernel::squared_exp(1.0));
         let lambda = 0.1;
-        let cg = solve_krr(&op, &y, lambda, &CgOptions { max_iters: 500, tol: 1e-12, verbose: false });
+        let cg = solve_krr(&op, &y, lambda, &CgOptions { max_iters: 500, tol: 1e-12, verbose: false, x0: None });
         let k = materialize(&op);
         let direct = solve_krr_direct(&k, &y, lambda).unwrap();
         for i in 0..n {
@@ -367,7 +393,7 @@ mod tests {
         let (x, y) = toy_problem(n, d, 5);
         let op = ExactKernelOp::new(&x, n, d, Kernel::laplace(1.0));
         let lambda = 0.05;
-        let opts = CgOptions { max_iters: 400, tol: 1e-10, verbose: false };
+        let opts = CgOptions { max_iters: 400, tol: 1e-10, verbose: false, x0: None };
         let plain = solve_krr(&op, &y, lambda, &opts);
         let sketch = crate::sketch::WlshSketch::build(&x, n, d, 256, "rect", 2.0, 1.0, 9);
         let pcg = solve_krr_preconditioned(&op, &sketch, &y, lambda, &opts, 30);
@@ -387,7 +413,7 @@ mod tests {
         let (x, y) = toy_problem(n, d, 6);
         let op = ExactKernelOp::new(&x, n, d, Kernel::laplace(0.3));
         let lambda = 1e-3;
-        let opts = CgOptions { max_iters: 500, tol: 1e-8, verbose: false };
+        let opts = CgOptions { max_iters: 500, tol: 1e-8, verbose: false, x0: None };
         let plain = solve_krr(&op, &y, lambda, &opts);
         let sketch = crate::sketch::WlshSketch::build(&x, n, d, 2048, "rect", 2.0, 0.3, 11);
         let pcg = solve_krr_preconditioned(&op, &sketch, &y, lambda, &opts, 60);
@@ -406,7 +432,7 @@ mod tests {
         let (n, d) = (48, 3);
         let (x, y) = toy_problem(n, d, 7);
         let op = ExactKernelOp::new(&x, n, d, Kernel::squared_exp(1.0));
-        let opts = CgOptions { max_iters: 200, tol: 1e-9, verbose: false };
+        let opts = CgOptions { max_iters: 200, tol: 1e-9, verbose: false, x0: None };
         let plain = solve_krr(&op, &y, 0.05, &opts);
         let pcg = solve_krr_pcg(&op, &y, 0.05, &opts, &Preconditioner::Identity);
         assert_eq!(plain.iters, pcg.iters);
@@ -428,7 +454,7 @@ mod tests {
         let lambda = 0.2;
         let diag = op.diag().unwrap();
         let pre = Preconditioner::jacobi(&diag, lambda);
-        let opts = CgOptions { max_iters: 500, tol: 1e-12, verbose: false };
+        let opts = CgOptions { max_iters: 500, tol: 1e-12, verbose: false, x0: None };
         let pcg = solve_krr_pcg(&op, &y, lambda, &opts, &pre);
         let k = materialize(&op);
         let direct = solve_krr_direct(&k, &y, lambda).unwrap();
@@ -452,7 +478,7 @@ mod tests {
         let lambda = 0.05;
         let nys = crate::sketch::NystromSketch::build(&x, n, d, 24, kernel, 10).unwrap();
         let pre = Preconditioner::Nystrom(nys.ridge_precond(lambda).unwrap());
-        let opts = CgOptions { max_iters: 500, tol: 1e-11, verbose: false };
+        let opts = CgOptions { max_iters: 500, tol: 1e-11, verbose: false, x0: None };
         let pcg = solve_krr_pcg(&op, &y, lambda, &opts, &pre);
         let k = materialize(&op);
         let direct = solve_krr_direct(&k, &y, lambda).unwrap();

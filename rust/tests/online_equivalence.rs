@@ -1,0 +1,265 @@
+//! The online-learning subsystem's correctness contract, end to end:
+//!
+//! * **Append-then-cold-resolve is retraining, bit for bit.** Hashing new
+//!   rows into the existing per-instance bucket tables and re-running the
+//!   cold CG solve must produce exactly the β a from-scratch
+//!   `Trainer::train` on the concatenated data produces — across chunk
+//!   sizes, worker-thread counts, and shard counts {1, 2, 4}.
+//! * **Warm starts save iterations.** Seeding CG at the previous β
+//!   (zero-padded for the new rows) measurably reduces the iteration
+//!   count versus the cold solve on the same appended system.
+//! * **Hot swaps lose no replies.** A client holding one TCP connection
+//!   across `append`-triggered model swaps gets exactly one reply per
+//!   request, with predictions always served by a fully-published model.
+//!
+//! Shard workers run in-thread (`run_worker` on a std thread, addressed
+//! through a `remote(...)` topology) — same wire protocol as real
+//! `shard-worker` processes, no spawn cost.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{mpsc, Arc, Mutex};
+
+use wlsh_krr::api::{MethodSpec, TopologySpec};
+use wlsh_krr::config::KrrConfig;
+use wlsh_krr::coordinator::{
+    run_worker, serve, ModelRegistry, ServerConfig, Trainer, DEFAULT_MODEL,
+};
+use wlsh_krr::data::{synthetic_by_name, Dataset};
+use wlsh_krr::online::{OnlineTrainer, ResolveMode};
+use wlsh_krr::util::json::Json;
+
+fn dataset(n: usize) -> Dataset {
+    let mut ds = synthetic_by_name("wine", Some(n), 7).expect("dataset");
+    ds.standardize();
+    ds
+}
+
+/// Order-preserving head/tail cut. (`Dataset::split` shuffles, which
+/// would break append-vs-retrain bit-identity: the sketch build is
+/// row-order-dependent.)
+fn cut(ds: &Dataset, at: usize) -> (Dataset, Dataset) {
+    let head =
+        Dataset::new("head", ds.x[..at * ds.d].to_vec(), ds.y[..at].to_vec(), ds.d);
+    let tail =
+        Dataset::new("tail", ds.x[at * ds.d..].to_vec(), ds.y[at..].to_vec(), ds.d);
+    (head, tail)
+}
+
+fn config(chunk_rows: usize, workers: usize) -> KrrConfig {
+    KrrConfig {
+        method: MethodSpec::Wlsh,
+        budget: 24, // 3 FUSE_BLOCKs: a 4-shard plan includes an empty shard
+        scale: 3.0,
+        lambda: 0.5,
+        seed: 7,
+        chunk_rows,
+        workers,
+        cg_max_iters: 400,
+        cg_tol: 1e-8,
+        ..Default::default()
+    }
+}
+
+/// Start `n` in-thread shard workers on ephemeral ports; returns their
+/// addresses in shard order. The threads serve until process exit.
+fn spawn_thread_workers(n: usize) -> Vec<String> {
+    let (tx, rx) = mpsc::channel();
+    for _ in 0..n {
+        let tx = tx.clone();
+        std::thread::spawn(move || run_worker("127.0.0.1:0", Some(tx)).unwrap());
+    }
+    (0..n).map(|_| rx.recv().expect("worker announced its address")).collect()
+}
+
+#[test]
+fn append_matches_scratch_retrain_across_chunk_sizes_and_threads() {
+    let ds = dataset(240);
+    let (head, tail) = cut(&ds, 180);
+    // 17 leaves a ragged final chunk in both the head build and the append
+    for chunk_rows in [17usize, 64] {
+        for workers in [1usize, 2] {
+            for method in [MethodSpec::Wlsh, MethodSpec::Rff] {
+                let mut cfg = config(chunk_rows, workers);
+                cfg.method = method;
+                let scratch = Trainer::new(cfg.clone()).train(&ds).expect("scratch");
+                let mut online =
+                    OnlineTrainer::fit(cfg, &head).expect("online fit");
+                let (report, model) = online.append(&tail.x, &tail.y).expect("append");
+                assert_eq!(report.appended, tail.n);
+                assert_eq!(report.n, ds.n);
+                assert_eq!(
+                    model.beta, scratch.beta,
+                    "beta diverged at chunk={chunk_rows} workers={workers} {method:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn append_matches_scratch_retrain_across_shard_counts() {
+    let ds = dataset(240);
+    let (head, tail) = cut(&ds, 180);
+    for workers in [1usize, 2] {
+        // the sharded solve is itself bit-identical to the local one
+        // (tests/shard_equivalence.rs), so the local scratch train is the
+        // one reference every shard count must hit
+        let scratch = Trainer::new(config(64, workers)).train(&ds).expect("scratch");
+        for shards in [1usize, 2, 4] {
+            let mut cfg = config(64, workers);
+            cfg.topology = TopologySpec::Remote { addrs: spawn_thread_workers(shards) };
+            let mut online = OnlineTrainer::fit(cfg, &head).expect("sharded fit");
+            let (report, model) = online.append(&tail.x, &tail.y).expect("append");
+            assert_eq!(report.appended, tail.n);
+            assert_eq!(report.n, ds.n);
+            assert_eq!(
+                model.beta, scratch.beta,
+                "beta diverged at shards={shards} workers={workers}"
+            );
+            // the swapped-in model serves: predictions match the scratch
+            // model exactly (same β, same sketch contents)
+            let nq = ds.d * 6;
+            assert_eq!(model.predict(&ds.x[..nq]), scratch.predict(&ds.x[..nq]));
+        }
+    }
+}
+
+#[test]
+fn successive_appends_stay_bitwise_identical_to_retraining() {
+    let ds = dataset(260);
+    let cfg = config(64, 1);
+    let (head, rest) = cut(&ds, 140);
+    let (mid, tail) = cut(&rest, 60);
+    let mut online = OnlineTrainer::fit(cfg.clone(), &head).expect("fit");
+    online.append(&mid.x, &mid.y).expect("append 1");
+    let (_, model) = online.append(&tail.x, &tail.y).expect("append 2");
+    let scratch = Trainer::new(cfg).train(&ds).expect("scratch");
+    assert_eq!(model.beta, scratch.beta, "two appends != one retrain");
+}
+
+#[test]
+fn warm_start_reduces_cg_iterations() {
+    let ds = dataset(400);
+    let (head, tail) = cut(&ds, 384);
+    let mut online = OnlineTrainer::fit(config(64, 1), &head).expect("fit");
+    // ColdExact runs both solves: the warm one for the report, the cold
+    // one for the published (bit-identical) β
+    let (report, _) = online.append(&tail.x, &tail.y).expect("append");
+    let cold = report.cold_iters.expect("ColdExact measures the cold solve");
+    assert!(
+        report.warm_iters < cold,
+        "warm start saved nothing: warm {} vs cold {}",
+        report.warm_iters,
+        cold
+    );
+    // and the warm β itself is solver-tolerance close: publish it
+    let (head2, tail2) = cut(&ds, 384);
+    let mut warm_online = OnlineTrainer::fit(config(64, 1), &head2).expect("fit");
+    warm_online.set_mode(ResolveMode::Warm);
+    let (warm_report, warm_model) = warm_online.append(&tail2.x, &tail2.y).expect("append");
+    assert!(warm_report.converged);
+    assert!(warm_report.cold_iters.is_none(), "Warm mode skips the cold solve");
+    let scratch = Trainer::new(config(64, 1)).train(&ds).expect("scratch");
+    for (a, b) in warm_model.beta.iter().zip(&scratch.beta) {
+        assert!((a - b).abs() < 1e-5 * (1.0 + b.abs()), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn live_connection_survives_hot_swaps_without_losing_replies() {
+    let ds = dataset(220);
+    let (head, rest) = cut(&ds, 160);
+    let cfg = config(64, 1);
+    let online = OnlineTrainer::fit(cfg, &head).expect("fit");
+    let registry = ModelRegistry::single(online.model());
+    registry
+        .attach_online(DEFAULT_MODEL, Arc::new(Mutex::new(online)))
+        .expect("attach");
+    let (tx, rx) = mpsc::channel();
+    let scfg = ServerConfig { addr: "127.0.0.1:0".into(), workers: 2, ..Default::default() };
+    let server = std::thread::spawn(move || serve(registry, scfg, Some(tx)).unwrap());
+    let addr = rx.recv().expect("server announced its address");
+
+    let mut conn = TcpStream::connect(&addr).expect("connect");
+    conn.set_nodelay(true).ok();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut ask = |req: String| -> Json {
+        writeln!(conn, "{req}").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(!line.is_empty(), "server dropped the connection mid-stream");
+        Json::parse(&line).unwrap_or_else(|e| panic!("{req} → {line}: {e}"))
+    };
+    let row_json = |i: usize| -> String {
+        let feats: Vec<String> =
+            ds.x[i * ds.d..(i + 1) * ds.d].iter().map(|v| format!("{v}")).collect();
+        format!("[{}]", feats.join(","))
+    };
+
+    // interleave predicts with appends on ONE connection: every request
+    // gets exactly one reply (ask() would wedge or panic otherwise), and
+    // every reply is a well-formed prediction
+    let d = ds.d;
+    let batches = 3usize;
+    let per = rest.n / batches;
+    let mut sent_rows = 0usize;
+    for b in 0..batches {
+        for qi in 0..4 {
+            let resp = ask(format!("{{\"features\": {}}}", row_json(qi)));
+            let p = resp.get("pred").and_then(Json::as_f64).unwrap();
+            assert!(p.is_finite(), "batch {b} query {qi}: {p}");
+        }
+        // uncertainty flows on the same connection
+        let resp = ask(format!("{{\"features\": {}, \"var\": true}}", row_json(0)));
+        assert!(resp.get("var").and_then(Json::as_f64).unwrap() >= 0.0);
+        // append the next slice: the server re-solves and hot-swaps
+        let lo = b * per;
+        let hi = if b + 1 == batches { rest.n } else { lo + per };
+        let rows: Vec<String> = (lo..hi)
+            .map(|i| {
+                let feats: Vec<String> = rest.x[i * d..(i + 1) * d]
+                    .iter()
+                    .map(|v| format!("{v}"))
+                    .collect();
+                format!("[{}]", feats.join(","))
+            })
+            .collect();
+        let targets: Vec<String> =
+            rest.y[lo..hi].iter().map(|v| format!("{v}")).collect();
+        let resp = ask(format!(
+            "{{\"cmd\": \"append\", \"rows\": [{}], \"targets\": [{}]}}",
+            rows.join(","),
+            targets.join(",")
+        ));
+        sent_rows += hi - lo;
+        assert_eq!(resp.get("appended").and_then(Json::as_usize), Some(hi - lo));
+        assert_eq!(resp.get("n").and_then(Json::as_usize), Some(head.n + sent_rows));
+        assert_eq!(
+            resp.get("generation").and_then(Json::as_usize),
+            Some(b + 2),
+            "each append must advance the registry generation"
+        );
+    }
+    // after all appends, the served model is bit-identical to a scratch
+    // train on the full dataset: β equality is proven in the unit tests,
+    // here we check the wire answer agrees with local prediction
+    let scratch = Trainer::new(config(64, 1)).train(&ds).expect("scratch");
+    let want = scratch.predict(&ds.x[..d]);
+    let resp = ask(format!("{{\"features\": {}}}", row_json(0)));
+    let got = resp.get("pred").and_then(Json::as_f64).unwrap();
+    assert_eq!(got, want[0], "served prediction != scratch retrain prediction");
+
+    let resp = ask("{\"cmd\": \"stats\"}".to_string());
+    let generation = resp
+        .get("models")
+        .and_then(|m| m.get(DEFAULT_MODEL))
+        .and_then(|m| m.get("generation"))
+        .and_then(Json::as_usize)
+        .unwrap();
+    assert_eq!(generation, 1 + batches);
+
+    let resp = ask("{\"cmd\": \"shutdown\"}".to_string());
+    assert!(resp.get("error").is_none(), "{resp:?}");
+    server.join().unwrap();
+}

@@ -75,7 +75,7 @@ fn jacobi_pcg_beats_plain_cg_on_diagonally_skewed_system() {
     }
     let op = DenseOp { k: k.clone() };
     let lambda = 1e-3;
-    let opts = CgOptions { max_iters: 4000, tol: 1e-8, verbose: false };
+    let opts = CgOptions { max_iters: 4000, tol: 1e-8, verbose: false, x0: None };
 
     let plain = solve_krr(&op, &y, lambda, &opts);
     let pre = Preconditioner::jacobi(&op.diag().unwrap(), lambda);
@@ -110,7 +110,7 @@ fn nystrom_pcg_beats_plain_cg_on_small_lambda_kernel_system() {
     let kernel = Kernel::laplace(0.3);
     let op = ExactKernelOp::new(&x, n, d, kernel.clone());
     let lambda = 1e-3;
-    let opts = CgOptions { max_iters: 2000, tol: 1e-8, verbose: false };
+    let opts = CgOptions { max_iters: 2000, tol: 1e-8, verbose: false, x0: None };
 
     let plain = solve_krr(&op, &y, lambda, &opts);
     let nys = NystromSketch::build(&x, n, d, 100, kernel, 17).unwrap();
@@ -145,7 +145,7 @@ fn every_preconditioner_solves_the_same_wlsh_sketch_system() {
     let (x, y) = toy_problem(n, d, 19);
     let sk = wlsh_krr::sketch::WlshSketch::build(&x, n, d, m, "smooth2", 7.0, 1.0, 20);
     let lambda = 0.05;
-    let opts = CgOptions { max_iters: 1000, tol: 1e-10, verbose: false };
+    let opts = CgOptions { max_iters: 1000, tol: 1e-10, verbose: false, x0: None };
     let plain = solve_krr(&sk, &y, lambda, &opts);
     assert!(plain.converged);
 

@@ -163,6 +163,7 @@ fn serve_binary_survives_concurrent_mixed_load_then_exits_cleanly() {
                         let req = Request::Batch {
                             rows: idxs.iter().map(|&qi| row(te_x, d, qi)).collect(),
                             model: None,
+                            var: false,
                         };
                         send(&mut conn, &req);
                         for &qi in &idxs {
@@ -175,8 +176,11 @@ fn serve_binary_survives_concurrent_mixed_load_then_exits_cleanly() {
                         }
                     } else {
                         let qi = (c * 7919 + r * 13) % nq;
-                        let req =
-                            Request::Predict { features: row(te_x, d, qi), model: None };
+                        let req = Request::Predict {
+                            features: row(te_x, d, qi),
+                            model: None,
+                            var: false,
+                        };
                         send(&mut conn, &req);
                         let got = read_pred(&mut reader);
                         assert!(
@@ -236,18 +240,26 @@ fn serve_binary_routes_to_named_checkpoints_from_model_flag() {
         let req = Request::Predict {
             features: row(&te.x, d, qi),
             model: Some("main".to_string()),
+            var: false,
         };
         send(&mut conn, &req);
         let got = read_pred(&mut reader);
         assert!(got == *w, "row {qi}: {got} vs {w}");
     }
     // a single registered model also serves bare requests...
-    send(&mut conn, &Request::Predict { features: row(&te.x, d, 0), model: None });
+    send(
+        &mut conn,
+        &Request::Predict { features: row(&te.x, d, 0), model: None, var: false },
+    );
     assert!(read_pred(&mut reader) == want[0]);
     // ...and unknown names are a clean error
     send(
         &mut conn,
-        &Request::Predict { features: row(&te.x, d, 0), model: Some("nope".to_string()) },
+        &Request::Predict {
+            features: row(&te.x, d, 0),
+            model: Some("nope".to_string()),
+            var: false,
+        },
     );
     match read_resp(&mut reader) {
         Response::Error(msg) => assert!(msg.contains("nope"), "{msg}"),

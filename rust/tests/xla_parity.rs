@@ -181,7 +181,7 @@ fn xla_exact_operator_trains_like_native() {
     let mut rng = Pcg64::new(19, 0);
     let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
     let lambda = 0.5;
-    let opts = CgOptions { max_iters: 60, tol: 1e-8, verbose: false };
+    let opts = CgOptions { max_iters: 60, tol: 1e-8, verbose: false, x0: None };
     let native = ExactKernelOp::new(&x, n, d, Kernel::squared_exp(2.0));
     let bn = solve_krr(&native, &y, lambda, &opts).beta;
     let xla_op = XlaExactKernelOp::new(&rt, "se", &x, n, d, 2.0);

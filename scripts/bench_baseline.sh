@@ -62,6 +62,13 @@ extract() {
             if (s == "") next
             if ((v = num($0, "sharded_secs")) != "")     print "solve.sharded_secs.s" s, v
             if ((v = num($0, "local_solve_secs")) != "") print "solve.local_secs.s" s, v
+        } else if (series == "warm_vs_cold_resolve") {
+            # CG iterations of the warm-started online re-solve vs the cold
+            # solve on the identical appended system (deterministic: fixed
+            # seeds and reduction order; fewer iterations is better)
+            if ((v = num($0, "warm_iters")) != "")  print "solve.warm_iters", v
+            if ((v = num($0, "cold_iters")) != "")  print "solve.cold_iters", v
+            if ((v = num($0, "update_secs")) != "") print "solve.update_secs", v
         }
         next
     }
