@@ -96,6 +96,75 @@ fn main() {
          block)."
     );
 
+    // SIMD on vs off: the same sketches with the util::simd kernels
+    // flipped in-process. Outputs are asserted bit-identical before any
+    // timing (the vectorization contract — tests/simd_equivalence.rs pins
+    // it across worker counts); the speedups here are what the perf gate's
+    // re-baselined numbers bank on.
+    {
+        use wlsh_krr::util::simd;
+        let isa = simd::name(simd::detected());
+        let n = *ns.last().unwrap();
+        let mut rng = Pcg64::new(n as u64, 3);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let beta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let qrows = 256usize.min(n);
+        let queries = &x[..qrows * d];
+        println!("\n=== SIMD on vs off (detected: {isa}; n={n}, m={m}, D={dd}) ===\n");
+        simd::set_enabled(false);
+        let wlsh = WlshSketch::build(&x, n, d, m, "smooth2", 7.0, 4.0, 1);
+        let rff = RffSketch::build(&x, n, d, dd, 4.0, 2);
+        let off_mv = wlsh.matvec_serial(&beta);
+        let off_feat = rff.featurize(queries);
+        let budget = by_scale(0.05, 0.3, 1.0);
+        let s_mv_off = bench("wlsh-matvec-off", budget, || wlsh.matvec_serial(&beta));
+        let s_ld_off = bench("bucket-loads-off", budget, || wlsh.loads_all(&beta, 1));
+        let s_rf_off = bench("rff-featurize-off", budget, || rff.featurize(queries));
+        simd::set_enabled(true);
+        assert_eq!(
+            wlsh.matvec_serial(&beta),
+            off_mv,
+            "SIMD mat-vec is not bit-identical to the scalar reference"
+        );
+        assert_eq!(
+            rff.featurize(queries),
+            off_feat,
+            "SIMD featurize is not bit-identical to the scalar reference"
+        );
+        let s_mv_on = bench("wlsh-matvec-on", budget, || wlsh.matvec_serial(&beta));
+        let s_ld_on = bench("bucket-loads-on", budget, || wlsh.loads_all(&beta, 1));
+        let s_rf_on = bench("rff-featurize-on", budget, || rff.featurize(queries));
+        simd::reset();
+        let tv = Table::new(&[("kernel", 16), ("off", 10), ("on", 10), ("speedup", 8)]);
+        for (name, off, on) in [
+            ("wlsh mat-vec", s_mv_off.min_secs, s_mv_on.min_secs),
+            ("bucket loads", s_ld_off.min_secs, s_ld_on.min_secs),
+            ("rff featurize", s_rf_off.min_secs, s_rf_on.min_secs),
+        ] {
+            tv.row(&[name.into(), secs(off), secs(on), format!("{:.2}x", off / on)]);
+        }
+        println!(
+            "\n(\"off\" forces the scalar reference kernels, \"on\" the detected\n\
+             {isa} path; both produce bit-identical outputs, so the speedup\n\
+             carries no accuracy caveat. WLSH_SIMD=auto|on|off overrides\n\
+             detection at process level.)"
+        );
+        record(
+            "matvec",
+            &JsonWriter::object()
+                .field_str("series", "simd")
+                .field_str("isa", isa)
+                .field_usize("n", n)
+                .field_f64("wlsh_matvec_on_secs", s_mv_on.min_secs)
+                .field_f64("wlsh_matvec_off_secs", s_mv_off.min_secs)
+                .field_f64("bucket_loads_on_secs", s_ld_on.min_secs)
+                .field_f64("bucket_loads_off_secs", s_ld_off.min_secs)
+                .field_f64("rff_featurize_on_secs", s_rf_on.min_secs)
+                .field_f64("rff_featurize_off_secs", s_rf_off.min_secs)
+                .finish(),
+        );
+    }
+
     // Sparse CSR streaming builds: the operators consume a LIBSVM stream's
     // stored coordinates only, vs the same file forced dense through
     // DensifySource — the per-row hash/featurize win approaches the d/nnz

@@ -26,6 +26,15 @@
 //! instance order, so parallel results are bit-identical to the serial
 //! reference at every thread count (see `tests/parallel_determinism.rs`).
 //! Thread budget: `WLSH_THREADS` env var, default = available cores.
+//! The inner kernels of those hot paths (bucket-load CSR walks, the fused
+//! mat-vec's gather pass, RFF featurization, hash-cell evaluation) are
+//! runtime-dispatched SIMD ([`util::simd`]: AVX2 on x86_64, NEON on
+//! aarch64, still zero external crates) behind the `WLSH_SIMD` env var —
+//! `auto` (default) detects, `off` forces the scalar reference — and every
+//! vectorized kernel is **bit-identical** to its scalar fallback (fixed
+//! 4-lane-strided reductions, no FMA contraction, a shared deterministic
+//! cosine), so `WLSH_SIMD` changes throughput, never results
+//! (`tests/simd_equivalence.rs`).
 //!
 //! ## Entry points
 //!

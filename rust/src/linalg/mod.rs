@@ -34,25 +34,12 @@ pub fn norm2(x: &[f64]) -> f64 {
 }
 
 /// Dot product over f32 slices with f64 accumulation (hot path helper).
+///
+/// Delegates to the runtime-dispatched `util::simd` kernel; the reduction
+/// order is the same 4-lane-strided scheme this function always used, so
+/// the AVX2 path is bit-identical to the historical scalar loop.
 pub fn dot_f32(x: &[f32], y: &[f32]) -> f64 {
-    debug_assert_eq!(x.len(), y.len());
-    let mut acc = 0.0f64;
-    // 4-way unrolled accumulation: keeps the f64 adds pipelined
-    let mut i = 0;
-    let n = x.len();
-    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0, 0.0, 0.0);
-    while i + 4 <= n {
-        a0 += x[i] as f64 * y[i] as f64;
-        a1 += x[i + 1] as f64 * y[i + 1] as f64;
-        a2 += x[i + 2] as f64 * y[i + 2] as f64;
-        a3 += x[i + 3] as f64 * y[i + 3] as f64;
-        i += 4;
-    }
-    while i < n {
-        acc += x[i] as f64 * y[i] as f64;
-        i += 1;
-    }
-    acc + a0 + a1 + a2 + a3
+    crate::util::simd::dot_f32(x, y)
 }
 
 #[cfg(test)]

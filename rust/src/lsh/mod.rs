@@ -22,6 +22,7 @@ use crate::api::BucketSpec;
 use crate::bucketfn::BucketEval;
 use crate::data::SparseChunk;
 use crate::util::rng::Pcg64;
+use crate::util::simd;
 
 /// Shared parameters of the LSH family (Def. 5) + bucket shaping (Def. 6).
 #[derive(Clone, Debug)]
@@ -70,17 +71,6 @@ impl LshFamily {
 pub struct LshFunction {
     pub w: Vec<f32>,
     pub z: Vec<f32>,
-}
-
-/// Precomputed per-instance state for the batched native hash loop:
-/// reciprocal widths turn the per-dim division into a multiply (~4× on
-/// the build hot path). Only the U64 (native) mode uses this — the I32
-/// mode keeps the division so it stays bit-identical to the HLO kernel.
-struct HashPlan<'a> {
-    w: &'a [f32],
-    z: &'a [f32],
-    inv_w: Vec<f32>,
-    mix64: &'a [u64],
 }
 
 /// Precomputed per-instance state for hashing sparse CSR rows
@@ -199,43 +189,31 @@ impl LshFunction {
             }
             return;
         }
-        let plan = HashPlan {
-            w: &self.w,
-            z: &self.z,
-            inv_w: self.w.iter().map(|&w| 1.0 / w).collect(),
-            mix64: &family.mix64,
-        };
+        // Per-dim cells/residuals vectorize (`util::simd::hash_cells`,
+        // identical f32 op order to the old zipped loop); the saturating
+        // `c as i64` id mix and the order-sensitive f32 weight product stay
+        // scalar reference code over the buffered lanes, so ids and weights
+        // are bit-identical across WLSH_SIMD settings.
+        let inv_w: Vec<f32> = self.w.iter().map(|&w| 1.0 / w).collect();
+        let mix64 = &family.mix64;
         let rect = family.bucket.is_rect;
+        let mut c_buf = vec![0.0f32; d];
+        let mut r_buf = vec![0.0f32; d];
         for i in 0..n {
             let row = &x[i * d..(i + 1) * d];
+            simd::hash_cells(row, &self.z, &inv_w, &mut c_buf, &mut r_buf);
             let mut id: u64 = 0;
+            for (&c, &mx) in c_buf.iter().zip(mix64) {
+                id = id.wrapping_add((c as i64 as u64).wrapping_mul(mx));
+            }
+            ids.push(id);
             if rect {
-                for (((&xv, &zv), &iw), &mx) in row
-                    .iter()
-                    .zip(plan.z)
-                    .zip(&plan.inv_w)
-                    .zip(plan.mix64)
-                {
-                    let c = ((xv - zv) * iw + 0.5).floor();
-                    id = id.wrapping_add((c as i64 as u64).wrapping_mul(mx));
-                }
-                ids.push(id);
                 weights.push(1.0);
             } else {
                 let mut weight: f32 = 1.0;
-                for ((((&xv, &zv), &iw), &mx), _wv) in row
-                    .iter()
-                    .zip(plan.z)
-                    .zip(&plan.inv_w)
-                    .zip(plan.mix64)
-                    .zip(plan.w)
-                {
-                    let t = (xv - zv) * iw;
-                    let c = (t + 0.5).floor();
-                    id = id.wrapping_add((c as i64 as u64).wrapping_mul(mx));
-                    weight *= family.bucket.eval(c - t);
+                for &r in r_buf.iter() {
+                    weight *= family.bucket.eval(r);
                 }
-                ids.push(id);
                 weights.push(weight);
             }
         }

@@ -80,7 +80,12 @@ fn main() {
                         distributed topology; spawned automatically by\n\
                         shards(n=N), run by hand for remote(...))\n\
                  ose    --n N --m M --lambda L --bucket rect|smooth2\n\
-                 gp     --cov laplace|se|matern --dim D --n N",
+                 gp     --cov laplace|se|matern --dim D --n N\n\
+                 \n\
+                 env    WLSH_THREADS=N  worker threads (default: all cores)\n\
+                        WLSH_SIMD=auto|on|off  vectorized kernels (default\n\
+                        auto-detect; off = scalar reference — results are\n\
+                        bit-identical either way)",
                 wlsh_krr::version()
             );
             // asking for help is fine; an unknown subcommand is misuse
@@ -162,6 +167,11 @@ fn config_from(args: &Args) -> Result<KrrConfig, KrrError> {
 
 fn cmd_info(_args: &Args) {
     println!("wlsh-krr {}", wlsh_krr::version());
+    println!(
+        "simd: {} (detected: {}, override via WLSH_SIMD=auto|on|off)",
+        wlsh_krr::util::simd::active_name(),
+        wlsh_krr::util::simd::name(wlsh_krr::util::simd::detected()),
+    );
     match Runtime::open_default() {
         Ok(rt) => {
             println!("PJRT platform: {}", rt.platform());

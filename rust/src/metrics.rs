@@ -1,6 +1,7 @@
 //! Serving/training metrics: counters, wall-clock timers, and a latency
 //! histogram with exact percentiles (sample-bounded reservoir).
 
+use crate::util::stats;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -42,6 +43,17 @@ pub struct LatencyHistogram {
     sum_secs: Mutex<f64>,
 }
 
+/// Reservoir slot for sequence number `seq`: multiply by a 64-bit odd
+/// constant, keep the *high* 32 bits, then reduce mod `cap`. The previous
+/// `seq * 2654435761 % cap` kept the low bits of the product — but a
+/// Fibonacci-style multiply mixes upward, so the low bits are the biased
+/// half: with a power-of-two `cap`, any stride-2^k request pattern
+/// collapsed every overwrite into a single slot (the odd-constant product
+/// of a multiple of 16 is still a multiple of 16).
+fn slot(seq: u64, cap: usize) -> usize {
+    ((seq.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32) as usize) % cap
+}
+
 impl LatencyHistogram {
     pub fn new(cap: usize) -> Self {
         LatencyHistogram {
@@ -59,10 +71,7 @@ impl LatencyHistogram {
         *self.sum_secs.lock().unwrap() += secs;
         let mut s = self.samples.lock().unwrap();
         if s.len() == self.cap {
-            // Overwrite pseudo-randomly (Fibonacci hashing, wrapping so large
-            // sequence numbers cannot overflow) to stay representative.
-            let idx = (seq as usize).wrapping_mul(2654435761) % self.cap;
-            s[idx] = secs;
+            s[slot(seq, self.cap)] = secs;
         } else {
             s.push(secs);
         }
@@ -75,14 +84,11 @@ impl LatencyHistogram {
         if s.is_empty() {
             return LatencySummary::default();
         }
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        // Nearest-rank percentile: the value at 1-based rank ceil(p * n).
-        // Truncating `n * p` instead over-reports at small counts (e.g. the
-        // p50 of [1, 2] would read 2 rather than 1).
-        let at = |p: f64| {
-            let rank = (s.len() as f64 * p).ceil() as usize;
-            s[rank.saturating_sub(1).min(s.len() - 1)]
-        };
+        // Total-order sort + nearest-rank percentiles (util::stats): a NaN
+        // sample sorts past the finite values instead of panicking the
+        // serving stats path, and the rank rule matches util::timer's.
+        stats::sort_samples(&mut s);
+        let at = |p: f64| stats::percentile(&s, p);
         LatencySummary { p50: at(0.50), p90: at(0.90), p95: at(0.95), p99: at(0.99) }
     }
 
@@ -169,6 +175,44 @@ mod tests {
         assert_eq!(h.percentiles(), (s.p50, s.p90, s.p99));
         // empty histogram: all zeros, no panic
         assert_eq!(LatencyHistogram::new(8).summary(), LatencySummary::default());
+    }
+
+    #[test]
+    fn summary_stays_finite_when_a_nan_is_recorded() {
+        // One poisoned sample must not abort the stats path (the old
+        // partial_cmp().unwrap() comparator panicked) and must not leak
+        // into the quantiles: +NaN sorts after every finite value.
+        let h = LatencyHistogram::new(1000);
+        for i in 1..=99 {
+            h.record(i as f64);
+        }
+        h.record(f64::NAN);
+        let s = h.summary();
+        assert!(s.p50.is_finite() && s.p90.is_finite() && s.p95.is_finite());
+        assert_eq!(s.p50, 50.0);
+        assert_eq!(s.p95, 95.0);
+        assert_eq!(s.p99, 99.0, "p99 rank 99 of 100 lands on the last finite sample");
+    }
+
+    #[test]
+    fn reservoir_slots_cover_the_ring_under_strided_sequences() {
+        use std::collections::HashSet;
+        let cap = 16;
+        // Stride-16 sequence numbers: the old low-bits hash mapped every one
+        // of these to slot 0 (odd · 16k is still ≡ 0 mod 16); the high-bits
+        // hash must spread them over the whole ring.
+        let strided: HashSet<usize> = (0..256u64).map(|k| slot(k * 16, cap)).collect();
+        assert_eq!(strided.len(), cap, "stride-16 seqs must reach every slot");
+        // Consecutive sequences must also cover the ring quickly.
+        let consecutive: HashSet<usize> = (0..64u64).map(|k| slot(k, cap)).collect();
+        assert_eq!(consecutive.len(), cap);
+        // And occupancy should be roughly balanced over a long run.
+        let mut counts = vec![0usize; cap];
+        for seq in 0..1600u64 {
+            counts[slot(seq, cap)] += 1;
+        }
+        let (min, max) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+        assert!(*min >= 50 && *max <= 200, "slot occupancy skewed: min {min}, max {max}");
     }
 
     #[test]

@@ -10,6 +10,7 @@ use crate::data::{Chunk, DataSource, SparseChunk};
 use crate::linalg::dot_f32;
 use crate::util::par;
 use crate::util::rng::Pcg64;
+use crate::util::simd;
 
 /// Rows per thread task when featurizing a block in parallel. Fixed (never
 /// derived from the thread count) so the work decomposition — and hence
@@ -181,19 +182,16 @@ impl RffSketch {
             let xi = &rows[i * self.d..(i + 1) * self.d];
             let zi = &mut out[i * self.dd..(i + 1) * self.dd];
             zi.copy_from_slice(&self.b);
-            // zi += xiᵀ Ω, streaming over the d rows of Ω (autovectorizes)
+            // zi += xiᵀ Ω, streaming over the d rows of Ω (SIMD axpy — one
+            // mul + one add per element, bit-identical to the scalar loop)
             for (l, &xl) in xi.iter().enumerate() {
                 if xl == 0.0 {
                     continue;
                 }
                 let orow = &self.omega[l * self.dd..(l + 1) * self.dd];
-                for (zv, ov) in zi.iter_mut().zip(orow) {
-                    *zv += xl * ov;
-                }
+                simd::axpy_f32(xl, orow, zi);
             }
-            for zv in zi.iter_mut() {
-                *zv = self.feat_scale * zv.cos();
-            }
+            simd::scale_cos(self.feat_scale, zi);
         }
         out
     }
@@ -219,13 +217,9 @@ impl RffSketch {
                     continue;
                 }
                 let orow = &self.omega[l as usize * self.dd..(l as usize + 1) * self.dd];
-                for (zv, ov) in zi.iter_mut().zip(orow) {
-                    *zv += xl * ov;
-                }
+                simd::axpy_f32(xl, orow, zi);
             }
-            for zv in zi.iter_mut() {
-                *zv = self.feat_scale * zv.cos();
-            }
+            simd::scale_cos(self.feat_scale, zi);
         }
         out
     }
@@ -252,9 +246,7 @@ impl RffSketch {
             if bi == 0.0 {
                 continue;
             }
-            for (t, zv) in theta.iter_mut().zip(zi) {
-                *t += bi * *zv as f64;
-            }
+            simd::axpy_f32_f64(bi, zi, &mut theta);
         }
         theta
     }

@@ -28,6 +28,7 @@ use crate::lsh::{
 };
 use crate::util::par;
 use crate::util::rng::Pcg64;
+use crate::util::simd;
 
 /// Query batches at or below this size are predicted serially; larger
 /// batches split into chunks of this many rows for the thread fan-out.
@@ -475,13 +476,15 @@ impl WlshSketch {
     }
 
     /// Per-instance bucket loads for a coefficient vector (paper §4),
-    /// accumulated over the CSR arrays: bucket j's load is the sequential
-    /// sum of `weights_csr[k] · β[members[k]]` over its member range.
+    /// accumulated over the CSR arrays: bucket j's load sums
+    /// `weights_csr[k] · β[members[k]]` over its member range.
     ///
-    /// Because the counting sort is stable (members ascend in point order
-    /// inside each bucket), each bucket's accumulation chain is exactly the
-    /// chain the point-order scatter `loads[bucket_of[i]] += w_i β_i`
-    /// produces — the CSR pass is bit-identical to the scatter pass.
+    /// Each bucket reduces in the fixed 4-lane-strided order of
+    /// `util::simd::weighted_gather_sum` (lane j sums member indices ≡ j
+    /// mod 4 within the bucket, then `tail + lane0..lane3`). The order
+    /// depends only on the CSR layout — never on ISA, thread count, or
+    /// chunking — so loads are bit-identical across `WLSH_SIMD=on|off`,
+    /// worker counts, and streamed vs in-memory builds.
     fn loads(&self, inst: &WlshInstance, beta: &[f64]) -> Vec<f64> {
         let mut loads = vec![0.0f64; inst.table.n_buckets];
         Self::loads_into(inst, beta, &mut loads);
@@ -497,11 +500,7 @@ impl WlshSketch {
         for (j, out) in loads.iter_mut().enumerate() {
             let lo = offsets[j] as usize;
             let hi = offsets[j + 1] as usize;
-            let mut acc = 0.0f64;
-            for k in lo..hi {
-                acc += w[k] as f64 * beta[members[k] as usize];
-            }
-            *out = acc;
+            *out = simd::weighted_gather_sum(&w[lo..hi], &members[lo..hi], beta);
         }
     }
 
@@ -578,11 +577,7 @@ impl WlshSketch {
             loads.clear();
             loads.resize(inst.table.n_buckets, 0.0);
             Self::loads_into(inst, beta, &mut loads);
-            let bucket_of = &inst.table.bucket_of;
-            let weights = &inst.weights;
-            for ((o, &w), &b) in out.iter_mut().zip(weights).zip(bucket_of) {
-                *o += w as f64 * loads[b as usize];
-            }
+            simd::scaled_gather_add(&mut out, &inst.weights, &inst.table.bucket_of, &loads);
         }
         out
     }

@@ -10,4 +10,6 @@ pub mod mem;
 pub mod par;
 pub mod prop;
 pub mod rng;
+pub mod simd;
+pub mod stats;
 pub mod timer;

@@ -1,0 +1,783 @@
+//! Runtime-dispatched SIMD kernels for the compute hot paths — `std::arch`
+//! AVX2 on x86_64 and NEON on aarch64, zero external crates, selected once
+//! per process and overridable via the `WLSH_SIMD` environment variable
+//! (`auto` — the default — detects the ISA at startup; `on` is a synonym;
+//! `off` forces the scalar reference kernels).
+//!
+//! **Bit-identity contract.** Every kernel here has exactly one numeric
+//! behavior: the scalar fallback *is* the reference implementation, and
+//! each vectorized variant reproduces it bit for bit —
+//!
+//! * element-wise kernels ([`axpy_f32`], [`axpy_f32_f64`],
+//!   [`scaled_gather_add`], [`hash_cells`], [`scale_cos`]) perform the
+//!   same IEEE-754 operation per element in both paths (no FMA
+//!   contraction anywhere), so lanes and scalars round identically;
+//! * reduction kernels ([`dot_f32`], [`weighted_gather_sum`]) commit to a
+//!   **fixed 4-lane-strided order**: logical lane `j` accumulates the
+//!   elements with index ≡ `j` (mod 4), the tail past the last multiple
+//!   of 4 accumulates separately, and the five partials always collapse
+//!   as `tail + lane0 + lane1 + lane2 + lane3`. The scalar reference
+//!   walks the same order with four independent accumulators, so a
+//!   256-bit SIMD register (or two 128-bit NEON registers) reproduces it
+//!   exactly;
+//! * [`scale_cos`] replaces libm's `cosf` with a deterministic f64
+//!   Cody–Waite + Taylor kernel shared verbatim by both paths (libm is
+//!   platform-varying *and* unvectorizable; the shared polynomial is
+//!   neither). Accuracy is ~1e-10 absolute, far below f32 rounding.
+//!
+//! Consequently `WLSH_SIMD=on` vs `off` changes wall-clock only — sketch
+//! tables, bucket loads, mat-vecs, CG coefficients, and served
+//! predictions are all bit-identical (the documented ULP tolerance on f32
+//! serving paths is **0**; `tests/simd_equivalence.rs` pins this across
+//! worker counts). Kernels may freely route short slices to the scalar
+//! path — the answer cannot differ.
+//!
+//! aarch64 notes: NEON has no gather instruction and only 2-wide f64
+//! lanes, so the gather kernels and [`scale_cos`] use the scalar
+//! reference there; the element-wise f32 kernels and [`dot_f32`]
+//! vectorize.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Instruction-set family the kernels dispatch to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// Reference implementation (also the `WLSH_SIMD=off` override).
+    Scalar,
+    /// x86_64 AVX2 (256-bit), detected via `is_x86_feature_detected!`.
+    Avx2,
+    /// aarch64 NEON (128-bit), baseline on every aarch64 target.
+    Neon,
+}
+
+/// Cached dispatch state: 0 = uninitialized, else `code(Isa)`.
+static ACTIVE: AtomicU8 = AtomicU8::new(0);
+
+fn code(isa: Isa) -> u8 {
+    match isa {
+        Isa::Scalar => 1,
+        Isa::Avx2 => 2,
+        Isa::Neon => 3,
+    }
+}
+
+/// Best SIMD ISA this machine supports, ignoring the `WLSH_SIMD` override.
+pub fn detected() -> Isa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return Isa::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // NEON is part of the baseline aarch64 ABI — always present.
+        return Isa::Neon;
+    }
+    #[allow(unreachable_code)]
+    Isa::Scalar
+}
+
+/// The ISA the kernels currently dispatch to. First call resolves the
+/// `WLSH_SIMD` env override (`off` forces [`Isa::Scalar`]; `auto`/`on`/
+/// unset take [`detected`]) and caches the answer; later calls are one
+/// relaxed atomic load (the kernels call this per invocation).
+pub fn active() -> Isa {
+    match ACTIVE.load(Ordering::Relaxed) {
+        1 => Isa::Scalar,
+        2 => Isa::Avx2,
+        3 => Isa::Neon,
+        _ => {
+            let isa = match std::env::var("WLSH_SIMD").as_deref() {
+                Ok("off") | Ok("0") | Ok("scalar") => Isa::Scalar,
+                _ => detected(),
+            };
+            ACTIVE.store(code(isa), Ordering::Relaxed);
+            isa
+        }
+    }
+}
+
+/// Override the dispatch state in-process: `false` forces the scalar
+/// reference, `true` restores the detected ISA. The equivalence tests and
+/// `bench_matvec`'s SIMD section flip this to compare both paths in one
+/// process without re-spawning under a different environment.
+pub fn set_enabled(enabled: bool) {
+    let isa = if enabled { detected() } else { Isa::Scalar };
+    ACTIVE.store(code(isa), Ordering::Relaxed);
+}
+
+/// Drop any cached/overridden state; the next [`active`] re-reads
+/// `WLSH_SIMD` and re-detects.
+pub fn reset() {
+    ACTIVE.store(0, Ordering::Relaxed);
+}
+
+/// Short display name of an ISA (`"avx2"` / `"neon"` / `"scalar"`).
+pub fn name(isa: Isa) -> &'static str {
+    match isa {
+        Isa::Scalar => "scalar",
+        Isa::Avx2 => "avx2",
+        Isa::Neon => "neon",
+    }
+}
+
+/// `name(active())` — what the kernels are dispatching to right now.
+pub fn active_name() -> &'static str {
+    name(active())
+}
+
+// ---------------------------------------------------------------------------
+// dot product (f32 inputs, f64 accumulation)
+// ---------------------------------------------------------------------------
+
+/// Dot product over f32 slices with f64 accumulation, in the fixed
+/// 4-lane-strided reduction order (see the module docs). This is the
+/// serving hot path behind `linalg::dot_f32`.
+pub fn dot_f32(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    if x.len() >= 4 && active() == Isa::Avx2 {
+        // SAFETY: Isa::Avx2 is only ever stored after runtime detection.
+        return unsafe { dot_f32_avx2(x, y) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if x.len() >= 4 && active() == Isa::Neon {
+        // SAFETY: NEON is baseline on aarch64.
+        return unsafe { dot_f32_neon(x, y) };
+    }
+    dot_f32_scalar(x, y)
+}
+
+/// Reference: 4 independent lane accumulators + a tail accumulator,
+/// collapsed as `tail + a0 + a1 + a2 + a3`.
+fn dot_f32_scalar(x: &[f32], y: &[f32]) -> f64 {
+    let n = x.len();
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0, 0.0, 0.0);
+    let mut i = 0;
+    while i + 4 <= n {
+        a0 += x[i] as f64 * y[i] as f64;
+        a1 += x[i + 1] as f64 * y[i + 1] as f64;
+        a2 += x[i + 2] as f64 * y[i + 2] as f64;
+        a3 += x[i + 3] as f64 * y[i + 3] as f64;
+        i += 4;
+    }
+    let mut acc = 0.0f64;
+    while i < n {
+        acc += x[i] as f64 * y[i] as f64;
+        i += 1;
+    }
+    acc + a0 + a1 + a2 + a3
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_f32_avx2(x: &[f32], y: &[f32]) -> f64 {
+    use std::arch::x86_64::*;
+    let n = x.len();
+    // One f64 SIMD lane per logical lane: lane j accumulates index ≡ j
+    // (mod 4), exactly like the scalar a0..a3.
+    let mut acc4 = _mm256_setzero_pd();
+    let mut i = 0;
+    while i + 4 <= n {
+        let xv = _mm256_cvtps_pd(_mm_loadu_ps(x.as_ptr().add(i)));
+        let yv = _mm256_cvtps_pd(_mm_loadu_ps(y.as_ptr().add(i)));
+        acc4 = _mm256_add_pd(acc4, _mm256_mul_pd(xv, yv));
+        i += 4;
+    }
+    let mut acc = 0.0f64;
+    while i < n {
+        acc += x[i] as f64 * y[i] as f64;
+        i += 1;
+    }
+    let mut lanes = [0.0f64; 4];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc4);
+    acc + lanes[0] + lanes[1] + lanes[2] + lanes[3]
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn dot_f32_neon(x: &[f32], y: &[f32]) -> f64 {
+    use std::arch::aarch64::*;
+    let n = x.len();
+    // Two f64x2 registers hold logical lanes {0,1} and {2,3}.
+    let mut acc01 = vdupq_n_f64(0.0);
+    let mut acc23 = vdupq_n_f64(0.0);
+    let mut i = 0;
+    while i + 4 <= n {
+        let xv = vld1q_f32(x.as_ptr().add(i));
+        let yv = vld1q_f32(y.as_ptr().add(i));
+        let xlo = vcvt_f64_f32(vget_low_f32(xv));
+        let xhi = vcvt_high_f64_f32(xv);
+        let ylo = vcvt_f64_f32(vget_low_f32(yv));
+        let yhi = vcvt_high_f64_f32(yv);
+        acc01 = vaddq_f64(acc01, vmulq_f64(xlo, ylo));
+        acc23 = vaddq_f64(acc23, vmulq_f64(xhi, yhi));
+        i += 4;
+    }
+    let mut acc = 0.0f64;
+    while i < n {
+        acc += x[i] as f64 * y[i] as f64;
+        i += 1;
+    }
+    acc + vgetq_lane_f64::<0>(acc01)
+        + vgetq_lane_f64::<1>(acc01)
+        + vgetq_lane_f64::<0>(acc23)
+        + vgetq_lane_f64::<1>(acc23)
+}
+
+// ---------------------------------------------------------------------------
+// CSR bucket-load reduction (gather + weighted sum)
+// ---------------------------------------------------------------------------
+
+/// One bucket's load: `Σ_k w[k] · beta[members[k]]` in the fixed
+/// 4-lane-strided reduction order. The WLSH CSR bucket-load pass calls
+/// this once per bucket with that bucket's member range.
+///
+/// `members` values must index into `beta` (and, for the AVX2 gather,
+/// `beta.len()` must fit in i32 — every caller indexes training rows, so
+/// this holds by construction).
+pub fn weighted_gather_sum(w: &[f32], members: &[u32], beta: &[f64]) -> f64 {
+    debug_assert_eq!(w.len(), members.len());
+    debug_assert!(beta.len() <= i32::MAX as usize);
+    #[cfg(target_arch = "x86_64")]
+    if w.len() >= 4 && active() == Isa::Avx2 {
+        // SAFETY: Isa::Avx2 is only ever stored after runtime detection.
+        return unsafe { weighted_gather_sum_avx2(w, members, beta) };
+    }
+    weighted_gather_sum_scalar(w, members, beta)
+}
+
+fn weighted_gather_sum_scalar(w: &[f32], members: &[u32], beta: &[f64]) -> f64 {
+    let n = w.len();
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0, 0.0, 0.0);
+    let mut i = 0;
+    while i + 4 <= n {
+        a0 += w[i] as f64 * beta[members[i] as usize];
+        a1 += w[i + 1] as f64 * beta[members[i + 1] as usize];
+        a2 += w[i + 2] as f64 * beta[members[i + 2] as usize];
+        a3 += w[i + 3] as f64 * beta[members[i + 3] as usize];
+        i += 4;
+    }
+    let mut acc = 0.0f64;
+    while i < n {
+        acc += w[i] as f64 * beta[members[i] as usize];
+        i += 1;
+    }
+    acc + a0 + a1 + a2 + a3
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn weighted_gather_sum_avx2(w: &[f32], members: &[u32], beta: &[f64]) -> f64 {
+    use std::arch::x86_64::*;
+    let n = w.len();
+    let mut acc4 = _mm256_setzero_pd();
+    let mut i = 0;
+    while i + 4 <= n {
+        let idx = _mm_loadu_si128(members.as_ptr().add(i) as *const __m128i);
+        let bv = _mm256_i32gather_pd::<8>(beta.as_ptr(), idx);
+        let wv = _mm256_cvtps_pd(_mm_loadu_ps(w.as_ptr().add(i)));
+        acc4 = _mm256_add_pd(acc4, _mm256_mul_pd(wv, bv));
+        i += 4;
+    }
+    let mut acc = 0.0f64;
+    while i < n {
+        acc += w[i] as f64 * beta[members[i] as usize];
+        i += 1;
+    }
+    let mut lanes = [0.0f64; 4];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc4);
+    acc + lanes[0] + lanes[1] + lanes[2] + lanes[3]
+}
+
+// ---------------------------------------------------------------------------
+// gather + scaled accumulate (the fused mat-vec's per-point pass)
+// ---------------------------------------------------------------------------
+
+/// Element-wise `out[i] += w[i] · loads[bucket_of[i]]` — the fused
+/// mat-vec's "combine loads back into point space" pass. Pure per-element
+/// arithmetic, so every dispatch path is trivially bit-identical.
+pub fn scaled_gather_add(out: &mut [f64], w: &[f32], bucket_of: &[u32], loads: &[f64]) {
+    debug_assert_eq!(out.len(), w.len());
+    debug_assert_eq!(out.len(), bucket_of.len());
+    #[cfg(target_arch = "x86_64")]
+    if out.len() >= 4 && active() == Isa::Avx2 {
+        // SAFETY: Isa::Avx2 is only ever stored after runtime detection.
+        unsafe { scaled_gather_add_avx2(out, w, bucket_of, loads) };
+        return;
+    }
+    scaled_gather_add_scalar(out, w, bucket_of, loads);
+}
+
+fn scaled_gather_add_scalar(out: &mut [f64], w: &[f32], bucket_of: &[u32], loads: &[f64]) {
+    for ((o, &wv), &b) in out.iter_mut().zip(w).zip(bucket_of) {
+        *o += wv as f64 * loads[b as usize];
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn scaled_gather_add_avx2(out: &mut [f64], w: &[f32], bucket_of: &[u32], loads: &[f64]) {
+    use std::arch::x86_64::*;
+    let n = out.len();
+    let mut i = 0;
+    while i + 4 <= n {
+        let idx = _mm_loadu_si128(bucket_of.as_ptr().add(i) as *const __m128i);
+        let lv = _mm256_i32gather_pd::<8>(loads.as_ptr(), idx);
+        let wv = _mm256_cvtps_pd(_mm_loadu_ps(w.as_ptr().add(i)));
+        let ov = _mm256_loadu_pd(out.as_ptr().add(i));
+        _mm256_storeu_pd(out.as_mut_ptr().add(i), _mm256_add_pd(ov, _mm256_mul_pd(wv, lv)));
+        i += 4;
+    }
+    scaled_gather_add_scalar(&mut out[i..], &w[i..], &bucket_of[i..], &loads[..]);
+}
+
+// ---------------------------------------------------------------------------
+// f32 axpy (RFF feature accumulation)
+// ---------------------------------------------------------------------------
+
+/// Element-wise `y[i] += alpha · x[i]` over f32 slices — RFF's
+/// `z += x_l · Ω_l` row accumulation. One multiply and one add per
+/// element in every path (no FMA), so lanes round exactly like scalars.
+pub fn axpy_f32(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    if x.len() >= 8 && active() == Isa::Avx2 {
+        // SAFETY: Isa::Avx2 is only ever stored after runtime detection.
+        unsafe { axpy_f32_avx2(alpha, x, y) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if x.len() >= 4 && active() == Isa::Neon {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { axpy_f32_neon(alpha, x, y) };
+        return;
+    }
+    axpy_f32_scalar(alpha, x, y);
+}
+
+fn axpy_f32_scalar(alpha: f32, x: &[f32], y: &mut [f32]) {
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv += alpha * xv;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_f32_avx2(alpha: f32, x: &[f32], y: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = x.len();
+    let av = _mm256_set1_ps(alpha);
+    let mut i = 0;
+    while i + 8 <= n {
+        let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+        let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+        _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(yv, _mm256_mul_ps(av, xv)));
+        i += 8;
+    }
+    axpy_f32_scalar(alpha, &x[i..], &mut y[i..]);
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn axpy_f32_neon(alpha: f32, x: &[f32], y: &mut [f32]) {
+    use std::arch::aarch64::*;
+    let n = x.len();
+    let av = vdupq_n_f32(alpha);
+    let mut i = 0;
+    while i + 4 <= n {
+        let xv = vld1q_f32(x.as_ptr().add(i));
+        let yv = vld1q_f32(y.as_ptr().add(i));
+        vst1q_f32(y.as_mut_ptr().add(i), vaddq_f32(yv, vmulq_f32(av, xv)));
+        i += 4;
+    }
+    axpy_f32_scalar(alpha, &x[i..], &mut y[i..]);
+}
+
+// ---------------------------------------------------------------------------
+// f32 → f64 axpy (RFF θ = Zᵀβ accumulation)
+// ---------------------------------------------------------------------------
+
+/// Element-wise `y[i] += alpha · (x[i] as f64)` — RFF's θ accumulation.
+/// The f32→f64 widening is exact, so every path rounds identically.
+pub fn axpy_f32_f64(alpha: f64, x: &[f32], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    if x.len() >= 4 && active() == Isa::Avx2 {
+        // SAFETY: Isa::Avx2 is only ever stored after runtime detection.
+        unsafe { axpy_f32_f64_avx2(alpha, x, y) };
+        return;
+    }
+    axpy_f32_f64_scalar(alpha, x, y);
+}
+
+fn axpy_f32_f64_scalar(alpha: f64, x: &[f32], y: &mut [f64]) {
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv += alpha * xv as f64;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_f32_f64_avx2(alpha: f64, x: &[f32], y: &mut [f64]) {
+    use std::arch::x86_64::*;
+    let n = x.len();
+    let av = _mm256_set1_pd(alpha);
+    let mut i = 0;
+    while i + 4 <= n {
+        let xv = _mm256_cvtps_pd(_mm_loadu_ps(x.as_ptr().add(i)));
+        let yv = _mm256_loadu_pd(y.as_ptr().add(i));
+        _mm256_storeu_pd(y.as_mut_ptr().add(i), _mm256_add_pd(yv, _mm256_mul_pd(av, xv)));
+        i += 4;
+    }
+    axpy_f32_f64_scalar(alpha, &x[i..], &mut y[i..]);
+}
+
+// ---------------------------------------------------------------------------
+// LSH cell computation (hash evaluation)
+// ---------------------------------------------------------------------------
+
+/// Per-dimension LSH cells for one row: `t_l = (x_l − z_l) · inv_w_l`,
+/// `c_l = floor(t_l + 0.5)`, residual `r_l = c_l − t_l`. Pure
+/// element-wise f32 arithmetic (`floor` rounds toward −∞ in both paths),
+/// so the cells — and therefore bucket ids and smooth weights derived
+/// from them — are bit-identical under every dispatch.
+pub fn hash_cells(x: &[f32], z: &[f32], inv_w: &[f32], c: &mut [f32], r: &mut [f32]) {
+    debug_assert_eq!(x.len(), z.len());
+    debug_assert_eq!(x.len(), inv_w.len());
+    debug_assert_eq!(x.len(), c.len());
+    debug_assert_eq!(x.len(), r.len());
+    #[cfg(target_arch = "x86_64")]
+    if x.len() >= 8 && active() == Isa::Avx2 {
+        // SAFETY: Isa::Avx2 is only ever stored after runtime detection.
+        unsafe { hash_cells_avx2(x, z, inv_w, c, r) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if x.len() >= 4 && active() == Isa::Neon {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { hash_cells_neon(x, z, inv_w, c, r) };
+        return;
+    }
+    hash_cells_scalar(x, z, inv_w, c, r);
+}
+
+fn hash_cells_scalar(x: &[f32], z: &[f32], inv_w: &[f32], c: &mut [f32], r: &mut [f32]) {
+    let n = x.len();
+    let mut l = 0;
+    while l < n {
+        let t = (x[l] - z[l]) * inv_w[l];
+        let cl = (t + 0.5).floor();
+        c[l] = cl;
+        r[l] = cl - t;
+        l += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn hash_cells_avx2(x: &[f32], z: &[f32], inv_w: &[f32], c: &mut [f32], r: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = x.len();
+    let half = _mm256_set1_ps(0.5);
+    let mut l = 0;
+    while l + 8 <= n {
+        let xv = _mm256_loadu_ps(x.as_ptr().add(l));
+        let zv = _mm256_loadu_ps(z.as_ptr().add(l));
+        let iw = _mm256_loadu_ps(inv_w.as_ptr().add(l));
+        let t = _mm256_mul_ps(_mm256_sub_ps(xv, zv), iw);
+        let cv = _mm256_floor_ps(_mm256_add_ps(t, half));
+        _mm256_storeu_ps(c.as_mut_ptr().add(l), cv);
+        _mm256_storeu_ps(r.as_mut_ptr().add(l), _mm256_sub_ps(cv, t));
+        l += 8;
+    }
+    hash_cells_scalar(&x[l..], &z[l..], &inv_w[l..], &mut c[l..], &mut r[l..]);
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn hash_cells_neon(x: &[f32], z: &[f32], inv_w: &[f32], c: &mut [f32], r: &mut [f32]) {
+    use std::arch::aarch64::*;
+    let n = x.len();
+    let half = vdupq_n_f32(0.5);
+    let mut l = 0;
+    while l + 4 <= n {
+        let xv = vld1q_f32(x.as_ptr().add(l));
+        let zv = vld1q_f32(z.as_ptr().add(l));
+        let iw = vld1q_f32(inv_w.as_ptr().add(l));
+        let t = vmulq_f32(vsubq_f32(xv, zv), iw);
+        let cv = vrndmq_f32(vaddq_f32(t, half));
+        vst1q_f32(c.as_mut_ptr().add(l), cv);
+        vst1q_f32(r.as_mut_ptr().add(l), vsubq_f32(cv, t));
+        l += 4;
+    }
+    hash_cells_scalar(&x[l..], &z[l..], &inv_w[l..], &mut c[l..], &mut r[l..]);
+}
+
+// ---------------------------------------------------------------------------
+// deterministic cosine (RFF featurization finish)
+// ---------------------------------------------------------------------------
+
+// Cody–Waite split of π/2: PIO2_1 carries the first 33 mantissa bits, so
+// n·PIO2_1 is exact for |n| < 2²⁰ and the reduction error collapses to
+// the rounding of n·PIO2_1T (fdlibm's medium-path constants).
+const TWO_OVER_PI: f64 = 6.36619772367581382433e-01;
+const PIO2_1: f64 = 1.57079632673412561417e+00;
+const PIO2_1T: f64 = 6.07710050650619224932e-11;
+
+// Taylor kernels on |r| ≤ π/4: truncation ≲ 1.2e-10 (cos) / 1.8e-9·r
+// (sin), far below f32 rounding at 2⁻²⁴.
+const COS_C2: f64 = -0.5;
+const COS_C4: f64 = 4.16666666666666666667e-2;
+const COS_C6: f64 = -1.38888888888888888889e-3;
+const COS_C8: f64 = 2.48015873015873015873e-5;
+const COS_C10: f64 = -2.75573192239858906526e-7;
+const SIN_S3: f64 = -1.66666666666666666667e-1;
+const SIN_S5: f64 = 8.33333333333333333333e-3;
+const SIN_S7: f64 = -1.98412698412698412698e-4;
+const SIN_S9: f64 = 2.75573192239858906526e-6;
+
+/// Shared deterministic cos kernel (f64 in/out). The SIMD variants run
+/// this exact operation sequence lane-wise; every quadrant decision is
+/// exact integer float arithmetic, so selection can never diverge.
+fn cos_core(x: f64) -> f64 {
+    let n = (x * TWO_OVER_PI + 0.5).floor();
+    let r = x - n * PIO2_1 - n * PIO2_1T;
+    let r2 = r * r;
+    let mut c = COS_C8 + r2 * COS_C10;
+    c = COS_C6 + r2 * c;
+    c = COS_C4 + r2 * c;
+    c = COS_C2 + r2 * c;
+    c = 1.0 + r2 * c;
+    let mut s = SIN_S7 + r2 * SIN_S9;
+    s = SIN_S5 + r2 * s;
+    s = SIN_S3 + r2 * s;
+    s = 1.0 + r2 * s;
+    s *= r;
+    // quadrant k = n mod 4 via exact integer float arithmetic:
+    // cos(r + k·π/2) = {cos r, −sin r, −cos r, sin r}[k]
+    let m2 = n - 2.0 * (n * 0.5).floor();
+    let m4 = n - 4.0 * (n * 0.25).floor();
+    let v = if m2 == 1.0 { s } else { c };
+    if m4 == 1.0 || m4 == 2.0 {
+        -v
+    } else {
+        v
+    }
+}
+
+/// `z[i] = scale · cos(z[i])` over f32, using the deterministic
+/// [`cos_core`] kernel in every path (the cos evaluates in f64, rounds to
+/// f32, then scales in f32 — bit-identical scalar vs SIMD).
+pub fn scale_cos(scale: f32, z: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if z.len() >= 4 && active() == Isa::Avx2 {
+        // SAFETY: Isa::Avx2 is only ever stored after runtime detection.
+        unsafe { scale_cos_avx2(scale, z) };
+        return;
+    }
+    scale_cos_scalar(scale, z);
+}
+
+fn scale_cos_scalar(scale: f32, z: &mut [f32]) {
+    for v in z.iter_mut() {
+        *v = scale * (cos_core(*v as f64) as f32);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn scale_cos_avx2(scale: f32, z: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = z.len();
+    let two_over_pi = _mm256_set1_pd(TWO_OVER_PI);
+    let half = _mm256_set1_pd(0.5);
+    let quarter = _mm256_set1_pd(0.25);
+    let one = _mm256_set1_pd(1.0);
+    let two = _mm256_set1_pd(2.0);
+    let four = _mm256_set1_pd(4.0);
+    let pio2_1 = _mm256_set1_pd(PIO2_1);
+    let pio2_1t = _mm256_set1_pd(PIO2_1T);
+    let sign = _mm256_set1_pd(-0.0);
+    let scale4 = _mm_set1_ps(scale);
+    let mut i = 0;
+    while i + 4 <= n {
+        let x = _mm256_cvtps_pd(_mm_loadu_ps(z.as_ptr().add(i)));
+        let nv = _mm256_floor_pd(_mm256_add_pd(_mm256_mul_pd(x, two_over_pi), half));
+        let r = _mm256_sub_pd(
+            _mm256_sub_pd(x, _mm256_mul_pd(nv, pio2_1)),
+            _mm256_mul_pd(nv, pio2_1t),
+        );
+        let r2 = _mm256_mul_pd(r, r);
+        let c10 = _mm256_set1_pd(COS_C10);
+        let mut c = _mm256_add_pd(_mm256_set1_pd(COS_C8), _mm256_mul_pd(r2, c10));
+        c = _mm256_add_pd(_mm256_set1_pd(COS_C6), _mm256_mul_pd(r2, c));
+        c = _mm256_add_pd(_mm256_set1_pd(COS_C4), _mm256_mul_pd(r2, c));
+        c = _mm256_add_pd(_mm256_set1_pd(COS_C2), _mm256_mul_pd(r2, c));
+        c = _mm256_add_pd(one, _mm256_mul_pd(r2, c));
+        let s9 = _mm256_set1_pd(SIN_S9);
+        let mut s = _mm256_add_pd(_mm256_set1_pd(SIN_S7), _mm256_mul_pd(r2, s9));
+        s = _mm256_add_pd(_mm256_set1_pd(SIN_S5), _mm256_mul_pd(r2, s));
+        s = _mm256_add_pd(_mm256_set1_pd(SIN_S3), _mm256_mul_pd(r2, s));
+        s = _mm256_add_pd(one, _mm256_mul_pd(r2, s));
+        s = _mm256_mul_pd(r, s);
+        let m2 = _mm256_sub_pd(nv, _mm256_mul_pd(two, _mm256_floor_pd(_mm256_mul_pd(nv, half))));
+        let m4f = _mm256_floor_pd(_mm256_mul_pd(nv, quarter));
+        let m4 = _mm256_sub_pd(nv, _mm256_mul_pd(four, m4f));
+        let use_sin = _mm256_cmp_pd::<_CMP_EQ_OQ>(m2, one);
+        let v = _mm256_blendv_pd(c, s, use_sin);
+        let neg = _mm256_or_pd(
+            _mm256_cmp_pd::<_CMP_EQ_OQ>(m4, one),
+            _mm256_cmp_pd::<_CMP_EQ_OQ>(m4, two),
+        );
+        let v = _mm256_xor_pd(v, _mm256_and_pd(neg, sign));
+        let out = _mm_mul_ps(scale4, _mm256_cvtpd_ps(v));
+        _mm_storeu_ps(z.as_mut_ptr().add(i), out);
+        i += 4;
+    }
+    scale_cos_scalar(scale, &mut z[i..]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn rand_f32(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+        (0..n).map(|_| (rng.normal() * 2.0) as f32).collect()
+    }
+
+    fn rand_f64(rng: &mut Pcg64, n: usize) -> Vec<f64> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    const LENS: [usize; 13] = [0, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 67];
+
+    #[test]
+    fn override_and_reset_round_trip() {
+        // One test owns all dispatch-state assertions (global state; the
+        // kernels themselves are bit-identical under every state, so other
+        // tests racing a flipped state still see identical numbers).
+        set_enabled(false);
+        assert_eq!(active(), Isa::Scalar);
+        set_enabled(true);
+        assert_eq!(active(), detected());
+        reset();
+        let isa = active();
+        assert!(matches!(isa, Isa::Scalar | Isa::Avx2 | Isa::Neon));
+        assert!(!active_name().is_empty());
+    }
+
+    #[test]
+    fn poly_cos_matches_libm_to_f32_precision() {
+        let mut rng = Pcg64::new(7, 0);
+        for k in 0..4000 {
+            let x = match k % 4 {
+                0 => rng.normal() * 3.0,
+                1 => rng.uniform_in(-40.0, 40.0),
+                2 => rng.uniform_in(-1000.0, 1000.0),
+                _ => (k as f64 - 2000.0) * 0.01,
+            };
+            let got = cos_core(x);
+            let want = x.cos();
+            assert!((got - want).abs() < 5e-10, "cos_core({x}) = {got}, libm {want}");
+        }
+        // exact quadrant boundaries
+        for x in [0.0f64, 0.5, -0.5, 1.0, -1.0, 2.0, 3.0, -3.0, 100.5] {
+            assert!((cos_core(x) - x.cos()).abs() < 5e-10, "x={x}");
+        }
+    }
+
+    #[test]
+    fn scale_cos_matches_per_element_reference() {
+        let mut rng = Pcg64::new(9, 0);
+        for &n in &LENS {
+            let z0 = rand_f32(&mut rng, n);
+            let want: Vec<f32> =
+                z0.iter().map(|&v| 0.17f32 * (cos_core(v as f64) as f32)).collect();
+            let mut z = z0.clone();
+            scale_cos(0.17, &mut z);
+            assert_eq!(z, want, "n={n}");
+            let mut zs = z0.clone();
+            scale_cos_scalar(0.17, &mut zs);
+            assert_eq!(zs, want, "scalar n={n}");
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_kernels_are_bit_identical_to_scalar() {
+        if !is_x86_feature_detected!("avx2") {
+            return;
+        }
+        let mut rng = Pcg64::new(42, 0);
+        for &n in &LENS {
+            let x = rand_f32(&mut rng, n);
+            let y = rand_f32(&mut rng, n);
+            let want = dot_f32_scalar(&x, &y);
+            let got = unsafe { dot_f32_avx2(&x, &y) };
+            assert_eq!(got.to_bits(), want.to_bits(), "dot_f32 n={n}");
+
+            let beta = rand_f64(&mut rng, 64);
+            let members: Vec<u32> = (0..n).map(|i| ((i * 37 + 11) % 64) as u32).collect();
+            let want = weighted_gather_sum_scalar(&x, &members, &beta);
+            let got = unsafe { weighted_gather_sum_avx2(&x, &members, &beta) };
+            assert_eq!(got.to_bits(), want.to_bits(), "weighted_gather_sum n={n}");
+
+            let loads = rand_f64(&mut rng, 32);
+            let bucket_of: Vec<u32> = (0..n).map(|i| ((i * 13 + 5) % 32) as u32).collect();
+            let mut want_out = rand_f64(&mut rng, n);
+            let mut got_out = want_out.clone();
+            scaled_gather_add_scalar(&mut want_out, &x, &bucket_of, &loads);
+            unsafe { scaled_gather_add_avx2(&mut got_out, &x, &bucket_of, &loads) };
+            assert_eq!(got_out, want_out, "scaled_gather_add n={n}");
+
+            let mut want_y = y.clone();
+            let mut got_y = y.clone();
+            axpy_f32_scalar(0.37, &x, &mut want_y);
+            unsafe { axpy_f32_avx2(0.37, &x, &mut got_y) };
+            assert_eq!(got_y, want_y, "axpy_f32 n={n}");
+
+            let mut want_t = rand_f64(&mut rng, n);
+            let mut got_t = want_t.clone();
+            axpy_f32_f64_scalar(-1.25, &x, &mut want_t);
+            unsafe { axpy_f32_f64_avx2(-1.25, &x, &mut got_t) };
+            assert_eq!(got_t, want_t, "axpy_f32_f64 n={n}");
+
+            let z: Vec<f32> = (0..n).map(|_| rng.normal().abs() as f32 + 0.1).collect();
+            let iw: Vec<f32> = z.iter().map(|&w| 1.0 / w).collect();
+            let (mut wc, mut wr) = (vec![0.0f32; n], vec![0.0f32; n]);
+            let (mut gc, mut gr) = (vec![0.0f32; n], vec![0.0f32; n]);
+            hash_cells_scalar(&x, &z, &iw, &mut wc, &mut wr);
+            unsafe { hash_cells_avx2(&x, &z, &iw, &mut gc, &mut gr) };
+            assert_eq!(gc, wc, "hash_cells c n={n}");
+            assert_eq!(gr, wr, "hash_cells r n={n}");
+
+            let mut want_z = x.clone();
+            let mut got_z = x.clone();
+            scale_cos_scalar(0.17, &mut want_z);
+            unsafe { scale_cos_avx2(0.17, &mut got_z) };
+            assert_eq!(got_z, want_z, "scale_cos n={n}");
+        }
+    }
+
+    #[test]
+    fn public_kernels_match_scalar_reference_under_any_dispatch() {
+        // Whatever ISA is active, the public entry points must reproduce
+        // the scalar reference bit for bit — the module's core contract.
+        let mut rng = Pcg64::new(3, 0);
+        for &n in &LENS {
+            let x = rand_f32(&mut rng, n);
+            let y = rand_f32(&mut rng, n);
+            assert_eq!(dot_f32(&x, &y).to_bits(), dot_f32_scalar(&x, &y).to_bits(), "dot n={n}");
+            let beta = rand_f64(&mut rng, 50);
+            let members: Vec<u32> = (0..n).map(|i| ((i * 7 + 3) % 50) as u32).collect();
+            assert_eq!(
+                weighted_gather_sum(&x, &members, &beta).to_bits(),
+                weighted_gather_sum_scalar(&x, &members, &beta).to_bits(),
+                "gather-sum n={n}"
+            );
+        }
+    }
+}

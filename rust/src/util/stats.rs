@@ -1,0 +1,59 @@
+//! The one shared percentile definition: nearest-rank over a total-order
+//! sort. Both the serving latency stats (`metrics.rs`) and the bench
+//! harness (`util/timer.rs`) summarize through these helpers, so a p99
+//! means the same thing in a histogram line and a BENCH_*.json artifact.
+
+/// Sort samples into the total order (`f64::total_cmp`): NaNs sort to the
+/// ends instead of aborting the run the way a `partial_cmp().unwrap()`
+/// comparator does. A stray NaN sample therefore lands past the +inf end
+/// of the positives and finite percentiles stay finite and meaningful.
+pub fn sort_samples(xs: &mut [f64]) {
+    xs.sort_by(f64::total_cmp);
+}
+
+/// Nearest-rank percentile on an already-sorted slice: the value at
+/// 1-based rank `ceil(p · n)`, clamped into the slice. Unlike the
+/// truncating `times[n * p]` rule this never over-reports at small `n`
+/// (the p50 of `[a, b]` is `a`, not `b`) and agrees with the histogram
+/// quantiles in `metrics.rs`.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty sample set");
+    let rank = (sorted.len() as f64 * p).ceil() as usize;
+    sorted[rank.saturating_sub(1).min(sorted.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_rank_exact_small_n() {
+        // n=1: every percentile is the sample.
+        assert_eq!(percentile(&[7.0], 0.50), 7.0);
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+        // n=2: ceil(0.5·2)=1 → first element (the truncating rule said
+        // index n/2 = 1 → second element, over-reporting the median).
+        assert_eq!(percentile(&[1.0, 2.0], 0.50), 1.0);
+        assert_eq!(percentile(&[1.0, 2.0], 0.99), 2.0);
+        // n=4: p50 → rank 2; p75 → rank 3; p99 → rank 4.
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&xs, 0.50), 20.0);
+        assert_eq!(percentile(&xs, 0.75), 30.0);
+        assert_eq!(percentile(&xs, 0.99), 40.0);
+        // n=100: p99 → rank 99 (index 98), not the max.
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.99), 99.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+    }
+
+    #[test]
+    fn total_cmp_sort_survives_nan() {
+        let mut xs = vec![3.0, f64::NAN, 1.0, 2.0];
+        sort_samples(&mut xs);
+        // +NaN sorts after every finite value; ranks below n stay finite.
+        assert_eq!(&xs[..3], &[1.0, 2.0, 3.0]);
+        assert!(xs[3].is_nan());
+        assert_eq!(percentile(&xs, 0.50), 2.0);
+        assert_eq!(percentile(&xs, 0.75), 3.0);
+    }
+}

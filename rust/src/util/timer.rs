@@ -1,5 +1,6 @@
 //! Wall-clock instrumentation + a micro-bench runner (criterion substitute).
 
+use crate::util::stats;
 use std::time::Instant;
 
 /// Scoped stopwatch.
@@ -75,15 +76,25 @@ where
             break;
         }
     }
-    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    summarize(name, times)
+}
+
+/// Collapse raw iteration timings into `BenchStats` using the shared
+/// `util::stats` definitions: a total-order sort (a NaN timing cannot
+/// abort a bench run) and nearest-rank percentiles — the same rule the
+/// serving histogram uses, replacing the old truncating `times[n/2]` /
+/// `times[n*99/100]` indexing that over-reported at small iteration
+/// counts.
+fn summarize(name: &str, mut times: Vec<f64>) -> BenchStats {
+    stats::sort_samples(&mut times);
     let n = times.len();
     BenchStats {
         name: name.to_string(),
         iters: n,
         mean_secs: times.iter().sum::<f64>() / n as f64,
         min_secs: times[0],
-        p50_secs: times[n / 2],
-        p99_secs: times[(n * 99 / 100).min(n - 1)],
+        p50_secs: stats::percentile(&times, 0.50),
+        p99_secs: stats::percentile(&times, 0.99),
     }
 }
 
@@ -103,6 +114,34 @@ mod tests {
         assert!(s.iters >= 1);
         assert!(s.min_secs <= s.p50_secs && s.p50_secs <= s.p99_secs);
         assert!(s.mean_secs > 0.0);
+    }
+
+    #[test]
+    fn summarize_uses_nearest_rank_percentiles() {
+        // n=2: nearest-rank p50 is the LOWER sample (rank ceil(0.5·2)=1);
+        // the old `times[n / 2]` indexing returned the upper one.
+        let s = summarize("two", vec![2.0, 1.0]);
+        assert_eq!(s.p50_secs, 1.0);
+        assert_eq!(s.p99_secs, 2.0);
+        assert_eq!(s.min_secs, 1.0);
+        // n=4: p50 → rank 2 (old rule said index 2 → third element).
+        let s = summarize("four", vec![40.0, 10.0, 30.0, 20.0]);
+        assert_eq!(s.p50_secs, 20.0);
+        assert_eq!(s.p99_secs, 40.0);
+        // n=100: p99 → rank 99, not the max.
+        let s = summarize("hundred", (1..=100).map(|i| i as f64).collect());
+        assert_eq!(s.p50_secs, 50.0);
+        assert_eq!(s.p99_secs, 99.0);
+    }
+
+    #[test]
+    fn summarize_survives_a_nan_timing() {
+        // A poisoned timing must not abort the whole bench run; NaN sorts
+        // past the finite samples and the low quantiles stay finite.
+        let s = summarize("nan", vec![3.0, f64::NAN, 1.0, 2.0]);
+        assert_eq!(s.min_secs, 1.0);
+        assert_eq!(s.p50_secs, 2.0);
+        assert!(s.iters == 4);
     }
 
     #[test]

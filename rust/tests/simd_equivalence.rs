@@ -1,0 +1,169 @@
+//! Scalar-vs-SIMD equivalence: flipping `WLSH_SIMD` must change
+//! throughput, never numbers. Build paths (instance tables, bucket loads,
+//! mat-vecs, CG β) are asserted **bit-identical** across
+//! `WLSH_SIMD=on|off` × worker counts {1, 2, 8}, and the f32 serving
+//! paths (dense + CSR predictions, RFF features) carry a documented ULP
+//! tolerance of **0** — every `util::simd` kernel reproduces its scalar
+//! reference exactly (fixed-order reductions, no FMA, a shared
+//! deterministic cosine), so these tests use exact equality throughout,
+//! mirroring the `stream_equivalence.rs` harness.
+//!
+//! The dispatch state is process-global (`util::simd::set_enabled`), so
+//! every test serializes on one lock and restores auto-detection on exit.
+//! On hardware with no SIMD path the two settings coincide and the
+//! assertions hold trivially.
+
+use std::sync::Mutex;
+
+use wlsh_krr::api::MethodSpec;
+use wlsh_krr::config::KrrConfig;
+use wlsh_krr::coordinator::Trainer;
+use wlsh_krr::data::{synthetic_by_name, Dataset, SparseChunk};
+use wlsh_krr::sketch::{KrrOperator, RffSketch, WlshSketch};
+use wlsh_krr::util::rng::Pcg64;
+use wlsh_krr::util::simd;
+
+const THREADS: [usize; 3] = [1, 2, 8];
+
+static SIMD_LOCK: Mutex<()> = Mutex::new(());
+
+/// Restores auto-detection even if the test panics mid-flight.
+struct SimdGuard;
+
+impl Drop for SimdGuard {
+    fn drop(&mut self) {
+        simd::reset();
+    }
+}
+
+fn standardized_wine(n: usize) -> Dataset {
+    let mut ds = synthetic_by_name("wine", Some(n), 11).unwrap();
+    ds.standardize();
+    ds
+}
+
+fn random_beta(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg64::new(seed, 0);
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+/// CSR image of dense row-major data, dropping exact zeros (the loaders'
+/// canonical form: ascending unique indices per row).
+fn to_csr(x: &[f32], d: usize) -> (Vec<usize>, Vec<u32>, Vec<f32>) {
+    let mut indptr = vec![0usize];
+    let mut indices = Vec::new();
+    let mut values = Vec::new();
+    for row in x.chunks(d) {
+        for (j, &v) in row.iter().enumerate() {
+            if v != 0.0 {
+                indices.push(j as u32);
+                values.push(v);
+            }
+        }
+        indptr.push(indices.len());
+    }
+    (indptr, indices, values)
+}
+
+#[test]
+fn wlsh_build_solve_and_matvec_bit_identical_across_simd_and_threads() {
+    let _lock = SIMD_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _guard = SimdGuard;
+    let ds = standardized_wine(200);
+    let beta = random_beta(ds.n, 3);
+    let queries = &ds.x[..40 * ds.d];
+    for (bucket_s, shape) in [("rect", 2.0), ("smooth2", 7.0)] {
+        let bucket = bucket_s.parse().unwrap();
+        simd::set_enabled(false);
+        let base = WlshSketch::build_spec(&ds.x, ds.n, ds.d, 16, &bucket, shape, 3.0, 5);
+        let base_mv: Vec<Vec<f64>> =
+            THREADS.iter().map(|&t| base.matvec_threads(&beta, t)).collect();
+        let base_pred = base.predict(queries, &beta);
+        let base_diag = base.diag_values();
+        simd::set_enabled(true);
+        // same sketch, SIMD kernels: bucket loads, fused mat-vec, serving
+        for (&t, want) in THREADS.iter().zip(&base_mv) {
+            assert_eq!(&base.matvec_threads(&beta, t), want, "{bucket_s} matvec t={t}");
+        }
+        assert_eq!(base.predict(queries, &beta), base_pred, "{bucket_s} predict");
+        assert_eq!(base.diag_values(), base_diag, "{bucket_s} diag");
+        // rebuilt sketch, SIMD hash path: tables and weights bit-equal
+        let built = WlshSketch::build_spec(&ds.x, ds.n, ds.d, 16, &bucket, shape, 3.0, 5);
+        for (a, b) in base.instances.iter().zip(&built.instances) {
+            assert_eq!(a.table.bucket_of, b.table.bucket_of, "{bucket_s} bucket_of");
+            assert_eq!(a.table.offsets, b.table.offsets, "{bucket_s} offsets");
+            assert_eq!(a.table.members, b.table.members, "{bucket_s} members");
+            assert_eq!(a.weights, b.weights, "{bucket_s} weights");
+            assert_eq!(a.weights_csr, b.weights_csr, "{bucket_s} weights_csr");
+        }
+    }
+}
+
+#[test]
+fn cg_coefficients_bit_identical_across_simd_for_every_method() {
+    let _lock = SIMD_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _guard = SimdGuard;
+    let ds = standardized_wine(160);
+    for method in [MethodSpec::Wlsh, MethodSpec::Rff] {
+        for workers in [1usize, 2, 8] {
+            let cfg = KrrConfig {
+                method,
+                budget: 24,
+                scale: 3.0,
+                lambda: 0.4,
+                cg_max_iters: 60,
+                workers,
+                ..Default::default()
+            };
+            simd::set_enabled(false);
+            let want = Trainer::new(cfg.clone()).train(&ds).unwrap();
+            simd::set_enabled(true);
+            let got = Trainer::new(cfg).train(&ds).unwrap();
+            let tag = format!("{method} workers={workers}");
+            assert_eq!(got.beta, want.beta, "{tag} β");
+            assert_eq!(got.report.cg_iters, want.report.cg_iters, "{tag} iters");
+            let q = &ds.x[..20 * ds.d];
+            assert_eq!(got.predict(q), want.predict(q), "{tag} predict");
+        }
+    }
+}
+
+#[test]
+fn rff_features_theta_and_sparse_path_bit_identical_across_simd() {
+    let _lock = SIMD_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _guard = SimdGuard;
+    let ds = standardized_wine(200);
+    let beta = random_beta(ds.n, 4);
+    let queries = &ds.x[..40 * ds.d];
+    // sparsify a query block so the CSR featurize path has zeros to skip
+    let mut qs = queries.to_vec();
+    for (k, v) in qs.iter_mut().enumerate() {
+        if (k * 31 + 7) % 10 < 5 {
+            *v = 0.0;
+        }
+    }
+    let (indptr, indices, values) = to_csr(&qs, ds.d);
+    let csr = SparseChunk { indptr: &indptr, indices: &indices, values: &values };
+
+    simd::set_enabled(false);
+    let base = RffSketch::build(&ds.x, ds.n, ds.d, 64, 3.0, 7);
+    let base_feats = base.features().to_vec();
+    let base_q = base.featurize(&qs);
+    let base_sq = base.featurize_sparse(&csr);
+    let base_theta = base.theta(&beta);
+    let base_mv = base.matvec(&beta);
+    let base_pred = base.predict(queries, &beta);
+
+    simd::set_enabled(true);
+    let built = RffSketch::build(&ds.x, ds.n, ds.d, 64, 3.0, 7);
+    assert_eq!(built.features(), &base_feats[..], "feature matrix");
+    assert_eq!(base.featurize(&qs), base_q, "dense featurize");
+    assert_eq!(base.featurize_sparse(&csr), base_sq, "sparse featurize");
+    assert_eq!(base_q, {
+        // dense-vs-sparse stays exact under SIMD too
+        base.featurize_sparse(&csr)
+    });
+    assert_eq!(base.theta(&beta), base_theta, "theta");
+    assert_eq!(base.matvec(&beta), base_mv, "matvec");
+    assert_eq!(base.predict(queries, &beta), base_pred, "predict (0-ULP serving bound)");
+}

@@ -55,6 +55,18 @@ extract() {
             n = num($0, "n")
             if ((v = num($0, "wlsh_sparse_secs")) != "") print "matvec.wlsh_sparse_secs.n" n, v
             if ((v = num($0, "rff_sparse_secs")) != "")  print "matvec.rff_sparse_secs.n" n, v
+        } else if (series == "simd") {
+            # scalar-reference vs vectorized kernel timings at the largest
+            # table n; the on/off pair is captured so a baseline diff shows
+            # whether a regression is the kernel or the dispatch
+            n = num($0, "n")
+            if (n == "") next
+            if ((v = num($0, "wlsh_matvec_on_secs")) != "")    print "simd.wlsh_matvec_on_secs.n" n, v
+            if ((v = num($0, "wlsh_matvec_off_secs")) != "")   print "simd.wlsh_matvec_off_secs.n" n, v
+            if ((v = num($0, "bucket_loads_on_secs")) != "")   print "simd.bucket_loads_on_secs.n" n, v
+            if ((v = num($0, "bucket_loads_off_secs")) != "")  print "simd.bucket_loads_off_secs.n" n, v
+            if ((v = num($0, "rff_featurize_on_secs")) != "")  print "simd.rff_featurize_on_secs.n" n, v
+            if ((v = num($0, "rff_featurize_off_secs")) != "") print "simd.rff_featurize_off_secs.n" n, v
         } else if (series == "sharded_solve") {
             # end-to-end train seconds through the sharded (wire-protocol)
             # path vs the single-process solve, keyed by shard count
@@ -100,10 +112,17 @@ fi
 
 commit=$(git rev-parse --short HEAD 2>/dev/null || echo unknown)
 
+# ISA the bench process dispatched to (recorded by bench_matvec's simd
+# series) — kept as a header field, not a metric, so baselines from
+# different runner classes are flagged as incomparable by the checker.
+# shellcheck disable=SC2086
+isa=$(grep -ho '"isa":"[^"]*"' $files 2>/dev/null | head -n1 | sed 's/.*:"//; s/"//')
+
 {
     printf '{\n'
     printf '  "format": 1,\n'
     printf '  "commit": "%s",\n' "$commit"
+    printf '  "isa": "%s",\n' "${isa:-unknown}"
     printf '  "scale": "%s",\n' "$scale"
     printf '  "metrics": {\n'
     # unique by metric key (first occurrence wins), sorted for stable diffs
