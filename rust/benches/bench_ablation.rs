@@ -9,14 +9,14 @@
 mod common;
 
 use common::{by_scale, f, record, secs, Table};
-use wlsh_krr::api::MethodSpec;
+use wlsh_krr::api::{MethodSpec, SamplingSpec};
 use wlsh_krr::config::KrrConfig;
 use wlsh_krr::coordinator::Trainer;
 use wlsh_krr::data::{rmse, synthetic_by_name, Dataset};
 use wlsh_krr::gp::sample_gp_exact;
 use wlsh_krr::kernels::Kernel;
 use wlsh_krr::lsh::IdMode;
-use wlsh_krr::sketch::WlshSketch;
+use wlsh_krr::sketch::{WlshBuildParams, WlshSketch};
 use wlsh_krr::util::json::JsonWriter;
 use wlsh_krr::util::rng::Pcg64;
 
@@ -26,6 +26,7 @@ fn main() {
     a3_id_mode();
     a4_workers();
     a5_nystrom();
+    a6_sampling();
 }
 
 fn a1_bucket_function() {
@@ -113,7 +114,14 @@ fn a3_id_mode() {
     let t = Table::new(&[("mode", 6), ("build", 9), ("buckets/inst", 13)]);
     for (label, mode) in [("u64", IdMode::U64), ("i32", IdMode::I32)] {
         let t0 = std::time::Instant::now();
-        let sk = WlshSketch::build_mode(&x, n, d, 50, "rect", 2.0, 4.0, 26, mode);
+        let sk = WlshSketch::build_mem(
+            &x,
+            &WlshBuildParams::new(n, d, 50)
+                .gamma_shape(2.0)
+                .scale(4.0)
+                .seed(26)
+                .id_mode(mode),
+        );
         let b = t0.elapsed().as_secs_f64();
         t.row(&[label.into(), secs(b), f(sk.mean_buckets(), 0)]);
         record(
@@ -196,4 +204,63 @@ fn a5_nystrom() {
         );
     }
     println!("\nnote: Nyström is data-dependent (paper §1.1); WLSH is oblivious\n");
+}
+
+/// A6 — accuracy vs instance count under importance sampling: at each
+/// pool size m, compare uniform (all m at weight 1) against
+/// `leverage(pilot=m/4, keep=3m/4)` (25% fewer instances carried through
+/// every mat-vec/predict) and `stein` (all m, reweighted). The
+/// `rmse_at_m` series is what `scripts/bench_baseline.sh` extracts and
+/// the CI accuracy-vs-m smoke gates on: leverage at 0.75m should sit
+/// within a few percent of uniform at the full m.
+fn a6_sampling() {
+    let mut ds = synthetic_by_name("wine", Some(by_scale(600, 2000, 6497)), 31).unwrap();
+    ds.standardize();
+    let (tr, te) = ds.split(ds.n * 3 / 4, 32);
+    let med_l1 = wlsh_krr::data::median_distance(&tr, true, 400, 9);
+    println!("=== A6: importance sampling (accuracy vs kept instances, wine-synthetic) ===\n");
+    let t = Table::new(&[("pool m", 8), ("sampling", 24), ("kept", 6), ("rmse", 9), ("build", 9)]);
+    for m in [32usize, 64, 128] {
+        let pilot = (m / 4).max(4);
+        let keep = (m * 3) / 4;
+        let variants = [
+            ("uniform", SamplingSpec::Uniform, m),
+            ("leverage", SamplingSpec::Leverage { pilot, keep }, keep),
+            ("stein", SamplingSpec::Stein, m),
+        ];
+        for (label, sampling, kept) in variants {
+            let cfg = KrrConfig {
+                method: MethodSpec::Wlsh,
+                budget: m,
+                scale: med_l1,
+                lambda: 0.5,
+                sampling,
+                ..Default::default()
+            };
+            let model = Trainer::new(cfg).train(&tr).expect("train");
+            let err = rmse(&model.predict(&te.x), &te.y);
+            t.row(&[
+                m.to_string(),
+                sampling.to_string(),
+                kept.to_string(),
+                f(err, 4),
+                secs(model.report.build_secs),
+            ]);
+            record(
+                "ablation",
+                &JsonWriter::object()
+                    .field_str("series", "rmse_at_m")
+                    .field_str("sampling", label)
+                    .field_usize("pool_m", m)
+                    .field_usize("kept_m", kept)
+                    .field_f64("rmse", err)
+                    .field_f64("build_secs", model.report.build_secs)
+                    .finish(),
+            );
+        }
+    }
+    println!(
+        "\nexpect: leverage at 0.75m tracks uniform at m (fewer instances\n\
+         per mat-vec at matched accuracy); stein reweights without dropping\n"
+    );
 }

@@ -9,7 +9,7 @@
 mod common;
 
 use common::{by_scale, f, record, Table};
-use wlsh_krr::sketch::{KrrOperator, WlshSketch};
+use wlsh_krr::sketch::{KrrOperator, WlshBuildParams, WlshSketch};
 use wlsh_krr::util::json::JsonWriter;
 
 fn two_cluster(n: usize, lambda: f64) -> (Vec<f32>, Vec<f64>) {
@@ -24,7 +24,7 @@ fn two_cluster(n: usize, lambda: f64) -> (Vec<f32>, Vec<f64>) {
 }
 
 fn quad_form(x: &[f32], beta: &[f64], n: usize, m: usize, seed: u64) -> f64 {
-    let sk = WlshSketch::build(x, n, 1, m, "rect", 2.0, 1.0, seed);
+    let sk = WlshSketch::build_mem(x, &WlshBuildParams::new(n, 1, m).seed(seed));
     let y = sk.matvec(beta);
     beta.iter().zip(&y).map(|(a, b)| a * b).sum()
 }

@@ -14,7 +14,7 @@ use wlsh_krr::data::{DensifySource, LibsvmSource};
 use wlsh_krr::kernels::Kernel;
 use wlsh_krr::lsh::IdMode;
 use wlsh_krr::runtime::Runtime;
-use wlsh_krr::sketch::{ExactKernelOp, KrrOperator, RffSketch, WlshSketch};
+use wlsh_krr::sketch::{ExactKernelOp, KrrOperator, RffSketch, WlshBuildParams, WlshSketch};
 use wlsh_krr::util::json::JsonWriter;
 use wlsh_krr::util::rng::Pcg64;
 use wlsh_krr::util::timer::bench;
@@ -46,7 +46,10 @@ fn main() {
         let beta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
         // WLSH build (preprocessing) timing
         let tb = std::time::Instant::now();
-        let wlsh = WlshSketch::build(&x, n, d, m, "rect", 2.0, 4.0, 1);
+        let wlsh = WlshSketch::build_mem(
+            &x,
+            &WlshBuildParams::new(n, d, m).gamma_shape(2.0).scale(4.0).seed(1),
+        );
         let build_secs = tb.elapsed().as_secs_f64();
         // single-threaded on purpose: this table measures the paper's
         // per-iteration cost model (ops, not cores); the parallel section
@@ -112,7 +115,14 @@ fn main() {
         let queries = &x[..qrows * d];
         println!("\n=== SIMD on vs off (detected: {isa}; n={n}, m={m}, D={dd}) ===\n");
         simd::set_enabled(false);
-        let wlsh = WlshSketch::build(&x, n, d, m, "smooth2", 7.0, 4.0, 1);
+        let wlsh = WlshSketch::build_mem(
+            &x,
+            &WlshBuildParams::new(n, d, m)
+                .bucket_str("smooth2")
+                .gamma_shape(7.0)
+                .scale(4.0)
+                .seed(1),
+        );
         let rff = RffSketch::build(&x, n, d, dd, 4.0, 2);
         let off_mv = wlsh.matvec_serial(&beta);
         let off_feat = rff.featurize(queries);
@@ -178,11 +188,17 @@ fn main() {
     let dense = DensifySource::new(&src);
     let rect = BucketSpec::Rect;
     let sbudget = by_scale(0.1, 0.3, 0.5);
+    let sparse_params = WlshBuildParams::new(sn, sd, m)
+        .bucket(rect)
+        .gamma_shape(2.0)
+        .scale(4.0)
+        .seed(1)
+        .chunk_rows(2048);
     let s_wlsh_sp = bench("wlsh-sparse", sbudget, || {
-        WlshSketch::build_source(&src, m, &rect, 2.0, 4.0, 1, IdMode::U64, 2048, 1).unwrap()
+        WlshSketch::build(&sparse_params, &src).unwrap()
     });
     let s_wlsh_dn = bench("wlsh-densified", sbudget, || {
-        WlshSketch::build_source(&dense, m, &rect, 2.0, 4.0, 1, IdMode::U64, 2048, 1).unwrap()
+        WlshSketch::build(&sparse_params, &dense).unwrap()
     });
     let s_rff_sp = bench("rff-sparse", sbudget, || {
         RffSketch::build_source(&src, 128, 4.0, 2, 2048, 1).unwrap()
@@ -235,7 +251,10 @@ fn main() {
         let mut rng = Pcg64::new(m_par as u64, 5);
         let x: Vec<f32> = (0..par_n * d).map(|_| rng.normal() as f32).collect();
         let beta: Vec<f64> = (0..par_n).map(|_| rng.normal()).collect();
-        let wlsh = WlshSketch::build(&x, par_n, d, m_par, "rect", 2.0, 4.0, 9);
+        let wlsh = WlshSketch::build_mem(
+            &x,
+            &WlshBuildParams::new(par_n, d, m_par).gamma_shape(2.0).scale(4.0).seed(9),
+        );
         let serial_out = wlsh.matvec_serial(&beta);
         let par_out = wlsh.matvec_threads(&beta, threads);
         assert_eq!(serial_out, par_out, "parallel mat-vec is not bit-identical to serial");
@@ -403,7 +422,15 @@ fn main() {
             let mut rng = Pcg64::new(99, 0);
             let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
             let beta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-            let sk = WlshSketch::build_mode(&x, n, d, m, "rect", 2.0, 4.0, 3, IdMode::I32);
+            let sk = WlshSketch::build_mem(
+                &x,
+                &WlshBuildParams::new(n, d, m)
+                    .bucket(BucketSpec::Rect)
+                    .gamma_shape(2.0)
+                    .scale(4.0)
+                    .seed(3)
+                    .id_mode(IdMode::I32),
+            );
             let ids: Vec<Vec<u32>> =
                 sk.instances.iter().map(|i| i.table.bucket_of.clone()).collect();
             let weights: Vec<Vec<f32>> =

@@ -7,12 +7,21 @@
 mod common;
 
 use common::{by_scale, f, record, Table};
+use wlsh_krr::api::SamplingSpec;
 use wlsh_krr::kernels::Kernel;
 use wlsh_krr::risk::ose_epsilon_dense;
-use wlsh_krr::sketch::{ExactKernelOp, WlshSketch};
+use wlsh_krr::sketch::{ExactKernelOp, WlshBuildParams, WlshSketch};
 use wlsh_krr::solver::materialize;
 use wlsh_krr::util::json::JsonWriter;
 use wlsh_krr::util::rng::Pcg64;
+
+/// One positional-free sketch build for the sweeps below.
+fn build(x: &[f32], n: usize, d: usize, m: usize, bucket: &str, shape: f64, seed: u64) -> WlshSketch {
+    WlshSketch::build_mem(
+        x,
+        &WlshBuildParams::new(n, d, m).bucket_str(bucket).gamma_shape(shape).seed(seed),
+    )
+}
 
 fn main() {
     let n = by_scale(48, 160, 512);
@@ -29,7 +38,7 @@ fn main() {
     for m in [4usize, 8, 16, 32, 64, 128, 256] {
         let eps: f64 = (0..trials)
             .map(|s| {
-                let sk = WlshSketch::build(&x, n, d, m, "rect", 2.0, 1.0, 500 + s as u64);
+                let sk = build(&x, n, d, m, "rect", 2.0, 500 + s as u64);
                 ose_epsilon_dense(&k, &sk, lambda).eps
             })
             .sum::<f64>()
@@ -53,7 +62,7 @@ fn main() {
     for lambda in [16.0, 8.0, 4.0, 2.0, 1.0, 0.5, 0.25] {
         let eps: f64 = (0..trials)
             .map(|s| {
-                let sk = WlshSketch::build(&x, n, d, 64, "rect", 2.0, 1.0, 900 + s as u64);
+                let sk = build(&x, n, d, 64, "rect", 2.0, 900 + s as u64);
                 ose_epsilon_dense(&k, &sk, lambda).eps
             })
             .sum::<f64>()
@@ -79,7 +88,7 @@ fn main() {
     for m in [16usize, 64, 256] {
         let eps: f64 = (0..trials)
             .map(|s| {
-                let sk = WlshSketch::build(&x, n, d, m, "smooth2", 7.0, 1.0, 1300 + s as u64);
+                let sk = build(&x, n, d, m, "smooth2", 7.0, 1300 + s as u64);
                 ose_epsilon_dense(&ks, &sk, 2.0).eps
             })
             .sum::<f64>()
@@ -95,4 +104,43 @@ fn main() {
         );
     }
     println!("\ntheory: same 1/sqrt(m) rate, constant scaled by ||f||_inf^2d (Thm 11)");
+
+    println!("\n=== F-OSE series 4: eps vs kept instances (leverage vs uniform) ===\n");
+    // the importance-weighted estimator's spectral error at m' kept
+    // instances vs a uniform sketch of the same pool — the OSE view of
+    // the accuracy-vs-m claim the ablation bench makes with RMSE
+    let t4 = Table::new(&[("pool m", 8), ("sampling", 24), ("kept", 6), ("eps", 10)]);
+    for m in [32usize, 64, 128] {
+        let pilot = (m / 4).max(4);
+        let keep = (m * 3) / 4;
+        for (label, sampling, kept) in [
+            ("uniform", SamplingSpec::Uniform, m),
+            ("leverage", SamplingSpec::Leverage { pilot, keep }, keep),
+        ] {
+            let eps: f64 = (0..trials)
+                .map(|s| {
+                    let params = WlshBuildParams::new(n, d, m)
+                        .gamma_shape(2.0)
+                        .seed(1700 + s as u64)
+                        .sampling(sampling)
+                        .lambda(lambda);
+                    let sk = WlshSketch::build_mem(&x, &params);
+                    ose_epsilon_dense(&k, &sk, lambda).eps
+                })
+                .sum::<f64>()
+                / trials as f64;
+            t4.row(&[m.to_string(), sampling.to_string(), kept.to_string(), f(eps, 4)]);
+            record(
+                "ose",
+                &JsonWriter::object()
+                    .field_str("series", "eps_vs_kept")
+                    .field_str("sampling", label)
+                    .field_usize("pool_m", m)
+                    .field_usize("kept_m", kept)
+                    .field_f64("eps", eps)
+                    .finish(),
+            );
+        }
+    }
+    println!("\nexpect: leverage at 0.75m within a few percent of uniform at m");
 }

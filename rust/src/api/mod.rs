@@ -25,8 +25,8 @@ mod spec;
 
 pub use error::KrrError;
 pub use spec::{
-    BucketSpec, KernelFamily, KernelSpec, MethodSpec, PrecondSpec, TopologySpec,
-    DEFAULT_PRECOND_RANK,
+    BucketSpec, KernelFamily, KernelSpec, MethodSpec, PrecondSpec, SamplingSpec,
+    TopologySpec, DEFAULT_PRECOND_RANK,
 };
 
 pub use crate::coordinator::TrainedModel;
@@ -74,6 +74,7 @@ impl_into_spec!(BucketSpec);
 impl_into_spec!(PrecondSpec);
 impl_into_spec!(KernelSpec);
 impl_into_spec!(TopologySpec);
+impl_into_spec!(SamplingSpec);
 
 /// Entry point for the builder API. `KrrModel` is a namespace: the trained
 /// artifact itself is a [`TrainedModel`].
@@ -141,6 +142,13 @@ impl KrrBuilder {
     /// (`local`, `shards(n=N)`, `remote(addr=host:port,...)`).
     pub fn topology(mut self, t: impl IntoSpec<TopologySpec>) -> Self {
         self.record(t.into_spec(), |c, v| c.topology = v);
+        self
+    }
+
+    /// Instance sampling strategy: a [`SamplingSpec`] or its string form
+    /// (`uniform`, `leverage(pilot=P,keep=K)`, `stein`).
+    pub fn sampling(mut self, s: impl IntoSpec<SamplingSpec>) -> Self {
+        self.record(s.into_spec(), |c, v| c.sampling = v);
         self
     }
 
@@ -240,6 +248,16 @@ impl KrrBuilder {
         let config = self.build_config()?;
         Trainer::new(config).train_source(src)
     }
+
+    /// Train an incrementally updatable model on `ds`: the online
+    /// counterpart of [`fit`](Self::fit), going through the same validated
+    /// config and spec grammar (so
+    /// `KrrModel::builder()...fit_online(&ds)` replaces the asymmetric
+    /// `OnlineTrainer::fit(config, &ds)` call).
+    pub fn fit_online(self, ds: &Dataset) -> Result<crate::online::OnlineTrainer, KrrError> {
+        let config = self.build_config()?;
+        crate::online::OnlineTrainer::fit(config, ds)
+    }
 }
 
 #[cfg(test)]
@@ -295,6 +313,22 @@ mod tests {
             KrrModel::builder().chunk_rows(0).build_config(),
             Err(KrrError::BadParam(_))
         ));
+    }
+
+    #[test]
+    fn fit_online_goes_through_the_builder() {
+        let ds = small_ds();
+        let (tr, te) = ds.split(160, 2);
+        let spec = |b: KrrBuilder| {
+            b.method(MethodSpec::Wlsh).budget(16).scale(3.0).lambda(0.5).sampling("uniform")
+        };
+        let offline = spec(KrrModel::builder()).fit(&tr).unwrap();
+        let online = spec(KrrModel::builder()).fit_online(&tr).unwrap();
+        assert_eq!(offline.beta, online.model().beta);
+        assert_eq!(offline.predict(&te.x), online.model().predict(&te.x));
+        // spec errors surface from fit_online exactly as from fit
+        let err = KrrModel::builder().sampling("bogus").fit_online(&tr).unwrap_err();
+        assert!(matches!(err, KrrError::BadParam(_)));
     }
 
     #[test]

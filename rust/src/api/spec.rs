@@ -357,6 +357,88 @@ impl FromStr for TopologySpec {
     }
 }
 
+/// How the sketch's m instances are selected and weighted (paper §4 plus
+/// the importance-sampling refinements of Avron et al., 1804.09893).
+///
+/// Strings: `uniform`, `leverage(pilot=P,keep=K)`, `stein`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SamplingSpec {
+    /// Keep all m instances with unit weight — the paper's estimator.
+    Uniform,
+    /// Build the full m-instance pool, estimate each instance's ridge
+    /// leverage against a `pilot`-instance pilot operator via Lanczos
+    /// quadrature, keep the top-`keep` instances, and reweight them so the
+    /// kept sub-estimator is trace-preserving.
+    Leverage {
+        /// Pilot-operator size (≥ 1, ≤ budget): instances scored against
+        /// the first `pilot` instances of the pool.
+        pilot: usize,
+        /// Instances retained (≥ 1, ≤ budget).
+        keep: usize,
+    },
+    /// Keep all m instances but carry mean-1 leverage-proportional
+    /// importance weights (data-driven Stein-effect shrinkage,
+    /// 1705.08525). Experimental.
+    Stein,
+}
+
+impl SamplingSpec {
+    /// True when every instance keeps unit weight (the legacy behavior).
+    pub fn is_uniform(&self) -> bool {
+        matches!(self, SamplingSpec::Uniform)
+    }
+}
+
+impl FromStr for SamplingSpec {
+    type Err = KrrError;
+
+    fn from_str(s: &str) -> Result<Self, KrrError> {
+        match s.trim() {
+            "" | "uniform" => return Ok(SamplingSpec::Uniform),
+            "stein" => return Ok(SamplingSpec::Stein),
+            _ => {}
+        }
+        let bad = || {
+            KrrError::BadParam(format!(
+                "unknown sampling {s:?} (uniform|leverage(pilot=P,keep=K)|stein)"
+            ))
+        };
+        let (name, params) = split_params(s).map_err(|_| bad())?;
+        if name != "leverage" {
+            return Err(bad());
+        }
+        let mut pilot = None;
+        let mut keep = None;
+        for (k, v) in params {
+            let parsed: usize = v.parse().map_err(|_| {
+                KrrError::BadParam(format!("leverage {k} {v:?} is not an integer"))
+            })?;
+            match k {
+                "pilot" => pilot = Some(parsed),
+                "keep" => keep = Some(parsed),
+                other => {
+                    return Err(KrrError::BadParam(format!(
+                        "leverage sampling has no parameter {other:?}"
+                    )))
+                }
+            }
+        }
+        let pilot = pilot.ok_or_else(|| {
+            KrrError::BadParam("leverage sampling requires pilot, e.g. leverage(pilot=16,keep=48)".into())
+        })?;
+        let keep = keep.ok_or_else(|| {
+            KrrError::BadParam("leverage sampling requires keep, e.g. leverage(pilot=16,keep=48)".into())
+        })?;
+        if pilot == 0 {
+            return Err(KrrError::BadParam("leverage pilot must be ≥ 1".into()));
+        }
+        if keep == 0 {
+            return Err(KrrError::BadParam("leverage keep must be ≥ 1".into()));
+        }
+        Ok(SamplingSpec::Leverage { pilot, keep })
+    }
+}
+
 fn parse_f64_param(key: &str, v: &str) -> Result<f64, KrrError> {
     let x: f64 = v
         .parse()
@@ -437,6 +519,18 @@ impl fmt::Display for TopologySpec {
                 }
                 write!(f, ")")
             }
+        }
+    }
+}
+
+impl fmt::Display for SamplingSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SamplingSpec::Uniform => write!(f, "uniform"),
+            SamplingSpec::Leverage { pilot, keep } => {
+                write!(f, "leverage(pilot={pilot},keep={keep})")
+            }
+            SamplingSpec::Stein => write!(f, "stein"),
         }
     }
 }
@@ -551,6 +645,36 @@ mod tests {
         {
             assert!(
                 matches!(bad.parse::<TopologySpec>(), Err(KrrError::BadParam(_))),
+                "{bad:?} should be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn sampling_round_trips_and_rejects_degenerate() {
+        for (s, v) in [
+            ("uniform", SamplingSpec::Uniform),
+            ("leverage(pilot=16,keep=48)", SamplingSpec::Leverage { pilot: 16, keep: 48 }),
+            ("stein", SamplingSpec::Stein),
+        ] {
+            assert_eq!(s.parse::<SamplingSpec>().unwrap(), v);
+            assert_eq!(v.to_string(), s);
+        }
+        assert!(SamplingSpec::Uniform.is_uniform());
+        assert!(!SamplingSpec::Stein.is_uniform());
+        for bad in [
+            "lev",
+            "leverage",
+            "leverage(pilot=16)",
+            "leverage(keep=48)",
+            "leverage(pilot=0,keep=4)",
+            "leverage(pilot=4,keep=0)",
+            "leverage(pilot=x,keep=4)",
+            "leverage(pilot=4,keep=4,extra=1)",
+            "stein(n=2)",
+        ] {
+            assert!(
+                matches!(bad.parse::<SamplingSpec>(), Err(KrrError::BadParam(_))),
                 "{bad:?} should be rejected"
             );
         }

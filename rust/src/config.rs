@@ -6,7 +6,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::api::{BucketSpec, KrrError, MethodSpec, PrecondSpec, TopologySpec};
+use crate::api::{BucketSpec, KrrError, MethodSpec, PrecondSpec, SamplingSpec, TopologySpec};
 
 /// Parsed config: section → key → raw value string.
 #[derive(Clone, Debug, Default)]
@@ -127,6 +127,11 @@ pub struct KrrConfig {
     /// Distributed topologies require `method = wlsh` (the instance
     /// average is what shards).
     pub topology: TopologySpec,
+    /// How the m WLSH instances are sampled: `uniform` keeps the full
+    /// budget at unit weight; `leverage(pilot=P,keep=K)` keeps the top-K
+    /// by estimated ridge leverage; `stein` reweights the full budget.
+    /// Non-uniform sampling requires `method = wlsh`.
+    pub sampling: SamplingSpec,
 }
 
 impl Default for KrrConfig {
@@ -148,6 +153,7 @@ impl Default for KrrConfig {
             chunk_rows: 8192,
             seed: 42,
             topology: TopologySpec::Local,
+            sampling: SamplingSpec::Uniform,
         }
     }
 }
@@ -182,6 +188,10 @@ impl KrrConfig {
             Some(s) => s.parse()?,
             None => d.topology,
         };
+        let sampling = match cfg.get("krr", "sampling") {
+            Some(s) => s.parse()?,
+            None => d.sampling,
+        };
         Ok(KrrConfig {
             method,
             budget: cfg.get_usize("krr", "budget", d.budget),
@@ -197,6 +207,7 @@ impl KrrConfig {
             chunk_rows: cfg.get_usize("krr", "chunk_rows", d.chunk_rows),
             seed: cfg.get_usize("krr", "seed", d.seed as usize) as u64,
             topology,
+            sampling,
         })
     }
 
@@ -234,6 +245,25 @@ impl KrrConfig {
                 "topology {} requires method wlsh (only the m-instance average shards)",
                 self.topology
             )));
+        }
+        if !self.sampling.is_uniform() && self.method != MethodSpec::Wlsh {
+            return Err(KrrError::BadParam(format!(
+                "sampling {} requires method wlsh (only WLSH instances are importance-sampled)",
+                self.sampling
+            )));
+        }
+        if let SamplingSpec::Leverage { pilot, keep } = self.sampling {
+            if pilot == 0 || keep == 0 {
+                return Err(KrrError::BadParam(format!(
+                    "leverage sampling needs pilot ≥ 1 and keep ≥ 1, got pilot={pilot} keep={keep}"
+                )));
+            }
+            if pilot > self.budget || keep > self.budget {
+                return Err(KrrError::BadParam(format!(
+                    "leverage sampling needs pilot ≤ budget and keep ≤ budget, got pilot={pilot} keep={keep} budget={}",
+                    self.budget
+                )));
+            }
         }
         Ok(())
     }
@@ -380,6 +410,44 @@ mod tests {
             ..KrrConfig::default()
         };
         assert!(matches!(k.validate(), Err(KrrError::BadParam(_))));
+    }
+
+    #[test]
+    fn sampling_parses_from_toml_and_defaults_uniform() {
+        let cfg = Config::parse("[krr]\nsampling = \"leverage(pilot=16, keep=48)\"\n").unwrap();
+        let k = KrrConfig::from_config(&cfg).unwrap();
+        assert_eq!(k.sampling, SamplingSpec::Leverage { pilot: 16, keep: 48 });
+        // legacy configs (no key) stay uniform
+        let bare = KrrConfig::from_config(&Config::parse("[krr]\n").unwrap()).unwrap();
+        assert_eq!(bare.sampling, SamplingSpec::Uniform);
+        let bad = Config::parse("[krr]\nsampling = importance\n").unwrap();
+        assert!(matches!(KrrConfig::from_config(&bad), Err(KrrError::BadParam(_))));
+        // non-uniform sampling is WLSH-only
+        let k = KrrConfig {
+            method: MethodSpec::Rff,
+            sampling: SamplingSpec::Stein,
+            ..KrrConfig::default()
+        };
+        assert!(matches!(k.validate(), Err(KrrError::BadParam(_))));
+        // pilot/keep must fit inside the budget
+        let k = KrrConfig {
+            budget: 32,
+            sampling: SamplingSpec::Leverage { pilot: 8, keep: 48 },
+            ..KrrConfig::default()
+        };
+        assert!(matches!(k.validate(), Err(KrrError::BadParam(_))));
+        let k = KrrConfig {
+            budget: 32,
+            sampling: SamplingSpec::Leverage { pilot: 0, keep: 8 },
+            ..KrrConfig::default()
+        };
+        assert!(matches!(k.validate(), Err(KrrError::BadParam(_))));
+        let ok = KrrConfig {
+            budget: 64,
+            sampling: SamplingSpec::Leverage { pilot: 16, keep: 48 },
+            ..KrrConfig::default()
+        };
+        assert!(ok.validate().is_ok());
     }
 
     #[test]

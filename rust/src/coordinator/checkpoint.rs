@@ -20,18 +20,27 @@
 use std::io::{Read, Write};
 use std::path::Path;
 
-use crate::api::{KrrError, PrecondSpec, TopologySpec};
+use crate::api::{KrrError, MethodSpec, PrecondSpec, SamplingSpec, TopologySpec};
 use crate::config::KrrConfig;
 use crate::coordinator::{TrainReport, TrainedModel, Trainer};
-use crate::data::Dataset;
+use crate::data::{Dataset, MatrixSource};
+use crate::sketch::{KrrOperator, WlshBuildParams, WlshSketch};
 use crate::util::json::{Json, JsonWriter};
+use std::sync::Arc;
 
 const MAGIC: &[u8; 8] = b"WLSHKRR1";
 
 /// Write `model` to `path` (JSON header + little-endian f64 β block).
+///
+/// Importance-sampled models additionally persist their provenance —
+/// `sampling` (the spec string) plus the exact kept `(pool index,
+/// weight)` lists from [`KrrOperator::sampling_header`] — so a reload
+/// reconstructs the *identical* weighted operator without re-scoring the
+/// pool. Uniform models write `sampling` only, keeping their headers
+/// otherwise byte-compatible with pre-sampling readers.
 pub fn save(model: &TrainedModel, path: &Path) -> std::io::Result<()> {
     let c = &model.config;
-    let header = JsonWriter::object()
+    let mut w = JsonWriter::object()
         .field_str("method", &c.method.to_string())
         .field_usize("budget", c.budget)
         .field_str("bucket", &c.bucket.to_string())
@@ -44,8 +53,16 @@ pub fn save(model: &TrainedModel, path: &Path) -> std::io::Result<()> {
         .field_str("topology", &c.topology.to_string())
         .field_usize("chunk_rows", c.chunk_rows)
         .field_usize("seed", c.seed as usize)
-        .field_usize("n", model.beta.len())
-        .finish();
+        .field_str("sampling", &c.sampling.to_string());
+    if let Some(info) = model.op.sampling_header() {
+        let idx: Vec<f64> = info.kept.iter().map(|&(i, _)| i as f64).collect();
+        let wts: Vec<f64> = info.kept.iter().map(|&(_, iw)| iw).collect();
+        w = w
+            .field_usize("pool_m", info.pool_m)
+            .field_arr_f64("keep_idx", &idx)
+            .field_arr_f64("keep_w", &wts);
+    }
+    let header = w.field_usize("n", model.beta.len()).finish();
     let mut f = std::fs::File::create(path)?;
     f.write_all(MAGIC)?;
     f.write_all(&(header.len() as u64).to_le_bytes())?;
@@ -109,6 +126,16 @@ pub fn load(path: &Path, train: &Dataset) -> Result<TrainedModel, KrrError> {
         Some(t) => t.parse()?,
         None => TopologySpec::Local,
     };
+    // absent in pre-sampling checkpoints — those are uniform by
+    // definition; a present-but-unknown grammar is a clean BadParam (a
+    // checkpoint from a newer build must never panic an older loader)
+    let sampling: SamplingSpec = match header.get("sampling") {
+        Some(v) => v
+            .as_str()
+            .ok_or_else(|| KrrError::Io("checkpoint \"sampling\" must be a string".into()))?
+            .parse()?,
+        None => SamplingSpec::Uniform,
+    };
     let config = KrrConfig {
         method: s("method")?.parse()?,
         budget: g("budget")? as usize,
@@ -129,6 +156,7 @@ pub fn load(path: &Path, train: &Dataset) -> Result<TrainedModel, KrrError> {
             .unwrap_or(KrrConfig::default().chunk_rows),
         seed: g("seed")? as u64,
         topology,
+        sampling,
     };
     // same range-check path as the builder/CLI/TOML — a corrupt header
     // (scale ≤ 0, negative λ) must not silently produce a NaN model
@@ -146,7 +174,23 @@ pub fn load(path: &Path, train: &Dataset) -> Result<TrainedModel, KrrError> {
         f.read_exact(&mut b8)?;
         *bv = f64::from_le_bytes(b8);
     }
-    let op = Trainer::new(config.clone()).build_operator(train)?;
+    let stored_keep = parse_keep_list(&header, &config)?;
+    let op: Arc<dyn KrrOperator> = match &stored_keep {
+        // Rebuild exactly the saved selection: the fork-replay
+        // discipline makes each kept instance bit-identical to its pool
+        // sibling, and the stored weights are applied verbatim — the
+        // pool is *never* re-scored on load.
+        Some((pool_m, keep)) if config.topology == TopologySpec::Local => {
+            let params = WlshBuildParams::from_config(&config, train.n, train.d)
+                .sampling(SamplingSpec::Uniform);
+            let src = MatrixSource::new("checkpoint", &train.x, train.d.max(1));
+            Arc::new(WlshSketch::build_selected(&params, &src, *pool_m, keep)?)
+        }
+        // Sharded topologies re-derive the selection coordinator-side;
+        // leverage scoring is deterministic in (data, config, seed), so
+        // the recomputed keep list equals the stored one bit-for-bit.
+        _ => Trainer::new(config.clone()).build_operator(train)?,
+    };
     Ok(TrainedModel::assemble(
         op,
         beta,
@@ -164,6 +208,57 @@ pub fn load(path: &Path, train: &Dataset) -> Result<TrainedModel, KrrError> {
             peak_rss_bytes: 0,
         },
     ))
+}
+
+/// Extract the stored `(pool_m, kept pairs)` provenance from a header,
+/// validating its internal consistency. Absent keys mean a uniform (or
+/// pre-sampling) checkpoint; partially present or malformed keys are
+/// corrupt headers and fail with a clean [`KrrError::Io`], never a
+/// panic.
+fn parse_keep_list(
+    header: &Json,
+    config: &KrrConfig,
+) -> Result<Option<(usize, Vec<(usize, f64)>)>, KrrError> {
+    let (idx_v, w_v) = match (header.get("keep_idx"), header.get("keep_w")) {
+        (None, None) => return Ok(None),
+        (Some(i), Some(w)) => (i, w),
+        _ => {
+            return Err(KrrError::Io(
+                "checkpoint has one of \"keep_idx\"/\"keep_w\" without the other".into(),
+            ))
+        }
+    };
+    let bad = |k: &str| KrrError::Io(format!("checkpoint {k:?} must be an array of numbers"));
+    let keep_idx: Vec<usize> = idx_v
+        .as_arr()
+        .ok_or_else(|| bad("keep_idx"))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| bad("keep_idx")))
+        .collect::<Result<_, _>>()?;
+    let keep_w = w_v.as_f64_vec().ok_or_else(|| bad("keep_w"))?;
+    if keep_idx.len() != keep_w.len() || keep_idx.is_empty() {
+        return Err(KrrError::Io(format!(
+            "checkpoint keep lists disagree: {} indices, {} weights",
+            keep_idx.len(),
+            keep_w.len()
+        )));
+    }
+    let pool_m = header
+        .get("pool_m")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| KrrError::Io("checkpoint keep list without \"pool_m\"".into()))?;
+    if config.sampling.is_uniform() {
+        return Err(KrrError::Io(
+            "checkpoint stores a keep list but declares uniform sampling".into(),
+        ));
+    }
+    if config.method != MethodSpec::Wlsh {
+        return Err(KrrError::Io(format!(
+            "checkpoint stores a keep list but method is {}",
+            config.method
+        )));
+    }
+    Ok(Some((pool_m, keep_idx.into_iter().zip(keep_w).collect())))
 }
 
 #[cfg(test)]
@@ -232,6 +327,97 @@ mod tests {
         // no topology key either — legacy checkpoints are local
         assert_eq!(model.config.topology, TopologySpec::Local);
         assert_eq!(model.beta[100], 1.0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn leverage_checkpoint_restores_the_exact_keep_list_and_predictions() {
+        let mut ds = synthetic_by_name("wine", Some(220), 5).unwrap();
+        ds.standardize();
+        let (tr, te) = ds.split(180, 2);
+        let cfg = KrrConfig {
+            method: MethodSpec::Wlsh,
+            budget: 24,
+            scale: 3.0,
+            lambda: 0.5,
+            sampling: SamplingSpec::Leverage { pilot: 8, keep: 12 },
+            ..Default::default()
+        };
+        let model = Trainer::new(cfg).train(&tr).unwrap();
+        let want_info = model.op.sampling_header().expect("leverage model has a header").clone();
+        assert_eq!(want_info.kept.len(), 12);
+        let want = model.predict(&te.x);
+        let path = std::env::temp_dir().join("wlsh_ckpt_leverage.bin");
+        save(&model, &path).unwrap();
+        let restored = load(&path, &tr).unwrap();
+        // the stored (index, weight) pairs round-trip exactly — the pool
+        // is rebuilt from the keep list, never re-scored
+        assert_eq!(restored.op.sampling_header(), Some(&want_info));
+        assert_eq!(restored.config, model.config);
+        assert_eq!(restored.beta, model.beta);
+        assert_eq!(restored.predict(&te.x), want);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn unknown_or_corrupt_sampling_headers_fail_cleanly() {
+        let mut ds = synthetic_by_name("wine", Some(80), 9).unwrap();
+        ds.standardize();
+        // build a structurally valid checkpoint, then vary the sampling keys
+        let write = |extra: &dyn Fn(JsonWriter) -> JsonWriter| {
+            let w = JsonWriter::object()
+                .field_str("method", "wlsh")
+                .field_usize("budget", 8)
+                .field_str("bucket", "smooth2")
+                .field_f64("gamma_shape", 7.0)
+                .field_f64("scale", 3.0)
+                .field_f64("lambda", 0.5)
+                .field_usize("cg_max_iters", 50)
+                .field_f64("cg_tol", 1e-4)
+                .field_str("precond", "none")
+                .field_usize("seed", 11);
+            let header = extra(w).field_usize("n", ds.n).finish();
+            let path = std::env::temp_dir().join("wlsh_ckpt_badsampling.bin");
+            let mut bytes = Vec::new();
+            bytes.extend_from_slice(MAGIC);
+            bytes.extend_from_slice(&(header.len() as u64).to_le_bytes());
+            bytes.extend_from_slice(header.as_bytes());
+            for i in 0..ds.n {
+                bytes.extend_from_slice(&(i as f64 * 0.01).to_le_bytes());
+            }
+            std::fs::write(&path, &bytes).unwrap();
+            path
+        };
+        // a sampling grammar this build does not know: Err, not panic
+        let path = write(&|w| w.field_str("sampling", "magic(beans=3)"));
+        assert!(load(&path, &ds).is_err());
+        // keep_idx without keep_w: corrupt header
+        let path = write(&|w| {
+            w.field_str("sampling", "leverage(pilot=4,keep=2)")
+                .field_usize("pool_m", 8)
+                .field_arr_f64("keep_idx", &[1.0, 3.0])
+        });
+        assert!(load(&path, &ds).is_err());
+        // a keep list under a uniform declaration: inconsistent header
+        let path = write(&|w| {
+            w.field_str("sampling", "uniform")
+                .field_usize("pool_m", 8)
+                .field_arr_f64("keep_idx", &[1.0, 3.0])
+                .field_arr_f64("keep_w", &[1.0, 1.0])
+        });
+        assert!(load(&path, &ds).is_err());
+        // out-of-pool keep index: rejected by build_selected, cleanly
+        let path = write(&|w| {
+            w.field_str("sampling", "leverage(pilot=4,keep=2)")
+                .field_usize("pool_m", 8)
+                .field_arr_f64("keep_idx", &[1.0, 9.0])
+                .field_arr_f64("keep_w", &[1.0, 1.0])
+        });
+        assert!(load(&path, &ds).is_err());
+        // absent sampling key still loads as uniform (legacy)
+        let path = write(&|w| w);
+        let model = load(&path, &ds).unwrap();
+        assert!(model.config.sampling.is_uniform());
         std::fs::remove_file(&path).ok();
     }
 

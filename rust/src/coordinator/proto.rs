@@ -128,6 +128,16 @@ pub struct ShardBuild {
     pub seed: u64,
     pub chunk_rows: usize,
     pub workers: usize,
+    /// Importance-sampled builds only: the instance-pool size the kept
+    /// indices refer to. 0 (with empty `keep_idx`) means a uniform range
+    /// build — the wire omits all three keys, so legacy lines parse
+    /// unchanged.
+    pub pool_m: usize,
+    /// Kept pool indices owned by this shard (ascending); paired
+    /// one-to-one with `keep_w`.
+    pub keep_idx: Vec<usize>,
+    /// Importance weights for `keep_idx`, applied verbatim by the worker.
+    pub keep_w: Vec<f64>,
 }
 
 /// One parsed protocol response line.
@@ -306,6 +316,19 @@ fn usize_field(req: &Json, key: &str) -> Result<usize, String> {
         .ok_or_else(|| format!("{key:?} must be a non-negative integer"))
 }
 
+fn usize_vec_field(req: &Json, key: &str) -> Result<Vec<usize>, String> {
+    let arr = req
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("{key:?} must be an array of non-negative integers"))?;
+    arr.iter()
+        .map(|v| {
+            v.as_usize()
+                .ok_or_else(|| format!("{key:?} must be an array of non-negative integers"))
+        })
+        .collect()
+}
+
 fn f64_field(req: &Json, key: &str) -> Result<f64, String> {
     req.get(key)
         .and_then(Json::as_f64)
@@ -378,20 +401,46 @@ impl Request {
                     }
                     Ok(Request::Append { model, rows, targets })
                 }
-                "shard-build" => Ok(Request::ShardBuild(ShardBuild {
-                    n: usize_field(&req, "n")?,
-                    d: usize_field(&req, "d")?,
-                    x: to_f32s(f64_vec_field(&req, "x")?),
-                    m_total: usize_field(&req, "m_total")?,
-                    lo: usize_field(&req, "lo")?,
-                    hi: usize_field(&req, "hi")?,
-                    bucket: str_field(&req, "bucket")?,
-                    gamma_shape: f64_field(&req, "gamma_shape")?,
-                    scale: f64_field(&req, "scale")?,
-                    seed: usize_field(&req, "seed")? as u64,
-                    chunk_rows: usize_field(&req, "chunk_rows")?,
-                    workers: usize_field(&req, "workers")?,
-                })),
+                "shard-build" => {
+                    // sampling keys are optional (legacy lines omit them);
+                    // present-but-malformed is still an error
+                    let pool_m = match req.get("pool_m") {
+                        Some(_) => usize_field(&req, "pool_m")?,
+                        None => 0,
+                    };
+                    let keep_idx = match req.get("keep_idx") {
+                        Some(_) => usize_vec_field(&req, "keep_idx")?,
+                        None => Vec::new(),
+                    };
+                    let keep_w = match req.get("keep_w") {
+                        Some(_) => f64_vec_field(&req, "keep_w")?,
+                        None => Vec::new(),
+                    };
+                    if keep_idx.len() != keep_w.len() {
+                        return Err(format!(
+                            "shard-build has {} keep_idx but {} keep_w",
+                            keep_idx.len(),
+                            keep_w.len()
+                        ));
+                    }
+                    Ok(Request::ShardBuild(ShardBuild {
+                        n: usize_field(&req, "n")?,
+                        d: usize_field(&req, "d")?,
+                        x: to_f32s(f64_vec_field(&req, "x")?),
+                        m_total: usize_field(&req, "m_total")?,
+                        lo: usize_field(&req, "lo")?,
+                        hi: usize_field(&req, "hi")?,
+                        bucket: str_field(&req, "bucket")?,
+                        gamma_shape: f64_field(&req, "gamma_shape")?,
+                        scale: f64_field(&req, "scale")?,
+                        seed: usize_field(&req, "seed")? as u64,
+                        chunk_rows: usize_field(&req, "chunk_rows")?,
+                        workers: usize_field(&req, "workers")?,
+                        pool_m,
+                        keep_idx,
+                        keep_w,
+                    }))
+                }
                 "shard-matvec" => {
                     Ok(Request::ShardMatvec { beta: f64_vec_field(&req, "beta")? })
                 }
@@ -506,9 +555,24 @@ impl Request {
                 push_f64(&mut s, b.scale);
                 let _ = write!(
                     s,
-                    ",\"seed\":{},\"chunk_rows\":{},\"workers\":{},\"x\":",
+                    ",\"seed\":{},\"chunk_rows\":{},\"workers\":{}",
                     b.seed, b.chunk_rows, b.workers
                 );
+                // sampling keys ride along only for importance-sampled
+                // builds, so uniform lines stay byte-identical to the
+                // legacy wire format
+                if !b.keep_idx.is_empty() {
+                    let _ = write!(s, ",\"pool_m\":{},\"keep_idx\":[", b.pool_m);
+                    for (i, idx) in b.keep_idx.iter().enumerate() {
+                        if i > 0 {
+                            s.push(',');
+                        }
+                        let _ = write!(s, "{idx}");
+                    }
+                    s.push_str("],\"keep_w\":");
+                    push_f64s(&mut s, &b.keep_w);
+                }
+                s.push_str(",\"x\":");
                 push_f32s(&mut s, &b.x);
                 s.push('}');
                 s
@@ -922,20 +986,33 @@ mod tests {
                     3 => Request::Stats,
                     4 => Request::Reload { model, path: name(r) },
                     5 => Request::Shutdown,
-                    6 => Request::ShardBuild(ShardBuild {
-                        n: r.below(50) as usize,
-                        d: r.below(8) as usize + 1,
-                        x: (0..r.below(20)).map(|_| wild_f32(r)).collect(),
-                        m_total: r.below(64) as usize + 1,
-                        lo: r.below(8) as usize,
-                        hi: r.below(64) as usize,
-                        bucket: "smooth2".to_string(),
-                        gamma_shape: wild_f64(r).abs(),
-                        scale: wild_f64(r).abs(),
-                        seed: r.below(1 << 40),
-                        chunk_rows: r.below(100) as usize + 1,
-                        workers: r.below(8) as usize + 1,
-                    }),
+                    6 => {
+                        // half the builds carry an importance-sampling
+                        // selection (the invariant the wire format keeps:
+                        // keep_idx empty ⇔ pool_m == 0)
+                        let k = if r.below(2) == 0 { 0 } else { r.below(6) as usize + 1 };
+                        let keep_idx: Vec<usize> =
+                            (0..k).map(|i| i * 3 + r.below(3) as usize).collect();
+                        let keep_w: Vec<f64> = (0..k).map(|_| wild_f64(r).abs()).collect();
+                        let pool_m = if k == 0 { 0 } else { r.below(64) as usize + 32 };
+                        Request::ShardBuild(ShardBuild {
+                            n: r.below(50) as usize,
+                            d: r.below(8) as usize + 1,
+                            x: (0..r.below(20)).map(|_| wild_f32(r)).collect(),
+                            m_total: r.below(64) as usize + 1,
+                            lo: r.below(8) as usize,
+                            hi: r.below(64) as usize,
+                            bucket: "smooth2".to_string(),
+                            gamma_shape: wild_f64(r).abs(),
+                            scale: wild_f64(r).abs(),
+                            seed: r.below(1 << 40),
+                            chunk_rows: r.below(100) as usize + 1,
+                            workers: r.below(8) as usize + 1,
+                            pool_m,
+                            keep_idx,
+                            keep_w,
+                        })
+                    }
                     7 => Request::ShardMatvec {
                         beta: (0..r.below(10) + 1).map(|_| wild_f64(r)).collect(),
                     },

@@ -38,8 +38,7 @@ use crate::api::{BucketSpec, KrrError, TopologySpec};
 use crate::config::KrrConfig;
 use crate::coordinator::proto::{Request, Response, ShardBuild, ShardReady};
 use crate::data::MatrixSource;
-use crate::lsh::IdMode;
-use crate::sketch::{KrrOperator, Predictor, WlshSketch};
+use crate::sketch::{KrrOperator, Predictor, SamplingInfo, WlshBuildParams, WlshSketch};
 use std::sync::Arc;
 
 /// How long a shard connection keeps retrying before giving up (workers
@@ -292,9 +291,36 @@ impl ShardGroup {
 
     /// Distribute the training matrix: every shard builds its instance
     /// range of the sketch (in parallel — builds are the expensive part).
-    fn build(&self, cfg: &KrrConfig, x: &[f32], n: usize, d: usize) -> Result<(), KrrError> {
+    /// With a non-uniform `selection` (computed coordinator-side, since
+    /// leverage scoring needs the whole pool), shard `s` receives its
+    /// `[lo, hi)` slice of the *kept* sequence — the plan cuts that
+    /// sequence on `FUSE_BLOCK` boundaries, so global block order (and
+    /// hence bit-identity with the single-process weighted sketch) is
+    /// preserved.
+    fn build(
+        &self,
+        cfg: &KrrConfig,
+        x: &[f32],
+        n: usize,
+        d: usize,
+        selection: Option<&SamplingInfo>,
+    ) -> Result<(), KrrError> {
         self.for_each_shard(|s, client| {
             let (lo, hi) = self.plan.ranges[s];
+            let (pool_m, keep_idx, keep_w) = match selection {
+                // an empty slice (shard owns zero instances) degrades to
+                // the uniform encoding — the wire invariant is
+                // `keep_idx empty ⇔ pool_m == 0`
+                Some(info) if lo < hi => {
+                    let slice = &info.kept[lo..hi];
+                    (
+                        info.pool_m,
+                        slice.iter().map(|&(i, _)| i).collect(),
+                        slice.iter().map(|&(_, w)| w).collect(),
+                    )
+                }
+                _ => (0, Vec::new(), Vec::new()),
+            };
             let req = Request::ShardBuild(ShardBuild {
                 n,
                 d,
@@ -308,6 +334,9 @@ impl ShardGroup {
                 seed: cfg.seed,
                 chunk_rows: cfg.chunk_rows,
                 workers: cfg.workers,
+                pool_m,
+                keep_idx,
+                keep_w,
             });
             match client.call(&req)? {
                 Response::ShardReady(ShardReady { m_local, .. }) if m_local == hi - lo => Ok(()),
@@ -548,34 +577,58 @@ pub struct ShardedOperator {
     /// while CG/serving readers hold the same `Arc`).
     n: AtomicUsize,
     d: usize,
+    /// Importance-sampling provenance when the build was non-uniform
+    /// (surfaced through [`KrrOperator::sampling_header`] so sharded
+    /// models checkpoint their keep list exactly like local ones).
+    sampling: Option<SamplingInfo>,
     failure: Mutex<Option<KrrError>>,
 }
 
 impl ShardedOperator {
     /// Stand up the topology (spawn or connect per `config.topology`)
     /// and distribute the sketch build.
+    ///
+    /// Non-uniform sampling is resolved *before* the fan-out: the
+    /// coordinator (which holds the full training matrix anyway) builds
+    /// the pool locally, scores it, and ships each shard its slice of
+    /// the kept `(index, weight)` sequence. The shard plan then covers
+    /// the kept count m′, so the distributed operator normalizes by
+    /// `1/m′` exactly like the single-process weighted sketch.
     pub fn build(
         config: &KrrConfig,
         x: &[f32],
         n: usize,
         d: usize,
     ) -> Result<Arc<ShardedOperator>, KrrError> {
+        let selection = if config.sampling.is_uniform() {
+            None
+        } else {
+            let src = MatrixSource::new("coordinator", x, d.max(1));
+            let params = WlshBuildParams::from_config(config, n, d);
+            let full = WlshSketch::build(&params, &src)?;
+            Some(full.sampling_info.clone().ok_or_else(|| {
+                KrrError::BadParam(format!(
+                    "sampling {} recorded no selection to shard",
+                    config.sampling
+                ))
+            })?)
+        };
+        let m_total = selection.as_ref().map_or(config.budget, |i| i.kept.len());
         let group = match &config.topology {
             TopologySpec::Local => {
                 return Err(KrrError::BadParam(
                     "ShardedOperator::build called with a local topology".into(),
                 ))
             }
-            TopologySpec::Shards { n: shards } => {
-                ShardGroup::spawn_local(*shards, config.budget)?
-            }
-            TopologySpec::Remote { addrs } => ShardGroup::connect_remote(addrs, config.budget)?,
+            TopologySpec::Shards { n: shards } => ShardGroup::spawn_local(*shards, m_total)?,
+            TopologySpec::Remote { addrs } => ShardGroup::connect_remote(addrs, m_total)?,
         };
-        group.build(config, x, n, d)?;
+        group.build(config, x, n, d, selection.as_ref())?;
         Ok(Arc::new(ShardedOperator {
             group: Arc::new(group),
             n: AtomicUsize::new(n),
             d,
+            sampling: selection,
             failure: Mutex::new(None),
         }))
     }
@@ -689,6 +742,10 @@ impl KrrOperator for ShardedOperator {
         )
     }
 
+    fn sampling_header(&self) -> Option<&SamplingInfo> {
+        self.sampling.as_ref()
+    }
+
     fn memory_bytes(&self) -> usize {
         // coordinator-side footprint only — the sketch lives in the
         // worker processes
@@ -764,19 +821,27 @@ impl WorkerState {
                 }
                 let bucket: BucketSpec = b.bucket.parse().map_err(|e| format!("{e}"))?;
                 let src = MatrixSource::new("shard", &b.x, b.d.max(1));
-                let sketch = WlshSketch::build_source_range(
-                    &src,
-                    b.m_total,
-                    b.lo,
-                    b.hi,
-                    &bucket,
-                    b.gamma_shape,
-                    b.scale,
-                    b.seed,
-                    IdMode::U64,
-                    b.chunk_rows.max(1),
-                    b.workers.max(1),
-                )
+                let params = WlshBuildParams::new(b.n, b.d, b.m_total)
+                    .bucket(bucket)
+                    .gamma_shape(b.gamma_shape)
+                    .scale(b.scale)
+                    .seed(b.seed)
+                    .chunk_rows(b.chunk_rows.max(1))
+                    .workers(b.workers.max(1));
+                let sketch = if b.keep_idx.is_empty() {
+                    WlshSketch::build_range(&params, &src, b.lo, b.hi)
+                } else {
+                    // the coordinator already scored the pool; build
+                    // exactly the shipped (pool index, weight) slice —
+                    // never re-score locally
+                    let keep: Vec<(usize, f64)> = b
+                        .keep_idx
+                        .iter()
+                        .copied()
+                        .zip(b.keep_w.iter().copied())
+                        .collect();
+                    WlshSketch::build_selected(&params, &src, b.pool_m, &keep)
+                }
                 .map_err(|e| format!("{e}"))?;
                 self.n = b.n;
                 self.d = b.d;

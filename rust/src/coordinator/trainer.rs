@@ -17,10 +17,9 @@ use crate::config::KrrConfig;
 use crate::coordinator::shard::ShardedOperator;
 use crate::data::{ChunkAnyFn, ChunkFn, DataSource, Dataset, SparseChunk};
 use crate::kernels::Kernel;
-use crate::lsh::IdMode;
 use crate::online::{UncertainPredictor, VarianceEstimator};
 use crate::sketch::{
-    ExactKernelOp, KrrOperator, NystromSketch, Predictor, RffSketch, WlshSketch,
+    ExactKernelOp, KrrOperator, NystromSketch, Predictor, RffSketch, WlshBuildParams, WlshSketch,
 };
 use crate::solver::{solve_krr, solve_krr_pcg, CgOptions, Preconditioner};
 use crate::util::mem;
@@ -153,17 +152,11 @@ impl Trainer {
     ) -> Result<Arc<dyn KrrOperator>, KrrError> {
         let c = &self.config;
         Ok(match c.method {
-            MethodSpec::Wlsh => Arc::new(WlshSketch::build_source(
-                src,
-                c.budget,
-                &c.bucket,
-                c.gamma_shape,
-                c.scale,
-                c.seed,
-                IdMode::U64,
-                c.chunk_rows,
-                c.workers,
-            )?),
+            MethodSpec::Wlsh => {
+                let n = src.len_hint().unwrap_or(0);
+                let params = WlshBuildParams::from_config(c, n, src.dim());
+                Arc::new(WlshSketch::build(&params, src)?)
+            }
             MethodSpec::Rff => Arc::new(RffSketch::build_source(
                 src,
                 c.budget,

@@ -53,13 +53,30 @@
 //! # Ok::<(), wlsh_krr::api::KrrError>(())
 //! ```
 //!
-//! Every method/bucket/preconditioner/kernel choice is a spec enum
-//! ([`api::MethodSpec`], [`api::BucketSpec`], [`api::PrecondSpec`],
-//! [`api::KernelSpec`]) with one `FromStr`/`Display` grammar shared by the
-//! CLI, the TOML subset, and checkpoint headers — misspelled strings
-//! surface as [`api::KrrError`] values. A trained model serves through a
-//! frozen [`api::Predictor`] handle (`predict` / allocation-free
-//! `predict_into`), which is what the TCP server and the benches use.
+//! Every method/bucket/preconditioner/kernel/sampling choice is a spec
+//! enum ([`api::MethodSpec`], [`api::BucketSpec`], [`api::PrecondSpec`],
+//! [`api::KernelSpec`], [`api::SamplingSpec`]) with one
+//! `FromStr`/`Display` grammar shared by the CLI, the TOML subset, and
+//! checkpoint headers — misspelled strings surface as [`api::KrrError`]
+//! values. A trained model serves through a frozen [`api::Predictor`]
+//! handle (`predict` / allocation-free `predict_into`), which is what the
+//! TCP server and the benches use. `fit_online` is the same builder's
+//! door into continuous learning: it returns an
+//! [`online::OnlineTrainer`] instead of a frozen model.
+//!
+//! Sketch construction is one typed params struct:
+//! [`sketch::WlshBuildParams`] + `WlshSketch::build(&params, &source)`
+//! (or `build_mem` for slices) replaced the old positional-constructor
+//! zoo — the survivors are `#[deprecated]` shims. `.sampling(...)` on
+//! the params (or the builder/CLI/TOML `sampling` key) importance-samples
+//! the instance pool: `leverage(pilot=P,keep=K)` keeps the top-K
+//! instances by Lanczos-estimated ridge leverage, reweighted
+//! trace-preservingly, so mat-vecs and predictions cost O(K·d) instead
+//! of O(m·d) at matched accuracy; selection is deterministic and
+//! bit-identical across threads, shards, and reruns
+//! (`tests/sampling_equivalence.rs`), and checkpoints replay the kept
+//! set verbatim. See the README's "Feature sampling" section for the
+//! accuracy-vs-m methodology.
 //!
 //! ## Streaming / out-of-core training
 //!

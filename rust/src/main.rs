@@ -14,7 +14,7 @@
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use wlsh_krr::api::{BucketSpec, KernelSpec, KrrError, MethodSpec, PrecondSpec};
+use wlsh_krr::api::{BucketSpec, KernelSpec, KrrError, KrrModel, MethodSpec, PrecondSpec};
 use wlsh_krr::config::KrrConfig;
 use wlsh_krr::coordinator::{
     checkpoint, run_worker, serve, ModelRegistry, ServerConfig, Trainer, DEFAULT_MODEL,
@@ -24,10 +24,9 @@ use wlsh_krr::data::{
     DensifySource, LibsvmSource, Standardizer,
 };
 use wlsh_krr::kernels::Kernel;
-use wlsh_krr::online::OnlineTrainer;
 use wlsh_krr::risk::ose_epsilon_dense;
 use wlsh_krr::runtime::Runtime;
-use wlsh_krr::sketch::{ExactKernelOp, WlshSketch};
+use wlsh_krr::sketch::{ExactKernelOp, WlshBuildParams, WlshSketch};
 use wlsh_krr::solver::materialize;
 use wlsh_krr::util::cli::Args;
 use wlsh_krr::util::json::JsonWriter;
@@ -64,6 +63,11 @@ fn main() {
                         auto = 0-based iff an index 0 appears)\n\
                         --sparse auto|true|false  (stream native CSR chunks;\n\
                         auto = whatever the source emits)\n\
+                        --sampling uniform|leverage(pilot=P,keep=K)|stein\n\
+                        (importance-sample the m-instance WLSH pool:\n\
+                        leverage keeps the K highest-leverage instances,\n\
+                        reweighted; stein keeps all m with leverage-\n\
+                        proportional weights)\n\
                         --checkpoint-out PATH  (save the trained model)\n\
                         --topology local|shards(n=N)|remote(addr=H:P,...)\n\
                         (shard the m WLSH instances over worker processes;\n\
@@ -162,6 +166,7 @@ fn config_from(args: &Args) -> Result<KrrConfig, KrrError> {
         chunk_rows: args.get_usize("chunk-rows", d.chunk_rows),
         seed: args.get_usize("seed", d.seed as usize) as u64,
         topology: spec_flag(args, "topology", d.topology)?,
+        sampling: spec_flag(args, "sampling", d.sampling)?,
     })
 }
 
@@ -398,7 +403,13 @@ fn cmd_serve(args: &Args) -> Result<(), KrrError> {
         Some(specs) => {
             for (name, path) in &specs {
                 let model = checkpoint::load(std::path::Path::new(path), &tr)?;
-                eprintln!("loaded model {name:?} from {path} ({})", model.report.operator);
+                // beta_hash lets the CI checkpoint smoke assert the reload
+                // reproduced the trained coefficients bit-for-bit
+                eprintln!(
+                    "loaded model {name:?} from {path} ({}, beta_hash {})",
+                    model.report.operator,
+                    beta_hash(&model.beta)
+                );
                 registry.insert(name, Arc::new(model));
             }
         }
@@ -411,7 +422,7 @@ fn cmd_serve(args: &Args) -> Result<(), KrrError> {
                 && !matches!(cfg.precond, PrecondSpec::Nystrom { .. })
                 && cfg.validate().is_ok();
             if supports_online {
-                let online = OnlineTrainer::fit(cfg, &tr)?;
+                let online = KrrModel::builder().config(cfg).fit_online(&tr)?;
                 let model = online.model();
                 eprintln!(
                     "model trained ({}); serving as {DEFAULT_MODEL:?} with online appends",
@@ -464,7 +475,10 @@ fn cmd_ose(args: &Args) -> Result<(), KrrError> {
     let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
     let exact = ExactKernelOp::new(&x, n, d, Kernel::wlsh_spec(&bucket, shape, 1.0));
     let k = materialize(&exact);
-    let sk = WlshSketch::build_spec(&x, n, d, m, &bucket, shape, 1.0, seed + 1);
+    let sk = WlshSketch::build_mem(
+        &x,
+        &WlshBuildParams::new(n, d, m).bucket(bucket).gamma_shape(shape).seed(seed + 1),
+    );
     let rep = ose_epsilon_dense(&k, &sk, lambda);
     println!(
         "{}",

@@ -52,7 +52,7 @@ use crate::config::KrrConfig;
 use crate::coordinator::{ShardedOperator, TrainReport, TrainedModel};
 use crate::data::{Dataset, MatrixSource};
 use crate::linalg::{axpy, dot, lanczos_quadform_inv, Matrix};
-use crate::sketch::{KrrOperator, Predictor, RffSketch, WlshSketch};
+use crate::sketch::{KrrOperator, Predictor, RffSketch, WlshBuildParams, WlshSketch};
 use crate::solver::{
     solve_krr, solve_krr_direct, solve_krr_pcg, CgOptions, CgResult, Preconditioner,
 };
@@ -160,16 +160,14 @@ impl OnlineTrainer {
             OnlineOp::Sharded(ShardedOperator::build(&config, &ds.x, ds.n, ds.d)?)
         } else {
             match config.method {
-                MethodSpec::Wlsh => OnlineOp::Wlsh(Arc::new(WlshSketch::build_source(
+                // Importance-sampled sketches append naturally: the kept
+                // instances' hash functions and iweights are frozen at fit
+                // time, and appended rows hash into those same instances
+                // (the selection is NOT re-scored on append — documented
+                // freeze-at-fit policy).
+                MethodSpec::Wlsh => OnlineOp::Wlsh(Arc::new(WlshSketch::build(
+                    &WlshBuildParams::from_config(&config, ds.n, ds.d),
                     ds,
-                    config.budget,
-                    &config.bucket,
-                    config.gamma_shape,
-                    config.scale,
-                    config.seed,
-                    crate::lsh::IdMode::U64,
-                    config.chunk_rows,
-                    config.workers,
                 )?)),
                 MethodSpec::Rff => OnlineOp::Rff(Arc::new(RffSketch::build_source(
                     ds,

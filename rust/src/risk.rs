@@ -143,10 +143,14 @@ mod tests {
     use crate::data::MatrixSource;
     use crate::kernels::Kernel;
     use crate::online::VarianceEstimator;
-    use crate::sketch::{ExactKernelOp, WlshSketch};
+    use crate::sketch::{ExactKernelOp, WlshBuildParams, WlshSketch};
     use crate::solver::materialize;
     use crate::util::prop::{gens, prop_check};
     use crate::util::rng::Pcg64;
+
+    fn rect_sketch(x: &[f32], n: usize, d: usize, m: usize, seed: u64) -> WlshSketch {
+        WlshSketch::build_mem(x, &WlshBuildParams::new(n, d, m).seed(seed))
+    }
 
     #[test]
     fn exact_sketch_has_zero_eps() {
@@ -167,8 +171,8 @@ mod tests {
         let exact = ExactKernelOp::new(&x, n, d, Kernel::wlsh("rect", 2.0, 1.0));
         let k = materialize(&exact);
         let lambda = 2.0;
-        let small = WlshSketch::build(&x, n, d, 4, "rect", 2.0, 1.0, 5);
-        let large = WlshSketch::build(&x, n, d, 256, "rect", 2.0, 1.0, 5);
+        let small = rect_sketch(&x, n, d, 4, 5);
+        let large = rect_sketch(&x, n, d, 256, 5);
         let e_small = ose_epsilon_dense(&k, &small, lambda).eps;
         let e_large = ose_epsilon_dense(&k, &large, lambda).eps;
         assert!(
@@ -186,7 +190,7 @@ mod tests {
         let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
         let exact = ExactKernelOp::new(&x, n, d, Kernel::wlsh("rect", 2.0, 1.0));
         let k = materialize(&exact);
-        let sk = WlshSketch::build(&x, n, d, 32, "rect", 2.0, 1.0, 7);
+        let sk = rect_sketch(&x, n, d, 32, 7);
         let lambda = 1.0;
         let dense = ose_epsilon_dense(&k, &sk, lambda);
         let kk = k.clone();
@@ -222,7 +226,7 @@ mod tests {
                 (n, d, x, q, lambda)
             },
             |(n, d, x, q, lambda)| {
-                let sk = WlshSketch::build(x, *n, *d, 32, "rect", 2.0, 1.0, 13);
+                let sk = rect_sketch(x, *n, *d, 32, 13);
                 let est = VarianceEstimator::new(Arc::new(sk), *lambda).with_rank(*n);
                 let fast = est.variance(q).ok_or("wlsh must expose cross_vector")?;
                 let exact = est.variance_exact(q).map_err(|e| e.to_string())?;
@@ -270,7 +274,7 @@ mod tests {
                 (n, d, x, q, lambda, batches)
             },
             |(n, d, x, q, lambda, batches)| {
-                let mut sk = WlshSketch::build(x, *n, *d, 32, "rect", 2.0, 1.0, 29);
+                let mut sk = rect_sketch(x, *n, *d, 32, 29);
                 let var_of = |sk: &WlshSketch| -> Result<f64, String> {
                     VarianceEstimator::new(Arc::new(sk.clone()), *lambda)
                         .variance_exact(q)

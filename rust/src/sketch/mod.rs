@@ -17,7 +17,7 @@ pub use exact::ExactKernelOp;
 pub use nystrom::{NystromPrecond, NystromSketch};
 pub use rff::RffSketch;
 pub(crate) use wlsh::SERIAL_QUERY_CHUNK;
-pub use wlsh::{WlshPredictor, WlshSketch};
+pub use wlsh::{SamplingInfo, WlshBuildParams, WlshPredictor, WlshSketch};
 
 /// A frozen serving handle: the β-dependent state an operator needs at
 /// predict time — WLSH bucket loads (paper §4.2), RFF's θ = Zᵀβ, the
@@ -113,6 +113,15 @@ pub trait KrrOperator: Send + Sync {
 
     /// Approximate resident memory of the operator in bytes.
     fn memory_bytes(&self) -> usize;
+
+    /// Importance-sampling provenance, when the operator's instances were
+    /// selected out of a larger pool (leverage/stein WLSH builds): the
+    /// pool size plus the kept `(index, weight)` pairs, which checkpoint
+    /// headers persist verbatim so a reload replays the exact selection.
+    /// Default: `None` — uniformly sampled or not a sketch.
+    fn sampling_header(&self) -> Option<&SamplingInfo> {
+        None
+    }
 }
 
 #[cfg(test)]
@@ -157,10 +166,16 @@ mod tests {
         let (n, d) = (96, 4);
         let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
 
-        let wlsh = WlshSketch::build(&x, n, d, 16, "rect", 2.0, 1.0, 7);
+        let wlsh = WlshSketch::build_mem(
+            &x,
+            &WlshBuildParams::new(n, d, 16).bucket_str("rect").gamma_shape(2.0).seed(7),
+        );
         check_operator(&wlsh, &x, d, 1e-6);
 
-        let wlsh_s = WlshSketch::build(&x, n, d, 16, "smooth2", 7.0, 1.0, 8);
+        let wlsh_s = WlshSketch::build_mem(
+            &x,
+            &WlshBuildParams::new(n, d, 16).bucket_str("smooth2").gamma_shape(7.0).seed(8),
+        );
         check_operator(&wlsh_s, &x, d, 1e-5);
 
         let rff = RffSketch::build(&x, n, d, 128, 1.0, 9);
@@ -181,7 +196,10 @@ mod tests {
         let q: Vec<f32> = (0..20 * d).map(|_| rng.normal() as f32).collect();
         let beta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
         let ops: Vec<Arc<dyn KrrOperator>> = vec![
-            Arc::new(WlshSketch::build(&x, n, d, 12, "smooth2", 7.0, 1.0, 3)),
+            Arc::new(WlshSketch::build_mem(
+                &x,
+                &WlshBuildParams::new(n, d, 12).bucket_str("smooth2").gamma_shape(7.0).seed(3),
+            )),
             Arc::new(RffSketch::build(&x, n, d, 96, 1.0, 4)),
             Arc::new(ExactKernelOp::new(&x, n, d, Kernel::matern52(1.0))),
             Arc::new(NystromSketch::build(&x, n, d, 16, Kernel::squared_exp(1.0), 5).unwrap()),

@@ -21,8 +21,9 @@
 use std::sync::{Arc, OnceLock};
 
 use super::{KrrOperator, Predictor};
-use crate::api::{BucketSpec, KrrError};
+use crate::api::{BucketSpec, KrrError, SamplingSpec};
 use crate::data::{Chunk, DataSource, MatrixSource, SparseChunk};
+use crate::linalg::lanczos::lanczos_quadform_inv;
 use crate::lsh::{
     BucketTable, BucketTableBuilder, IdMode, LshFamily, LshFunction, SparseHashPlan,
 };
@@ -71,13 +72,24 @@ pub struct WlshInstance {
     /// bucket-load pass reads weights and member ids from two contiguous
     /// arrays.
     pub weights_csr: Vec<f32>,
+    /// Importance weight of this instance in the averaged estimator:
+    /// K̃ = (1/m′) Σ_s iweight_s · D_s a_s a_sᵀ D_s. Uniform sampling
+    /// leaves every instance at exactly 1.0, and multiplying by 1.0 is
+    /// bit-exact — the uniform paths are unchanged to the last bit.
+    pub iweight: f64,
 }
 
 impl WlshInstance {
     /// Assemble an instance, deriving the CSR-aligned weight array.
     pub fn new(func: LshFunction, table: BucketTable, weights: Vec<f32>) -> WlshInstance {
         let weights_csr = table.members.iter().map(|&i| weights[i as usize]).collect();
-        WlshInstance { func, table, weights, weights_csr }
+        WlshInstance { func, table, weights, weights_csr, iweight: 1.0 }
+    }
+
+    /// Set the instance's importance weight.
+    pub fn with_iweight(mut self, iweight: f64) -> WlshInstance {
+        self.iweight = iweight;
+        self
     }
 }
 
@@ -89,6 +101,9 @@ struct InstanceAccum {
     func: LshFunction,
     builder: BucketTableBuilder,
     weights: Vec<f32>,
+    /// Importance weight carried into the finished instance (1.0 for
+    /// uniform builds; the stored keep-weight for selected builds).
+    iweight: f64,
     /// Reused per-chunk scratch (raw ids / weights of the current chunk).
     ids_buf: Vec<u64>,
     w_buf: Vec<f32>,
@@ -96,6 +111,143 @@ struct InstanceAccum {
     /// sparse chunk so dense-only builds pay nothing.
     plan: Option<SparseHashPlan>,
     done: Option<WlshInstance>,
+}
+
+/// Typed parameter set for every WLSH sketch construction path — the
+/// single front door that replaced the positional
+/// `build/build_spec/build_spec_mode/build_source/build_source_range`
+/// constructor zoo. Start from [`WlshBuildParams::new`] and chain the
+/// setters for everything that differs from the defaults.
+#[derive(Clone, Debug)]
+pub struct WlshBuildParams {
+    /// Expected row count (a capacity hint for streaming builds; the
+    /// in-memory [`WlshSketch::build_mem`] asserts `x.len() == n·d`).
+    pub n: usize,
+    /// Feature dimension (must match the data source's).
+    pub d: usize,
+    /// Instance budget m — the pool size that [`sampling`](Self::sampling)
+    /// selects from (uniform keeps all m).
+    pub m: usize,
+    pub bucket: BucketSpec,
+    pub gamma_shape: f64,
+    /// Kernel bandwidth (> 0).
+    pub scale: f64,
+    pub seed: u64,
+    pub id_mode: IdMode,
+    /// How instances are selected/weighted out of the m-instance pool.
+    pub sampling: SamplingSpec,
+    /// Rows per streamed chunk (≥ 1; bit-transparent to the result).
+    pub chunk_rows: usize,
+    /// Build worker threads (bit-transparent to the result).
+    pub workers: usize,
+    /// Ridge λ of the downstream solve — regularizes the pilot operator
+    /// of the leverage-score quadrature. Unused by uniform sampling.
+    pub lambda: f64,
+}
+
+impl WlshBuildParams {
+    /// Defaults: rect bucket, Gamma shape 2, scale 1, seed 42, `U64` ids,
+    /// uniform sampling, whole-matrix chunks, one worker, λ = 0.5.
+    pub fn new(n: usize, d: usize, m: usize) -> WlshBuildParams {
+        WlshBuildParams {
+            n,
+            d,
+            m,
+            bucket: BucketSpec::Rect,
+            gamma_shape: 2.0,
+            scale: 1.0,
+            seed: 42,
+            id_mode: IdMode::U64,
+            sampling: SamplingSpec::Uniform,
+            chunk_rows: n.max(1),
+            workers: 1,
+            lambda: 0.5,
+        }
+    }
+
+    /// Derive the trainer's build parameters from a [`KrrConfig`]:
+    /// `budget` → m, plus bucket/shape/scale/seed, the sampling spec, the
+    /// ridge λ (which regularizes the leverage pilot), and the streaming
+    /// knobs. `n` is the row-count hint; `d` the feature dimension.
+    pub fn from_config(c: &crate::config::KrrConfig, n: usize, d: usize) -> WlshBuildParams {
+        WlshBuildParams::new(n, d, c.budget)
+            .bucket(c.bucket)
+            .gamma_shape(c.gamma_shape)
+            .scale(c.scale)
+            .seed(c.seed)
+            .sampling(c.sampling)
+            .chunk_rows(c.chunk_rows)
+            .workers(c.workers)
+            .lambda(c.lambda)
+    }
+
+    pub fn bucket(mut self, bucket: BucketSpec) -> Self {
+        self.bucket = bucket;
+        self
+    }
+
+    /// Bucket by its string name, panicking on an unknown name — a
+    /// test/bench convenience mirroring the old string-typed constructors
+    /// (typed callers should parse a [`BucketSpec`] and use
+    /// [`bucket`](Self::bucket)).
+    pub fn bucket_str(self, bucket: &str) -> Self {
+        match bucket.parse() {
+            Ok(b) => self.bucket(b),
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    pub fn gamma_shape(mut self, gamma_shape: f64) -> Self {
+        self.gamma_shape = gamma_shape;
+        self
+    }
+
+    pub fn scale(mut self, scale: f64) -> Self {
+        self.scale = scale;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn id_mode(mut self, id_mode: IdMode) -> Self {
+        self.id_mode = id_mode;
+        self
+    }
+
+    pub fn sampling(mut self, sampling: SamplingSpec) -> Self {
+        self.sampling = sampling;
+        self
+    }
+
+    pub fn chunk_rows(mut self, chunk_rows: usize) -> Self {
+        self.chunk_rows = chunk_rows.max(1);
+        self
+    }
+
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    pub fn lambda(mut self, lambda: f64) -> Self {
+        self.lambda = lambda;
+        self
+    }
+}
+
+/// Importance-sampling provenance of a sketch built with a non-uniform
+/// [`SamplingSpec`]: which pool the kept instances came from and their
+/// exact weights — round-tripped verbatim through checkpoint headers so a
+/// reload replays the selection instead of recomputing it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SamplingInfo {
+    /// Instance-pool size the kept instances were drawn from.
+    pub pool_m: usize,
+    /// Kept `(pool index, importance weight)` pairs, ascending by index.
+    pub kept: Vec<(usize, f64)>,
 }
 
 /// The averaged m-instance WLSH sketch of the training set.
@@ -117,6 +269,9 @@ pub struct WlshSketch {
     /// Kernel bandwidth: data is divided by `scale` before hashing, so the
     /// sketch estimates k_{f,p}((x-y)/scale).
     pub scale: f64,
+    /// `Some` when the instances were importance-sampled out of a larger
+    /// pool (leverage/stein); `None` for uniform builds.
+    pub sampling_info: Option<SamplingInfo>,
 }
 
 impl WlshSketch {
@@ -126,125 +281,78 @@ impl WlshSketch {
     /// [`matvec_threads`](Self::matvec_threads)'s block order exactly.
     pub const FUSE_BLOCK: usize = FUSE_BLOCK;
 
-    /// Hash all n training rows under m fresh LSH instances. The bucket is
-    /// given by its string name for test/bench convenience; it must parse
-    /// as a [`BucketSpec`] (typed callers use
-    /// [`build_spec`](Self::build_spec)).
-    #[allow(clippy::too_many_arguments)]
-    pub fn build(
-        x: &[f32],
-        n: usize,
-        d: usize,
-        m: usize,
-        bucket: &str,
-        gamma_shape: f64,
-        scale: f64,
-        seed: u64,
-    ) -> WlshSketch {
-        let spec: BucketSpec = match bucket.parse() {
-            Ok(s) => s,
-            Err(e) => panic!("{e}"),
-        };
-        Self::build_spec_mode(x, n, d, m, &spec, gamma_shape, scale, seed, IdMode::U64)
-    }
-
-    /// As [`build`](Self::build) with a typed bucket spec.
-    #[allow(clippy::too_many_arguments)]
-    pub fn build_spec(
-        x: &[f32],
-        n: usize,
-        d: usize,
-        m: usize,
-        bucket: &BucketSpec,
-        gamma_shape: f64,
-        scale: f64,
-        seed: u64,
-    ) -> WlshSketch {
-        Self::build_spec_mode(x, n, d, m, bucket, gamma_shape, scale, seed, IdMode::U64)
-    }
-
-    /// As [`build`](Self::build), selecting the id-collapse mode
-    /// (I32 = HLO-compatible).
-    #[allow(clippy::too_many_arguments)]
-    pub fn build_mode(
-        x: &[f32],
-        n: usize,
-        d: usize,
-        m: usize,
-        bucket: &str,
-        gamma_shape: f64,
-        scale: f64,
-        seed: u64,
-        mode: IdMode,
-    ) -> WlshSketch {
-        let spec: BucketSpec = match bucket.parse() {
-            Ok(s) => s,
-            Err(e) => panic!("{e}"),
-        };
-        Self::build_spec_mode(x, n, d, m, &spec, gamma_shape, scale, seed, mode)
-    }
-
-    /// Fully-typed in-memory build: wraps the slice in a
-    /// [`MatrixSource`] and runs the one chunked assembly path
-    /// ([`build_source`](Self::build_source)) with a single whole-matrix
-    /// chunk.
-    #[allow(clippy::too_many_arguments)]
-    pub fn build_spec_mode(
-        x: &[f32],
-        n: usize,
-        d: usize,
-        m: usize,
-        bucket: &BucketSpec,
-        gamma_shape: f64,
-        scale: f64,
-        seed: u64,
-        mode: IdMode,
-    ) -> WlshSketch {
-        assert_eq!(x.len(), n * d);
-        let src = MatrixSource::new("mem", x, d);
-        Self::build_source(&src, m, bucket, gamma_shape, scale, seed, mode, n.max(1), 1)
-            .expect("in-memory WLSH build cannot fail")
-    }
-
-    /// Streaming build over a re-iterable chunked source: one pass,
-    /// holding O(chunk·d) scaled rows plus the growing O(n·m) sketch —
-    /// never the n×d matrix. Each chunk is hashed under all m instances
-    /// (the per-instance accumulators fanned out over `workers` threads
-    /// via [`par::fan_out_mut`]), raw ids feed the incremental
-    /// [`BucketTableBuilder`] renumbering, and tables finish with the same
-    /// counting sort as the in-memory constructor — so the result is
-    /// bit-identical to [`build_spec_mode`](Self::build_spec_mode) on the
-    /// materialized rows, for every chunk size and worker count
-    /// (asserted by `tests/stream_equivalence.rs`).
+    /// Build a sketch from a typed parameter set — THE constructor; every
+    /// other entry point (including the deprecated positional shims) is a
+    /// thin wrapper over this one.
     ///
-    /// Sparse sources stay sparse: CSR chunks are hashed through
-    /// [`LshFunction::hash_sparse`] in O(nnz) per rect row (O(d) with a
-    /// smooth bucket, for the weight product), and the sparse ids/weights
-    /// are bit-identical to hashing the densified rows — so the whole
-    /// equivalence above carries over to sparse streams unchanged.
-    #[allow(clippy::too_many_arguments)]
-    pub fn build_source(
-        src: &dyn DataSource,
-        m: usize,
-        bucket: &BucketSpec,
-        gamma_shape: f64,
-        scale: f64,
-        seed: u64,
-        mode: IdMode,
-        chunk_rows: usize,
-        workers: usize,
-    ) -> Result<WlshSketch, KrrError> {
-        Self::build_source_range(
-            src, m, 0, m, bucket, gamma_shape, scale, seed, mode, chunk_rows, workers,
-        )
+    /// Uniform sampling keeps all `params.m` instances at unit weight —
+    /// bit-identical to every pre-params build. `leverage(pilot=P,keep=K)`
+    /// builds the full m-instance pool, scores each instance's ridge
+    /// leverage against a P-instance pilot operator by Lanczos quadrature
+    /// (deterministic probe; see [`Self::leverage_select`]), keeps the
+    /// top-K, and reweights them trace-preservingly. `stein` keeps all m
+    /// with mean-1 leverage-proportional weights. All three are
+    /// deterministic in `(params, data)` at every thread/chunk count.
+    pub fn build(params: &WlshBuildParams, src: &dyn DataSource) -> Result<WlshSketch, KrrError> {
+        match params.sampling {
+            SamplingSpec::Uniform => {
+                let sel: Vec<(usize, f64)> = (0..params.m).map(|s| (s, 1.0)).collect();
+                Self::build_selected_impl(params, src, params.m, &sel, None)
+            }
+            SamplingSpec::Leverage { pilot, keep } => {
+                let sel: Vec<(usize, f64)> = (0..params.m).map(|s| (s, 1.0)).collect();
+                let mut pool = Self::build_selected_impl(params, src, params.m, &sel, None)?;
+                let kept = Self::leverage_select(&pool, pilot, keep, params.lambda, params.seed);
+                let mut slots: Vec<Option<WlshInstance>> =
+                    std::mem::take(&mut pool.instances).into_iter().map(Some).collect();
+                pool.instances = kept
+                    .iter()
+                    .map(|&(s, w)| {
+                        slots[s].take().expect("kept indices are distinct").with_iweight(w)
+                    })
+                    .collect();
+                pool.sampling_info = Some(SamplingInfo { pool_m: params.m, kept });
+                Ok(pool)
+            }
+            SamplingSpec::Stein => {
+                let sel: Vec<(usize, f64)> = (0..params.m).map(|s| (s, 1.0)).collect();
+                let mut pool = Self::build_selected_impl(params, src, params.m, &sel, None)?;
+                let m = pool.m();
+                let tau = Self::leverage_scores(&pool, m, params.lambda, params.seed);
+                let total: f64 = tau.iter().sum();
+                let weights: Vec<f64> = if total > 0.0 && total.is_finite() {
+                    tau.iter().map(|t| m as f64 * t / total).collect()
+                } else {
+                    vec![1.0; m]
+                };
+                for (inst, &w) in pool.instances.iter_mut().zip(&weights) {
+                    inst.iweight = w;
+                }
+                pool.sampling_info = Some(SamplingInfo {
+                    pool_m: m,
+                    kept: weights.iter().copied().enumerate().collect(),
+                });
+                Ok(pool)
+            }
+        }
     }
 
-    /// Build only instances `[lo, hi)` of an `m_total`-instance sketch —
-    /// the shard worker's constructor. Instance `s`'s hash function is
-    /// sampled from the `s`-th fork of the seed RNG, and forking advances
-    /// the parent state, so the range build replays every fork below `hi`
-    /// and samples only the owned ones: the produced instances are
-    /// *bit-identical* to instances `[lo, hi)` of the full build.
+    /// In-memory convenience over [`build`](Self::build): wraps the slice
+    /// in a [`MatrixSource`] and panics on failure (in-memory builds only
+    /// fail on programmer error). Asserts `x.len() == params.n · params.d`.
+    pub fn build_mem(x: &[f32], params: &WlshBuildParams) -> WlshSketch {
+        assert_eq!(x.len(), params.n * params.d);
+        let src = MatrixSource::new("mem", x, params.d);
+        Self::build(params, &src).expect("in-memory WLSH build cannot fail")
+    }
+
+    /// Build only instances `[lo, hi)` of a uniformly sampled
+    /// `params.m`-instance sketch — the shard worker's constructor.
+    /// Instance `s`'s hash function is sampled from the `s`-th fork of the
+    /// seed RNG, and forking advances the parent state, so the range build
+    /// replays every fork below `hi` and samples only the owned ones: the
+    /// produced instances are *bit-identical* to instances `[lo, hi)` of
+    /// the full build.
     ///
     /// The returned sketch's `m()` is the local count `hi - lo`, so its
     /// trait `matvec`/`predict` normalize by the *local* instance count —
@@ -252,48 +360,110 @@ impl WlshSketch {
     /// ([`block_partials`](Self::block_partials),
     /// [`predict_terms`](Self::predict_terms)) and let the coordinator
     /// apply `1/m_total` once.
-    #[allow(clippy::too_many_arguments)]
-    pub fn build_source_range(
+    pub fn build_range(
+        params: &WlshBuildParams,
         src: &dyn DataSource,
-        m_total: usize,
         lo: usize,
         hi: usize,
-        bucket: &BucketSpec,
-        gamma_shape: f64,
-        scale: f64,
-        seed: u64,
-        mode: IdMode,
-        chunk_rows: usize,
-        workers: usize,
     ) -> Result<WlshSketch, KrrError> {
         assert!(
-            lo <= hi && hi <= m_total,
-            "instance range [{lo}, {hi}) out of bounds for m_total={m_total}"
+            lo <= hi && hi <= params.m,
+            "instance range [{lo}, {hi}) out of bounds for m_total={}",
+            params.m
         );
+        let sel: Vec<(usize, f64)> = (lo..hi).map(|s| (s, 1.0)).collect();
+        Self::build_selected_impl(params, src, params.m, &sel, None)
+    }
+
+    /// Build exactly the listed `(pool index, importance weight)`
+    /// instances of a `pool_m`-instance pool — the checkpoint-restore and
+    /// leverage-shard constructor. The fork-replay discipline makes each
+    /// produced instance bit-identical to the same pool index of the full
+    /// build, and the weights are applied verbatim (never recomputed), so
+    /// a reload of a stored keep list reproduces the saved model exactly.
+    /// `keep` must be ascending and within the pool.
+    pub fn build_selected(
+        params: &WlshBuildParams,
+        src: &dyn DataSource,
+        pool_m: usize,
+        keep: &[(usize, f64)],
+    ) -> Result<WlshSketch, KrrError> {
+        for pair in keep.windows(2) {
+            if pair[1].0 <= pair[0].0 {
+                return Err(KrrError::BadParam(format!(
+                    "kept instance indices must be strictly ascending, got {} after {}",
+                    pair[1].0, pair[0].0
+                )));
+            }
+        }
+        if let Some(&(last, _)) = keep.last() {
+            if last >= pool_m {
+                return Err(KrrError::BadParam(format!(
+                    "kept instance index {last} out of bounds for pool_m={pool_m}"
+                )));
+            }
+        }
+        let info = SamplingInfo { pool_m, kept: keep.to_vec() };
+        Self::build_selected_impl(params, src, pool_m, keep, Some(info))
+    }
+
+    /// The one streaming assembly path: one pass over a re-iterable
+    /// chunked source, holding O(chunk·d) scaled rows plus the growing
+    /// O(n·m′) sketch — never the n×d matrix. Instance `s` of the
+    /// `pool_m`-instance pool is materialized iff it appears in `selected`
+    /// (ascending `(index, iweight)` pairs); every fork below the last
+    /// selected index is replayed so each materialized instance is
+    /// bit-identical to the full build's. Each chunk is hashed under all
+    /// selected instances (accumulators fanned out over `workers` threads
+    /// via [`par::fan_out_mut`]), raw ids feed the incremental
+    /// [`BucketTableBuilder`] renumbering, and tables finish with the same
+    /// counting sort as the in-memory constructor — so the result is
+    /// bit-identical for every chunk size and worker count (asserted by
+    /// `tests/stream_equivalence.rs`).
+    ///
+    /// Sparse sources stay sparse: CSR chunks are hashed through
+    /// [`LshFunction::hash_sparse`] in O(nnz) per rect row (O(d) with a
+    /// smooth bucket, for the weight product), and the sparse ids/weights
+    /// are bit-identical to hashing the densified rows — so the whole
+    /// equivalence above carries over to sparse streams unchanged.
+    fn build_selected_impl(
+        params: &WlshBuildParams,
+        src: &dyn DataSource,
+        pool_m: usize,
+        selected: &[(usize, f64)],
+        sampling_info: Option<SamplingInfo>,
+    ) -> Result<WlshSketch, KrrError> {
+        let mode = params.id_mode;
+        let chunk_rows = params.chunk_rows.max(1);
+        let workers = params.workers.max(1);
         let d = src.dim();
-        let mut rng = Pcg64::new(seed, 0);
-        let family = LshFamily::new(d, gamma_shape, bucket, &mut rng);
+        let mut rng = Pcg64::new(params.seed, 0);
+        let family = LshFamily::new(d, params.gamma_shape, &params.bucket, &mut rng);
         let n_hint = src.len_hint().unwrap_or(0);
-        // Sample the owned instances' hash functions up front, in instance
+        // Sample the selected instances' hash functions up front, in pool
         // order from per-instance RNG forks — the exact draw sequence of
-        // the full build (each fork advances the parent, so forks below
-        // `lo` are drawn and discarded).
-        let mut accums: Vec<InstanceAccum> = Vec::with_capacity(hi - lo);
-        for s in 0..hi {
+        // the full build (each fork advances the parent, so forks of
+        // unselected indices are drawn and discarded).
+        let replay_hi = selected.last().map_or(0, |&(s, _)| s + 1).min(pool_m);
+        let mut accums: Vec<InstanceAccum> = Vec::with_capacity(selected.len());
+        let mut next = 0usize;
+        for s in 0..replay_hi {
             let mut irng = rng.fork(s as u64);
-            if s >= lo {
+            if next < selected.len() && selected[next].0 == s {
                 accums.push(InstanceAccum {
                     func: family.sample(&mut irng),
                     builder: BucketTableBuilder::with_capacity(n_hint),
                     weights: Vec::with_capacity(n_hint),
+                    iweight: selected[next].1,
                     ids_buf: Vec::new(),
                     w_buf: Vec::new(),
                     plan: None,
                     done: None,
                 });
+                next += 1;
             }
         }
-        let inv = (1.0 / scale) as f32;
+        let inv = (1.0 / params.scale) as f32;
         let mut x_buf: Vec<f32> = Vec::new();
         let mut v_buf: Vec<f32> = Vec::new();
         let mut n = 0usize;
@@ -355,13 +525,124 @@ impl WlshSketch {
         par::fan_out_mut(&mut accums, workers, |_, acc| {
             let table = std::mem::take(&mut acc.builder).finish();
             let weights = std::mem::take(&mut acc.weights);
-            acc.done = Some(WlshInstance::new(acc.func.clone(), table, weights));
+            acc.done = Some(
+                WlshInstance::new(acc.func.clone(), table, weights).with_iweight(acc.iweight),
+            );
         });
         let instances = accums
             .into_iter()
             .map(|a| a.done.expect("instance finalized"))
             .collect();
-        Ok(WlshSketch { instances, family, mode, n, scale })
+        Ok(WlshSketch { instances, family, mode, n, scale: params.scale, sampling_info })
+    }
+
+    /// Mat-vec of the pilot operator (1/p)·Σ_{s<p} iweight_s·T_s — the
+    /// prefix sub-estimator the leverage quadrature inverts. Serial and
+    /// fixed-order, so scores are machine-independent.
+    fn matvec_prefix(&self, p: usize, beta: &[f64]) -> Vec<f64> {
+        let p = p.min(self.m()).max(1);
+        let mut out = self.block_contrib(&self.instances[..p], beta);
+        let inv_p = 1.0 / p as f64;
+        for v in out.iter_mut() {
+            *v *= inv_p;
+        }
+        out
+    }
+
+    /// Ridge-leverage proxy of every pool instance: with a deterministic
+    /// Gaussian probe g (seeded from `seed`, decorrelated from the
+    /// instance-sampling stream), instance s scores
+    /// τ_s = yᵀ(K_pilot + λI)⁻¹y with y = T_s·g, estimated by
+    /// `k`-step Gauss–Lanczos quadrature
+    /// ([`lanczos_quadform_inv`]) against the `pilot`-instance prefix
+    /// operator. Instances whose one-dimensional range aligns with
+    /// directions the pilot operator (and hence its siblings) already
+    /// covers score low; directions the pool under-covers score high.
+    /// Non-finite or non-positive estimates clamp to 0. Fully
+    /// deterministic: no RNG is drawn inside the quadrature, and the probe
+    /// depends only on `(seed, n)`.
+    fn leverage_scores(&self, pilot: usize, lambda: f64, seed: u64) -> Vec<f64> {
+        /// Lanczos steps per score — enough for the quadrature to settle
+        /// on the pilot operator's coarse spectrum (the scores only rank).
+        const QUAD_RANK: usize = 16;
+        let n = self.n;
+        if n == 0 {
+            return vec![0.0; self.m()];
+        }
+        let mut prng = Pcg64::new(seed.wrapping_add(0x9e37_79b9_7f4a_7c15), 1);
+        let g: Vec<f64> = (0..n).map(|_| prng.normal()).collect();
+        // λ = 0 would make a rank-deficient pilot operator singular; the
+        // floor only affects the scores' scale, not the ranking.
+        let lam = lambda.max(1e-9);
+        self.instances
+            .iter()
+            .map(|inst| {
+                let y = self.instance_contrib(inst, &g);
+                let q = lanczos_quadform_inv(n, QUAD_RANK, &y, |v| {
+                    let mut out = self.matvec_prefix(pilot, v);
+                    for (o, x) in out.iter_mut().zip(v) {
+                        *o += lam * *x;
+                    }
+                    out
+                });
+                if q.value.is_finite() && q.value > 0.0 {
+                    q.value
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+
+    /// Deterministic leverage selection over a built pool: score every
+    /// instance ([`leverage_scores`](Self::leverage_scores)), keep the
+    /// top-`keep` (ties broken by the lower pool index), and give every
+    /// kept instance the common trace-preserving weight
+    /// c = (K·tr_pool)/(m·tr_kept) with tr(T_s) = Σ_i w_{s,i}² — so
+    /// tr((1/K)·Σ_kept c·T_s) = tr((1/m)·Σ_pool T_s) exactly and the kept
+    /// sub-estimator's diagonal mass matches the full pool's. An all-zero
+    /// score vector (degenerate probe) falls back to keeping the first K
+    /// instances. Returns ascending `(pool index, weight)` pairs.
+    fn leverage_select(
+        pool: &WlshSketch,
+        pilot: usize,
+        keep: usize,
+        lambda: f64,
+        seed: u64,
+    ) -> Vec<(usize, f64)> {
+        let m = pool.m();
+        if m == 0 {
+            return Vec::new();
+        }
+        let keep = keep.min(m).max(1);
+        let mut tau = pool.leverage_scores(pilot, lambda, seed);
+        if tau.iter().all(|&t| t == 0.0) {
+            tau = vec![1.0; m];
+        }
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_by(|&a, &b| {
+            tau[b]
+                .partial_cmp(&tau[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut kept: Vec<usize> = order[..keep].to_vec();
+        kept.sort_unstable();
+        let trace = |s: usize| {
+            pool.instances[s]
+                .weights
+                .iter()
+                .map(|&w| w as f64 * w as f64)
+                .sum::<f64>()
+        };
+        let tr_total: f64 = (0..m).map(trace).sum();
+        let tr_kept: f64 = kept.iter().map(|&s| trace(s)).sum();
+        let c = if tr_kept > 0.0 && tr_total.is_finite() && tr_total > 0.0 {
+            (keep as f64 * tr_total) / (m as f64 * tr_kept)
+        } else {
+            1.0
+        };
+        kept.into_iter().map(|s| (s, c)).collect()
     }
 
     /// Hash additional rows into the existing sketch — the online-update
@@ -399,6 +680,7 @@ impl WlshSketch {
                 func: inst.func,
                 builder: inst.table.into_builder(),
                 weights: inst.weights,
+                iweight: inst.iweight,
                 ids_buf: Vec::new(),
                 w_buf: Vec::new(),
                 plan: None,
@@ -461,7 +743,9 @@ impl WlshSketch {
         par::fan_out_mut(&mut accums, workers, |_, acc| {
             let table = std::mem::take(&mut acc.builder).finish();
             let weights = std::mem::take(&mut acc.weights);
-            acc.done = Some(WlshInstance::new(acc.func.clone(), table, weights));
+            acc.done = Some(
+                WlshInstance::new(acc.func.clone(), table, weights).with_iweight(acc.iweight),
+            );
         });
         self.instances = accums
             .into_iter()
@@ -493,14 +777,19 @@ impl WlshSketch {
 
     /// CSR bucket-load kernel writing into a caller-provided buffer
     /// (`loads.len() == inst.table.n_buckets`; every slot is overwritten).
+    /// The instance's importance weight is folded into the loads — a
+    /// single multiply per bucket that every loads consumer (fused
+    /// mat-vec, predictors, sparse serve) then carries for free; uniform
+    /// instances multiply by exactly 1.0, which is bit-exact.
     fn loads_into(inst: &WlshInstance, beta: &[f64], loads: &mut [f64]) {
         let offsets = &inst.table.offsets;
         let members = &inst.table.members;
         let w = &inst.weights_csr;
+        let iw = inst.iweight;
         for (j, out) in loads.iter_mut().enumerate() {
             let lo = offsets[j] as usize;
             let hi = offsets[j + 1] as usize;
-            *out = simd::weighted_gather_sum(&w[lo..hi], &members[lo..hi], beta);
+            *out = iw * simd::weighted_gather_sum(&w[lo..hi], &members[lo..hi], beta);
         }
     }
 
@@ -546,8 +835,9 @@ impl WlshSketch {
     pub fn diag_values(&self) -> Vec<f64> {
         let mut out = vec![0.0f64; self.n];
         for inst in &self.instances {
+            let iw = inst.iweight;
             for (o, &w) in out.iter_mut().zip(&inst.weights) {
-                *o += w as f64 * w as f64;
+                *o += iw * (w as f64 * w as f64);
             }
         }
         let inv_m = 1.0 / self.m() as f64;
@@ -666,13 +956,15 @@ impl WlshSketch {
         let mut kxx = 0.0f64;
         let mut out = vec![0.0f64; self.n];
         for inst in block {
+            let iw = inst.iweight;
             let (id, w) = inst.func.hash_point(q_scaled, &self.family, self.mode);
-            kxx += w as f64 * w as f64;
+            kxx += iw * (w as f64 * w as f64);
             if let Some(b) = inst.table.lookup(id) {
                 let lo = inst.table.offsets[b as usize] as usize;
                 let hi = inst.table.offsets[b as usize + 1] as usize;
                 for k in lo..hi {
-                    out[inst.table.members[k] as usize] += w as f64 * inst.weights_csr[k] as f64;
+                    out[inst.table.members[k] as usize] +=
+                        iw * (w as f64 * inst.weights_csr[k] as f64);
                 }
             }
         }
@@ -773,6 +1065,133 @@ impl WlshSketch {
     }
 }
 
+/// Deprecated positional constructors — thin shims over
+/// [`WlshBuildParams`] kept for one release so out-of-tree callers get a
+/// warning instead of a break. The in-repo caller count is zero (enforced
+/// by `clippy -D warnings`). Note the old `build(x, n, d, m, ...)`
+/// positional form is gone outright: the `build` name now takes a
+/// [`WlshBuildParams`] (see the README migration table).
+impl WlshSketch {
+    /// Deprecated: use [`WlshSketch::build_mem`] with [`WlshBuildParams`].
+    #[deprecated(note = "use WlshSketch::build_mem with WlshBuildParams")]
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_spec(
+        x: &[f32],
+        n: usize,
+        d: usize,
+        m: usize,
+        bucket: &BucketSpec,
+        gamma_shape: f64,
+        scale: f64,
+        seed: u64,
+    ) -> WlshSketch {
+        let params = WlshBuildParams::new(n, d, m)
+            .bucket(*bucket)
+            .gamma_shape(gamma_shape)
+            .scale(scale)
+            .seed(seed);
+        Self::build_mem(x, &params)
+    }
+
+    /// Deprecated: use [`WlshSketch::build_mem`] with [`WlshBuildParams`].
+    #[deprecated(note = "use WlshSketch::build_mem with WlshBuildParams")]
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_mode(
+        x: &[f32],
+        n: usize,
+        d: usize,
+        m: usize,
+        bucket: &str,
+        gamma_shape: f64,
+        scale: f64,
+        seed: u64,
+        mode: IdMode,
+    ) -> WlshSketch {
+        let params = WlshBuildParams::new(n, d, m)
+            .bucket_str(bucket)
+            .gamma_shape(gamma_shape)
+            .scale(scale)
+            .seed(seed)
+            .id_mode(mode);
+        Self::build_mem(x, &params)
+    }
+
+    /// Deprecated: use [`WlshSketch::build_mem`] with [`WlshBuildParams`].
+    #[deprecated(note = "use WlshSketch::build_mem with WlshBuildParams")]
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_spec_mode(
+        x: &[f32],
+        n: usize,
+        d: usize,
+        m: usize,
+        bucket: &BucketSpec,
+        gamma_shape: f64,
+        scale: f64,
+        seed: u64,
+        mode: IdMode,
+    ) -> WlshSketch {
+        let params = WlshBuildParams::new(n, d, m)
+            .bucket(*bucket)
+            .gamma_shape(gamma_shape)
+            .scale(scale)
+            .seed(seed)
+            .id_mode(mode);
+        Self::build_mem(x, &params)
+    }
+
+    /// Deprecated: use [`WlshSketch::build`] with [`WlshBuildParams`].
+    #[deprecated(note = "use WlshSketch::build with WlshBuildParams")]
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_source(
+        src: &dyn DataSource,
+        m: usize,
+        bucket: &BucketSpec,
+        gamma_shape: f64,
+        scale: f64,
+        seed: u64,
+        mode: IdMode,
+        chunk_rows: usize,
+        workers: usize,
+    ) -> Result<WlshSketch, KrrError> {
+        let params = WlshBuildParams::new(src.len_hint().unwrap_or(0), src.dim(), m)
+            .bucket(*bucket)
+            .gamma_shape(gamma_shape)
+            .scale(scale)
+            .seed(seed)
+            .id_mode(mode)
+            .chunk_rows(chunk_rows)
+            .workers(workers);
+        Self::build(&params, src)
+    }
+
+    /// Deprecated: use [`WlshSketch::build_range`] with [`WlshBuildParams`].
+    #[deprecated(note = "use WlshSketch::build_range with WlshBuildParams")]
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_source_range(
+        src: &dyn DataSource,
+        m_total: usize,
+        lo: usize,
+        hi: usize,
+        bucket: &BucketSpec,
+        gamma_shape: f64,
+        scale: f64,
+        seed: u64,
+        mode: IdMode,
+        chunk_rows: usize,
+        workers: usize,
+    ) -> Result<WlshSketch, KrrError> {
+        let params = WlshBuildParams::new(src.len_hint().unwrap_or(0), src.dim(), m_total)
+            .bucket(*bucket)
+            .gamma_shape(gamma_shape)
+            .scale(scale)
+            .seed(seed)
+            .id_mode(mode)
+            .chunk_rows(chunk_rows)
+            .workers(workers);
+        Self::build_range(&params, src, lo, hi)
+    }
+}
+
 impl KrrOperator for WlshSketch {
     fn n(&self) -> usize {
         self.n
@@ -815,6 +1234,10 @@ impl KrrOperator for WlshSketch {
             .iter()
             .map(|i| i.table.memory_bytes() + i.weights.len() * 4 + i.weights_csr.len() * 4)
             .sum::<usize>()
+    }
+
+    fn sampling_header(&self) -> Option<&SamplingInfo> {
+        self.sampling_info.as_ref()
     }
 }
 
@@ -998,6 +1421,29 @@ mod tests {
         (0..n * d).map(|_| rng.normal() as f32).collect()
     }
 
+    /// Test shorthand over [`WlshSketch::build_mem`] — the positional shape
+    /// every test below used before the params struct existed.
+    #[allow(clippy::too_many_arguments)]
+    fn build(
+        x: &[f32],
+        n: usize,
+        d: usize,
+        m: usize,
+        bucket: &str,
+        shape: f64,
+        scale: f64,
+        seed: u64,
+    ) -> WlshSketch {
+        WlshSketch::build_mem(
+            x,
+            &WlshBuildParams::new(n, d, m)
+                .bucket_str(bucket)
+                .gamma_shape(shape)
+                .scale(scale)
+                .seed(seed),
+        )
+    }
+
     /// Materialize K̃ from mat-vecs against basis vectors.
     fn materialize(op: &dyn KrrOperator) -> Vec<Vec<f64>> {
         let n = op.n();
@@ -1015,7 +1461,7 @@ mod tests {
         // Def. 6 brute force: K̃_ij = (1/m) Σ_s w_i w_j [h_s(x_i) = h_s(x_j)]
         let (n, d, m) = (40, 3, 5);
         let x = random_x(1, n, d);
-        let sk = WlshSketch::build(&x, n, d, m, "smooth2", 7.0, 1.0, 2);
+        let sk = build(&x, n, d, m, "smooth2", 7.0, 1.0, 2);
         let k = materialize(&sk);
         // brute force from the instances themselves
         for i in 0..n {
@@ -1040,7 +1486,7 @@ mod tests {
     fn sketch_is_symmetric_psd() {
         let (n, d, m) = (32, 4, 8);
         let x = random_x(3, n, d);
-        let sk = WlshSketch::build(&x, n, d, m, "rect", 2.0, 1.0, 4);
+        let sk = build(&x, n, d, m, "rect", 2.0, 1.0, 4);
         let k = materialize(&sk);
         for i in 0..n {
             for j in 0..n {
@@ -1060,7 +1506,7 @@ mod tests {
         let mut acc = 0.0;
         let mut acc2 = 0.0;
         for t in 0..trials {
-            let sk = WlshSketch::build(&x, 2, d, 8, "rect", 2.0, 1.0, 1000 + t);
+            let sk = build(&x, 2, d, 8, "rect", 2.0, 1.0, 1000 + t);
             let y = sk.matvec(&[0.0, 1.0]); // column j=1
             acc += y[0];
             acc2 += y[0] * y[0];
@@ -1077,7 +1523,7 @@ mod tests {
     fn predictor_matches_trait_predict() {
         let (n, d, m) = (64, 5, 10);
         let x = random_x(5, n, d);
-        let sk = Arc::new(WlshSketch::build(&x, n, d, m, "smooth2", 7.0, 1.5, 6));
+        let sk = Arc::new(build(&x, n, d, m, "smooth2", 7.0, 1.5, 6));
         let mut rng = Pcg64::new(7, 0);
         let beta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
         let q = random_x(8, 10, d);
@@ -1090,7 +1536,7 @@ mod tests {
     fn predict_far_query_is_zero() {
         let (n, d) = (16, 2);
         let x = random_x(9, n, d);
-        let sk = WlshSketch::build(&x, n, d, 6, "rect", 2.0, 1.0, 10);
+        let sk = build(&x, n, d, 6, "rect", 2.0, 1.0, 10);
         let beta = vec![1.0; n];
         // a query 1e6 away shares no bucket with any training point
         let q = vec![1e6f32, -1e6];
@@ -1104,8 +1550,8 @@ mod tests {
         let (n, d) = (64, 3);
         let x = random_x(11, n, d);
         let beta = vec![1.0; n];
-        let narrow = WlshSketch::build(&x, n, d, 32, "rect", 2.0, 0.25, 12);
-        let wide = WlshSketch::build(&x, n, d, 32, "rect", 2.0, 4.0, 12);
+        let narrow = build(&x, n, d, 32, "rect", 2.0, 0.25, 12);
+        let wide = build(&x, n, d, 32, "rect", 2.0, 4.0, 12);
         let qn: f64 = narrow.matvec(&beta).iter().sum();
         let qw: f64 = wide.matvec(&beta).iter().sum();
         assert!(qw > qn, "wide {qw} <= narrow {qn}");
@@ -1115,7 +1561,7 @@ mod tests {
     fn parallel_matvec_and_predict_are_bit_identical() {
         let (n, d, m) = (300, 4, 64);
         let x = random_x(17, n, d);
-        let sk = Arc::new(WlshSketch::build(&x, n, d, m, "smooth2", 7.0, 1.0, 18));
+        let sk = Arc::new(build(&x, n, d, m, "smooth2", 7.0, 1.0, 18));
         let mut rng = Pcg64::new(19, 0);
         let beta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
         let want = sk.matvec_serial(&beta);
@@ -1137,7 +1583,7 @@ mod tests {
         // floating-point reassociation error, at every thread count.
         let (n, d, m) = (257, 5, 77); // deliberately not multiples of block sizes
         let x = random_x(23, n, d);
-        let sk = WlshSketch::build(&x, n, d, m, "smooth2", 7.0, 1.0, 24);
+        let sk = build(&x, n, d, m, "smooth2", 7.0, 1.0, 24);
         let mut rng = Pcg64::new(25, 0);
         let beta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
         let fused = sk.matvec_serial(&beta);
@@ -1158,7 +1604,7 @@ mod tests {
     fn diag_matches_materialized_diagonal() {
         let (n, d, m) = (48, 3, 12);
         let x = random_x(29, n, d);
-        let sk = WlshSketch::build(&x, n, d, m, "smooth2", 7.0, 1.0, 30);
+        let sk = build(&x, n, d, m, "smooth2", 7.0, 1.0, 30);
         let k = materialize(&sk);
         let diag = sk.diag_values();
         for i in 0..n {
@@ -1181,24 +1627,22 @@ mod tests {
         let (n, d, m) = (120, 4, 20);
         let x = random_x(31, n, d);
         let src = crate::data::MatrixSource::new("mem", &x, d);
-        let spec: BucketSpec = "smooth2".parse().unwrap();
-        let full =
-            WlshSketch::build_source(&src, m, &spec, 7.0, 1.0, 32, IdMode::U64, 50, 2).unwrap();
+        let full_params = WlshBuildParams::new(n, d, m)
+            .bucket_str("smooth2")
+            .gamma_shape(7.0)
+            .seed(32)
+            .chunk_rows(50)
+            .workers(2);
+        let full = WlshSketch::build(&full_params, &src).unwrap();
+        // different chunking/worker split on the shard side: still bit-exact
+        let part_params = WlshBuildParams::new(n, d, m)
+            .bucket_str("smooth2")
+            .gamma_shape(7.0)
+            .seed(32)
+            .chunk_rows(17)
+            .workers(3);
         for (lo, hi) in [(0usize, 7usize), (7, 16), (16, 20), (0, 20), (8, 16)] {
-            let part = WlshSketch::build_source_range(
-                &src,
-                m,
-                lo,
-                hi,
-                &spec,
-                7.0,
-                1.0,
-                32,
-                IdMode::U64,
-                17,
-                3,
-            )
-            .unwrap();
+            let part = WlshSketch::build_range(&part_params, &src, lo, hi).unwrap();
             assert_eq!(part.m(), hi - lo);
             for (k, inst) in part.instances.iter().enumerate() {
                 let want = &full.instances[lo + k];
@@ -1220,7 +1664,7 @@ mod tests {
         // bit-identical to matvec_threads at any thread count.
         let (n, d, m) = (150, 3, 37); // m not a multiple of FUSE_BLOCK
         let x = random_x(33, n, d);
-        let sk = WlshSketch::build(&x, n, d, m, "smooth2", 7.0, 1.0, 34);
+        let sk = build(&x, n, d, m, "smooth2", 7.0, 1.0, 34);
         let mut rng = Pcg64::new(35, 0);
         let beta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
         let want = sk.matvec_serial(&beta);
@@ -1245,7 +1689,7 @@ mod tests {
     fn predict_terms_reassemble_into_the_exact_prediction() {
         let (n, d, m) = (90, 4, 11);
         let x = random_x(37, n, d);
-        let sk = Arc::new(WlshSketch::build(&x, n, d, m, "rect", 2.0, 1.0, 38));
+        let sk = Arc::new(build(&x, n, d, m, "rect", 2.0, 1.0, 38));
         let mut rng = Pcg64::new(39, 0);
         let beta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
         // include a far query so at least one row has all-miss terms
@@ -1277,7 +1721,7 @@ mod tests {
             let beta = gens::vec_f64(r, n, -2.0, 2.0);
             (n, d, x, alpha, beta)
         }, |(n, d, x, alpha, beta)| {
-            let sk = WlshSketch::build(x, *n, *d, 4, "smooth2", 7.0, 1.0, 21);
+            let sk = build(x, *n, *d, 4, "smooth2", 7.0, 1.0, 21);
             let mixed: Vec<f64> = alpha
                 .iter()
                 .zip(beta)
@@ -1294,5 +1738,159 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    fn leverage_params(n: usize, d: usize) -> WlshBuildParams {
+        WlshBuildParams::new(n, d, 24)
+            .bucket_str("smooth2")
+            .gamma_shape(7.0)
+            .seed(51)
+            .sampling(SamplingSpec::Leverage { pilot: 8, keep: 12 })
+            .lambda(0.7)
+    }
+
+    #[test]
+    fn leverage_build_keeps_a_weighted_subset_of_the_pool() {
+        let (n, d) = (80, 4);
+        let x = random_x(50, n, d);
+        let params = leverage_params(n, d);
+        let sk = WlshSketch::build_mem(&x, &params);
+        let pool = WlshSketch::build_mem(&x, &params.clone().sampling(SamplingSpec::Uniform));
+        assert_eq!(sk.m(), 12);
+        let info = sk.sampling_info.clone().expect("leverage build records provenance");
+        assert_eq!(info.pool_m, 24);
+        assert_eq!(info.kept.len(), 12);
+        // indices strictly ascending, weights all equal (trace-preserving c)
+        for pair in info.kept.windows(2) {
+            assert!(pair[0].0 < pair[1].0);
+            assert_eq!(pair[0].1, pair[1].1);
+        }
+        let c = info.kept[0].1;
+        assert!(c.is_finite() && c > 0.0);
+        // each kept instance is bit-identical to its pool sibling, reweighted
+        for (inst, &(s, w)) in sk.instances.iter().zip(&info.kept) {
+            let want = &pool.instances[s];
+            assert_eq!(inst.weights, want.weights, "instance {s} weights");
+            assert_eq!(inst.table.bucket_of, want.table.bucket_of, "instance {s} buckets");
+            assert_eq!(inst.iweight, w);
+        }
+        // trait accessor exposes the same provenance
+        assert_eq!(KrrOperator::sampling_header(&sk), Some(&info));
+        assert_eq!(KrrOperator::sampling_header(&pool), None);
+    }
+
+    #[test]
+    fn selected_build_replays_the_leverage_build_exactly() {
+        // Checkpoint-restore contract: rebuilding from the stored keep list
+        // (uniform params + build_selected) is bit-identical to the original
+        // leverage build — matvec, diag, predict.
+        let (n, d) = (64, 3);
+        let x = random_x(53, n, d);
+        let params = leverage_params(n, d);
+        let sk = WlshSketch::build_mem(&x, &params);
+        let info = sk.sampling_info.clone().unwrap();
+        let src = crate::data::MatrixSource::new("mem", &x, d);
+        let uniform = params.clone().sampling(SamplingSpec::Uniform);
+        let re = WlshSketch::build_selected(&uniform, &src, info.pool_m, &info.kept).unwrap();
+        assert_eq!(re.sampling_info.as_ref(), Some(&info));
+        let mut rng = Pcg64::new(55, 0);
+        let beta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        assert_eq!(re.matvec(&beta), sk.matvec(&beta));
+        assert_eq!(re.diag_values(), sk.diag_values());
+        let q = random_x(56, 8, d);
+        assert_eq!(re.predict(&q, &beta), sk.predict(&q, &beta));
+    }
+
+    #[test]
+    fn selected_build_rejects_bad_keep_lists() {
+        let (n, d) = (16, 2);
+        let x = random_x(57, n, d);
+        let src = crate::data::MatrixSource::new("mem", &x, d);
+        let params = WlshBuildParams::new(n, d, 8);
+        let err = WlshSketch::build_selected(&params, &src, 8, &[(1, 1.0), (1, 1.0)]);
+        assert!(matches!(err, Err(KrrError::BadParam(_))), "duplicate index");
+        let err = WlshSketch::build_selected(&params, &src, 8, &[(3, 1.0), (8, 1.0)]);
+        assert!(matches!(err, Err(KrrError::BadParam(_))), "index past pool");
+    }
+
+    #[test]
+    fn iweighted_operator_matches_brute_force_with_weights() {
+        // Every consumer of iweight — matvec (via loads), diag, cross — must
+        // agree with the weighted Def. 6 brute force
+        // K̃_ij = (1/m′) Σ_s iw_s w_i w_j [h_s(x_i) = h_s(x_j)].
+        let (n, d) = (48, 3);
+        let x = random_x(59, n, d);
+        let sk = WlshSketch::build_mem(&x, &leverage_params(n, d));
+        let mp = sk.m();
+        let k = materialize(&sk);
+        for i in 0..n {
+            for j in 0..n {
+                let mut want = 0.0;
+                for inst in &sk.instances {
+                    if inst.table.bucket_of[i] == inst.table.bucket_of[j] {
+                        want += inst.iweight * inst.weights[i] as f64 * inst.weights[j] as f64;
+                    }
+                }
+                want /= mp as f64;
+                assert!(
+                    (k[j][i] - want).abs() < 1e-9 * (1.0 + want.abs()),
+                    "K[{i}][{j}] {} vs {want}",
+                    k[j][i]
+                );
+            }
+        }
+        let diag = sk.diag_values();
+        for i in 0..n {
+            assert!(
+                (diag[i] - k[i][i]).abs() < 1e-10 * (1.0 + k[i][i].abs()),
+                "diag[{i}] {} vs K_ii {}",
+                diag[i],
+                k[i][i]
+            );
+        }
+        // cross vector against training row 0 reproduces column 0
+        let (_, kq) = sk.cross_vector(&x[0..d]);
+        for i in 0..n {
+            assert!(
+                (kq[i] - k[0][i]).abs() < 1e-9 * (1.0 + k[0][i].abs()),
+                "cross[{i}] {} vs K_0i {}",
+                kq[i],
+                k[0][i]
+            );
+        }
+    }
+
+    #[test]
+    fn leverage_selection_is_deterministic_across_reruns_and_workers() {
+        let (n, d) = (72, 4);
+        let x = random_x(61, n, d);
+        let base = leverage_params(n, d);
+        let a = WlshSketch::build_mem(&x, &base);
+        let info = a.sampling_info.clone().unwrap();
+        for workers in [1usize, 2, 8] {
+            let b = WlshSketch::build_mem(&x, &base.clone().workers(workers).chunk_rows(13));
+            assert_eq!(b.sampling_info.as_ref(), Some(&info), "workers={workers}");
+            let beta = vec![1.0; n];
+            assert_eq!(b.matvec(&beta), a.matvec(&beta), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn stein_build_keeps_all_instances_with_mean_one_weights() {
+        let (n, d, m) = (64, 3, 16);
+        let x = random_x(63, n, d);
+        let params = WlshBuildParams::new(n, d, m)
+            .bucket_str("rect")
+            .seed(65)
+            .sampling(SamplingSpec::Stein);
+        let sk = WlshSketch::build_mem(&x, &params);
+        assert_eq!(sk.m(), m);
+        let info = sk.sampling_info.as_ref().unwrap();
+        assert_eq!(info.pool_m, m);
+        let mean: f64 = sk.instances.iter().map(|i| i.iweight).sum::<f64>() / m as f64;
+        assert!((mean - 1.0).abs() < 1e-9, "mean iweight {mean}");
+        // weights are not all identical (the scores actually discriminate)
+        let first = sk.instances[0].iweight;
+        assert!(sk.instances.iter().any(|i| i.iweight != first));
     }
 }

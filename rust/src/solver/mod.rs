@@ -395,7 +395,10 @@ mod tests {
         let lambda = 0.05;
         let opts = CgOptions { max_iters: 400, tol: 1e-10, verbose: false, x0: None };
         let plain = solve_krr(&op, &y, lambda, &opts);
-        let sketch = crate::sketch::WlshSketch::build(&x, n, d, 256, "rect", 2.0, 1.0, 9);
+        let sketch = crate::sketch::WlshSketch::build_mem(
+            &x,
+            &crate::sketch::WlshBuildParams::new(n, d, 256).seed(9),
+        );
         let pcg = solve_krr_preconditioned(&op, &sketch, &y, lambda, &opts, 30);
         for i in 0..n {
             assert!(
@@ -415,7 +418,10 @@ mod tests {
         let lambda = 1e-3;
         let opts = CgOptions { max_iters: 500, tol: 1e-8, verbose: false, x0: None };
         let plain = solve_krr(&op, &y, lambda, &opts);
-        let sketch = crate::sketch::WlshSketch::build(&x, n, d, 2048, "rect", 2.0, 0.3, 11);
+        let sketch = crate::sketch::WlshSketch::build_mem(
+            &x,
+            &crate::sketch::WlshBuildParams::new(n, d, 2048).scale(0.3).seed(11),
+        );
         let pcg = solve_krr_preconditioned(&op, &sketch, &y, lambda, &opts, 60);
         assert!(
             pcg.iters * 2 <= plain.iters,

@@ -147,8 +147,9 @@ fn rank_proxy_grows_sublinearly() {
         let op = trainer.build_operator(&ds).unwrap();
         // downcast via name; rebuild directly for the bucket count
         drop(op);
-        let sk = wlsh_krr::sketch::WlshSketch::build(
-            &ds.x, ds.n, ds.d, 8, "rect", 2.0, 3.0, 42,
+        let sk = wlsh_krr::sketch::WlshSketch::build_mem(
+            &ds.x,
+            &wlsh_krr::sketch::WlshBuildParams::new(ds.n, ds.d, 8).scale(3.0),
         );
         sk.mean_buckets() / ds.n as f64
     };

@@ -9,13 +9,20 @@
 use wlsh_krr::kernels::Kernel;
 use wlsh_krr::linalg::sym_eig;
 use wlsh_krr::risk::ose_epsilon_dense;
-use wlsh_krr::sketch::{ExactKernelOp, KrrOperator, WlshSketch};
+use wlsh_krr::sketch::{ExactKernelOp, KrrOperator, WlshBuildParams, WlshSketch};
 use wlsh_krr::solver::materialize;
 use wlsh_krr::util::rng::Pcg64;
 
 fn random_x(seed: u64, n: usize, d: usize, spread: f64) -> Vec<f32> {
     let mut rng = Pcg64::new(seed, 0);
     (0..n * d).map(|_| (rng.normal() * spread) as f32).collect()
+}
+
+fn build(x: &[f32], n: usize, d: usize, m: usize, bucket: &str, shape: f64, seed: u64) -> WlshSketch {
+    WlshSketch::build_mem(
+        x,
+        &WlshBuildParams::new(n, d, m).bucket_str(bucket).gamma_shape(shape).seed(seed),
+    )
 }
 
 #[test]
@@ -30,7 +37,7 @@ fn theorem11_eps_rate_in_m() {
     let eps_at = |m: usize| -> f64 {
         (0..3)
             .map(|s| {
-                let sk = WlshSketch::build(&x, n, d, m, "rect", 2.0, 1.0, 100 + s);
+                let sk = build(&x, n, d, m, "rect", 2.0, 100 + s);
                 ose_epsilon_dense(&k, &sk, lambda).eps
             })
             .sum::<f64>()
@@ -52,7 +59,7 @@ fn theorem11_eps_grows_with_n_over_lambda() {
     let x = random_x(2, n, d, 0.8);
     let exact = ExactKernelOp::new(&x, n, d, Kernel::wlsh("rect", 2.0, 1.0));
     let k = materialize(&exact);
-    let sk = WlshSketch::build(&x, n, d, m, "rect", 2.0, 1.0, 7);
+    let sk = build(&x, n, d, m, "rect", 2.0, 7);
     let eps_hi_lambda = ose_epsilon_dense(&k, &sk, 8.0).eps;
     let eps_lo_lambda = ose_epsilon_dense(&k, &sk, 0.125).eps;
     assert!(
@@ -84,7 +91,7 @@ fn theorem12_two_cluster_heavy_atom() {
     let trials = 4000usize;
     let mut nonzero = 0usize;
     for t in 0..trials {
-        let sk = WlshSketch::build(&x, n, d, 1, "rect", 2.0, 1.0, 5000 + t as u64);
+        let sk = build(&x, n, d, 1, "rect", 2.0, 5000 + t as u64);
         let y = sk.matvec(&beta);
         let q: f64 = beta.iter().zip(&y).map(|(a, b)| a * b).sum();
         // quadratic form is 0 (clusters split) or n²/2 (clusters merged,
@@ -118,7 +125,7 @@ fn claim10_psd_and_operator_norm_bound() {
     let (n, d, m) = (48, 3, 4);
     let x = random_x(3, n, d, 1.0);
     for (bucket, shape) in [("rect", 2.0), ("smooth2", 7.0)] {
-        let sk = WlshSketch::build(&x, n, d, m, bucket, shape, 1.0, 9);
+        let sk = build(&x, n, d, m, bucket, shape, 9);
         let k = materialize(&sk);
         let eig = sym_eig(&k);
         let linf = sk.family.bucket.linf as f64;
@@ -146,7 +153,7 @@ fn claim22_unbiasedness_entrywise() {
     let trials = 1500;
     let mut acc = vec![0.0f64; n * n];
     for t in 0..trials {
-        let sk = WlshSketch::build(&x, n, d, 4, "smooth2", 7.0, 1.0, 9000 + t);
+        let sk = build(&x, n, d, 4, "smooth2", 7.0, 9000 + t);
         let k = materialize(&sk);
         for i in 0..n {
             for j in 0..n {
@@ -210,7 +217,7 @@ fn estimator_variance_scales_inversely_with_m() {
         let trials = 600;
         let mut acc2 = 0.0;
         for t in 0..trials {
-            let sk = WlshSketch::build(&x, n, d, m, "smooth2", 7.0, 1.0, seed0 + t);
+            let sk = build(&x, n, d, m, "smooth2", 7.0, seed0 + t);
             let y = sk.matvec(&[0.0, 1.0]);
             acc2 += (y[0] - want) * (y[0] - want);
         }

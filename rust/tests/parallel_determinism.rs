@@ -11,7 +11,7 @@ use wlsh_krr::api::MethodSpec;
 use wlsh_krr::config::KrrConfig;
 use wlsh_krr::coordinator::Trainer;
 use wlsh_krr::data::synthetic_by_name;
-use wlsh_krr::sketch::{KrrOperator, Predictor, WlshSketch};
+use wlsh_krr::sketch::{KrrOperator, Predictor, WlshBuildParams, WlshSketch};
 use wlsh_krr::util::rng::Pcg64;
 
 const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
@@ -35,7 +35,14 @@ fn random_beta(seed: u64, n: usize) -> Vec<f64> {
 fn big_sketch(seed: u64) -> (Arc<WlshSketch>, Vec<f64>, Vec<f32>) {
     let (n, d, m) = (2048, 8, 72);
     let x = random_x(seed, n, d);
-    let sk = Arc::new(WlshSketch::build(&x, n, d, m, "smooth2", 7.0, 1.2, seed + 1));
+    let sk = Arc::new(WlshSketch::build_mem(
+        &x,
+        &WlshBuildParams::new(n, d, m)
+            .bucket_str("smooth2")
+            .gamma_shape(7.0)
+            .scale(1.2)
+            .seed(seed + 1),
+    ));
     let beta = random_beta(seed + 2, n);
     let q = random_x(seed + 3, 700, d);
     (sk, beta, q)

@@ -143,7 +143,13 @@ fn every_preconditioner_solves_the_same_wlsh_sketch_system() {
     // (K̃ + λI)β = y.
     let (n, d, m) = (200, 3, 128);
     let (x, y) = toy_problem(n, d, 19);
-    let sk = wlsh_krr::sketch::WlshSketch::build(&x, n, d, m, "smooth2", 7.0, 1.0, 20);
+    let sk = wlsh_krr::sketch::WlshSketch::build_mem(
+        &x,
+        &wlsh_krr::sketch::WlshBuildParams::new(n, d, m)
+            .bucket_str("smooth2")
+            .gamma_shape(7.0)
+            .seed(20),
+    );
     let lambda = 0.05;
     let opts = CgOptions { max_iters: 1000, tol: 1e-10, verbose: false, x0: None };
     let plain = solve_krr(&sk, &y, lambda, &opts);

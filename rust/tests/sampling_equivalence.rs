@@ -1,0 +1,184 @@
+//! Determinism contract for importance-sampled sketches: leverage and
+//! stein builds must be **bit-identical** across worker counts {1, 2, 8},
+//! chunk sizes, repeated runs with the same seed, and shard topologies —
+//! the same fixed-order discipline the uniform paths already honor
+//! (`parallel_determinism.rs`, `shard_equivalence.rs`), extended to the
+//! selection step: leverage scores are computed from seeded-fork pilot
+//! instances, so the kept (index, weight) set is a pure function of
+//! (params, data). Also pins the deprecated-shim contract: the old
+//! positional constructors still compile and reproduce the params API
+//! bit-for-bit.
+
+use std::sync::mpsc;
+
+use wlsh_krr::api::{MethodSpec, SamplingSpec, TopologySpec};
+use wlsh_krr::config::KrrConfig;
+use wlsh_krr::coordinator::{run_worker, Trainer};
+use wlsh_krr::data::{synthetic_by_name, Dataset};
+use wlsh_krr::lsh::IdMode;
+use wlsh_krr::sketch::{KrrOperator, WlshBuildParams, WlshSketch};
+use wlsh_krr::util::rng::Pcg64;
+
+const WORKERS: [usize; 3] = [1, 2, 8];
+
+fn standardized_wine(n: usize) -> Dataset {
+    let mut ds = synthetic_by_name("wine", Some(n), 13).unwrap();
+    ds.standardize();
+    ds
+}
+
+fn random_beta(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg64::new(seed, 0);
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+fn assert_sketches_bit_equal(got: &WlshSketch, want: &WlshSketch, tag: &str) {
+    assert_eq!(got.sampling_info, want.sampling_info, "{tag} sampling_info");
+    assert_eq!(got.instances.len(), want.instances.len(), "{tag} m'");
+    for (s, (a, b)) in got.instances.iter().zip(&want.instances).enumerate() {
+        assert_eq!(a.table.bucket_of, b.table.bucket_of, "{tag} bucket_of[{s}]");
+        assert_eq!(a.table.offsets, b.table.offsets, "{tag} offsets[{s}]");
+        assert_eq!(a.table.members, b.table.members, "{tag} members[{s}]");
+        assert_eq!(a.weights, b.weights, "{tag} weights[{s}]");
+        assert_eq!(a.weights_csr, b.weights_csr, "{tag} weights_csr[{s}]");
+        assert!(
+            a.iweight.to_bits() == b.iweight.to_bits(),
+            "{tag} iweight[{s}]: {} vs {}",
+            a.iweight,
+            b.iweight
+        );
+    }
+}
+
+#[test]
+fn sampled_builds_bit_identical_across_workers_chunks_and_reruns() {
+    let ds = standardized_wine(200);
+    let beta = random_beta(ds.n, 3);
+    for (label, sampling, kept) in [
+        ("leverage", SamplingSpec::Leverage { pilot: 8, keep: 24 }, 24),
+        ("stein", SamplingSpec::Stein, 32),
+    ] {
+        let params = WlshBuildParams::new(ds.n, ds.d, 32)
+            .scale(3.0)
+            .seed(7)
+            .sampling(sampling)
+            .lambda(0.5);
+        let want = WlshSketch::build(&params, &ds).unwrap();
+        let info = want.sampling_info.as_ref().expect("non-uniform builds record a selection");
+        assert_eq!(info.pool_m, 32, "{label} pool");
+        assert_eq!(info.kept.len(), kept, "{label} kept");
+        assert_eq!(want.instances.len(), kept, "{label} m'");
+        let want_mv = want.matvec(&beta);
+        for workers in WORKERS {
+            for chunk in [7usize, 64, ds.n] {
+                let got = WlshSketch::build(
+                    &params.clone().chunk_rows(chunk).workers(workers),
+                    &ds,
+                )
+                .unwrap();
+                let tag = format!("{label} workers={workers} chunk={chunk}");
+                assert_sketches_bit_equal(&got, &want, &tag);
+                assert_eq!(got.matvec(&beta), want_mv, "{tag} matvec");
+            }
+        }
+        // a verbatim rerun is a bit-for-bit replay, not merely "close"
+        let again = WlshSketch::build(&params, &ds).unwrap();
+        assert_sketches_bit_equal(&again, &want, &format!("{label} rerun"));
+    }
+}
+
+#[test]
+fn leverage_training_bit_identical_across_worker_counts() {
+    let ds = standardized_wine(200);
+    let (tr, te) = ds.split(160, 14);
+    let config = |workers: usize| KrrConfig {
+        method: MethodSpec::Wlsh,
+        budget: 32,
+        scale: 3.0,
+        lambda: 0.5,
+        sampling: SamplingSpec::Leverage { pilot: 8, keep: 24 },
+        workers,
+        ..Default::default()
+    };
+    let want = Trainer::new(config(1)).train(&tr).unwrap();
+    let want_pred = want.predict(&te.x);
+    for workers in WORKERS {
+        let got = Trainer::new(config(workers)).train(&tr).unwrap();
+        assert_eq!(got.beta, want.beta, "β diverged at workers={workers}");
+        assert_eq!(got.predict(&te.x), want_pred, "predictions diverged at workers={workers}");
+    }
+}
+
+#[test]
+fn sharded_leverage_matches_local_bit_for_bit() {
+    // the coordinator scores the pool once and ships each shard its
+    // (index, weight) slice; with keep = 16 = 2 FUSE_BLOCKs the 4-shard
+    // plan includes empty shards, exercising the degenerate wire encoding
+    let (tr, te) = standardized_wine(240).split(180, 15);
+    let config = || KrrConfig {
+        method: MethodSpec::Wlsh,
+        budget: 24,
+        scale: 3.0,
+        lambda: 0.5,
+        seed: 11,
+        sampling: SamplingSpec::Leverage { pilot: 6, keep: 16 },
+        ..Default::default()
+    };
+    let reference = Trainer::new(config()).train(&tr).expect("local train");
+    let want_pred = reference.predict(&te.x);
+    for shards in [1usize, 2, 4] {
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..shards {
+            let tx = tx.clone();
+            std::thread::spawn(move || run_worker("127.0.0.1:0", Some(tx)).unwrap());
+        }
+        let addrs = (0..shards).map(|_| rx.recv().expect("worker address")).collect();
+        let mut cfg = config();
+        cfg.topology = TopologySpec::Remote { addrs };
+        let model = Trainer::new(cfg).train(&tr).expect("sharded train");
+        assert_eq!(model.beta, reference.beta, "β diverged at shards={shards}");
+        assert_eq!(model.predict(&te.x), want_pred, "predictions diverged at shards={shards}");
+    }
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_shims_reproduce_the_params_api_bit_for_bit() {
+    // the shims exist for out-of-tree callers; in-repo code is migrated.
+    // They must stay byte-equivalent to the typed path until removal.
+    let ds = standardized_wine(150);
+    let beta = random_beta(ds.n, 5);
+    let params = WlshBuildParams::new(ds.n, ds.d, 12)
+        .bucket_str("smooth2")
+        .gamma_shape(7.0)
+        .scale(3.0)
+        .seed(9);
+    let want = WlshSketch::build_mem(&ds.x, &params);
+    let via_spec = WlshSketch::build_spec(
+        &ds.x,
+        ds.n,
+        ds.d,
+        12,
+        &"smooth2".parse().unwrap(),
+        7.0,
+        3.0,
+        9,
+    );
+    assert_sketches_bit_equal(&via_spec, &want, "build_spec");
+    let via_mode = WlshSketch::build_mode(&ds.x, ds.n, ds.d, 12, "smooth2", 7.0, 3.0, 9, IdMode::U64);
+    assert_sketches_bit_equal(&via_mode, &want, "build_mode");
+    let via_source = WlshSketch::build_source(
+        &ds,
+        12,
+        &"smooth2".parse().unwrap(),
+        7.0,
+        3.0,
+        9,
+        IdMode::U64,
+        64,
+        2,
+    )
+    .unwrap();
+    assert_sketches_bit_equal(&via_source, &want, "build_source");
+    assert_eq!(via_source.matvec(&beta), want.matvec(&beta), "shim matvec");
+}

@@ -19,7 +19,7 @@ use wlsh_krr::api::MethodSpec;
 use wlsh_krr::config::KrrConfig;
 use wlsh_krr::coordinator::Trainer;
 use wlsh_krr::data::{synthetic_by_name, Dataset, SparseChunk};
-use wlsh_krr::sketch::{KrrOperator, RffSketch, WlshSketch};
+use wlsh_krr::sketch::{KrrOperator, RffSketch, WlshBuildParams, WlshSketch};
 use wlsh_krr::util::rng::Pcg64;
 use wlsh_krr::util::simd;
 
@@ -73,9 +73,13 @@ fn wlsh_build_solve_and_matvec_bit_identical_across_simd_and_threads() {
     let beta = random_beta(ds.n, 3);
     let queries = &ds.x[..40 * ds.d];
     for (bucket_s, shape) in [("rect", 2.0), ("smooth2", 7.0)] {
-        let bucket = bucket_s.parse().unwrap();
+        let params = WlshBuildParams::new(ds.n, ds.d, 16)
+            .bucket_str(bucket_s)
+            .gamma_shape(shape)
+            .scale(3.0)
+            .seed(5);
         simd::set_enabled(false);
-        let base = WlshSketch::build_spec(&ds.x, ds.n, ds.d, 16, &bucket, shape, 3.0, 5);
+        let base = WlshSketch::build_mem(&ds.x, &params);
         let base_mv: Vec<Vec<f64>> =
             THREADS.iter().map(|&t| base.matvec_threads(&beta, t)).collect();
         let base_pred = base.predict(queries, &beta);
@@ -88,7 +92,7 @@ fn wlsh_build_solve_and_matvec_bit_identical_across_simd_and_threads() {
         assert_eq!(base.predict(queries, &beta), base_pred, "{bucket_s} predict");
         assert_eq!(base.diag_values(), base_diag, "{bucket_s} diag");
         // rebuilt sketch, SIMD hash path: tables and weights bit-equal
-        let built = WlshSketch::build_spec(&ds.x, ds.n, ds.d, 16, &bucket, shape, 3.0, 5);
+        let built = WlshSketch::build_mem(&ds.x, &params);
         for (a, b) in base.instances.iter().zip(&built.instances) {
             assert_eq!(a.table.bucket_of, b.table.bucket_of, "{bucket_s} bucket_of");
             assert_eq!(a.table.offsets, b.table.offsets, "{bucket_s} offsets");

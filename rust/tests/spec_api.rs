@@ -8,6 +8,7 @@
 
 use wlsh_krr::api::{
     BucketSpec, KernelFamily, KernelSpec, KrrError, KrrModel, MethodSpec, PrecondSpec,
+    SamplingSpec,
 };
 use wlsh_krr::config::{Config, KrrConfig};
 use wlsh_krr::util::prop::prop_check;
@@ -104,6 +105,50 @@ fn kernel_specs_roundtrip() {
 }
 
 #[test]
+fn sampling_specs_roundtrip() {
+    prop_check(
+        53,
+        80,
+        |rng| match rng.below(3) {
+            0 => SamplingSpec::Uniform,
+            1 => SamplingSpec::Stein,
+            _ => SamplingSpec::Leverage {
+                pilot: 1 + rng.below(512) as usize,
+                keep: 1 + rng.below(4096) as usize,
+            },
+        },
+        |s| {
+            roundtrip(s);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn sampling_grammar_rejects_malformed_strings() {
+    // never a panic: every malformed form is a BadParam
+    for bad in [
+        "importance",
+        "leverage",
+        "leverage()",
+        "leverage(pilot=16)",
+        "leverage(keep=48)",
+        "leverage(pilot=0,keep=48)",
+        "leverage(pilot=16,keep=0)",
+        "leverage(pilot=sixteen,keep=48)",
+        "leverage(pilot=16,keep=48,extra=1)",
+        "stein(rate=2)",
+    ] {
+        assert!(
+            matches!(bad.parse::<SamplingSpec>(), Err(KrrError::BadParam(_))),
+            "{bad:?} should be rejected"
+        );
+    }
+    // the empty string is the uniform default (CLI flag omitted)
+    assert_eq!("".parse::<SamplingSpec>(), Ok(SamplingSpec::Uniform));
+}
+
+#[test]
 fn unknown_strings_error_per_grammar() {
     assert_eq!(
         "wlshh".parse::<MethodSpec>(),
@@ -150,6 +195,39 @@ fn toml_surfaces_unknown_specs_as_errors() {
         KrrConfig::from_config(&cfg).unwrap().precond,
         PrecondSpec::Nystrom { rank: 12 }
     );
+    let cfg = Config::parse("[krr]\nsampling = magic(beans=3)\n").unwrap();
+    assert!(matches!(KrrConfig::from_config(&cfg), Err(KrrError::BadParam(_))));
+}
+
+#[test]
+fn builder_surfaces_sampling_errors_at_fit() {
+    let mut ds = wlsh_krr::data::synthetic_by_name("wine", Some(120), 5).unwrap();
+    ds.standardize();
+    // grammar error from the string form
+    let err = KrrModel::builder().sampling("importance").fit(&ds).unwrap_err();
+    assert!(matches!(err, KrrError::BadParam(_)), "{err}");
+    // range error from validate(): keep exceeds the budget
+    let err = KrrModel::builder()
+        .budget(16)
+        .sampling(SamplingSpec::Leverage { pilot: 4, keep: 48 })
+        .fit(&ds)
+        .unwrap_err();
+    assert!(matches!(err, KrrError::BadParam(_)), "{err}");
+    // method error from validate(): importance sampling is WLSH-only
+    let err = KrrModel::builder()
+        .method(MethodSpec::Rff)
+        .sampling(SamplingSpec::Stein)
+        .fit(&ds)
+        .unwrap_err();
+    assert!(matches!(err, KrrError::BadParam(_)), "{err}");
+    // and the typed happy path still trains
+    let model = KrrModel::builder()
+        .budget(16)
+        .scale(3.0)
+        .sampling(SamplingSpec::Leverage { pilot: 4, keep: 12 })
+        .fit(&ds)
+        .unwrap();
+    assert!(model.predict(&ds.x[..4 * ds.d]).iter().all(|p| p.is_finite()));
 }
 
 #[test]

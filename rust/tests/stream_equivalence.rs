@@ -13,8 +13,7 @@ use wlsh_krr::data::{
     LibsvmSource, Standardizer, SyntheticSource,
 };
 use wlsh_krr::kernels::Kernel;
-use wlsh_krr::lsh::IdMode;
-use wlsh_krr::sketch::{KrrOperator, NystromSketch, RffSketch, WlshSketch};
+use wlsh_krr::sketch::{KrrOperator, NystromSketch, RffSketch, WlshBuildParams, WlshSketch};
 use wlsh_krr::util::rng::Pcg64;
 
 const CHUNKS: [usize; 3] = [1, 7, 64];
@@ -34,9 +33,13 @@ fn random_beta(n: usize, seed: u64) -> Vec<f64> {
 #[test]
 fn wlsh_streamed_build_is_bit_identical_to_in_memory() {
     let ds = standardized_wine(200);
-    let (m, shape, scale, seed) = (16usize, 7.0, 3.0, 5u64);
-    let bucket = "smooth2".parse().unwrap();
-    let want = WlshSketch::build_spec(&ds.x, ds.n, ds.d, m, &bucket, shape, scale, seed);
+    let m = 16usize;
+    let params = WlshBuildParams::new(ds.n, ds.d, m)
+        .bucket_str("smooth2")
+        .gamma_shape(7.0)
+        .scale(3.0)
+        .seed(5);
+    let want = WlshSketch::build_mem(&ds.x, &params);
     let beta = random_beta(ds.n, 3);
     let queries = &ds.x[..40 * ds.d];
     let want_mv = want.matvec_serial(&beta);
@@ -44,8 +47,9 @@ fn wlsh_streamed_build_is_bit_identical_to_in_memory() {
     let want_diag = want.diag_values();
     for chunk in CHUNKS.into_iter().chain([ds.n]) {
         for workers in THREADS {
-            let got = WlshSketch::build_source(
-                &ds, m, &bucket, shape, scale, seed, IdMode::U64, chunk, workers,
+            let got = WlshSketch::build(
+                &params.clone().chunk_rows(chunk).workers(workers),
+                &ds,
             )
             .unwrap();
             assert_eq!(got.m(), m);
@@ -230,15 +234,20 @@ fn sparse_streamed_wlsh_build_is_bit_identical_to_densified() {
     let beta = random_beta(n, 3);
     let queries = &dsref.x[..20 * dsref.d];
     for (bucket_s, shape) in [("rect", 2.0), ("smooth2", 7.0)] {
-        let bucket = bucket_s.parse().unwrap();
-        let want = WlshSketch::build_spec(&dsref.x, n, dsref.d, 12, &bucket, shape, 3.0, 5);
+        let params = WlshBuildParams::new(n, dsref.d, 12)
+            .bucket_str(bucket_s)
+            .gamma_shape(shape)
+            .scale(3.0)
+            .seed(5);
+        let want = WlshSketch::build_mem(&dsref.x, &params);
         let want_mv = want.matvec_serial(&beta);
         let want_pred = want.predict(queries, &beta);
         let want_diag = want.diag_values();
         for chunk in CHUNKS.into_iter().chain([n]) {
             for workers in THREADS {
-                let got = WlshSketch::build_source(
-                    &view, 12, &bucket, shape, 3.0, 5, IdMode::U64, chunk, workers,
+                let got = WlshSketch::build(
+                    &params.clone().chunk_rows(chunk).workers(workers),
+                    &view,
                 )
                 .unwrap();
                 let tag = format!("{bucket_s} chunk={chunk} workers={workers}");
@@ -326,8 +335,10 @@ fn operator_memory_excludes_the_training_matrix() {
     let mut wide = synthetic_by_name("ctslices", Some(200), 1).unwrap(); // d = 384
     wide.standardize();
     let matrix_bytes = wide.n * wide.d * 4;
-    let bucket = "rect".parse().unwrap();
-    let sk = WlshSketch::build_spec(&wide.x, wide.n, wide.d, 8, &bucket, 2.0, 3.0, 2);
+    let sk = WlshSketch::build_mem(
+        &wide.x,
+        &WlshBuildParams::new(wide.n, wide.d, 8).gamma_shape(2.0).scale(3.0).seed(2),
+    );
     let wlsh_bytes = sk.memory_bytes();
     assert!(
         wlsh_bytes > 0 && wlsh_bytes < matrix_bytes,

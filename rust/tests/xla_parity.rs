@@ -6,7 +6,7 @@
 use wlsh_krr::kernels::Kernel;
 use wlsh_krr::lsh::{IdMode, LshFamily};
 use wlsh_krr::runtime::Runtime;
-use wlsh_krr::sketch::{ExactKernelOp, KrrOperator, RffSketch, WlshSketch};
+use wlsh_krr::sketch::{ExactKernelOp, KrrOperator, RffSketch, WlshBuildParams, WlshSketch};
 use wlsh_krr::util::rng::Pcg64;
 
 fn runtime() -> Option<Runtime> {
@@ -60,7 +60,14 @@ fn wlsh_matvec_artifact_matches_native_sketch() {
     let Some(rt) = runtime() else { return };
     let (n, d, m) = (700, 6, 9);
     let x = random_x(2, n, d, 1.0);
-    let sk = WlshSketch::build_mode(&x, n, d, m, "smooth2", 7.0, 1.0, 3, IdMode::I32);
+    let sk = WlshSketch::build_mem(
+        &x,
+        &WlshBuildParams::new(n, d, m)
+            .bucket_str("smooth2")
+            .gamma_shape(7.0)
+            .seed(3)
+            .id_mode(IdMode::I32),
+    );
     let mut rng = Pcg64::new(7, 0);
     let beta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
     let want = sk.matvec(&beta);

@@ -86,9 +86,26 @@ extract() {
     }
     FILENAME ~ /ose\.jsonl$/ {
         # deterministic (fixed seeds): eps is a tracked accuracy metric
-        if (str($0, "series") != "eps_vs_m") next
-        m = num($0, "m")
-        if (m != "" && (v = num($0, "eps")) != "") print "ose.eps.m" m, v
+        series = str($0, "series")
+        if (series == "eps_vs_m") {
+            m = num($0, "m")
+            if (m != "" && (v = num($0, "eps")) != "") print "ose.eps.m" m, v
+        } else if (series == "eps_vs_kept") {
+            # importance-sampled spectral error keyed by sampling x pool m
+            s = str($0, "sampling"); m = num($0, "pool_m")
+            if (s != "" && m != "" && (v = num($0, "eps")) != "")
+                print "ose.eps_kept." s ".m" m, v
+        }
+        next
+    }
+    FILENAME ~ /ablation\.jsonl$/ {
+        # accuracy-vs-m under importance sampling (deterministic seeds):
+        # the series the CI sampling smoke gates on — leverage at 0.75m
+        # must track uniform at the full m
+        if (str($0, "series") != "rmse_at_m") next
+        s = str($0, "sampling"); m = num($0, "pool_m")
+        if (s == "" || m == "") next
+        if ((v = num($0, "rmse")) != "") print "ablation.rmse_at_m." s ".m" m, v
         next
     }
     FILENAME ~ /serve\.jsonl$/ {
